@@ -1,0 +1,66 @@
+//! Table 4 analog: train standard-DQN and tempo-dqn on every game in the
+//! synthetic suite and report Random / Human-proxy / DQN / Ours scores with
+//! human-normalized percentages (paper §5.2 / Appendix A).
+//!
+//! The real Table 4 trains 50M steps per game on ALE; this driver runs a
+//! budgeted analog (default a few thousand steps per game on the tiny net)
+//! so the whole suite finishes in minutes on one CPU core. Raise --steps /
+//! --net for a longer, more faithful run.
+//!
+//! Run: `cargo run --release --example atari_suite -- [--steps N]
+//!       [--games pong,seeker] [--net tiny] [--threads 4] [--episodes N]`
+
+use tempo_dqn::config::{EpsSchedule, ExecMode, ExperimentConfig};
+use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::env::GAMES;
+use tempo_dqn::eval::{AnchorKind, Evaluator};
+use tempo_dqn::report::{table4, GameRow};
+use tempo_dqn::runtime::default_artifact_dir;
+use tempo_dqn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let games: Vec<String> = match args.str_opt("games") {
+        Some(list) => list.split(',').map(str::to_string).collect(),
+        None => GAMES.iter().map(|s| s.to_string()).collect(),
+    };
+    let steps = args.u64_or("steps", 2_500)?;
+    let threads = args.usize_or("threads", 4)?;
+    let episodes = args.usize_or("episodes", 4)?;
+    let max_steps = args.usize_or("max-steps", 1_200)?;
+    let net = args.get_or("net", "tiny").to_string();
+
+    let train_score = |game: &str, mode: ExecMode, w: usize| -> anyhow::Result<f64> {
+        let mut cfg = ExperimentConfig::preset("smoke")?;
+        cfg.game = game.to_string();
+        cfg.net = net.clone();
+        cfg.mode = mode;
+        cfg.threads = w;
+        cfg.total_steps = steps;
+        cfg.seed = 5;
+        cfg.prepopulate = (steps as usize / 3).clamp(200, 2_000);
+        cfg.replay_capacity = 150_000;
+        cfg.target_update_period = (steps / 8).clamp(100, 2_000) / 4 * 4;
+        cfg.eps = EpsSchedule { start: 1.0, end: 0.1, decay_steps: steps * 3 / 4 };
+        cfg.lr = args.f64_or("lr", 1e-3)?; // budgeted runs learn faster hot
+        let mut coord = Coordinator::new(cfg, &default_artifact_dir())?.without_eval();
+        coord.run()?;
+        let mut ev = Evaluator::new(game, 99, episodes, 0.05)?.with_max_steps(max_steps);
+        Ok(ev.run(coord.qnet(), steps)?.mean_return)
+    };
+
+    let mut rows = Vec::new();
+    for game in &games {
+        eprintln!("[suite] {game}: measuring anchors...");
+        let mut ev = Evaluator::new(game, 7, episodes, 0.05)?.with_max_steps(max_steps);
+        let random = ev.run_anchor(AnchorKind::Random)?;
+        let human = ev.run_anchor(AnchorKind::Expert)?;
+        eprintln!("[suite] {game}: training standard-DQN baseline (W=1)...");
+        let baseline = train_score(game, ExecMode::Standard, 1)?;
+        eprintln!("[suite] {game}: training tempo-dqn (Algorithm 1, W={threads})...");
+        let ours = train_score(game, ExecMode::Both, threads)?;
+        rows.push(GameRow { game: game.clone(), random, human, baseline_dqn: baseline, ours });
+    }
+    print!("{}", table4(&rows));
+    Ok(())
+}

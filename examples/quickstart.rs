@@ -1,0 +1,67 @@
+//! Quickstart: the smallest complete tour of the public API.
+//!
+//! Loads the AOT-compiled artifacts, creates a synthetic Atari-like
+//! environment, runs greedy inference, performs one training step from a
+//! replay minibatch, and syncs the target network.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use std::sync::Arc;
+
+use tempo_dqn::env::{make_env, NET_FRAME, STACK, STATE_BYTES};
+use tempo_dqn::agent::{argmax, EpsGreedy};
+use tempo_dqn::replay::ReplayMemory;
+use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, TrainBatch};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the compiled Q-network (tiny config, batch-32 train entry).
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+    let device = Arc::new(Device::cpu()?);
+    let qnet = QNet::load(device.clone(), &manifest, "tiny", false, 32)?;
+    println!(
+        "loaded {:?}: {} params, {} actions, platform {}",
+        qnet.spec().name,
+        qnet.spec().param_count,
+        qnet.spec().actions,
+        device.platform_name()
+    );
+
+    // 2. Interact with an environment using the greedy policy.
+    let mut env = make_env("pong", 42)?;
+    let mut policy = EpsGreedy::new(42, 0, env.num_actions());
+    let mut state = vec![0u8; STATE_BYTES];
+    let mut replay = ReplayMemory::new(10_000, 1, NET_FRAME, STACK, 42)?;
+    let mut frame = vec![0u8; NET_FRAME];
+    let mut start = true;
+    for step in 0..64 {
+        env.write_state(&mut state);
+        let q = qnet.infer(Policy::ThetaMinus, &state, 1)?;
+        let action = policy.select(&q, 0.1); // epsilon-greedy, eps = 0.1
+        frame.copy_from_slice(env.latest_plane());
+        let r = env.step(action);
+        replay.push(0, &frame, action as u8, r.reward, r.done, start);
+        start = false;
+        if step == 0 {
+            println!("q-values at t=0: {q:?} -> greedy action {}", argmax(&q));
+        }
+        if r.done {
+            env.reset();
+            start = true;
+        }
+    }
+    println!("collected {} transitions ({} sampleable)", replay.len(), replay.sampleable());
+
+    // 3. One training step from a sampled minibatch.
+    let mut batch = TrainBatch::default();
+    replay.sample(32, &mut batch)?;
+    let loss = qnet.train_step(&batch, 2.5e-4)?;
+    println!("train step: loss = {loss:.5}");
+
+    // 4. Target-network sync (theta_minus <- theta).
+    qnet.sync_target();
+    println!("target synced; device transactions so far: {}",
+             device.stats.snapshot().transactions);
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Speed-test ablation (paper §5.1): regenerates Tables 1, 2, 3 and the
+//! Figure 2 timing diagram.
+//!
+//! Three stages:
+//!  1. `--calibrate`  measure THIS machine's per-op costs (env step, infer
+//!     at several batch sizes, train) and build a measured cost model.
+//!  2. DES sweep over {mode} x {threads} under both the paper-fitted
+//!     GTX 1080 model and (optionally) the measured model.
+//!  3. `--real`  run scaled live experiments for every grid cell and print
+//!     the same tables from wall-clock (validates the DES inputs).
+//!  4. `--gantt` print the measured Figure-2-style timing diagram.
+//!
+//! Run: `cargo run --release --example speed_ablation -- [--real] [--gantt]
+//!       [--threads 1,2,4,8] [--steps N] [--trials N]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tempo_dqn::config::{ExecMode, ExperimentConfig};
+use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::env::{make_env, STATE_BYTES};
+use tempo_dqn::hwsim::{simulate, CostModel, SimRun};
+use tempo_dqn::metrics::GanttTrace;
+use tempo_dqn::report::RuntimeGrid;
+use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, TrainBatch};
+use tempo_dqn::util::cli::Args;
+
+fn measure_costs(net: &str) -> anyhow::Result<CostModel> {
+    println!("-- calibration: measuring per-op costs on this machine ({net} net) --");
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+    let device = Arc::new(Device::cpu()?);
+    let qnet = QNet::load(device.clone(), &manifest, net, false, 32)?;
+
+    // Env step cost (simulate + render + preprocess).
+    let mut env = make_env("pong", 3)?;
+    let t0 = Instant::now();
+    let iters = 400;
+    for i in 0..iters {
+        if env.step(i % env.num_actions()).done {
+            env.reset();
+        }
+    }
+    let env_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+
+    // Inference at batch 1 and 8.
+    let mut state = vec![0u8; STATE_BYTES];
+    env.write_state(&mut state);
+    let infer_ms = |b: usize| -> anyhow::Result<f64> {
+        let states: Vec<u8> = state.iter().cycle().take(b * STATE_BYTES).copied().collect();
+        qnet.infer(Policy::ThetaMinus, &states, b)?; // warm
+        let t0 = Instant::now();
+        let n = 30;
+        for _ in 0..n {
+            qnet.infer(Policy::ThetaMinus, &states, b)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1e3 / n as f64)
+    };
+    let i1 = infer_ms(1)?;
+    let i8 = infer_ms(8)?;
+
+    // Train step.
+    let b = 32;
+    let batch = TrainBatch {
+        states: state.iter().cycle().take(b * STATE_BYTES).copied().collect(),
+        next_states: state.iter().cycle().take(b * STATE_BYTES).copied().collect(),
+        actions: (0..b as i32).map(|i| i % 3).collect(),
+        rewards: vec![0.5; b],
+        dones: vec![0.0; b],
+    };
+    qnet.train_step(&batch, 2.5e-4)?; // warm
+    let t0 = Instant::now();
+    let n = 10;
+    for _ in 0..n {
+        qnet.train_step(&batch, 2.5e-4)?;
+    }
+    let train_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+
+    println!(
+        "  env {env_ms:.3} ms | infer b1 {i1:.3} ms, b8 {i8:.3} ms | train b32 {train_ms:.3} ms"
+    );
+    Ok(CostModel::from_measured(env_ms, i1, i8, train_ms, 1))
+}
+
+fn des_tables(model: CostModel, label: &str, threads: &[usize], steps: u64) {
+    let mut grid = RuntimeGrid::new(threads);
+    for &w in threads {
+        for mode in ExecMode::ALL {
+            let run = SimRun { steps, c: 10_000, f: 4, threads: w };
+            let stats = simulate(model, run, mode);
+            let hours = stats.makespan_ms * (50_000_000.0 / steps as f64) / 3_600_000.0;
+            grid.set(mode, w, hours, 0.0);
+        }
+    }
+    println!("== DES tables ({label}; scaled to 50M steps) ==");
+    print!("{}", grid.table1());
+    print!("{}", grid.table2());
+    print!("{}", grid.table3());
+    if let Some((base, best, speedup)) = grid.headline() {
+        println!("headline: {base:.2} h -> {best:.2} h ({speedup:.2}x)");
+    }
+    println!(
+        "paper:    25.08 h -> 9.02 h (2.78x)  [Table 1, GTX 1080 + i7-7700K]\n"
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let threads = args.usize_list_or("threads", &[1, 2, 4, 8])?;
+    let net = args.get_or("net", "tiny").to_string();
+
+    // Paper-machine DES (the Table 1-3 reproduction).
+    des_tables(CostModel::gtx1080_i7(), "paper-fitted GTX 1080 cost model",
+               &threads, args.u64_or("sim-steps", 1_000_000)?);
+
+    if args.flag("calibrate") || args.flag("real") {
+        let measured = measure_costs(&net)?;
+        des_tables(measured, "measured on this machine", &threads,
+                   args.u64_or("sim-steps", 100_000)?);
+
+        if args.flag("real") {
+            let steps = args.u64_or("steps", 1_500)?;
+            let trials = args.usize_or("trials", 1)?;
+            println!("== real scaled runs ({steps} steps x {trials} trials, {net} net) ==");
+            let mut grid = RuntimeGrid::new(&threads);
+            for &w in &threads {
+                for mode in ExecMode::ALL {
+                    let mut samples = Vec::new();
+                    for trial in 0..trials {
+                        let mut cfg = ExperimentConfig::preset("speedtest")?;
+                        cfg.net = net.clone();
+                        cfg.mode = mode;
+                        cfg.threads = w;
+                        cfg.seed = trial as u64;
+                        cfg.total_steps = steps;
+                        cfg.prepopulate = 500;
+                        cfg.replay_capacity = 50_000;
+                        cfg.target_update_period = 500;
+                        let mut coord =
+                            Coordinator::new(cfg, &default_artifact_dir())?.without_eval();
+                        let res = coord.run()?;
+                        samples.push(res.wall_s / 3_600.0);
+                    }
+                    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+                    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+                        / samples.len() as f64;
+                    println!("  {:>12} W={w}: {:.2}s", mode.name(), mean * 3600.0);
+                    grid.set(mode, w, mean, var.sqrt());
+                }
+            }
+            print!("{}", grid.table1());
+            print!("{}", grid.table3());
+        }
+    }
+
+    if args.flag("gantt") {
+        for mode in [ExecMode::Standard, ExecMode::Both] {
+            println!("== measured timing diagram: {} (Figure 2 analog) ==", mode.name());
+            let gantt = Arc::new(GanttTrace::new(200_000));
+            let mut cfg = ExperimentConfig::preset("smoke")?;
+            cfg.mode = mode;
+            cfg.threads = 4;
+            cfg.total_steps = 192;
+            cfg.target_update_period = 64;
+            let mut coord =
+                Coordinator::new(cfg, &default_artifact_dir())?.with_gantt(gantt.clone());
+            coord.run()?;
+            print!("{}", gantt.render_ascii(96));
+        }
+    }
+    Ok(())
+}

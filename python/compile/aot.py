@@ -1,0 +1,146 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts for Rust.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per network config:
+    artifacts/<cfg>_infer_b<B>.hlo.txt      batched Q-value inference
+    artifacts/<cfg>_train_b<B>.hlo.txt      full train step (TD + RMSProp)
+    artifacts/<cfg>_train_double_b<B>.hlo.txt   Double-DQN variant
+    artifacts/<cfg>_init.bin                f32-LE init parameter blob
+    artifacts/manifest.json                 the ABI the Rust runtime reads
+
+Run via ``make artifacts`` (no-op when inputs are unchanged); Python is never
+on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    return [
+        {"dtype": str(a.dtype), "shape": list(a.shape)}
+        for a in args
+    ]
+
+
+def lower_config(cfg: M.NetConfig, infer_batches, train_batches, gamma, seed, out_dir):
+    """Lower every entry point for one network config; return manifest dict."""
+    p = M.param_count(cfg)
+    h, w, c = cfg.frame
+    pvec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    entries = {}
+
+    def emit(name, fn, args):
+        path = f"{cfg.name}_{name}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries[name] = {"file": path, "inputs": _sig(args)}
+        print(f"  {path}: {len(text)} chars")
+
+    for b in infer_batches:
+        states = jax.ShapeDtypeStruct((b, h, w, c), jnp.uint8)
+        emit(f"infer_b{b}",
+             lambda fl, st: (M.forward(cfg, fl, st),),
+             (pvec, states))
+
+    for b in train_batches:
+        states = jax.ShapeDtypeStruct((b, h, w, c), jnp.uint8)
+        acts = jax.ShapeDtypeStruct((b,), jnp.int32)
+        fvec = jax.ShapeDtypeStruct((b,), jnp.float32)
+        targs = (pvec, pvec, pvec, pvec, states, acts, fvec, states, fvec, scalar)
+        for double in (False, True):
+            tag = f"train_double_b{b}" if double else f"train_b{b}"
+            emit(tag,
+                 lambda fl, tf, g, s, st, a, r, ns, d, lr, _dbl=double:
+                     M.train_step(cfg, fl, tf, g, s, st, a, r, ns, d, lr,
+                                  gamma=gamma, double=_dbl),
+                 targs)
+
+    # Deterministic initial parameters shared by Rust and the pytest suite.
+    init = np.asarray(M.init_params(cfg, jax.random.PRNGKey(seed)), np.float32)
+    init_path = f"{cfg.name}_init.bin"
+    init.tofile(os.path.join(out_dir, init_path))
+
+    return {
+        "param_count": p,
+        "frame": [h, w, c],
+        "actions": cfg.actions,
+        "gamma": gamma,
+        "init_params": init_path,
+        "init_sha256": hashlib.sha256(init.tobytes()).hexdigest(),
+        "param_spec": [{"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)],
+        "entries": entries,
+        # Train entry ABI, for the Rust executor:
+        # inputs  = params, target, g, s, states, actions, rewards,
+        #           next_states, dones, lr
+        # outputs = params', g', s', loss
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--configs", default="tiny,small,nature")
+    ap.add_argument("--infer-batches", default="1,2,4,8,32")
+    ap.add_argument("--train-batches", default="32")
+    ap.add_argument("--actions", type=int, default=6)
+    ap.add_argument("--gamma", type=float, default=0.99)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    infer_batches = [int(b) for b in args.infer_batches.split(",") if b]
+    train_batches = [int(b) for b in args.train_batches.split(",") if b]
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "actions": args.actions,
+        "train_abi": {
+            "inputs": ["params", "target", "g", "s", "states", "actions",
+                        "rewards", "next_states", "dones", "lr"],
+            "outputs": ["params", "g", "s", "loss"],
+        },
+        "configs": {},
+    }
+    for name in args.configs.split(","):
+        cfg = M.make_config(name.strip(), actions=args.actions)
+        print(f"lowering config {cfg.name!r} (P={M.param_count(cfg)})")
+        manifest["configs"][cfg.name] = lower_config(
+            cfg, infer_batches, train_batches, args.gamma, args.seed, out_dir)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Generate golden outputs for Rust<->Python numeric cross-checks.
+
+For every network config this runs the *jitted python* model on deterministic
+inputs (same init params the artifacts ship) and records the results in
+``artifacts/golden.json``.  The Rust integration tests execute the compiled
+HLO artifacts on the same inputs and assert the numbers agree — proving the
+AOT bridge is faithful end to end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def det_states(b: int, h: int, w: int, c: int) -> np.ndarray:
+    """Deterministic uint8 frames both languages can regenerate exactly."""
+    i = np.arange(b)[:, None, None, None]
+    y = np.arange(h)[None, :, None, None]
+    x = np.arange(w)[None, None, :, None]
+    ch = np.arange(c)[None, None, None, :]
+    return ((i * 13 + y * 7 + x * 3 + ch * 11) % 256).astype(np.uint8)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--configs", default="tiny,small")
+    ap.add_argument("--actions", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    golden = {}
+    for name in args.configs.split(","):
+        cfg = M.make_config(name.strip(), actions=args.actions)
+        flat = jnp.asarray(np.fromfile(
+            os.path.join(out_dir, f"{cfg.name}_init.bin"), np.float32))
+        h, w, c = cfg.frame
+        entry = {}
+
+        for b in (1, 8):
+            st = jnp.asarray(det_states(b, h, w, c))
+            q = M.infer_jit(cfg, flat, st)
+            entry[f"infer_b{b}"] = np.asarray(q, np.float64).round(5).tolist()
+
+        # One deterministic train step (batch 32).
+        bsz = 32
+        st = jnp.asarray(det_states(bsz, h, w, c))
+        nst = jnp.asarray(det_states(bsz, h, w, c)[::-1].copy())
+        acts = jnp.asarray(np.arange(bsz, dtype=np.int32) % cfg.actions)
+        rews = jnp.asarray((np.arange(bsz) % 3 - 1).astype(np.float32))
+        dones = jnp.asarray((np.arange(bsz) % 7 == 0).astype(np.float32))
+        g = jnp.zeros_like(flat)
+        s = jnp.zeros_like(flat)
+        ts = jax.jit(lambda *a: M.train_step(cfg, *a))
+        p2, g2, s2, loss = ts(flat, flat, g, s, st, acts, rews, nst, dones,
+                              jnp.float32(2.5e-4))
+        entry["train_b32_loss"] = float(loss)
+        entry["train_b32_param_sum"] = float(jnp.sum(p2))
+        entry["train_b32_param_head"] = np.asarray(p2[:8], np.float64).tolist()
+        entry["train_b32_g_sum"] = float(jnp.sum(g2))
+        entry["train_b32_s_sum"] = float(jnp.sum(s2))
+        golden[cfg.name] = entry
+        print(f"golden[{cfg.name}] loss={float(loss):.6f}")
+
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"wrote {out_dir}/golden.json")
+
+
+if __name__ == "__main__":
+    main()

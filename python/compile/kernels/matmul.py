@@ -1,0 +1,150 @@
+"""L1 Pallas kernel: tiled matmul with a custom VJP.
+
+This is the compute hot-spot of the DQN network: every dense layer and every
+im2col-lowered convolution bottoms out in this kernel.  The BlockSpec
+expresses the HBM<->VMEM staging schedule that CUDA code would express with
+threadblocks + shared memory: (bm x bk) and (bk x bn) tiles are streamed
+through VMEM and contracted on the MXU, accumulating into the (bm x bn)
+output tile which is revisited across the K grid dimension.
+
+Pallas is invoked with ``interpret=True`` so the kernel lowers to plain HLO
+ops executable on the CPU PJRT client (real-TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot run).  Correctness is pinned against the
+pure-jnp oracle in ``ref.py`` by ``python/tests/test_matmul.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU tile sizes.  128x128 output tiles match the MXU systolic array
+# shape; 128-wide K panels keep the VMEM working set small:
+#   (bm*bk + bk*bn + bm*bn) * 4B = 3 * 128*128 * 4B = 192 KiB << 16 MiB VMEM.
+# These express the HBM<->VMEM schedule for REAL hardware and are exercised
+# by the test suite; the default (bm=bn=bk=None) instead chooses the
+# interpret-optimal schedule — a single grid step over the (lightly padded)
+# full operands — because interpret-mode pallas pays ~5 ms of interpreter
+# machinery PER GRID STEP on CPU (see EXPERIMENTS.md §Perf).
+TPU_BM = 128
+TPU_BN = 128
+TPU_BK = 128
+# Back-compat aliases.
+DEFAULT_BM = TPU_BM
+DEFAULT_BN = TPU_BN
+DEFAULT_BK = TPU_BK
+
+
+def _round8(n: int) -> int:
+    """Pad dimension to a multiple of 8 (sublane alignment), minimum 8."""
+    return max(8, -(-n // 8) * 8)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ y[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % m
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """Tiled Pallas matmul ``x @ y`` for f32 operands of any 2-D shape.
+
+    Inputs are zero-padded up to tile multiples (zero padding is exact for
+    matmul) and the result is sliced back to the true shape.  With the
+    default ``None`` tile sizes the schedule is a single grid step over the
+    lightly-padded operands (optimal under ``interpret=True`` on CPU); pass
+    explicit sizes (e.g. ``TPU_BM``) to express the real-hardware
+    HBM<->VMEM tiling.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul_pallas expects 2-D operands, got {x.shape} @ {y.shape}")
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    # Default: one grid step (see docstring). Explicit tiles are shrunk for
+    # small problems so the grid is never empty and padding stays bounded.
+    bm = _round8(m) if bm is None else min(bm, max(8, 1 << (m - 1).bit_length()))
+    bn = _round8(n) if bn is None else min(bn, max(8, 1 << (n - 1).bit_length()))
+    bk = _round8(k) if bk is None else min(bk, max(8, 1 << (k - 1).bit_length()))
+
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), bm, 0), bk, 1)
+    yp = _pad_to(_pad_to(y.astype(jnp.float32), bk, 0), bn, 1)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable tiled-Pallas matmul (the public kernel entry point)."""
+    return matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dL/dx = g @ y^T ; dL/dy = x^T @ g — both through the same Pallas tiles.
+    return matmul_pallas(g, y.T), matmul_pallas(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(bm: int = TPU_BM, bn: int = TPU_BN, bk: int = TPU_BK) -> int:
+    """Estimated VMEM working set of one grid step (f32)."""
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int,
+                             bm: int = TPU_BM, bn: int = TPU_BN,
+                             bk: int = TPU_BK) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work."""
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    return (m * n * k) / float(mp * np_ * kp)

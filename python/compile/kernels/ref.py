@@ -1,0 +1,29 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the pytest suite pins the kernels against
+(``assert_allclose``).  They deliberately contain no Pallas code.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Oracle for kernels.matmul.matmul."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def rmsprop_ref(params, grad, g, s, lr, *, alpha=0.95, eps=0.01):
+    """Oracle for kernels.rmsprop.rmsprop_update (centered RMSProp)."""
+    g2 = alpha * g + (1.0 - alpha) * grad
+    s2 = alpha * s + (1.0 - alpha) * grad * grad
+    p2 = params - lr * grad / jnp.sqrt(s2 - g2 * g2 + eps)
+    return p2, g2, s2
+
+
+def huber(x, delta=1.0):
+    """Huber loss (a.k.a. DQN's error clipping): quadratic inside delta."""
+    absx = jnp.abs(x)
+    return jnp.where(absx <= delta, 0.5 * x * x, delta * (absx - 0.5 * delta))

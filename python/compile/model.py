@@ -1,0 +1,224 @@
+"""L2: the DQN Q-network and train step in JAX, on a FLAT parameter vector.
+
+Everything the Rust runtime executes is defined here and lowered once by
+``aot.py``.  The network's dense/conv compute bottoms out in the L1 Pallas
+matmul kernel (``kernels.matmul``); the optimizer step is the L1 fused
+centered-RMSProp kernel (``kernels.rmsprop``).
+
+Flat-parameter ABI
+------------------
+All parameters live in one ``f32[P]`` vector.  The Rust coordinator only ever
+handles four opaque buffers (theta, theta_minus, rmsprop g, rmsprop s); the
+static pack/unpack lives here so layer structure never leaks across the
+language boundary.  ``param_spec`` is recorded in the artifact manifest.
+
+Entry points lowered to HLO (per network config):
+  infer(params, states)                          -> q-values
+  train(params, target, g, s, batch..., lr)      -> (params', g', s', loss)
+  train_double(...)                              -> same, Double-DQN targets
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+from .kernels.rmsprop import rmsprop_update
+from .kernels.ref import huber
+
+Shape = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    filters: int
+    kernel: int
+    stride: int
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    """Architecture of one Q-network variant."""
+
+    name: str
+    frame: Tuple[int, int, int]  # (H, W, stacked-channels)
+    convs: Tuple[ConvSpec, ...]
+    hidden: Tuple[int, ...]
+    actions: int
+
+    def conv_out_hw(self) -> List[Tuple[int, int]]:
+        h, w, _ = self.frame
+        out = []
+        for c in self.convs:
+            h = (h - c.kernel) // c.stride + 1
+            w = (w - c.kernel) // c.stride + 1
+            out.append((h, w))
+        return out
+
+
+def make_config(name: str, actions: int = 6) -> NetConfig:
+    """The three supported architectures.
+
+    * ``nature`` — the Mnih et al. (2015) network (~1.7M params @ 6 actions).
+    * ``small``  — half-width variant for fast CPU end-to-end runs.
+    * ``tiny``   — minimal conv net for unit tests and CI.
+    """
+    if name == "nature":
+        return NetConfig(name, (84, 84, 4),
+                         (ConvSpec(32, 8, 4), ConvSpec(64, 4, 2), ConvSpec(64, 3, 1)),
+                         (512,), actions)
+    if name == "small":
+        return NetConfig(name, (84, 84, 4),
+                         (ConvSpec(16, 8, 4), ConvSpec(32, 4, 2)),
+                         (256,), actions)
+    if name == "tiny":
+        return NetConfig(name, (84, 84, 4),
+                         (ConvSpec(4, 8, 8),),
+                         (64,), actions)
+    raise ValueError(f"unknown network config {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter packing
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: NetConfig) -> List[Tuple[str, Shape]]:
+    """Ordered (name, shape) list defining the flat layout."""
+    spec: List[Tuple[str, Shape]] = []
+    c_in = cfg.frame[2]
+    for i, conv in enumerate(cfg.convs):
+        spec.append((f"conv{i}_w", (conv.kernel, conv.kernel, c_in, conv.filters)))
+        spec.append((f"conv{i}_b", (conv.filters,)))
+        c_in = conv.filters
+    h, w = cfg.conv_out_hw()[-1] if cfg.convs else cfg.frame[:2]
+    dim = h * w * c_in
+    for i, width in enumerate(cfg.hidden):
+        spec.append((f"fc{i}_w", (dim, width)))
+        spec.append((f"fc{i}_b", (width,)))
+        dim = width
+    spec.append(("out_w", (dim, cfg.actions)))
+    spec.append(("out_b", (cfg.actions,)))
+    return spec
+
+
+def param_count(cfg: NetConfig) -> int:
+    total = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def unpack(cfg: NetConfig, flat: jax.Array) -> dict:
+    """Static-slice the flat vector into named tensors."""
+    out = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        off += n
+    return out
+
+
+def pack(cfg: NetConfig, tree: dict) -> jax.Array:
+    return jnp.concatenate(
+        [tree[name].reshape(-1).astype(jnp.float32) for name, _ in param_spec(cfg)]
+    )
+
+
+def init_params(cfg: NetConfig, key: jax.Array) -> jax.Array:
+    """Uniform fan-in init (the torch-default scheme the original DQN used)."""
+    leaves = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            leaves[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            bound = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            leaves[name] = jax.random.uniform(sub, shape, jnp.float32, -bound, bound)
+    return pack(cfg, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (im2col conv -> Pallas matmul)
+# ---------------------------------------------------------------------------
+
+def _im2col(x: jax.Array, k: int, s: int) -> jax.Array:
+    """[B,H,W,C] -> [B,OH,OW,k*k*C] patch matrix (VALID padding)."""
+    b, h, w, c = x.shape
+    oh = (h - k) // s + 1
+    ow = (w - k) // s + 1
+    ii = (jnp.arange(oh) * s)[:, None] + jnp.arange(k)[None, :]  # [OH,k]
+    jj = (jnp.arange(ow) * s)[:, None] + jnp.arange(k)[None, :]  # [OW,k]
+    # Advanced indexing broadcast: -> [B, OH, k, OW, k, C]
+    patches = x[:, ii[:, :, None, None], jj[None, None, :, :], :]
+    patches = patches.transpose(0, 1, 3, 2, 4, 5)  # [B,OH,OW,k,k,C]
+    return patches.reshape(b, oh, ow, k * k * c)
+
+
+def forward(cfg: NetConfig, flat: jax.Array, states: jax.Array) -> jax.Array:
+    """Q-values for a batch of uint8 frame stacks: [B,H,W,C] -> [B,A]."""
+    p = unpack(cfg, flat)
+    x = states.astype(jnp.float32) / 255.0
+    b = x.shape[0]
+    for i, conv in enumerate(cfg.convs):
+        patches = _im2col(x, conv.kernel, conv.stride)
+        _, oh, ow, kdim = patches.shape
+        w = p[f"conv{i}_w"].reshape(kdim, conv.filters)
+        y = matmul(patches.reshape(b * oh * ow, kdim), w) + p[f"conv{i}_b"]
+        x = jax.nn.relu(y).reshape(b, oh, ow, conv.filters)
+    x = x.reshape(b, -1)
+    for i in range(len(cfg.hidden)):
+        x = jax.nn.relu(matmul(x, p[f"fc{i}_w"]) + p[f"fc{i}_b"])
+    return matmul(x, p["out_w"]) + p["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# TD loss + train step
+# ---------------------------------------------------------------------------
+
+def td_loss(cfg: NetConfig, flat: jax.Array, target_flat: jax.Array,
+            states, actions, rewards, next_states, dones,
+            *, gamma: float = 0.99, double: bool = False) -> jax.Array:
+    """Mean Huber TD error (DQN's error clipping), eq. (1) of the paper."""
+    b = states.shape[0]
+    q = forward(cfg, flat, states)[jnp.arange(b), actions]
+    qn_target = forward(cfg, target_flat, next_states)
+    if double:
+        # Double-DQN: argmax under theta, value under theta^-.
+        a_star = jnp.argmax(forward(cfg, flat, next_states), axis=1)
+        bootstrap = qn_target[jnp.arange(b), a_star]
+    else:
+        bootstrap = jnp.max(qn_target, axis=1)
+    target = rewards + gamma * (1.0 - dones) * jax.lax.stop_gradient(bootstrap)
+    return jnp.mean(huber(q - jax.lax.stop_gradient(target)))
+
+
+def train_step(cfg: NetConfig, flat, target_flat, g, s,
+               states, actions, rewards, next_states, dones, lr,
+               *, gamma: float = 0.99, double: bool = False):
+    """One full DQN gradient step: grad of TD loss + fused RMSProp update."""
+    loss, grad = jax.value_and_grad(
+        lambda p: td_loss(cfg, p, target_flat, states, actions, rewards,
+                          next_states, dones, gamma=gamma, double=double)
+    )(flat)
+    p2, g2, s2 = rmsprop_update(flat, grad, g, s, lr)
+    return p2, g2, s2, loss
+
+
+# Convenience jitted closure for the test-suite.
+@functools.partial(jax.jit, static_argnums=(0,))
+def infer_jit(cfg: NetConfig, flat, states):
+    return forward(cfg, flat, states)

@@ -1,0 +1,107 @@
+"""AOT bridge contract: the lowered HLO artifacts stay faithful to the
+jitted python model, and the manifest fully describes the ABI."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.golden import det_states
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _art(name):
+    path = os.path.join(ART, name)
+    if not os.path.exists(path):
+        pytest.skip(f"artifact {name} not built (run `make artifacts`)")
+    return path
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(_art("manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_files(manifest):
+    for cname, c in manifest["configs"].items():
+        assert os.path.exists(os.path.join(ART, c["init_params"]))
+        for entry in c["entries"].values():
+            assert os.path.exists(os.path.join(ART, entry["file"])), entry
+
+
+def test_manifest_param_counts(manifest):
+    for cname, c in manifest["configs"].items():
+        cfg = M.make_config(cname, actions=manifest["actions"])
+        assert c["param_count"] == M.param_count(cfg)
+        n = sum(int(np.prod(p["shape"])) for p in c["param_spec"])
+        assert n == c["param_count"]
+
+
+def test_init_blob_matches_model(manifest):
+    for cname, c in manifest["configs"].items():
+        cfg = M.make_config(cname, actions=manifest["actions"])
+        blob = np.fromfile(os.path.join(ART, c["init_params"]), np.float32)
+        want = np.asarray(M.init_params(cfg, jax.random.PRNGKey(0)))
+        np.testing.assert_array_equal(blob, want)
+
+
+def test_golden_matches_live_model(manifest):
+    """golden.json (what Rust pins against) must equal a live forward pass."""
+    with open(_art("golden.json")) as f:
+        golden = json.load(f)
+    for cname, entry in golden.items():
+        cfg = M.make_config(cname, actions=manifest["actions"])
+        flat = jnp.asarray(np.fromfile(
+            os.path.join(ART, f"{cname}_init.bin"), np.float32))
+        h, w, c = cfg.frame
+        for b in (1, 8):
+            st = jnp.asarray(det_states(b, h, w, c))
+            q = np.asarray(M.infer_jit(cfg, flat, st))
+            np.testing.assert_allclose(
+                q, np.asarray(entry[f"infer_b{b}"]), rtol=1e-4, atol=1e-4)
+
+
+def test_hlo_artifacts_have_no_custom_calls(manifest):
+    """interpret=True pallas must lower to plain HLO (no Mosaic custom-call
+    the CPU PJRT client could not execute)."""
+    for c in manifest["configs"].values():
+        for entry in c["entries"].values():
+            with open(os.path.join(ART, entry["file"])) as f:
+                text = f.read()
+            assert "custom-call" not in text, entry["file"]
+            assert "mosaic" not in text.lower(), entry["file"]
+
+
+def test_train_abi_documented(manifest):
+    abi = manifest["train_abi"]
+    assert abi["inputs"] == ["params", "target", "g", "s", "states", "actions",
+                             "rewards", "next_states", "dones", "lr"]
+    assert abi["outputs"] == ["params", "g", "s", "loss"]
+
+
+def test_infer_entry_signatures(manifest):
+    for cname, c in manifest["configs"].items():
+        p = c["param_count"]
+        h, w, ch = c["frame"]
+        for ename, entry in c["entries"].items():
+            if not ename.startswith("infer_b"):
+                continue
+            b = int(ename.split("_b")[1])
+            sig = entry["inputs"]
+            assert sig[0] == {"dtype": "float32", "shape": [p]}
+            assert sig[1] == {"dtype": "uint8", "shape": [b, h, w, ch]}
+
+
+def test_det_states_deterministic():
+    a = det_states(2, 84, 84, 4)
+    b = det_states(2, 84, 84, 4)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.uint8
+    # Spot values the Rust generator mirrors: (i*13 + y*7 + x*3 + c*11) % 256
+    assert a[1, 2, 3, 1] == (13 + 14 + 9 + 11) % 256

@@ -1,0 +1,201 @@
+"""L2 model tests: architecture shapes, conv correctness vs lax, TD loss,
+train-step semantics, and learnability on a toy problem."""
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = M.make_config("tiny")
+    flat = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, flat
+
+
+def _states(key, b, cfg):
+    h, w, c = cfg.frame
+    return jax.random.randint(key, (b, h, w, c), 0, 256, dtype=jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Architecture / packing
+# ---------------------------------------------------------------------------
+
+def test_param_counts():
+    # Hand-computed totals for the three architectures (A = 6 actions).
+    assert M.param_count(M.make_config("tiny")) == 27_082
+    assert M.param_count(M.make_config("small")) == 677_686
+    assert M.param_count(M.make_config("nature")) == 1_687_206
+
+
+def test_conv_output_sizes_match_nature_paper():
+    cfg = M.make_config("nature")
+    assert cfg.conv_out_hw() == [(20, 20), (9, 9), (7, 7)]
+
+
+def test_pack_unpack_roundtrip(tiny):
+    cfg, flat = tiny
+    assert np.allclose(M.pack(cfg, M.unpack(cfg, flat)), flat)
+
+
+def test_unpack_shapes(tiny):
+    cfg, flat = tiny
+    tree = M.unpack(cfg, flat)
+    spec = dict(M.param_spec(cfg))
+    assert set(tree) == set(spec)
+    for name, arr in tree.items():
+        assert arr.shape == spec[name]
+
+
+def test_init_bias_zero_weights_bounded(tiny):
+    cfg, flat = tiny
+    tree = M.unpack(cfg, flat)
+    assert np.all(tree["fc0_b"] == 0.0)
+    w = tree["fc0_w"]
+    bound = 1.0 / np.sqrt(w.shape[0])
+    assert np.all(np.abs(w) <= bound)
+    assert np.std(w) > 0.0
+
+
+def test_init_deterministic(tiny):
+    cfg, flat = tiny
+    again = M.init_params(cfg, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(flat, again)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["tiny", "small"])
+def test_forward_matches_lax_conv(name):
+    """The im2col + Pallas-matmul conv equals XLA's native convolution."""
+    cfg = M.make_config(name)
+    flat = M.init_params(cfg, jax.random.PRNGKey(1))
+    states = _states(jax.random.PRNGKey(2), 4, cfg)
+    q = M.infer_jit(cfg, flat, states)
+
+    p = M.unpack(cfg, flat)
+    x = states.astype(jnp.float32) / 255.0
+    for i, conv in enumerate(cfg.convs):
+        x = lax.conv_general_dilated(
+            x, p[f"conv{i}_w"], (conv.stride, conv.stride), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p[f"conv{i}_b"]
+        x = jax.nn.relu(x)
+    x = x.reshape(x.shape[0], -1)
+    for i in range(len(cfg.hidden)):
+        x = jax.nn.relu(x @ p[f"fc{i}_w"] + p[f"fc{i}_b"])
+    qref = x @ p["out_w"] + p["out_b"]
+    np.testing.assert_allclose(q, qref, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_batch_consistency(tiny):
+    """Row j of a batched forward equals a singleton forward of row j —
+    the invariant Synchronized Execution relies on."""
+    cfg, flat = tiny
+    states = _states(jax.random.PRNGKey(3), 8, cfg)
+    q_batch = M.infer_jit(cfg, flat, states)
+    for j in [0, 3, 7]:
+        q_one = M.infer_jit(cfg, flat, states[j:j + 1])
+        np.testing.assert_allclose(q_batch[j], q_one[0], rtol=1e-4, atol=1e-4)
+
+
+def test_forward_scales_uint8(tiny):
+    cfg, flat = tiny
+    zeros = jnp.zeros((1,) + cfg.frame, jnp.uint8)
+    full = jnp.full((1,) + cfg.frame, 255, jnp.uint8)
+    qz = M.infer_jit(cfg, flat, zeros)
+    qf = M.infer_jit(cfg, flat, full)
+    assert not np.allclose(qz, qf)
+    assert np.all(np.isfinite(qz)) and np.all(np.isfinite(qf))
+
+
+# ---------------------------------------------------------------------------
+# TD loss / train step
+# ---------------------------------------------------------------------------
+
+def _batch(cfg, b=8, seed=4):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    return dict(
+        states=_states(keys[0], b, cfg),
+        actions=jax.random.randint(keys[1], (b,), 0, cfg.actions, dtype=jnp.int32),
+        rewards=jax.random.normal(keys[2], (b,)),
+        next_states=_states(keys[3], b, cfg),
+        dones=(jax.random.uniform(keys[4], (b,)) < 0.2).astype(jnp.float32),
+    )
+
+
+def test_td_loss_zero_when_q_equals_target(tiny):
+    """If rewards make the target equal current Q, loss must be ~0."""
+    cfg, flat = tiny
+    b = 4
+    batch = _batch(cfg, b)
+    q = M.infer_jit(cfg, flat, batch["states"])
+    qn = M.infer_jit(cfg, flat, batch["next_states"])
+    qa = q[jnp.arange(b), batch["actions"]]
+    dones = jnp.zeros((b,), jnp.float32)
+    rewards = qa - 0.99 * jnp.max(qn, axis=1)
+    loss = M.td_loss(cfg, flat, flat, batch["states"], batch["actions"],
+                     rewards, batch["next_states"], dones)
+    assert float(loss) < 1e-8
+
+
+def test_td_loss_done_masks_bootstrap(tiny):
+    cfg, flat = tiny
+    b = 4
+    batch = _batch(cfg, b)
+    ones = jnp.ones((b,), jnp.float32)
+    q = M.infer_jit(cfg, flat, batch["states"])
+    qa = q[jnp.arange(b), batch["actions"]]
+    # target == reward when done: loss is 0 iff reward == Q(s,a)
+    loss = M.td_loss(cfg, flat, flat, batch["states"], batch["actions"],
+                     qa, batch["next_states"], ones)
+    assert float(loss) < 1e-8
+
+
+def test_double_dqn_differs_from_vanilla(tiny):
+    cfg, flat = tiny
+    other = M.init_params(cfg, jax.random.PRNGKey(9))
+    batch = _batch(cfg, 8)
+    l1 = M.td_loss(cfg, flat, other, **batch, double=False)
+    l2 = M.td_loss(cfg, flat, other, **batch, double=True)
+    assert not np.isclose(float(l1), float(l2))
+
+
+def test_train_step_updates_all_states(tiny):
+    cfg, flat = tiny
+    g = jnp.zeros_like(flat)
+    s = jnp.zeros_like(flat)
+    batch = _batch(cfg, 8)
+    p2, g2, s2, loss = M.train_step(
+        cfg, flat, flat, g, s, batch["states"], batch["actions"],
+        batch["rewards"], batch["next_states"], batch["dones"],
+        jnp.float32(2.5e-4))
+    assert float(loss) > 0.0
+    assert not np.allclose(p2, flat)
+    assert float(jnp.sum(jnp.abs(g2))) > 0.0
+    assert float(jnp.sum(s2)) > 0.0
+    assert np.all(np.isfinite(p2))
+
+
+def test_train_step_reduces_td_loss(tiny):
+    """A few steps on a FIXED batch must reduce the TD loss (learnability)."""
+    cfg, flat = tiny
+    g = jnp.zeros_like(flat)
+    s = jnp.zeros_like(flat)
+    batch = _batch(cfg, 8)
+    ts = jax.jit(lambda p, g, s: M.train_step(
+        cfg, p, flat, g, s, batch["states"], batch["actions"],
+        batch["rewards"], batch["next_states"], batch["dones"],
+        jnp.float32(1e-3)))
+    p = flat
+    losses = []
+    for _ in range(20):
+        p, g, s, loss = ts(p, g, s)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses

@@ -1,0 +1,29 @@
+//! Environment bench: per-game agent-step cost (simulate 4 raw ticks +
+//! render + max-pool + downscale + stack) — the CPU side of the paper's
+//! hardware model, and the denominator of its speedup argument.
+//!
+//! Run: `cargo bench --bench env_throughput`
+
+use tempo_dqn::benchkit::Bench;
+use tempo_dqn::env::{make_env, GAMES, STATE_BYTES};
+
+fn main() {
+    let mut bench = Bench::new();
+    for game in GAMES {
+        let mut env = make_env(game, 3).unwrap();
+        let mut i = 0usize;
+        bench.run(&format!("env/{game}/step"), || {
+            let r = env.step(i % env.num_actions());
+            i += 1;
+            if r.done {
+                env.reset();
+            }
+        });
+    }
+    // State assembly (interleaving 4 planes channel-last).
+    let env = make_env("pong", 3).unwrap();
+    let mut out = vec![0u8; STATE_BYTES];
+    bench.run("env/write_state", || env.write_state(&mut out));
+
+    println!("\nper-step env cost feeds hwsim::CostModel::from_measured");
+}

@@ -1,0 +1,45 @@
+//! Replay-memory bench: push and sample throughput (the L3 hot path that
+//! runs once per agent step and once per minibatch).
+//!
+//! Run: `cargo bench --bench replay`
+
+use tempo_dqn::benchkit::Bench;
+use tempo_dqn::env::NET_FRAME;
+use tempo_dqn::replay::{ReplayMemory, StagingBuffer};
+use tempo_dqn::runtime::TrainBatch;
+
+fn main() {
+    let mut bench = Bench::new();
+    let frame = vec![127u8; NET_FRAME];
+
+    // Push throughput at DQN-scale capacity.
+    let mut replay = ReplayMemory::new(1_000_000, 8, NET_FRAME, 4, 1).unwrap();
+    let mut i = 0u64;
+    bench.run("replay/push_1M_cap", || {
+        replay.push((i % 8) as usize, &frame, 1, 0.5, i % 97 == 0, i % 97 == 1);
+        i += 1;
+    });
+
+    // Sample throughput (32-minibatch with stack reconstruction).
+    let mut batch = TrainBatch::default();
+    bench.run("replay/sample_b32", || {
+        replay.sample(32, &mut batch).unwrap();
+    });
+
+    // Staging flush (Concurrent Training's sync-point cost).
+    bench.run("staging/flush_2500", || {
+        let mut staging = StagingBuffer::new();
+        for k in 0..2_500u32 {
+            staging.push(&frame, 1, 0.0, k % 97 == 0, k % 97 == 1);
+        }
+        staging.flush_into(&mut replay, 0);
+    });
+
+    let push = bench.get("replay/push_1M_cap").unwrap();
+    let sample = bench.get("replay/sample_b32").unwrap();
+    println!(
+        "\npush: {:.2} M transitions/s | sample: {:.0} minibatches/s",
+        push.throughput_per_sec() / 1e6,
+        sample.throughput_per_sec()
+    );
+}

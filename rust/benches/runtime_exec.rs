@@ -1,0 +1,50 @@
+//! Device-runtime bench: inference at several batch sizes, the batch-32
+//! train step, and target sync — the accelerator side of the hardware
+//! model. The b1-vs-b8 gap measures the per-transaction overhead that
+//! Synchronized Execution amortizes (paper §4).
+//!
+//! Run: `cargo bench --bench runtime_exec`
+
+use std::sync::Arc;
+
+use tempo_dqn::benchkit::Bench;
+use tempo_dqn::env::{make_env, STATE_BYTES};
+use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, TrainBatch};
+
+fn main() {
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir).expect("run `make artifacts` first");
+    let device = Arc::new(Device::cpu().unwrap());
+    let mut bench = Bench::new();
+
+    let env = make_env("pong", 3).unwrap();
+    let mut state = vec![0u8; STATE_BYTES];
+    env.write_state(&mut state);
+
+    for net in ["tiny", "small"] {
+        let qnet = QNet::load(device.clone(), &manifest, net, false, 32).unwrap();
+        for b in [1usize, 8, 32] {
+            let states: Vec<u8> = state.iter().cycle().take(b * STATE_BYTES).copied().collect();
+            bench.run(&format!("{net}/infer_b{b}"), || {
+                qnet.infer(Policy::ThetaMinus, &states, b).unwrap()
+            });
+        }
+        let b = 32;
+        let batch = TrainBatch {
+            states: state.iter().cycle().take(b * STATE_BYTES).copied().collect(),
+            next_states: state.iter().cycle().take(b * STATE_BYTES).copied().collect(),
+            actions: (0..b as i32).map(|i| i % 3).collect(),
+            rewards: vec![0.5; b],
+            dones: vec![0.0; b],
+        };
+        bench.run(&format!("{net}/train_b32"), || qnet.train_step(&batch, 2.5e-4).unwrap());
+        bench.run(&format!("{net}/sync_target"), || qnet.sync_target());
+
+        let b1 = bench.get(&format!("{net}/infer_b1")).unwrap().mean_ns;
+        let b8 = bench.get(&format!("{net}/infer_b8")).unwrap().mean_ns;
+        println!(
+            "{net}: 8 size-1 transactions = {:.2} ms vs one size-8 = {:.2} ms ({:.1}x amortization)\n",
+            8.0 * b1 / 1e6, b8 / 1e6, 8.0 * b1 / b8
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! Table 1/2/3 bench: regenerates the paper's runtime grid through the
+//! calibrated DES and times the simulator itself.
+//!
+//! Run: `cargo bench --bench table1_modes`
+
+use tempo_dqn::benchkit::Bench;
+use tempo_dqn::config::ExecMode;
+use tempo_dqn::hwsim::{simulate, CostModel, SimRun};
+use tempo_dqn::report::RuntimeGrid;
+
+fn main() {
+    let model = CostModel::gtx1080_i7();
+    let threads = [1usize, 2, 4, 8];
+    let steps = 200_000u64;
+    let mut bench = Bench::new();
+    let mut grid = RuntimeGrid::new(&threads);
+
+    for &w in &threads {
+        for mode in ExecMode::ALL {
+            let run = SimRun { steps, c: 10_000, f: 4, threads: w };
+            bench.run(&format!("des/{}/w{}", mode.name(), w), || {
+                std::hint::black_box(simulate(model, run, mode))
+            });
+            let stats = simulate(model, run, mode);
+            let hours = stats.makespan_ms * (50_000_000.0 / steps as f64) / 3_600_000.0;
+            grid.set(mode, w, hours, 0.0);
+        }
+    }
+    println!();
+    print!("{}", grid.table1());
+    print!("{}", grid.table2());
+    print!("{}", grid.table3());
+    if let Some((base, best, speedup)) = grid.headline() {
+        println!("headline: {base:.2} h -> {best:.2} h ({speedup:.2}x)  [paper: 25.08 -> 9.02, 2.78x]");
+    }
+}

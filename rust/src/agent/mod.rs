@@ -1,0 +1,5 @@
+//! Agent substrate: action selection policies.
+
+pub mod policy;
+
+pub use policy::{argmax, EpsGreedy};

@@ -1,0 +1,148 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (`cargo bench`). Provides
+//! warmup, adaptive iteration counts, and mean/σ/min reporting in a stable
+//! plain-text format so bench output can be diffed across runs.
+
+use std::time::{Duration, Instant};
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            return 0.0;
+        }
+        1e9 / self.mean_ns
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bench {
+    target_time: Duration,
+    warmup: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // Respect a quick mode for CI: TEMPO_BENCH_MS=200 etc.
+        let ms = std::env::var("TEMPO_BENCH_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(1_000);
+        Bench {
+            target_time: Duration::from_millis(ms),
+            warmup: Duration::from_millis(ms / 5),
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f` (one call = one iteration).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup + estimate per-iter cost.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup || warm_iters < 3 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est = w0.elapsed().as_nanos() as f64 / warm_iters as f64;
+        // Aim for ~30 samples of batched iterations within target_time.
+        let total_iters = (self.target_time.as_nanos() as f64 / est).max(3.0) as u64;
+        let samples = 30u64.min(total_iters).max(3);
+        let per_sample = (total_iters / samples).max(1);
+
+        let mut times = Vec::with_capacity(samples as usize);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..per_sample {
+                std::hint::black_box(f());
+            }
+            times.push(t0.elapsed().as_nanos() as f64 / per_sample as f64);
+        }
+        let n = times.len() as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples * per_sample,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: min,
+        };
+        println!(
+            "bench {:<44} {:>12}/iter (σ {:>10}, min {:>10}, {} iters)",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.std_ns),
+            fmt_ns(res.min_ns),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Last result for `name`.
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().rev().find(|r| r.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_reasonable() {
+        std::env::set_var("TEMPO_BENCH_MS", "50");
+        let mut b = Bench::new();
+        let r = b.run("noop-ish", || std::hint::black_box(1u64 + 1)).clone();
+        assert!(r.mean_ns < 1e6, "{}", r.mean_ns);
+        assert!(r.iters >= 3);
+        assert!(b.get("noop-ish").is_some());
+        assert!(r.throughput_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(1.2e4).contains("us"));
+        assert!(fmt_ns(3.4e6).contains("ms"));
+        assert!(fmt_ns(2.1e9).contains(" s"));
+    }
+}

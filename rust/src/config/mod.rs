@@ -1,0 +1,9 @@
+//! Configuration system: typed experiment config + TOML-subset file loader
+//! + CLI overrides. The `paper` preset reproduces Table 5 of Daley & Amato
+//! (2021) / Mnih et al. (2015) exactly.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{EpsSchedule, ExecMode, ExperimentConfig};
+pub use toml::TomlDoc;

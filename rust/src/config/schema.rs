@@ -1,0 +1,332 @@
+//! Typed experiment configuration (launcher-level, Megatron-style: preset
+//! file -> CLI overrides -> validated struct).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+use super::toml::TomlDoc;
+
+/// Which coordinator drives the run (the paper's §5.1 ablation axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Original DQN control flow: alternate sampling and training.
+    Standard,
+    /// Concurrent Training only (paper §3).
+    Concurrent,
+    /// Synchronized Execution only (paper §4).
+    Synchronized,
+    /// Both combined (paper Algorithm 1).
+    Both,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<ExecMode> {
+        Ok(match s {
+            "standard" => ExecMode::Standard,
+            "concurrent" => ExecMode::Concurrent,
+            "synchronized" | "sync" => ExecMode::Synchronized,
+            "both" | "combined" => ExecMode::Both,
+            other => bail!("unknown exec mode {other:?} (standard|concurrent|synchronized|both)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Standard => "standard",
+            ExecMode::Concurrent => "concurrent",
+            ExecMode::Synchronized => "synchronized",
+            ExecMode::Both => "both",
+        }
+    }
+
+    pub fn concurrent_training(self) -> bool {
+        matches!(self, ExecMode::Concurrent | ExecMode::Both)
+    }
+
+    pub fn synchronized_execution(self) -> bool {
+        matches!(self, ExecMode::Synchronized | ExecMode::Both)
+    }
+
+    pub const ALL: [ExecMode; 4] = [
+        ExecMode::Standard,
+        ExecMode::Concurrent,
+        ExecMode::Synchronized,
+        ExecMode::Both,
+    ];
+}
+
+/// Linear epsilon-greedy schedule (Mnih et al. 2015: 1.0 -> 0.1 over 1M
+/// steps, then fixed).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpsSchedule {
+    pub start: f64,
+    pub end: f64,
+    pub decay_steps: u64,
+}
+
+impl EpsSchedule {
+    pub fn at(&self, step: u64) -> f64 {
+        if self.decay_steps == 0 || step >= self.decay_steps {
+            return self.end;
+        }
+        let frac = step as f64 / self.decay_steps as f64;
+        self.start + (self.end - self.start) * frac
+    }
+
+    pub const fn fixed(eps: f64) -> EpsSchedule {
+        EpsSchedule { start: eps, end: eps, decay_steps: 0 }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    // Run identity
+    pub game: String,
+    pub seed: u64,
+    pub mode: ExecMode,
+
+    // Hardware model
+    /// W sampler threads (the paper's abstract machine executes W CPU
+    /// program threads + 1 accelerator task).
+    pub threads: usize,
+
+    // Network / artifacts
+    pub net: String,
+    pub double: bool,
+
+    // DQN hyperparameters (paper Table 5 defaults)
+    pub total_steps: u64,
+    pub minibatch: usize,
+    pub replay_capacity: usize,
+    /// C: target update period.
+    pub target_update_period: u64,
+    /// F: training period (one minibatch per F steps).
+    pub train_period: u64,
+    pub gamma: f64,
+    pub prepopulate: usize,
+    pub lr: f64,
+    pub eps: EpsSchedule,
+
+    // Evaluation
+    pub eval_period: u64,
+    pub eval_episodes: usize,
+    pub eval_eps: f64,
+}
+
+impl Default for ExperimentConfig {
+    /// The paper's Table 5 values, on the `small` net and pong.
+    fn default() -> Self {
+        ExperimentConfig {
+            game: "pong".into(),
+            seed: 0,
+            mode: ExecMode::Both,
+            threads: 8,
+            net: "small".into(),
+            double: false,
+            total_steps: 50_000_000,
+            minibatch: 32,
+            replay_capacity: 1_000_000,
+            target_update_period: 10_000,
+            train_period: 4,
+            gamma: 0.99,
+            prepopulate: 50_000,
+            lr: 2.5e-4,
+            eps: EpsSchedule { start: 1.0, end: 0.1, decay_steps: 1_000_000 },
+            eval_period: 250_000,
+            eval_episodes: 30,
+            eval_eps: 0.05,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Named presets. `paper` = Table 5; `speedtest` = the §5.1 setup
+    /// (eps fixed at 0.1, 1M steps); `smoke` = seconds-scale CI run.
+    pub fn preset(name: &str) -> Result<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        match name {
+            "paper" => {}
+            "speedtest" => {
+                c.total_steps = 1_000_000;
+                c.eps = EpsSchedule::fixed(0.1);
+                c.eval_period = u64::MAX;
+            }
+            "smoke" => {
+                c.net = "tiny".into();
+                c.total_steps = 400;
+                c.replay_capacity = 4_000;
+                c.prepopulate = 200;
+                c.target_update_period = 100;
+                c.eps = EpsSchedule { start: 1.0, end: 0.1, decay_steps: 200 };
+                c.eval_period = u64::MAX;
+                c.threads = 2;
+            }
+            other => bail!("unknown preset {other:?} (paper|speedtest|smoke)"),
+        }
+        Ok(c)
+    }
+
+    /// Load a TOML config file over a preset base.
+    pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
+        let base = Self::preset(&doc.str_or("preset", "paper")?)?;
+        let mut c = base;
+        c.game = doc.str_or("run.game", &c.game)?;
+        c.seed = doc.usize_or("run.seed", c.seed as usize)? as u64;
+        c.mode = ExecMode::parse(&doc.str_or("run.mode", c.mode.name())?)?;
+        c.threads = doc.usize_or("run.threads", c.threads)?;
+        c.net = doc.str_or("net.config", &c.net)?;
+        c.double = doc.bool_or("net.double", c.double)?;
+        c.total_steps = doc.usize_or("dqn.total_steps", c.total_steps as usize)? as u64;
+        c.minibatch = doc.usize_or("dqn.minibatch", c.minibatch)?;
+        c.replay_capacity = doc.usize_or("dqn.replay_capacity", c.replay_capacity)?;
+        c.target_update_period =
+            doc.usize_or("dqn.target_update_period", c.target_update_period as usize)? as u64;
+        c.train_period = doc.usize_or("dqn.train_period", c.train_period as usize)? as u64;
+        c.gamma = doc.f64_or("dqn.gamma", c.gamma)?;
+        c.prepopulate = doc.usize_or("dqn.prepopulate", c.prepopulate)?;
+        c.lr = doc.f64_or("dqn.lr", c.lr)?;
+        c.eps = EpsSchedule {
+            start: doc.f64_or("eps.start", c.eps.start)?,
+            end: doc.f64_or("eps.end", c.eps.end)?,
+            decay_steps: doc.usize_or("eps.decay_steps", c.eps.decay_steps as usize)? as u64,
+        };
+        c.eval_period = doc.usize_or("eval.period", c.eval_period as usize)? as u64;
+        c.eval_episodes = doc.usize_or("eval.episodes", c.eval_episodes)?;
+        c.eval_eps = doc.f64_or("eval.eps", c.eval_eps)?;
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply CLI overrides (highest priority).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.str_opt("game") {
+            self.game = v.to_string();
+        }
+        if let Some(v) = args.str_opt("mode") {
+            self.mode = ExecMode::parse(v)?;
+        }
+        if let Some(v) = args.str_opt("net") {
+            self.net = v.to_string();
+        }
+        if args.flag("double") {
+            self.double = true;
+        }
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.threads = args.usize_or("threads", self.threads)?;
+        self.total_steps = args.u64_or("steps", self.total_steps)?;
+        self.replay_capacity = args.usize_or("replay-capacity", self.replay_capacity)?;
+        self.target_update_period = args.u64_or("target-period", self.target_update_period)?;
+        self.train_period = args.u64_or("train-period", self.train_period)?;
+        self.prepopulate = args.usize_or("prepopulate", self.prepopulate)?;
+        self.lr = args.f64_or("lr", self.lr)?;
+        self.eval_period = args.u64_or("eval-period", self.eval_period)?;
+        self.validate()
+    }
+
+    /// Build from preset/--config file/CLI in priority order.
+    pub fn resolve(args: &Args) -> Result<ExperimentConfig> {
+        let mut cfg = if let Some(path) = args.str_opt("config") {
+            ExperimentConfig::from_toml(&TomlDoc::load(Path::new(path))?)?
+        } else {
+            ExperimentConfig::preset(args.get_or("preset", "paper"))?
+        };
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.threads == 0 {
+            bail!("threads must be >= 1");
+        }
+        if self.train_period == 0 || self.target_update_period == 0 {
+            bail!("train_period and target_update_period must be >= 1");
+        }
+        if self.target_update_period % self.train_period != 0 {
+            bail!(
+                "target_update_period (C={}) must be a multiple of train_period (F={}) — paper §3 footnote 3",
+                self.target_update_period, self.train_period
+            );
+        }
+        if !(0.0..=1.0).contains(&self.gamma) {
+            bail!("gamma must be in [0,1]");
+        }
+        if self.minibatch == 0 {
+            bail!("minibatch must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Minibatches trained per target window (C / F).
+    pub fn batches_per_window(&self) -> u64 {
+        self.target_update_period / self.train_period
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_matches_table5() {
+        let c = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(c.minibatch, 32);
+        assert_eq!(c.replay_capacity, 1_000_000);
+        assert_eq!(c.target_update_period, 10_000);
+        assert_eq!(c.train_period, 4);
+        assert_eq!(c.gamma, 0.99);
+        assert_eq!(c.prepopulate, 50_000);
+        assert!((c.lr - 2.5e-4).abs() < 1e-12);
+        assert_eq!(c.batches_per_window(), 2_500);
+    }
+
+    #[test]
+    fn speedtest_preset_matches_section_5_1() {
+        let c = ExperimentConfig::preset("speedtest").unwrap();
+        assert_eq!(c.total_steps, 1_000_000);
+        assert_eq!(c.eps.at(0), 0.1);
+        assert_eq!(c.eps.at(999_999), 0.1);
+    }
+
+    #[test]
+    fn eps_schedule_linear() {
+        let e = EpsSchedule { start: 1.0, end: 0.1, decay_steps: 1_000_000 };
+        assert_eq!(e.at(0), 1.0);
+        assert!((e.at(500_000) - 0.55).abs() < 1e-9);
+        assert_eq!(e.at(1_000_000), 0.1);
+        assert_eq!(e.at(50_000_000), 0.1);
+    }
+
+    #[test]
+    fn validation_rejects_c_not_multiple_of_f() {
+        let mut c = ExperimentConfig::preset("paper").unwrap();
+        c.target_update_period = 10_001;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_and_cli_override() {
+        let doc = TomlDoc::parse(
+            "preset = \"smoke\"\n[run]\nmode = \"concurrent\"\nthreads = 4\n[dqn]\ntrain_period = 2\ntarget_update_period = 50\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.mode, ExecMode::Concurrent);
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.batches_per_window(), 25);
+        let args = Args::parse(["--threads".to_string(), "2".to_string()]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.threads, 2);
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in ExecMode::ALL {
+            assert_eq!(ExecMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(ExecMode::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal TOML-subset parser (the `toml` crate is unavailable offline).
+//!
+//! Supports what experiment configs need: `[section]` headers, `key = value`
+//! with string / integer / float / boolean values, `#` comments, and dotted
+//! lookup (`section.key`). Arrays of integers are supported for sweep lists.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntArray(Vec<i64>),
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            };
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            doc.values.insert(full, parse_value(value.trim(), lineno + 1)?);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.values.get(key) {
+            None => Ok(default.to_string()),
+            Some(TomlValue::Str(s)) => Ok(s.clone()),
+            Some(v) => bail!("{key}: expected string, got {v:?}"),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(TomlValue::Int(i)) if *i >= 0 => Ok(*i as usize),
+            Some(v) => bail!("{key}: expected non-negative integer, got {v:?}"),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(TomlValue::Float(f)) => Ok(*f),
+            Some(TomlValue::Int(i)) => Ok(*i as f64),
+            Some(v) => bail!("{key}: expected number, got {v:?}"),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(TomlValue::Bool(b)) => Ok(*b),
+            Some(v) => bail!("{key}: expected bool, got {v:?}"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let items: Result<Vec<i64>> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse::<i64>().map_err(|_| anyhow::anyhow!("line {lineno}: bad int {t:?}")))
+            .collect();
+        return Ok(TomlValue::IntArray(items?));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            # experiment
+            name = "paper"
+            [dqn]
+            target_update_period = 10_000
+            lr = 2.5e-4
+            double = false
+            [sweep]
+            threads = [1, 2, 4, 8]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", "").unwrap(), "paper");
+        assert_eq!(doc.usize_or("dqn.target_update_period", 0).unwrap(), 10_000);
+        assert!((doc.f64_or("dqn.lr", 0.0).unwrap() - 2.5e-4).abs() < 1e-12);
+        assert!(!doc.bool_or("dqn.double", true).unwrap());
+        assert_eq!(doc.get("sweep.threads"),
+                   Some(&TomlValue::IntArray(vec![1, 2, 4, 8])));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("missing", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let doc = TomlDoc::parse("x = \"hi\"").unwrap();
+        assert!(doc.usize_or("x", 0).is_err());
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = TomlDoc::parse("a = 1 # trailing\nb = \"x#y\"").unwrap();
+        assert_eq!(doc.usize_or("a", 0).unwrap(), 1);
+        assert_eq!(doc.str_or("b", "").unwrap(), "x#y");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("just words").is_err());
+        assert!(TomlDoc::parse("[]").is_err());
+        assert!(TomlDoc::parse("k = @@").is_err());
+    }
+}

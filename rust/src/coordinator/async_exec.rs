@@ -1,0 +1,217 @@
+//! Asynchronous-execution driver (Synchronized Execution OFF).
+//!
+//! W sampler threads each own an environment and compute their own size-1
+//! Q-inference on the shared device — the contention regime of the paper's
+//! Figure 3(a). Two variants:
+//!
+//! * **standard** (Concurrent Training OFF): original DQN semantics — a
+//!   sampler may not act at step t until floor(t/F) minibatch updates have
+//!   completed ([`TrainInterlock`]); acting uses theta.
+//! * **concurrent** (Concurrent Training ON, paper §3): acting uses
+//!   theta_minus, a dedicated trainer thread runs C/F minibatches per
+//!   C-step window, transitions stage per-thread and flush only at the
+//!   window barrier, where theta_minus <- theta.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::Phase;
+use crate::replay::StagingBuffer;
+use crate::runtime::{Policy, TrainBatch};
+
+use super::shared::{SamplerCtx, Shared, TrainInterlock, WindowGate};
+
+/// Run the async driver. `concurrent` selects the variant.
+/// `on_progress` is invoked from the main thread with the completed-step
+/// count (eval hooks / logging).
+pub fn run_async(
+    shared: &Shared<'_>,
+    concurrent: bool,
+    mut on_progress: impl FnMut(u64) + Send,
+) -> Result<()> {
+    let w = shared.cfg.threads;
+    let total = shared.cfg.total_steps;
+    let c = shared.cfg.target_update_period;
+
+    let interlock = TrainInterlock::new();
+    let gate = WindowGate::new(if concurrent { c.min(total) } else { u64::MAX });
+    let stagings: Vec<Mutex<StagingBuffer>> =
+        (0..w).map(|_| Mutex::new(StagingBuffer::new())).collect();
+
+    // Trainer-thread window protocol (concurrent only).
+    let dispatched = AtomicU64::new(0);
+    let trainer_done = AtomicU64::new(0);
+    let trainer_cv = (Mutex::new(()), Condvar::new());
+
+    std::thread::scope(|scope| -> Result<()> {
+        // ---- sampler threads --------------------------------------------
+        for slot in 0..w {
+            let shared = &shared;
+            let gate = &gate;
+            let interlock = &interlock;
+            let stagings = &stagings;
+            scope.spawn(move || {
+                let mut ctx = match SamplerCtx::new(shared.cfg, slot) {
+                    Ok(c) => c,
+                    Err(e) => return shared.fail(format!("sampler {slot}: {e}")),
+                };
+                let mut train_batch = TrainBatch::default();
+                loop {
+                    if shared.should_stop() {
+                        break;
+                    }
+                    let t = shared.claimed.fetch_add(1, Ordering::SeqCst);
+                    if t >= total {
+                        shared.stop.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                    if concurrent {
+                        gate.wait_for_step(shared, t);
+                    } else {
+                        interlock.ensure_trained(shared, t, &mut train_batch);
+                    }
+                    // After claiming a valid step we must complete it (the
+                    // window accounting depends on it); only a worker error
+                    // aborts mid-step.
+                    if shared.aborted() {
+                        break;
+                    }
+                    ctx.refresh_state();
+                    let policy =
+                        if concurrent { Policy::ThetaMinus } else { Policy::Theta };
+                    let q = match shared
+                        .span(slot, Phase::Infer, || shared.qnet.infer(policy, &ctx.state_buf, 1))
+                    {
+                        Ok(q) => q,
+                        Err(e) => return shared.fail(format!("infer: {e}")),
+                    };
+                    if concurrent {
+                        let staging = &stagings[slot];
+                        ctx.act(shared, t, &q, |frame, a, r, done, start| {
+                            staging.lock().unwrap().push(frame, a, r, done, start);
+                        });
+                    } else {
+                        let replay = shared.replay;
+                        ctx.act(shared, t, &q, |frame, a, r, done, start| {
+                            replay.lock().unwrap().push(slot, frame, a, r, done, start);
+                        });
+                    }
+                }
+            });
+        }
+
+        // ---- trainer thread (concurrent only) ---------------------------
+        if concurrent {
+            let shared = &shared;
+            let dispatched = &dispatched;
+            let trainer_done = &trainer_done;
+            let trainer_cv = &trainer_cv;
+            scope.spawn(move || {
+                let mut batch = TrainBatch::default();
+                loop {
+                    // Wait for a dispatched window (or stop).
+                    loop {
+                        if shared.should_stop() {
+                            return;
+                        }
+                        if trainer_done.load(Ordering::SeqCst)
+                            < dispatched.load(Ordering::SeqCst)
+                        {
+                            break;
+                        }
+                        let g = trainer_cv.0.lock().unwrap();
+                        let _ = trainer_cv
+                            .1
+                            .wait_timeout(g, std::time::Duration::from_millis(1))
+                            .unwrap();
+                    }
+                    let batches = shared.cfg.batches_per_window();
+                    for _ in 0..batches {
+                        if shared.should_stop() {
+                            return;
+                        }
+                        if let Err(e) = shared.do_one_train(&mut batch) {
+                            return shared.fail(format!("trainer: {e}"));
+                        }
+                    }
+                    trainer_done.fetch_add(1, Ordering::SeqCst);
+                    trainer_cv.1.notify_all();
+                }
+            });
+        }
+
+        // ---- main thread: window orchestration (Algorithm 1's role) -----
+        if concurrent {
+            let mut window_end = c.min(total);
+            // Dispatch the first training window immediately (it trains on
+            // the prepopulated replay while samplers collect window 0).
+            dispatched.fetch_add(1, Ordering::SeqCst);
+            trainer_cv.1.notify_all();
+            loop {
+                // Wait for samplers to finish the window AND the trainer to
+                // finish its batches.
+                loop {
+                    if shared.aborted() {
+                        return Err(anyhow!("worker failed"));
+                    }
+                    let samplers_done = shared.completed.load(Ordering::SeqCst) >= window_end;
+                    let trainer_caught_up = trainer_done.load(Ordering::SeqCst)
+                        >= dispatched.load(Ordering::SeqCst);
+                    if samplers_done && trainer_caught_up {
+                        break;
+                    }
+                    // Normal termination: a sampler claimed the final step
+                    // and set `stop`; the trainer exits without finishing
+                    // its (forfeited) final-window quota.
+                    if samplers_done && shared.should_stop() {
+                        break;
+                    }
+                    on_progress(shared.completed.load(Ordering::SeqCst));
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                // Synchronization point: flush staging, update target net.
+                shared.span(shared.main_lane(), Phase::Sync, || {
+                    let mut replay = shared.replay.lock().unwrap();
+                    for (slot, staging) in stagings.iter().enumerate() {
+                        staging.lock().unwrap().flush_into(&mut replay, slot);
+                    }
+                    shared.qnet.sync_target();
+                });
+                on_progress(shared.completed.load(Ordering::SeqCst));
+                if window_end >= total {
+                    shared.stop.store(true, Ordering::SeqCst);
+                    gate.advance(u64::MAX); // release parked samplers to exit
+                    trainer_cv.1.notify_all();
+                    break;
+                }
+                // Open the next window and dispatch its training batches.
+                window_end = (window_end + c).min(total);
+                dispatched.fetch_add(1, Ordering::SeqCst);
+                trainer_cv.1.notify_all();
+                gate.advance(window_end);
+            }
+        } else {
+            // Standard: main thread only monitors progress.
+            loop {
+                if shared.should_stop() {
+                    break;
+                }
+                let done = shared.completed.load(Ordering::SeqCst);
+                on_progress(done);
+                if done >= total {
+                    shared.stop.store(true, Ordering::SeqCst);
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        Ok(())
+    })?;
+
+    if let Some(err) = shared.error.lock().unwrap().take() {
+        return Err(anyhow!(err));
+    }
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! The coordinator: the paper's system contribution.
+//!
+//! Dispatches one of four execution models (paper §5.1's ablation grid)
+//! over the shared substrates (device runtime, replay memory, environment
+//! suite, metrics):
+//!
+//! | mode          | Concurrent Training | Synchronized Execution |
+//! |---------------|---------------------|------------------------|
+//! | standard      | off                 | off                    |
+//! | concurrent    | on  (§3)            | off                    |
+//! | synchronized  | off                 | on  (§4)               |
+//! | both          | on                  | on  (Algorithm 1)      |
+
+pub mod async_exec;
+pub mod shared;
+pub mod sync_exec;
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::agent::EpsGreedy;
+use crate::config::{ExecMode, ExperimentConfig};
+use crate::env::{make_env, NET_FRAME};
+use crate::eval::{EvalPoint, Evaluator};
+use crate::metrics::{GanttTrace, PhaseTimers};
+use crate::replay::ReplayMemory;
+use crate::runtime::{BusSnapshot, Device, Manifest, QNet};
+
+pub use shared::{SamplerCtx, Shared, TrainInterlock, WindowGate};
+
+/// Result of one training run.
+#[derive(Debug, Default)]
+pub struct TrainResult {
+    pub steps: u64,
+    pub episodes: u64,
+    pub trains: u64,
+    pub target_syncs: u64,
+    pub wall_s: f64,
+    pub steps_per_sec: f64,
+    /// (step, loss) samples.
+    pub losses: Vec<(u64, f32)>,
+    /// (step, raw episode return).
+    pub returns: Vec<(u64, f64)>,
+    pub evals: Vec<EvalPoint>,
+    pub bus: BusSnapshot,
+    pub timers_report: String,
+}
+
+impl TrainResult {
+    /// Mean raw return over the last `n` episodes.
+    pub fn recent_mean_return(&self, n: usize) -> f64 {
+        let tail: Vec<f64> = self.returns.iter().rev().take(n).map(|(_, r)| *r).collect();
+        if tail.is_empty() {
+            return 0.0;
+        }
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// The launcher-facing coordinator.
+pub struct Coordinator {
+    cfg: ExperimentConfig,
+    qnet: Arc<QNet>,
+    device: Arc<Device>,
+    timers: Arc<PhaseTimers>,
+    gantt: Option<Arc<GanttTrace>>,
+    run_eval: bool,
+}
+
+impl Coordinator {
+    /// Load artifacts and build the full stack for `cfg`.
+    pub fn new(cfg: ExperimentConfig, artifact_dir: &std::path::Path) -> Result<Coordinator> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let device = Arc::new(Device::cpu()?);
+        let qnet = Arc::new(
+            QNet::load(device.clone(), &manifest, &cfg.net, cfg.double, cfg.minibatch)
+                .context("loading Q-network artifacts")?,
+        );
+        Self::with_qnet(cfg, device, qnet)
+    }
+
+    /// Build around an existing device/network (artifact reuse in sweeps).
+    pub fn with_qnet(cfg: ExperimentConfig, device: Arc<Device>, qnet: Arc<QNet>) -> Result<Coordinator> {
+        cfg.validate()?;
+        // Sanity: the env's action count must fit the compiled head.
+        let probe = make_env(&cfg.game, 0)?;
+        if probe.num_actions() > qnet.spec().actions {
+            anyhow::bail!(
+                "game {:?} has {} actions but artifacts were compiled for {}",
+                cfg.game, probe.num_actions(), qnet.spec().actions
+            );
+        }
+        Ok(Coordinator {
+            cfg,
+            qnet,
+            device,
+            timers: Arc::new(PhaseTimers::new()),
+            gantt: None,
+            run_eval: true,
+        })
+    }
+
+    pub fn with_gantt(mut self, trace: Arc<GanttTrace>) -> Self {
+        self.gantt = Some(trace);
+        self
+    }
+
+    pub fn without_eval(mut self) -> Self {
+        self.run_eval = false;
+        self
+    }
+
+    pub fn timers(&self) -> &Arc<PhaseTimers> {
+        &self.timers
+    }
+
+    pub fn device(&self) -> &Arc<Device> {
+        &self.device
+    }
+
+    pub fn qnet(&self) -> &Arc<QNet> {
+        &self.qnet
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Prepopulate the replay memory with `cfg.prepopulate` random-policy
+    /// transitions, spread over the per-thread streams (paper Table 5: N).
+    fn prepopulate(&self, replay: &Mutex<ReplayMemory>) -> Result<()> {
+        let w = self.cfg.threads;
+        let mut replay = replay.lock().unwrap();
+        let per_stream = self.cfg.prepopulate.div_ceil(w);
+        for slot in 0..w {
+            let mut env = make_env(&self.cfg.game, self.cfg.seed.wrapping_add(0xF00D + slot as u64))?;
+            let mut policy = EpsGreedy::new(self.cfg.seed, 0xBEEF ^ slot as u64, env.num_actions());
+            let mut frame = vec![0u8; NET_FRAME];
+            let mut start = true;
+            for _ in 0..per_stream {
+                frame.copy_from_slice(env.latest_plane());
+                let a = policy.random();
+                let r = env.step(a);
+                replay.push(slot, &frame, a as u8, r.reward, r.done, start);
+                start = false;
+                if r.done {
+                    env.reset();
+                    start = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the experiment to completion and return the collected stats.
+    pub fn run(&mut self) -> Result<TrainResult> {
+        let cfg = self.cfg.clone();
+        let replay = Mutex::new(ReplayMemory::new(
+            cfg.replay_capacity,
+            cfg.threads,
+            NET_FRAME,
+            crate::env::STACK,
+            cfg.seed,
+        )?);
+        self.prepopulate(&replay)?;
+
+        let mut evaluator = if self.run_eval && cfg.eval_period < cfg.total_steps {
+            Some(Evaluator::new(&cfg.game, cfg.seed, cfg.eval_episodes, cfg.eval_eps)?)
+        } else {
+            None
+        };
+        let mut evals: Vec<EvalPoint> = Vec::new();
+        let mut next_eval = cfg.eval_period;
+
+        self.device.stats.reset();
+        self.timers.reset();
+        let shared = Shared::new(
+            &cfg,
+            &self.qnet,
+            &replay,
+            &self.timers,
+            self.gantt.as_deref(),
+        );
+
+        let qnet = &self.qnet;
+        let t0 = Instant::now();
+        {
+            let on_progress = |completed: u64| {
+                if let Some(ev) = evaluator.as_mut() {
+                    if completed >= next_eval {
+                        if let Ok(point) = ev.run(qnet, completed) {
+                            evals.push(point);
+                        }
+                        next_eval += cfg.eval_period;
+                    }
+                }
+            };
+            match cfg.mode {
+                ExecMode::Standard => async_exec::run_async(&shared, false, on_progress)?,
+                ExecMode::Concurrent => async_exec::run_async(&shared, true, on_progress)?,
+                ExecMode::Synchronized => sync_exec::run_sync(&shared, false, on_progress)?,
+                ExecMode::Both => sync_exec::run_sync(&shared, true, on_progress)?,
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        let steps = shared.completed.load(Ordering::SeqCst);
+        let mut losses = std::mem::take(&mut *shared.losses.lock().unwrap());
+        losses.sort_unstable_by_key(|(s, _)| *s);
+        let mut returns = std::mem::take(&mut *shared.returns.lock().unwrap());
+        returns.sort_unstable_by_key(|(s, _)| *s);
+
+        Ok(TrainResult {
+            steps,
+            episodes: shared.episodes.load(Ordering::SeqCst),
+            trains: shared.trains_done.load(Ordering::SeqCst),
+            target_syncs: self.qnet.target_syncs.load(Ordering::SeqCst),
+            wall_s,
+            steps_per_sec: steps as f64 / wall_s.max(1e-9),
+            losses,
+            returns,
+            evals,
+            bus: self.device.stats.snapshot(),
+            timers_report: self.timers.report(),
+        })
+    }
+}

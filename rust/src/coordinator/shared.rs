@@ -1,0 +1,290 @@
+//! State shared between the main thread, sampler threads, and the trainer
+//! thread, plus the two synchronization devices the paper's execution
+//! models are built from:
+//!
+//! * [`TrainInterlock`] — the *sequential dependency* of standard DQN
+//!   (paper §3): acting at step t requires floor(t/F) completed minibatch
+//!   updates, because action selection depends on the freshly-updated
+//!   theta. Disabling Concurrent Training means enforcing this interlock.
+//!
+//! * [`WindowGate`] — Concurrent Training's replacement: steps may proceed
+//!   freely until the end of the current C-step target window; crossing
+//!   threads park until the main thread flushes staging, syncs theta_minus,
+//!   and opens the next window.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::agent::EpsGreedy;
+use crate::config::ExperimentConfig;
+use crate::env::{make_env, AtariEnv, NET_FRAME, STATE_BYTES};
+use crate::metrics::{GanttTrace, Phase, PhaseTimers};
+use crate::replay::ReplayMemory;
+use crate::runtime::{QNet, TrainBatch};
+
+/// Everything the worker threads share by reference (threads are scoped).
+pub struct Shared<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub qnet: &'a QNet,
+    pub replay: &'a Mutex<ReplayMemory>,
+    pub timers: &'a PhaseTimers,
+    pub gantt: Option<&'a GanttTrace>,
+    /// Steps claimed by samplers (monotone ticket counter).
+    pub claimed: AtomicU64,
+    /// Steps fully executed.
+    pub completed: AtomicU64,
+    pub stop: AtomicBool,
+    /// Minibatch updates completed.
+    pub trains_done: AtomicU64,
+    pub losses: Mutex<Vec<(u64, f32)>>,
+    pub returns: Mutex<Vec<(u64, f64)>>,
+    pub episodes: AtomicU64,
+    pub error: Mutex<Option<String>>,
+}
+
+impl<'a> Shared<'a> {
+    pub fn new(
+        cfg: &'a ExperimentConfig,
+        qnet: &'a QNet,
+        replay: &'a Mutex<ReplayMemory>,
+        timers: &'a PhaseTimers,
+        gantt: Option<&'a GanttTrace>,
+    ) -> Self {
+        Shared {
+            cfg,
+            qnet,
+            replay,
+            timers,
+            gantt,
+            claimed: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            trains_done: AtomicU64::new(0),
+            losses: Mutex::new(Vec::new()),
+            returns: Mutex::new(Vec::new()),
+            episodes: AtomicU64::new(0),
+            error: Mutex::new(None),
+        }
+    }
+
+    /// Record a worker error and stop the run.
+    pub fn fail(&self, err: impl std::fmt::Display) {
+        let mut slot = self.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(err.to_string());
+        }
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn should_stop(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// True only when a worker recorded an error (hard abort).
+    pub fn aborted(&self) -> bool {
+        self.error.lock().unwrap().is_some()
+    }
+
+    /// Time `f` under `phase`, also recording a Gantt span on `lane` when
+    /// tracing is enabled (the Figure 2 reproduction).
+    pub fn span<T>(&self, lane: usize, phase: Phase, f: impl FnOnce() -> T) -> T {
+        match self.gantt {
+            Some(g) => {
+                let start = g.now_ns();
+                let out = self.timers.time(phase, f);
+                g.record(lane, phase, start, g.now_ns());
+                out
+            }
+            None => self.timers.time(phase, f),
+        }
+    }
+
+    /// Gantt lane for the trainer thread (samplers use 0..threads).
+    pub fn trainer_lane(&self) -> usize {
+        self.cfg.threads
+    }
+
+    /// Gantt lane for the main/dispatch thread.
+    pub fn main_lane(&self) -> usize {
+        self.cfg.threads + 1
+    }
+
+    /// Sample a minibatch and run one training step, recording the loss.
+    pub fn do_one_train(&self, batch: &mut TrainBatch) -> Result<()> {
+        let lane = self.trainer_lane();
+        self.span(lane, Phase::Sample, || -> Result<()> {
+            let mut replay = self.replay.lock().unwrap();
+            replay.sample(self.cfg.minibatch, batch)
+        })?;
+        let loss = self
+            .span(lane, Phase::Train, || self.qnet.train_step(batch, self.cfg.lr as f32))?;
+        let t = self.trains_done.fetch_add(1, Ordering::SeqCst);
+        // Record a bounded loss curve (every 16th update after warm-up).
+        if t % 16 == 0 {
+            self.losses
+                .lock()
+                .unwrap()
+                .push((self.completed.load(Ordering::Relaxed), loss));
+        }
+        Ok(())
+    }
+}
+
+/// Standard DQN's training/sampling interlock (Concurrent Training OFF).
+#[derive(Default)]
+pub struct TrainInterlock {
+    gate: Mutex<bool>, // training duty claimed?
+    cv: Condvar,
+}
+
+impl TrainInterlock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Block until `trains_done >= t / F`, training ourselves if the duty
+    /// is free. Called by a sampler before acting at step `t`.
+    pub fn ensure_trained(&self, shared: &Shared<'_>, t: u64, batch: &mut TrainBatch) {
+        let f = shared.cfg.train_period;
+        let required = t / f;
+        loop {
+            if shared.trains_done.load(Ordering::SeqCst) >= required || shared.should_stop() {
+                return;
+            }
+            let mut claimed = self.gate.lock().unwrap();
+            if !*claimed {
+                *claimed = true;
+                drop(claimed);
+                while shared.trains_done.load(Ordering::SeqCst) < required && !shared.should_stop() {
+                    if let Err(e) = shared.do_one_train(batch) {
+                        shared.fail(format!("train: {e}"));
+                    }
+                }
+                *self.gate.lock().unwrap() = false;
+                self.cv.notify_all();
+            } else {
+                // Someone else is training; wait for progress.
+                let (c, timeout) = self
+                    .cv
+                    .wait_timeout(claimed, std::time::Duration::from_millis(1))
+                    .unwrap();
+                drop(c);
+                let _ = timeout;
+            }
+        }
+    }
+}
+
+/// Concurrent Training's C-step window gate.
+pub struct WindowGate {
+    state: Mutex<u64>, // current window end (exclusive step bound)
+    cv: Condvar,
+}
+
+impl WindowGate {
+    pub fn new(initial_end: u64) -> Self {
+        WindowGate { state: Mutex::new(initial_end), cv: Condvar::new() }
+    }
+
+    /// Sampler-side: park until step `t` falls inside the open window.
+    pub fn wait_for_step(&self, shared: &Shared<'_>, t: u64) {
+        let mut end = self.state.lock().unwrap();
+        while t >= *end && !shared.should_stop() {
+            let (e, _) = self
+                .cv
+                .wait_timeout(end, std::time::Duration::from_millis(1))
+                .unwrap();
+            end = e;
+        }
+    }
+
+    /// Main-side: open the window up to `new_end` steps.
+    pub fn advance(&self, new_end: u64) {
+        *self.state.lock().unwrap() = new_end;
+        self.cv.notify_all();
+    }
+
+    pub fn current_end(&self) -> u64 {
+        *self.state.lock().unwrap()
+    }
+}
+
+/// Sampler-owned per-thread context: its environment, policy stream, and
+/// scratch buffers (allocation-free hot loop).
+pub struct SamplerCtx {
+    pub slot: usize,
+    pub env: AtariEnv,
+    pub policy: EpsGreedy,
+    pub state_buf: Vec<u8>,
+    pub frame_buf: Vec<u8>,
+    pub pending_start: bool,
+}
+
+impl SamplerCtx {
+    pub fn new(cfg: &ExperimentConfig, slot: usize) -> Result<Self> {
+        let env = make_env(&cfg.game, cfg.seed.wrapping_add(slot as u64 * 7919))?;
+        let actions = env.num_actions();
+        Ok(SamplerCtx {
+            slot,
+            env,
+            policy: EpsGreedy::new(cfg.seed, slot as u64, actions),
+            state_buf: vec![0u8; STATE_BYTES],
+            frame_buf: vec![0u8; NET_FRAME],
+            pending_start: true,
+        })
+    }
+
+    /// Act on `q` (one row) at global step `t`: select the action, step the
+    /// env, and hand the resulting transition to `sink`. Returns `done`.
+    pub fn act<F>(&mut self, shared: &Shared<'_>, t: u64, q: &[f32], mut sink: F) -> bool
+    where
+        F: FnMut(&[u8], u8, f32, bool, bool),
+    {
+        let eps = shared.cfg.eps.at(t);
+        let action = self.policy.select(q, eps);
+        self.frame_buf.copy_from_slice(self.env.latest_plane());
+        let r = shared.span(self.slot, Phase::EnvStep, || self.env.step(action));
+        sink(&self.frame_buf, action as u8, r.reward, r.done, self.pending_start);
+        self.pending_start = false;
+        if r.done {
+            let ret = self.env.episode_raw_return();
+            shared.returns.lock().unwrap().push((t, ret));
+            shared.episodes.fetch_add(1, Ordering::Relaxed);
+            self.env.reset();
+            self.pending_start = true;
+        }
+        shared.completed.fetch_add(1, Ordering::SeqCst);
+        r.done
+    }
+
+    /// Write the current stacked state into `state_buf` and return it.
+    pub fn refresh_state(&mut self) -> &[u8] {
+        self.env.write_state(&mut self.state_buf);
+        &self.state_buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn window_gate_blocks_and_advances() {
+        let gate = WindowGate::new(10);
+        assert_eq!(gate.current_end(), 10);
+        gate.advance(20);
+        assert_eq!(gate.current_end(), 20);
+    }
+
+    #[test]
+    fn sampler_ctx_round_trip() {
+        let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+        cfg.game = "seeker".into();
+        let mut s = SamplerCtx::new(&cfg, 0).unwrap();
+        let st = s.refresh_state();
+        assert_eq!(st.len(), STATE_BYTES);
+    }
+}

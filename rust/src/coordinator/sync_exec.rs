@@ -1,0 +1,275 @@
+//! Synchronized-Execution driver (paper §4, Figure 3(b), Algorithm 1).
+//!
+//! W sampler threads each take one environment step per round, then block;
+//! the main thread aggregates all W states into ONE batched device
+//! inference and distributes the Q-rows back through shared slots (no
+//! message passing). Device transactions per W steps: 1, instead of W.
+//!
+//! Variants:
+//! * **synchronized** (Concurrent Training OFF): after each round the main
+//!   thread performs the due minibatch updates inline — training still
+//!   blocks sampling, acting uses theta.
+//! * **both** (Algorithm 1): a trainer thread runs C/F minibatches per
+//!   C-step window concurrently; acting uses theta_minus; staging flushes
+//!   and theta_minus <- theta at the window barrier.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::env::STATE_BYTES;
+use crate::metrics::Phase;
+use crate::replay::StagingBuffer;
+use crate::runtime::{Policy, TrainBatch};
+
+use super::shared::{SamplerCtx, Shared};
+
+/// Per-slot shared mailbox: the "shared memory arrays" of the paper.
+struct Slot {
+    io: Mutex<SlotIo>,
+}
+
+struct SlotIo {
+    state: Vec<u8>,
+    q: Vec<f32>,
+    staging: StagingBuffer,
+}
+
+/// Run the synchronized driver. `concurrent` selects Algorithm 1 vs
+/// synchronized-only.
+pub fn run_sync(
+    shared: &Shared<'_>,
+    concurrent: bool,
+    mut on_progress: impl FnMut(u64) + Send,
+) -> Result<()> {
+    let w = shared.cfg.threads;
+    let total = shared.cfg.total_steps;
+    let c = shared.cfg.target_update_period;
+    let f = shared.cfg.train_period;
+    let actions = shared.qnet.spec().actions;
+
+    let slots: Vec<Slot> = (0..w)
+        .map(|_| Slot {
+            io: Mutex::new(SlotIo {
+                state: vec![0u8; STATE_BYTES],
+                q: vec![0f32; actions],
+                staging: StagingBuffer::new(),
+            }),
+        })
+        .collect();
+
+    // Round barriers: main + W samplers.
+    let round_start = Barrier::new(w + 1);
+    let round_done = Barrier::new(w + 1);
+    // Base global-step index of the current round (sampler k acts at
+    // round_base + k — the paper's `i = t mod W` dispatch).
+    let round_base = AtomicU64::new(0);
+
+    // Trainer window protocol (both-mode only).
+    let dispatched = AtomicU64::new(0);
+    let trainer_done = AtomicU64::new(0);
+    let trainer_cv = (Mutex::new(()), Condvar::new());
+
+    std::thread::scope(|scope| -> Result<()> {
+        // ---- sampler threads --------------------------------------------
+        for slot_id in 0..w {
+            let shared = &shared;
+            let slots = &slots;
+            let round_start = &round_start;
+            let round_done = &round_done;
+            let round_base = &round_base;
+            scope.spawn(move || {
+                let mut ctx = match SamplerCtx::new(shared.cfg, slot_id) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        shared.fail(format!("sampler {slot_id}: {e}"));
+                        // Still participate in barriers so nobody deadlocks.
+                        round_done.wait(); // initial state-publish barrier
+                        loop {
+                            round_start.wait();
+                            if shared.should_stop() {
+                                return;
+                            }
+                            round_done.wait();
+                        }
+                    }
+                };
+                // Publish the initial state, then enter the round loop.
+                {
+                    let mut io = slots[slot_id].io.lock().unwrap();
+                    ctx.env.write_state(&mut io.state);
+                }
+                round_done.wait();
+                loop {
+                    round_start.wait();
+                    if shared.should_stop() {
+                        break;
+                    }
+                    let t = round_base.load(Ordering::SeqCst) + slot_id as u64;
+                    let mut io = slots[slot_id].io.lock().unwrap();
+                    let q = io.q.clone();
+                    if concurrent {
+                        let SlotIo { staging, .. } = &mut *io;
+                        ctx.act(shared, t, &q, |frame, a, r, done, start| {
+                            staging.push(frame, a, r, done, start);
+                        });
+                    } else {
+                        drop(io);
+                        let replay = shared.replay;
+                        ctx.act(shared, t, &q, |frame, a, r, done, start| {
+                            replay.lock().unwrap().push(slot_id, frame, a, r, done, start);
+                        });
+                        io = slots[slot_id].io.lock().unwrap();
+                    }
+                    ctx.env.write_state(&mut io.state);
+                    drop(io);
+                    round_done.wait();
+                }
+            });
+        }
+
+        // ---- trainer thread (both-mode) ----------------------------------
+        if concurrent {
+            let shared = &shared;
+            let dispatched = &dispatched;
+            let trainer_done = &trainer_done;
+            let trainer_cv = &trainer_cv;
+            scope.spawn(move || {
+                let mut batch = TrainBatch::default();
+                loop {
+                    loop {
+                        if shared.should_stop() {
+                            return;
+                        }
+                        if trainer_done.load(Ordering::SeqCst)
+                            < dispatched.load(Ordering::SeqCst)
+                        {
+                            break;
+                        }
+                        let g = trainer_cv.0.lock().unwrap();
+                        let _ = trainer_cv
+                            .1
+                            .wait_timeout(g, std::time::Duration::from_millis(1))
+                            .unwrap();
+                    }
+                    for _ in 0..shared.cfg.batches_per_window() {
+                        if shared.should_stop() {
+                            return;
+                        }
+                        if let Err(e) = shared.do_one_train(&mut batch) {
+                            return shared.fail(format!("trainer: {e}"));
+                        }
+                    }
+                    trainer_done.fetch_add(1, Ordering::SeqCst);
+                    trainer_cv.1.notify_all();
+                }
+            });
+        }
+
+        // ---- main thread: Algorithm 1's dispatch loop --------------------
+        let mut batch_states = vec![0u8; w * STATE_BYTES];
+        let mut train_batch = TrainBatch::default();
+        let mut completed: u64 = 0;
+        let mut window_end = c.min(total);
+        if concurrent {
+            dispatched.fetch_add(1, Ordering::SeqCst);
+            trainer_cv.1.notify_all();
+        }
+
+        round_done.wait(); // initial states published
+        let result: Result<()> = (|| {
+            loop {
+                if shared.error.lock().unwrap().is_some() {
+                    shared.stop.store(true, Ordering::SeqCst);
+                    round_start.wait();
+                    return Err(anyhow!("worker failed"));
+                }
+                if completed >= total {
+                    shared.stop.store(true, Ordering::SeqCst);
+                    round_start.wait(); // release samplers to observe stop
+                    break;
+                }
+
+                // Aggregate states -> one batched inference -> scatter Q.
+                shared.span(shared.main_lane(), Phase::Sample, || {
+                    for (k, slot) in slots.iter().enumerate() {
+                        let io = slot.io.lock().unwrap();
+                        batch_states[k * STATE_BYTES..(k + 1) * STATE_BYTES]
+                            .copy_from_slice(&io.state);
+                    }
+                });
+                let policy = if concurrent { Policy::ThetaMinus } else { Policy::Theta };
+                let q = match shared
+                    .span(shared.main_lane(), Phase::Infer, || shared.qnet.infer(policy, &batch_states, w))
+                {
+                    Ok(q) => q,
+                    Err(e) => {
+                        shared.stop.store(true, Ordering::SeqCst);
+                        round_start.wait(); // release samplers to observe stop
+                        return Err(anyhow!("infer: {e}"));
+                    }
+                };
+                for (k, slot) in slots.iter().enumerate() {
+                    let mut io = slot.io.lock().unwrap();
+                    io.q.copy_from_slice(&q[k * actions..(k + 1) * actions]);
+                }
+
+                round_base.store(completed, Ordering::SeqCst);
+                round_start.wait(); // samplers act
+                round_done.wait(); // all done
+                completed += w as u64;
+
+                if concurrent {
+                    // Window boundary: wait for the trainer, flush, sync.
+                    if completed >= window_end {
+                        while trainer_done.load(Ordering::SeqCst)
+                            < dispatched.load(Ordering::SeqCst)
+                        {
+                            if shared.should_stop() {
+                                break;
+                            }
+                            std::thread::sleep(std::time::Duration::from_micros(100));
+                        }
+                        shared.span(shared.main_lane(), Phase::Sync, || {
+                            let mut replay = shared.replay.lock().unwrap();
+                            for (slot_id, slot) in slots.iter().enumerate() {
+                                slot.io
+                                    .lock()
+                                    .unwrap()
+                                    .staging
+                                    .flush_into(&mut replay, slot_id);
+                            }
+                            shared.qnet.sync_target();
+                        });
+                        if window_end < total {
+                            window_end = (window_end + c).min(total);
+                            dispatched.fetch_add(1, Ordering::SeqCst);
+                            trainer_cv.1.notify_all();
+                        }
+                    }
+                } else {
+                    // Training blocks the loop (no concurrency).
+                    while shared.trains_done.load(Ordering::SeqCst) < completed / f {
+                        if let Err(e) = shared.do_one_train(&mut train_batch) {
+                            shared.stop.store(true, Ordering::SeqCst);
+                            round_start.wait();
+                            return Err(anyhow!("train: {e}"));
+                        }
+                    }
+                }
+                on_progress(completed);
+            }
+            Ok(())
+        })();
+        // Ensure everyone is released on error paths.
+        shared.stop.store(true, Ordering::SeqCst);
+        trainer_cv.1.notify_all();
+        result
+    })?;
+
+    if let Some(err) = shared.error.lock().unwrap().take() {
+        return Err(anyhow!(err));
+    }
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! `AtariEnv`: the full agent-facing environment wrapper.
+//!
+//! Wraps a raw [`Game`] with the standard DQN pipeline:
+//! * action repeat (frame-skip) with reward accumulation,
+//! * max-pool over the final two raw frames (flicker removal),
+//! * 2x box downscale to 84x84,
+//! * 4-frame history stacking (channel-last, oldest..newest),
+//! * reward clipping to {-1, 0, +1},
+//! * episode step cap (27k agent steps = ALE's 108k-frame cap / skip 4).
+//!
+//! This wrapper is the CPU-cost unit the paper's scheduling is built
+//! around: one `step()` = simulate `skip` ticks + render + preprocess.
+
+use anyhow::Result;
+
+use super::game::{Game, RAW_FRAME};
+use super::preprocess::{clip_reward, downscale, max_pool_into, NET_FRAME};
+
+/// Stacked-state geometry (must match the artifact manifest's frame shape).
+pub const STACK: usize = 4;
+pub const STATE_BYTES: usize = NET_FRAME * STACK;
+
+/// Outcome of one agent-level step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnvStep {
+    /// Clipped reward (what the learner sees).
+    pub reward: f32,
+    /// Un-clipped game reward (what evaluation reports).
+    pub raw_reward: f64,
+    /// Episode ended this step (terminal or step cap).
+    pub done: bool,
+}
+
+pub struct AtariEnv {
+    game: Box<dyn Game>,
+    skip: usize,
+    max_steps: usize,
+    raw_a: Vec<u8>,
+    raw_b: Vec<u8>,
+    /// 4 preprocessed planes, ring-indexed by `head` (head = newest).
+    planes: [Vec<u8>; STACK],
+    head: usize,
+    steps_this_episode: usize,
+    episode_raw_return: f64,
+    episodes_completed: u64,
+    seed: u64,
+    episode_index: u64,
+}
+
+impl AtariEnv {
+    pub fn new(game: Box<dyn Game>, seed: u64) -> Self {
+        let mut env = AtariEnv {
+            game,
+            skip: 4,
+            max_steps: 27_000,
+            raw_a: vec![0; RAW_FRAME],
+            raw_b: vec![0; RAW_FRAME],
+            planes: [
+                vec![0; NET_FRAME],
+                vec![0; NET_FRAME],
+                vec![0; NET_FRAME],
+                vec![0; NET_FRAME],
+            ],
+            head: 0,
+            steps_this_episode: 0,
+            episode_raw_return: 0.0,
+            episodes_completed: 0,
+            seed,
+            episode_index: 0,
+        };
+        env.reset();
+        env
+    }
+
+    pub fn with_skip(mut self, skip: usize) -> Self {
+        assert!(skip >= 1);
+        self.skip = skip;
+        self
+    }
+
+    pub fn with_max_steps(mut self, max_steps: usize) -> Self {
+        self.max_steps = max_steps;
+        self
+    }
+
+    pub fn game_name(&self) -> &'static str {
+        self.game.name()
+    }
+
+    pub fn num_actions(&self) -> usize {
+        self.game.num_actions()
+    }
+
+    /// Begin a fresh episode (new deterministic sub-seed each time).
+    pub fn reset(&mut self) {
+        self.game.reset(self.seed.wrapping_add(self.episode_index.wrapping_mul(0x9E37)));
+        self.episode_index += 1;
+        self.steps_this_episode = 0;
+        self.episode_raw_return = 0.0;
+        // Fill the whole history with the initial frame.
+        self.game.render(&mut self.raw_a);
+        let mut plane = vec![0u8; NET_FRAME];
+        downscale(&self.raw_a, &mut plane);
+        for p in &mut self.planes {
+            p.copy_from_slice(&plane);
+        }
+        self.head = STACK - 1;
+    }
+
+    /// One agent-level step: repeat `action` for `skip` raw ticks.
+    pub fn step(&mut self, action: usize) -> EnvStep {
+        debug_assert!(action < self.game.num_actions());
+        let mut raw_reward = 0.0;
+        let mut done = false;
+        for k in 0..self.skip {
+            let r = self.game.step(action);
+            raw_reward += r.reward;
+            // Render only the ticks that feed the max-pool (last two).
+            if k == self.skip.saturating_sub(2) {
+                self.game.render(&mut self.raw_a);
+            } else if k == self.skip - 1 {
+                self.game.render(&mut self.raw_b);
+            }
+            if r.done {
+                done = true;
+                // Terminal frame still enters the stack below.
+                if k < self.skip.saturating_sub(2) {
+                    self.game.render(&mut self.raw_a);
+                }
+                self.game.render(&mut self.raw_b);
+                break;
+            }
+        }
+        if self.skip >= 2 {
+            max_pool_into(&mut self.raw_a, &self.raw_b);
+        } else {
+            self.game.render(&mut self.raw_a);
+        }
+
+        self.head = (self.head + 1) % STACK;
+        downscale(&self.raw_a, &mut self.planes[self.head]);
+
+        self.steps_this_episode += 1;
+        self.episode_raw_return += raw_reward;
+        if self.steps_this_episode >= self.max_steps {
+            done = true;
+        }
+        if done {
+            self.episodes_completed += 1;
+        }
+        EnvStep { reward: clip_reward(raw_reward), raw_reward, done }
+    }
+
+    /// Newest preprocessed plane (what the replay memory stores).
+    pub fn latest_plane(&self) -> &[u8] {
+        &self.planes[self.head]
+    }
+
+    /// Write the stacked state `[84, 84, 4]` channel-last into `out`
+    /// (channel 0 = oldest frame, channel 3 = newest).
+    pub fn write_state(&self, out: &mut [u8]) {
+        assert_eq!(out.len(), STATE_BYTES);
+        let oldest = (self.head + 1) % STACK;
+        for c in 0..STACK {
+            let plane = &self.planes[(oldest + c) % STACK];
+            for i in 0..NET_FRAME {
+                out[i * STACK + c] = plane[i];
+            }
+        }
+    }
+
+    pub fn state_vec(&self) -> Vec<u8> {
+        let mut v = vec![0u8; STATE_BYTES];
+        self.write_state(&mut v);
+        v
+    }
+
+    pub fn episode_raw_return(&self) -> f64 {
+        self.episode_raw_return
+    }
+
+    pub fn episodes_completed(&self) -> u64 {
+        self.episodes_completed
+    }
+
+    /// Scripted expert action (human-proxy anchor for Table 4).
+    pub fn expert_action(&mut self) -> usize {
+        self.game.expert_action()
+    }
+}
+
+/// Construct the env for a registered game name.
+pub fn make_env(game: &str, seed: u64) -> Result<AtariEnv> {
+    Ok(AtariEnv::new(super::registry::make_game(game)?, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::registry::make_game;
+
+    #[test]
+    fn state_shape_and_stacking() {
+        let mut env = AtariEnv::new(make_game("pong").unwrap(), 1);
+        let s0 = env.state_vec();
+        assert_eq!(s0.len(), STATE_BYTES);
+        // After reset all 4 channels are the same frame.
+        for i in 0..NET_FRAME {
+            let base = s0[i * STACK];
+            for c in 1..STACK {
+                assert_eq!(s0[i * STACK + c], base);
+            }
+        }
+        // After one step, channel 3 is the newest plane.
+        env.step(1);
+        let s1 = env.state_vec();
+        let newest = env.latest_plane();
+        for i in (0..NET_FRAME).step_by(97) {
+            assert_eq!(s1[i * STACK + 3], newest[i]);
+        }
+        // Old newest became channel 2.
+        for i in (0..NET_FRAME).step_by(97) {
+            assert_eq!(s1[i * STACK + 2], s0[i * STACK + 3]);
+        }
+    }
+
+    #[test]
+    fn rewards_are_clipped() {
+        let mut env = AtariEnv::new(make_game("chase").unwrap(), 2);
+        // Chase emits +-10 raw; the clipped channel must stay in {-1,0,1}.
+        for _ in 0..2_000 {
+            let r = env.step(4);
+            assert!([-1.0, 0.0, 1.0].contains(&r.reward));
+            if r.done {
+                env.reset();
+            }
+        }
+    }
+
+    #[test]
+    fn step_cap_terminates() {
+        let mut env = AtariEnv::new(make_game("seeker").unwrap(), 3).with_max_steps(10);
+        let mut done = false;
+        for _ in 0..10 {
+            done = env.step(0).done;
+        }
+        assert!(done);
+    }
+
+    #[test]
+    fn episodes_auto_reseed() {
+        let mut env = AtariEnv::new(make_game("pong").unwrap(), 4).with_max_steps(5);
+        for _ in 0..5 {
+            env.step(0);
+        }
+        let first = env.state_vec();
+        env.reset();
+        for _ in 0..5 {
+            env.step(0);
+        }
+        let second = env.state_vec();
+        assert_ne!(first, second, "new episode must differ (new sub-seed)");
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_actions() {
+        let run = || {
+            let mut env = AtariEnv::new(make_game("breakout").unwrap(), 9);
+            let mut rewards = Vec::new();
+            for i in 0..200 {
+                let r = env.step(i % 4);
+                rewards.push((r.reward, r.done));
+                if r.done {
+                    env.reset();
+                }
+            }
+            (rewards, env.state_vec())
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,275 @@
+//! Breakout-like game: paddle, ball, brick wall, 5 lives.
+//!
+//! Actions: 0 = NOOP, 1 = LEFT, 2 = RIGHT, 3 = FIRE (serve).
+//! Reward +1 per brick (higher rows are worth more raw points, clipped by
+//! the preprocessing layer like the real DQN setup). Losing the ball costs
+//! a life; the episode ends at 0 lives or when the wall is cleared twice.
+
+use crate::util::rng::Rng;
+
+use super::game::{draw, Game, StepResult, RAW};
+
+const COLS: usize = 12;
+const ROWS: usize = 6;
+const BRICK_W: f64 = RAW as f64 / COLS as f64;
+const BRICK_H: f64 = 6.0;
+const WALL_TOP: f64 = 24.0;
+const PADDLE_W: f64 = 22.0;
+const PADDLE_Y: f64 = (RAW - 10) as f64;
+const BALL: f64 = 2.5;
+
+pub struct Breakout {
+    rng: Rng,
+    bricks: [[bool; COLS]; ROWS],
+    ball_x: f64,
+    ball_y: f64,
+    vel_x: f64,
+    vel_y: f64,
+    paddle_x: f64,
+    lives: u32,
+    serving: bool,
+    walls_cleared: u32,
+}
+
+impl Breakout {
+    pub fn new() -> Self {
+        let mut b = Breakout {
+            rng: Rng::new(0),
+            bricks: [[true; COLS]; ROWS],
+            ball_x: 0.0,
+            ball_y: 0.0,
+            vel_x: 0.0,
+            vel_y: 0.0,
+            paddle_x: RAW as f64 / 2.0,
+            lives: 5,
+            serving: true,
+            walls_cleared: 0,
+        };
+        b.reset(0);
+        b
+    }
+
+    fn serve(&mut self) {
+        self.ball_x = self.paddle_x;
+        self.ball_y = PADDLE_Y - 6.0;
+        let angle = self.rng.range_f32(-0.7, 0.7) as f64;
+        let speed = 2.6;
+        self.vel_x = speed * angle.sin();
+        self.vel_y = -speed * angle.cos();
+        self.serving = false;
+    }
+
+    fn wall_remaining(&self) -> usize {
+        self.bricks.iter().flatten().filter(|&&b| b).count()
+    }
+}
+
+impl Default for Breakout {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Breakout {
+    fn name(&self) -> &'static str {
+        "breakout"
+    }
+
+    fn num_actions(&self) -> usize {
+        4
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Rng::stream(seed, 0x42524b); // "BRK"
+        self.bricks = [[true; COLS]; ROWS];
+        self.paddle_x = RAW as f64 / 2.0;
+        self.lives = 5;
+        self.serving = true;
+        self.walls_cleared = 0;
+        self.ball_x = self.paddle_x;
+        self.ball_y = PADDLE_Y - 6.0;
+        self.vel_x = 0.0;
+        self.vel_y = 0.0;
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        const PSPEED: f64 = 2.8;
+        match action {
+            1 => self.paddle_x = (self.paddle_x - PSPEED).max(PADDLE_W / 2.0),
+            2 => self.paddle_x = (self.paddle_x + PSPEED).min(RAW as f64 - PADDLE_W / 2.0),
+            3 if self.serving => self.serve(),
+            _ => {}
+        }
+        if self.serving {
+            // Ball rides the paddle until FIRE.
+            self.ball_x = self.paddle_x;
+            return StepResult { reward: 0.0, done: false };
+        }
+
+        self.ball_x += self.vel_x;
+        self.ball_y += self.vel_y;
+
+        if self.ball_x < BALL {
+            self.ball_x = BALL;
+            self.vel_x = self.vel_x.abs();
+        }
+        if self.ball_x > RAW as f64 - BALL {
+            self.ball_x = RAW as f64 - BALL;
+            self.vel_x = -self.vel_x.abs();
+        }
+        if self.ball_y < BALL {
+            self.ball_y = BALL;
+            self.vel_y = self.vel_y.abs();
+        }
+
+        let mut reward = 0.0;
+        // Brick collisions.
+        if self.ball_y >= WALL_TOP && self.ball_y < WALL_TOP + ROWS as f64 * BRICK_H {
+            let row = ((self.ball_y - WALL_TOP) / BRICK_H) as usize;
+            let col = ((self.ball_x / BRICK_W) as usize).min(COLS - 1);
+            if row < ROWS && self.bricks[row][col] {
+                self.bricks[row][col] = false;
+                // Top rows score more (like Atari Breakout's tiers).
+                reward = (ROWS - row) as f64;
+                self.vel_y = -self.vel_y;
+            }
+        }
+        if self.wall_remaining() == 0 {
+            self.bricks = [[true; COLS]; ROWS];
+            self.walls_cleared += 1;
+        }
+
+        // Paddle collision.
+        if self.ball_y >= PADDLE_Y - BALL
+            && self.vel_y > 0.0
+            && (self.ball_x - self.paddle_x).abs() < PADDLE_W / 2.0 + BALL
+        {
+            self.vel_y = -self.vel_y.abs();
+            self.vel_x += 0.6 * (self.ball_x - self.paddle_x) / (PADDLE_W / 2.0);
+            self.vel_x = self.vel_x.clamp(-3.2, 3.2);
+        }
+
+        // Ball lost.
+        let mut done = false;
+        if self.ball_y > RAW as f64 {
+            self.lives -= 1;
+            if self.lives == 0 {
+                done = true;
+            } else {
+                self.serving = true;
+                self.ball_x = self.paddle_x;
+                self.ball_y = PADDLE_Y - 6.0;
+            }
+        }
+        if self.walls_cleared >= 2 {
+            done = true;
+        }
+        StepResult { reward, done }
+    }
+
+    fn render(&self, buf: &mut [u8]) {
+        draw::clear(buf, 12);
+        for (r, row) in self.bricks.iter().enumerate() {
+            for (c, &alive) in row.iter().enumerate() {
+                if alive {
+                    let shade = 200 - (r as u8) * 18;
+                    draw::rect(
+                        buf,
+                        c as f64 * BRICK_W + 1.0,
+                        WALL_TOP + r as f64 * BRICK_H + 1.0,
+                        BRICK_W - 2.0,
+                        BRICK_H - 2.0,
+                        shade,
+                    );
+                }
+            }
+        }
+        draw::rect(buf, self.paddle_x - PADDLE_W / 2.0, PADDLE_Y, PADDLE_W, 4.0, 255);
+        draw::square(buf, self.ball_x, self.ball_y, BALL, 240);
+        // Lives indicator.
+        for i in 0..self.lives {
+            draw::rect(buf, 2.0 + i as f64 * 6.0, 2.0, 4.0, 4.0, 255);
+        }
+    }
+
+    fn expert_action(&mut self) -> usize {
+        if self.serving {
+            return 3;
+        }
+        // Predict where the ball lands; lead it.
+        let target = if self.vel_y > 0.0 {
+            self.ball_x + self.vel_x * ((PADDLE_Y - self.ball_y) / self.vel_y.max(0.1))
+        } else {
+            self.ball_x
+        };
+        let target = target.clamp(0.0, RAW as f64);
+        if target < self.paddle_x - 3.0 {
+            1
+        } else if target > self.paddle_x + 3.0 {
+            2
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::game::RAW_FRAME;
+
+    fn play(expert: bool, seed: u64, max_steps: usize) -> (f64, bool) {
+        let mut g = Breakout::new();
+        g.reset(seed);
+        let mut total = 0.0;
+        for _ in 0..max_steps {
+            let a = if expert { g.expert_action() } else { 3 };
+            let r = g.step(a);
+            total += r.reward;
+            if r.done {
+                return (total, true);
+            }
+        }
+        (total, false)
+    }
+
+    #[test]
+    fn passive_player_loses_lives() {
+        let (_score, done) = play(false, 1, 100_000);
+        assert!(done, "serving+noop must eventually lose 5 lives");
+    }
+
+    #[test]
+    fn expert_scores_well() {
+        let (expert_score, _) = play(true, 2, 20_000);
+        let (noop_score, _) = play(false, 2, 20_000);
+        assert!(expert_score > noop_score + 10.0,
+                "expert {expert_score} vs noop {noop_score}");
+    }
+
+    #[test]
+    fn bricks_disappear_and_reward() {
+        let mut g = Breakout::new();
+        g.reset(3);
+        let before = g.wall_remaining();
+        let mut got_reward = false;
+        for _ in 0..5_000 {
+            let a = g.expert_action();
+            if g.step(a).reward > 0.0 {
+                got_reward = true;
+                break;
+            }
+        }
+        assert!(got_reward);
+        assert!(g.wall_remaining() < before);
+    }
+
+    #[test]
+    fn render_is_valid() {
+        let mut g = Breakout::new();
+        g.reset(4);
+        let mut buf = vec![0u8; RAW_FRAME];
+        g.render(&mut buf);
+        assert!(buf.iter().any(|&b| b == 255));
+    }
+}

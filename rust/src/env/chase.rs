@@ -1,0 +1,205 @@
+//! Chase: catch a fleeing target while an enemy pursues you.
+//!
+//! Actions: 0 = NOOP, 1 = UP, 2 = DOWN, 3 = LEFT, 4 = RIGHT.
+//! +10 raw for each catch (target respawns), -10 when the enemy tags you
+//! (costs one of 3 lives). Mixes approach and avoidance pressure, like
+//! the ghost dynamics the paper's hard-exploration discussion references.
+
+use crate::util::rng::Rng;
+
+use super::game::{draw, Game, StepResult, RAW};
+
+const HALF: f64 = 4.5;
+const EPISODE_TICKS: u32 = 4000;
+
+pub struct Chase {
+    rng: Rng,
+    x: f64,
+    y: f64,
+    tx: f64,
+    ty: f64,
+    ex: f64,
+    ey: f64,
+    lives: u32,
+    ticks: u32,
+}
+
+impl Chase {
+    pub fn new() -> Self {
+        let mut c = Chase {
+            rng: Rng::new(0),
+            x: 0.0,
+            y: 0.0,
+            tx: 0.0,
+            ty: 0.0,
+            ex: 0.0,
+            ey: 0.0,
+            lives: 3,
+            ticks: 0,
+        };
+        c.reset(0);
+        c
+    }
+
+    fn respawn_target(&mut self) {
+        // Spawn away from the agent.
+        loop {
+            self.tx = self.rng.range_f32(15.0, (RAW - 15) as f32) as f64;
+            self.ty = self.rng.range_f32(15.0, (RAW - 15) as f32) as f64;
+            if (self.tx - self.x).hypot(self.ty - self.y) > 50.0 {
+                break;
+            }
+        }
+    }
+}
+
+impl Default for Chase {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Chase {
+    fn name(&self) -> &'static str {
+        "chase"
+    }
+
+    fn num_actions(&self) -> usize {
+        5
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Rng::stream(seed, 0x43485345); // "CHSE"
+        self.x = RAW as f64 / 2.0;
+        self.y = RAW as f64 / 2.0;
+        self.ex = 10.0;
+        self.ey = 10.0;
+        self.lives = 3;
+        self.ticks = 0;
+        self.respawn_target();
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        const SPEED: f64 = 2.4;
+        const TSPEED: f64 = 1.7;
+        const ESPEED: f64 = 1.5;
+        match action {
+            1 => self.y -= SPEED,
+            2 => self.y += SPEED,
+            3 => self.x -= SPEED,
+            4 => self.x += SPEED,
+            _ => {}
+        }
+        self.x = self.x.clamp(HALF, RAW as f64 - HALF);
+        self.y = self.y.clamp(HALF, RAW as f64 - HALF);
+
+        // Target flees the agent with jitter.
+        let (dx, dy) = (self.tx - self.x, self.ty - self.y);
+        let d = dx.hypot(dy).max(1.0);
+        self.tx += TSPEED * dx / d + self.rng.range_f32(-0.8, 0.8) as f64;
+        self.ty += TSPEED * dy / d + self.rng.range_f32(-0.8, 0.8) as f64;
+        self.tx = self.tx.clamp(HALF, RAW as f64 - HALF);
+        self.ty = self.ty.clamp(HALF, RAW as f64 - HALF);
+
+        // Enemy pursues the agent.
+        let (ex, ey) = (self.x - self.ex, self.y - self.ey);
+        let ed = ex.hypot(ey).max(1.0);
+        self.ex += ESPEED * ex / ed;
+        self.ey += ESPEED * ey / ed;
+
+        let mut reward = 0.0;
+        if (self.tx - self.x).abs() < 2.0 * HALF && (self.ty - self.y).abs() < 2.0 * HALF {
+            reward += 10.0;
+            self.respawn_target();
+        }
+        let mut done = false;
+        if (self.ex - self.x).abs() < 2.0 * HALF && (self.ey - self.y).abs() < 2.0 * HALF {
+            reward -= 10.0;
+            self.lives -= 1;
+            self.ex = 10.0;
+            self.ey = 10.0;
+            if self.lives == 0 {
+                done = true;
+            }
+        }
+        self.ticks += 1;
+        if self.ticks >= EPISODE_TICKS {
+            done = true;
+        }
+        StepResult { reward, done }
+    }
+
+    fn render(&self, buf: &mut [u8]) {
+        draw::clear(buf, 14);
+        draw::square(buf, self.tx, self.ty, HALF, 180);
+        draw::square(buf, self.ex, self.ey, HALF, 90);
+        draw::square(buf, self.x, self.y, HALF, 255);
+        for i in 0..self.lives {
+            draw::rect(buf, 2.0 + i as f64 * 6.0, 2.0, 4.0, 4.0, 255);
+        }
+    }
+
+    fn expert_action(&mut self) -> usize {
+        // Flee the enemy when close; otherwise intercept the target.
+        let enemy_d = (self.ex - self.x).hypot(self.ey - self.y);
+        let (gx, gy) = if enemy_d < 30.0 {
+            (self.x - (self.ex - self.x) * -1.0, self.y - (self.ey - self.y) * -1.0)
+        } else {
+            (self.tx, self.ty)
+        };
+        let (dx, dy) = (gx - self.x, gy - self.y);
+        if dx.abs() > dy.abs() {
+            if dx > 0.0 { 4 } else { 3 }
+        } else if dy > 0.0 {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn play(expert: bool, seed: u64) -> f64 {
+        let mut g = Chase::new();
+        g.reset(seed);
+        let mut total = 0.0;
+        loop {
+            let a = if expert { g.expert_action() } else { 0 };
+            let r = g.step(a);
+            total += r.reward;
+            if r.done {
+                return total;
+            }
+        }
+    }
+
+    #[test]
+    fn terminates() {
+        play(false, 1);
+    }
+
+    #[test]
+    fn expert_scores_positive_margin() {
+        let e: f64 = (0..3).map(|s| play(true, s)).sum();
+        let n: f64 = (0..3).map(|s| play(false, s)).sum();
+        assert!(e > n + 10.0, "expert {e} vs noop {n}");
+    }
+
+    #[test]
+    fn catching_respawns_target_far_away() {
+        let mut g = Chase::new();
+        g.reset(5);
+        for _ in 0..EPISODE_TICKS {
+            let a = g.expert_action();
+            if g.step(a).reward > 0.0 {
+                let d = (g.tx - g.x).hypot(g.ty - g.y);
+                assert!(d > 40.0, "target respawned too close: {d}");
+                return;
+            }
+        }
+        panic!("expert never caught the target");
+    }
+}

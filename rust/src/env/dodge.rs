@@ -1,0 +1,211 @@
+//! Dodge: obstacles rain down; survive by weaving between them.
+//!
+//! Actions: 0 = NOOP, 1 = LEFT, 2 = RIGHT. +1 raw reward for every
+//! obstacle wave that passes the agent's row, -5 on collision (costs a
+//! life). Three lives per episode, difficulty ramps with time — a reflex
+//! game in the spirit of Freeway/Enduro.
+
+use crate::util::rng::Rng;
+
+use super::game::{draw, Game, StepResult, RAW};
+
+const AGENT_Y: f64 = (RAW - 14) as f64;
+const AGENT_HALF: f64 = 5.0;
+const OB_HALF: f64 = 6.0;
+const MAX_OBS: usize = 14;
+
+struct Obstacle {
+    x: f64,
+    y: f64,
+    vy: f64,
+    scored: bool,
+}
+
+pub struct Dodge {
+    rng: Rng,
+    x: f64,
+    obstacles: Vec<Obstacle>,
+    lives: u32,
+    ticks: u32,
+    spawn_cooldown: u32,
+}
+
+impl Dodge {
+    pub fn new() -> Self {
+        let mut d = Dodge {
+            rng: Rng::new(0),
+            x: RAW as f64 / 2.0,
+            obstacles: Vec::new(),
+            lives: 3,
+            ticks: 0,
+            spawn_cooldown: 0,
+        };
+        d.reset(0);
+        d
+    }
+
+    fn difficulty(&self) -> f64 {
+        1.0 + (self.ticks as f64 / 4000.0).min(1.5)
+    }
+}
+
+impl Default for Dodge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Dodge {
+    fn name(&self) -> &'static str {
+        "dodge"
+    }
+
+    fn num_actions(&self) -> usize {
+        3
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Rng::stream(seed, 0x444f4447); // "DODG"
+        self.x = RAW as f64 / 2.0;
+        self.obstacles.clear();
+        self.lives = 3;
+        self.ticks = 0;
+        self.spawn_cooldown = 20;
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        const SPEED: f64 = 2.6;
+        match action {
+            1 => self.x = (self.x - SPEED).max(AGENT_HALF),
+            2 => self.x = (self.x + SPEED).min(RAW as f64 - AGENT_HALF),
+            _ => {}
+        }
+        self.ticks += 1;
+
+        // Spawn new obstacles.
+        if self.spawn_cooldown == 0 && self.obstacles.len() < MAX_OBS {
+            let x = self.rng.range_f32(OB_HALF as f32, (RAW as f64 - OB_HALF) as f32) as f64;
+            let vy = (1.4 + self.rng.f64() * 1.2) * self.difficulty();
+            self.obstacles.push(Obstacle { x, y: -OB_HALF, vy, scored: false });
+            self.spawn_cooldown = (26.0 / self.difficulty()) as u32 + self.rng.below(10);
+        } else {
+            self.spawn_cooldown = self.spawn_cooldown.saturating_sub(1);
+        }
+
+        let mut reward = 0.0;
+        let mut hit = false;
+        for ob in &mut self.obstacles {
+            ob.y += ob.vy;
+            if !ob.scored && ob.y > AGENT_Y + AGENT_HALF + OB_HALF {
+                ob.scored = true;
+                reward += 1.0;
+            }
+            if (ob.x - self.x).abs() < AGENT_HALF + OB_HALF
+                && (ob.y - AGENT_Y).abs() < AGENT_HALF + OB_HALF
+            {
+                hit = true;
+            }
+        }
+        self.obstacles.retain(|o| o.y < RAW as f64 + OB_HALF);
+
+        let mut done = false;
+        if hit {
+            reward = -5.0;
+            self.lives -= 1;
+            self.obstacles.clear();
+            self.spawn_cooldown = 40;
+            if self.lives == 0 {
+                done = true;
+            }
+        }
+        StepResult { reward, done }
+    }
+
+    fn render(&self, buf: &mut [u8]) {
+        draw::clear(buf, 10);
+        for ob in &self.obstacles {
+            draw::square(buf, ob.x, ob.y, OB_HALF, 150);
+        }
+        draw::square(buf, self.x, AGENT_Y, AGENT_HALF, 255);
+        for i in 0..self.lives {
+            draw::rect(buf, 2.0 + i as f64 * 6.0, 2.0, 4.0, 4.0, 255);
+        }
+    }
+
+    fn expert_action(&mut self) -> usize {
+        // Repulsion from the nearest threatening obstacle.
+        let mut force = 0.0;
+        for ob in &self.obstacles {
+            if ob.y < AGENT_Y && ob.y > AGENT_Y - 60.0 {
+                let dx = self.x - ob.x;
+                if dx.abs() < 2.5 * (AGENT_HALF + OB_HALF) {
+                    force += (1.0 / (dx.abs() + 1.0)) * dx.signum();
+                }
+            }
+        }
+        // Mild pull back to centre.
+        force += 0.002 * (RAW as f64 / 2.0 - self.x);
+        if force > 0.05 {
+            2
+        } else if force < -0.05 {
+            1
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn play(expert: bool, seed: u64, cap: usize) -> f64 {
+        let mut g = Dodge::new();
+        g.reset(seed);
+        let mut total = 0.0;
+        for _ in 0..cap {
+            let a = if expert { g.expert_action() } else { 0 };
+            let r = g.step(a);
+            total += r.reward;
+            if r.done {
+                break;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn noop_eventually_dies() {
+        let mut g = Dodge::new();
+        g.reset(1);
+        let mut steps = 0;
+        loop {
+            steps += 1;
+            if g.step(0).done {
+                break;
+            }
+            assert!(steps < 500_000);
+        }
+        assert_eq!(g.lives, 0);
+    }
+
+    #[test]
+    fn expert_outscores_noop() {
+        let e: f64 = (0..3).map(|s| play(true, s, 8000)).sum();
+        let n: f64 = (0..3).map(|s| play(false, s, 8000)).sum();
+        assert!(e > n, "expert {e} vs noop {n}");
+    }
+
+    #[test]
+    fn collision_clears_field() {
+        let mut g = Dodge::new();
+        g.reset(2);
+        loop {
+            let r = g.step(0);
+            if r.reward < 0.0 {
+                assert!(g.obstacles.is_empty());
+                break;
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! The raw game interface: the synthetic stand-in for an Atari 2600 ROM.
+//!
+//! A `Game` simulates one emulator: it advances by one *raw* tick per
+//! `step`, renders a raw grayscale screen, and reports un-clipped rewards.
+//! Frame-skip, max-pooling, downscaling, frame stacking, and reward
+//! clipping all live in [`crate::env::atari::AtariEnv`], exactly mirroring
+//! the DQN preprocessing pipeline the paper inherits from Mnih et al.
+//! (2015) — so the per-step CPU cost profile (simulate + render +
+//! preprocess) matches the code path the paper schedules around.
+
+/// Raw screen resolution (downscaled 2x to the network's 84x84).
+pub const RAW: usize = 168;
+/// Bytes in one raw frame.
+pub const RAW_FRAME: usize = RAW * RAW;
+
+/// Result of one raw tick.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepResult {
+    /// Un-clipped game reward for this tick.
+    pub reward: f64,
+    /// Episode terminated (all lives lost / game over / win).
+    pub done: bool,
+}
+
+/// One synthetic Atari-like game.
+pub trait Game: Send {
+    /// Stable identifier used by the registry and reports.
+    fn name(&self) -> &'static str;
+
+    /// Number of legal actions (<= 6; action 0 is always NOOP).
+    fn num_actions(&self) -> usize;
+
+    /// Reset to a fresh episode with deterministic randomness.
+    fn reset(&mut self, seed: u64);
+
+    /// Advance one raw tick under `action`.
+    fn step(&mut self, action: usize) -> StepResult;
+
+    /// Render the current raw grayscale screen into `buf` (RAW_FRAME bytes).
+    fn render(&self, buf: &mut [u8]);
+
+    /// Scripted competent policy — the "human-proxy" score anchor used by
+    /// the Table 4 reproduction (see DESIGN.md §3).
+    fn expert_action(&mut self) -> usize;
+
+    /// Reference score anchors (random, human-proxy), measured offline and
+    /// recorded here so normalized scores are stable across runs.
+    /// Returns None when anchors should be measured live instead.
+    fn score_anchors(&self) -> Option<(f64, f64)> {
+        None
+    }
+}
+
+/// Simple drawing helpers shared by the game renderers.
+pub mod draw {
+    use super::{RAW, RAW_FRAME};
+
+    /// Fill the whole screen with one intensity.
+    pub fn clear(buf: &mut [u8], intensity: u8) {
+        debug_assert_eq!(buf.len(), RAW_FRAME);
+        buf.fill(intensity);
+    }
+
+    /// Filled axis-aligned rectangle; clipped to the screen.
+    pub fn rect(buf: &mut [u8], x: f64, y: f64, w: f64, h: f64, intensity: u8) {
+        let x0 = x.max(0.0) as usize;
+        let y0 = y.max(0.0) as usize;
+        let x1 = ((x + w).max(0.0) as usize).min(RAW);
+        let y1 = ((y + h).max(0.0) as usize).min(RAW);
+        for yy in y0..y1 {
+            let row = &mut buf[yy * RAW..yy * RAW + RAW];
+            for cell in &mut row[x0.min(RAW)..x1] {
+                *cell = intensity;
+            }
+        }
+    }
+
+    /// Filled square centered at (cx, cy).
+    pub fn square(buf: &mut [u8], cx: f64, cy: f64, half: f64, intensity: u8) {
+        rect(buf, cx - half, cy - half, 2.0 * half, 2.0 * half, intensity);
+    }
+
+    /// One-pixel horizontal line.
+    pub fn hline(buf: &mut [u8], y: usize, intensity: u8) {
+        if y < RAW {
+            buf[y * RAW..(y + 1) * RAW].fill(intensity);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::draw::*;
+    use super::*;
+
+    #[test]
+    fn rect_clips() {
+        let mut buf = vec![0u8; RAW_FRAME];
+        rect(&mut buf, -10.0, -10.0, 20.0, 20.0, 255);
+        assert_eq!(buf[0], 255);
+        assert_eq!(buf[9 * RAW + 9], 255);
+        assert_eq!(buf[9 * RAW + 10], 0);
+        assert_eq!(buf[10 * RAW], 0);
+        rect(&mut buf, (RAW - 5) as f64, (RAW - 5) as f64, 99.0, 99.0, 128);
+        assert_eq!(buf[RAW_FRAME - 1], 128);
+    }
+
+    #[test]
+    fn clear_and_hline() {
+        let mut buf = vec![0u8; RAW_FRAME];
+        clear(&mut buf, 7);
+        assert!(buf.iter().all(|&b| b == 7));
+        hline(&mut buf, 3, 200);
+        assert!(buf[3 * RAW..4 * RAW].iter().all(|&b| b == 200));
+        hline(&mut buf, RAW + 5, 99); // out of range: no panic
+    }
+}

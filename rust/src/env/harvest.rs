@@ -1,0 +1,220 @@
+//! Harvest: a delayed-gratification farming grid.
+//!
+//! Actions: 0 = NOOP, 1 = UP, 2 = DOWN, 3 = LEFT, 4 = RIGHT, 5 = INTERACT.
+//! INTERACT on an empty plot plants a seed; the plot ripens after a growth
+//! delay; INTERACT on a ripe plot harvests it for +5 raw reward. Planting
+//! costs nothing but pays off only ~200 ticks later — a long-horizon credit
+//! assignment probe (the Frostbite/H.E.R.O. role in the suite).
+
+use crate::util::rng::Rng;
+
+use super::game::{draw, Game, StepResult, RAW};
+
+const GRID: usize = 6;
+const CELL: f64 = RAW as f64 / GRID as f64;
+const GROWTH_TICKS: u32 = 200;
+const EPISODE_TICKS: u32 = 4000;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Plot {
+    Empty,
+    Growing(u32),
+    Ripe,
+}
+
+pub struct Harvest {
+    rng: Rng,
+    col: usize,
+    row: usize,
+    plots: [[Plot; GRID]; GRID],
+    ticks: u32,
+}
+
+impl Harvest {
+    pub fn new() -> Self {
+        let mut h = Harvest {
+            rng: Rng::new(0),
+            col: 0,
+            row: 0,
+            plots: [[Plot::Empty; GRID]; GRID],
+            ticks: 0,
+        };
+        h.reset(0);
+        h
+    }
+}
+
+impl Default for Harvest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Harvest {
+    fn name(&self) -> &'static str {
+        "harvest"
+    }
+
+    fn num_actions(&self) -> usize {
+        6
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Rng::stream(seed, 0x48525654); // "HRVT"
+        self.col = GRID / 2;
+        self.row = GRID / 2;
+        self.plots = [[Plot::Empty; GRID]; GRID];
+        // A few pre-grown plots so reward is reachable early.
+        for _ in 0..4 {
+            let c = self.rng.below_usize(GRID);
+            let r = self.rng.below_usize(GRID);
+            self.plots[r][c] = Plot::Ripe;
+        }
+        self.ticks = 0;
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        let mut reward = 0.0;
+        match action {
+            1 if self.row > 0 => self.row -= 1,
+            2 if self.row < GRID - 1 => self.row += 1,
+            3 if self.col > 0 => self.col -= 1,
+            4 if self.col < GRID - 1 => self.col += 1,
+            5 => match self.plots[self.row][self.col] {
+                Plot::Empty => self.plots[self.row][self.col] = Plot::Growing(GROWTH_TICKS),
+                Plot::Ripe => {
+                    reward += 5.0;
+                    self.plots[self.row][self.col] = Plot::Empty;
+                }
+                Plot::Growing(_) => {}
+            },
+            _ => {}
+        }
+        // Advance growth.
+        for row in &mut self.plots {
+            for plot in row {
+                if let Plot::Growing(t) = plot {
+                    *t = t.saturating_sub(1);
+                    if *t == 0 {
+                        *plot = Plot::Ripe;
+                    }
+                }
+            }
+        }
+        self.ticks += 1;
+        StepResult { reward, done: self.ticks >= EPISODE_TICKS }
+    }
+
+    fn render(&self, buf: &mut [u8]) {
+        draw::clear(buf, 18);
+        for (r, row) in self.plots.iter().enumerate() {
+            for (c, plot) in row.iter().enumerate() {
+                let shade = match plot {
+                    Plot::Empty => 40,
+                    Plot::Growing(t) => 90 + (70 * (GROWTH_TICKS - t) / GROWTH_TICKS) as u8,
+                    Plot::Ripe => 210,
+                };
+                draw::rect(
+                    buf,
+                    c as f64 * CELL + 2.0,
+                    r as f64 * CELL + 2.0,
+                    CELL - 4.0,
+                    CELL - 4.0,
+                    shade,
+                );
+            }
+        }
+        draw::square(
+            buf,
+            self.col as f64 * CELL + CELL / 2.0,
+            self.row as f64 * CELL + CELL / 2.0,
+            5.0,
+            255,
+        );
+    }
+
+    fn expert_action(&mut self) -> usize {
+        // Harvest ripe plots; keep planting density high: interact whenever
+        // standing on something actionable (ripe -> harvest, empty -> plant).
+        if matches!(self.plots[self.row][self.col], Plot::Ripe | Plot::Empty) {
+            return 5;
+        }
+        // Nearest ripe plot.
+        let mut best: Option<(usize, usize, usize)> = None;
+        for r in 0..GRID {
+            for c in 0..GRID {
+                if self.plots[r][c] == Plot::Ripe {
+                    let d = r.abs_diff(self.row) + c.abs_diff(self.col);
+                    if best.map(|(bd, _, _)| d < bd).unwrap_or(true) {
+                        best = Some((d, r, c));
+                    }
+                }
+            }
+        }
+        match best {
+            Some((_, r, c)) => {
+                if r < self.row {
+                    1
+                } else if r > self.row {
+                    2
+                } else if c < self.col {
+                    3
+                } else {
+                    4
+                }
+            }
+            None => 1 + self.rng.below_usize(4), // wander to the next plot
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planting_ripens_after_delay() {
+        let mut g = Harvest::new();
+        g.reset(1);
+        g.plots = [[Plot::Empty; GRID]; GRID];
+        g.step(5); // plant
+        assert!(matches!(g.plots[g.row][g.col], Plot::Growing(_)));
+        for _ in 0..GROWTH_TICKS {
+            g.step(0);
+        }
+        assert_eq!(g.plots[g.row][g.col], Plot::Ripe);
+        let r = g.step(5);
+        assert_eq!(r.reward, 5.0);
+        assert_eq!(g.plots[g.row][g.col], Plot::Empty);
+    }
+
+    #[test]
+    fn expert_harvests() {
+        let mut g = Harvest::new();
+        g.reset(2);
+        let mut total = 0.0;
+        loop {
+            let a = g.expert_action();
+            let r = g.step(a);
+            total += r.reward;
+            if r.done {
+                break;
+            }
+        }
+        assert!(total >= 20.0, "expert harvested only {total}");
+    }
+
+    #[test]
+    fn movement_respects_bounds() {
+        let mut g = Harvest::new();
+        g.reset(3);
+        for _ in 0..100 {
+            g.step(1);
+        }
+        assert_eq!(g.row, 0);
+        for _ in 0..100 {
+            g.step(3);
+        }
+        assert_eq!(g.col, 0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Environment substrate: synthetic Atari-like games + the DQN
+//! preprocessing pipeline (frame-skip, max-pool, downscale, stacking,
+//! reward clipping).
+//!
+//! The Arcade Learning Environment is unavailable offline; these games are
+//! built from scratch to exercise the identical code path — per-step CPU
+//! simulation + rendering + preprocessing feeding 84x84x4 uint8 stacks into
+//! the network (DESIGN.md §3 documents the substitution).
+
+pub mod atari;
+pub mod breakout;
+pub mod chase;
+pub mod dodge;
+pub mod game;
+pub mod harvest;
+pub mod pong;
+pub mod preprocess;
+pub mod registry;
+pub mod seeker;
+
+pub use atari::{make_env, AtariEnv, EnvStep, STACK, STATE_BYTES};
+pub use game::{Game, StepResult, RAW, RAW_FRAME};
+pub use preprocess::{NET, NET_FRAME};
+pub use registry::{make_game, GAMES};

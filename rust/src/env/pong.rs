@@ -1,0 +1,232 @@
+//! Pong-like game: ball + two paddles, scripted opponent.
+//!
+//! Actions: 0 = NOOP, 1 = UP, 2 = DOWN. Reward +1 when the opponent misses,
+//! -1 when the agent misses; episode ends when either side reaches 21
+//! points (matching Atari Pong's scoring shape). The paper uses Pong for
+//! its §5.1 speed tests, noting the choice of game is timing-irrelevant.
+
+use crate::util::rng::Rng;
+
+use super::game::{draw, Game, StepResult, RAW};
+
+const PADDLE_H: f64 = 22.0;
+const PADDLE_W: f64 = 4.0;
+const AGENT_X: f64 = (RAW - 8) as f64;
+const OPP_X: f64 = 4.0;
+const BALL: f64 = 3.0;
+const WIN_SCORE: u32 = 21;
+
+pub struct Pong {
+    rng: Rng,
+    ball_x: f64,
+    ball_y: f64,
+    vel_x: f64,
+    vel_y: f64,
+    agent_y: f64,
+    opp_y: f64,
+    agent_score: u32,
+    opp_score: u32,
+    /// Scripted-opponent tracking speed; < ball speed so it is beatable.
+    opp_speed: f64,
+}
+
+impl Pong {
+    pub fn new() -> Self {
+        let mut p = Pong {
+            rng: Rng::new(0),
+            ball_x: 0.0,
+            ball_y: 0.0,
+            vel_x: 0.0,
+            vel_y: 0.0,
+            agent_y: RAW as f64 / 2.0,
+            opp_y: RAW as f64 / 2.0,
+            agent_score: 0,
+            opp_score: 0,
+            opp_speed: 1.35,
+        };
+        p.serve(true);
+        p
+    }
+
+    fn serve(&mut self, toward_agent: bool) {
+        self.ball_x = RAW as f64 / 2.0;
+        self.ball_y = self.rng.range_f32(30.0, (RAW - 30) as f32) as f64;
+        let speed = 2.4;
+        let angle = self.rng.range_f32(-0.6, 0.6) as f64;
+        let dir = if toward_agent { 1.0 } else { -1.0 };
+        self.vel_x = dir * speed * angle.cos();
+        self.vel_y = speed * angle.sin();
+    }
+}
+
+impl Default for Pong {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Pong {
+    fn name(&self) -> &'static str {
+        "pong"
+    }
+
+    fn num_actions(&self) -> usize {
+        3
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Rng::stream(seed, 0x504f4e47); // "PONG"
+        self.agent_y = RAW as f64 / 2.0;
+        self.opp_y = RAW as f64 / 2.0;
+        self.agent_score = 0;
+        self.opp_score = 0;
+        let toward_agent = self.rng.chance(0.5);
+        self.serve(toward_agent);
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        const PSPEED: f64 = 2.2;
+        match action {
+            1 => self.agent_y = (self.agent_y - PSPEED).max(PADDLE_H / 2.0),
+            2 => self.agent_y = (self.agent_y + PSPEED).min(RAW as f64 - PADDLE_H / 2.0),
+            _ => {}
+        }
+        // Scripted opponent: track the ball with bounded speed + jitter.
+        let target = self.ball_y + self.rng.range_f32(-6.0, 6.0) as f64;
+        let dy = (target - self.opp_y).clamp(-self.opp_speed, self.opp_speed);
+        self.opp_y = (self.opp_y + dy).clamp(PADDLE_H / 2.0, RAW as f64 - PADDLE_H / 2.0);
+
+        self.ball_x += self.vel_x;
+        self.ball_y += self.vel_y;
+
+        // Wall bounces.
+        if self.ball_y < BALL {
+            self.ball_y = BALL;
+            self.vel_y = self.vel_y.abs();
+        }
+        if self.ball_y > RAW as f64 - BALL {
+            self.ball_y = RAW as f64 - BALL;
+            self.vel_y = -self.vel_y.abs();
+        }
+
+        let mut reward = 0.0;
+        // Agent paddle.
+        if self.ball_x >= AGENT_X - BALL && self.vel_x > 0.0 {
+            if (self.ball_y - self.agent_y).abs() < PADDLE_H / 2.0 + BALL {
+                self.vel_x = -self.vel_x.abs();
+                // Impart spin based on contact point.
+                self.vel_y += 0.25 * (self.ball_y - self.agent_y) / (PADDLE_H / 2.0);
+            } else if self.ball_x > RAW as f64 {
+                self.opp_score += 1;
+                reward = -1.0;
+                self.serve(false);
+            }
+        }
+        // Opponent paddle.
+        if self.ball_x <= OPP_X + PADDLE_W + BALL && self.vel_x < 0.0 {
+            if (self.ball_y - self.opp_y).abs() < PADDLE_H / 2.0 + BALL {
+                self.vel_x = self.vel_x.abs();
+                self.vel_y += 0.25 * (self.ball_y - self.opp_y) / (PADDLE_H / 2.0);
+            } else if self.ball_x < 0.0 {
+                self.agent_score += 1;
+                reward = 1.0;
+                self.serve(true);
+            }
+        }
+
+        let done = self.agent_score >= WIN_SCORE || self.opp_score >= WIN_SCORE;
+        StepResult { reward, done }
+    }
+
+    fn render(&self, buf: &mut [u8]) {
+        draw::clear(buf, 20);
+        draw::hline(buf, 0, 90);
+        draw::hline(buf, RAW - 1, 90);
+        draw::rect(buf, OPP_X, self.opp_y - PADDLE_H / 2.0, PADDLE_W, PADDLE_H, 140);
+        draw::rect(buf, AGENT_X, self.agent_y - PADDLE_H / 2.0, PADDLE_W, PADDLE_H, 255);
+        draw::square(buf, self.ball_x, self.ball_y, BALL, 230);
+    }
+
+    fn expert_action(&mut self) -> usize {
+        // Track the ball when it approaches; recentre otherwise.
+        let target = if self.vel_x > 0.0 { self.ball_y } else { RAW as f64 / 2.0 };
+        if target < self.agent_y - 3.0 {
+            1
+        } else if target > self.agent_y + 3.0 {
+            2
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::game::RAW_FRAME;
+
+    #[test]
+    fn episode_terminates() {
+        let mut g = Pong::new();
+        g.reset(1);
+        let mut steps = 0;
+        let mut total = 0.0;
+        loop {
+            let r = g.step(0); // NOOP agent loses every rally
+            total += r.reward;
+            steps += 1;
+            if r.done {
+                break;
+            }
+            assert!(steps < 200_000, "episode must terminate");
+        }
+        assert!(total <= -(WIN_SCORE as f64) + 21.0);
+        assert!((total as i64) <= 0, "noop agent cannot win: {total}");
+    }
+
+    #[test]
+    fn expert_beats_noop() {
+        let score = |expert: bool| {
+            let mut g = Pong::new();
+            g.reset(7);
+            let mut total = 0.0;
+            for _ in 0..20_000 {
+                let a = if expert { g.expert_action() } else { 0 };
+                let r = g.step(a);
+                total += r.reward;
+                if r.done {
+                    break;
+                }
+            }
+            total
+        };
+        assert!(score(true) > score(false) + 5.0);
+    }
+
+    #[test]
+    fn render_shows_objects() {
+        let mut g = Pong::new();
+        g.reset(3);
+        let mut buf = vec![0u8; RAW_FRAME];
+        g.render(&mut buf);
+        assert!(buf.iter().any(|&b| b == 255), "agent paddle visible");
+        assert!(buf.iter().any(|&b| b == 230), "ball visible");
+        assert!(buf.iter().any(|&b| b == 140), "opponent visible");
+    }
+
+    #[test]
+    fn reset_is_deterministic() {
+        let run = |seed| {
+            let mut g = Pong::new();
+            g.reset(seed);
+            let mut buf = vec![0u8; RAW_FRAME];
+            for _ in 0..50 {
+                g.step(1);
+            }
+            g.render(&mut buf);
+            buf
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+}

@@ -1,0 +1,93 @@
+//! DQN frame preprocessing: max-pool over consecutive raw frames and 2x
+//! box downscale (168x168 -> 84x84), mirroring the Mnih et al. (2015)
+//! pipeline (max over the last two emulator frames, resize, grayscale —
+//! our games already render grayscale).
+
+use super::game::{RAW, RAW_FRAME};
+
+/// Network input resolution.
+pub const NET: usize = 84;
+/// Bytes in one preprocessed plane.
+pub const NET_FRAME: usize = NET * NET;
+
+/// Elementwise max of two raw frames into `a` (flicker removal).
+pub fn max_pool_into(a: &mut [u8], b: &[u8]) {
+    debug_assert_eq!(a.len(), RAW_FRAME);
+    debug_assert_eq!(b.len(), RAW_FRAME);
+    for (x, y) in a.iter_mut().zip(b.iter()) {
+        *x = (*x).max(*y);
+    }
+}
+
+/// 2x2 box-filter downscale RAW -> NET.
+pub fn downscale(raw: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(raw.len(), RAW_FRAME);
+    debug_assert_eq!(out.len(), NET_FRAME);
+    debug_assert_eq!(RAW, 2 * NET);
+    for y in 0..NET {
+        let r0 = &raw[(2 * y) * RAW..(2 * y) * RAW + RAW];
+        let r1 = &raw[(2 * y + 1) * RAW..(2 * y + 1) * RAW + RAW];
+        let dst = &mut out[y * NET..(y + 1) * NET];
+        for (x, d) in dst.iter_mut().enumerate() {
+            let s = r0[2 * x] as u16 + r0[2 * x + 1] as u16 + r1[2 * x] as u16 + r1[2 * x + 1] as u16;
+            *d = (s / 4) as u8;
+        }
+    }
+}
+
+/// DQN reward clipping: sign(r).
+pub fn clip_reward(r: f64) -> f32 {
+    if r > 0.0 {
+        1.0
+    } else if r < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_pool_is_elementwise_max() {
+        let mut a = vec![0u8; RAW_FRAME];
+        let mut b = vec![0u8; RAW_FRAME];
+        a[0] = 10;
+        b[0] = 20;
+        a[1] = 30;
+        b[1] = 5;
+        max_pool_into(&mut a, &b);
+        assert_eq!(a[0], 20);
+        assert_eq!(a[1], 30);
+    }
+
+    #[test]
+    fn downscale_averages_2x2() {
+        let mut raw = vec![0u8; RAW_FRAME];
+        raw[0] = 100;
+        raw[1] = 200;
+        raw[RAW] = 60;
+        raw[RAW + 1] = 40;
+        let mut out = vec![0u8; NET_FRAME];
+        downscale(&raw, &mut out);
+        assert_eq!(out[0], 100);
+        assert_eq!(out[1], 0);
+    }
+
+    #[test]
+    fn downscale_constant_field() {
+        let raw = vec![137u8; RAW_FRAME];
+        let mut out = vec![0u8; NET_FRAME];
+        downscale(&raw, &mut out);
+        assert!(out.iter().all(|&v| v == 137));
+    }
+
+    #[test]
+    fn clip() {
+        assert_eq!(clip_reward(6.0), 1.0);
+        assert_eq!(clip_reward(-0.1), -1.0);
+        assert_eq!(clip_reward(0.0), 0.0);
+    }
+}

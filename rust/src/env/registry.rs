@@ -1,0 +1,65 @@
+//! Game registry: name -> constructor, plus the standard evaluation suite.
+
+use anyhow::{bail, Result};
+
+use super::breakout::Breakout;
+use super::chase::Chase;
+use super::dodge::Dodge;
+use super::game::Game;
+use super::harvest::Harvest;
+use super::pong::Pong;
+use super::seeker::Seeker;
+
+/// All registered games (the Table 4 suite).
+pub const GAMES: &[&str] = &["pong", "breakout", "seeker", "dodge", "chase", "harvest"];
+
+/// Construct a game by name.
+pub fn make_game(name: &str) -> Result<Box<dyn Game>> {
+    Ok(match name {
+        "pong" => Box::new(Pong::new()),
+        "breakout" => Box::new(Breakout::new()),
+        "seeker" => Box::new(Seeker::new()),
+        "dodge" => Box::new(Dodge::new()),
+        "chase" => Box::new(Chase::new()),
+        "harvest" => Box::new(Harvest::new()),
+        other => bail!("unknown game {other:?}; available: {GAMES:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::game::RAW_FRAME;
+
+    #[test]
+    fn all_games_construct_step_render() {
+        for name in GAMES {
+            let mut g = make_game(name).unwrap();
+            assert_eq!(g.name(), *name);
+            assert!(g.num_actions() >= 2 && g.num_actions() <= 6, "{name}");
+            g.reset(1);
+            let mut buf = vec![0u8; RAW_FRAME];
+            for i in 0..100 {
+                let a = i % g.num_actions();
+                g.step(a);
+            }
+            g.render(&mut buf);
+            assert!(buf.iter().any(|&b| b > 0), "{name} renders something");
+            // Expert policy always returns a legal action.
+            for _ in 0..50 {
+                let a = g.expert_action();
+                assert!(a < g.num_actions(), "{name} expert action {a}");
+                g.step(a);
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_game_lists_available() {
+        let err = match make_game("nope") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("pong"), "{err}");
+    }
+}

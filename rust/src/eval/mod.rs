@@ -1,0 +1,142 @@
+//! Periodic evaluation harness (paper §5.2): run an epsilon-greedy policy
+//! (eps = 0.05) for a fixed number of episodes in a *separate* environment
+//! instance and report mean/std of the raw (un-clipped) episode returns.
+
+use anyhow::Result;
+
+use crate::agent::EpsGreedy;
+use crate::env::{make_env, AtariEnv, STATE_BYTES};
+use crate::runtime::{Policy, QNet};
+
+/// One evaluation result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalPoint {
+    /// Training step at which this evaluation ran.
+    pub step: u64,
+    pub mean_return: f64,
+    pub std_return: f64,
+    pub episodes: usize,
+}
+
+pub struct Evaluator {
+    env: AtariEnv,
+    policy: EpsGreedy,
+    eps: f64,
+    episodes: usize,
+    max_steps_per_episode: usize,
+}
+
+impl Evaluator {
+    pub fn new(game: &str, seed: u64, episodes: usize, eps: f64) -> Result<Evaluator> {
+        let env = make_env(game, seed ^ 0xE7A1)?;
+        let actions = env.num_actions();
+        Ok(Evaluator {
+            env,
+            policy: EpsGreedy::new(seed, 0xEEE, actions),
+            eps,
+            episodes,
+            max_steps_per_episode: 27_000,
+        })
+    }
+
+    pub fn with_max_steps(mut self, n: usize) -> Self {
+        self.max_steps_per_episode = n;
+        self
+    }
+
+    /// Run the full evaluation (blocking). Acts with theta (the online
+    /// network) like DQN's periodic evaluations.
+    pub fn run(&mut self, qnet: &QNet, step: u64) -> Result<EvalPoint> {
+        let mut returns = Vec::with_capacity(self.episodes);
+        let mut state = vec![0u8; STATE_BYTES];
+        for _ in 0..self.episodes {
+            self.env.reset();
+            let mut steps = 0;
+            loop {
+                self.env.write_state(&mut state);
+                let q = qnet.infer(Policy::Theta, &state, 1)?;
+                let a = self.policy.select(&q, self.eps);
+                let r = self.env.step(a.min(self.env.num_actions() - 1));
+                steps += 1;
+                if r.done || steps >= self.max_steps_per_episode {
+                    returns.push(self.env.episode_raw_return());
+                    break;
+                }
+            }
+        }
+        let n = returns.len().max(1) as f64;
+        let mean = returns.iter().sum::<f64>() / n;
+        let var = returns.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n;
+        Ok(EvalPoint { step, mean_return: mean, std_return: var.sqrt(), episodes: returns.len() })
+    }
+
+    /// Score a fixed policy (random or scripted expert) — the Table 4
+    /// anchor measurements.
+    pub fn run_anchor(&mut self, kind: AnchorKind) -> Result<EvalPoint> {
+        let mut returns = Vec::with_capacity(self.episodes);
+        for _ in 0..self.episodes {
+            self.env.reset();
+            let mut steps = 0;
+            loop {
+                let a = match kind {
+                    AnchorKind::Random => self.policy.random(),
+                    AnchorKind::Expert => self.env.expert_action(),
+                };
+                let r = self.env.step(a);
+                steps += 1;
+                if r.done || steps >= self.max_steps_per_episode {
+                    returns.push(self.env.episode_raw_return());
+                    break;
+                }
+            }
+        }
+        let n = returns.len().max(1) as f64;
+        let mean = returns.iter().sum::<f64>() / n;
+        let var = returns.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n;
+        Ok(EvalPoint { step: 0, mean_return: mean, std_return: var.sqrt(), episodes: returns.len() })
+    }
+}
+
+/// Fixed anchor policies for human-normalized scoring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnchorKind {
+    Random,
+    Expert,
+}
+
+/// Human-normalized score: 100 * (score - random) / (human - random),
+/// the Mnih et al. (2015) normalization used throughout Table 4.
+pub fn normalized_score(score: f64, random: f64, human: f64) -> f64 {
+    if (human - random).abs() < 1e-12 {
+        return 0.0;
+    }
+    100.0 * (score - random) / (human - random)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_matches_paper_formula() {
+        // Pong row of Table 4: random -20.7, human 9.3, DQN 18.9 -> 132.0%.
+        let n = normalized_score(18.9, -20.7, 9.3);
+        assert!((n - 132.0).abs() < 0.5, "{n}");
+        assert_eq!(normalized_score(5.0, 5.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn anchors_rank_expert_above_random() {
+        let mut ev = Evaluator::new("seeker", 3, 2, 0.05)
+            .unwrap()
+            .with_max_steps(400);
+        let rand = ev.run_anchor(AnchorKind::Random).unwrap();
+        let expert = ev.run_anchor(AnchorKind::Expert).unwrap();
+        assert!(
+            expert.mean_return > rand.mean_return,
+            "expert {} <= random {}",
+            expert.mean_return,
+            rand.mean_return
+        );
+    }
+}

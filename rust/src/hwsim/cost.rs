@@ -1,0 +1,150 @@
+//! Cost model for the simulated machine.
+//!
+//! The paper's testbed (4-core/8-thread i7-7700K + GTX 1080) is not
+//! available in this container (1 CPU core, no GPU), so Tables 1-3 are
+//! regenerated through a discrete-event simulation whose per-task costs
+//! come from one of two calibrations:
+//!
+//! * [`CostModel::gtx1080_i7`] — fitted to the paper's own single-thread
+//!   measurements (Table 1, column "Standard"/"Concurrent", W=1), which
+//!   pin d_env + d_infer(1) + d_train/F; the contention coefficient is
+//!   fitted to the standard-mode thread plateau. DESIGN.md §3 documents
+//!   the derivation.
+//! * [`CostModel::from_measured`] — calibrated from live benchmarks of
+//!   THIS container's env-step / infer / train costs (see
+//!   `examples/speed_ablation.rs --calibrate`), so the DES can be
+//!   validated against real scaled runs on the same machine.
+
+/// All durations in milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Parallelizable part of one agent-level env step (simulation +
+    /// rendering + preprocessing on a CPU lane).
+    pub env_step_ms: f64,
+    /// Host-serialized per-step cost (action selection, dispatch,
+    /// bookkeeping) on one global resource — the reference
+    /// implementation's Python GIL. Zero for a GIL-free host.
+    pub serial_ms: f64,
+    /// Fixed per-transaction device overhead (dispatch + transfer setup).
+    pub txn_ms: f64,
+    /// Per-sample inference compute on the device.
+    pub infer_per_sample_ms: f64,
+    /// One minibatch gradient step on the device.
+    pub train_ms: f64,
+    /// Target sync + staging flush at a window barrier.
+    pub sync_ms: f64,
+    /// Physical CPU lanes usable by env simulation.
+    pub cores: usize,
+    /// Bus-contention coefficient: when q callers contend for the device,
+    /// each transaction's overhead becomes txn_ms * (1 + contention*(q-1)).
+    /// This is the Figure 3(a) saturation effect.
+    pub contention: f64,
+    /// Host-serial discount under Synchronized Execution: batching the
+    /// per-step bookkeeping (action selection over a W-row Q matrix, one
+    /// dispatch instead of W) shrinks the serialized host cost per step.
+    pub batch_host_discount: f64,
+}
+
+impl CostModel {
+    /// Device time for one inference transaction of `batch` samples,
+    /// given `q` concurrent contenders.
+    pub fn infer_ms(&self, batch: usize, q: usize) -> f64 {
+        self.txn_eff(q) + self.infer_per_sample_ms * batch as f64
+    }
+
+    pub fn train_total_ms(&self, q: usize) -> f64 {
+        self.txn_eff(q) + self.train_ms
+    }
+
+    pub fn txn_eff(&self, q: usize) -> f64 {
+        self.txn_ms * (1.0 + self.contention * (q.saturating_sub(1)) as f64)
+    }
+
+    /// Fitted to the paper's Table 1:
+    ///   concurrent W=1 (train fully masked): serial + env + txn + infer
+    ///     = 20.64 h / 50M steps = 1.486 ms/step
+    ///   standard W=1 adds (txn + train)/F   = (25.08-20.64) h -> 0.32 ms
+    /// Full masking at W=1 requires txn+train <= serial+env; the split
+    /// between `serial_ms` (GIL-serialized host work) and `env_step_ms`
+    /// (parallel simulation) plus `contention` are fitted to the paper's
+    /// thread-scaling columns. The standard-mode plateau at W >= F falls
+    /// out structurally (only F steps fit between mandatory trains).
+    pub fn gtx1080_i7() -> CostModel {
+        CostModel {
+            env_step_ms: 0.58,
+            serial_ms: 0.72,
+            txn_ms: 0.16,
+            infer_per_sample_ms: 0.026,
+            train_ms: 1.16,
+            sync_ms: 2.0,
+            cores: 6,
+            contention: 0.25,
+            batch_host_discount: 0.65,
+        }
+    }
+
+    /// Build from live measurements (milliseconds).
+    pub fn from_measured(
+        env_step_ms: f64,
+        infer_b1_ms: f64,
+        infer_b8_ms: f64,
+        train_ms: f64,
+        cores: usize,
+    ) -> CostModel {
+        // Linear fit: infer(b) = txn + per_sample*b through the two points.
+        let per_sample = ((infer_b8_ms - infer_b1_ms) / 7.0).max(1e-6);
+        let txn = (infer_b1_ms - per_sample).max(1e-6);
+        CostModel {
+            env_step_ms,
+            serial_ms: 0.0, // rust host: no GIL-equivalent serial section
+            txn_ms: txn,
+            infer_per_sample_ms: per_sample,
+            train_ms,
+            sync_ms: 2.0 * train_ms.max(1.0),
+            cores,
+            contention: 0.55,
+            batch_host_discount: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fit_reproduces_single_thread_hours() {
+        let m = CostModel::gtx1080_i7();
+        // Standard W=1: every step pays infer + host + env; every 4th a train.
+        let step_base = m.infer_ms(1, 1) + m.serial_ms + m.env_step_ms;
+        let hours = (step_base + m.train_total_ms(1) / 4.0) * 50e6 / 3_600e3;
+        assert!((hours - 25.08).abs() < 1.5, "std-1: {hours:.2} h");
+        // Near-full masking feasible: one train ~fits inside one env gap.
+        assert!(m.train_total_ms(1) <= (m.serial_ms + m.env_step_ms) * 1.05);
+        // Concurrent W=1: train fully masked.
+        let hours_c = step_base * 50e6 / 3_600e3;
+        assert!((hours_c - 20.64).abs() < 1.0, "conc-1: {hours_c:.2} h");
+    }
+
+    #[test]
+    fn batching_amortizes_txn() {
+        let m = CostModel::gtx1080_i7();
+        let one_by_one = 8.0 * m.infer_ms(1, 8);
+        let batched = m.infer_ms(8, 1);
+        assert!(batched < one_by_one / 2.0, "{batched} vs {one_by_one}");
+    }
+
+    #[test]
+    fn contention_inflates_txn() {
+        let m = CostModel::gtx1080_i7();
+        assert!(m.txn_eff(8) > 2.0 * m.txn_eff(1));
+        assert_eq!(m.txn_eff(1), m.txn_ms);
+    }
+
+    #[test]
+    fn measured_fit_roundtrip() {
+        let m = CostModel::from_measured(2.0, 1.0, 2.4, 10.0, 1);
+        assert!((m.infer_ms(1, 1) - 1.0).abs() < 1e-9);
+        assert!((m.infer_ms(8, 1) - 2.4).abs() < 1e-9);
+    }
+}

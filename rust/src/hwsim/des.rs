@@ -1,0 +1,191 @@
+//! Discrete-event machine: one serial accelerator + a pool of CPU lanes.
+//!
+//! Time is f64 milliseconds. The accelerator is a single FIFO server (the
+//! paper's one-GPU assumption); CPU env work runs on `cores` parallel
+//! lanes. Contention inflates per-transaction overhead as a function of
+//! how many entities are waiting (Figure 3(a)'s bus-saturation effect).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::cost::CostModel;
+
+/// Totally-ordered f64 for heaps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) struct F(pub f64);
+impl Eq for F {}
+impl PartialOrd for F {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for F {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Aggregate counters for a simulated run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    pub gpu_busy_ms: f64,
+    pub gpu_transactions: u64,
+    pub env_steps: u64,
+    pub trains: u64,
+    pub syncs: u64,
+    pub makespan_ms: f64,
+}
+
+impl SimStats {
+    pub fn hours(&self) -> f64 {
+        self.makespan_ms / 3_600_000.0
+    }
+
+    pub fn gpu_utilization(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        self.gpu_busy_ms / self.makespan_ms
+    }
+}
+
+/// The simulated machine.
+pub struct Machine {
+    pub model: CostModel,
+    gpu_free: f64,
+    serial_free: f64,
+    lanes: BinaryHeap<Reverse<F>>,
+    pub stats: SimStats,
+}
+
+impl Machine {
+    pub fn new(model: CostModel) -> Machine {
+        let mut lanes = BinaryHeap::new();
+        for _ in 0..model.cores {
+            lanes.push(Reverse(F(0.0)));
+        }
+        Machine { model, gpu_free: 0.0, serial_free: 0.0, lanes, stats: SimStats::default() }
+    }
+
+    pub fn gpu_free_at(&self) -> f64 {
+        self.gpu_free
+    }
+
+    /// Execute one accelerator transaction arriving at `arrival` with
+    /// compute duration `compute_ms`, with `waiting` other contenders.
+    /// Returns the completion time.
+    pub fn gpu(&mut self, arrival: f64, compute_ms: f64, waiting: usize) -> f64 {
+        let start = arrival.max(self.gpu_free);
+        let dur = self.model.txn_eff(waiting + 1) + compute_ms;
+        let end = start + dur;
+        self.gpu_free = end;
+        self.stats.gpu_busy_ms += dur;
+        self.stats.gpu_transactions += 1;
+        self.stats.makespan_ms = self.stats.makespan_ms.max(end);
+        end
+    }
+
+    /// Execute one env step: first the host-serialized portion (dispatch,
+    /// action selection, frame bookkeeping — one global "interpreter"
+    /// resource, the GIL of the paper's reference implementation), then
+    /// the parallel simulation portion on the earliest-free CPU lane.
+    pub fn cpu(&mut self, arrival: f64) -> f64 {
+        self.cpu_scaled(arrival, 1.0)
+    }
+
+    /// `cpu` with the host-serial portion scaled (Synchronized Execution's
+    /// batched bookkeeping).
+    pub fn cpu_scaled(&mut self, arrival: f64, serial_scale: f64) -> f64 {
+        let s_start = arrival.max(self.serial_free);
+        let s_end = s_start + self.model.serial_ms * serial_scale;
+        self.serial_free = s_end;
+        let Reverse(F(lane_free)) = self.lanes.pop().expect("cores >= 1");
+        let start = s_end.max(lane_free);
+        let end = start + self.model.env_step_ms;
+        self.lanes.push(Reverse(F(end)));
+        self.stats.env_steps += 1;
+        self.stats.makespan_ms = self.stats.makespan_ms.max(end);
+        end
+    }
+
+    /// Run `n` env steps all arriving at `arrival`; return when ALL finish.
+    /// The host-serial portion is charged at the batched discount.
+    pub fn cpu_phase(&mut self, arrival: f64, n: usize) -> f64 {
+        let scale = self.model.batch_host_discount;
+        let mut latest = arrival;
+        for _ in 0..n {
+            latest = latest.max(self.cpu_scaled(arrival, scale));
+        }
+        latest
+    }
+
+    /// A synchronization barrier at `time` costing `sync_ms`.
+    pub fn sync(&mut self, time: f64) -> f64 {
+        let end = time + self.model.sync_ms;
+        self.stats.syncs += 1;
+        self.stats.makespan_ms = self.stats.makespan_ms.max(end);
+        end
+    }
+
+    pub fn note_train(&mut self) {
+        self.stats.trains += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel {
+            env_step_ms: 1.0,
+            serial_ms: 0.0,
+            txn_ms: 0.5,
+            infer_per_sample_ms: 0.1,
+            train_ms: 2.0,
+            sync_ms: 1.0,
+            cores: 2,
+            contention: 0.0,
+            batch_host_discount: 1.0,
+        }
+    }
+
+    #[test]
+    fn gpu_serializes() {
+        let mut m = Machine::new(model());
+        let a = m.gpu(0.0, 1.0, 0); // 0 .. 1.5
+        let b = m.gpu(0.0, 1.0, 0); // 1.5 .. 3.0 (waits)
+        assert_eq!(a, 1.5);
+        assert_eq!(b, 3.0);
+        assert_eq!(m.stats.gpu_transactions, 2);
+        assert!((m.stats.gpu_busy_ms - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_pool_parallelism() {
+        let mut m = Machine::new(model()); // 2 cores
+        let done = m.cpu_phase(0.0, 4); // 4 tasks, 2 lanes -> 2 waves
+        assert!((done - 2.0).abs() < 1e-9, "{done}");
+        assert_eq!(m.stats.env_steps, 4);
+    }
+
+    #[test]
+    fn makespan_tracks_max() {
+        let mut m = Machine::new(model());
+        m.cpu(5.0);
+        assert!((m.stats.makespan_ms - 6.0).abs() < 1e-9);
+        m.gpu(10.0, 0.5, 0);
+        assert!((m.stats.makespan_ms - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_inflates_service() {
+        let mut cm = model();
+        cm.contention = 1.0;
+        let mut m = Machine::new(cm);
+        let solo = m.gpu(0.0, 0.0, 0);
+        assert!((solo - 0.5).abs() < 1e-9);
+        let crowded_end = m.gpu(solo, 0.0, 3); // txn * (1+3)
+        assert!((crowded_end - solo - 2.0).abs() < 1e-9);
+    }
+}

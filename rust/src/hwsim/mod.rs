@@ -1,0 +1,21 @@
+//! Hardware-model simulator (discrete-event) for the Table 1-3 and
+//! Figure 2-3 reproductions.
+//!
+//! This container has one CPU core and no GPU, so the paper's wall-clock
+//! thread-scaling results cannot physically manifest here. Tables 1-3 are
+//! scheduling outcomes: given per-task durations and the machine's resource
+//! constraints (W CPU lanes, one serial accelerator, per-transaction bus
+//! overhead), the runtime of each execution model is fully determined. The
+//! DES plays out the *same dependency structures* as the real coordinator
+//! drivers with calibrated task costs — either fitted to the paper's own
+//! single-thread anchors (`CostModel::gtx1080_i7`) or measured live on this
+//! machine (`CostModel::from_measured`) for validation against real runs.
+//! See DESIGN.md §3.
+
+pub mod cost;
+pub mod des;
+pub mod modes;
+
+pub use cost::CostModel;
+pub use des::{Machine, SimStats};
+pub use modes::{simulate, SimRun};

@@ -1,0 +1,30 @@
+//! # tempo-dqn
+//!
+//! Production-grade reproduction of *Human-Level Control without
+//! Server-Grade Hardware* (Daley & Amato, 2021): a fast DQN built on
+//! **Concurrent Training** (act with the target network so sampling and
+//! training parallelize) and **Synchronized Execution** (batch all sampler
+//! threads' inference into one accelerator transaction).
+//!
+//! Three-layer architecture:
+//! * L1/L2 (build time): JAX + Pallas kernels lowered to HLO text
+//!   (`python/compile/`), never imported at runtime.
+//! * L3 (this crate): the coordinator — environments, replay, execution
+//!   modes, evaluation, metrics, hardware-model simulator — plus a PJRT
+//!   runtime that executes the AOT artifacts.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod agent;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod hwsim;
+pub mod env;
+pub mod metrics;
+pub mod replay;
+pub mod report;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,245 @@
+//! tempo-dqn launcher: the leader entrypoint + CLI.
+//!
+//! Subcommands:
+//!   train      run one training experiment (mode/threads/game/net via flags)
+//!   speedtest  regenerate Tables 1-3 (DES by default; --real for scaled live runs)
+//!   suite      regenerate the Table 4 analog over the synthetic game suite
+//!   anchors    measure the Random / Human-proxy score anchors per game
+//!   config     print the resolved experiment configuration
+//!   help       this text
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use tempo_dqn::config::{ExecMode, ExperimentConfig};
+use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::env::GAMES;
+use tempo_dqn::eval::{AnchorKind, Evaluator};
+use tempo_dqn::hwsim::{simulate, CostModel, SimRun};
+use tempo_dqn::metrics::GanttTrace;
+use tempo_dqn::report::{table4, GameRow, RuntimeGrid};
+use tempo_dqn::runtime::default_artifact_dir;
+use tempo_dqn::util::cli::Args;
+
+const HELP: &str = "\
+tempo-dqn — fast DQN via Concurrent Training + Synchronized Execution
+(Daley & Amato, 2021 reproduction; see DESIGN.md)
+
+USAGE:
+  tempo-dqn <subcommand> [options]
+
+SUBCOMMANDS:
+  train      --preset paper|speedtest|smoke --config FILE --mode MODE
+             --threads N --steps N --game NAME --net tiny|small|nature
+             --seed N --double --lr X --eval-period N
+  speedtest  --threads 1,2,4,8 --steps N [--real] [--gantt] [--game NAME]
+  suite      --steps N --threads N [--games a,b,c] [--episodes N]
+  anchors    [--games a,b,c] [--episodes N]
+  config     (same options as train; prints the resolved config)
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    let result = match sub.as_str() {
+        "train" => cmd_train(&args),
+        "speedtest" => cmd_speedtest(&args),
+        "suite" => cmd_suite(&args),
+        "anchors" => cmd_anchors(&args),
+        "config" => cmd_config(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::resolve(args)?;
+    println!("{cfg:#?}");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::resolve(args)?;
+    println!(
+        "training: game={} net={} mode={} threads={} steps={} seed={}",
+        cfg.game, cfg.net, cfg.mode.name(), cfg.threads, cfg.total_steps, cfg.seed
+    );
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir())?;
+    let res = coord.run()?;
+    println!(
+        "done: {} steps in {:.1}s ({:.1} steps/s), {} episodes, {} trains, {} target syncs",
+        res.steps, res.wall_s, res.steps_per_sec, res.episodes, res.trains, res.target_syncs
+    );
+    println!(
+        "bus: {} transactions, {:.1} MB in, {:.1} MB out",
+        res.bus.transactions,
+        res.bus.bytes_in as f64 / 1e6,
+        res.bus.bytes_out as f64 / 1e6
+    );
+    if let Some((step, loss)) = res.losses.last() {
+        println!("final loss sample: {loss:.5} @ step {step}");
+    }
+    println!("recent mean return: {:.2}", res.recent_mean_return(20));
+    for ev in &res.evals {
+        println!(
+            "eval @ {}: {:.1} ± {:.1} over {} episodes",
+            ev.step, ev.mean_return, ev.std_return, ev.episodes
+        );
+    }
+    print!("{}", res.timers_report);
+    Ok(())
+}
+
+fn cmd_speedtest(args: &Args) -> Result<()> {
+    let threads = args.usize_list_or("threads", &[1, 2, 4, 8])?;
+    let real = args.flag("real");
+    let steps = args.u64_or("steps", if real { 2_000 } else { 1_000_000 })?;
+    let game = args.get_or("game", "pong").to_string();
+
+    // DES reproduction of the paper's grid (scaled to 50M steps like the
+    // paper's x50 extrapolation of a 1M-step measurement).
+    let model = CostModel::gtx1080_i7();
+    let mut grid = RuntimeGrid::new(&threads);
+    for &w in &threads {
+        for mode in ExecMode::ALL {
+            let run = SimRun { steps: steps.min(1_000_000), c: 10_000, f: 4, threads: w };
+            let stats = simulate(model, run, mode);
+            let hours = stats.makespan_ms * (50_000_000.0 / run.steps as f64) / 3_600_000.0;
+            grid.set(mode, w, hours, 0.0);
+        }
+    }
+    println!("== simulated machine: GTX 1080 + i7-7700K cost model ==");
+    print!("{}", grid.table1());
+    print!("{}", grid.table2());
+    print!("{}", grid.table3());
+    if let Some((base, best, speedup)) = grid.headline() {
+        println!("headline: {base:.2} h -> {best:.2} h ({speedup:.2}x)\n");
+    }
+
+    if real {
+        println!("== real scaled runs on this machine ({steps} steps, {game}) ==");
+        let mut rgrid = RuntimeGrid::new(&threads);
+        for &w in &threads {
+            for mode in ExecMode::ALL {
+                let mut cfg = ExperimentConfig::preset("speedtest")?;
+                cfg.game = game.clone();
+                cfg.net = args.get_or("net", "tiny").to_string();
+                cfg.mode = mode;
+                cfg.threads = w;
+                cfg.total_steps = steps;
+                cfg.prepopulate = 1_000.min(steps as usize);
+                cfg.replay_capacity = 100_000;
+                cfg.target_update_period = args.u64_or("target-period", 1_000)?;
+                let mut coord = Coordinator::new(cfg, &default_artifact_dir())?.without_eval();
+                let res = coord.run()?;
+                let hours = res.wall_s / 3_600.0;
+                println!(
+                    "  {:>12} W={w}: {:.1}s ({:.1} steps/s, {} txns)",
+                    mode.name(), res.wall_s, res.steps_per_sec, res.bus.transactions
+                );
+                rgrid.set(mode, w, hours, 0.0);
+            }
+        }
+        print!("{}", rgrid.table3());
+    }
+
+    if args.flag("gantt") {
+        println!("== measured timing diagram (Figure 2 analog) ==");
+        let gantt = Arc::new(GanttTrace::new(200_000));
+        let mut cfg = ExperimentConfig::preset("smoke")?;
+        cfg.game = game;
+        cfg.mode = ExecMode::parse(args.get_or("mode", "both"))?;
+        cfg.threads = *threads.last().unwrap_or(&4);
+        cfg.total_steps = args.u64_or("gantt-steps", 256)?;
+        let mut coord =
+            Coordinator::new(cfg, &default_artifact_dir())?.with_gantt(gantt.clone());
+        coord.run()?;
+        print!("{}", gantt.render_ascii(100));
+    }
+    Ok(())
+}
+
+fn cmd_anchors(args: &Args) -> Result<()> {
+    let games: Vec<String> = match args.str_opt("games") {
+        Some(list) => list.split(',').map(str::to_string).collect(),
+        None => GAMES.iter().map(|s| s.to_string()).collect(),
+    };
+    let episodes = args.usize_or("episodes", 10)?;
+    let max_steps = args.usize_or("max-steps", 3_000)?;
+    println!("{:<10} {:>12} {:>12}", "game", "random", "human-proxy");
+    for game in &games {
+        let mut ev = Evaluator::new(game, 7, episodes, 0.05)?.with_max_steps(max_steps);
+        let rand = ev.run_anchor(AnchorKind::Random)?;
+        let expert = ev.run_anchor(AnchorKind::Expert)?;
+        println!(
+            "{game:<10} {:>7.1}±{:<5.1} {:>7.1}±{:<5.1}",
+            rand.mean_return, rand.std_return, expert.mean_return, expert.std_return
+        );
+    }
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> Result<()> {
+    let games: Vec<String> = match args.str_opt("games") {
+        Some(list) => list.split(',').map(str::to_string).collect(),
+        None => GAMES.iter().map(|s| s.to_string()).collect(),
+    };
+    let steps = args.u64_or("steps", 3_000)?;
+    let threads = args.usize_or("threads", 4)?;
+    let episodes = args.usize_or("episodes", 5)?;
+    let max_steps = args.usize_or("max-steps", 2_000)?;
+    let net = args.get_or("net", "tiny").to_string();
+
+    let mut rows = Vec::new();
+    for game in &games {
+        println!("[suite] {game}: anchors...");
+        let mut ev = Evaluator::new(game, 7, episodes, 0.05)?.with_max_steps(max_steps);
+        let random = ev.run_anchor(AnchorKind::Random)?;
+        let human = ev.run_anchor(AnchorKind::Expert)?;
+
+        let train_score = |mode: ExecMode, w: usize| -> Result<f64> {
+            let mut cfg = ExperimentConfig::preset("smoke")?;
+            cfg.game = game.clone();
+            cfg.net = net.clone();
+            cfg.mode = mode;
+            cfg.threads = w;
+            cfg.total_steps = steps;
+            cfg.prepopulate = 1_000.min(steps as usize / 2 + 1);
+            cfg.replay_capacity = 120_000;
+            cfg.target_update_period = 500;
+            cfg.eps = tempo_dqn::config::EpsSchedule {
+                start: 1.0,
+                end: 0.1,
+                decay_steps: steps / 2,
+            };
+            let mut coord = Coordinator::new(cfg, &default_artifact_dir())?.without_eval();
+            coord.run()?;
+            let mut ev2 = Evaluator::new(game, 99, episodes, 0.05)?.with_max_steps(max_steps);
+            Ok(ev2.run(coord.qnet(), steps)?.mean_return)
+        };
+        println!("[suite] {game}: training standard-DQN baseline...");
+        let baseline = train_score(ExecMode::Standard, 1)?;
+        println!("[suite] {game}: training tempo-dqn (both, W={threads})...");
+        let ours = train_score(ExecMode::Both, threads)?;
+        rows.push(GameRow { game: game.clone(), random, human, baseline_dqn: baseline, ours });
+    }
+    print!("{}", table4(&rows));
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Gantt traces: per-thread phase spans for the Figure 2 timing diagrams.
+//!
+//! The paper's Figure 2 shows abstract timing diagrams of how sampling and
+//! training interleave under each execution model. `GanttTrace` records the
+//! real spans so `speed_ablation --gantt` can print the measured version.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Pipeline phases (also used by `PhaseTimers`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    /// Environment simulation + preprocessing on a sampler thread.
+    EnvStep = 0,
+    /// Q-value inference on the device.
+    Infer = 1,
+    /// Minibatch gradient step on the device.
+    Train = 2,
+    /// Target-network sync + staging flush barrier.
+    Sync = 3,
+    /// Replay sampling / batch assembly.
+    Sample = 4,
+    /// Thread idle / waiting at a barrier.
+    Wait = 5,
+}
+
+impl Phase {
+    pub const COUNT: usize = 6;
+    pub const ALL: [Phase; Phase::COUNT] = [
+        Phase::EnvStep,
+        Phase::Infer,
+        Phase::Train,
+        Phase::Sync,
+        Phase::Sample,
+        Phase::Wait,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::EnvStep => "env_step",
+            Phase::Infer => "infer",
+            Phase::Train => "train",
+            Phase::Sync => "sync",
+            Phase::Sample => "sample",
+            Phase::Wait => "wait",
+        }
+    }
+
+    fn glyph(self) -> char {
+        match self {
+            Phase::EnvStep => 'E',
+            Phase::Infer => 'I',
+            Phase::Train => 'T',
+            Phase::Sync => 'S',
+            Phase::Sample => 'B',
+            Phase::Wait => '.',
+        }
+    }
+}
+
+/// One recorded span on one logical thread lane.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub lane: usize,
+    pub phase: Phase,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// Bounded, thread-safe span recorder.
+pub struct GanttTrace {
+    origin: Instant,
+    spans: Mutex<Vec<Span>>,
+    max_spans: usize,
+}
+
+impl GanttTrace {
+    pub fn new(max_spans: usize) -> Self {
+        GanttTrace { origin: Instant::now(), spans: Mutex::new(Vec::new()), max_spans }
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    pub fn record(&self, lane: usize, phase: Phase, start_ns: u64, end_ns: u64) {
+        let mut spans = self.spans.lock().unwrap();
+        if spans.len() < self.max_spans {
+            spans.push(Span { lane, phase, start_ns, end_ns });
+        }
+    }
+
+    /// Time `f` on `lane`, recording the span.
+    pub fn time<T>(&self, lane: usize, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let start = self.now_ns();
+        let out = f();
+        self.record(lane, phase, start, self.now_ns());
+        out
+    }
+
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// ASCII timing diagram: one row per lane, `cols` buckets wide, each
+    /// cell showing the dominant phase in that time bucket (the measured
+    /// analogue of the paper's Figure 2).
+    pub fn render_ascii(&self, cols: usize) -> String {
+        let spans = self.spans();
+        if spans.is_empty() {
+            return String::from("(no spans recorded)\n");
+        }
+        let t_end = spans.iter().map(|s| s.end_ns).max().unwrap().max(1);
+        let lanes = spans.iter().map(|s| s.lane).max().unwrap() + 1;
+        let bucket = (t_end / cols as u64).max(1);
+        // occupancy[lane][col][phase] = ns
+        let mut occ = vec![vec![[0u64; Phase::COUNT]; cols]; lanes];
+        for s in &spans {
+            let c0 = (s.start_ns / bucket).min(cols as u64 - 1) as usize;
+            let c1 = (s.end_ns / bucket).min(cols as u64 - 1) as usize;
+            for c in c0..=c1 {
+                let bs = (c as u64) * bucket;
+                let be = bs + bucket;
+                let overlap = s.end_ns.min(be).saturating_sub(s.start_ns.max(bs));
+                occ[s.lane][c][s.phase as usize] += overlap.max(if c0 == c1 { 1 } else { 0 });
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("time -> ({:.1} ms total, {} lanes)\n", t_end as f64 / 1e6, lanes));
+        for (lane, row) in occ.iter().enumerate() {
+            out.push_str(&format!("lane {lane:>2} |"));
+            for cell in row {
+                let (mut best, mut best_ns) = (None, 0u64);
+                for (p, &ns) in cell.iter().enumerate() {
+                    if ns > best_ns {
+                        best_ns = ns;
+                        best = Some(Phase::ALL[p]);
+                    }
+                }
+                out.push(best.map(|p| p.glyph()).unwrap_or(' '));
+            }
+            out.push_str("|\n");
+        }
+        out.push_str("legend: E=env I=infer T=train S=sync B=batch-assembly .=wait\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_renders() {
+        let g = GanttTrace::new(100);
+        g.record(0, Phase::EnvStep, 0, 50);
+        g.record(0, Phase::Infer, 50, 100);
+        g.record(1, Phase::Train, 0, 100);
+        let ascii = g.render_ascii(10);
+        assert!(ascii.contains("lane  0"));
+        assert!(ascii.contains("lane  1"));
+        assert!(ascii.contains('T'));
+        assert!(ascii.contains('E'));
+    }
+
+    #[test]
+    fn bounded_capacity() {
+        let g = GanttTrace::new(2);
+        for i in 0..10 {
+            g.record(0, Phase::Wait, i, i + 1);
+        }
+        assert_eq!(g.spans().len(), 2);
+    }
+
+    #[test]
+    fn time_closure_spans_monotonic() {
+        let g = GanttTrace::new(10);
+        g.time(3, Phase::Sample, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        let spans = g.spans();
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].end_ns > spans[0].start_ns);
+        assert_eq!(spans[0].lane, 3);
+    }
+
+    #[test]
+    fn empty_render() {
+        let g = GanttTrace::new(10);
+        assert!(g.render_ascii(5).contains("no spans"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics substrate: phase timers, throughput counters, Gantt traces
+//! (Figure 2 reproduction), and CSV emission.
+
+pub mod gantt;
+pub mod timing;
+
+pub use gantt::{GanttTrace, Phase, Span};
+pub use timing::{PhaseTimers, Stopwatch};

@@ -1,0 +1,128 @@
+//! Phase timers: accumulate wall-clock per pipeline phase, thread-safely.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::gantt::Phase;
+
+/// Accumulated nanoseconds + call counts per phase.
+#[derive(Debug, Default)]
+pub struct PhaseTimers {
+    ns: [AtomicU64; Phase::COUNT],
+    calls: [AtomicU64; Phase::COUNT],
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, phase: Phase, ns: u64) {
+        self.ns[phase as usize].fetch_add(ns, Ordering::Relaxed);
+        self.calls[phase as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Time `f`, attributing its duration to `phase`.
+    pub fn time<T>(&self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(phase, t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    pub fn total_ns(&self, phase: Phase) -> u64 {
+        self.ns[phase as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn calls(&self, phase: Phase) -> u64 {
+        self.calls[phase as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self, phase: Phase) -> f64 {
+        let calls = self.calls(phase);
+        if calls == 0 {
+            return 0.0;
+        }
+        self.total_ns(phase) as f64 / calls as f64 / 1_000.0
+    }
+
+    pub fn reset(&self) {
+        for i in 0..Phase::COUNT {
+            self.ns[i].store(0, Ordering::Relaxed);
+            self.calls[i].store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// One summary line per phase with any activity.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for phase in Phase::ALL {
+            let calls = self.calls(phase);
+            if calls == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{:<12} calls {:>9}  total {:>9.3}s  mean {:>9.1}us\n",
+                phase.name(),
+                calls,
+                self.total_ns(phase) as f64 / 1e9,
+                self.mean_us(phase),
+            ));
+        }
+        out
+    }
+}
+
+/// Simple scoped stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.0.elapsed().as_nanos() as u64
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_phase() {
+        let t = PhaseTimers::new();
+        t.record(Phase::EnvStep, 1000);
+        t.record(Phase::EnvStep, 3000);
+        t.record(Phase::Train, 500);
+        assert_eq!(t.total_ns(Phase::EnvStep), 4000);
+        assert_eq!(t.calls(Phase::EnvStep), 2);
+        assert!((t.mean_us(Phase::EnvStep) - 2.0).abs() < 1e-9);
+        assert_eq!(t.calls(Phase::Infer), 0);
+        let rep = t.report();
+        assert!(rep.contains("env_step"));
+        assert!(!rep.contains("infer"));
+    }
+
+    #[test]
+    fn time_closure() {
+        let t = PhaseTimers::new();
+        let x = t.time(Phase::Sync, || 41 + 1);
+        assert_eq!(x, 42);
+        assert_eq!(t.calls(Phase::Sync), 1);
+        assert!(t.total_ns(Phase::Sync) > 0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let t = PhaseTimers::new();
+        t.record(Phase::Train, 10);
+        t.reset();
+        assert_eq!(t.calls(Phase::Train), 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Replay memory substrate.
+//!
+//! Memory-efficient DQN replay: stores single 84x84 uint8 frames (not
+//! stacked states) and reconstructs 4-frame stacks at sample time, like the
+//! original DQN's 1M-frame buffer. Multiple environment streams feed one
+//! globally-shared memory; frame chaining is kept per stream so stacks
+//! never mix frames from different simulators, while *sampling* is uniform
+//! over all transitions in all streams (the paper's "globally shared replay
+//! memory ... fully deterministic order" — unlike Stooke & Abbeel's
+//! statically partitioned workers, a sample here may come from any stream).
+//!
+//! `staging` holds the per-thread temporary buffers Concurrent Training
+//! uses so the replay contents never change during a training window
+//! (paper §3: flush only when the threads are synchronized).
+
+pub mod ring;
+pub mod staging;
+
+pub use ring::ReplayMemory;
+pub use staging::{StagedTransition, StagingBuffer};

@@ -1,0 +1,344 @@
+//! Frame-chained ring-buffer replay memory with stacked reconstruction.
+//!
+//! Storage layout per stream (one stream per environment instance):
+//!   slot t: frame f_t (newest plane of state s_t), action a_t, clipped
+//!           reward r_t, done_t, start_t (f_t begins an episode).
+//!
+//! The stacked state s_t = frames ending at slot t; frames from before the
+//! episode start are replaced by replicating the episode's first frame
+//! (exactly what AtariEnv::reset does to its history). The successor state
+//! s'_t ends at slot t+1; when done_t the bootstrap is masked by `done`, so
+//! the (new-episode) successor content is irrelevant but still well-formed.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::TrainBatch;
+use crate::util::rng::Rng;
+
+struct Stream {
+    frames: Vec<u8>, // cap * frame_size
+    actions: Vec<u8>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    starts: Vec<bool>,
+    cap: usize,
+    next: usize,
+    len: usize,
+}
+
+impl Stream {
+    fn new(cap: usize, frame_size: usize) -> Self {
+        Stream {
+            frames: vec![0; cap * frame_size],
+            actions: vec![0; cap],
+            rewards: vec![0.0; cap],
+            dones: vec![false; cap],
+            starts: vec![false; cap],
+            cap,
+            next: 0,
+            len: 0,
+        }
+    }
+
+    /// Physical slot of logical index l (0 = oldest valid).
+    fn phys(&self, l: usize) -> usize {
+        debug_assert!(l < self.len);
+        (self.next + self.cap - self.len + l) % self.cap
+    }
+
+    /// Number of sampleable transitions (needs `stack-1` history slots and
+    /// one successor slot).
+    fn valid(&self, stack: usize) -> usize {
+        self.len.saturating_sub(stack.max(1))
+    }
+}
+
+pub struct ReplayMemory {
+    streams: Vec<Stream>,
+    frame_size: usize,
+    stack: usize,
+    rng: Rng,
+    pushes: u64,
+}
+
+impl ReplayMemory {
+    /// `capacity` frames total, split evenly over `n_streams` environment
+    /// streams. `frame_size` = bytes per plane (84*84), `stack` = 4.
+    pub fn new(capacity: usize, n_streams: usize, frame_size: usize, stack: usize, seed: u64) -> Result<Self> {
+        if n_streams == 0 {
+            bail!("replay needs at least one stream");
+        }
+        let per = capacity / n_streams;
+        if per < stack + 2 {
+            bail!("capacity {capacity} too small for {n_streams} streams (need >= {} per stream)", stack + 2);
+        }
+        Ok(ReplayMemory {
+            streams: (0..n_streams).map(|_| Stream::new(per, frame_size)).collect(),
+            frame_size,
+            stack,
+            rng: Rng::stream(seed, 0x5245504c), // "REPL"
+            pushes: 0,
+        })
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.streams.iter().map(|s| s.len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.streams.iter().map(|s| s.cap).sum()
+    }
+
+    /// Total transitions currently eligible for sampling.
+    pub fn sampleable(&self) -> usize {
+        self.streams.iter().map(|s| s.valid(self.stack)).sum()
+    }
+
+    /// Append one transition to `stream`.
+    pub fn push(&mut self, stream: usize, frame: &[u8], action: u8, reward: f32, done: bool, start: bool) {
+        debug_assert_eq!(frame.len(), self.frame_size);
+        let st = &mut self.streams[stream];
+        let i = st.next;
+        st.frames[i * self.frame_size..(i + 1) * self.frame_size].copy_from_slice(frame);
+        st.actions[i] = action;
+        st.rewards[i] = reward;
+        st.dones[i] = done;
+        st.starts[i] = start;
+        st.next = (st.next + 1) % st.cap;
+        st.len = (st.len + 1).min(st.cap);
+        self.pushes += 1;
+    }
+
+    /// Write the stacked state ending at logical slot `l` of `stream` into
+    /// `out`, channel-last interleaved (`out[pixel*stack + c]`), replicating
+    /// the episode's first frame past episode starts.
+    fn state_into(&self, stream: usize, l: usize, out: &mut [u8]) {
+        let st = &self.streams[stream];
+        debug_assert_eq!(out.len(), self.frame_size * self.stack);
+        // Walk back from l, honoring episode starts.
+        let mut slots = vec![0usize; self.stack];
+        let mut cur = l;
+        for c in (0..self.stack).rev() {
+            slots[c] = st.phys(cur);
+            let at_start = st.starts[st.phys(cur)];
+            if cur > 0 && !at_start {
+                cur -= 1;
+            }
+            // else: replicate this frame for all older channels.
+        }
+        for (c, &slot) in slots.iter().enumerate() {
+            let plane = &st.frames[slot * self.frame_size..(slot + 1) * self.frame_size];
+            for (i, &p) in plane.iter().enumerate() {
+                out[i * self.stack + c] = p;
+            }
+        }
+    }
+
+    /// Sample a uniform minibatch into `batch` (buffers are resized).
+    /// Returns an error until enough transitions are stored.
+    pub fn sample(&mut self, batch_size: usize, batch: &mut TrainBatch) -> Result<()> {
+        let total = self.sampleable();
+        if total == 0 {
+            bail!("replay has no sampleable transitions yet (len {})", self.len());
+        }
+        let state_bytes = self.frame_size * self.stack;
+        batch.states.resize(batch_size * state_bytes, 0);
+        batch.next_states.resize(batch_size * state_bytes, 0);
+        batch.actions.resize(batch_size, 0);
+        batch.rewards.resize(batch_size, 0.0);
+        batch.dones.resize(batch_size, 0.0);
+
+        for b in 0..batch_size {
+            // Pick a global transition index, then locate its stream.
+            let mut k = self.rng.below_usize(total);
+            let mut stream = 0;
+            for (si, s) in self.streams.iter().enumerate() {
+                let v = s.valid(self.stack);
+                if k < v {
+                    stream = si;
+                    break;
+                }
+                k -= v;
+            }
+            // Logical slot: skip the first stack-1 slots, keep successor room.
+            let l = self.stack - 1 + k;
+            let st = &self.streams[stream];
+            debug_assert!(l + 1 < st.len);
+            let phys = st.phys(l);
+            batch.actions[b] = st.actions[phys] as i32;
+            batch.rewards[b] = st.rewards[phys];
+            batch.dones[b] = if st.dones[phys] { 1.0 } else { 0.0 };
+            let done = st.dones[phys];
+            self.state_into(stream, l, &mut batch.states[b * state_bytes..(b + 1) * state_bytes]);
+            if done {
+                // Successor is masked by `done`; reuse s (in-distribution).
+                batch.next_states[b * state_bytes..(b + 1) * state_bytes]
+                    .copy_from_slice(&batch.states[b * state_bytes..(b + 1) * state_bytes]);
+            } else {
+                self.state_into(stream, l + 1, &mut batch.next_states[b * state_bytes..(b + 1) * state_bytes]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Reconstruct the state ending at the *most recent* slot of `stream`
+    /// (testing / debugging).
+    pub fn latest_state(&self, stream: usize) -> Option<Vec<u8>> {
+        let st = &self.streams[stream];
+        if st.len < 1 {
+            return None;
+        }
+        let mut out = vec![0u8; self.frame_size * self.stack];
+        self.state_into(stream, st.len - 1, &mut out);
+        Some(out)
+    }
+
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FS: usize = 16; // tiny frames for tests
+    const STACK: usize = 4;
+
+    fn frame(v: u8) -> Vec<u8> {
+        vec![v; FS]
+    }
+
+    fn mk(cap: usize, streams: usize) -> ReplayMemory {
+        ReplayMemory::new(cap, streams, FS, STACK, 7).unwrap()
+    }
+
+    #[test]
+    fn rejects_tiny_capacity() {
+        assert!(ReplayMemory::new(4, 1, FS, STACK, 0).is_err());
+        assert!(ReplayMemory::new(100, 0, FS, STACK, 0).is_err());
+    }
+
+    #[test]
+    fn stacks_replicate_at_episode_start() {
+        let mut r = mk(64, 1);
+        r.push(0, &frame(10), 0, 0.0, false, true);
+        r.push(0, &frame(20), 1, 0.0, false, false);
+        let s = r.latest_state(0).unwrap();
+        // Channels oldest..newest = [10, 10, 10, 20] replicated past start.
+        assert_eq!(s[0 * STACK], 10);
+        assert_eq!(s[1], 10);
+        assert_eq!(s[2], 10);
+        assert_eq!(s[3], 20);
+    }
+
+    #[test]
+    fn stacks_are_consecutive_frames() {
+        let mut r = mk(64, 1);
+        for (i, v) in [1u8, 2, 3, 4, 5, 6].iter().enumerate() {
+            r.push(0, &frame(*v), 0, 0.0, false, i == 0);
+        }
+        let s = r.latest_state(0).unwrap();
+        assert_eq!([s[0], s[1], s[2], s[3]], [3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn sample_masks_done_and_matches_chain() {
+        let mut r = mk(64, 1);
+        // Episode A: frames 1..=6, done at 6. Episode B: frames 11..=16.
+        for v in 1u8..=6 {
+            r.push(0, &frame(v), v, (v % 2) as f32, v == 6, v == 1);
+        }
+        for v in 11u8..=16 {
+            r.push(0, &frame(v), v, 0.5, false, v == 11);
+        }
+        let mut batch = TrainBatch::default();
+        r.sample(64, &mut batch).unwrap();
+        let sb = FS * STACK;
+        for b in 0..64 {
+            let s = &batch.states[b * sb..(b + 1) * sb];
+            let ns = &batch.next_states[b * sb..(b + 1) * sb];
+            let newest = s[3];
+            // Action/reward recorded at the newest frame's slot.
+            assert_eq!(batch.actions[b] as u8, newest);
+            if batch.dones[b] == 1.0 {
+                assert_eq!(newest, 6);
+                assert_eq!(ns, s, "done successor masked to s");
+            } else if newest < 6 {
+                // In-episode successor: next frame value is newest+1.
+                assert_eq!(ns[3], newest + 1);
+                // And channels shift by one.
+                assert_eq!(&ns[..3], &s[1..4]);
+            } else {
+                assert!(newest >= 11 && newest < 16);
+                assert_eq!(ns[3], newest + 1);
+            }
+            // No stack mixes the two episodes.
+            let chans = [s[0], s[1], s[2], s[3]];
+            assert!(chans.iter().all(|&c| c <= 6) || chans.iter().all(|&c| c >= 11),
+                    "mixed episodes in stack: {chans:?}");
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut r = mk(8, 1); // cap 8
+        for v in 0..40u8 {
+            r.push(0, &frame(v), v, 0.0, false, v == 0);
+        }
+        assert_eq!(r.len(), 8);
+        let s = r.latest_state(0).unwrap();
+        assert_eq!([s[0], s[1], s[2], s[3]], [36, 37, 38, 39]);
+        // Sampling never touches overwritten frames.
+        let mut batch = TrainBatch::default();
+        r.sample(32, &mut batch).unwrap();
+        for b in 0..32 {
+            let newest = batch.states[b * FS * STACK + 3];
+            assert!((32..39).contains(&newest), "newest {newest}");
+        }
+    }
+
+    #[test]
+    fn streams_never_mix() {
+        let mut r = mk(128, 2);
+        for v in 0..20u8 {
+            r.push(0, &frame(v), 0, 0.0, false, v == 0);
+            r.push(1, &frame(100 + v), 1, 0.0, false, v == 0);
+        }
+        let mut batch = TrainBatch::default();
+        r.sample(64, &mut batch).unwrap();
+        let sb = FS * STACK;
+        for b in 0..64 {
+            let s = &batch.states[b * sb..(b + 1) * sb];
+            let chans = [s[0], s[1], s[2], s[3]];
+            assert!(chans.iter().all(|&c| c < 100) || chans.iter().all(|&c| c >= 100),
+                    "streams mixed: {chans:?}");
+            // Action identifies the stream.
+            let is_s1 = chans[0] >= 100;
+            assert_eq!(batch.actions[b], is_s1 as i32);
+        }
+    }
+
+    #[test]
+    fn sample_before_ready_errors() {
+        let mut r = mk(64, 1);
+        let mut batch = TrainBatch::default();
+        assert!(r.sample(4, &mut batch).is_err());
+        for v in 0..3u8 {
+            r.push(0, &frame(v), 0, 0.0, false, v == 0);
+        }
+        assert!(r.sample(4, &mut batch).is_err(), "needs stack+1 slots");
+        for v in 3..8u8 {
+            r.push(0, &frame(v), 0, 0.0, false, false);
+        }
+        assert!(r.sample(4, &mut batch).is_ok());
+    }
+}

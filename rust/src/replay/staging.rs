@@ -1,0 +1,102 @@
+//! Per-thread staging buffers for Concurrent Training.
+//!
+//! Paper §3: "To avoid a race condition between the threads, we temporarily
+//! buffer the experiences collected by the sampler thread and transfer them
+//! to the replay memory D only when the threads are synchronized. This
+//! ensures that D does not change during training, which would produce
+//! non-deterministic results."
+//!
+//! Each sampler thread owns one `StagingBuffer` bound to its replay stream;
+//! the main thread flushes all buffers at the target-sync barrier.
+
+use super::ring::ReplayMemory;
+
+/// One buffered transition (frame + scalars), pending flush.
+#[derive(Clone, Debug)]
+pub struct StagedTransition {
+    pub frame: Vec<u8>,
+    pub action: u8,
+    pub reward: f32,
+    pub done: bool,
+    pub start: bool,
+}
+
+#[derive(Default)]
+pub struct StagingBuffer {
+    items: Vec<StagedTransition>,
+    /// Total transitions ever staged through this buffer.
+    staged_total: u64,
+}
+
+impl StagingBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, frame: &[u8], action: u8, reward: f32, done: bool, start: bool) {
+        self.items.push(StagedTransition {
+            frame: frame.to_vec(),
+            action,
+            reward,
+            done,
+            start,
+        });
+        self.staged_total += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn staged_total(&self) -> u64 {
+        self.staged_total
+    }
+
+    /// Move every buffered transition into replay `stream`, preserving
+    /// order (the stream's frame chain stays contiguous).
+    pub fn flush_into(&mut self, replay: &mut ReplayMemory, stream: usize) {
+        for t in self.items.drain(..) {
+            replay.push(stream, &t.frame, t.action, t.reward, t.done, t.start);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flush_preserves_order_and_empties() {
+        let mut replay = ReplayMemory::new(64, 1, 4, 4, 0).unwrap();
+        let mut staging = StagingBuffer::new();
+        for v in 0..10u8 {
+            staging.push(&[v; 4], v, v as f32, false, v == 0);
+        }
+        assert_eq!(staging.len(), 10);
+        assert_eq!(replay.len(), 0);
+        staging.flush_into(&mut replay, 0);
+        assert!(staging.is_empty());
+        assert_eq!(replay.len(), 10);
+        assert_eq!(staging.staged_total(), 10);
+        let s = replay.latest_state(0).unwrap();
+        assert_eq!(s[3], 9, "newest channel (pixel 0) holds last staged frame");
+    }
+
+    #[test]
+    fn replay_unchanged_until_flush() {
+        let mut replay = ReplayMemory::new(64, 1, 4, 4, 0).unwrap();
+        for v in 0..8u8 {
+            replay.push(0, &[v; 4], 0, 0.0, false, v == 0);
+        }
+        let before = replay.pushes();
+        let mut staging = StagingBuffer::new();
+        staging.push(&[99; 4], 1, 1.0, false, false);
+        assert_eq!(replay.pushes(), before, "staging must not touch replay");
+        staging.flush_into(&mut replay, 0);
+        assert_eq!(replay.pushes(), before + 1);
+    }
+}

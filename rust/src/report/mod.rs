@@ -1,0 +1,213 @@
+//! Report formatting: regenerate the paper's tables from measured or
+//! simulated data in the same row/column layout the paper prints.
+
+use std::collections::BTreeMap;
+
+use crate::config::ExecMode;
+use crate::eval::{normalized_score, EvalPoint};
+
+/// Runtime grid indexed by (mode, threads) in hours — the Table 1 payload.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeGrid {
+    cells: BTreeMap<(String, usize), (f64, f64)>, // (mean_h, std_h)
+    pub threads: Vec<usize>,
+}
+
+impl RuntimeGrid {
+    pub fn new(threads: &[usize]) -> RuntimeGrid {
+        RuntimeGrid { cells: BTreeMap::new(), threads: threads.to_vec() }
+    }
+
+    pub fn set(&mut self, mode: ExecMode, threads: usize, mean_h: f64, std_h: f64) {
+        self.cells.insert((mode.name().to_string(), threads), (mean_h, std_h));
+    }
+
+    pub fn get(&self, mode: ExecMode, threads: usize) -> Option<(f64, f64)> {
+        self.cells.get(&(mode.name().to_string(), threads)).copied()
+    }
+
+    fn baseline(&self) -> Option<f64> {
+        self.get(ExecMode::Standard, 1).map(|(m, _)| m)
+    }
+
+    /// Table 1: measured runtimes (hours), mean ± std.
+    pub fn table1(&self) -> String {
+        let mut out = String::from(
+            "Table 1: runtimes (hours) per execution mode and sampler threads\n",
+        );
+        out.push_str(&format!(
+            "{:>8} {:>16} {:>16} {:>16} {:>16}\n",
+            "Threads", "Standard", "Concurrent", "Synchronized", "Both"
+        ));
+        for &w in &self.threads {
+            out.push_str(&format!("{w:>8}"));
+            for mode in ExecMode::ALL {
+                match self.get(mode, w) {
+                    Some((m, s)) => out.push_str(&format!(" {:>9.2} ± {:<4.2}", m, s)),
+                    None => out.push_str(&format!(" {:>16}", "—")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Table 2: percentage of the standard W=1 runtime.
+    pub fn table2(&self) -> String {
+        let base = self.baseline().unwrap_or(1.0);
+        let mut out = String::from("Table 2: runtime as % of DQN (standard, 1 thread)\n");
+        out.push_str(&format!(
+            "{:>8} {:>10} {:>10} {:>10} {:>10}\n",
+            "Threads", "Std.", "Conc.", "Sync.", "Both"
+        ));
+        for &w in &self.threads {
+            out.push_str(&format!("{w:>8}"));
+            for mode in ExecMode::ALL {
+                match self.get(mode, w) {
+                    Some((m, _)) => out.push_str(&format!(" {:>9.1}%", 100.0 * m / base)),
+                    None => out.push_str(&format!(" {:>10}", "—")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Table 3: speedup relative to the standard W=1 runtime.
+    pub fn table3(&self) -> String {
+        let base = self.baseline().unwrap_or(1.0);
+        let mut out = String::from("Table 3: speedup relative to DQN (standard, 1 thread)\n");
+        out.push_str(&format!(
+            "{:>8} {:>10} {:>10} {:>10} {:>10}\n",
+            "Threads", "Std.", "Conc.", "Sync.", "Both"
+        ));
+        for &w in &self.threads {
+            out.push_str(&format!("{w:>8}"));
+            for mode in ExecMode::ALL {
+                match self.get(mode, w) {
+                    Some((m, _)) => out.push_str(&format!(" {:>9.2}x", base / m)),
+                    None => out.push_str(&format!(" {:>10}", "—")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Headline speedup (standard-1 vs best cell), like the abstract's
+    /// "25 hours to just 9 hours".
+    pub fn headline(&self) -> Option<(f64, f64, f64)> {
+        let base = self.baseline()?;
+        let best = self
+            .cells
+            .values()
+            .map(|(m, _)| *m)
+            .fold(f64::INFINITY, f64::min);
+        Some((base, best, base / best))
+    }
+}
+
+/// One game row of the Table 4 analog.
+#[derive(Clone, Debug)]
+pub struct GameRow {
+    pub game: String,
+    pub random: EvalPoint,
+    pub human: EvalPoint,
+    pub baseline_dqn: f64,
+    pub ours: f64,
+}
+
+impl GameRow {
+    pub fn norm_baseline(&self) -> f64 {
+        normalized_score(self.baseline_dqn, self.random.mean_return, self.human.mean_return)
+    }
+
+    pub fn norm_ours(&self) -> f64 {
+        normalized_score(self.ours, self.random.mean_return, self.human.mean_return)
+    }
+}
+
+/// Table 4 analog: per-game scores with human-normalized percentages.
+pub fn table4(rows: &[GameRow]) -> String {
+    let mut out = String::from(
+        "Table 4 (suite analog): Random / Human-proxy / standard-DQN / tempo-dqn\n",
+    );
+    out.push_str(&format!(
+        "{:<10} {:>9} {:>9} {:>9} {:>9} {:>11} {:>11}\n",
+        "Game", "Random", "Human", "DQN", "Ours", "DQN(norm)", "Ours(norm)"
+    ));
+    let mut human_level = 0;
+    let mut beats_baseline = 0;
+    for r in rows {
+        let nb = r.norm_baseline();
+        let no = r.norm_ours();
+        if no >= 75.0 {
+            human_level += 1;
+        }
+        if r.ours >= r.baseline_dqn {
+            beats_baseline += 1;
+        }
+        out.push_str(&format!(
+            "{:<10} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>10.1}% {:>10.1}%\n",
+            r.game, r.random.mean_return, r.human.mean_return, r.baseline_dqn, r.ours, nb, no
+        ));
+    }
+    out.push_str(&format!(
+        "human-level (>=75% norm): {human_level}/{}; ours >= baseline: {beats_baseline}/{}\n",
+        rows.len(),
+        rows.len()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> RuntimeGrid {
+        let mut g = RuntimeGrid::new(&[1, 8]);
+        g.set(ExecMode::Standard, 1, 25.08, 0.52);
+        g.set(ExecMode::Concurrent, 1, 20.64, 0.29);
+        g.set(ExecMode::Standard, 8, 16.92, 0.23);
+        g.set(ExecMode::Both, 8, 9.02, 0.16);
+        g
+    }
+
+    #[test]
+    fn table1_formats_cells_and_gaps() {
+        let t = grid().table1();
+        assert!(t.contains("25.08"));
+        assert!(t.contains("9.02"));
+        assert!(t.contains("—"), "{t}");
+    }
+
+    #[test]
+    fn table2_and_3_are_relative() {
+        let g = grid();
+        let t2 = g.table2();
+        assert!(t2.contains("100.0%"), "{t2}");
+        let t3 = g.table3();
+        assert!(t3.contains("1.00x"));
+        assert!(t3.contains("2.78x"), "{t3}");
+    }
+
+    #[test]
+    fn headline_matches_paper() {
+        let (base, best, speedup) = grid().headline().unwrap();
+        assert_eq!(base, 25.08);
+        assert_eq!(best, 9.02);
+        assert!((speedup - 2.78).abs() < 0.01);
+    }
+
+    #[test]
+    fn table4_counts_thresholds() {
+        let ep = |m| EvalPoint { step: 0, mean_return: m, std_return: 0.0, episodes: 30 };
+        let rows = vec![
+            GameRow { game: "pong".into(), random: ep(-20.7), human: ep(9.3), baseline_dqn: 18.9, ours: 18.7 },
+            GameRow { game: "x".into(), random: ep(0.0), human: ep(100.0), baseline_dqn: 10.0, ours: 80.0 },
+        ];
+        let t = table4(&rows);
+        assert!(t.contains("human-level (>=75% norm): 2/2"), "{t}");
+        assert!(t.contains("ours >= baseline: 1/2"), "{t}");
+    }
+}

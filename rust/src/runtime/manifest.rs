@@ -1,0 +1,299 @@
+//! Artifact manifest: the ABI contract emitted by `python/compile/aot.py`.
+//!
+//! `manifest.json` describes, per network config, the flat parameter count,
+//! frame shape, the HLO entry points with their input signatures, and the
+//! deterministic init-parameter blob. The Rust runtime refuses to run if the
+//! manifest disagrees with what the coordinator expects — shape errors
+//! surface at load time, not inside a PJRT call.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of one executable input (mirrors the numpy dtype strings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U8,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "float32" => Dtype::F32,
+            "uint8" => Dtype::U8,
+            "int32" => Dtype::I32,
+            other => bail!("unsupported dtype in manifest: {other}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 => 1,
+        }
+    }
+}
+
+/// Input signature of one lowered entry point.
+#[derive(Clone, Debug)]
+pub struct InputSig {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl InputSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+}
+
+/// One HLO entry point (infer_bN / train_bN / train_double_bN).
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub file: PathBuf,
+    pub inputs: Vec<InputSig>,
+}
+
+/// One parameter tensor in the flat layout (diagnostics / checkpointing).
+#[derive(Clone, Debug)]
+pub struct ParamTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Everything the runtime needs to know about one network config.
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub name: String,
+    pub param_count: usize,
+    pub frame: [usize; 3],
+    pub actions: usize,
+    pub gamma: f64,
+    pub init_params_file: PathBuf,
+    pub param_spec: Vec<ParamTensor>,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl NetSpec {
+    pub fn frame_elems(&self) -> usize {
+        self.frame.iter().product()
+    }
+
+    /// Infer batch sizes available in the artifacts, ascending.
+    pub fn infer_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix("infer_b").and_then(|b| b.parse().ok()))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Train batch sizes available (non-double), ascending.
+    pub fn train_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix("train_b").and_then(|b| b.parse().ok()))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("config {:?} has no entry {name:?}; available: {:?}",
+                                   self.name, self.entries.keys().collect::<Vec<_>>()))
+    }
+}
+
+/// The parsed manifest for the whole artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: usize,
+    pub actions: usize,
+    pub configs: BTreeMap<String, NetSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(dir, &json)
+    }
+
+    pub fn from_json(dir: &Path, json: &Json) -> Result<Manifest> {
+        let version = json.at(&["version"])?.as_usize().ok_or_else(|| anyhow!("bad version"))?;
+        if version != 2 {
+            bail!("manifest version {version} unsupported (expected 2); rebuild artifacts");
+        }
+        let actions = json.at(&["actions"])?.as_usize().ok_or_else(|| anyhow!("bad actions"))?;
+        let mut configs = BTreeMap::new();
+        for (name, c) in json.at(&["configs"])?.as_obj().ok_or_else(|| anyhow!("bad configs"))? {
+            configs.insert(name.clone(), parse_netspec(dir, name, c)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), version, actions, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&NetSpec> {
+        self.configs.get(name).ok_or_else(|| {
+            anyhow!("no config {name:?} in manifest; available: {:?}",
+                    self.configs.keys().collect::<Vec<_>>())
+        })
+    }
+
+    /// Read the deterministic init-parameter blob for a config.
+    pub fn load_init_params(&self, spec: &NetSpec) -> Result<Vec<f32>> {
+        let path = self.dir.join(&spec.init_params_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != spec.param_count * 4 {
+            bail!("{}: expected {} bytes ({} f32 params), got {}",
+                  path.display(), spec.param_count * 4, spec.param_count, bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn parse_netspec(dir: &Path, name: &str, c: &Json) -> Result<NetSpec> {
+    let param_count = c.at(&["param_count"])?.as_usize().ok_or_else(|| anyhow!("bad param_count"))?;
+    let frame_v = c.at(&["frame"])?.as_f64_vec().ok_or_else(|| anyhow!("bad frame"))?;
+    if frame_v.len() != 3 {
+        bail!("config {name}: frame must have 3 dims");
+    }
+    let frame = [frame_v[0] as usize, frame_v[1] as usize, frame_v[2] as usize];
+    let actions = c.at(&["actions"])?.as_usize().ok_or_else(|| anyhow!("bad actions"))?;
+    let gamma = c.at(&["gamma"])?.as_f64().ok_or_else(|| anyhow!("bad gamma"))?;
+    let init = c.at(&["init_params"])?.as_str().ok_or_else(|| anyhow!("bad init_params"))?;
+
+    let mut param_tensors = Vec::new();
+    for p in c.at(&["param_spec"])?.as_arr().ok_or_else(|| anyhow!("bad param_spec"))? {
+        param_tensors.push(ParamTensor {
+            name: p.at(&["name"])?.as_str().ok_or_else(|| anyhow!("bad name"))?.to_string(),
+            shape: p.at(&["shape"])?.as_f64_vec().ok_or_else(|| anyhow!("bad shape"))?
+                .into_iter().map(|d| d as usize).collect(),
+        });
+    }
+
+    let mut entries = BTreeMap::new();
+    for (ename, e) in c.at(&["entries"])?.as_obj().ok_or_else(|| anyhow!("bad entries"))? {
+        let file = e.at(&["file"])?.as_str().ok_or_else(|| anyhow!("bad file"))?;
+        let mut inputs = Vec::new();
+        for sig in e.at(&["inputs"])?.as_arr().ok_or_else(|| anyhow!("bad inputs"))? {
+            inputs.push(InputSig {
+                dtype: Dtype::parse(sig.at(&["dtype"])?.as_str().ok_or_else(|| anyhow!("bad dtype"))?)?,
+                shape: sig.at(&["shape"])?.as_f64_vec().ok_or_else(|| anyhow!("bad shape"))?
+                    .into_iter().map(|d| d as usize).collect(),
+            });
+        }
+        entries.insert(ename.clone(), Entry { file: dir.join(file), inputs });
+    }
+
+    // Cross-check the flat layout adds up.
+    let total: usize = param_tensors.iter().map(|t| t.shape.iter().product::<usize>()).sum();
+    if total != param_count {
+        bail!("config {name}: param_spec sums to {total}, manifest says {param_count}");
+    }
+
+    Ok(NetSpec {
+        name: name.to_string(),
+        param_count,
+        frame,
+        actions,
+        gamma,
+        init_params_file: PathBuf::from(init),
+        param_spec: param_tensors,
+        entries,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+          "version": 2, "actions": 6,
+          "train_abi": {"inputs": [], "outputs": []},
+          "configs": {
+            "tiny": {
+              "param_count": 10,
+              "frame": [4, 4, 2],
+              "actions": 6,
+              "gamma": 0.99,
+              "init_params": "tiny_init.bin",
+              "init_sha256": "x",
+              "param_spec": [
+                 {"name": "w", "shape": [2, 4]},
+                 {"name": "b", "shape": [2]}
+              ],
+              "entries": {
+                "infer_b1": {"file": "tiny_infer_b1.hlo.txt",
+                  "inputs": [{"dtype": "float32", "shape": [10]},
+                             {"dtype": "uint8", "shape": [1, 4, 4, 2]}]},
+                "infer_b8": {"file": "tiny_infer_b8.hlo.txt",
+                  "inputs": [{"dtype": "float32", "shape": [10]},
+                             {"dtype": "uint8", "shape": [8, 4, 4, 2]}]},
+                "train_b32": {"file": "tiny_train_b32.hlo.txt", "inputs": []}
+              }
+            }
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(Path::new("/art"), &sample_json()).unwrap();
+        let spec = m.config("tiny").unwrap();
+        assert_eq!(spec.param_count, 10);
+        assert_eq!(spec.frame, [4, 4, 2]);
+        assert_eq!(spec.infer_batches(), vec![1, 8]);
+        assert_eq!(spec.train_batches(), vec![32]);
+        let e = spec.entry("infer_b8").unwrap();
+        assert_eq!(e.inputs[1].shape, vec![8, 4, 4, 2]);
+        assert_eq!(e.inputs[1].dtype, Dtype::U8);
+        assert_eq!(e.inputs[1].bytes(), 8 * 4 * 4 * 2);
+        assert!(e.file.starts_with("/art"));
+    }
+
+    #[test]
+    fn rejects_bad_param_sum() {
+        let mut text = sample_json().to_string();
+        text = text.replace("\"param_count\":10", "\"param_count\":11");
+        let json = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(Path::new("/a"), &json).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = sample_json().to_string().replace("\"version\":2", "\"version\":1");
+        let json = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(Path::new("/a"), &json).is_err());
+    }
+
+    #[test]
+    fn missing_config_error_lists_available() {
+        let m = Manifest::from_json(Path::new("/a"), &sample_json()).unwrap();
+        let err = m.config("nope").unwrap_err().to_string();
+        assert!(err.contains("tiny"), "{err}");
+    }
+}

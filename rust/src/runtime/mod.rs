@@ -1,0 +1,36 @@
+//! Runtime layer: loads and executes the AOT-compiled HLO artifacts via the
+//! PJRT CPU client (the "GPU" of the paper's hardware model).
+//!
+//! Pipeline: `python/compile/aot.py` lowers the JAX/Pallas model to HLO text
+//! -> `Manifest` describes the ABI -> `Device` compiles + executes ->
+//! `QNet` owns parameter state and exposes infer / train / sync-target.
+
+pub mod device;
+pub mod manifest;
+pub mod qnet;
+
+pub use device::{BusSnapshot, BusStats, Device};
+pub use manifest::{Dtype, Entry, InputSig, Manifest, NetSpec};
+pub use qnet::{Policy, QNet, SharedLiteral, TrainBatch};
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$TEMPO_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("TEMPO_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Walk up from CWD looking for artifacts/manifest.json (tests run from
+    // target dirs, examples from the repo root).
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! `QNet`: the Q-network runtime — flat parameter state + compiled entries.
+//!
+//! Owns the four flat parameter buffers (theta, theta_minus, RMSProp g/s) and
+//! exposes exactly the operations the coordinator needs:
+//!
+//! * `infer`        — batched Q-values under theta or theta_minus
+//! * `train_step`   — one full minibatch update (TD loss + centered RMSProp),
+//!                    executed by the AOT-compiled `train_b*` artifact
+//! * `sync_target`  — theta_minus <- theta (the target-network update)
+//!
+//! Concurrency model: theta_minus is an immutable snapshot swapped only at
+//! sync points (`RwLock<Arc<..>>`), so W sampler threads read it without
+//! contending with the trainer; the mutable train state (theta, g, s) lives
+//! behind its own mutex owned by the trainer thread. This is precisely the
+//! decoupling that makes the paper's Concurrent Training race-free.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, bail, Result};
+use xla::{ElementType, Literal};
+
+use super::device::Device;
+use super::manifest::{Dtype, Manifest, NetSpec};
+
+/// `xla::Literal` wrapper that may be shared across threads.
+///
+/// # Safety
+/// The literal is host memory that is never mutated after construction and
+/// is only *read* (uploaded) by `Device::execute`, which serializes all XLA
+/// calls behind the device mutex.
+pub struct SharedLiteral(pub Literal);
+unsafe impl Send for SharedLiteral {}
+unsafe impl Sync for SharedLiteral {}
+
+struct TrainState {
+    theta: Literal,
+    g: Literal,
+    s: Literal,
+}
+
+/// One training minibatch in host memory (assembled by the replay sampler).
+#[derive(Clone, Debug, Default)]
+pub struct TrainBatch {
+    pub states: Vec<u8>,
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>,
+    pub next_states: Vec<u8>,
+    pub dones: Vec<f32>,
+}
+
+/// Which parameter set drives action selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Standard DQN: act with the online network theta.
+    Theta,
+    /// Concurrent Training: act with the target network theta_minus.
+    ThetaMinus,
+}
+
+pub struct QNet {
+    device: Arc<Device>,
+    spec: NetSpec,
+    train_key: String,
+    train_batch: usize,
+    infer_batches: Vec<usize>,
+    theta_minus: RwLock<Arc<SharedLiteral>>,
+    train: Mutex<TrainState>,
+    pub train_steps: AtomicU64,
+    pub target_syncs: AtomicU64,
+}
+
+// Safety: every Literal inside is reachable only through the RwLock/Mutex
+// above; all XLA calls are serialized by Device's mutex. See device.rs.
+unsafe impl Send for QNet {}
+unsafe impl Sync for QNet {}
+
+fn f32_literal(v: &[f32]) -> Literal {
+    Literal::vec1(v)
+}
+
+fn zeros_f32(n: usize) -> Literal {
+    // create_from_shape zero-initializes.
+    Literal::create_from_shape(ElementType::F32.primitive_type(), &[n])
+}
+
+impl QNet {
+    /// Load a network config from the manifest: compiles every infer entry
+    /// plus the chosen train entry, and initializes parameters from the
+    /// deterministic blob the artifacts ship.
+    pub fn load(
+        device: Arc<Device>,
+        manifest: &Manifest,
+        config: &str,
+        double: bool,
+        train_batch: usize,
+    ) -> Result<QNet> {
+        let spec = manifest.config(config)?.clone();
+        let train_key = if double {
+            format!("train_double_b{train_batch}")
+        } else {
+            format!("train_b{train_batch}")
+        };
+
+        // Validate ABI shapes before compiling anything.
+        let train_entry = spec.entry(&train_key)?;
+        if train_entry.inputs.len() != 10 {
+            bail!("train entry {train_key} must have 10 inputs (see manifest train_abi)");
+        }
+        for idx in 0..4 {
+            if train_entry.inputs[idx].shape != [spec.param_count]
+                || train_entry.inputs[idx].dtype != Dtype::F32
+            {
+                bail!("train entry input {idx} must be f32[{}]", spec.param_count);
+            }
+        }
+
+        let infer_batches = spec.infer_batches();
+        if infer_batches.is_empty() {
+            bail!("config {config:?} has no infer entries");
+        }
+        for &b in &infer_batches {
+            let key = format!("infer_b{b}");
+            device.load_hlo(&qkey(&spec.name, &key), &spec.entry(&key)?.file)?;
+        }
+        device.load_hlo(&qkey(&spec.name, &train_key), &train_entry.file)?;
+
+        let init = manifest.load_init_params(&spec)?;
+        let theta = f32_literal(&init);
+        let theta_minus = theta.clone();
+        let p = spec.param_count;
+
+        Ok(QNet {
+            device,
+            train_batch,
+            infer_batches,
+            theta_minus: RwLock::new(Arc::new(SharedLiteral(theta_minus))),
+            train: Mutex::new(TrainState { theta, g: zeros_f32(p), s: zeros_f32(p) }),
+            train_key,
+            spec,
+            train_steps: AtomicU64::new(0),
+            target_syncs: AtomicU64::new(0),
+        })
+    }
+
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
+    }
+
+    pub fn device(&self) -> &Arc<Device> {
+        &self.device
+    }
+
+    pub fn train_batch(&self) -> usize {
+        self.train_batch
+    }
+
+    /// Smallest compiled infer batch that fits `n` states.
+    pub fn infer_batch_for(&self, n: usize) -> Result<usize> {
+        self.infer_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                anyhow!("no infer entry fits batch {n}; available: {:?}", self.infer_batches)
+            })
+    }
+
+    fn states_literal(&self, states: &[u8], batch: usize) -> Result<Literal> {
+        let [h, w, c] = self.spec.frame;
+        if states.len() != batch * h * w * c {
+            bail!("states buffer has {} bytes, expected {}x{}x{}x{}",
+                  states.len(), batch, h, w, c);
+        }
+        Literal::create_from_shape_and_untyped_data(ElementType::U8, &[batch, h, w, c], states)
+            .map_err(|e| anyhow!("states literal: {e}"))
+    }
+
+    /// Batched Q-values for `n` stacked frames (`n * H*W*C` bytes).
+    ///
+    /// If `n` is smaller than the smallest compiled batch, the input is
+    /// zero-padded and the padding rows are dropped from the output.
+    /// Returns a row-major `[n, actions]` vector.
+    pub fn infer(&self, policy: Policy, states: &[u8], n: usize) -> Result<Vec<f32>> {
+        let [h, w, c] = self.spec.frame;
+        let frame = h * w * c;
+        if states.len() != n * frame {
+            bail!("infer: got {} bytes for {} states of {} bytes", states.len(), n, frame);
+        }
+        let batch = self.infer_batch_for(n)?;
+        let mut padded;
+        let data: &[u8] = if batch == n {
+            states
+        } else {
+            padded = vec![0u8; batch * frame];
+            padded[..states.len()].copy_from_slice(states);
+            &padded
+        };
+        let states_lit = self.states_literal(data, batch)?;
+        let key = qkey(&self.spec.name, &format!("infer_b{batch}"));
+
+        let outputs = match policy {
+            Policy::ThetaMinus => {
+                // Snapshot the Arc so the read lock is not held during the
+                // device call — samplers never block the trainer here.
+                let snap = self.theta_minus.read().unwrap().clone();
+                self.device.execute(&key, &[snap.0.clone(), states_lit])?
+            }
+            Policy::Theta => {
+                // Standard DQN path: clone theta under the train lock.
+                let theta = {
+                    let st = self.train.lock().unwrap();
+                    st.theta.clone()
+                };
+                self.device.execute(&key, &[theta, states_lit])?
+            }
+        };
+        let q = outputs
+            .first()
+            .ok_or_else(|| anyhow!("infer returned no outputs"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("infer output: {e}"))?;
+        Ok(q[..n * self.spec.actions].to_vec())
+    }
+
+    /// One gradient step on a minibatch. Returns the TD loss.
+    pub fn train_step(&self, batch: &TrainBatch, lr: f32) -> Result<f32> {
+        let b = self.train_batch;
+        if batch.actions.len() != b || batch.rewards.len() != b || batch.dones.len() != b {
+            bail!("train batch vectors must have length {b}");
+        }
+        let states = self.states_literal(&batch.states, b)?;
+        let next_states = self.states_literal(&batch.next_states, b)?;
+        let actions = Literal::vec1(&batch.actions)
+            .reshape(&[b as i64])
+            .map_err(|e| anyhow!("actions literal: {e}"))?;
+        let rewards = f32_literal(&batch.rewards);
+        let dones = f32_literal(&batch.dones);
+        let lr_lit = Literal::scalar(lr);
+        let tm = self.theta_minus.read().unwrap().clone();
+        let key = qkey(&self.spec.name, &self.train_key);
+
+        let mut st = self.train.lock().unwrap();
+        let outputs = self.device.execute(
+            &key,
+            &[
+                st.theta.clone(),
+                tm.0.clone(),
+                st.g.clone(),
+                st.s.clone(),
+                states,
+                actions,
+                rewards,
+                next_states,
+                dones,
+                lr_lit,
+            ],
+        )?;
+        let mut it = outputs.into_iter();
+        let (theta, g, s, loss) = match (it.next(), it.next(), it.next(), it.next()) {
+            (Some(t), Some(g), Some(s), Some(l)) => (t, g, s, l),
+            _ => bail!("train step returned fewer than 4 outputs"),
+        };
+        st.theta = theta;
+        st.g = g;
+        st.s = s;
+        drop(st);
+        self.train_steps.fetch_add(1, Ordering::Relaxed);
+        loss.get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss output: {e}"))
+    }
+
+    /// Target-network update: theta_minus <- theta.
+    pub fn sync_target(&self) {
+        let snap = {
+            let st = self.train.lock().unwrap();
+            st.theta.clone()
+        };
+        *self.theta_minus.write().unwrap() = Arc::new(SharedLiteral(snap));
+        self.target_syncs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Download theta to host (checkpointing / tests).
+    pub fn theta_host(&self) -> Result<Vec<f32>> {
+        let st = self.train.lock().unwrap();
+        st.theta.to_vec::<f32>().map_err(|e| anyhow!("theta download: {e}"))
+    }
+
+    /// Download theta_minus to host (tests).
+    pub fn theta_minus_host(&self) -> Result<Vec<f32>> {
+        let snap = self.theta_minus.read().unwrap().clone();
+        snap.0.to_vec::<f32>().map_err(|e| anyhow!("theta_minus download: {e}"))
+    }
+
+    /// Overwrite theta (checkpoint restore / tests).
+    pub fn set_theta(&self, values: &[f32]) -> Result<()> {
+        if values.len() != self.spec.param_count {
+            bail!("set_theta: expected {} values, got {}", self.spec.param_count, values.len());
+        }
+        let mut st = self.train.lock().unwrap();
+        st.theta = f32_literal(values);
+        Ok(())
+    }
+}
+
+fn qkey(config: &str, entry: &str) -> String {
+    format!("{config}/{entry}")
+}

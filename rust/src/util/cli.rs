@@ -1,0 +1,161 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `tempo-dqn <subcommand> [--key value | --key=value | --flag] ...`
+//! Unknown keys are collected so the caller can reject them with a helpful
+//! message listing valid options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` ends option parsing.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.str_opt(name).unwrap_or(default)
+    }
+
+    pub fn usize_opt(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        self.options
+            .get(name)
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")))
+            .transpose()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.usize_opt(name)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--threads 1,2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse::<usize>().map_err(|_| anyhow::anyhow!("--{name}: bad integer {s:?}")))
+                .collect(),
+        }
+    }
+
+    /// Error if any provided option key is not in `valid`.
+    pub fn check_known(&self, valid: &[&str]) -> anyhow::Result<()> {
+        for key in self.options.keys().chain(self.flags.iter()) {
+            if !valid.contains(&key.as_str()) {
+                anyhow::bail!("unknown option --{key}; valid options: {}",
+                              valid.iter().map(|v| format!("--{v}")).collect::<Vec<_>>().join(" "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --config small --steps 1000 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_opt("config"), Some("small"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 1000);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --mode=both --threads=8");
+        assert_eq!(a.str_opt("mode"), Some("both"));
+        assert_eq!(a.usize_or("threads", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("bench --threads 1,2,4,8");
+        assert_eq!(a.usize_list_or("threads", &[]).unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list_or("missing", &[3]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --steps abc");
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = parse("x --bogus 1");
+        assert!(a.check_known(&["steps"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn double_dash_positional() {
+        let a = parse("run -- --not-an-option");
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+}

@@ -1,0 +1,6 @@
+//! From-scratch utility substrates (this build is fully offline; only the
+//! `xla` crate's vendored closure is available — see Cargo.toml).
+
+pub mod cli;
+pub mod json;
+pub mod rng;

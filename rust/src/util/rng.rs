@@ -1,0 +1,191 @@
+//! Deterministic PRNG for the coordinator (no external crates available).
+//!
+//! xoshiro256++ seeded via SplitMix64 — fast, high-quality, and trivially
+//! reproducible across runs, which the determinism invariants in
+//! DESIGN.md §7 rely on. Every thread owns its own stream derived from a
+//! root seed + stream id, so per-thread action sequences are independent of
+//! scheduling order.
+
+/// SplitMix64 step — used for seeding and as a cheap standalone generator.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Construct from a root seed; all four lanes are SplitMix64-derived.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Independent stream `id` under the same root seed (per-thread RNGs).
+    pub fn stream(seed: u64, id: u64) -> Self {
+        Self::new(seed ^ id.wrapping_mul(0xA076_1D64_78BD_642F).wrapping_add(0x9E37_79B9))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Lemire's unbiased rejection method.
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64).wrapping_mul(n as u64);
+        let mut lo = m as u32;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u32();
+                m = (x as u64).wrapping_mul(n as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0 && n <= u32::MAX as usize);
+        self.below(n as u32) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (used by the hwsim jitter model).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 1e-12 {
+                let v = self.f64();
+                return (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::stream(42, 0);
+        let mut b = Rng::stream(42, 1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 6];
+        for _ in 0..10_000 {
+            let x = r.below(6);
+            assert!(x < 6);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_unbiased_enough() {
+        let mut r = Rng::new(11);
+        let n = 3u32;
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[r.below(n) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 20_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

@@ -1,0 +1,112 @@
+//! End-to-end integration tests: the full coordinator stack (environments,
+//! replay, device runtime, all four execution modes) on the `tiny` network
+//! with smoke-scale configs.
+
+use std::sync::Arc;
+
+use tempo_dqn::config::{ExecMode, ExperimentConfig};
+use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::metrics::GanttTrace;
+use tempo_dqn::runtime::default_artifact_dir;
+
+fn smoke_cfg(mode: ExecMode, threads: usize, steps: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+    cfg.mode = mode;
+    cfg.threads = threads;
+    cfg.total_steps = steps;
+    cfg.game = "seeker".into();
+    cfg.prepopulate = 300;
+    cfg.replay_capacity = 8_000;
+    cfg.target_update_period = 64;
+    cfg.train_period = 4;
+    cfg.seed = 11;
+    cfg
+}
+
+fn run(cfg: ExperimentConfig) -> tempo_dqn::coordinator::TrainResult {
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).expect("coordinator");
+    coord.run().expect("run")
+}
+
+#[test]
+fn standard_mode_completes_and_trains() {
+    let res = run(smoke_cfg(ExecMode::Standard, 2, 128));
+    assert!(res.steps >= 128, "steps {}", res.steps);
+    // Standard: floor(t/F) updates gate acting at step t (127/4 = 31).
+    assert!(res.trains >= 128 / 4 - 1, "trains {}", res.trains);
+    assert!(res.bus.transactions > 0);
+    assert!(!res.losses.is_empty());
+}
+
+#[test]
+fn concurrent_mode_completes_with_target_syncs() {
+    let res = run(smoke_cfg(ExecMode::Concurrent, 2, 192));
+    assert!(res.steps >= 192);
+    // C=64 -> at least 2 full windows -> >= 2 syncs and 16 batches/window.
+    assert!(res.target_syncs >= 2, "syncs {}", res.target_syncs);
+    assert!(res.trains >= 32, "trains {}", res.trains);
+}
+
+#[test]
+fn synchronized_mode_batches_inference() {
+    let res = run(smoke_cfg(ExecMode::Synchronized, 4, 128));
+    assert_eq!(res.steps % 4, 0, "whole rounds only");
+    assert!(res.steps >= 128);
+    assert!(res.trains + 1 >= res.steps / 4, "trains {} steps {}", res.trains, res.steps);
+    // Batched inference: far fewer transactions than steps.
+    // rounds = steps / W, plus train transactions.
+    let expected_infers = res.steps / 4;
+    assert!(
+        res.bus.transactions <= expected_infers + res.trains + 4,
+        "transactions {} too high for SE (expect ~{} infers + {} trains)",
+        res.bus.transactions, expected_infers, res.trains
+    );
+}
+
+#[test]
+fn both_mode_algorithm1_full_run() {
+    let gantt = Arc::new(GanttTrace::new(100_000));
+    let cfg = smoke_cfg(ExecMode::Both, 4, 256);
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir())
+        .expect("coordinator")
+        .with_gantt(gantt);
+    let res = coord.run().expect("run");
+    assert!(res.steps >= 256);
+    assert!(res.target_syncs >= 3, "syncs {}", res.target_syncs);
+    assert!(res.trains >= 48, "trains {}", res.trains);
+    assert!(res.episodes > 0 || res.returns.is_empty());
+}
+
+#[test]
+fn single_thread_works_in_all_modes() {
+    for mode in [ExecMode::Standard, ExecMode::Concurrent, ExecMode::Synchronized, ExecMode::Both] {
+        let res = run(smoke_cfg(mode, 1, 96));
+        assert!(res.steps >= 96, "{mode:?}: steps {}", res.steps);
+        assert!(res.trains > 0, "{mode:?}: no training happened");
+    }
+}
+
+#[test]
+fn sync_transactions_shrink_with_threads() {
+    // The Figure 3 claim: SE's transaction count is independent of W
+    // per-step (1/W per step), while async scales 1 per step.
+    let r1 = run(smoke_cfg(ExecMode::Synchronized, 1, 96));
+    let r4 = run(smoke_cfg(ExecMode::Synchronized, 4, 96));
+    let per_step_1 = (r1.bus.transactions - r1.trains) as f64 / r1.steps as f64;
+    let per_step_4 = (r4.bus.transactions - r4.trains) as f64 / r4.steps as f64;
+    assert!(
+        per_step_4 < per_step_1 * 0.5,
+        "W=4 should cut infer transactions >=2x: {per_step_1:.2} vs {per_step_4:.2}"
+    );
+}
+
+#[test]
+fn concurrent_loss_curve_is_finite_and_learning_signal_exists() {
+    let mut cfg = smoke_cfg(ExecMode::Both, 2, 384);
+    cfg.game = "pong".into();
+    let res = run(cfg);
+    assert!(res.losses.iter().all(|(_, l)| l.is_finite()));
+    assert!(res.losses.iter().any(|(_, l)| *l > 0.0));
+    assert!(res.steps_per_sec > 0.0);
+    assert!(!res.timers_report.is_empty());
+}

@@ -1,0 +1,316 @@
+//! Property-based tests (proptest is unavailable offline; this file uses
+//! seeded randomized generation with many iterations per property —
+//! failures print the seed for reproduction).
+//!
+//! Properties cover the determinism invariants from DESIGN.md §7 plus the
+//! from-scratch substrates (JSON, RNG, replay chaining, DES bounds).
+
+use tempo_dqn::config::EpsSchedule;
+use tempo_dqn::config::ExecMode;
+use tempo_dqn::hwsim::{simulate, CostModel, SimRun};
+use tempo_dqn::metrics::{GanttTrace, Phase};
+use tempo_dqn::replay::ReplayMemory;
+use tempo_dqn::runtime::TrainBatch;
+use tempo_dqn::util::json::Json;
+use tempo_dqn::util::rng::Rng;
+
+const CASES: u64 = 60;
+
+// ---------------------------------------------------------------------------
+// Replay memory vs a naive flat-store reference model
+// ---------------------------------------------------------------------------
+
+/// Naive reference: stores every transition in full, stacking by scanning
+/// back through the episode.
+struct NaiveReplay {
+    frames: Vec<Vec<u8>>,
+    actions: Vec<u8>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    starts: Vec<bool>,
+    stack: usize,
+}
+
+impl NaiveReplay {
+    fn state_at(&self, i: usize) -> Vec<u8> {
+        // Channel-last interleave of the `stack` frames ending at i,
+        // replicating past episode starts.
+        let mut slots = vec![0usize; self.stack];
+        let mut cur = i;
+        for c in (0..self.stack).rev() {
+            slots[c] = cur;
+            if cur > 0 && !self.starts[cur] {
+                cur -= 1;
+            }
+        }
+        let fs = self.frames[0].len();
+        let mut out = vec![0u8; fs * self.stack];
+        for (c, &slot) in slots.iter().enumerate() {
+            for (p, &v) in self.frames[slot].iter().enumerate() {
+                out[p * self.stack + c] = v;
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_replay_stacks_match_naive_model() {
+    const FS: usize = 8;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let cap = 32 + rng.below_usize(64);
+        let mut replay = ReplayMemory::new(cap, 1, FS, 4, seed).unwrap();
+        let mut naive = NaiveReplay {
+            frames: Vec::new(),
+            actions: Vec::new(),
+            rewards: Vec::new(),
+            dones: Vec::new(),
+            starts: Vec::new(),
+            stack: 4,
+        };
+        let n = 10 + rng.below_usize(cap - 10); // within capacity: naive has no ring
+        let mut start = true;
+        for t in 0..n {
+            let frame = vec![(t + 1) as u8; FS]; // unique per slot (n <= cap < 256)
+            let action = rng.below(6) as u8;
+            let reward = rng.f32() - 0.5;
+            let done = rng.chance(0.1);
+            replay.push(0, &frame, action, reward, done, start);
+            naive.frames.push(frame);
+            naive.actions.push(action);
+            naive.rewards.push(reward);
+            naive.dones.push(done);
+            naive.starts.push(start);
+            start = done;
+        }
+        // Compare the newest reconstructable state.
+        let got = replay.latest_state(0).unwrap();
+        let want = naive.state_at(n - 1);
+        assert_eq!(got, want, "seed {seed}: latest_state mismatch");
+
+        // Sampled minibatches must agree with the naive model everywhere.
+        if replay.sampleable() > 0 {
+            let mut batch = TrainBatch::default();
+            replay.sample(16, &mut batch).unwrap();
+            let sb = FS * 4;
+            for b in 0..16 {
+                let s = &batch.states[b * sb..(b + 1) * sb];
+                // Identify the slot by its (unique) newest frame value.
+                let newest = s[3] as usize;
+                let idx = newest - 1;
+                assert_eq!(s, &naive.state_at(idx)[..], "seed {seed}: state b={b}");
+                assert_eq!(batch.actions[b] as u8, naive.actions[idx], "seed {seed}");
+                assert_eq!(batch.rewards[b], naive.rewards[idx], "seed {seed}");
+                assert_eq!(batch.dones[b] == 1.0, naive.dones[idx], "seed {seed}");
+                let ns = &batch.next_states[b * sb..(b + 1) * sb];
+                if naive.dones[idx] {
+                    assert_eq!(ns, s, "seed {seed}: done successor must be masked");
+                } else {
+                    assert_eq!(ns, &naive.state_at(idx + 1)[..], "seed {seed}: next state");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_replay_ring_never_returns_overwritten_frames() {
+    const FS: usize = 4;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let cap = 16 + rng.below_usize(32);
+        let mut replay = ReplayMemory::new(cap, 1, FS, 4, seed).unwrap();
+        let n = cap * 2 + rng.below_usize(cap * 2);
+        for t in 0..n {
+            replay.push(0, &[(t % 251) as u8; FS], 0, 0.0, rng.chance(0.05), t == 0);
+        }
+        let oldest_live = n - cap; // logical index of the oldest surviving frame
+        let mut batch = TrainBatch::default();
+        replay.sample(32, &mut batch).unwrap();
+        for b in 0..32 {
+            let newest = batch.states[b * FS * 4 + 3] as usize;
+            // The newest frame of any sampled state must be a live slot.
+            let found = (oldest_live..n).any(|t| t % 251 == newest);
+            assert!(found, "seed {seed}: stale frame {newest} sampled");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON substrate
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num((rng.f64() * 2e6).round() / 8.0 - 1e5),
+        3 => {
+            let n = rng.below_usize(8);
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        let c = rng.below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.below_usize(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below_usize(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..CASES * 4 {
+        let mut rng = Rng::new(seed);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(v, back, "seed {seed}: {text}");
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    let alphabet: Vec<char> = "{}[]\",:truefalsnl0123456789.eE+- ".chars().collect();
+    for seed in 0..CASES * 8 {
+        let mut rng = Rng::new(seed ^ 0x77);
+        let len = rng.below_usize(40);
+        let garbage: String = (0..len).map(|_| alphabet[rng.below_usize(alphabet.len())]).collect();
+        let _ = Json::parse(&garbage); // must not panic
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RNG + policy schedule
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rng_below_always_in_range() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        for _ in 0..1_000 {
+            let n = 1 + rng.below(1000);
+            let x = rng.below(n);
+            assert!(x < n, "seed {seed}: {x} >= {n}");
+        }
+    }
+}
+
+#[test]
+fn prop_eps_schedule_monotone_and_bounded() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let start = rng.f64();
+        let end = rng.f64() * start; // end <= start
+        let decay = 1 + rng.below(1_000_000) as u64;
+        let sched = EpsSchedule { start, end, decay_steps: decay };
+        let mut prev = f64::INFINITY;
+        for i in 0..50u64 {
+            let step = i * decay / 40; // crosses past decay_steps
+            let e = sched.at(step);
+            assert!(e <= prev + 1e-12, "seed {seed}: schedule must be non-increasing");
+            assert!(e <= start + 1e-12 && e >= end - 1e-12, "seed {seed}: out of bounds");
+            prev = e;
+        }
+        assert_eq!(sched.at(decay), end);
+        assert_eq!(sched.at(u64::MAX), end);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hwsim schedule bounds
+// ---------------------------------------------------------------------------
+
+fn random_model(rng: &mut Rng) -> CostModel {
+    CostModel {
+        env_step_ms: 0.1 + rng.f64(),
+        serial_ms: rng.f64() * 0.5,
+        txn_ms: 0.05 + rng.f64() * 0.5,
+        infer_per_sample_ms: 0.01 + rng.f64() * 0.2,
+        train_ms: 0.2 + rng.f64() * 2.0,
+        sync_ms: rng.f64(),
+        cores: 1 + rng.below_usize(8),
+        contention: rng.f64() * 0.5,
+        batch_host_discount: 0.5 + rng.f64() * 0.5,
+    }
+}
+
+#[test]
+fn prop_hwsim_makespan_respects_lower_bound() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let model = random_model(&mut rng);
+        let threads = 1 + rng.below_usize(8);
+        let run = SimRun { steps: 2_000, c: 500, f: 4, threads };
+        for mode in ExecMode::ALL {
+            let stats = simulate(model, run, mode);
+            // Synchronized modes run whole W-rounds, possibly overshooting.
+            assert!(
+                stats.env_steps >= run.steps && stats.env_steps < run.steps + threads as u64,
+                "{mode:?} seed {seed}: env_steps {}",
+                stats.env_steps
+            );
+            // Lower bound 1: total env CPU work / lanes.
+            let env_lb = run.steps as f64 * model.env_step_ms / model.cores as f64;
+            // Lower bound 2: device compute for the mandatory inferences.
+            let gpu_lb = run.steps as f64 * model.infer_per_sample_ms;
+            let lb = env_lb.max(gpu_lb);
+            assert!(
+                stats.makespan_ms >= lb * 0.999,
+                "{mode:?} seed {seed}: makespan {} < lower bound {}",
+                stats.makespan_ms,
+                lb
+            );
+            assert!(stats.trains > 0, "{mode:?} seed {seed}: no training simulated");
+        }
+    }
+}
+
+#[test]
+fn prop_hwsim_w1_standard_equals_closed_form() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x5151);
+        let mut model = random_model(&mut rng);
+        model.cores = 1;
+        model.contention = 0.0;
+        let run = SimRun { steps: 1_000, c: 250, f: 4, threads: 1 };
+        let stats = simulate(model, run, ExecMode::Standard);
+        // W=1 standard is fully serial: steps*(infer+serial+env) + trains.
+        let expect = run.steps as f64
+            * (model.infer_ms(1, 1) + model.serial_ms + model.env_step_ms)
+            + (run.steps / run.f) as f64 * model.train_total_ms(1);
+        let rel = (stats.makespan_ms - expect).abs() / expect;
+        assert!(rel < 1e-6, "seed {seed}: {} vs {}", stats.makespan_ms, expect);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gantt renderer robustness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gantt_render_never_panics() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xF00F);
+        let g = GanttTrace::new(200);
+        let spans = rng.below_usize(50);
+        for _ in 0..spans {
+            let lane = rng.below_usize(6);
+            let phase = Phase::ALL[rng.below_usize(Phase::COUNT)];
+            let a = rng.next_u64() % 1_000_000;
+            let b = a + rng.next_u64() % 10_000;
+            g.record(lane, phase, a, b);
+        }
+        let cols = 1 + rng.below_usize(120);
+        let out = g.render_ascii(cols);
+        assert!(!out.is_empty());
+    }
+}

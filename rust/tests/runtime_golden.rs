@@ -1,0 +1,196 @@
+//! End-to-end AOT-bridge validation: execute the compiled HLO artifacts from
+//! Rust on deterministic inputs and pin the numbers against `golden.json`,
+//! which `python/compile/golden.py` produced from the live JAX model.
+//!
+//! If these tests pass, the entire python -> HLO-text -> PJRT -> Rust
+//! pipeline is numerically faithful.
+
+use std::sync::Arc;
+
+use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, TrainBatch};
+use tempo_dqn::util::json::Json;
+
+/// Deterministic uint8 frames; mirrors `python/compile/golden.det_states`.
+fn det_states(b: usize, h: usize, w: usize, c: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(b * h * w * c);
+    for i in 0..b {
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    out.push(((i * 13 + y * 7 + x * 3 + ch * 11) % 256) as u8);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn load_golden() -> Json {
+    let path = default_artifact_dir().join("golden.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}; run `make artifacts`", path.display()));
+    Json::parse(&text).expect("golden.json parse")
+}
+
+fn setup(config: &str) -> (Arc<Device>, Manifest, QNet) {
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let device = Arc::new(Device::cpu().expect("device"));
+    let qnet = QNet::load(device.clone(), &manifest, config, false, 32).expect("qnet");
+    (device, manifest, qnet)
+}
+
+fn assert_close(got: &[f32], want: &[f64], tol: f64, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        let diff = (*g as f64 - w).abs();
+        let scale = w.abs().max(1.0);
+        assert!(diff / scale < tol, "{ctx}[{i}]: got {g}, want {w} (rel {})", diff / scale);
+    }
+}
+
+#[test]
+fn tiny_infer_matches_golden() {
+    let golden = load_golden();
+    let (_device, _manifest, qnet) = setup("tiny");
+    let [h, w, c] = qnet.spec().frame;
+    for b in [1usize, 8] {
+        let states = det_states(b, h, w, c);
+        let q = qnet.infer(Policy::ThetaMinus, &states, b).expect("infer");
+        let want: Vec<f64> = golden.at(&["tiny", &format!("infer_b{b}")]).unwrap()
+            .as_arr().unwrap()
+            .iter()
+            .flat_map(|row| row.as_f64_vec().unwrap())
+            .collect();
+        assert_close(&q, &want, 1e-3, &format!("tiny infer_b{b}"));
+    }
+}
+
+#[test]
+fn small_infer_matches_golden() {
+    let golden = load_golden();
+    let (_device, _manifest, qnet) = setup("small");
+    let [h, w, c] = qnet.spec().frame;
+    let states = det_states(8, h, w, c);
+    let q = qnet.infer(Policy::ThetaMinus, &states, 8).expect("infer");
+    let want: Vec<f64> = golden.at(&["small", "infer_b8"]).unwrap()
+        .as_arr().unwrap()
+        .iter()
+        .flat_map(|row| row.as_f64_vec().unwrap())
+        .collect();
+    assert_close(&q, &want, 1e-3, "small infer_b8");
+}
+
+#[test]
+fn theta_and_theta_minus_agree_at_init() {
+    let (_device, _manifest, qnet) = setup("tiny");
+    let [h, w, c] = qnet.spec().frame;
+    let states = det_states(4, h, w, c);
+    let q1 = qnet.infer(Policy::Theta, &states, 4).unwrap();
+    let q2 = qnet.infer(Policy::ThetaMinus, &states, 4).unwrap();
+    assert_eq!(q1, q2);
+}
+
+#[test]
+fn infer_pads_small_batches() {
+    // Batch 3 has no compiled entry; runtime must pad to 4 and slice back.
+    let (_device, _manifest, qnet) = setup("tiny");
+    let [h, w, c] = qnet.spec().frame;
+    let states = det_states(3, h, w, c);
+    let q3 = qnet.infer(Policy::ThetaMinus, &states, 3).unwrap();
+    let a = qnet.spec().actions;
+    assert_eq!(q3.len(), 3 * a);
+    let q8 = qnet
+        .infer(Policy::ThetaMinus, &det_states(8, h, w, c), 8)
+        .unwrap();
+    for i in 0..3 * a {
+        assert!((q3[i] - q8[i]).abs() < 1e-4, "row {i}: {} vs {}", q3[i], q8[i]);
+    }
+}
+
+fn golden_train_batch(qnet: &QNet) -> TrainBatch {
+    let [h, w, c] = qnet.spec().frame;
+    let b = 32usize;
+    let actions = qnet.spec().actions;
+    let states = det_states(b, h, w, c);
+    // next_states: reverse of batch rows (mirrors golden.py's [::-1]).
+    let frame = h * w * c;
+    let mut next_states = Vec::with_capacity(b * frame);
+    for i in (0..b).rev() {
+        next_states.extend_from_slice(&states[i * frame..(i + 1) * frame]);
+    }
+    TrainBatch {
+        states,
+        next_states,
+        actions: (0..b as i32).map(|i| i % actions as i32).collect(),
+        rewards: (0..b as i64).map(|i| (i % 3 - 1) as f32).collect(),
+        dones: (0..b).map(|i| if i % 7 == 0 { 1.0 } else { 0.0 }).collect(),
+    }
+}
+
+#[test]
+fn tiny_train_step_matches_golden() {
+    let golden = load_golden();
+    let (_device, _manifest, qnet) = setup("tiny");
+    let batch = golden_train_batch(&qnet);
+    let loss = qnet.train_step(&batch, 2.5e-4).expect("train");
+    let want_loss = golden.at(&["tiny", "train_b32_loss"]).unwrap().as_f64().unwrap();
+    assert!(
+        (loss as f64 - want_loss).abs() < 1e-4,
+        "loss: got {loss}, want {want_loss}"
+    );
+
+    let theta = qnet.theta_host().unwrap();
+    let head: Vec<f64> = golden.at(&["tiny", "train_b32_param_head"]).unwrap().as_f64_vec().unwrap();
+    assert_close(&theta[..8], &head, 1e-4, "param head");
+
+    let sum: f64 = theta.iter().map(|&x| x as f64).sum();
+    let want_sum = golden.at(&["tiny", "train_b32_param_sum"]).unwrap().as_f64().unwrap();
+    assert!((sum - want_sum).abs() / want_sum.abs().max(1.0) < 1e-3,
+            "param sum: got {sum}, want {want_sum}");
+}
+
+#[test]
+fn train_updates_theta_but_not_theta_minus() {
+    let (_device, _manifest, qnet) = setup("tiny");
+    let before_tm = qnet.theta_minus_host().unwrap();
+    let before_t = qnet.theta_host().unwrap();
+    let batch = golden_train_batch(&qnet);
+    qnet.train_step(&batch, 2.5e-4).unwrap();
+    let after_t = qnet.theta_host().unwrap();
+    let after_tm = qnet.theta_minus_host().unwrap();
+    assert_ne!(before_t, after_t, "theta must change");
+    assert_eq!(before_tm, after_tm, "theta_minus must be frozen until sync");
+
+    qnet.sync_target();
+    let synced = qnet.theta_minus_host().unwrap();
+    assert_eq!(synced, after_t, "sync copies theta bit-exactly");
+}
+
+#[test]
+fn repeated_train_steps_reduce_loss_on_fixed_batch() {
+    let (_device, _manifest, qnet) = setup("tiny");
+    let batch = golden_train_batch(&qnet);
+    let first = qnet.train_step(&batch, 3e-3).unwrap();
+    let mut last = first;
+    for _ in 0..60 {
+        last = qnet.train_step(&batch, 3e-3).unwrap();
+    }
+    assert!(
+        last < first * 0.5,
+        "loss should fall on a fixed batch: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn bus_stats_count_transactions() {
+    let (device, _manifest, qnet) = setup("tiny");
+    device.stats.reset();
+    let [h, w, c] = qnet.spec().frame;
+    let states = det_states(1, h, w, c);
+    qnet.infer(Policy::ThetaMinus, &states, 1).unwrap();
+    qnet.infer(Policy::ThetaMinus, &states, 1).unwrap();
+    let snap = device.stats.snapshot();
+    assert_eq!(snap.transactions, 2);
+    assert!(snap.bytes_in > 0 && snap.bytes_out > 0 && snap.busy_ns > 0);
+}
