@@ -1,0 +1,64 @@
+//! B-sweep: measure the W×B speedup of vectorized environment streams.
+//!
+//! Runs the full Algorithm-1 coordinator (mode `both`) at a fixed thread
+//! count W while sweeping B = envs-per-thread, reporting wall-clock
+//! steps/s, device transactions, and the per-transaction batch. This is
+//! the experiment the ISSUE's tentpole enables: one device transaction
+//! serving W×B environment steps instead of W (rust/DESIGN.md §5).
+//!
+//! Run: `cargo run --release --example b_sweep -- [--threads 2]
+//!       [--envs 1,2,4,8] [--steps 2000] [--game seeker] [--mode both]`
+
+use tempo_dqn::config::{ExecMode, ExperimentConfig};
+use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::runtime::default_artifact_dir;
+use tempo_dqn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let threads = args.usize_or("threads", 2)?;
+    let sweep = args.usize_list_or("envs", &[1, 2, 4, 8])?;
+    let steps = args.u64_or("steps", 2_000)?;
+    let game = args.get_or("game", "seeker").to_string();
+    let mode = ExecMode::parse(args.get_or("mode", "both"))?;
+
+    println!("== B-sweep: mode={} W={threads} {steps} steps on {game} ==", mode.name());
+    println!(
+        "{:>4} {:>8} {:>12} {:>14} {:>12} {:>14}",
+        "B", "streams", "steps/s", "transactions", "txn/step", "infer batch"
+    );
+    let mut base_rate = None;
+    for &b in &sweep {
+        let mut cfg = ExperimentConfig::preset("smoke")?;
+        cfg.game = game.clone();
+        cfg.mode = mode;
+        cfg.threads = threads;
+        cfg.envs_per_thread = b;
+        cfg.total_steps = steps;
+        cfg.seed = 7;
+        cfg.prepopulate = 500;
+        cfg.replay_capacity = 60_000;
+        cfg.target_update_period = 256;
+        let mut coord = Coordinator::new(cfg, &default_artifact_dir())?.without_eval();
+        let res = coord.run()?;
+        let rate = res.steps_per_sec;
+        let speedup = match base_rate {
+            None => {
+                base_rate = Some(rate);
+                String::from("1.00x (base)")
+            }
+            Some(base) => format!("{:.2}x", rate / base),
+        };
+        println!(
+            "{:>4} {:>8} {:>12.1} {:>14} {:>12.3} {:>14}  {speedup}",
+            b,
+            threads * b,
+            rate,
+            res.bus.transactions,
+            res.bus.transactions as f64 / res.steps as f64,
+            threads * b,
+        );
+    }
+    println!("\nsynchronized modes: txn/step ~ 1/(W*B) + 1/F (training transactions)");
+    Ok(())
+}

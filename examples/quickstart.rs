@@ -1,11 +1,11 @@
 //! Quickstart: the smallest complete tour of the public API.
 //!
-//! Loads the AOT-compiled artifacts, creates a synthetic Atari-like
+//! Loads the Q-network (AOT artifacts when present, otherwise the builtin
+//! manifest on the native engine), creates a synthetic Atari-like
 //! environment, runs greedy inference, performs one training step from a
 //! replay minibatch, and syncs the target network.
 //!
 //! Run with: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first)
 
 use std::sync::Arc;
 
@@ -17,7 +17,7 @@ use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, T
 fn main() -> anyhow::Result<()> {
     // 1. Load the compiled Q-network (tiny config, batch-32 train entry).
     let dir = default_artifact_dir();
-    let manifest = Manifest::load(&dir)?;
+    let manifest = Manifest::load_or_builtin(&dir)?;
     let device = Arc::new(Device::cpu()?);
     let qnet = QNet::load(device.clone(), &manifest, "tiny", false, 32)?;
     println!(

@@ -28,7 +28,7 @@ use tempo_dqn::util::cli::Args;
 fn measure_costs(net: &str) -> anyhow::Result<CostModel> {
     println!("-- calibration: measuring per-op costs on this machine ({net} net) --");
     let dir = default_artifact_dir();
-    let manifest = Manifest::load(&dir)?;
+    let manifest = Manifest::load_or_builtin(&dir)?;
     let device = Arc::new(Device::cpu()?);
     let qnet = QNet::load(device.clone(), &manifest, net, false, 32)?;
 

@@ -7,8 +7,8 @@
 //! evaluating the learned policy against the Random anchor.
 //!
 //! Run with: `cargo run --release --example train_e2e -- [--steps N]
-//!            [--game seeker] [--net small] [--threads 4]`
-//! Results are appended to EXPERIMENTS.md §E2E by the Makefile target.
+//!            [--game seeker] [--net small] [--threads 4]
+//!            [--envs-per-thread B]`
 
 use tempo_dqn::config::{EpsSchedule, ExecMode, ExperimentConfig};
 use tempo_dqn::coordinator::Coordinator;
@@ -22,12 +22,14 @@ fn main() -> anyhow::Result<()> {
     let game = args.get_or("game", "seeker").to_string();
     let net = args.get_or("net", "small").to_string();
     let threads = args.usize_or("threads", 4)?;
+    let envs_per_thread = args.usize_or("envs-per-thread", 1)?;
 
     let mut cfg = ExperimentConfig::preset("paper")?;
     cfg.game = game.clone();
     cfg.net = net.clone();
     cfg.mode = ExecMode::Both;
     cfg.threads = threads;
+    cfg.envs_per_thread = envs_per_thread;
     cfg.total_steps = steps;
     cfg.seed = 7;
     cfg.replay_capacity = 120_000;
@@ -37,7 +39,9 @@ fn main() -> anyhow::Result<()> {
     cfg.lr = args.f64_or("lr", cfg.lr)?;
     cfg.eval_period = u64::MAX; // final eval below instead
 
-    println!("=== tempo-dqn end-to-end: {net} net, {game}, Algorithm 1, W={threads}, {steps} steps ===");
+    println!(
+        "=== tempo-dqn end-to-end: {net} net, {game}, Algorithm 1, W={threads} B={envs_per_thread}, {steps} steps ==="
+    );
     let mut coord = Coordinator::new(cfg, &default_artifact_dir())?.without_eval();
     let res = coord.run()?;
 

@@ -1,11 +1,13 @@
 //! Environment bench: per-game agent-step cost (simulate 4 raw ticks +
 //! render + max-pool + downscale + stack) — the CPU side of the paper's
-//! hardware model, and the denominator of its speedup argument.
+//! hardware model, and the denominator of its speedup argument — plus a
+//! B-sweep over `VecEnv` widths measuring the per-step cost of batched
+//! stream stepping and contiguous state assembly (the W×B axis).
 //!
 //! Run: `cargo bench --bench env_throughput`
 
 use tempo_dqn::benchkit::Bench;
-use tempo_dqn::env::{make_env, GAMES, STATE_BYTES};
+use tempo_dqn::env::{make_env, VecEnv, GAMES, STATE_BYTES};
 
 fn main() {
     let mut bench = Bench::new();
@@ -24,6 +26,40 @@ fn main() {
     let env = make_env("pong", 3).unwrap();
     let mut out = vec![0u8; STATE_BYTES];
     bench.run("env/write_state", || env.write_state(&mut out));
+
+    // B-sweep: stepping B streams per iteration + assembling the
+    // contiguous B-state inference input. Per-env-step cost should stay
+    // flat while the per-transaction batch grows B-fold.
+    println!();
+    for b in [1usize, 2, 4, 8, 16] {
+        let seeds: Vec<u64> = (0..b as u64).map(|j| 3 + j * 7919).collect();
+        let mut vec_env = VecEnv::new("pong", &seeds).unwrap();
+        let actions = vec_env.num_actions();
+        let mut acts = vec![0usize; b];
+        let mut results = Vec::with_capacity(b);
+        let mut i = 0usize;
+        let r = bench.run(&format!("vecenv/pong/step_batch/b{b}"), || {
+            for (j, a) in acts.iter_mut().enumerate() {
+                *a = (i + j) % actions;
+            }
+            i += 1;
+            vec_env.step_batch(&acts, &mut results);
+            for (j, r) in results.iter().enumerate() {
+                if r.done {
+                    vec_env.reset(j);
+                }
+            }
+        });
+        println!(
+            "         -> {:.3} us/env-step at B={b}",
+            r.mean_ns / 1e3 / b as f64
+        );
+
+        let mut states = vec![0u8; b * STATE_BYTES];
+        bench.run(&format!("vecenv/pong/write_states/b{b}"), || {
+            vec_env.write_states(&mut states)
+        });
+    }
 
     println!("\nper-step env cost feeds hwsim::CostModel::from_measured");
 }

@@ -13,7 +13,7 @@ use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, T
 
 fn main() {
     let dir = default_artifact_dir();
-    let manifest = Manifest::load(&dir).expect("run `make artifacts` first");
+    let manifest = Manifest::load_or_builtin(&dir).expect("manifest");
     let device = Arc::new(Device::cpu().unwrap());
     let mut bench = Bench::new();
 

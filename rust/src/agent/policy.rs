@@ -45,6 +45,26 @@ impl EpsGreedy {
     }
 }
 
+/// Batched epsilon-greedy selection over B Q-rows: stream `j` selects from
+/// `q[j*stride .. (j+1)*stride]` under exploration rate `eps_at(j)` using
+/// its own policy's RNG stream. Because every stream draws from its own
+/// generator, the result is identical to selecting row-by-row — batching
+/// changes the memory access pattern (one pass over a contiguous Q buffer),
+/// not the sampled actions.
+pub fn select_rows(
+    policies: &mut [EpsGreedy],
+    q: &[f32],
+    stride: usize,
+    eps_at: impl Fn(usize) -> f64,
+    out: &mut Vec<usize>,
+) {
+    debug_assert_eq!(q.len(), policies.len() * stride);
+    out.clear();
+    for (j, policy) in policies.iter_mut().enumerate() {
+        out.push(policy.select(&q[j * stride..(j + 1) * stride], eps_at(j)));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +107,37 @@ mod tests {
         let greedy = (0..n).filter(|_| p.select(&q, 0.1) == 1).count();
         // greedy chosen ~ 0.9 + 0.1/2 = 95% of the time
         assert!((0.93..0.97).contains(&(greedy as f64 / n as f64)), "{greedy}");
+    }
+
+    #[test]
+    fn select_rows_matches_row_by_row_selection() {
+        let mk = || vec![EpsGreedy::new(11, 0, 3), EpsGreedy::new(11, 1, 3)];
+        let q = [0.0f32, 2.0, 1.0, 5.0, 0.0, 1.0];
+        let mut batched = mk();
+        let mut out = Vec::new();
+        let mut seq_out = Vec::new();
+        let mut sequential = mk();
+        for round in 0..200 {
+            let eps = 0.3 + 0.001 * round as f64;
+            select_rows(&mut batched, &q, 3, |_| eps, &mut out);
+            let a0 = sequential[0].select(&q[0..3], eps);
+            let a1 = sequential[1].select(&q[3..6], eps);
+            seq_out.clear();
+            seq_out.extend([a0, a1]);
+            assert_eq!(out, seq_out, "round {round}");
+        }
+    }
+
+    #[test]
+    fn select_rows_per_row_eps() {
+        // eps=0 rows are exactly greedy regardless of other rows' eps.
+        let mut policies = vec![EpsGreedy::new(5, 0, 2), EpsGreedy::new(5, 1, 2)];
+        let q = [0.0f32, 1.0, 1.0, 0.0];
+        let mut out = Vec::new();
+        for _ in 0..100 {
+            select_rows(&mut policies, &q, 2, |j| if j == 0 { 0.0 } else { 1.0 }, &mut out);
+            assert_eq!(out[0], 1, "eps=0 row must stay greedy");
+        }
     }
 
     #[test]

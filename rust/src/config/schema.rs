@@ -93,6 +93,11 @@ pub struct ExperimentConfig {
     /// W sampler threads (the paper's abstract machine executes W CPU
     /// program threads + 1 accelerator task).
     pub threads: usize,
+    /// B environments per sampler thread. The coordinator runs W×B
+    /// environment streams; in synchronized modes one device transaction
+    /// serves all W×B steps of a round. B=1 reproduces the paper's
+    /// one-env-per-thread machine exactly (rust/DESIGN.md §5).
+    pub envs_per_thread: usize,
 
     // Network / artifacts
     pub net: String,
@@ -125,6 +130,7 @@ impl Default for ExperimentConfig {
             seed: 0,
             mode: ExecMode::Both,
             threads: 8,
+            envs_per_thread: 1,
             net: "small".into(),
             double: false,
             total_steps: 50_000_000,
@@ -178,6 +184,7 @@ impl ExperimentConfig {
         c.seed = doc.usize_or("run.seed", c.seed as usize)? as u64;
         c.mode = ExecMode::parse(&doc.str_or("run.mode", c.mode.name())?)?;
         c.threads = doc.usize_or("run.threads", c.threads)?;
+        c.envs_per_thread = doc.usize_or("run.envs_per_thread", c.envs_per_thread)?;
         c.net = doc.str_or("net.config", &c.net)?;
         c.double = doc.bool_or("net.double", c.double)?;
         c.total_steps = doc.usize_or("dqn.total_steps", c.total_steps as usize)? as u64;
@@ -217,6 +224,7 @@ impl ExperimentConfig {
         }
         self.seed = args.u64_or("seed", self.seed)?;
         self.threads = args.usize_or("threads", self.threads)?;
+        self.envs_per_thread = args.usize_or("envs-per-thread", self.envs_per_thread)?;
         self.total_steps = args.u64_or("steps", self.total_steps)?;
         self.replay_capacity = args.usize_or("replay-capacity", self.replay_capacity)?;
         self.target_update_period = args.u64_or("target-period", self.target_update_period)?;
@@ -242,6 +250,9 @@ impl ExperimentConfig {
         if self.threads == 0 {
             bail!("threads must be >= 1");
         }
+        if self.envs_per_thread == 0 {
+            bail!("envs_per_thread must be >= 1");
+        }
         if self.train_period == 0 || self.target_update_period == 0 {
             bail!("train_period and target_update_period must be >= 1");
         }
@@ -263,6 +274,13 @@ impl ExperimentConfig {
     /// Minibatches trained per target window (C / F).
     pub fn batches_per_window(&self) -> u64 {
         self.target_update_period / self.train_period
+    }
+
+    /// Total environment streams (W × B). Stream `slot*B + j` is environment
+    /// j of sampler thread `slot`; replay streams, policy RNG streams, and
+    /// env seeds are all indexed by this global stream id.
+    pub fn streams(&self) -> usize {
+        self.threads * self.envs_per_thread
     }
 }
 
@@ -310,16 +328,33 @@ mod tests {
     #[test]
     fn toml_and_cli_override() {
         let doc = TomlDoc::parse(
-            "preset = \"smoke\"\n[run]\nmode = \"concurrent\"\nthreads = 4\n[dqn]\ntrain_period = 2\ntarget_update_period = 50\n",
+            "preset = \"smoke\"\n[run]\nmode = \"concurrent\"\nthreads = 4\nenvs_per_thread = 8\n[dqn]\ntrain_period = 2\ntarget_update_period = 50\n",
         )
         .unwrap();
         let mut c = ExperimentConfig::from_toml(&doc).unwrap();
         assert_eq!(c.mode, ExecMode::Concurrent);
         assert_eq!(c.threads, 4);
+        assert_eq!(c.envs_per_thread, 8);
+        assert_eq!(c.streams(), 32);
         assert_eq!(c.batches_per_window(), 25);
-        let args = Args::parse(["--threads".to_string(), "2".to_string()]).unwrap();
+        let args = Args::parse(
+            ["--threads", "2", "--envs-per-thread", "4"].map(String::from),
+        )
+        .unwrap();
         c.apply_args(&args).unwrap();
         assert_eq!(c.threads, 2);
+        assert_eq!(c.envs_per_thread, 4);
+        assert_eq!(c.streams(), 8);
+    }
+
+    #[test]
+    fn envs_per_thread_defaults_to_one_and_rejects_zero() {
+        let c = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(c.envs_per_thread, 1, "B=1 is the paper's machine");
+        assert_eq!(c.streams(), c.threads);
+        let mut bad = c;
+        bad.envs_per_thread = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

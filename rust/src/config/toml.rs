@@ -3,6 +3,17 @@
 //! Supports what experiment configs need: `[section]` headers, `key = value`
 //! with string / integer / float / boolean values, `#` comments, and dotted
 //! lookup (`section.key`). Arrays of integers are supported for sweep lists.
+//!
+//! Example experiment file (see `ExperimentConfig::from_toml` for the full
+//! key set):
+//!
+//! ```toml
+//! preset = "speedtest"
+//! [run]
+//! mode = "both"
+//! threads = 4
+//! envs_per_thread = 8   # W×B = 32 streams
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -165,6 +176,14 @@ mod tests {
         assert!(!doc.bool_or("dqn.double", true).unwrap());
         assert_eq!(doc.get("sweep.threads"),
                    Some(&TomlValue::IntArray(vec![1, 2, 4, 8])));
+    }
+
+    #[test]
+    fn run_section_carries_the_wxb_knobs() {
+        let doc = TomlDoc::parse("[run]\nthreads = 2\nenvs_per_thread = 4\n").unwrap();
+        assert_eq!(doc.usize_or("run.threads", 1).unwrap(), 2);
+        assert_eq!(doc.usize_or("run.envs_per_thread", 1).unwrap(), 4);
+        assert_eq!(doc.usize_or("run.envs_per_thread_missing", 1).unwrap(), 1);
     }
 
     #[test]

@@ -1,27 +1,35 @@
 //! Asynchronous-execution driver (Synchronized Execution OFF).
 //!
-//! W sampler threads each own an environment and compute their own size-1
-//! Q-inference on the shared device — the contention regime of the paper's
-//! Figure 3(a). Two variants:
+//! W sampler threads each own B environment streams and compute their own
+//! size-B Q-inference on the shared device — the contention regime of the
+//! paper's Figure 3(a) (at B=1, exactly the paper's machine; at B>1 each
+//! thread amortizes its transaction over B steps). Two variants:
 //!
 //! * **standard** (Concurrent Training OFF): original DQN semantics — a
 //!   sampler may not act at step t until floor(t/F) minibatch updates have
 //!   completed ([`TrainInterlock`]); acting uses theta.
 //! * **concurrent** (Concurrent Training ON, paper §3): acting uses
 //!   theta_minus, a dedicated trainer thread runs C/F minibatches per
-//!   C-step window, transitions stage per-thread and flush only at the
-//!   window barrier, where theta_minus <- theta.
+//!   C-step window ([`WindowCtrl`]), transitions stage per-stream and flush
+//!   only at the window barrier, where theta_minus <- theta.
+//!
+//! Step tickets are claimed in blocks of B: a thread that claims base
+//! ticket t acts at steps t..t+B-1, clamped to the step budget (for B=1
+//! this degenerates to the original one-ticket-per-step loop). Windows
+//! therefore quantize to blocks: a block whose base step falls inside the
+//! window completes all its steps before parking, and the window barrier
+//! waits for that block-rounded coverage before flushing staging — so the
+//! flush never races a sampler that is mid-block across the boundary.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::Ordering;
 
 use anyhow::{anyhow, Result};
 
 use crate::metrics::Phase;
-use crate::replay::StagingBuffer;
+use crate::replay::StagingSet;
 use crate::runtime::{Policy, TrainBatch};
 
-use super::shared::{SamplerCtx, Shared, TrainInterlock, WindowGate};
+use super::shared::{SamplerCtx, Shared, TrainInterlock, WindowCtrl, WindowGate};
 
 /// Run the async driver. `concurrent` selects the variant.
 /// `on_progress` is invoked from the main thread with the completed-step
@@ -32,18 +40,15 @@ pub fn run_async(
     mut on_progress: impl FnMut(u64) + Send,
 ) -> Result<()> {
     let w = shared.cfg.threads;
+    let b = shared.cfg.envs_per_thread;
+    let bs = b as u64;
     let total = shared.cfg.total_steps;
     let c = shared.cfg.target_update_period;
 
     let interlock = TrainInterlock::new();
     let gate = WindowGate::new(if concurrent { c.min(total) } else { u64::MAX });
-    let stagings: Vec<Mutex<StagingBuffer>> =
-        (0..w).map(|_| Mutex::new(StagingBuffer::new())).collect();
-
-    // Trainer-thread window protocol (concurrent only).
-    let dispatched = AtomicU64::new(0);
-    let trainer_done = AtomicU64::new(0);
-    let trainer_cv = (Mutex::new(()), Condvar::new());
+    let staging = StagingSet::new(w * b);
+    let winctrl = WindowCtrl::new();
 
     std::thread::scope(|scope| -> Result<()> {
         // ---- sampler threads --------------------------------------------
@@ -51,7 +56,7 @@ pub fn run_async(
             let shared = &shared;
             let gate = &gate;
             let interlock = &interlock;
-            let stagings = &stagings;
+            let staging = &staging;
             scope.spawn(move || {
                 let mut ctx = match SamplerCtx::new(shared.cfg, slot) {
                     Ok(c) => c,
@@ -62,40 +67,43 @@ pub fn run_async(
                     if shared.should_stop() {
                         break;
                     }
-                    let t = shared.claimed.fetch_add(1, Ordering::SeqCst);
+                    let t = shared.claimed.fetch_add(bs, Ordering::SeqCst);
                     if t >= total {
                         shared.stop.store(true, Ordering::SeqCst);
                         break;
                     }
+                    // Clamp the final block to the step budget so completed
+                    // lands on exactly `total`, as the B=1 machine did.
+                    let width = bs.min(total - t) as usize;
                     if concurrent {
                         gate.wait_for_step(shared, t);
                     } else {
-                        interlock.ensure_trained(shared, t, &mut train_batch);
+                        // The interlock gates the *last* step of the block.
+                        interlock.ensure_trained(shared, t + width as u64 - 1, &mut train_batch);
                     }
-                    // After claiming a valid step we must complete it (the
+                    // After claiming a valid block we must complete it (the
                     // window accounting depends on it); only a worker error
-                    // aborts mid-step.
+                    // aborts mid-block.
                     if shared.aborted() {
                         break;
                     }
-                    ctx.refresh_state();
+                    ctx.refresh_states();
                     let policy =
                         if concurrent { Policy::ThetaMinus } else { Policy::Theta };
                     let q = match shared
-                        .span(slot, Phase::Infer, || shared.qnet.infer(policy, &ctx.state_buf, 1))
+                        .span(slot, Phase::Infer, || shared.qnet.infer(policy, &ctx.states_buf, b))
                     {
                         Ok(q) => q,
                         Err(e) => return shared.fail(format!("infer: {e}")),
                     };
                     if concurrent {
-                        let staging = &stagings[slot];
-                        ctx.act(shared, t, &q, |frame, a, r, done, start| {
-                            staging.lock().unwrap().push(frame, a, r, done, start);
+                        ctx.act_block(shared, t, &q, width, |stream, frame, a, r, done, start| {
+                            staging.push(stream, frame, a, r, done, start);
                         });
                     } else {
                         let replay = shared.replay;
-                        ctx.act(shared, t, &q, |frame, a, r, done, start| {
-                            replay.lock().unwrap().push(slot, frame, a, r, done, start);
+                        ctx.act_block(shared, t, &q, width, |stream, frame, a, r, done, start| {
+                            replay.lock().unwrap().push(stream, frame, a, r, done, start);
                         });
                     }
                 }
@@ -105,41 +113,8 @@ pub fn run_async(
         // ---- trainer thread (concurrent only) ---------------------------
         if concurrent {
             let shared = &shared;
-            let dispatched = &dispatched;
-            let trainer_done = &trainer_done;
-            let trainer_cv = &trainer_cv;
-            scope.spawn(move || {
-                let mut batch = TrainBatch::default();
-                loop {
-                    // Wait for a dispatched window (or stop).
-                    loop {
-                        if shared.should_stop() {
-                            return;
-                        }
-                        if trainer_done.load(Ordering::SeqCst)
-                            < dispatched.load(Ordering::SeqCst)
-                        {
-                            break;
-                        }
-                        let g = trainer_cv.0.lock().unwrap();
-                        let _ = trainer_cv
-                            .1
-                            .wait_timeout(g, std::time::Duration::from_millis(1))
-                            .unwrap();
-                    }
-                    let batches = shared.cfg.batches_per_window();
-                    for _ in 0..batches {
-                        if shared.should_stop() {
-                            return;
-                        }
-                        if let Err(e) = shared.do_one_train(&mut batch) {
-                            return shared.fail(format!("trainer: {e}"));
-                        }
-                    }
-                    trainer_done.fetch_add(1, Ordering::SeqCst);
-                    trainer_cv.1.notify_all();
-                }
-            });
+            let winctrl = &winctrl;
+            scope.spawn(move || winctrl.trainer_loop(shared));
         }
 
         // ---- main thread: window orchestration (Algorithm 1's role) -----
@@ -147,22 +122,25 @@ pub fn run_async(
             let mut window_end = c.min(total);
             // Dispatch the first training window immediately (it trains on
             // the prepopulated replay while samplers collect window 0).
-            dispatched.fetch_add(1, Ordering::SeqCst);
-            trainer_cv.1.notify_all();
+            winctrl.dispatch();
             loop {
+                // A window boundary that falls inside a B-step block is only
+                // safe to flush once that whole block has executed (its tail
+                // steps stage into THIS window); wait for coverage of the
+                // block-rounded window, clamped to the step budget.
+                let window_target = (window_end.div_ceil(bs) * bs).min(total);
                 // Wait for samplers to finish the window AND the trainer to
                 // finish its batches.
                 loop {
                     if shared.aborted() {
                         return Err(anyhow!("worker failed"));
                     }
-                    let samplers_done = shared.completed.load(Ordering::SeqCst) >= window_end;
-                    let trainer_caught_up = trainer_done.load(Ordering::SeqCst)
-                        >= dispatched.load(Ordering::SeqCst);
-                    if samplers_done && trainer_caught_up {
+                    let samplers_done =
+                        shared.completed.load(Ordering::SeqCst) >= window_target;
+                    if samplers_done && winctrl.caught_up() {
                         break;
                     }
-                    // Normal termination: a sampler claimed the final step
+                    // Normal termination: a sampler claimed the final block
                     // and set `stop`; the trainer exits without finishing
                     // its (forfeited) final-window quota.
                     if samplers_done && shared.should_stop() {
@@ -172,24 +150,17 @@ pub fn run_async(
                     std::thread::sleep(std::time::Duration::from_micros(200));
                 }
                 // Synchronization point: flush staging, update target net.
-                shared.span(shared.main_lane(), Phase::Sync, || {
-                    let mut replay = shared.replay.lock().unwrap();
-                    for (slot, staging) in stagings.iter().enumerate() {
-                        staging.lock().unwrap().flush_into(&mut replay, slot);
-                    }
-                    shared.qnet.sync_target();
-                });
+                shared.sync_point(&staging);
                 on_progress(shared.completed.load(Ordering::SeqCst));
                 if window_end >= total {
                     shared.stop.store(true, Ordering::SeqCst);
                     gate.advance(u64::MAX); // release parked samplers to exit
-                    trainer_cv.1.notify_all();
+                    winctrl.notify_all();
                     break;
                 }
                 // Open the next window and dispatch its training batches.
                 window_end = (window_end + c).min(total);
-                dispatched.fetch_add(1, Ordering::SeqCst);
-                trainer_cv.1.notify_all();
+                winctrl.dispatch();
                 gate.advance(window_end);
             }
         } else {

@@ -29,7 +29,7 @@ use crate::metrics::{GanttTrace, PhaseTimers};
 use crate::replay::ReplayMemory;
 use crate::runtime::{BusSnapshot, Device, Manifest, QNet};
 
-pub use shared::{SamplerCtx, Shared, TrainInterlock, WindowGate};
+pub use shared::{SamplerCtx, Shared, TrainInterlock, WindowCtrl, WindowGate};
 
 /// Result of one training run.
 #[derive(Debug, Default)]
@@ -71,9 +71,10 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Load artifacts and build the full stack for `cfg`.
+    /// Load artifacts (or the builtin manifest when none exist) and build
+    /// the full stack for `cfg`.
     pub fn new(cfg: ExperimentConfig, artifact_dir: &std::path::Path) -> Result<Coordinator> {
-        let manifest = Manifest::load(artifact_dir)?;
+        let manifest = Manifest::load_or_builtin(artifact_dir)?;
         let device = Arc::new(Device::cpu()?);
         let qnet = Arc::new(
             QNet::load(device.clone(), &manifest, &cfg.net, cfg.double, cfg.minibatch)
@@ -93,6 +94,22 @@ impl Coordinator {
                 cfg.game, probe.num_actions(), qnet.spec().actions
             );
         }
+        // Sanity: the loaded infer entries must cover the largest batch the
+        // drivers will request — all W×B streams at once in synchronized
+        // modes, B per sampler thread otherwise. Failing here beats failing
+        // mid-run after prepopulation and thread spawn.
+        let largest = if cfg.mode.synchronized_execution() {
+            cfg.streams()
+        } else {
+            cfg.envs_per_thread
+        };
+        qnet.infer_batch_for(largest).with_context(|| {
+            format!(
+                "mode {} needs one inference batch covering {largest} states \
+                 (threads={} x envs_per_thread={}); reduce W x B or compile larger infer entries",
+                cfg.mode.name(), cfg.threads, cfg.envs_per_thread
+            )
+        })?;
         Ok(Coordinator {
             cfg,
             qnet,
@@ -130,21 +147,25 @@ impl Coordinator {
     }
 
     /// Prepopulate the replay memory with `cfg.prepopulate` random-policy
-    /// transitions, spread over the per-thread streams (paper Table 5: N).
+    /// transitions, spread over all W×B streams (paper Table 5: N). Stream
+    /// seeds depend only on the global stream id, so the fill is identical
+    /// for any (W, B) factorization of the same stream count — and for B=1
+    /// it is exactly the per-thread fill of the one-env-per-thread machine.
     fn prepopulate(&self, replay: &Mutex<ReplayMemory>) -> Result<()> {
-        let w = self.cfg.threads;
+        let streams = self.cfg.streams();
         let mut replay = replay.lock().unwrap();
-        let per_stream = self.cfg.prepopulate.div_ceil(w);
-        for slot in 0..w {
-            let mut env = make_env(&self.cfg.game, self.cfg.seed.wrapping_add(0xF00D + slot as u64))?;
-            let mut policy = EpsGreedy::new(self.cfg.seed, 0xBEEF ^ slot as u64, env.num_actions());
+        let per_stream = self.cfg.prepopulate.div_ceil(streams);
+        for stream in 0..streams {
+            let mut env =
+                make_env(&self.cfg.game, self.cfg.seed.wrapping_add(0xF00D + stream as u64))?;
+            let mut policy = EpsGreedy::new(self.cfg.seed, 0xBEEF ^ stream as u64, env.num_actions());
             let mut frame = vec![0u8; NET_FRAME];
             let mut start = true;
             for _ in 0..per_stream {
                 frame.copy_from_slice(env.latest_plane());
                 let a = policy.random();
                 let r = env.step(a);
-                replay.push(slot, &frame, a as u8, r.reward, r.done, start);
+                replay.push(stream, &frame, a as u8, r.reward, r.done, start);
                 start = false;
                 if r.done {
                     env.reset();
@@ -160,7 +181,7 @@ impl Coordinator {
         let cfg = self.cfg.clone();
         let replay = Mutex::new(ReplayMemory::new(
             cfg.replay_capacity,
-            cfg.threads,
+            cfg.streams(),
             NET_FRAME,
             crate::env::STACK,
             cfg.seed,

@@ -1,6 +1,13 @@
-//! State shared between the main thread, sampler threads, and the trainer
-//! thread, plus the two synchronization devices the paper's execution
-//! models are built from:
+//! The shared sampler-loop core: state shared between the main thread,
+//! sampler threads, and the trainer thread, plus the synchronization
+//! devices the paper's execution models are built from. Both drivers
+//! (`async_exec`, `sync_exec`) are thin strategies over this module — they
+//! differ only in *how Q-values are obtained* (per-thread inference vs. the
+//! batched slot mailbox); everything else (stream bookkeeping, action
+//! selection, staging, the trainer window protocol, the sync point) lives
+//! here once.
+//!
+//! Synchronization devices:
 //!
 //! * [`TrainInterlock`] — the *sequential dependency* of standard DQN
 //!   (paper §3): acting at step t requires floor(t/F) completed minibatch
@@ -11,17 +18,21 @@
 //!   freely until the end of the current C-step target window; crossing
 //!   threads park until the main thread flushes staging, syncs theta_minus,
 //!   and opens the next window.
+//!
+//! * [`WindowCtrl`] — the trainer thread's window protocol (dispatch a
+//!   window's C/F minibatches, wait for them at the barrier), previously
+//!   duplicated in both drivers.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use anyhow::Result;
 
-use crate::agent::EpsGreedy;
+use crate::agent::{policy::select_rows, EpsGreedy};
 use crate::config::ExperimentConfig;
-use crate::env::{make_env, AtariEnv, NET_FRAME, STATE_BYTES};
+use crate::env::{VecEnv, NET_FRAME, STATE_BYTES};
 use crate::metrics::{GanttTrace, Phase, PhaseTimers};
-use crate::replay::ReplayMemory;
+use crate::replay::{ReplayMemory, StagingSet};
 use crate::runtime::{QNet, TrainBatch};
 
 /// Everything the worker threads share by reference (threads are scoped).
@@ -31,7 +42,8 @@ pub struct Shared<'a> {
     pub replay: &'a Mutex<ReplayMemory>,
     pub timers: &'a PhaseTimers,
     pub gantt: Option<&'a GanttTrace>,
-    /// Steps claimed by samplers (monotone ticket counter).
+    /// Steps claimed by samplers (monotone ticket counter; async drivers
+    /// claim B at a time).
     pub claimed: AtomicU64,
     /// Steps fully executed.
     pub completed: AtomicU64,
@@ -130,6 +142,17 @@ impl<'a> Shared<'a> {
         }
         Ok(())
     }
+
+    /// Synchronization point (paper Algorithm 1, line "synchronize"):
+    /// flush all staged transitions into replay, then theta_minus <- theta.
+    /// Shared by both drivers.
+    pub fn sync_point(&self, staging: &StagingSet) {
+        self.span(self.main_lane(), Phase::Sync, || {
+            let mut replay = self.replay.lock().unwrap();
+            staging.flush_into(&mut replay);
+            self.qnet.sync_target();
+        });
+    }
 }
 
 /// Standard DQN's training/sampling interlock (Concurrent Training OFF).
@@ -145,7 +168,8 @@ impl TrainInterlock {
     }
 
     /// Block until `trains_done >= t / F`, training ourselves if the duty
-    /// is free. Called by a sampler before acting at step `t`.
+    /// is free. Called by a sampler before acting at step `t` (for a block
+    /// of B steps, `t` is the block's last step).
     pub fn ensure_trained(&self, shared: &Shared<'_>, t: u64, batch: &mut TrainBatch) {
         let f = shared.cfg.train_period;
         let required = t / f;
@@ -211,58 +235,183 @@ impl WindowGate {
     }
 }
 
-/// Sampler-owned per-thread context: its environment, policy stream, and
-/// scratch buffers (allocation-free hot loop).
+/// The trainer thread's window protocol (Concurrent Training ON): the main
+/// thread dispatches one window at a time; the trainer runs C/F minibatches
+/// per dispatched window; the main thread waits for it at the window
+/// barrier. Identical in both drivers, so it lives here.
+#[derive(Default)]
+pub struct WindowCtrl {
+    dispatched: AtomicU64,
+    done: AtomicU64,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WindowCtrl {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Main-side: dispatch one window's worth of training.
+    pub fn dispatch(&self) {
+        self.dispatched.fetch_add(1, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// True when the trainer has finished every dispatched window.
+    pub fn caught_up(&self) -> bool {
+        self.done.load(Ordering::SeqCst) >= self.dispatched.load(Ordering::SeqCst)
+    }
+
+    /// Wake the trainer so it can observe `stop` (shutdown paths).
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+
+    /// Main-side: spin-wait until the trainer caught up (or the run stops).
+    pub fn wait_caught_up(&self, shared: &Shared<'_>) {
+        while !self.caught_up() {
+            if shared.should_stop() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+
+    /// The trainer thread's body: for every dispatched window, run
+    /// `batches_per_window()` minibatch updates, then report done.
+    pub fn trainer_loop(&self, shared: &Shared<'_>) {
+        let mut batch = TrainBatch::default();
+        loop {
+            // Wait for a dispatched window (or stop).
+            loop {
+                if shared.should_stop() {
+                    return;
+                }
+                if self.done.load(Ordering::SeqCst) < self.dispatched.load(Ordering::SeqCst) {
+                    break;
+                }
+                let g = self.lock.lock().unwrap();
+                let _ = self
+                    .cv
+                    .wait_timeout(g, std::time::Duration::from_millis(1))
+                    .unwrap();
+            }
+            for _ in 0..shared.cfg.batches_per_window() {
+                if shared.should_stop() {
+                    return;
+                }
+                if let Err(e) = shared.do_one_train(&mut batch) {
+                    return shared.fail(format!("trainer: {e}"));
+                }
+            }
+            self.done.fetch_add(1, Ordering::SeqCst);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Sampler-owned per-thread context: its B environment streams, their
+/// policy RNG streams, and scratch buffers (allocation-free hot loop).
+///
+/// Stream `slot*B + j` owns environment j of this context; its seed,
+/// policy stream, and replay stream are all derived from that global id,
+/// so B=1 reproduces the one-env-per-thread layout bit-for-bit.
 pub struct SamplerCtx {
     pub slot: usize,
-    pub env: AtariEnv,
-    pub policy: EpsGreedy,
-    pub state_buf: Vec<u8>,
-    pub frame_buf: Vec<u8>,
-    pub pending_start: bool,
+    /// Global id of this context's first stream (`slot * B`).
+    pub base_stream: usize,
+    pub envs: VecEnv,
+    pub policies: Vec<EpsGreedy>,
+    /// All B stacked states, contiguous (`B * STATE_BYTES`).
+    pub states_buf: Vec<u8>,
+    frame_buf: Vec<u8>,
+    actions_buf: Vec<usize>,
+    pending_start: Vec<bool>,
 }
 
 impl SamplerCtx {
     pub fn new(cfg: &ExperimentConfig, slot: usize) -> Result<Self> {
-        let env = make_env(&cfg.game, cfg.seed.wrapping_add(slot as u64 * 7919))?;
-        let actions = env.num_actions();
+        let b = cfg.envs_per_thread;
+        let base_stream = slot * b;
+        let seeds: Vec<u64> = (0..b)
+            .map(|j| cfg.seed.wrapping_add((base_stream + j) as u64 * 7919))
+            .collect();
+        let envs = VecEnv::new(&cfg.game, &seeds)?;
+        let actions = envs.num_actions();
+        let policies = (0..b)
+            .map(|j| EpsGreedy::new(cfg.seed, (base_stream + j) as u64, actions))
+            .collect();
         Ok(SamplerCtx {
             slot,
-            env,
-            policy: EpsGreedy::new(cfg.seed, slot as u64, actions),
-            state_buf: vec![0u8; STATE_BYTES],
+            base_stream,
+            envs,
+            policies,
+            states_buf: vec![0u8; b * STATE_BYTES],
             frame_buf: vec![0u8; NET_FRAME],
-            pending_start: true,
+            actions_buf: Vec::with_capacity(b),
+            pending_start: vec![true; b],
         })
     }
 
-    /// Act on `q` (one row) at global step `t`: select the action, step the
-    /// env, and hand the resulting transition to `sink`. Returns `done`.
-    pub fn act<F>(&mut self, shared: &Shared<'_>, t: u64, q: &[f32], mut sink: F) -> bool
-    where
-        F: FnMut(&[u8], u8, f32, bool, bool),
-    {
-        let eps = shared.cfg.eps.at(t);
-        let action = self.policy.select(q, eps);
-        self.frame_buf.copy_from_slice(self.env.latest_plane());
-        let r = shared.span(self.slot, Phase::EnvStep, || self.env.step(action));
-        sink(&self.frame_buf, action as u8, r.reward, r.done, self.pending_start);
-        self.pending_start = false;
-        if r.done {
-            let ret = self.env.episode_raw_return();
-            shared.returns.lock().unwrap().push((t, ret));
-            shared.episodes.fetch_add(1, Ordering::Relaxed);
-            self.env.reset();
-            self.pending_start = true;
-        }
-        shared.completed.fetch_add(1, Ordering::SeqCst);
-        r.done
+    /// Number of environment streams in this context (B).
+    pub fn width(&self) -> usize {
+        self.envs.len()
     }
 
-    /// Write the current stacked state into `state_buf` and return it.
-    pub fn refresh_state(&mut self) -> &[u8] {
-        self.env.write_state(&mut self.state_buf);
-        &self.state_buf
+    /// Write all B stacked states into `states_buf` and return it — the
+    /// zero-copy input of one batched inference.
+    pub fn refresh_states(&mut self) -> &[u8] {
+        self.envs.write_states(&mut self.states_buf);
+        &self.states_buf
+    }
+
+    /// Act on the first `n` of this context's B Q-rows at base step
+    /// `t_base`: batch-select the actions (one per stream, each from its
+    /// own RNG stream), then step each environment, handing every
+    /// transition to `sink` as `(stream, frame, action, reward, done,
+    /// start)`. Stream j acts at global step `t_base + j`. `n < B` is used
+    /// by the async drivers to clamp the final block to the step budget;
+    /// `q` is always the full B-row buffer.
+    pub fn act_block<F>(&mut self, shared: &Shared<'_>, t_base: u64, q: &[f32], n: usize, mut sink: F)
+    where
+        F: FnMut(usize, &[u8], u8, f32, bool, bool),
+    {
+        let b = self.width();
+        let n = n.min(b);
+        debug_assert_eq!(q.len() % b, 0);
+        let stride = q.len() / b;
+        let eps = &shared.cfg.eps;
+        select_rows(
+            &mut self.policies[..n],
+            &q[..n * stride],
+            stride,
+            |j| eps.at(t_base + j as u64),
+            &mut self.actions_buf,
+        );
+        for j in 0..n {
+            let t = t_base + j as u64;
+            let action = self.actions_buf[j];
+            self.frame_buf.copy_from_slice(self.envs.latest_plane(j));
+            let r = shared.span(self.slot, Phase::EnvStep, || self.envs.step(j, action));
+            sink(
+                self.base_stream + j,
+                &self.frame_buf,
+                action as u8,
+                r.reward,
+                r.done,
+                self.pending_start[j],
+            );
+            self.pending_start[j] = false;
+            if r.done {
+                let ret = self.envs.env(j).episode_raw_return();
+                shared.returns.lock().unwrap().push((t, ret));
+                shared.episodes.fetch_add(1, Ordering::Relaxed);
+                self.envs.reset(j);
+                self.pending_start[j] = true;
+            }
+            shared.completed.fetch_add(1, Ordering::SeqCst);
+        }
     }
 }
 
@@ -280,11 +429,48 @@ mod tests {
     }
 
     #[test]
+    fn window_ctrl_counts_windows() {
+        let ctrl = WindowCtrl::new();
+        assert!(ctrl.caught_up());
+        ctrl.dispatch();
+        assert!(!ctrl.caught_up());
+        ctrl.done.fetch_add(1, Ordering::SeqCst);
+        assert!(ctrl.caught_up());
+    }
+
+    #[test]
     fn sampler_ctx_round_trip() {
         let mut cfg = ExperimentConfig::preset("smoke").unwrap();
         cfg.game = "seeker".into();
         let mut s = SamplerCtx::new(&cfg, 0).unwrap();
-        let st = s.refresh_state();
+        assert_eq!(s.width(), 1);
+        let st = s.refresh_states();
         assert_eq!(st.len(), STATE_BYTES);
+    }
+
+    #[test]
+    fn sampler_ctx_vectorized_streams() {
+        let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+        cfg.game = "seeker".into();
+        cfg.envs_per_thread = 4;
+        let mut s = SamplerCtx::new(&cfg, 1).unwrap();
+        assert_eq!(s.width(), 4);
+        assert_eq!(s.base_stream, 4);
+        let st = s.refresh_states();
+        assert_eq!(st.len(), 4 * STATE_BYTES);
+    }
+
+    #[test]
+    fn b1_ctx_matches_seed_stream_layout() {
+        // With B=1, thread `slot` must own exactly the env seed and policy
+        // stream the one-env-per-thread coordinator used: seed + slot*7919
+        // and policy stream id = slot.
+        let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+        cfg.game = "seeker".into();
+        cfg.seed = 123;
+        let ctx = SamplerCtx::new(&cfg, 3).unwrap();
+        assert_eq!(ctx.base_stream, 3);
+        let expect = crate::env::make_env("seeker", 123u64.wrapping_add(3 * 7919)).unwrap();
+        assert_eq!(ctx.envs.env(0).state_vec(), expect.state_vec());
     }
 }

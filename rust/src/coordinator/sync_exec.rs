@@ -1,39 +1,49 @@
 //! Synchronized-Execution driver (paper §4, Figure 3(b), Algorithm 1).
 //!
-//! W sampler threads each take one environment step per round, then block;
-//! the main thread aggregates all W states into ONE batched device
+//! W sampler threads each take B environment steps per round, then block;
+//! the main thread aggregates all W×B states into ONE batched device
 //! inference and distributes the Q-rows back through shared slots (no
-//! message passing). Device transactions per W steps: 1, instead of W.
+//! message passing). Device transactions per W×B steps: 1, instead of W×B.
 //!
 //! Variants:
 //! * **synchronized** (Concurrent Training OFF): after each round the main
 //!   thread performs the due minibatch updates inline — training still
 //!   blocks sampling, acting uses theta.
 //! * **both** (Algorithm 1): a trainer thread runs C/F minibatches per
-//!   C-step window concurrently; acting uses theta_minus; staging flushes
-//!   and theta_minus <- theta at the window barrier.
+//!   C-step window concurrently ([`WindowCtrl`]); acting uses theta_minus;
+//!   staging flushes and theta_minus <- theta at the window barrier.
+//!
+//! Step dispatch: sampler k acts at steps `round_base + k*B .. + B` — the
+//! paper's `i = t mod W` generalized to B-wide stream blocks (B=1 is
+//! exactly the original dispatch). Rounds are always whole: the run
+//! overshoots `total_steps` by up to W×B-1 steps (the paper's W-round
+//! quantization, amplified by B), preserving the one-transaction-per-round
+//! invariant; the async drivers clamp instead because their blocks are
+//! per-thread.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Barrier, Condvar, Mutex};
+use std::sync::{Barrier, Mutex};
 
 use anyhow::{anyhow, Result};
 
 use crate::env::STATE_BYTES;
 use crate::metrics::Phase;
-use crate::replay::StagingBuffer;
+use crate::replay::StagingSet;
 use crate::runtime::{Policy, TrainBatch};
 
-use super::shared::{SamplerCtx, Shared};
+use super::shared::{SamplerCtx, Shared, WindowCtrl};
 
-/// Per-slot shared mailbox: the "shared memory arrays" of the paper.
+/// Per-slot shared mailbox: the "shared memory arrays" of the paper,
+/// widened to B states / B Q-rows per sampler thread.
 struct Slot {
     io: Mutex<SlotIo>,
 }
 
 struct SlotIo {
-    state: Vec<u8>,
+    /// B stacked states, contiguous (`B * STATE_BYTES`).
+    states: Vec<u8>,
+    /// B Q-rows, contiguous (`B * actions`).
     q: Vec<f32>,
-    staging: StagingBuffer,
 }
 
 /// Run the synchronized driver. `concurrent` selects Algorithm 1 vs
@@ -44,38 +54,38 @@ pub fn run_sync(
     mut on_progress: impl FnMut(u64) + Send,
 ) -> Result<()> {
     let w = shared.cfg.threads;
+    let b = shared.cfg.envs_per_thread;
     let total = shared.cfg.total_steps;
     let c = shared.cfg.target_update_period;
     let f = shared.cfg.train_period;
     let actions = shared.qnet.spec().actions;
+    let round = (w * b) as u64;
 
     let slots: Vec<Slot> = (0..w)
         .map(|_| Slot {
             io: Mutex::new(SlotIo {
-                state: vec![0u8; STATE_BYTES],
-                q: vec![0f32; actions],
-                staging: StagingBuffer::new(),
+                states: vec![0u8; b * STATE_BYTES],
+                q: vec![0f32; b * actions],
             }),
         })
         .collect();
+    let staging = StagingSet::new(w * b);
 
     // Round barriers: main + W samplers.
     let round_start = Barrier::new(w + 1);
     let round_done = Barrier::new(w + 1);
     // Base global-step index of the current round (sampler k acts at
-    // round_base + k — the paper's `i = t mod W` dispatch).
+    // round_base + k*B + j).
     let round_base = AtomicU64::new(0);
 
-    // Trainer window protocol (both-mode only).
-    let dispatched = AtomicU64::new(0);
-    let trainer_done = AtomicU64::new(0);
-    let trainer_cv = (Mutex::new(()), Condvar::new());
+    let winctrl = WindowCtrl::new();
 
     std::thread::scope(|scope| -> Result<()> {
         // ---- sampler threads --------------------------------------------
         for slot_id in 0..w {
             let shared = &shared;
             let slots = &slots;
+            let staging = &staging;
             let round_start = &round_start;
             let round_done = &round_done;
             let round_base = &round_base;
@@ -95,10 +105,10 @@ pub fn run_sync(
                         }
                     }
                 };
-                // Publish the initial state, then enter the round loop.
+                // Publish the initial states, then enter the round loop.
                 {
                     let mut io = slots[slot_id].io.lock().unwrap();
-                    ctx.env.write_state(&mut io.state);
+                    ctx.envs.write_states(&mut io.states);
                 }
                 round_done.wait();
                 loop {
@@ -106,24 +116,22 @@ pub fn run_sync(
                     if shared.should_stop() {
                         break;
                     }
-                    let t = round_base.load(Ordering::SeqCst) + slot_id as u64;
-                    let mut io = slots[slot_id].io.lock().unwrap();
-                    let q = io.q.clone();
+                    let t = round_base.load(Ordering::SeqCst) + (slot_id * b) as u64;
+                    let q = slots[slot_id].io.lock().unwrap().q.clone();
                     if concurrent {
-                        let SlotIo { staging, .. } = &mut *io;
-                        ctx.act(shared, t, &q, |frame, a, r, done, start| {
-                            staging.push(frame, a, r, done, start);
+                        ctx.act_block(shared, t, &q, b, |stream, frame, a, r, done, start| {
+                            staging.push(stream, frame, a, r, done, start);
                         });
                     } else {
-                        drop(io);
                         let replay = shared.replay;
-                        ctx.act(shared, t, &q, |frame, a, r, done, start| {
-                            replay.lock().unwrap().push(slot_id, frame, a, r, done, start);
+                        ctx.act_block(shared, t, &q, b, |stream, frame, a, r, done, start| {
+                            replay.lock().unwrap().push(stream, frame, a, r, done, start);
                         });
-                        io = slots[slot_id].io.lock().unwrap();
                     }
-                    ctx.env.write_state(&mut io.state);
-                    drop(io);
+                    {
+                        let mut io = slots[slot_id].io.lock().unwrap();
+                        ctx.envs.write_states(&mut io.states);
+                    }
                     round_done.wait();
                 }
             });
@@ -132,49 +140,17 @@ pub fn run_sync(
         // ---- trainer thread (both-mode) ----------------------------------
         if concurrent {
             let shared = &shared;
-            let dispatched = &dispatched;
-            let trainer_done = &trainer_done;
-            let trainer_cv = &trainer_cv;
-            scope.spawn(move || {
-                let mut batch = TrainBatch::default();
-                loop {
-                    loop {
-                        if shared.should_stop() {
-                            return;
-                        }
-                        if trainer_done.load(Ordering::SeqCst)
-                            < dispatched.load(Ordering::SeqCst)
-                        {
-                            break;
-                        }
-                        let g = trainer_cv.0.lock().unwrap();
-                        let _ = trainer_cv
-                            .1
-                            .wait_timeout(g, std::time::Duration::from_millis(1))
-                            .unwrap();
-                    }
-                    for _ in 0..shared.cfg.batches_per_window() {
-                        if shared.should_stop() {
-                            return;
-                        }
-                        if let Err(e) = shared.do_one_train(&mut batch) {
-                            return shared.fail(format!("trainer: {e}"));
-                        }
-                    }
-                    trainer_done.fetch_add(1, Ordering::SeqCst);
-                    trainer_cv.1.notify_all();
-                }
-            });
+            let winctrl = &winctrl;
+            scope.spawn(move || winctrl.trainer_loop(shared));
         }
 
         // ---- main thread: Algorithm 1's dispatch loop --------------------
-        let mut batch_states = vec![0u8; w * STATE_BYTES];
+        let mut batch_states = vec![0u8; w * b * STATE_BYTES];
         let mut train_batch = TrainBatch::default();
         let mut completed: u64 = 0;
         let mut window_end = c.min(total);
         if concurrent {
-            dispatched.fetch_add(1, Ordering::SeqCst);
-            trainer_cv.1.notify_all();
+            winctrl.dispatch();
         }
 
         round_done.wait(); // initial states published
@@ -191,18 +167,18 @@ pub fn run_sync(
                     break;
                 }
 
-                // Aggregate states -> one batched inference -> scatter Q.
+                // Aggregate W×B states -> one batched inference -> scatter Q.
+                let chunk = b * STATE_BYTES;
                 shared.span(shared.main_lane(), Phase::Sample, || {
                     for (k, slot) in slots.iter().enumerate() {
                         let io = slot.io.lock().unwrap();
-                        batch_states[k * STATE_BYTES..(k + 1) * STATE_BYTES]
-                            .copy_from_slice(&io.state);
+                        batch_states[k * chunk..(k + 1) * chunk].copy_from_slice(&io.states);
                     }
                 });
                 let policy = if concurrent { Policy::ThetaMinus } else { Policy::Theta };
-                let q = match shared
-                    .span(shared.main_lane(), Phase::Infer, || shared.qnet.infer(policy, &batch_states, w))
-                {
+                let q = match shared.span(shared.main_lane(), Phase::Infer, || {
+                    shared.qnet.infer(policy, &batch_states, w * b)
+                }) {
                     Ok(q) => q,
                     Err(e) => {
                         shared.stop.store(true, Ordering::SeqCst);
@@ -210,42 +186,25 @@ pub fn run_sync(
                         return Err(anyhow!("infer: {e}"));
                     }
                 };
+                let qchunk = b * actions;
                 for (k, slot) in slots.iter().enumerate() {
                     let mut io = slot.io.lock().unwrap();
-                    io.q.copy_from_slice(&q[k * actions..(k + 1) * actions]);
+                    io.q.copy_from_slice(&q[k * qchunk..(k + 1) * qchunk]);
                 }
 
                 round_base.store(completed, Ordering::SeqCst);
                 round_start.wait(); // samplers act
                 round_done.wait(); // all done
-                completed += w as u64;
+                completed += round;
 
                 if concurrent {
                     // Window boundary: wait for the trainer, flush, sync.
                     if completed >= window_end {
-                        while trainer_done.load(Ordering::SeqCst)
-                            < dispatched.load(Ordering::SeqCst)
-                        {
-                            if shared.should_stop() {
-                                break;
-                            }
-                            std::thread::sleep(std::time::Duration::from_micros(100));
-                        }
-                        shared.span(shared.main_lane(), Phase::Sync, || {
-                            let mut replay = shared.replay.lock().unwrap();
-                            for (slot_id, slot) in slots.iter().enumerate() {
-                                slot.io
-                                    .lock()
-                                    .unwrap()
-                                    .staging
-                                    .flush_into(&mut replay, slot_id);
-                            }
-                            shared.qnet.sync_target();
-                        });
+                        winctrl.wait_caught_up(shared);
+                        shared.sync_point(&staging);
                         if window_end < total {
                             window_end = (window_end + c).min(total);
-                            dispatched.fetch_add(1, Ordering::SeqCst);
-                            trainer_cv.1.notify_all();
+                            winctrl.dispatch();
                         }
                     }
                 } else {
@@ -264,7 +223,7 @@ pub fn run_sync(
         })();
         // Ensure everyone is released on error paths.
         shared.stop.store(true, Ordering::SeqCst);
-        trainer_cv.1.notify_all();
+        winctrl.notify_all();
         result
     })?;
 

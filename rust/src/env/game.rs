@@ -40,7 +40,7 @@ pub trait Game: Send {
     fn render(&self, buf: &mut [u8]);
 
     /// Scripted competent policy — the "human-proxy" score anchor used by
-    /// the Table 4 reproduction (see DESIGN.md §3).
+    /// the Table 4 reproduction (see rust/DESIGN.md §3).
     fn expert_action(&mut self) -> usize;
 
     /// Reference score anchors (random, human-proxy), measured offline and

@@ -5,7 +5,10 @@
 //! The Arcade Learning Environment is unavailable offline; these games are
 //! built from scratch to exercise the identical code path — per-step CPU
 //! simulation + rendering + preprocessing feeding 84x84x4 uint8 stacks into
-//! the network (DESIGN.md §3 documents the substitution).
+//! the network (rust/DESIGN.md §3 documents the substitution).
+//!
+//! [`vec::VecEnv`] packs B environments per sampler thread so the
+//! coordinator can run W×B streams (rust/DESIGN.md §5).
 
 pub mod atari;
 pub mod breakout;
@@ -17,8 +20,10 @@ pub mod pong;
 pub mod preprocess;
 pub mod registry;
 pub mod seeker;
+pub mod vec;
 
 pub use atari::{make_env, AtariEnv, EnvStep, STACK, STATE_BYTES};
 pub use game::{Game, StepResult, RAW, RAW_FRAME};
 pub use preprocess::{NET, NET_FRAME};
 pub use registry::{make_game, GAMES};
+pub use vec::VecEnv;

@@ -1,0 +1,155 @@
+//! `VecEnv`: B environment instances stepped as one batch.
+//!
+//! The paper's Synchronized Execution batches W size-1 inferences into one
+//! accelerator transaction, but each sampler thread still drives exactly
+//! one environment — throughput is capped by thread count. `VecEnv` is the
+//! missing axis (CuLE / Stooke & Abbeel style): each sampler thread owns B
+//! independent environments, steps them back-to-back, and exposes their
+//! stacked states as ONE contiguous `B * STATE_BYTES` buffer so batched
+//! inference reads the sampler's states without any gather copy. The
+//! coordinator then runs W×B streams and one device transaction serves
+//! W×B environment steps in synchronized modes (rust/DESIGN.md §5).
+//!
+//! Envs keep fully independent seeds and episode lifecycles; `VecEnv` adds
+//! no randomness of its own, so B=1 behaves exactly like a bare
+//! [`AtariEnv`].
+
+use anyhow::Result;
+
+use super::atari::{make_env, AtariEnv, EnvStep, STATE_BYTES};
+
+pub struct VecEnv {
+    envs: Vec<AtariEnv>,
+}
+
+impl VecEnv {
+    /// One environment per seed, all running `game`.
+    pub fn new(game: &str, seeds: &[u64]) -> Result<VecEnv> {
+        let mut envs = Vec::with_capacity(seeds.len());
+        for &seed in seeds {
+            envs.push(make_env(game, seed)?);
+        }
+        Ok(VecEnv { envs })
+    }
+
+    /// Number of environments (B).
+    pub fn len(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.envs.is_empty()
+    }
+
+    pub fn num_actions(&self) -> usize {
+        self.envs[0].num_actions()
+    }
+
+    pub fn env(&self, j: usize) -> &AtariEnv {
+        &self.envs[j]
+    }
+
+    pub fn env_mut(&mut self, j: usize) -> &mut AtariEnv {
+        &mut self.envs[j]
+    }
+
+    /// Step environment `j`.
+    pub fn step(&mut self, j: usize, action: usize) -> EnvStep {
+        self.envs[j].step(action)
+    }
+
+    /// Step every environment with its own action (throughput benches; the
+    /// coordinator's sampler loop interleaves bookkeeping and uses
+    /// [`VecEnv::step`] directly).
+    pub fn step_batch(&mut self, actions: &[usize], out: &mut Vec<EnvStep>) {
+        debug_assert_eq!(actions.len(), self.envs.len());
+        out.clear();
+        for (env, &a) in self.envs.iter_mut().zip(actions.iter()) {
+            out.push(env.step(a));
+        }
+    }
+
+    pub fn reset(&mut self, j: usize) {
+        self.envs[j].reset();
+    }
+
+    /// Write all B stacked states into `out` as contiguous `STATE_BYTES`
+    /// blocks — the zero-copy input of one batched inference.
+    pub fn write_states(&self, out: &mut [u8]) {
+        assert_eq!(out.len(), self.envs.len() * STATE_BYTES);
+        for (j, env) in self.envs.iter().enumerate() {
+            env.write_state(&mut out[j * STATE_BYTES..(j + 1) * STATE_BYTES]);
+        }
+    }
+
+    /// Write environment `j`'s stacked state into `out`.
+    pub fn write_state(&self, j: usize, out: &mut [u8]) {
+        self.envs[j].write_state(out);
+    }
+
+    /// Newest preprocessed plane of environment `j` (what replay stores).
+    pub fn latest_plane(&self, j: usize) -> &[u8] {
+        self.envs[j].latest_plane()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_states_match_per_env_states() {
+        let v = VecEnv::new("seeker", &[1, 2, 3]).unwrap();
+        let mut all = vec![0u8; 3 * STATE_BYTES];
+        v.write_states(&mut all);
+        for j in 0..3 {
+            let mut one = vec![0u8; STATE_BYTES];
+            v.write_state(j, &mut one);
+            assert_eq!(&all[j * STATE_BYTES..(j + 1) * STATE_BYTES], &one[..]);
+        }
+    }
+
+    #[test]
+    fn envs_are_independent_streams() {
+        let mut v = VecEnv::new("pong", &[10, 20]).unwrap();
+        for _ in 0..5 {
+            v.step(0, 2);
+            v.step(1, 2);
+        }
+        let mut a = vec![0u8; STATE_BYTES];
+        let mut b = vec![0u8; STATE_BYTES];
+        v.write_state(0, &mut a);
+        v.write_state(1, &mut b);
+        assert_ne!(a, b, "different seeds must diverge");
+    }
+
+    #[test]
+    fn single_env_matches_bare_atari_env() {
+        // B=1 must be byte-identical to driving AtariEnv directly.
+        let mut v = VecEnv::new("breakout", &[9]).unwrap();
+        let mut bare = make_env("breakout", 9).unwrap();
+        for i in 0..50 {
+            let rv = v.step(0, i % 4);
+            let rb = bare.step(i % 4);
+            assert_eq!(rv.reward, rb.reward);
+            assert_eq!(rv.done, rb.done);
+            if rv.done {
+                v.reset(0);
+                bare.reset();
+            }
+        }
+        let mut sv = vec![0u8; STATE_BYTES];
+        v.write_state(0, &mut sv);
+        let mut sb = vec![0u8; STATE_BYTES];
+        bare.write_state(&mut sb);
+        assert_eq!(sv, sb);
+    }
+
+    #[test]
+    fn step_batch_steps_all() {
+        let mut v = VecEnv::new("seeker", &[1, 2, 3, 4]).unwrap();
+        let mut out = Vec::new();
+        v.step_batch(&[0, 1, 2, 3], &mut out);
+        assert_eq!(out.len(), 4);
+    }
+}

@@ -8,7 +8,7 @@
 //! * [`CostModel::gtx1080_i7`] — fitted to the paper's own single-thread
 //!   measurements (Table 1, column "Standard"/"Concurrent", W=1), which
 //!   pin d_env + d_infer(1) + d_train/F; the contention coefficient is
-//!   fitted to the standard-mode thread plateau. DESIGN.md §3 documents
+//!   fitted to the standard-mode thread plateau. rust/DESIGN.md §3 documents
 //!   the derivation.
 //! * [`CostModel::from_measured`] — calibrated from live benchmarks of
 //!   THIS container's env-step / infer / train costs (see

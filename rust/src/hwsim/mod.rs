@@ -10,7 +10,7 @@
 //! drivers with calibrated task costs — either fitted to the paper's own
 //! single-thread anchors (`CostModel::gtx1080_i7`) or measured live on this
 //! machine (`CostModel::from_measured`) for validation against real runs.
-//! See DESIGN.md §3.
+//! See rust/DESIGN.md §3.
 
 pub mod cost;
 pub mod des;

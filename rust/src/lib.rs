@@ -9,12 +9,14 @@
 //! Three-layer architecture:
 //! * L1/L2 (build time): JAX + Pallas kernels lowered to HLO text
 //!   (`python/compile/`), never imported at runtime.
-//! * L3 (this crate): the coordinator — environments, replay, execution
-//!   modes, evaluation, metrics, hardware-model simulator — plus a PJRT
-//!   runtime that executes the AOT artifacts.
+//! * L3 (this crate): the coordinator — environments (W×B vectorized
+//!   streams), replay, execution modes, evaluation, metrics,
+//!   hardware-model simulator — plus a pluggable execution engine: a
+//!   pure-Rust native backend by default, or PJRT executing the AOT
+//!   artifacts (`--features xla`).
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See rust/DESIGN.md for the system inventory (§2 engines, §5 the W×B
+//! execution model, §7 determinism invariants).
 
 pub mod agent;
 pub mod benchkit;

@@ -24,19 +24,25 @@ use tempo_dqn::util::cli::Args;
 
 const HELP: &str = "\
 tempo-dqn — fast DQN via Concurrent Training + Synchronized Execution
-(Daley & Amato, 2021 reproduction; see DESIGN.md)
+(Daley & Amato, 2021 reproduction; see rust/DESIGN.md)
 
 USAGE:
   tempo-dqn <subcommand> [options]
 
 SUBCOMMANDS:
   train      --preset paper|speedtest|smoke --config FILE --mode MODE
-             --threads N --steps N --game NAME --net tiny|small|nature
-             --seed N --double --lr X --eval-period N
+             --threads N --envs-per-thread B --steps N --game NAME
+             --net tiny|small|nature --seed N --double --lr X
+             --eval-period N
   speedtest  --threads 1,2,4,8 --steps N [--real] [--gantt] [--game NAME]
+             [--envs-per-thread B]
   suite      --steps N --threads N [--games a,b,c] [--episodes N]
   anchors    [--games a,b,c] [--episodes N]
   config     (same options as train; prints the resolved config)
+
+The coordinator runs W = --threads sampler threads with B =
+--envs-per-thread environment streams each; synchronized modes batch all
+W×B inferences into one device transaction per round (rust/DESIGN.md §5).
 ";
 
 fn main() {
@@ -78,8 +84,15 @@ fn cmd_config(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::resolve(args)?;
     println!(
-        "training: game={} net={} mode={} threads={} steps={} seed={}",
-        cfg.game, cfg.net, cfg.mode.name(), cfg.threads, cfg.total_steps, cfg.seed
+        "training: game={} net={} mode={} threads={} envs/thread={} ({} streams) steps={} seed={}",
+        cfg.game,
+        cfg.net,
+        cfg.mode.name(),
+        cfg.threads,
+        cfg.envs_per_thread,
+        cfg.streams(),
+        cfg.total_steps,
+        cfg.seed
     );
     let mut coord = Coordinator::new(cfg, &default_artifact_dir())?;
     let res = coord.run()?;
@@ -134,7 +147,10 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
     }
 
     if real {
-        println!("== real scaled runs on this machine ({steps} steps, {game}) ==");
+        let envs_per_thread = args.usize_or("envs-per-thread", 1)?;
+        println!(
+            "== real scaled runs on this machine ({steps} steps, {game}, B={envs_per_thread}) =="
+        );
         let mut rgrid = RuntimeGrid::new(&threads);
         for &w in &threads {
             for mode in ExecMode::ALL {
@@ -143,6 +159,7 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
                 cfg.net = args.get_or("net", "tiny").to_string();
                 cfg.mode = mode;
                 cfg.threads = w;
+                cfg.envs_per_thread = envs_per_thread;
                 cfg.total_steps = steps;
                 cfg.prepopulate = 1_000.min(steps as usize);
                 cfg.replay_capacity = 100_000;

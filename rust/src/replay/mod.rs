@@ -17,4 +17,4 @@ pub mod ring;
 pub mod staging;
 
 pub use ring::ReplayMemory;
-pub use staging::{StagedTransition, StagingBuffer};
+pub use staging::{StagedTransition, StagingBuffer, StagingSet};

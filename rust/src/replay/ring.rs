@@ -327,6 +327,106 @@ mod tests {
         }
     }
 
+    /// W×B regime: pushes interleaved round-robin across 8 streams (2
+    /// threads × 4 envs), with per-stream episode lengths all different so
+    /// episode boundaries land at different rounds per stream. Sampled
+    /// stacks must stay per-stream, per-episode, and correctly chained.
+    #[test]
+    fn multi_stream_interleaved_episode_boundaries() {
+        const STREAMS: usize = 8;
+        let mut r = mk(64 * STREAMS, STREAMS);
+        // Stream s emits frames (s*30 + k) and ends an episode every s+2
+        // pushes; pushed round-robin like W×B samplers do.
+        let mut counts = [0usize; STREAMS];
+        let mut starts = [true; STREAMS];
+        for _round in 0..24 {
+            for s in 0..STREAMS {
+                let v = (s * 30 + counts[s]) as u8;
+                let done = (counts[s] + 1) % (s + 2) == 0;
+                r.push(s, &frame(v), s as u8, 0.0, done, starts[s]);
+                starts[s] = done; // next push begins a new episode
+                counts[s] += 1;
+            }
+        }
+        let mut batch = TrainBatch::default();
+        r.sample(256, &mut batch).unwrap();
+        let sb = FS * STACK;
+        for b in 0..256 {
+            let st = &batch.states[b * sb..(b + 1) * sb];
+            let chans = [st[0], st[1], st[2], st[3]];
+            // The action identifies the stream; every channel must come
+            // from that stream's 30-value band.
+            let s = batch.actions[b] as usize;
+            let lo = (s * 30) as u8;
+            let hi = lo + 24;
+            assert!(
+                chans.iter().all(|&ch| ch >= lo && ch < hi),
+                "stream {s}: foreign frames in stack {chans:?}"
+            );
+            // Within the stream, channels are the k, k+1 ... chain with the
+            // episode's start frame replicated on the left.
+            let ep_len = s + 2;
+            for c in 0..STACK - 1 {
+                let cur = (chans[c + 1] - lo) as usize;
+                let prev = (chans[c] - lo) as usize;
+                let ep_start = (cur / ep_len) * ep_len;
+                let expect = if cur == ep_start { cur } else { cur - 1 };
+                assert_eq!(
+                    prev, expect,
+                    "stream {s}: chain break at chan {c} in {chans:?} (ep_len {ep_len})"
+                );
+                // Never reach across the episode boundary.
+                assert!(prev >= ep_start, "stream {s}: stack crosses episode start");
+            }
+            // Done-masked successors: done rows replicate s as s'.
+            let ns = &batch.next_states[b * sb..(b + 1) * sb];
+            let cur = (chans[3] - lo) as usize;
+            if batch.dones[b] == 1.0 {
+                assert_eq!((cur + 1) % ep_len, 0, "done flag must sit on episode ends");
+                assert_eq!(ns, st, "done successor must be masked to s");
+            } else {
+                assert_eq!(ns[3], chans[3] + 1, "in-episode successor chains forward");
+                assert_eq!(&ns[..3], &st[1..4], "successor channels shift by one");
+            }
+        }
+    }
+
+    /// After a reset, the first pushed frame of the new episode must be
+    /// replicated across all older channels — exactly what AtariEnv::reset
+    /// does to its own history buffer.
+    #[test]
+    fn start_frame_replication_after_reset() {
+        let mut r = mk(64, 1);
+        // Episode A: 3 frames, ends done. Episode B begins with frame 50.
+        r.push(0, &frame(1), 0, 0.0, false, true);
+        r.push(0, &frame(2), 0, 0.0, false, false);
+        r.push(0, &frame(3), 0, 1.0, true, false);
+        r.push(0, &frame(50), 0, 0.0, false, true); // reset boundary
+        let s = r.latest_state(0).unwrap();
+        assert_eq!([s[0], s[1], s[2], s[3]], [50, 50, 50, 50], "fresh episode replicates start");
+        r.push(0, &frame(51), 0, 0.0, false, false);
+        let s = r.latest_state(0).unwrap();
+        assert_eq!([s[0], s[1], s[2], s[3]], [50, 50, 50, 51]);
+        r.push(0, &frame(52), 0, 0.0, false, false);
+        r.push(0, &frame(53), 0, 0.0, false, false);
+        r.push(0, &frame(54), 0, 0.0, false, false);
+        let s = r.latest_state(0).unwrap();
+        assert_eq!([s[0], s[1], s[2], s[3]], [51, 52, 53, 54], "replication ends past start");
+    }
+
+    /// Stream counts in the W×B range must partition capacity and keep
+    /// sampling uniform over all streams' transitions.
+    #[test]
+    fn wxb_stream_counts_partition_capacity() {
+        for streams in [1usize, 2, 4, 8, 16] {
+            let r = mk(32 * streams, streams);
+            assert_eq!(r.n_streams(), streams);
+            assert_eq!(r.capacity(), 32 * streams);
+        }
+        // Too many streams for the capacity must be rejected, not UB.
+        assert!(ReplayMemory::new(64, 16, FS, STACK, 0).is_err());
+    }
+
     #[test]
     fn sample_before_ready_errors() {
         let mut r = mk(64, 1);

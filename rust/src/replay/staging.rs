@@ -1,4 +1,4 @@
-//! Per-thread staging buffers for Concurrent Training.
+//! Per-stream staging buffers for Concurrent Training.
 //!
 //! Paper §3: "To avoid a race condition between the threads, we temporarily
 //! buffer the experiences collected by the sampler thread and transfer them
@@ -6,8 +6,13 @@
 //! ensures that D does not change during training, which would produce
 //! non-deterministic results."
 //!
-//! Each sampler thread owns one `StagingBuffer` bound to its replay stream;
-//! the main thread flushes all buffers at the target-sync barrier.
+//! One `StagingBuffer` per environment stream (W×B of them), bound to the
+//! stream's replay slot. [`StagingSet`] owns all of them behind per-stream
+//! mutexes so both execution drivers share one flush path: samplers push to
+//! their own streams contention-free, and the main thread flushes every
+//! buffer at the target-sync barrier.
+
+use std::sync::Mutex;
 
 use super::ring::ReplayMemory;
 
@@ -65,9 +70,60 @@ impl StagingBuffer {
     }
 }
 
+/// All staging buffers of one run: buffer `i` feeds replay stream `i`.
+pub struct StagingSet {
+    bufs: Vec<Mutex<StagingBuffer>>,
+}
+
+impl StagingSet {
+    pub fn new(n_streams: usize) -> StagingSet {
+        StagingSet { bufs: (0..n_streams).map(|_| Mutex::new(StagingBuffer::new())).collect() }
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Stage one transition for `stream` (called by that stream's sampler).
+    pub fn push(&self, stream: usize, frame: &[u8], action: u8, reward: f32, done: bool, start: bool) {
+        self.bufs[stream].lock().unwrap().push(frame, action, reward, done, start);
+    }
+
+    /// Move every buffered transition into its replay stream, in stream
+    /// order (the synchronization-point flush).
+    pub fn flush_into(&self, replay: &mut ReplayMemory) {
+        for (stream, buf) in self.bufs.iter().enumerate() {
+            buf.lock().unwrap().flush_into(replay, stream);
+        }
+    }
+
+    /// Buffered transitions across all streams (testing / diagnostics).
+    pub fn pending(&self) -> usize {
+        self.bufs.iter().map(|b| b.lock().unwrap().len()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn staging_set_routes_streams_and_flushes_all() {
+        let mut replay = ReplayMemory::new(128, 2, 4, 4, 0).unwrap();
+        let set = StagingSet::new(2);
+        for v in 0..6u8 {
+            set.push(0, &[v; 4], 0, 0.0, false, v == 0);
+            set.push(1, &[100 + v; 4], 1, 0.0, false, v == 0);
+        }
+        assert_eq!(set.pending(), 12);
+        assert_eq!(replay.len(), 0, "staging must not touch replay");
+        set.flush_into(&mut replay);
+        assert_eq!(set.pending(), 0);
+        assert_eq!(replay.len(), 12);
+        // Stream identity preserved: newest frames differ per stream.
+        assert_eq!(replay.latest_state(0).unwrap()[3], 5);
+        assert_eq!(replay.latest_state(1).unwrap()[3], 105);
+    }
 
     #[test]
     fn flush_preserves_order_and_empties() {

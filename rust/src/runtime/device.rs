@@ -2,39 +2,32 @@
 //!
 //! The paper's hardware model (§2.2) is a heterogeneous machine with W CPU
 //! threads and ONE coprocessor suitable only for neural-network inference
-//! and training. Here the coprocessor is the PJRT CPU client executing the
-//! AOT-compiled HLO artifacts. Two properties of a real GPU matter to the
-//! paper's argument, and both are preserved:
+//! and training. `Device` models the coprocessor's *bus*: which backend does
+//! the math is a pluggable [`ExecutionEngine`] (see rust/DESIGN.md §2). Two
+//! properties of a real GPU matter to the paper's argument, and both are
+//! preserved regardless of engine:
 //!
 //! 1. **Serialized transaction bus** — every host<->device interaction is a
 //!    transaction on a shared bus. We model this with a single `Mutex`
-//!    around the client: threads attempting simultaneous device access
+//!    around the engine: threads attempting simultaneous device access
 //!    contend exactly as the paper's Figure 3(a) describes.
 //! 2. **Batching amplifies throughput** — one batched call is far cheaper
-//!    than W size-1 calls (true on the CPU backend as well: dispatch and
-//!    transfer overhead is per-call).
+//!    than W size-1 calls (true for every engine: per-call dispatch and
+//!    transfer overhead dominates at batch 1).
 //!
 //! Every transaction is counted (count, bytes in/out, nanoseconds held) so
 //! the Figure 3 reproduction can report bus pressure directly.
-//!
-//! # Safety
-//!
-//! `PjRtClient`, `PjRtLoadedExecutable`, and `Literal` hold raw pointers and
-//! internal `Rc`s, so the crate does not mark them `Send`/`Sync`. The
-//! underlying XLA objects are plain heap allocations; the only hazards are
-//! (a) unsynchronized `Rc` refcount updates and (b) concurrent mutation.
-//! `Device` prevents both by construction: the client, all executables, and
-//! every literal that crosses threads are owned by `DeviceInner`, reachable
-//! only through one `Mutex`, and no `Rc` clone or XLA call ever happens
-//! outside that lock. Hence the manual `unsafe impl Send + Sync`.
 
-use std::collections::BTreeMap;
-use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
+
+use super::engine::ExecutionEngine;
+use super::manifest::NetSpec;
+use super::native::NativeEngine;
+use super::tensor::{HostTensor, TensorView};
 
 /// Bus / transaction statistics for the Figure 3 reproduction.
 #[derive(Debug, Default)]
@@ -80,112 +73,63 @@ impl BusStats {
     }
 }
 
-struct DeviceInner {
-    client: xla::PjRtClient,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
-}
-
-/// The single shared accelerator. See module docs for the safety argument.
+/// The single shared accelerator: one engine behind one bus mutex.
 pub struct Device {
-    inner: Mutex<DeviceInner>,
+    engine: Mutex<Box<dyn ExecutionEngine>>,
     pub stats: BusStats,
     platform: String,
 }
 
-unsafe impl Send for Device {}
-unsafe impl Sync for Device {}
-
 impl Device {
-    /// Create the PJRT CPU device.
+    /// The default CPU device (native reference engine). The name is kept
+    /// from the PJRT era so call sites read the same either way.
     pub fn cpu() -> Result<Device> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
-        let platform = client.platform_name();
-        Ok(Device {
-            inner: Mutex::new(DeviceInner { client, executables: BTreeMap::new() }),
-            stats: BusStats::default(),
-            platform,
-        })
+        Ok(Self::with_engine(Box::new(NativeEngine::new())))
+    }
+
+    /// The PJRT/XLA device executing AOT-compiled HLO artifacts.
+    #[cfg(feature = "xla")]
+    pub fn xla() -> Result<Device> {
+        Ok(Self::with_engine(Box::new(super::xla_engine::XlaEngine::new()?)))
+    }
+
+    /// Wrap an arbitrary engine (tests, future backends).
+    pub fn with_engine(engine: Box<dyn ExecutionEngine>) -> Device {
+        let platform = engine.platform_name().to_string();
+        Device { engine: Mutex::new(engine), stats: BusStats::default(), platform }
     }
 
     pub fn platform_name(&self) -> &str {
         &self.platform
     }
 
-    /// Load + compile an HLO-text artifact under `key`. Idempotent per key.
-    pub fn load_hlo(&self, key: &str, path: &Path) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.executables.contains_key(key) {
-            return Ok(());
-        }
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))
-            .with_context(|| "run `make artifacts` to (re)build HLO artifacts")?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = inner
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
-        inner.executables.insert(key.to_string(), exe);
-        Ok(())
+    /// Prepare `entry_name` of `spec` for execution under `key`.
+    /// Idempotent per key.
+    pub fn load_entry(&self, key: &str, spec: &NetSpec, entry_name: &str) -> Result<()> {
+        self.engine.lock().unwrap().load_entry(key, spec, entry_name)
     }
 
     pub fn is_loaded(&self, key: &str) -> bool {
-        self.inner.lock().unwrap().executables.contains_key(key)
+        self.engine.lock().unwrap().is_loaded(key)
     }
 
-    /// Execute entry `key` with host literals; returns the untupled outputs.
+    /// Execute entry `key`; returns the entry's outputs.
     ///
     /// One call == one bus transaction. The device lock is held for the
     /// entire upload-execute-download, mirroring a synchronous accelerator
     /// round trip.
-    pub fn execute(&self, key: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    pub fn execute(&self, key: &str, args: &[TensorView<'_>]) -> Result<Vec<HostTensor>> {
         let t_wait = Instant::now();
-        let inner = self.inner.lock().unwrap();
+        let mut engine = self.engine.lock().unwrap();
         self.stats
             .wait_ns
             .fetch_add(t_wait.elapsed().as_nanos() as u64, Ordering::Relaxed);
 
-        let exe = inner
-            .executables
-            .get(key)
-            .ok_or_else(|| anyhow!("executable {key:?} not loaded"))?;
-
-        let bytes_in: usize = args.iter().map(|l| l.size_bytes()).sum();
+        let bytes_in: usize = args.iter().map(|a| a.size_bytes()).sum();
         let t0 = Instant::now();
-        // Upload inputs as Rust-owned device buffers and use `execute_b`.
-        // NOTE: the crate's `execute(&[Literal])` path leaks every input
-        // device buffer (its C++ shim `release()`s the uploads and never
-        // frees them after Execute) — ~13 MB per train step. Owning the
-        // `PjRtBuffer`s here lets Drop reclaim them (EXPERIMENTS.md §Perf).
-        let mut buffers = Vec::with_capacity(args.len());
-        for lit in args {
-            buffers.push(
-                inner
-                    .client
-                    .buffer_from_host_literal(None, lit)
-                    .map_err(|e| anyhow!("upload {key:?}: {e}"))?,
-            );
-        }
-        let result = exe
-            .execute_b::<xla::PjRtBuffer>(&buffers)
-            .map_err(|e| anyhow!("execute {key:?}: {e}"))?;
-        let buffer = result
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("execute {key:?}: empty result"))?;
-        let tuple = buffer
-            .to_literal_sync()
-            .map_err(|e| anyhow!("download {key:?}: {e}"))?;
+        let outputs = engine.execute(key, args)?;
         let busy = t0.elapsed().as_nanos() as u64;
-
-        let mut tuple = tuple;
-        let outputs = tuple
-            .decompose_tuple()
-            .map_err(|e| anyhow!("untuple {key:?}: {e}"))?;
-        let bytes_out: usize = outputs.iter().map(|l| l.size_bytes()).sum();
+        let bytes_out: usize = outputs.iter().map(|o| o.size_bytes()).sum();
 
         self.stats.transactions.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes_in.fetch_add(bytes_in as u64, Ordering::Relaxed);

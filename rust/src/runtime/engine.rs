@@ -1,0 +1,95 @@
+//! The pluggable execution-engine boundary.
+//!
+//! The paper's hardware model needs *a* coprocessor that batches neural-net
+//! work behind a serialized transaction bus; it does not care what executes
+//! the math. [`ExecutionEngine`] is that seam: [`Device`] owns one engine
+//! behind its bus mutex and forwards every transaction to it. Engines:
+//!
+//! * [`native`](super::native) — pure-Rust reference implementation of the
+//!   compiled entry points (always available; the default).
+//! * `xla_engine` — the PJRT path executing AOT-lowered HLO artifacts
+//!   (`--features xla`; requires vendoring the `xla` crate).
+//!
+//! An entry point is named by the artifact convention the Python AOT
+//! pipeline established: `infer_b{B}`, `train_b{B}`, `train_double_b{B}`.
+//! [`EntryKind`] parses that convention so native engines can dispatch on
+//! meaning while file-based engines just load the artifact.
+//!
+//! [`Device`]: super::device::Device
+
+use anyhow::{bail, Result};
+
+use super::manifest::NetSpec;
+use super::tensor::{HostTensor, TensorView};
+
+/// Parsed meaning of an entry-point name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryKind {
+    /// `infer_b{batch}`: (params, states) -> (q,)
+    Infer { batch: usize },
+    /// `train_b{batch}` / `train_double_b{batch}`:
+    /// (params, target, g, s, states, actions, rewards, next_states, dones,
+    ///  lr) -> (params', g', s', loss)
+    Train { batch: usize, double: bool },
+}
+
+impl EntryKind {
+    pub fn parse(name: &str) -> Result<EntryKind> {
+        if let Some(b) = name.strip_prefix("infer_b") {
+            return Ok(EntryKind::Infer { batch: parse_batch(name, b)? });
+        }
+        if let Some(b) = name.strip_prefix("train_double_b") {
+            return Ok(EntryKind::Train { batch: parse_batch(name, b)?, double: true });
+        }
+        if let Some(b) = name.strip_prefix("train_b") {
+            return Ok(EntryKind::Train { batch: parse_batch(name, b)?, double: false });
+        }
+        bail!("unrecognized entry point {name:?} (expected infer_b*/train_b*/train_double_b*)");
+    }
+}
+
+fn parse_batch(name: &str, digits: &str) -> Result<usize> {
+    digits
+        .parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("entry {name:?}: bad batch size {digits:?}"))
+}
+
+/// One backend capable of executing loaded entry points.
+///
+/// Engines are driven exclusively through [`Device`], which serializes all
+/// calls behind the bus mutex — hence `&mut self` and only `Send`.
+///
+/// [`Device`]: super::device::Device
+pub trait ExecutionEngine: Send {
+    /// Backend identity, e.g. `"native-cpu"`.
+    fn platform_name(&self) -> &str;
+
+    /// Prepare entry `entry_name` of `spec` for execution under `key`.
+    /// Idempotent per key.
+    fn load_entry(&mut self, key: &str, spec: &NetSpec, entry_name: &str) -> Result<()>;
+
+    fn is_loaded(&self, key: &str) -> bool;
+
+    /// Execute one transaction. Input/output ABI is fixed per [`EntryKind`].
+    fn execute(&mut self, key: &str, args: &[TensorView<'_>]) -> Result<Vec<HostTensor>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_entry_names() {
+        assert_eq!(EntryKind::parse("infer_b8").unwrap(), EntryKind::Infer { batch: 8 });
+        assert_eq!(
+            EntryKind::parse("train_b32").unwrap(),
+            EntryKind::Train { batch: 32, double: false }
+        );
+        assert_eq!(
+            EntryKind::parse("train_double_b32").unwrap(),
+            EntryKind::Train { batch: 32, double: true }
+        );
+        assert!(EntryKind::parse("warmup_b2").is_err());
+        assert!(EntryKind::parse("infer_bx").is_err());
+    }
+}

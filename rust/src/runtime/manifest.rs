@@ -4,7 +4,12 @@
 //! frame shape, the HLO entry points with their input signatures, and the
 //! deterministic init-parameter blob. The Rust runtime refuses to run if the
 //! manifest disagrees with what the coordinator expects — shape errors
-//! surface at load time, not inside a PJRT call.
+//! surface at load time, not inside an engine call.
+//!
+//! When no artifact directory exists (the native engine needs none),
+//! [`Manifest::builtin`] synthesizes the equivalent manifest for the three
+//! known architectures, and [`Manifest::init_params`] generates the
+//! deterministic init blob in-process (rust/DESIGN.md §2).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -124,9 +129,113 @@ pub struct Manifest {
     pub version: usize,
     pub actions: usize,
     pub configs: BTreeMap<String, NetSpec>,
+    /// True for the synthesized artifact-free manifest ([`Manifest::builtin`]):
+    /// init params are generated in-process instead of read from blobs.
+    pub synthetic: bool,
 }
 
+/// Batched infer entry points the builtin manifest advertises. The runtime
+/// pads any batch up to the next size, so this caps W×B at 256 streams per
+/// device transaction (plenty beyond the paper's W<=8 grid).
+pub const BUILTIN_INFER_BATCHES: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Train minibatch size the builtin manifest advertises (paper Table 5).
+pub const BUILTIN_TRAIN_BATCH: usize = 32;
+
 impl Manifest {
+    /// Load `dir/manifest.json` if present, otherwise fall back to the
+    /// builtin manifest (native engine; no artifacts required). A manifest
+    /// that exists but fails to load is an error, not a fallback — silently
+    /// substituting synthesized init params for the artifact blob would
+    /// change the network behind the user's back.
+    pub fn load_or_builtin(dir: &Path) -> Result<Manifest> {
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::builtin())
+        }
+    }
+
+    /// Synthesize the manifest the AOT pipeline would emit for the three
+    /// known architectures, without touching the filesystem.
+    pub fn builtin() -> Manifest {
+        let dir = PathBuf::from("<builtin>");
+        let mut configs = BTreeMap::new();
+        for name in ["tiny", "small", "nature"] {
+            let arch = crate::runtime::native::NetArch::by_name(name, 6)
+                .expect("builtin architectures are always known");
+            let p = arch.param_count();
+            let [h, w, c] = arch.frame;
+            let pvec = InputSig { dtype: Dtype::F32, shape: vec![p] };
+            let mut entries = BTreeMap::new();
+            for &b in &BUILTIN_INFER_BATCHES {
+                entries.insert(
+                    format!("infer_b{b}"),
+                    Entry {
+                        file: dir.join(format!("{name}_infer_b{b}.hlo.txt")),
+                        inputs: vec![
+                            pvec.clone(),
+                            InputSig { dtype: Dtype::U8, shape: vec![b, h, w, c] },
+                        ],
+                    },
+                );
+            }
+            let tb = BUILTIN_TRAIN_BATCH;
+            for tag in [format!("train_b{tb}"), format!("train_double_b{tb}")] {
+                entries.insert(
+                    tag.clone(),
+                    Entry {
+                        file: dir.join(format!("{name}_{tag}.hlo.txt")),
+                        inputs: vec![
+                            pvec.clone(),
+                            pvec.clone(),
+                            pvec.clone(),
+                            pvec.clone(),
+                            InputSig { dtype: Dtype::U8, shape: vec![tb, h, w, c] },
+                            InputSig { dtype: Dtype::I32, shape: vec![tb] },
+                            InputSig { dtype: Dtype::F32, shape: vec![tb] },
+                            InputSig { dtype: Dtype::U8, shape: vec![tb, h, w, c] },
+                            InputSig { dtype: Dtype::F32, shape: vec![tb] },
+                            InputSig { dtype: Dtype::F32, shape: vec![] },
+                        ],
+                    },
+                );
+            }
+            configs.insert(
+                name.to_string(),
+                NetSpec {
+                    name: name.to_string(),
+                    param_count: p,
+                    frame: arch.frame,
+                    actions: arch.actions,
+                    gamma: 0.99,
+                    init_params_file: PathBuf::from(format!("{name}_init.bin")),
+                    param_spec: arch
+                        .param_spec()
+                        .into_iter()
+                        .map(|(n, s)| ParamTensor { name: n, shape: s })
+                        .collect(),
+                    entries,
+                },
+            );
+        }
+        Manifest { dir, version: 2, actions: 6, configs, synthetic: true }
+    }
+
+    /// Initial parameters for `spec`: the deterministic in-process init
+    /// (seed 0, matching `aot.py --seed 0`'s role as the canonical
+    /// default) for the synthetic manifest, the artifact blob otherwise.
+    /// A real manifest whose blob file is missing is an error — silently
+    /// substituting synthesized parameters would change the network
+    /// behind the user's back.
+    pub fn init_params(&self, spec: &NetSpec) -> Result<Vec<f32>> {
+        if self.synthetic {
+            let arch = crate::runtime::native::NetArch::from_spec(spec)?;
+            return Ok(crate::runtime::native::init_params(&arch, 0));
+        }
+        self.load_init_params(spec)
+    }
+
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -145,7 +254,7 @@ impl Manifest {
         for (name, c) in json.at(&["configs"])?.as_obj().ok_or_else(|| anyhow!("bad configs"))? {
             configs.insert(name.clone(), parse_netspec(dir, name, c)?);
         }
-        Ok(Manifest { dir: dir.to_path_buf(), version, actions, configs })
+        Ok(Manifest { dir: dir.to_path_buf(), version, actions, configs, synthetic: false })
     }
 
     pub fn config(&self, name: &str) -> Result<&NetSpec> {
@@ -288,6 +397,39 @@ mod tests {
         let text = sample_json().to_string().replace("\"version\":2", "\"version\":1");
         let json = Json::parse(&text).unwrap();
         assert!(Manifest::from_json(Path::new("/a"), &json).is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_is_complete_and_self_consistent() {
+        let m = Manifest::builtin();
+        for name in ["tiny", "small", "nature"] {
+            let spec = m.config(name).unwrap();
+            assert_eq!(spec.frame, [84, 84, 4]);
+            assert_eq!(spec.infer_batches(), BUILTIN_INFER_BATCHES.to_vec());
+            assert_eq!(spec.train_batches(), vec![BUILTIN_TRAIN_BATCH]);
+            let train = spec.entry("train_b32").unwrap();
+            assert_eq!(train.inputs.len(), 10);
+            assert_eq!(train.inputs[0].shape, vec![spec.param_count]);
+            // Param spec must sum to the declared count.
+            let total: usize = spec.param_spec.iter().map(|t| t.shape.iter().product::<usize>()).sum();
+            assert_eq!(total, spec.param_count);
+            // Init is synthesized deterministically when no blob exists.
+            let init = m.init_params(spec).unwrap();
+            assert_eq!(init.len(), spec.param_count);
+            assert_eq!(init, m.init_params(spec).unwrap());
+        }
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back_only_when_absent() {
+        let m = Manifest::load_or_builtin(Path::new("/definitely/not/a/dir")).unwrap();
+        assert!(m.config("tiny").is_ok());
+        // A present-but-broken manifest.json must surface its error.
+        let dir = std::env::temp_dir().join("tempo_dqn_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), b"{ not json").unwrap();
+        assert!(Manifest::load_or_builtin(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

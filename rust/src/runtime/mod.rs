@@ -1,22 +1,40 @@
-//! Runtime layer: loads and executes the AOT-compiled HLO artifacts via the
-//! PJRT CPU client (the "GPU" of the paper's hardware model).
+//! Runtime layer: the pluggable execution engine behind the paper's
+//! "one accelerator" hardware model.
 //!
-//! Pipeline: `python/compile/aot.py` lowers the JAX/Pallas model to HLO text
-//! -> `Manifest` describes the ABI -> `Device` compiles + executes ->
-//! `QNet` owns parameter state and exposes infer / train / sync-target.
+//! Pipeline: `Manifest` describes the network ABI (from `manifest.json`
+//! when artifacts exist, synthesized otherwise) -> `Device` serializes
+//! transactions onto one [`ExecutionEngine`] -> `QNet` owns parameter state
+//! and exposes infer / train / sync-target. Engines:
+//!
+//! * [`native::NativeEngine`] — pure-Rust reference implementation
+//!   (default; no artifacts or external deps needed).
+//! * `xla_engine::XlaEngine` — PJRT executing the AOT-compiled HLO text
+//!   from `python/compile/aot.py` (`--features xla`).
+//!
+//! rust/DESIGN.md §2 documents the seam and the trade-offs.
 
 pub mod device;
+pub mod engine;
 pub mod manifest;
+pub mod native;
 pub mod qnet;
+pub mod tensor;
+#[cfg(feature = "xla")]
+pub mod xla_engine;
 
 pub use device::{BusSnapshot, BusStats, Device};
+pub use engine::{EntryKind, ExecutionEngine};
 pub use manifest::{Dtype, Entry, InputSig, Manifest, NetSpec};
-pub use qnet::{Policy, QNet, SharedLiteral, TrainBatch};
+pub use native::{NativeEngine, NetArch};
+pub use qnet::{Policy, QNet, TrainBatch};
+pub use tensor::{DataVec, DataView, HostTensor, TensorView};
 
 use std::path::PathBuf;
 
 /// Locate the artifacts directory: `$TEMPO_ARTIFACTS` or `./artifacts`
-/// relative to the workspace root.
+/// relative to the workspace root. The directory is allowed to be absent —
+/// `Manifest::load_or_builtin` then synthesizes the manifest for the
+/// native engine.
 pub fn default_artifact_dir() -> PathBuf {
     if let Ok(dir) = std::env::var("TEMPO_ARTIFACTS") {
         return PathBuf::from(dir);

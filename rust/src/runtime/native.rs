@@ -1,0 +1,880 @@
+//! Native execution engine: a pure-Rust reference implementation of the
+//! compiled entry points.
+//!
+//! Mirrors `python/compile/model.py` operation-for-operation — im2col
+//! convolutions, ReLU MLP head, mean-Huber TD loss (standard and Double-DQN
+//! targets), hand-derived backprop, and the fused centered-RMSProp update
+//! from `python/compile/kernels/ref.py` (alpha=0.95, eps=0.01). All math is
+//! plain f32 in a fixed evaluation order, so results are bit-deterministic
+//! across runs and thread counts.
+//!
+//! This engine needs no artifacts: architecture comes from the manifest's
+//! config name (the same three variants `model.make_config` defines), and
+//! initial parameters use the same scheme (zero biases, uniform
+//! ±1/sqrt(fan_in) weights) driven by the in-tree deterministic RNG.
+//!
+//! Memory note: im2col patch matrices are materialized per *sample*, never
+//! per batch, so peak scratch is O(OH·OW·k²·C) regardless of batch size.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::rng::Rng;
+
+use super::engine::{EntryKind, ExecutionEngine};
+use super::manifest::NetSpec;
+use super::tensor::{HostTensor, TensorView};
+
+const RMSPROP_ALPHA: f32 = 0.95;
+const RMSPROP_EPS: f32 = 0.01;
+
+/// One conv layer: `filters` output channels, `kernel`×`kernel` window,
+/// `stride` step, VALID padding (matches `model.ConvSpec`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub filters: usize,
+    pub kernel: usize,
+    pub stride: usize,
+}
+
+/// Architecture of one Q-network variant (matches `model.NetConfig`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetArch {
+    pub name: String,
+    pub frame: [usize; 3], // (H, W, stacked channels)
+    pub convs: Vec<ConvSpec>,
+    pub hidden: Vec<usize>,
+    pub actions: usize,
+}
+
+impl NetArch {
+    /// The three supported architectures (`model.make_config`).
+    pub fn by_name(name: &str, actions: usize) -> Result<NetArch> {
+        let (convs, hidden): (Vec<ConvSpec>, Vec<usize>) = match name {
+            "nature" => (
+                vec![
+                    ConvSpec { filters: 32, kernel: 8, stride: 4 },
+                    ConvSpec { filters: 64, kernel: 4, stride: 2 },
+                    ConvSpec { filters: 64, kernel: 3, stride: 1 },
+                ],
+                vec![512],
+            ),
+            "small" => (
+                vec![
+                    ConvSpec { filters: 16, kernel: 8, stride: 4 },
+                    ConvSpec { filters: 32, kernel: 4, stride: 2 },
+                ],
+                vec![256],
+            ),
+            "tiny" => (vec![ConvSpec { filters: 4, kernel: 8, stride: 8 }], vec![64]),
+            other => bail!("native engine knows no architecture named {other:?}"),
+        };
+        Ok(NetArch { name: name.to_string(), frame: [84, 84, 4], convs, hidden, actions })
+    }
+
+    /// Resolve and cross-check the architecture for a manifest config.
+    pub fn from_spec(spec: &NetSpec) -> Result<NetArch> {
+        let arch = Self::by_name(&spec.name, spec.actions)?;
+        if arch.frame != spec.frame {
+            bail!(
+                "config {:?}: manifest frame {:?} != architecture frame {:?}",
+                spec.name, spec.frame, arch.frame
+            );
+        }
+        if arch.param_count() != spec.param_count {
+            bail!(
+                "config {:?}: manifest has {} params, architecture implies {}",
+                spec.name, spec.param_count, arch.param_count()
+            );
+        }
+        Ok(arch)
+    }
+
+    /// (OH, OW) after each conv layer.
+    pub fn conv_out_hw(&self) -> Vec<(usize, usize)> {
+        let [mut h, mut w, _] = self.frame;
+        self.convs
+            .iter()
+            .map(|c| {
+                h = (h - c.kernel) / c.stride + 1;
+                w = (w - c.kernel) / c.stride + 1;
+                (h, w)
+            })
+            .collect()
+    }
+
+    /// Ordered (name, shape) list defining the flat parameter layout
+    /// (identical to `model.param_spec`).
+    pub fn param_spec(&self) -> Vec<(String, Vec<usize>)> {
+        let mut spec = Vec::new();
+        let mut c_in = self.frame[2];
+        for (i, conv) in self.convs.iter().enumerate() {
+            spec.push((format!("conv{i}_w"), vec![conv.kernel, conv.kernel, c_in, conv.filters]));
+            spec.push((format!("conv{i}_b"), vec![conv.filters]));
+            c_in = conv.filters;
+        }
+        let (h, w) = self.conv_out_hw().last().copied().unwrap_or((self.frame[0], self.frame[1]));
+        let mut dim = h * w * c_in;
+        for (i, &width) in self.hidden.iter().enumerate() {
+            spec.push((format!("fc{i}_w"), vec![dim, width]));
+            spec.push((format!("fc{i}_b"), vec![width]));
+            dim = width;
+        }
+        spec.push(("out_w".to_string(), vec![dim, self.actions]));
+        spec.push(("out_b".to_string(), vec![self.actions]));
+        spec
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_spec().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Byte offsets of each tensor in the flat vector.
+    fn offsets(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        for (_, shape) in self.param_spec() {
+            let n: usize = shape.iter().product();
+            out.push((off, n));
+            off += n;
+        }
+        out
+    }
+
+    pub fn frame_elems(&self) -> usize {
+        self.frame.iter().product()
+    }
+}
+
+/// Deterministic initial parameters: zero biases, uniform ±1/sqrt(fan_in)
+/// weights — the same scheme as `model.init_params`, driven by the in-tree
+/// RNG (one independent stream per tensor, so layouts are stable).
+pub fn init_params(arch: &NetArch, seed: u64) -> Vec<f32> {
+    let mut flat = Vec::with_capacity(arch.param_count());
+    for (idx, (name, shape)) in arch.param_spec().iter().enumerate() {
+        let n: usize = shape.iter().product();
+        if name.ends_with("_b") {
+            flat.extend(std::iter::repeat(0.0f32).take(n));
+        } else {
+            let fan_in: usize = shape[..shape.len() - 1].iter().product();
+            let bound = 1.0 / (fan_in as f32).sqrt();
+            let mut rng = Rng::stream(seed, 0x1217 ^ idx as u64);
+            flat.extend((0..n).map(|_| rng.range_f32(-bound, bound)));
+        }
+    }
+    flat
+}
+
+// ---------------------------------------------------------------------------
+// Dense kernels (fixed evaluation order => bit-deterministic)
+// ---------------------------------------------------------------------------
+
+/// out[M,N] += a[M,K] @ b[K,N] (i-k-j loop order; `out` must be zeroed by
+/// the caller when accumulation is not wanted).
+fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // post-ReLU activations are sparse
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[K,N] += a[M,K]^T @ b[M,N] (weight gradients).
+fn matmul_at_b_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[M,N] = a[M,K] @ b[N,K]^T (input gradients; row-by-row dot products).
+fn matmul_a_bt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// Extract one sample's im2col patch matrix `[OH*OW, k*k*C]`.
+/// Patch column layout is `(ky*k + kx)*C + c`, matching the `[k,k,C,F]`
+/// weight tensor reshaped to `[k*k*C, F]` (as in `model._im2col`).
+fn im2col_sample(
+    x: &[f32], // one sample, [H, W, C]
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    out: &mut [f32], // [OH*OW, kernel*kernel*c]
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kdim = kernel * kernel * c;
+    debug_assert_eq!(out.len(), oh * ow * kdim);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * kdim;
+            for ky in 0..kernel {
+                let src = ((oy * stride + ky) * w + ox * stride) * c;
+                let dst = row + ky * kernel * c;
+                // kx and c are contiguous in both source and destination.
+                out[dst..dst + kernel * c].copy_from_slice(&x[src..src + kernel * c]);
+            }
+        }
+    }
+}
+
+/// Scatter-add one sample's patch gradients back to the input image
+/// (transpose of [`im2col_sample`]).
+fn col2im_sample(
+    dpatches: &[f32], // [OH*OW, kernel*kernel*c]
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    dx: &mut [f32], // one sample, [H, W, C], caller-zeroed
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kdim = kernel * kernel * c;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * kdim;
+            for ky in 0..kernel {
+                let dst = ((oy * stride + ky) * w + ox * stride) * c;
+                let src = row + ky * kernel * c;
+                for i in 0..kernel * c {
+                    dx[dst + i] += dpatches[src + i];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward / backward
+// ---------------------------------------------------------------------------
+
+/// Activations retained for the backward pass.
+struct ForwardCache {
+    /// Normalized input `[B, H, W, C]` (f32, /255).
+    x0: Vec<f32>,
+    /// Post-ReLU output of each conv layer, `[B, OH, OW, F]`.
+    conv_out: Vec<Vec<f32>>,
+    /// Post-ReLU output of each hidden layer, `[B, width]`.
+    fc_out: Vec<Vec<f32>>,
+    /// Q-values `[B, A]`.
+    q: Vec<f32>,
+}
+
+struct Params<'a> {
+    flat: &'a [f32],
+    offsets: Vec<(usize, usize)>,
+}
+
+impl<'a> Params<'a> {
+    fn new(arch: &NetArch, flat: &'a [f32]) -> Result<Params<'a>> {
+        if flat.len() != arch.param_count() {
+            bail!("params: got {} values, want {}", flat.len(), arch.param_count());
+        }
+        Ok(Params { flat, offsets: arch.offsets() })
+    }
+
+    fn tensor(&self, idx: usize) -> &'a [f32] {
+        let (off, n) = self.offsets[idx];
+        &self.flat[off..off + n]
+    }
+}
+
+/// Forward pass; `keep` controls whether activations are cached (training)
+/// or dropped as soon as possible (inference).
+fn forward(arch: &NetArch, p: &Params<'_>, states: &[u8], batch: usize, keep: bool) -> Result<ForwardCache> {
+    let [h0, w0, c0] = arch.frame;
+    if states.len() != batch * h0 * w0 * c0 {
+        bail!("states: got {} bytes, want {}", states.len(), batch * h0 * w0 * c0);
+    }
+    let x0: Vec<f32> = states.iter().map(|&v| v as f32 / 255.0).collect();
+    let kept_x0 = if keep { x0.clone() } else { Vec::new() };
+
+    let hw = arch.conv_out_hw();
+    let mut conv_out: Vec<Vec<f32>> = Vec::with_capacity(arch.convs.len());
+    let (mut h, mut w, mut c) = (h0, w0, c0);
+    let mut x = x0;
+    let mut tensor_idx = 0;
+    for (i, conv) in arch.convs.iter().enumerate() {
+        let (oh, ow) = hw[i];
+        let kdim = conv.kernel * conv.kernel * c;
+        let wmat = p.tensor(tensor_idx); // [kdim, F]
+        let bias = p.tensor(tensor_idx + 1);
+        tensor_idx += 2;
+        let mut y = vec![0.0f32; batch * oh * ow * conv.filters];
+        let mut patches = vec![0.0f32; oh * ow * kdim];
+        for bi in 0..batch {
+            im2col_sample(&x[bi * h * w * c..(bi + 1) * h * w * c], h, w, c, conv.kernel, conv.stride, &mut patches);
+            let yrows = &mut y[bi * oh * ow * conv.filters..(bi + 1) * oh * ow * conv.filters];
+            matmul_acc(&patches, wmat, yrows, oh * ow, kdim, conv.filters);
+        }
+        // Bias + ReLU in one pass.
+        for (j, v) in y.iter_mut().enumerate() {
+            let withb = *v + bias[j % conv.filters];
+            *v = if withb > 0.0 { withb } else { 0.0 };
+        }
+        x = y;
+        (h, w, c) = (oh, ow, conv.filters);
+        if keep {
+            conv_out.push(x.clone());
+        }
+    }
+
+    // Hidden layers (x is now [B, dim]).
+    let mut dim = h * w * c;
+    let mut fc_out: Vec<Vec<f32>> = Vec::with_capacity(arch.hidden.len());
+    for &width in arch.hidden.iter() {
+        let wmat = p.tensor(tensor_idx);
+        let bias = p.tensor(tensor_idx + 1);
+        tensor_idx += 2;
+        let mut y = vec![0.0f32; batch * width];
+        matmul_acc(&x, wmat, &mut y, batch, dim, width);
+        for (j, v) in y.iter_mut().enumerate() {
+            let withb = *v + bias[j % width];
+            *v = if withb > 0.0 { withb } else { 0.0 };
+        }
+        x = y;
+        dim = width;
+        if keep {
+            fc_out.push(x.clone());
+        }
+    }
+
+    // Output head (no activation).
+    let wmat = p.tensor(tensor_idx);
+    let bias = p.tensor(tensor_idx + 1);
+    let mut q = vec![0.0f32; batch * arch.actions];
+    matmul_acc(&x, wmat, &mut q, batch, dim, arch.actions);
+    for (j, v) in q.iter_mut().enumerate() {
+        *v += bias[j % arch.actions];
+    }
+
+    Ok(ForwardCache { x0: kept_x0, conv_out, fc_out, q })
+}
+
+/// Q-values only (inference entry).
+pub fn infer(arch: &NetArch, params: &[f32], states: &[u8], batch: usize) -> Result<Vec<f32>> {
+    let p = Params::new(arch, params)?;
+    Ok(forward(arch, &p, states, batch, false)?.q)
+}
+
+fn huber(x: f32) -> f32 {
+    let ax = x.abs();
+    if ax <= 1.0 {
+        0.5 * x * x
+    } else {
+        ax - 0.5
+    }
+}
+
+fn huber_grad(x: f32) -> f32 {
+    x.clamp(-1.0, 1.0)
+}
+
+/// TD loss + full parameter gradient (the train entry minus the optimizer).
+/// Returns (grad, loss).
+fn td_grads(
+    arch: &NetArch,
+    theta: &[f32],
+    target_theta: &[f32],
+    states: &[u8],
+    actions: &[i32],
+    rewards: &[f32],
+    next_states: &[u8],
+    dones: &[f32],
+    gamma: f32,
+    double: bool,
+) -> Result<(Vec<f32>, f32)> {
+    let batch = actions.len();
+    let p = Params::new(arch, theta)?;
+    let pt = Params::new(arch, target_theta)?;
+    let cache = forward(arch, &p, states, batch, true)?;
+    let qn_target = forward(arch, &pt, next_states, batch, false)?.q;
+    let a = arch.actions;
+
+    // Bootstrap values (never differentiated — stop_gradient in the model).
+    let mut bootstrap = vec![0.0f32; batch];
+    if double {
+        let qn_online = forward(arch, &p, next_states, batch, false)?.q;
+        for b in 0..batch {
+            let row = &qn_online[b * a..(b + 1) * a];
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate().skip(1) {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            bootstrap[b] = qn_target[b * a + best];
+        }
+    } else {
+        for b in 0..batch {
+            bootstrap[b] = qn_target[b * a..(b + 1) * a].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        }
+    }
+
+    // Per-sample TD error -> loss and dL/dq.
+    let mut loss = 0.0f32;
+    let mut dq = vec![0.0f32; batch * a];
+    for b in 0..batch {
+        let act = actions[b];
+        if act < 0 || act as usize >= a {
+            bail!("train: action {act} out of range 0..{a}");
+        }
+        let q_sel = cache.q[b * a + act as usize];
+        let target = rewards[b] + gamma * (1.0 - dones[b]) * bootstrap[b];
+        let d = q_sel - target;
+        loss += huber(d);
+        dq[b * a + act as usize] = huber_grad(d) / batch as f32;
+    }
+    loss /= batch as f32;
+
+    // ---- backward ---------------------------------------------------------
+    let mut grad = vec![0.0f32; arch.param_count()];
+    let offsets = arch.offsets();
+    let n_conv = arch.convs.len();
+    let n_fc = arch.hidden.len();
+    let hw = arch.conv_out_hw();
+    let (last_h, last_w) = hw.last().copied().unwrap_or((arch.frame[0], arch.frame[1]));
+    let last_c = arch.convs.last().map(|c| c.filters).unwrap_or(arch.frame[2]);
+    let flat_dim = last_h * last_w * last_c;
+
+    // Output head.
+    let head_in: &[f32] = if n_fc > 0 { &cache.fc_out[n_fc - 1] } else { &cache.conv_out[n_conv - 1] };
+    let head_dim = if n_fc > 0 { arch.hidden[n_fc - 1] } else { flat_dim };
+    let widx = 2 * n_conv + 2 * n_fc; // out_w tensor index
+    {
+        let (off_w, n_w) = offsets[widx];
+        matmul_at_b_acc(head_in, &dq, &mut grad[off_w..off_w + n_w], batch, head_dim, a);
+        let (off_b, _) = offsets[widx + 1];
+        for b in 0..batch {
+            for j in 0..a {
+                grad[off_b + j] += dq[b * a + j];
+            }
+        }
+    }
+    let out_w = p.tensor(widx);
+    let mut dx = vec![0.0f32; batch * head_dim];
+    matmul_a_bt(&dq, out_w, &mut dx, batch, a, head_dim);
+
+    // Hidden layers, reversed.
+    for i in (0..n_fc).rev() {
+        let width = arch.hidden[i];
+        let post = &cache.fc_out[i];
+        // ReLU mask.
+        for (d, &v) in dx.iter_mut().zip(post.iter()) {
+            if v <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        let in_dim = if i > 0 { arch.hidden[i - 1] } else { flat_dim };
+        let xin: &[f32] = if i > 0 { &cache.fc_out[i - 1] } else { &cache.conv_out[n_conv - 1] };
+        let tidx = 2 * n_conv + 2 * i;
+        let (off_w, n_w) = offsets[tidx];
+        matmul_at_b_acc(xin, &dx, &mut grad[off_w..off_w + n_w], batch, in_dim, width);
+        let (off_b, _) = offsets[tidx + 1];
+        for b in 0..batch {
+            for j in 0..width {
+                grad[off_b + j] += dx[b * width + j];
+            }
+        }
+        let wmat = p.tensor(tidx);
+        let mut dprev = vec![0.0f32; batch * in_dim];
+        matmul_a_bt(&dx, wmat, &mut dprev, batch, width, in_dim);
+        dx = dprev;
+    }
+
+    // Conv layers, reversed. dx currently holds d(conv_out[last]) [B,OH,OW,F].
+    for i in (0..n_conv).rev() {
+        let conv = arch.convs[i];
+        let (oh, ow) = hw[i];
+        let (in_h, in_w, in_c) = if i > 0 {
+            (hw[i - 1].0, hw[i - 1].1, arch.convs[i - 1].filters)
+        } else {
+            (arch.frame[0], arch.frame[1], arch.frame[2])
+        };
+        let kdim = conv.kernel * conv.kernel * in_c;
+        let f = conv.filters;
+        let post = &cache.conv_out[i];
+        for (d, &v) in dx.iter_mut().zip(post.iter()) {
+            if v <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        let tidx = 2 * i;
+        let (off_w, n_w) = offsets[tidx];
+        let (off_b, _) = offsets[tidx + 1];
+        let wmat = p.tensor(tidx);
+        let xin_all: &[f32] = if i > 0 { &cache.conv_out[i - 1] } else { &cache.x0 };
+        let in_sz = in_h * in_w * in_c;
+        let need_dx = i > 0;
+        let mut dprev = if need_dx { vec![0.0f32; batch * in_sz] } else { Vec::new() };
+        let mut patches = vec![0.0f32; oh * ow * kdim];
+        let mut dpatches = vec![0.0f32; oh * ow * kdim];
+        for bi in 0..batch {
+            let dy = &dx[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+            // grad_b
+            for row in 0..oh * ow {
+                for j in 0..f {
+                    grad[off_b + j] += dy[row * f + j];
+                }
+            }
+            // grad_w via recomputed patches
+            im2col_sample(&xin_all[bi * in_sz..(bi + 1) * in_sz], in_h, in_w, in_c, conv.kernel, conv.stride, &mut patches);
+            matmul_at_b_acc(&patches, dy, &mut grad[off_w..off_w + n_w], oh * ow, kdim, f);
+            // d(input) for upstream layers
+            if need_dx {
+                matmul_a_bt(dy, wmat, &mut dpatches, oh * ow, f, kdim);
+                col2im_sample(&dpatches, in_h, in_w, in_c, conv.kernel, conv.stride, &mut dprev[bi * in_sz..(bi + 1) * in_sz]);
+            }
+        }
+        dx = dprev;
+    }
+
+    Ok((grad, loss))
+}
+
+/// Centered RMSProp (the L1 fused kernel's semantics, `rmsprop_ref`).
+fn rmsprop(theta: &mut [f32], grad: &[f32], g: &mut [f32], s: &mut [f32], lr: f32) {
+    for i in 0..theta.len() {
+        let gr = grad[i];
+        g[i] = RMSPROP_ALPHA * g[i] + (1.0 - RMSPROP_ALPHA) * gr;
+        s[i] = RMSPROP_ALPHA * s[i] + (1.0 - RMSPROP_ALPHA) * gr * gr;
+        theta[i] -= lr * gr / (s[i] - g[i] * g[i] + RMSPROP_EPS).sqrt();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+struct LoadedEntry {
+    arch: Arc<NetArch>,
+    kind: EntryKind,
+    gamma: f32,
+}
+
+/// Pure-Rust [`ExecutionEngine`]; see module docs.
+#[derive(Default)]
+pub struct NativeEngine {
+    entries: BTreeMap<String, LoadedEntry>,
+    archs: BTreeMap<String, Arc<NetArch>>,
+}
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        NativeEngine::default()
+    }
+
+    fn arch_for(&mut self, spec: &NetSpec) -> Result<Arc<NetArch>> {
+        if let Some(a) = self.archs.get(&spec.name) {
+            return Ok(a.clone());
+        }
+        let arch = Arc::new(NetArch::from_spec(spec)?);
+        self.archs.insert(spec.name.clone(), arch.clone());
+        Ok(arch)
+    }
+}
+
+impl ExecutionEngine for NativeEngine {
+    fn platform_name(&self) -> &str {
+        "native-cpu"
+    }
+
+    fn load_entry(&mut self, key: &str, spec: &NetSpec, entry_name: &str) -> Result<()> {
+        if self.entries.contains_key(key) {
+            return Ok(());
+        }
+        let kind = EntryKind::parse(entry_name)?;
+        let arch = self.arch_for(spec)?;
+        self.entries.insert(
+            key.to_string(),
+            LoadedEntry { arch, kind, gamma: spec.gamma as f32 },
+        );
+        Ok(())
+    }
+
+    fn is_loaded(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    fn execute(&mut self, key: &str, args: &[TensorView<'_>]) -> Result<Vec<HostTensor>> {
+        let entry = self
+            .entries
+            .get(key)
+            .ok_or_else(|| anyhow!("entry {key:?} not loaded"))?;
+        let arch = &entry.arch;
+        match entry.kind {
+            EntryKind::Infer { batch } => {
+                if args.len() != 2 {
+                    bail!("infer {key:?}: expected 2 inputs, got {}", args.len());
+                }
+                let params = args[0].as_f32("infer params")?;
+                let states = args[1].as_u8("infer states")?;
+                let q = infer(arch, params, states, batch)?;
+                Ok(vec![HostTensor::f32(q, vec![batch, arch.actions])])
+            }
+            EntryKind::Train { batch, double } => {
+                if args.len() != 10 {
+                    bail!("train {key:?}: expected 10 inputs, got {}", args.len());
+                }
+                let theta = args[0].as_f32("train theta")?;
+                let target = args[1].as_f32("train target")?;
+                let g = args[2].as_f32("train g")?;
+                let s = args[3].as_f32("train s")?;
+                let states = args[4].as_u8("train states")?;
+                let actions = args[5].as_i32("train actions")?;
+                let rewards = args[6].as_f32("train rewards")?;
+                let next_states = args[7].as_u8("train next_states")?;
+                let dones = args[8].as_f32("train dones")?;
+                let lr = args[9].as_f32("train lr")?;
+                if actions.len() != batch || rewards.len() != batch || dones.len() != batch {
+                    bail!("train {key:?}: batch vectors must have length {batch}");
+                }
+                if lr.len() != 1 {
+                    bail!("train {key:?}: lr must be a scalar");
+                }
+                let (grad, loss) = td_grads(
+                    arch, theta, target, states, actions, rewards, next_states, dones,
+                    entry.gamma, double,
+                )?;
+                let mut theta2 = theta.to_vec();
+                let mut g2 = g.to_vec();
+                let mut s2 = s.to_vec();
+                rmsprop(&mut theta2, &grad, &mut g2, &mut s2, lr[0]);
+                let p = arch.param_count();
+                Ok(vec![
+                    HostTensor::f32(theta2, vec![p]),
+                    HostTensor::f32(g2, vec![p]),
+                    HostTensor::f32(s2, vec![p]),
+                    HostTensor::scalar_f32(loss),
+                ])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_model_py() {
+        let tiny = NetArch::by_name("tiny", 6).unwrap();
+        assert_eq!(tiny.param_count(), 27_082);
+        let small = NetArch::by_name("small", 6).unwrap();
+        assert_eq!(small.param_count(), 677_686);
+        let nature = NetArch::by_name("nature", 6).unwrap();
+        assert_eq!(nature.param_count(), 1_687_206);
+        assert!(NetArch::by_name("bogus", 6).is_err());
+    }
+
+    #[test]
+    fn conv_geometry_matches_model_py() {
+        let nature = NetArch::by_name("nature", 6).unwrap();
+        assert_eq!(nature.conv_out_hw(), vec![(20, 20), (9, 9), (7, 7)]);
+        let tiny = NetArch::by_name("tiny", 6).unwrap();
+        assert_eq!(tiny.conv_out_hw(), vec![(10, 10)]);
+    }
+
+    /// A miniature architecture so finite-difference checks stay cheap.
+    fn micro_arch() -> NetArch {
+        NetArch {
+            name: "micro".into(),
+            frame: [8, 8, 2],
+            convs: vec![ConvSpec { filters: 2, kernel: 4, stride: 4 }],
+            hidden: vec![8],
+            actions: 3,
+        }
+    }
+
+    fn micro_batch(arch: &NetArch, rng: &mut Rng) -> (Vec<u8>, Vec<i32>, Vec<f32>, Vec<u8>, Vec<f32>) {
+        let b = 4;
+        let fe = arch.frame_elems();
+        let states: Vec<u8> = (0..b * fe).map(|_| rng.below(256) as u8).collect();
+        let next: Vec<u8> = (0..b * fe).map(|_| rng.below(256) as u8).collect();
+        let actions: Vec<i32> = (0..b).map(|_| rng.below(arch.actions as u32) as i32).collect();
+        let rewards: Vec<f32> = (0..b).map(|_| rng.f32() - 0.5).collect();
+        let dones: Vec<f32> = (0..b).map(|i| if i == 1 { 1.0 } else { 0.0 }).collect();
+        (states, actions, rewards, next, dones)
+    }
+
+    fn micro_loss(
+        arch: &NetArch,
+        theta: &[f32],
+        target: &[f32],
+        batch: &(Vec<u8>, Vec<i32>, Vec<f32>, Vec<u8>, Vec<f32>),
+        double: bool,
+    ) -> f32 {
+        let (states, actions, rewards, next, dones) = batch;
+        let b = actions.len();
+        let a = arch.actions;
+        let q = infer(arch, theta, states, b).unwrap();
+        let qn = infer(arch, target, next, b).unwrap();
+        let mut loss = 0.0;
+        for i in 0..b {
+            let bootstrap = if double {
+                let qo = infer(arch, theta, next, b).unwrap();
+                let row = &qo[i * a..(i + 1) * a];
+                let mut best = 0;
+                for (j, &v) in row.iter().enumerate().skip(1) {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                qn[i * a + best]
+            } else {
+                qn[i * a..(i + 1) * a].iter().copied().fold(f32::NEG_INFINITY, f32::max)
+            };
+            let t = rewards[i] + 0.9 * (1.0 - dones[i]) * bootstrap;
+            loss += huber(q[i * a + actions[i] as usize] - t);
+        }
+        loss / b as f32
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let arch = micro_arch();
+        let mut rng = Rng::new(42);
+        let theta = init_params(&arch, 7);
+        // A distinct target net so bootstrap != online values.
+        let target = init_params(&arch, 8);
+        let batch = micro_batch(&arch, &mut rng);
+        let (states, actions, rewards, next, dones) = batch.clone();
+        let (grad, loss) =
+            td_grads(&arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, false)
+                .unwrap();
+        assert!((micro_loss(&arch, &theta, &target, &batch, false) - loss).abs() < 1e-6);
+
+        // Central differences on a spread of parameter indices.
+        let eps = 1e-3f32;
+        let n = theta.len();
+        for &i in &[0usize, 5, 63, 64, 65, 70, 130, n - 4, n - 1] {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let lp = micro_loss(&arch, &tp, &target, &batch, false);
+            tp[i] = theta[i] - eps;
+            let lm = micro_loss(&arch, &tp, &target, &batch, false);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[i]).abs() < 2e-3,
+                "param {i}: finite-diff {fd} vs analytic {}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn double_dqn_gradients_match_finite_differences() {
+        let arch = micro_arch();
+        let mut rng = Rng::new(43);
+        let theta = init_params(&arch, 9);
+        let target = init_params(&arch, 10);
+        let batch = micro_batch(&arch, &mut rng);
+        let (states, actions, rewards, next, dones) = batch.clone();
+        let (grad, loss) =
+            td_grads(&arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, true)
+                .unwrap();
+        assert!((micro_loss(&arch, &theta, &target, &batch, true) - loss).abs() < 1e-6);
+        let eps = 1e-3f32;
+        for &i in &[1usize, 64, 66, 131, theta.len() - 2] {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let lp = micro_loss(&arch, &tp, &target, &batch, true);
+            tp[i] = theta[i] - eps;
+            let lm = micro_loss(&arch, &tp, &target, &batch, true);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[i]).abs() < 2e-3,
+                "param {i}: finite-diff {fd} vs analytic {}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rmsprop_matches_reference_formula() {
+        let mut theta = vec![1.0f32, -2.0];
+        let grad = vec![0.5f32, -0.25];
+        let mut g = vec![0.1f32, 0.0];
+        let mut s = vec![0.2f32, 0.1];
+        rmsprop(&mut theta, &grad, &mut g, &mut s, 0.01);
+        // Hand-computed from rmsprop_ref (alpha=0.95, eps=0.01).
+        let g0 = 0.95 * 0.1 + 0.05 * 0.5;
+        let s0 = 0.95 * 0.2 + 0.05 * 0.25;
+        let p0 = 1.0 - 0.01 * 0.5 / (s0 - g0 * g0 + 0.01f32).sqrt();
+        assert!((g[0] - g0).abs() < 1e-7);
+        assert!((s[0] - s0).abs() < 1e-7);
+        assert!((theta[0] - p0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let arch = NetArch::by_name("tiny", 6).unwrap();
+        let a = init_params(&arch, 0);
+        let b = init_params(&arch, 0);
+        assert_eq!(a, b);
+        let c = init_params(&arch, 1);
+        assert_ne!(a, c);
+        // conv0 weights: fan_in = 8*8*4 = 256 -> |w| <= 1/16.
+        assert!(a[..1024].iter().all(|v| v.abs() <= 1.0 / 16.0 + 1e-6));
+        // conv0 bias is zero.
+        assert!(a[1024..1028].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn im2col_col2im_roundtrip_shapes() {
+        // 4x4x1 image, k=2, s=2 -> 2x2 output, kdim 4.
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut patches = vec![0.0f32; 4 * 4];
+        im2col_sample(&x, 4, 4, 1, 2, 2, &mut patches);
+        // First patch = top-left 2x2 block.
+        assert_eq!(&patches[..4], &[0.0, 1.0, 4.0, 5.0]);
+        // Scatter ones back: non-overlapping stride => all-ones image.
+        let dp = vec![1.0f32; 16];
+        let mut dx = vec![0.0f32; 16];
+        col2im_sample(&dp, 4, 4, 1, 2, 2, &mut dx);
+        assert!(dx.iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,11 +1,11 @@
-//! `QNet`: the Q-network runtime — flat parameter state + compiled entries.
+//! `QNet`: the Q-network runtime — flat parameter state + loaded entries.
 //!
 //! Owns the four flat parameter buffers (theta, theta_minus, RMSProp g/s) and
 //! exposes exactly the operations the coordinator needs:
 //!
 //! * `infer`        — batched Q-values under theta or theta_minus
 //! * `train_step`   — one full minibatch update (TD loss + centered RMSProp),
-//!                    executed by the AOT-compiled `train_b*` artifact
+//!                    executed by the device's `train_b*` entry
 //! * `sync_target`  — theta_minus <- theta (the target-network update)
 //!
 //! Concurrency model: theta_minus is an immutable snapshot swapped only at
@@ -18,25 +18,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, bail, Result};
-use xla::{ElementType, Literal};
 
 use super::device::Device;
 use super::manifest::{Dtype, Manifest, NetSpec};
-
-/// `xla::Literal` wrapper that may be shared across threads.
-///
-/// # Safety
-/// The literal is host memory that is never mutated after construction and
-/// is only *read* (uploaded) by `Device::execute`, which serializes all XLA
-/// calls behind the device mutex.
-pub struct SharedLiteral(pub Literal);
-unsafe impl Send for SharedLiteral {}
-unsafe impl Sync for SharedLiteral {}
+use super::tensor::TensorView;
 
 struct TrainState {
-    theta: Literal,
-    g: Literal,
-    s: Literal,
+    theta: Vec<f32>,
+    g: Vec<f32>,
+    s: Vec<f32>,
 }
 
 /// One training minibatch in host memory (assembled by the replay sampler).
@@ -64,30 +54,17 @@ pub struct QNet {
     train_key: String,
     train_batch: usize,
     infer_batches: Vec<usize>,
-    theta_minus: RwLock<Arc<SharedLiteral>>,
+    theta_minus: RwLock<Arc<Vec<f32>>>,
     train: Mutex<TrainState>,
     pub train_steps: AtomicU64,
     pub target_syncs: AtomicU64,
 }
 
-// Safety: every Literal inside is reachable only through the RwLock/Mutex
-// above; all XLA calls are serialized by Device's mutex. See device.rs.
-unsafe impl Send for QNet {}
-unsafe impl Sync for QNet {}
-
-fn f32_literal(v: &[f32]) -> Literal {
-    Literal::vec1(v)
-}
-
-fn zeros_f32(n: usize) -> Literal {
-    // create_from_shape zero-initializes.
-    Literal::create_from_shape(ElementType::F32.primitive_type(), &[n])
-}
-
 impl QNet {
-    /// Load a network config from the manifest: compiles every infer entry
-    /// plus the chosen train entry, and initializes parameters from the
-    /// deterministic blob the artifacts ship.
+    /// Load a network config from the manifest: registers every infer entry
+    /// plus the chosen train entry with the device's engine, and initializes
+    /// parameters from the manifest's deterministic blob (or the in-process
+    /// equivalent when no artifacts exist).
     pub fn load(
         device: Arc<Device>,
         manifest: &Manifest,
@@ -102,7 +79,7 @@ impl QNet {
             format!("train_b{train_batch}")
         };
 
-        // Validate ABI shapes before compiling anything.
+        // Validate ABI shapes before loading anything.
         let train_entry = spec.entry(&train_key)?;
         if train_entry.inputs.len() != 10 {
             bail!("train entry {train_key} must have 10 inputs (see manifest train_abi)");
@@ -121,21 +98,19 @@ impl QNet {
         }
         for &b in &infer_batches {
             let key = format!("infer_b{b}");
-            device.load_hlo(&qkey(&spec.name, &key), &spec.entry(&key)?.file)?;
+            device.load_entry(&qkey(&spec.name, &key), &spec, &key)?;
         }
-        device.load_hlo(&qkey(&spec.name, &train_key), &train_entry.file)?;
+        device.load_entry(&qkey(&spec.name, &train_key), &spec, &train_key)?;
 
-        let init = manifest.load_init_params(&spec)?;
-        let theta = f32_literal(&init);
-        let theta_minus = theta.clone();
+        let theta = manifest.init_params(&spec)?;
         let p = spec.param_count;
 
         Ok(QNet {
             device,
             train_batch,
             infer_batches,
-            theta_minus: RwLock::new(Arc::new(SharedLiteral(theta_minus))),
-            train: Mutex::new(TrainState { theta, g: zeros_f32(p), s: zeros_f32(p) }),
+            theta_minus: RwLock::new(Arc::new(theta.clone())),
+            train: Mutex::new(TrainState { theta, g: vec![0.0; p], s: vec![0.0; p] }),
             train_key,
             spec,
             train_steps: AtomicU64::new(0),
@@ -155,7 +130,7 @@ impl QNet {
         self.train_batch
     }
 
-    /// Smallest compiled infer batch that fits `n` states.
+    /// Smallest loaded infer batch that fits `n` states.
     pub fn infer_batch_for(&self, n: usize) -> Result<usize> {
         self.infer_batches
             .iter()
@@ -166,20 +141,10 @@ impl QNet {
             })
     }
 
-    fn states_literal(&self, states: &[u8], batch: usize) -> Result<Literal> {
-        let [h, w, c] = self.spec.frame;
-        if states.len() != batch * h * w * c {
-            bail!("states buffer has {} bytes, expected {}x{}x{}x{}",
-                  states.len(), batch, h, w, c);
-        }
-        Literal::create_from_shape_and_untyped_data(ElementType::U8, &[batch, h, w, c], states)
-            .map_err(|e| anyhow!("states literal: {e}"))
-    }
-
     /// Batched Q-values for `n` stacked frames (`n * H*W*C` bytes).
     ///
-    /// If `n` is smaller than the smallest compiled batch, the input is
-    /// zero-padded and the padding rows are dropped from the output.
+    /// If `n` matches no loaded batch size exactly, the input is zero-padded
+    /// up to the next one and the padding rows are dropped from the output.
     /// Returns a row-major `[n, actions]` vector.
     pub fn infer(&self, policy: Policy, states: &[u8], n: usize) -> Result<Vec<f32>> {
         let [h, w, c] = self.spec.frame;
@@ -196,31 +161,40 @@ impl QNet {
             padded[..states.len()].copy_from_slice(states);
             &padded
         };
-        let states_lit = self.states_literal(data, batch)?;
+        let shape = [batch, h, w, c];
         let key = qkey(&self.spec.name, &format!("infer_b{batch}"));
 
         let outputs = match policy {
             Policy::ThetaMinus => {
                 // Snapshot the Arc so the read lock is not held during the
-                // device call — samplers never block the trainer here.
+                // device call — samplers never block the trainer here, and
+                // the parameter buffer itself is never copied.
                 let snap = self.theta_minus.read().unwrap().clone();
-                self.device.execute(&key, &[snap.0.clone(), states_lit])?
+                self.device.execute(
+                    &key,
+                    &[TensorView::f32(&snap, &[self.spec.param_count]), TensorView::u8(data, &shape)],
+                )?
             }
             Policy::Theta => {
-                // Standard DQN path: clone theta under the train lock.
+                // Standard DQN path: clone theta out of the train lock so
+                // training and sampling contend only briefly.
                 let theta = {
                     let st = self.train.lock().unwrap();
                     st.theta.clone()
                 };
-                self.device.execute(&key, &[theta, states_lit])?
+                self.device.execute(
+                    &key,
+                    &[TensorView::f32(&theta, &[self.spec.param_count]), TensorView::u8(data, &shape)],
+                )?
             }
         };
-        let q = outputs
-            .first()
+        let mut q = outputs
+            .into_iter()
+            .next()
             .ok_or_else(|| anyhow!("infer returned no outputs"))?
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("infer output: {e}"))?;
-        Ok(q[..n * self.spec.actions].to_vec())
+            .into_f32("infer q-values")?;
+        q.truncate(n * self.spec.actions);
+        Ok(q)
     }
 
     /// One gradient step on a minibatch. Returns the TD loss.
@@ -229,14 +203,13 @@ impl QNet {
         if batch.actions.len() != b || batch.rewards.len() != b || batch.dones.len() != b {
             bail!("train batch vectors must have length {b}");
         }
-        let states = self.states_literal(&batch.states, b)?;
-        let next_states = self.states_literal(&batch.next_states, b)?;
-        let actions = Literal::vec1(&batch.actions)
-            .reshape(&[b as i64])
-            .map_err(|e| anyhow!("actions literal: {e}"))?;
-        let rewards = f32_literal(&batch.rewards);
-        let dones = f32_literal(&batch.dones);
-        let lr_lit = Literal::scalar(lr);
+        let [h, w, c] = self.spec.frame;
+        if batch.states.len() != b * h * w * c || batch.next_states.len() != b * h * w * c {
+            bail!("train batch states must have {} bytes", b * h * w * c);
+        }
+        let p = self.spec.param_count;
+        let states_shape = [b, h, w, c];
+        let lr_buf = [lr];
         let tm = self.theta_minus.read().unwrap().clone();
         let key = qkey(&self.spec.name, &self.train_key);
 
@@ -244,30 +217,35 @@ impl QNet {
         let outputs = self.device.execute(
             &key,
             &[
-                st.theta.clone(),
-                tm.0.clone(),
-                st.g.clone(),
-                st.s.clone(),
-                states,
-                actions,
-                rewards,
-                next_states,
-                dones,
-                lr_lit,
+                TensorView::f32(&st.theta, &[p]),
+                TensorView::f32(&tm, &[p]),
+                TensorView::f32(&st.g, &[p]),
+                TensorView::f32(&st.s, &[p]),
+                TensorView::u8(&batch.states, &states_shape),
+                TensorView::i32(&batch.actions, &[b]),
+                TensorView::f32(&batch.rewards, &[b]),
+                TensorView::u8(&batch.next_states, &states_shape),
+                TensorView::f32(&batch.dones, &[b]),
+                TensorView::scalar(&lr_buf),
             ],
         )?;
+        if outputs.len() < 4 {
+            bail!("train step returned fewer than 4 outputs");
+        }
         let mut it = outputs.into_iter();
-        let (theta, g, s, loss) = match (it.next(), it.next(), it.next(), it.next()) {
-            (Some(t), Some(g), Some(s), Some(l)) => (t, g, s, l),
-            _ => bail!("train step returned fewer than 4 outputs"),
-        };
+        let theta = it.next().unwrap().into_f32("train theta'")?;
+        let g = it.next().unwrap().into_f32("train g'")?;
+        let s = it.next().unwrap().into_f32("train s'")?;
+        let loss = it.next().unwrap().first_f32("train loss")?;
+        if theta.len() != p || g.len() != p || s.len() != p {
+            bail!("train step returned wrong parameter sizes");
+        }
         st.theta = theta;
         st.g = g;
         st.s = s;
         drop(st);
         self.train_steps.fetch_add(1, Ordering::Relaxed);
-        loss.get_first_element::<f32>()
-            .map_err(|e| anyhow!("loss output: {e}"))
+        Ok(loss)
     }
 
     /// Target-network update: theta_minus <- theta.
@@ -276,20 +254,18 @@ impl QNet {
             let st = self.train.lock().unwrap();
             st.theta.clone()
         };
-        *self.theta_minus.write().unwrap() = Arc::new(SharedLiteral(snap));
+        *self.theta_minus.write().unwrap() = Arc::new(snap);
         self.target_syncs.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Download theta to host (checkpointing / tests).
     pub fn theta_host(&self) -> Result<Vec<f32>> {
-        let st = self.train.lock().unwrap();
-        st.theta.to_vec::<f32>().map_err(|e| anyhow!("theta download: {e}"))
+        Ok(self.train.lock().unwrap().theta.clone())
     }
 
     /// Download theta_minus to host (tests).
     pub fn theta_minus_host(&self) -> Result<Vec<f32>> {
-        let snap = self.theta_minus.read().unwrap().clone();
-        snap.0.to_vec::<f32>().map_err(|e| anyhow!("theta_minus download: {e}"))
+        Ok(self.theta_minus.read().unwrap().as_ref().clone())
     }
 
     /// Overwrite theta (checkpoint restore / tests).
@@ -298,7 +274,7 @@ impl QNet {
             bail!("set_theta: expected {} values, got {}", self.spec.param_count, values.len());
         }
         let mut st = self.train.lock().unwrap();
-        st.theta = f32_literal(values);
+        st.theta = values.to_vec();
         Ok(())
     }
 }

@@ -1,0 +1,164 @@
+//! Host-side tensors exchanged with an [`ExecutionEngine`].
+//!
+//! The engine boundary deliberately traffics in plain host memory — a dtype
+//! tag, a shape, and a flat buffer — so engines are interchangeable: the
+//! native reference engine consumes the buffers directly, while the
+//! (feature-gated) XLA engine converts them to `xla::Literal`s at the edge.
+//! Inputs are borrowed ([`TensorView`], zero-copy from the caller's
+//! buffers); outputs are owned ([`HostTensor`], moved into the caller).
+//!
+//! [`ExecutionEngine`]: super::engine::ExecutionEngine
+
+use anyhow::{bail, Result};
+
+/// Borrowed input tensor (shape is owned — it is a handful of usizes).
+#[derive(Clone, Debug)]
+pub struct TensorView<'a> {
+    pub data: DataView<'a>,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum DataView<'a> {
+    F32(&'a [f32]),
+    U8(&'a [u8]),
+    I32(&'a [i32]),
+}
+
+impl<'a> TensorView<'a> {
+    pub fn f32(data: &'a [f32], shape: &[usize]) -> TensorView<'a> {
+        TensorView { data: DataView::F32(data), shape: shape.to_vec() }
+    }
+
+    pub fn u8(data: &'a [u8], shape: &[usize]) -> TensorView<'a> {
+        TensorView { data: DataView::U8(data), shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: &'a [i32], shape: &[usize]) -> TensorView<'a> {
+        TensorView { data: DataView::I32(data), shape: shape.to_vec() }
+    }
+
+    /// Rank-0 f32 (hyperparameters like the learning rate).
+    pub fn scalar(v: &'a [f32; 1]) -> TensorView<'a> {
+        TensorView { data: DataView::F32(&v[..]), shape: Vec::new() }
+    }
+
+    pub fn elements(&self) -> usize {
+        match self.data {
+            DataView::F32(d) => d.len(),
+            DataView::U8(d) => d.len(),
+            DataView::I32(d) => d.len(),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self.data {
+            DataView::F32(d) => d.len() * 4,
+            DataView::U8(d) => d.len(),
+            DataView::I32(d) => d.len() * 4,
+        }
+    }
+
+    /// The f32 slice, or an ABI error naming `what`.
+    pub fn as_f32(&self, what: &str) -> Result<&'a [f32]> {
+        match self.data {
+            DataView::F32(d) => Ok(d),
+            _ => bail!("{what}: expected f32 tensor"),
+        }
+    }
+
+    pub fn as_u8(&self, what: &str) -> Result<&'a [u8]> {
+        match self.data {
+            DataView::U8(d) => Ok(d),
+            _ => bail!("{what}: expected u8 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self, what: &str) -> Result<&'a [i32]> {
+        match self.data {
+            DataView::I32(d) => Ok(d),
+            _ => bail!("{what}: expected i32 tensor"),
+        }
+    }
+}
+
+/// Owned output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub data: DataVec,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataVec {
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> HostTensor {
+        HostTensor { data: DataVec::F32(data), shape }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor { data: DataVec::F32(vec![v]), shape: Vec::new() }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match &self.data {
+            DataVec::F32(d) => d.len() * 4,
+            DataVec::U8(d) => d.len(),
+            DataVec::I32(d) => d.len() * 4,
+        }
+    }
+
+    /// Take the f32 buffer out (no copy), or an ABI error naming `what`.
+    pub fn into_f32(self, what: &str) -> Result<Vec<f32>> {
+        match self.data {
+            DataVec::F32(d) => Ok(d),
+            _ => bail!("{what}: expected f32 output"),
+        }
+    }
+
+    /// First f32 element (scalar outputs such as the loss).
+    pub fn first_f32(&self, what: &str) -> Result<f32> {
+        match &self.data {
+            DataVec::F32(d) if !d.is_empty() => Ok(d[0]),
+            _ => bail!("{what}: expected non-empty f32 output"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_report_sizes_and_dtypes() {
+        let f = [1.0f32, 2.0];
+        let v = TensorView::f32(&f, &[2]);
+        assert_eq!(v.size_bytes(), 8);
+        assert_eq!(v.elements(), 2);
+        assert!(v.as_f32("x").is_ok());
+        assert!(v.as_u8("x").is_err());
+
+        let u = [3u8; 5];
+        assert_eq!(TensorView::u8(&u, &[5]).size_bytes(), 5);
+
+        let lr = [0.1f32];
+        let s = TensorView::scalar(&lr);
+        assert!(s.shape.is_empty());
+        assert_eq!(s.as_f32("lr").unwrap()[0], 0.1);
+    }
+
+    #[test]
+    fn host_tensor_extraction() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0], vec![3]);
+        assert_eq!(t.size_bytes(), 12);
+        assert_eq!(t.first_f32("t").unwrap(), 1.0);
+        assert_eq!(t.into_f32("t").unwrap(), vec![1.0, 2.0, 3.0]);
+        let s = HostTensor::scalar_f32(7.0);
+        assert_eq!(s.first_f32("s").unwrap(), 7.0);
+    }
+}

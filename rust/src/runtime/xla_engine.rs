@@ -1,0 +1,135 @@
+//! PJRT/XLA execution engine (feature `xla`).
+//!
+//! Executes the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` through the `xla` crate's PJRT CPU client. This
+//! is the original runtime path of the reproduction, preserved behind a
+//! cargo feature because the `xla` crate (xla-rs + a pinned xla_extension)
+//! is not available in the offline build environment; vendor it and build
+//! with `--features xla` to re-enable. rust/DESIGN.md §2 documents the
+//! engine seam.
+//!
+//! # Safety
+//!
+//! `PjRtClient`, `PjRtLoadedExecutable`, and `Literal` hold raw pointers and
+//! internal `Rc`s, so the xla crate does not mark them `Send`. The
+//! underlying XLA objects are plain heap allocations; the only hazards are
+//! (a) unsynchronized `Rc` refcount updates and (b) concurrent mutation.
+//! `Device` prevents both by construction: the engine is reachable only
+//! through the bus `Mutex`, and no `Rc` clone or XLA call ever happens
+//! outside that lock. Hence the manual `unsafe impl Send`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::engine::ExecutionEngine;
+use super::manifest::NetSpec;
+use super::tensor::{DataView, HostTensor, TensorView};
+
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    platform: String,
+}
+
+unsafe impl Send for XlaEngine {}
+
+impl XlaEngine {
+    pub fn new() -> Result<XlaEngine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let platform = client.platform_name();
+        Ok(XlaEngine { client, executables: BTreeMap::new(), platform })
+    }
+
+    fn to_literal(view: &TensorView<'_>) -> Result<xla::Literal> {
+        let dims: Vec<usize> = view.shape.clone();
+        let (ty, bytes): (xla::ElementType, Vec<u8>) = match view.data {
+            DataView::U8(d) => (xla::ElementType::U8, d.to_vec()),
+            DataView::F32(d) => (
+                xla::ElementType::F32,
+                d.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+            DataView::I32(d) => (
+                xla::ElementType::S32,
+                d.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &dims, &bytes)
+            .map_err(|e| anyhow!("literal from view: {e}"))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        // All entry outputs in the artifact ABI are f32.
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal download: {e}"))?;
+        Ok(HostTensor::f32(data, vec![]))
+    }
+}
+
+impl ExecutionEngine for XlaEngine {
+    fn platform_name(&self) -> &str {
+        &self.platform
+    }
+
+    fn load_entry(&mut self, key: &str, spec: &NetSpec, entry_name: &str) -> Result<()> {
+        if self.executables.contains_key(key) {
+            return Ok(());
+        }
+        let path = &spec.entry(entry_name)?.file;
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))
+            .with_context(|| "run `make artifacts` to (re)build HLO artifacts")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        self.executables.insert(key.to_string(), exe);
+        Ok(())
+    }
+
+    fn is_loaded(&self, key: &str) -> bool {
+        self.executables.contains_key(key)
+    }
+
+    fn execute(&mut self, key: &str, args: &[TensorView<'_>]) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .executables
+            .get(key)
+            .ok_or_else(|| anyhow!("executable {key:?} not loaded"))?;
+        // Upload inputs as Rust-owned device buffers and use `execute_b`.
+        // NOTE: the crate's `execute(&[Literal])` path leaks every input
+        // device buffer (its C++ shim `release()`s the uploads and never
+        // frees them after Execute) — ~13 MB per train step. Owning the
+        // `PjRtBuffer`s here lets Drop reclaim them (rust/DESIGN.md §2).
+        let mut buffers = Vec::with_capacity(args.len());
+        for view in args {
+            let lit = Self::to_literal(view)?;
+            buffers.push(
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("upload {key:?}: {e}"))?,
+            );
+        }
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow!("execute {key:?}: {e}"))?;
+        let buffer = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("execute {key:?}: empty result"))?;
+        let tuple = buffer
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download {key:?}: {e}"))?;
+        let mut tuple = tuple;
+        let literals = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untuple {key:?}: {e}"))?;
+        if literals.is_empty() {
+            bail!("execute {key:?}: empty tuple");
+        }
+        literals.iter().map(Self::from_literal).collect()
+    }
+}

@@ -127,6 +127,17 @@ mod tests {
     }
 
     #[test]
+    fn wxb_knobs_parse_in_both_forms() {
+        // The coordinator's W×B knobs: --threads W --envs-per-thread B.
+        let a = parse("train --threads 2 --envs-per-thread 4");
+        assert_eq!(a.usize_or("threads", 1).unwrap(), 2);
+        assert_eq!(a.usize_or("envs-per-thread", 1).unwrap(), 4);
+        let b = parse("train --envs-per-thread=8");
+        assert_eq!(b.usize_or("envs-per-thread", 1).unwrap(), 8);
+        assert_eq!(b.usize_or("envs-per-thread-missing", 1).unwrap(), 1);
+    }
+
+    #[test]
     fn equals_form() {
         let a = parse("bench --mode=both --threads=8");
         assert_eq!(a.str_opt("mode"), Some("both"));

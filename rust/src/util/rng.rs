@@ -2,7 +2,7 @@
 //!
 //! xoshiro256++ seeded via SplitMix64 — fast, high-quality, and trivially
 //! reproducible across runs, which the determinism invariants in
-//! DESIGN.md §7 rely on. Every thread owns its own stream derived from a
+//! rust/DESIGN.md §7 rely on. Every thread owns its own stream derived from a
 //! root seed + stream id, so per-thread action sequences are independent of
 //! scheduling order.
 

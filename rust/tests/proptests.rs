@@ -2,7 +2,7 @@
 //! seeded randomized generation with many iterations per property —
 //! failures print the seed for reproduction).
 //!
-//! Properties cover the determinism invariants from DESIGN.md §7 plus the
+//! Properties cover the determinism invariants from rust/DESIGN.md §7 plus the
 //! from-scratch substrates (JSON, RNG, replay chaining, DES bounds).
 
 use tempo_dqn::config::EpsSchedule;
