@@ -86,7 +86,7 @@ fn des_tables(model: CostModel, label: &str, threads: &[usize], steps: u64) {
     let mut grid = RuntimeGrid::new(threads);
     for &w in threads {
         for mode in ExecMode::ALL {
-            let run = SimRun { steps, c: 10_000, f: 4, threads: w };
+            let run = SimRun { steps, c: 10_000, f: 4, threads: w, ..SimRun::default() };
             let stats = simulate(model, run, mode);
             let hours = stats.makespan_ms * (50_000_000.0 / steps as f64) / 3_600_000.0;
             grid.set(mode, w, hours, 0.0);

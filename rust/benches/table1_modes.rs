@@ -17,7 +17,7 @@ fn main() {
 
     for &w in &threads {
         for mode in ExecMode::ALL {
-            let run = SimRun { steps, c: 10_000, f: 4, threads: w };
+            let run = SimRun { steps, c: 10_000, f: 4, threads: w, ..SimRun::default() };
             bench.run(&format!("des/{}/w{}", mode.name(), w), || {
                 std::hint::black_box(simulate(model, run, mode))
             });

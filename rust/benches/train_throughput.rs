@@ -1,0 +1,84 @@
+//! Train-step throughput across learner-pool widths — the measured side of
+//! the parallel-learner tentpole (rust/DESIGN.md §9).
+//!
+//! Sweeps `learner_threads` over the native engine's sharded train step
+//! (identical bits at every width — pinned by tests; this bench measures
+//! the wall-clock side), and times minibatch assembly (`sample` +
+//! `assemble`), i.e. the cost the prefetch pipeline removes from the
+//! trainer's critical path.
+//!
+//! Run: `cargo bench --bench train_throughput`
+//! CI smoke: `cargo bench --bench train_throughput -- --test`
+//! (tiny net, 1-2 threads, ~60 ms per measurement).
+
+use std::sync::{Arc, RwLock};
+
+use tempo_dqn::benchkit::Bench;
+use tempo_dqn::env::NET_FRAME;
+use tempo_dqn::replay::{BatchSource, DirectSource, ReplayMemory};
+use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, QNet, TrainBatch};
+use tempo_dqn::util::rng::Rng;
+
+fn synthetic_batch(qnet: &QNet, seed: u64) -> TrainBatch {
+    let [h, w, c] = qnet.spec().frame;
+    let b = 32usize;
+    let mut rng = Rng::new(seed);
+    let frame = h * w * c;
+    TrainBatch {
+        states: (0..b * frame).map(|_| rng.below(256) as u8).collect(),
+        next_states: (0..b * frame).map(|_| rng.below(256) as u8).collect(),
+        actions: (0..b).map(|_| rng.below(qnet.spec().actions as u32) as i32).collect(),
+        rewards: (0..b).map(|_| rng.f32() - 0.5).collect(),
+        dones: (0..b).map(|i| if i % 6 == 0 { 1.0 } else { 0.0 }).collect(),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    if smoke {
+        // Keep the CI job seconds-scale; correctness is covered by tests.
+        std::env::set_var("TEMPO_BENCH_MS", "60");
+    }
+    let nets: &[&str] = if smoke { &["tiny"] } else { &["tiny", "small"] };
+    let widths: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+
+    let manifest = Manifest::load_or_builtin(&default_artifact_dir()).expect("manifest");
+    let mut bench = Bench::new();
+
+    for net in nets {
+        let mut base_ns = 0.0f64;
+        for &threads in widths {
+            let device = Arc::new(Device::cpu_with_threads(threads).expect("device"));
+            let qnet = QNet::load(device, &manifest, net, false, 32).expect("qnet");
+            let batch = synthetic_batch(&qnet, 7);
+            let r = bench
+                .run(&format!("train/{net}/b32/learner_threads{threads}"), || {
+                    qnet.train_step(&batch, 2.5e-4).expect("train")
+                })
+                .clone();
+            if threads == 1 {
+                base_ns = r.mean_ns;
+            } else if base_ns > 0.0 {
+                println!("         -> {:.2}x vs 1 thread", base_ns / r.mean_ns);
+            }
+        }
+    }
+
+    // Minibatch assembly: the host-side cost that `prefetch_batches > 0`
+    // overlaps with the train step above. Feeds CostModel::sample_ms.
+    let replay = {
+        let mut r = ReplayMemory::new(100_000, 8, NET_FRAME, 4, 1).expect("replay");
+        let frame = vec![127u8; NET_FRAME];
+        for i in 0..20_000u64 {
+            r.push((i % 8) as usize, &frame, 1, 0.5, i % 97 == 0, i % 97 == 1 || i < 8);
+        }
+        RwLock::new(r)
+    };
+    let source = DirectSource::new(&replay, 1, 32);
+    let mut batch = TrainBatch::default();
+    bench.run("sample/assemble_b32", || {
+        source.next_batch(&mut batch, &|| false).expect("sample")
+    });
+
+    println!("\ntrain rows feed CostModel::train_parallel_frac; the sample row feeds CostModel::sample_ms");
+}

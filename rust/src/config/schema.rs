@@ -98,6 +98,16 @@ pub struct ExperimentConfig {
     /// serves all W×B steps of a round. B=1 reproduces the paper's
     /// one-env-per-thread machine exactly (rust/DESIGN.md §5).
     pub envs_per_thread: usize,
+    /// Learner compute-pool width: the native engine shards each minibatch
+    /// forward/backward over this many lanes with an order-preserving
+    /// gradient reduction, so every value produces bit-identical results
+    /// (rust/DESIGN.md §9). 1 = the serial learner.
+    pub learner_threads: usize,
+    /// Minibatches the replay prefetch pipeline assembles ahead of the
+    /// trainer (windowed modes only). 0 disables prefetch (sample inline,
+    /// the historical behavior); any value yields the identical training
+    /// trajectory — the pipeline is quota-gated at window barriers.
+    pub prefetch_batches: usize,
 
     // Network / artifacts
     pub net: String,
@@ -131,6 +141,8 @@ impl Default for ExperimentConfig {
             mode: ExecMode::Both,
             threads: 8,
             envs_per_thread: 1,
+            learner_threads: 1,
+            prefetch_batches: 1,
             net: "small".into(),
             double: false,
             total_steps: 50_000_000,
@@ -185,6 +197,8 @@ impl ExperimentConfig {
         c.mode = ExecMode::parse(&doc.str_or("run.mode", c.mode.name())?)?;
         c.threads = doc.usize_or("run.threads", c.threads)?;
         c.envs_per_thread = doc.usize_or("run.envs_per_thread", c.envs_per_thread)?;
+        c.learner_threads = doc.usize_or("learner.threads", c.learner_threads)?;
+        c.prefetch_batches = doc.usize_or("learner.prefetch_batches", c.prefetch_batches)?;
         c.net = doc.str_or("net.config", &c.net)?;
         c.double = doc.bool_or("net.double", c.double)?;
         c.total_steps = doc.usize_or("dqn.total_steps", c.total_steps as usize)? as u64;
@@ -225,6 +239,8 @@ impl ExperimentConfig {
         self.seed = args.u64_or("seed", self.seed)?;
         self.threads = args.usize_or("threads", self.threads)?;
         self.envs_per_thread = args.usize_or("envs-per-thread", self.envs_per_thread)?;
+        self.learner_threads = args.usize_or("learner-threads", self.learner_threads)?;
+        self.prefetch_batches = args.usize_or("prefetch-batches", self.prefetch_batches)?;
         self.total_steps = args.u64_or("steps", self.total_steps)?;
         self.replay_capacity = args.usize_or("replay-capacity", self.replay_capacity)?;
         self.target_update_period = args.u64_or("target-period", self.target_update_period)?;
@@ -252,6 +268,23 @@ impl ExperimentConfig {
         }
         if self.envs_per_thread == 0 {
             bail!("envs_per_thread must be >= 1");
+        }
+        if self.learner_threads == 0 {
+            bail!("learner_threads must be >= 1 (1 = serial learner)");
+        }
+        if self.learner_threads > 128 {
+            bail!(
+                "learner_threads = {} is not a plausible compute-pool width (max 128); \
+                 each lane is a persistent OS thread",
+                self.learner_threads
+            );
+        }
+        if self.prefetch_batches > 64 {
+            bail!(
+                "prefetch_batches = {} would preallocate that many minibatch buffers \
+                 (max 64); depth 1-2 already hides assembly latency",
+                self.prefetch_batches
+            );
         }
         if self.train_period == 0 || self.target_update_period == 0 {
             bail!("train_period and target_update_period must be >= 1");
@@ -355,6 +388,36 @@ mod tests {
         let mut bad = c;
         bad.envs_per_thread = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn learner_knobs_default_parse_and_validate() {
+        let c = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(c.learner_threads, 1, "serial learner is the default machine");
+        assert_eq!(c.prefetch_batches, 1, "double-buffered prefetch by default");
+        let mut bad = c.clone();
+        bad.learner_threads = 0;
+        assert!(bad.validate().is_err());
+        bad.learner_threads = 100_000; // would spawn 100k OS threads
+        assert!(bad.validate().is_err());
+        let mut off = c.clone();
+        off.prefetch_batches = 0; // prefetch off is a valid (historical) config
+        off.validate().unwrap();
+        off.prefetch_batches = 1_000_000_000; // would preallocate 1e9 buffers
+        assert!(off.validate().is_err());
+
+        let doc = TomlDoc::parse("preset = \"smoke\"\n[learner]\nthreads = 4\nprefetch_batches = 2\n")
+            .unwrap();
+        let mut c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.learner_threads, 4);
+        assert_eq!(c.prefetch_batches, 2);
+        let args = Args::parse(
+            ["--learner-threads", "2", "--prefetch-batches", "0"].map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.learner_threads, 2);
+        assert_eq!(c.prefetch_batches, 0);
     }
 
     #[test]

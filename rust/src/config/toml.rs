@@ -13,6 +13,9 @@
 //! mode = "both"
 //! threads = 4
 //! envs_per_thread = 8   # W×B = 32 streams
+//! [learner]
+//! threads = 4           # shard each minibatch over 4 lanes (bit-identical)
+//! prefetch_batches = 1  # double-buffer replay batch assembly
 //! ```
 
 use std::collections::BTreeMap;

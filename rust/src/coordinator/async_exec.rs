@@ -26,7 +26,7 @@ use std::sync::atomic::Ordering;
 use anyhow::{anyhow, Result};
 
 use crate::metrics::Phase;
-use crate::replay::StagingSet;
+use crate::replay::{BatchSource, StagingSet, TrainerSource};
 use crate::runtime::{Policy, TrainBatch};
 
 use super::shared::{SamplerCtx, Shared, TrainInterlock, WindowCtrl, WindowGate};
@@ -44,19 +44,37 @@ pub fn run_async(
     let bs = b as u64;
     let total = shared.cfg.total_steps;
     let c = shared.cfg.target_update_period;
+    let bpw = shared.cfg.batches_per_window();
 
     let interlock = TrainInterlock::new();
     let gate = WindowGate::new(if concurrent { c.min(total) } else { u64::MAX });
     let staging = StagingSet::new(w * b);
     let winctrl = WindowCtrl::new();
 
+    // Batch source for the training path: prefetch pipeline for the
+    // windowed trainer (concurrent mode) when enabled, inline sampling
+    // otherwise (TrainerSource owns the eligibility rule).
+    let source = TrainerSource::new(
+        shared.replay,
+        shared.cfg.seed,
+        shared.cfg.minibatch,
+        shared.cfg.prefetch_batches,
+        concurrent,
+    );
+
     std::thread::scope(|scope| -> Result<()> {
+        // ---- prefetch worker (concurrent + prefetch only) ---------------
+        if let Some(pipeline) = source.pipeline() {
+            let shared = &shared;
+            scope.spawn(move || pipeline.worker_loop(&|| shared.should_stop()));
+        }
         // ---- sampler threads --------------------------------------------
         for slot in 0..w {
             let shared = &shared;
             let gate = &gate;
             let interlock = &interlock;
             let staging = &staging;
+            let source: &dyn BatchSource = &source;
             scope.spawn(move || {
                 let mut ctx = match SamplerCtx::new(shared.cfg, slot) {
                     Ok(c) => c,
@@ -79,7 +97,7 @@ pub fn run_async(
                         gate.wait_for_step(shared, t);
                     } else {
                         // The interlock gates the *last* step of the block.
-                        interlock.ensure_trained(shared, t + width as u64 - 1, &mut train_batch);
+                        interlock.ensure_trained(shared, source, t + width as u64 - 1, &mut train_batch);
                     }
                     // After claiming a valid block we must complete it (the
                     // window accounting depends on it); only a worker error
@@ -103,7 +121,7 @@ pub fn run_async(
                     } else {
                         let replay = shared.replay;
                         ctx.act_block(shared, t, &q, width, |stream, frame, a, r, done, start| {
-                            replay.lock().unwrap().push(stream, frame, a, r, done, start);
+                            replay.write().unwrap().push(stream, frame, a, r, done, start);
                         });
                     }
                 }
@@ -114,7 +132,8 @@ pub fn run_async(
         if concurrent {
             let shared = &shared;
             let winctrl = &winctrl;
-            scope.spawn(move || winctrl.trainer_loop(shared));
+            let source: &dyn BatchSource = &source;
+            scope.spawn(move || winctrl.trainer_loop(shared, source));
         }
 
         // ---- main thread: window orchestration (Algorithm 1's role) -----
@@ -122,7 +141,10 @@ pub fn run_async(
             let mut window_end = c.min(total);
             // Dispatch the first training window immediately (it trains on
             // the prepopulated replay while samplers collect window 0).
+            // The grant rides with every dispatch so the prefetch worker
+            // may assemble exactly this window's batches and no more.
             winctrl.dispatch();
+            source.grant(bpw);
             loop {
                 // A window boundary that falls inside a B-step block is only
                 // safe to flush once that whole block has executed (its tail
@@ -158,9 +180,12 @@ pub fn run_async(
                     winctrl.notify_all();
                     break;
                 }
-                // Open the next window and dispatch its training batches.
+                // Open the next window and dispatch its training batches
+                // (grant AFTER the sync_point flush above: prefetched draws
+                // must only ever see post-flush replay contents).
                 window_end = (window_end + c).min(total);
                 winctrl.dispatch();
+                source.grant(bpw);
                 gate.advance(window_end);
             }
         } else {

@@ -16,7 +16,7 @@ pub mod shared;
 pub mod sync_exec;
 
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -74,8 +74,14 @@ impl Coordinator {
     /// Load artifacts (or the builtin manifest when none exist) and build
     /// the full stack for `cfg`.
     pub fn new(cfg: ExperimentConfig, artifact_dir: &std::path::Path) -> Result<Coordinator> {
+        // Validate BEFORE sizing the compute pool: the learner_threads cap
+        // must reject absurd widths while they are still just a number,
+        // not a thread-spawn loop.
+        cfg.validate()?;
         let manifest = Manifest::load_or_builtin(artifact_dir)?;
-        let device = Arc::new(Device::cpu()?);
+        // The engine's persistent compute pool is sized here; any width
+        // yields bit-identical math (rust/DESIGN.md §9).
+        let device = Arc::new(Device::cpu_with_threads(cfg.learner_threads)?);
         let qnet = Arc::new(
             QNet::load(device.clone(), &manifest, &cfg.net, cfg.double, cfg.minibatch)
                 .context("loading Q-network artifacts")?,
@@ -151,9 +157,9 @@ impl Coordinator {
     /// seeds depend only on the global stream id, so the fill is identical
     /// for any (W, B) factorization of the same stream count — and for B=1
     /// it is exactly the per-thread fill of the one-env-per-thread machine.
-    fn prepopulate(&self, replay: &Mutex<ReplayMemory>) -> Result<()> {
+    fn prepopulate(&self, replay: &RwLock<ReplayMemory>) -> Result<()> {
         let streams = self.cfg.streams();
-        let mut replay = replay.lock().unwrap();
+        let mut replay = replay.write().unwrap();
         let per_stream = self.cfg.prepopulate.div_ceil(streams);
         for stream in 0..streams {
             let mut env =
@@ -179,7 +185,7 @@ impl Coordinator {
     /// Run the experiment to completion and return the collected stats.
     pub fn run(&mut self) -> Result<TrainResult> {
         let cfg = self.cfg.clone();
-        let replay = Mutex::new(ReplayMemory::new(
+        let replay = RwLock::new(ReplayMemory::new(
             cfg.replay_capacity,
             cfg.streams(),
             NET_FRAME,

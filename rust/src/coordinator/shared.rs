@@ -24,7 +24,7 @@
 //!   duplicated in both drivers.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, RwLock};
 
 use anyhow::Result;
 
@@ -32,14 +32,16 @@ use crate::agent::{policy::select_rows, EpsGreedy};
 use crate::config::ExperimentConfig;
 use crate::env::{VecEnv, NET_FRAME, STATE_BYTES};
 use crate::metrics::{GanttTrace, Phase, PhaseTimers};
-use crate::replay::{ReplayMemory, StagingSet};
+use crate::replay::{BatchSource, ReplayMemory, StagingSet};
 use crate::runtime::{QNet, TrainBatch};
 
 /// Everything the worker threads share by reference (threads are scoped).
+/// Replay sits behind a `RwLock`: samplers and the staging flush take the
+/// write half; batch assembly (trainer / prefetch worker) only reads.
 pub struct Shared<'a> {
     pub cfg: &'a ExperimentConfig,
     pub qnet: &'a QNet,
-    pub replay: &'a Mutex<ReplayMemory>,
+    pub replay: &'a RwLock<ReplayMemory>,
     pub timers: &'a PhaseTimers,
     pub gantt: Option<&'a GanttTrace>,
     /// Steps claimed by samplers (monotone ticket counter; async drivers
@@ -60,7 +62,7 @@ impl<'a> Shared<'a> {
     pub fn new(
         cfg: &'a ExperimentConfig,
         qnet: &'a QNet,
-        replay: &'a Mutex<ReplayMemory>,
+        replay: &'a RwLock<ReplayMemory>,
         timers: &'a PhaseTimers,
         gantt: Option<&'a GanttTrace>,
     ) -> Self {
@@ -123,13 +125,18 @@ impl<'a> Shared<'a> {
         self.cfg.threads + 1
     }
 
-    /// Sample a minibatch and run one training step, recording the loss.
-    pub fn do_one_train(&self, batch: &mut TrainBatch) -> Result<()> {
+    /// Pull a minibatch from `source` and run one training step, recording
+    /// the loss. Returns `Ok(false)` when the source reports a clean stop
+    /// (run shutting down before another batch arrives).
+    pub fn do_one_train(&self, source: &dyn BatchSource, batch: &mut TrainBatch) -> Result<bool> {
         let lane = self.trainer_lane();
-        self.span(lane, Phase::Sample, || -> Result<()> {
-            let mut replay = self.replay.lock().unwrap();
-            replay.sample(self.cfg.minibatch, batch)
-        })?;
+        // With prefetch this span measures only the O(1) buffer swap (plus
+        // any wait for the worker) — the point of the pipeline.
+        let got = self
+            .span(lane, Phase::Sample, || source.next_batch(batch, &|| self.should_stop()))?;
+        if !got {
+            return Ok(false);
+        }
         let loss = self
             .span(lane, Phase::Train, || self.qnet.train_step(batch, self.cfg.lr as f32))?;
         let t = self.trains_done.fetch_add(1, Ordering::SeqCst);
@@ -140,15 +147,17 @@ impl<'a> Shared<'a> {
                 .unwrap()
                 .push((self.completed.load(Ordering::Relaxed), loss));
         }
-        Ok(())
+        Ok(true)
     }
 
     /// Synchronization point (paper Algorithm 1, line "synchronize"):
     /// flush all staged transitions into replay, then theta_minus <- theta.
-    /// Shared by both drivers.
+    /// Shared by both drivers. Safe against the prefetch pipeline by
+    /// construction: the flush only runs after the trainer consumed every
+    /// granted batch, so no assembly holds the read lock or is pending.
     pub fn sync_point(&self, staging: &StagingSet) {
         self.span(self.main_lane(), Phase::Sync, || {
-            let mut replay = self.replay.lock().unwrap();
+            let mut replay = self.replay.write().unwrap();
             staging.flush_into(&mut replay);
             self.qnet.sync_target();
         });
@@ -170,7 +179,13 @@ impl TrainInterlock {
     /// Block until `trains_done >= t / F`, training ourselves if the duty
     /// is free. Called by a sampler before acting at step `t` (for a block
     /// of B steps, `t` is the block's last step).
-    pub fn ensure_trained(&self, shared: &Shared<'_>, t: u64, batch: &mut TrainBatch) {
+    pub fn ensure_trained(
+        &self,
+        shared: &Shared<'_>,
+        source: &dyn BatchSource,
+        t: u64,
+        batch: &mut TrainBatch,
+    ) {
         let f = shared.cfg.train_period;
         let required = t / f;
         loop {
@@ -182,8 +197,10 @@ impl TrainInterlock {
                 *claimed = true;
                 drop(claimed);
                 while shared.trains_done.load(Ordering::SeqCst) < required && !shared.should_stop() {
-                    if let Err(e) = shared.do_one_train(batch) {
-                        shared.fail(format!("train: {e}"));
+                    match shared.do_one_train(source, batch) {
+                        Ok(true) => {}
+                        Ok(false) => break,
+                        Err(e) => shared.fail(format!("train: {e}")),
                     }
                 }
                 *self.gate.lock().unwrap() = false;
@@ -279,8 +296,10 @@ impl WindowCtrl {
     }
 
     /// The trainer thread's body: for every dispatched window, run
-    /// `batches_per_window()` minibatch updates, then report done.
-    pub fn trainer_loop(&self, shared: &Shared<'_>) {
+    /// `batches_per_window()` minibatch updates pulled from `source`, then
+    /// report done. With a prefetch source, batch t+1 assembles while the
+    /// compute pool grinds through batch t.
+    pub fn trainer_loop(&self, shared: &Shared<'_>, source: &dyn BatchSource) {
         let mut batch = TrainBatch::default();
         loop {
             // Wait for a dispatched window (or stop).
@@ -301,8 +320,10 @@ impl WindowCtrl {
                 if shared.should_stop() {
                     return;
                 }
-                if let Err(e) = shared.do_one_train(&mut batch) {
-                    return shared.fail(format!("trainer: {e}"));
+                match shared.do_one_train(source, &mut batch) {
+                    Ok(true) => {}
+                    Ok(false) => return,
+                    Err(e) => return shared.fail(format!("trainer: {e}")),
                 }
             }
             self.done.fetch_add(1, Ordering::SeqCst);

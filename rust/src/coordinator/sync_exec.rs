@@ -28,7 +28,7 @@ use anyhow::{anyhow, Result};
 
 use crate::env::STATE_BYTES;
 use crate::metrics::Phase;
-use crate::replay::StagingSet;
+use crate::replay::{BatchSource, StagingSet, TrainerSource};
 use crate::runtime::{Policy, TrainBatch};
 
 use super::shared::{SamplerCtx, Shared, WindowCtrl};
@@ -79,8 +79,27 @@ pub fn run_sync(
     let round_base = AtomicU64::new(0);
 
     let winctrl = WindowCtrl::new();
+    let bpw = shared.cfg.batches_per_window();
+
+    // Batch source: prefetch pipeline for the windowed trainer (both-mode)
+    // when enabled, inline sampling otherwise — including synchronized-only
+    // inline training, which interleaves with replay writes every round
+    // (TrainerSource owns the eligibility rule).
+    let source = TrainerSource::new(
+        shared.replay,
+        shared.cfg.seed,
+        shared.cfg.minibatch,
+        shared.cfg.prefetch_batches,
+        concurrent,
+    );
 
     std::thread::scope(|scope| -> Result<()> {
+        // ---- prefetch worker (both-mode + prefetch only) -----------------
+        if let Some(pipeline) = source.pipeline() {
+            let shared = &shared;
+            scope.spawn(move || pipeline.worker_loop(&|| shared.should_stop()));
+        }
+
         // ---- sampler threads --------------------------------------------
         for slot_id in 0..w {
             let shared = &shared;
@@ -125,7 +144,7 @@ pub fn run_sync(
                     } else {
                         let replay = shared.replay;
                         ctx.act_block(shared, t, &q, b, |stream, frame, a, r, done, start| {
-                            replay.lock().unwrap().push(stream, frame, a, r, done, start);
+                            replay.write().unwrap().push(stream, frame, a, r, done, start);
                         });
                     }
                     {
@@ -141,7 +160,8 @@ pub fn run_sync(
         if concurrent {
             let shared = &shared;
             let winctrl = &winctrl;
-            scope.spawn(move || winctrl.trainer_loop(shared));
+            let source: &dyn BatchSource = &source;
+            scope.spawn(move || winctrl.trainer_loop(shared, source));
         }
 
         // ---- main thread: Algorithm 1's dispatch loop --------------------
@@ -151,6 +171,7 @@ pub fn run_sync(
         let mut window_end = c.min(total);
         if concurrent {
             winctrl.dispatch();
+            source.grant(bpw);
         }
 
         round_done.wait(); // initial states published
@@ -205,15 +226,22 @@ pub fn run_sync(
                         if window_end < total {
                             window_end = (window_end + c).min(total);
                             winctrl.dispatch();
+                            // Grant after the flush: the prefetch worker's
+                            // next draws see exactly post-flush replay.
+                            source.grant(bpw);
                         }
                     }
                 } else {
                     // Training blocks the loop (no concurrency).
                     while shared.trains_done.load(Ordering::SeqCst) < completed / f {
-                        if let Err(e) = shared.do_one_train(&mut train_batch) {
-                            shared.stop.store(true, Ordering::SeqCst);
-                            round_start.wait();
-                            return Err(anyhow!("train: {e}"));
+                        match shared.do_one_train(&source, &mut train_batch) {
+                            Ok(true) => {}
+                            Ok(false) => break,
+                            Err(e) => {
+                                shared.stop.store(true, Ordering::SeqCst);
+                                round_start.wait();
+                                return Err(anyhow!("train: {e}"));
+                            }
                         }
                     }
                 }

@@ -143,6 +143,8 @@ mod tests {
             txn_ms: 0.5,
             infer_per_sample_ms: 0.1,
             train_ms: 2.0,
+            train_parallel_frac: 0.8,
+            sample_ms: 0.0,
             sync_ms: 1.0,
             cores: 2,
             contention: 0.0,

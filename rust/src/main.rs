@@ -33,9 +33,10 @@ SUBCOMMANDS:
   train      --preset paper|speedtest|smoke --config FILE --mode MODE
              --threads N --envs-per-thread B --steps N --game NAME
              --net tiny|small|nature --seed N --double --lr X
-             --eval-period N
+             --eval-period N --learner-threads N --prefetch-batches N
   speedtest  --threads 1,2,4,8 --steps N [--real] [--gantt] [--game NAME]
-             [--envs-per-thread B]
+             [--envs-per-thread B] [--learner-threads N]
+             [--prefetch-batches N]
   suite      --steps N --threads N [--games a,b,c] [--episodes N]
   anchors    [--games a,b,c] [--episodes N]
   config     (same options as train; prints the resolved config)
@@ -43,6 +44,10 @@ SUBCOMMANDS:
 The coordinator runs W = --threads sampler threads with B =
 --envs-per-thread environment streams each; synchronized modes batch all
 W×B inferences into one device transaction per round (rust/DESIGN.md §5).
+The learner shards each minibatch over --learner-threads compute lanes and
+double-buffers replay batch assembly (--prefetch-batches, 0 = off); both
+knobs are bit-exact — any setting reproduces the serial trajectory
+(rust/DESIGN.md §9).
 ";
 
 fn main() {
@@ -125,6 +130,8 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
     let real = args.flag("real");
     let steps = args.u64_or("steps", if real { 2_000 } else { 1_000_000 })?;
     let game = args.get_or("game", "pong").to_string();
+    let learner_threads = args.usize_or("learner-threads", 1)?;
+    let prefetch_batches = args.usize_or("prefetch-batches", 1)?;
 
     // DES reproduction of the paper's grid (scaled to 50M steps like the
     // paper's x50 extrapolation of a 1M-step measurement).
@@ -132,7 +139,14 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
     let mut grid = RuntimeGrid::new(&threads);
     for &w in &threads {
         for mode in ExecMode::ALL {
-            let run = SimRun { steps: steps.min(1_000_000), c: 10_000, f: 4, threads: w };
+            let run = SimRun {
+                steps: steps.min(1_000_000),
+                c: 10_000,
+                f: 4,
+                threads: w,
+                learner_threads,
+                prefetch: prefetch_batches > 0,
+            };
             let stats = simulate(model, run, mode);
             let hours = stats.makespan_ms * (50_000_000.0 / run.steps as f64) / 3_600_000.0;
             grid.set(mode, w, hours, 0.0);
@@ -160,6 +174,8 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
                 cfg.mode = mode;
                 cfg.threads = w;
                 cfg.envs_per_thread = envs_per_thread;
+                cfg.learner_threads = learner_threads;
+                cfg.prefetch_batches = prefetch_batches;
                 cfg.total_steps = steps;
                 cfg.prepopulate = 1_000.min(steps as usize);
                 cfg.replay_capacity = 100_000;

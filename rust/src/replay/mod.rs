@@ -12,9 +12,16 @@
 //! `staging` holds the per-thread temporary buffers Concurrent Training
 //! uses so the replay contents never change during a training window
 //! (paper §3: flush only when the threads are synchronized).
+//!
+//! `prefetch` is the trainer-facing batch pipeline: index sampling (RNG,
+//! `&mut`) is split from frame assembly (read-only, `&self`) so a
+//! quota-gated worker can double-buffer minibatches ahead of the learner
+//! without changing the training trajectory by a single bit.
 
+pub mod prefetch;
 pub mod ring;
 pub mod staging;
 
-pub use ring::ReplayMemory;
+pub use prefetch::{BatchSource, DirectSource, PrefetchPipeline, TrainerSource};
+pub use ring::{IndexSampler, ReplayMemory, SampleIndex};
 pub use staging::{StagedTransition, StagingBuffer, StagingSet};

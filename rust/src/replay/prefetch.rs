@@ -1,0 +1,319 @@
+//! Double-buffered replay prefetch: overlap minibatch assembly with the
+//! learner's compute.
+//!
+//! The trainer's critical path used to be `sample → assemble → train_step`,
+//! serialized. After the RNG/assembly split in `replay/ring.rs`, assembly
+//! is read-only, so a background worker can build batch t+1 while the
+//! compute pool grinds through step t. The trainer consumes batches through
+//! the [`BatchSource`] trait and never touches the replay lock itself.
+//!
+//! **Determinism** (the whole point — paper §3 demands bit-reproducible
+//! training): the pipeline must never assemble a batch against replay
+//! contents the serial path would not have seen. Replay only changes at
+//! synchronization points (staging flushes between C-step windows), so the
+//! worker is *quota-gated*: [`BatchSource::grant`] is called next to every
+//! window dispatch — after the flush — and the worker only assembles up to
+//! the granted total. At a window barrier the trainer has consumed exactly
+//! the granted batches, the worker is provably idle, and the flush cannot
+//! race or reorder any draw. The draw sequence itself is a single
+//! [`IndexSampler`] advancing in consumption order, so prefetch on/off
+//! yields the identical trajectory (pinned in `tests/parallel_learner.rs`).
+//!
+//! [`DirectSource`] is the `prefetch_batches = 0` path (and the path of
+//! the non-windowed modes, whose training interleaves with replay writes):
+//! draw + assemble inline under the read lock, exactly the historical
+//! behavior.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, RwLock};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::TrainBatch;
+
+use super::ring::{IndexSampler, ReplayMemory};
+
+/// Where the trainer gets its minibatches.
+///
+/// `next_batch` fills `out` and returns `Ok(true)`, or `Ok(false)` when the
+/// run is stopping and no further batch will arrive (a clean shutdown, not
+/// an error). `grant` raises the number of batches a pipelined source may
+/// assemble ahead; the direct source ignores it.
+pub trait BatchSource: Sync {
+    fn next_batch(&self, out: &mut TrainBatch, should_stop: &dyn Fn() -> bool) -> Result<bool>;
+
+    fn grant(&self, _n: u64) {}
+}
+
+/// Inline sampling: draw under the sampler mutex, assemble under the replay
+/// read lock. Byte-for-byte the historical `ReplayMemory::sample` behavior
+/// (same RNG stream, same call sequence).
+pub struct DirectSource<'a> {
+    replay: &'a RwLock<ReplayMemory>,
+    sampler: Mutex<IndexSampler>,
+    minibatch: usize,
+}
+
+impl<'a> DirectSource<'a> {
+    pub fn new(replay: &'a RwLock<ReplayMemory>, seed: u64, minibatch: usize) -> DirectSource<'a> {
+        DirectSource { replay, sampler: Mutex::new(IndexSampler::new(seed)), minibatch }
+    }
+}
+
+impl BatchSource for DirectSource<'_> {
+    fn next_batch(&self, out: &mut TrainBatch, _should_stop: &dyn Fn() -> bool) -> Result<bool> {
+        let mut sampler = self.sampler.lock().unwrap();
+        let replay = self.replay.read().unwrap();
+        let picks = sampler.draw(&replay, self.minibatch)?;
+        replay.assemble(&picks, out);
+        Ok(true)
+    }
+}
+
+struct Buffers {
+    filled: VecDeque<TrainBatch>,
+    free: Vec<TrainBatch>,
+}
+
+/// The double-buffered (depth-`prefetch_batches`) pipeline. One worker
+/// thread assembles ahead; the trainer swaps finished batches out in O(1).
+pub struct PrefetchPipeline<'a> {
+    replay: &'a RwLock<ReplayMemory>,
+    minibatch: usize,
+    sampler: Mutex<IndexSampler>,
+    /// Total batches the coordinator has authorized (monotone).
+    granted: AtomicU64,
+    /// Batches fully assembled by the worker (monotone).
+    produced: AtomicU64,
+    state: Mutex<Buffers>,
+    cv: Condvar,
+    error: Mutex<Option<String>>,
+}
+
+impl<'a> PrefetchPipeline<'a> {
+    /// `depth` >= 1 batches may sit assembled-but-unconsumed (1 = classic
+    /// double buffering: one in flight, one being built).
+    pub fn new(
+        replay: &'a RwLock<ReplayMemory>,
+        seed: u64,
+        minibatch: usize,
+        depth: usize,
+    ) -> PrefetchPipeline<'a> {
+        let depth = depth.max(1);
+        PrefetchPipeline {
+            replay,
+            minibatch,
+            sampler: Mutex::new(IndexSampler::new(seed)),
+            granted: AtomicU64::new(0),
+            produced: AtomicU64::new(0),
+            state: Mutex::new(Buffers {
+                filled: VecDeque::with_capacity(depth),
+                free: (0..depth).map(|_| TrainBatch::default()).collect(),
+            }),
+            cv: Condvar::new(),
+            error: Mutex::new(None),
+        }
+    }
+
+    /// Batches assembled so far (tests / diagnostics).
+    pub fn produced(&self) -> u64 {
+        self.produced.load(Ordering::SeqCst)
+    }
+
+    /// The worker body: assemble granted batches ahead of the trainer.
+    /// Spawn exactly one per pipeline; returns when `should_stop`.
+    pub fn worker_loop(&self, should_stop: &dyn Fn() -> bool) {
+        loop {
+            if should_stop() {
+                return;
+            }
+            if self.produced.load(Ordering::SeqCst) >= self.granted.load(Ordering::SeqCst) {
+                // No quota: the window barrier is (or will be) flushing
+                // replay. Parking here is what keeps draws deterministic.
+                self.park();
+                continue;
+            }
+            let Some(mut buf) = self.state.lock().unwrap().free.pop() else {
+                self.park();
+                continue;
+            };
+            let result = {
+                let mut sampler = self.sampler.lock().unwrap();
+                let replay = self.replay.read().unwrap();
+                sampler.draw(&replay, self.minibatch).map(|picks| replay.assemble(&picks, &mut buf))
+            };
+            match result {
+                Ok(()) => {
+                    self.state.lock().unwrap().filled.push_back(buf);
+                    self.produced.fetch_add(1, Ordering::SeqCst);
+                    self.cv.notify_all();
+                }
+                Err(e) => {
+                    *self.error.lock().unwrap() = Some(e.to_string());
+                    self.cv.notify_all();
+                    return;
+                }
+            }
+        }
+    }
+
+    fn park(&self) {
+        let g = self.state.lock().unwrap();
+        let _ = self.cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+    }
+}
+
+impl BatchSource for PrefetchPipeline<'_> {
+    fn next_batch(&self, out: &mut TrainBatch, should_stop: &dyn Fn() -> bool) -> Result<bool> {
+        loop {
+            {
+                let mut st = self.state.lock().unwrap();
+                if let Some(mut b) = st.filled.pop_front() {
+                    std::mem::swap(out, &mut b);
+                    st.free.push(b);
+                    drop(st);
+                    self.cv.notify_all();
+                    return Ok(true);
+                }
+            }
+            if let Some(e) = self.error.lock().unwrap().take() {
+                bail!("prefetch worker: {e}");
+            }
+            if should_stop() {
+                return Ok(false);
+            }
+            self.park();
+        }
+    }
+
+    fn grant(&self, n: u64) {
+        self.granted.fetch_add(n, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+}
+
+/// The coordinator-facing source selector, shared by both drivers so the
+/// prefetch-eligibility rule lives in exactly one place: the pipeline only
+/// applies to a *windowed* trainer (its grant protocol needs window
+/// barriers); inline training paths always sample directly.
+pub enum TrainerSource<'a> {
+    Direct(DirectSource<'a>),
+    Prefetch(PrefetchPipeline<'a>),
+}
+
+impl<'a> TrainerSource<'a> {
+    /// `windowed`: the run has a window-dispatched trainer thread
+    /// (concurrent / both modes).
+    pub fn new(
+        replay: &'a RwLock<ReplayMemory>,
+        seed: u64,
+        minibatch: usize,
+        prefetch_batches: usize,
+        windowed: bool,
+    ) -> TrainerSource<'a> {
+        if windowed && prefetch_batches > 0 {
+            TrainerSource::Prefetch(PrefetchPipeline::new(replay, seed, minibatch, prefetch_batches))
+        } else {
+            TrainerSource::Direct(DirectSource::new(replay, seed, minibatch))
+        }
+    }
+
+    /// The pipeline needing a worker thread, when prefetch is active.
+    pub fn pipeline(&self) -> Option<&PrefetchPipeline<'a>> {
+        match self {
+            TrainerSource::Prefetch(p) => Some(p),
+            TrainerSource::Direct(_) => None,
+        }
+    }
+}
+
+impl BatchSource for TrainerSource<'_> {
+    fn next_batch(&self, out: &mut TrainBatch, should_stop: &dyn Fn() -> bool) -> Result<bool> {
+        match self {
+            TrainerSource::Direct(d) => d.next_batch(out, should_stop),
+            TrainerSource::Prefetch(p) => p.next_batch(out, should_stop),
+        }
+    }
+
+    fn grant(&self, n: u64) {
+        if let TrainerSource::Prefetch(p) = self {
+            p.grant(n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    const FS: usize = 8;
+    const STACK: usize = 4;
+
+    fn filled_replay(seed: u64) -> ReplayMemory {
+        let mut r = ReplayMemory::new(256, 2, FS, STACK, seed).unwrap();
+        for v in 0..60u8 {
+            r.push(0, &[v; FS], v, 0.5, v % 11 == 10, v == 0 || v % 11 == 0);
+            r.push(1, &[200u8.wrapping_sub(v); FS], v, 0.0, v % 13 == 12, v == 0 || v % 13 == 0);
+        }
+        r
+    }
+
+    #[test]
+    fn direct_source_matches_inline_sample() {
+        let replay = RwLock::new(filled_replay(5));
+        let mut reference = filled_replay(5);
+        let source = DirectSource::new(&replay, 5, 16);
+        let never = || false;
+        for _ in 0..4 {
+            let mut got = TrainBatch::default();
+            assert!(source.next_batch(&mut got, &never).unwrap());
+            let mut want = TrainBatch::default();
+            reference.sample(16, &mut want).unwrap();
+            assert_eq!(got.states, want.states);
+            assert_eq!(got.actions, want.actions);
+            assert_eq!(got.rewards, want.rewards);
+        }
+    }
+
+    #[test]
+    fn pipeline_respects_grants_and_preserves_order() {
+        let replay = RwLock::new(filled_replay(9));
+        let pipeline = PrefetchPipeline::new(&replay, 9, 8, 2);
+        let stop = AtomicBool::new(false);
+        let mut reference = filled_replay(9);
+        std::thread::scope(|scope| {
+            scope.spawn(|| pipeline.worker_loop(&|| stop.load(Ordering::SeqCst)));
+
+            // No grant yet: nothing may be produced.
+            std::thread::sleep(Duration::from_millis(20));
+            assert_eq!(pipeline.produced(), 0, "worker ran ahead of its grant");
+
+            pipeline.grant(5);
+            let should_stop = || stop.load(Ordering::SeqCst);
+            for _ in 0..5 {
+                let mut got = TrainBatch::default();
+                assert!(pipeline.next_batch(&mut got, &should_stop).unwrap());
+                let mut want = TrainBatch::default();
+                reference.sample(8, &mut want).unwrap();
+                assert_eq!(got.states, want.states, "prefetched batch out of order");
+                assert_eq!(got.actions, want.actions);
+            }
+            // Quota exhausted: produced stays at the grant.
+            std::thread::sleep(Duration::from_millis(20));
+            assert_eq!(pipeline.produced(), 5);
+            stop.store(true, Ordering::SeqCst);
+        });
+    }
+
+    #[test]
+    fn next_batch_reports_clean_stop() {
+        let replay = RwLock::new(filled_replay(1));
+        let pipeline = PrefetchPipeline::new(&replay, 1, 8, 1);
+        // No worker, no grant; a stopping run must get Ok(false), not hang.
+        let mut out = TrainBatch::default();
+        assert!(!pipeline.next_batch(&mut out, &|| true).unwrap());
+    }
+}

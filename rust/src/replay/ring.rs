@@ -9,6 +9,18 @@
 //! (exactly what AtariEnv::reset does to its history). The successor state
 //! s'_t ends at slot t+1; when done_t the bootstrap is masked by `done`, so
 //! the (new-episode) successor content is irrelevant but still well-formed.
+//!
+//! Sampling is split into two halves so the prefetch pipeline
+//! (`replay/prefetch.rs`) can overlap batch assembly with training:
+//!
+//! * [`IndexSampler::draw`] — the RNG half: picks uniform transition
+//!   indices. Needs `&mut` (it advances the RNG) but is O(batch).
+//! * [`ReplayMemory::assemble`] — the frame half: reconstructs the stacked
+//!   states for drawn indices. Read-only (`&self`), so it runs under a
+//!   shared lock while samplers only contend for the brief write half.
+//!
+//! [`ReplayMemory::sample`] composes the two with an internally-owned
+//! sampler, byte-for-byte equivalent to the historical single-call API.
 
 use anyhow::{bail, Result};
 
@@ -53,11 +65,68 @@ impl Stream {
     }
 }
 
+/// One drawn minibatch element: a stream id plus the logical slot of the
+/// transition's newest frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SampleIndex {
+    pub stream: usize,
+    pub slot: usize,
+}
+
+/// The index-sampling RNG, split from frame assembly.
+///
+/// Uses the exact stream derivation `ReplayMemory` used historically
+/// (root seed, stream id `"REPL"`), so an external sampler constructed
+/// from the same seed reproduces the memory's internal draw sequence
+/// bit-for-bit.
+pub struct IndexSampler {
+    rng: Rng,
+}
+
+impl IndexSampler {
+    pub fn new(seed: u64) -> IndexSampler {
+        IndexSampler { rng: Rng::stream(seed, 0x5245504c) } // "REPL"
+    }
+
+    /// Draw `n` transition indices uniformly over all streams' sampleable
+    /// transitions. Errors until enough transitions are stored.
+    pub fn draw(&mut self, replay: &ReplayMemory, n: usize) -> Result<Vec<SampleIndex>> {
+        draw_indices(&mut self.rng, &replay.streams, replay.stack, n)
+    }
+}
+
+/// The RNG half of sampling, shared by [`IndexSampler::draw`] and
+/// [`ReplayMemory::sample`] (identical call sequence on the RNG).
+fn draw_indices(rng: &mut Rng, streams: &[Stream], stack: usize, n: usize) -> Result<Vec<SampleIndex>> {
+    let total: usize = streams.iter().map(|s| s.valid(stack)).sum();
+    if total == 0 {
+        let len: usize = streams.iter().map(|s| s.len).sum();
+        bail!("replay has no sampleable transitions yet (len {len})");
+    }
+    let mut picks = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Pick a global transition index, then locate its stream.
+        let mut k = rng.below_usize(total);
+        let mut stream = 0;
+        for (si, s) in streams.iter().enumerate() {
+            let v = s.valid(stack);
+            if k < v {
+                stream = si;
+                break;
+            }
+            k -= v;
+        }
+        // Logical slot: skip the first stack-1 slots, keep successor room.
+        picks.push(SampleIndex { stream, slot: stack - 1 + k });
+    }
+    Ok(picks)
+}
+
 pub struct ReplayMemory {
     streams: Vec<Stream>,
     frame_size: usize,
     stack: usize,
-    rng: Rng,
+    sampler: IndexSampler,
     pushes: u64,
 }
 
@@ -76,7 +145,7 @@ impl ReplayMemory {
             streams: (0..n_streams).map(|_| Stream::new(per, frame_size)).collect(),
             frame_size,
             stack,
-            rng: Rng::stream(seed, 0x5245504c), // "REPL"
+            sampler: IndexSampler::new(seed),
             pushes: 0,
         })
     }
@@ -142,13 +211,23 @@ impl ReplayMemory {
         }
     }
 
-    /// Sample a uniform minibatch into `batch` (buffers are resized).
-    /// Returns an error until enough transitions are stored.
+    /// Sample a uniform minibatch into `batch` (buffers are resized) using
+    /// the memory's internal [`IndexSampler`]. Returns an error until
+    /// enough transitions are stored.
     pub fn sample(&mut self, batch_size: usize, batch: &mut TrainBatch) -> Result<()> {
-        let total = self.sampleable();
-        if total == 0 {
-            bail!("replay has no sampleable transitions yet (len {})", self.len());
-        }
+        let picks = draw_indices(&mut self.sampler.rng, &self.streams, self.stack, batch_size)?;
+        self.assemble(&picks, batch);
+        Ok(())
+    }
+
+    /// Assemble the minibatch for `picks` into `batch` (buffers are
+    /// resized). Read-only: frame reconstruction never touches the RNG, so
+    /// this half runs under a shared borrow. `picks` must have been drawn
+    /// against the current contents — slots invalidated by later pushes
+    /// are a logic error upstream (the coordinator freezes replay between
+    /// draw and assemble; see replay/prefetch.rs).
+    pub fn assemble(&self, picks: &[SampleIndex], batch: &mut TrainBatch) {
+        let batch_size = picks.len();
         let state_bytes = self.frame_size * self.stack;
         batch.states.resize(batch_size * state_bytes, 0);
         batch.next_states.resize(batch_size * state_bytes, 0);
@@ -156,20 +235,8 @@ impl ReplayMemory {
         batch.rewards.resize(batch_size, 0.0);
         batch.dones.resize(batch_size, 0.0);
 
-        for b in 0..batch_size {
-            // Pick a global transition index, then locate its stream.
-            let mut k = self.rng.below_usize(total);
-            let mut stream = 0;
-            for (si, s) in self.streams.iter().enumerate() {
-                let v = s.valid(self.stack);
-                if k < v {
-                    stream = si;
-                    break;
-                }
-                k -= v;
-            }
-            // Logical slot: skip the first stack-1 slots, keep successor room.
-            let l = self.stack - 1 + k;
+        for (b, pick) in picks.iter().enumerate() {
+            let (stream, l) = (pick.stream, pick.slot);
             let st = &self.streams[stream];
             debug_assert!(l + 1 < st.len);
             let phys = st.phys(l);
@@ -186,7 +253,6 @@ impl ReplayMemory {
                 self.state_into(stream, l + 1, &mut batch.next_states[b * state_bytes..(b + 1) * state_bytes]);
             }
         }
-        Ok(())
     }
 
     /// Reconstruct the state ending at the *most recent* slot of `stream`
@@ -425,6 +491,37 @@ mod tests {
         }
         // Too many streams for the capacity must be rejected, not UB.
         assert!(ReplayMemory::new(64, 16, FS, STACK, 0).is_err());
+    }
+
+    /// The RNG/assembly split must be byte-for-byte equivalent to the
+    /// historical single-call `sample`: an external `IndexSampler` built
+    /// from the same seed draws the same indices, and `assemble` (read-only)
+    /// produces the same batch.
+    #[test]
+    fn split_draw_assemble_matches_sample() {
+        let fill = |r: &mut ReplayMemory| {
+            for v in 0..40u8 {
+                r.push(0, &frame(v), v, v as f32 * 0.25, v % 9 == 8, v == 0 || v % 9 == 0);
+                r.push(1, &frame(100 + v), v, 0.0, v % 7 == 6, v == 0 || v % 7 == 0);
+            }
+        };
+        let mut a = mk(256, 2);
+        let mut b = mk(256, 2);
+        fill(&mut a);
+        fill(&mut b);
+        let mut sampler = IndexSampler::new(7); // same seed as mk()
+        for _ in 0..5 {
+            let mut batch_a = TrainBatch::default();
+            a.sample(16, &mut batch_a).unwrap();
+            let picks = sampler.draw(&b, 16).unwrap();
+            let mut batch_b = TrainBatch::default();
+            b.assemble(&picks, &mut batch_b);
+            assert_eq!(batch_a.states, batch_b.states);
+            assert_eq!(batch_a.next_states, batch_b.next_states);
+            assert_eq!(batch_a.actions, batch_b.actions);
+            assert_eq!(batch_a.rewards, batch_b.rewards);
+            assert_eq!(batch_a.dones, batch_b.dones);
+        }
     }
 
     #[test]

@@ -81,10 +81,18 @@ pub struct Device {
 }
 
 impl Device {
-    /// The default CPU device (native reference engine). The name is kept
-    /// from the PJRT era so call sites read the same either way.
+    /// The default CPU device (native reference engine, serial learner).
+    /// The name is kept from the PJRT era so call sites read the same
+    /// either way.
     pub fn cpu() -> Result<Device> {
-        Ok(Self::with_engine(Box::new(NativeEngine::new())))
+        Self::cpu_with_threads(1)
+    }
+
+    /// CPU device whose native engine shards learner work over a
+    /// persistent `learner_threads`-lane compute pool. Results are
+    /// bit-identical for every thread count (rust/DESIGN.md §9).
+    pub fn cpu_with_threads(learner_threads: usize) -> Result<Device> {
+        Ok(Self::with_engine(Box::new(NativeEngine::with_threads(learner_threads))))
     }
 
     /// The PJRT/XLA device executing AOT-compiled HLO artifacts.

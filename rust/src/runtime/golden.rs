@@ -1,0 +1,328 @@
+//! Serial golden reference for the native engine.
+//!
+//! This module preserves the engine's original single-threaded,
+//! whole-batch, naive-kernel math *verbatim* and serves two purposes:
+//!
+//! 1. **Golden generator** — `tests/runtime_golden.rs` pins the full
+//!    runtime pipeline (`QNet` → `Device` → pooled/tiled `NativeEngine`)
+//!    bit-for-bit against the numbers this module produces. It replaces
+//!    the retired python-generated `golden.json` pins (which required
+//!    `make artifacts` plus the `--features xla` engine and therefore
+//!    never ran offline).
+//! 2. **Refactor anchor** — the sharded learner (rust/DESIGN.md §9) claims
+//!    bit-identity with the serial math for every `learner_threads` value;
+//!    this module *is* that serial math, kept free of pooling and tiling
+//!    so the claim stays falsifiable.
+//!
+//! Nothing here is on the training hot path; only tests and the golden
+//! tooling call it.
+
+use anyhow::{bail, Result};
+
+use super::kernels::{col2im_sample, im2col_sample, matmul_a_bt, matmul_acc, matmul_at_b_acc};
+use super::native::{huber, huber_grad, NetArch, RMSPROP_ALPHA, RMSPROP_EPS};
+use super::qnet::TrainBatch;
+
+fn tensor<'a>(flat: &'a [f32], offsets: &[(usize, usize)], idx: usize) -> &'a [f32] {
+    let (off, n) = offsets[idx];
+    &flat[off..off + n]
+}
+
+/// Activations retained for the backward pass.
+struct ForwardCache {
+    /// Normalized input `[B, H, W, C]` (f32, /255).
+    x0: Vec<f32>,
+    /// Post-ReLU output of each conv layer, `[B, OH, OW, F]`.
+    conv_out: Vec<Vec<f32>>,
+    /// Post-ReLU output of each hidden layer, `[B, width]`.
+    fc_out: Vec<Vec<f32>>,
+    /// Q-values `[B, A]`.
+    q: Vec<f32>,
+}
+
+/// Whole-batch forward pass with naive kernels (the original engine's).
+fn forward(arch: &NetArch, flat: &[f32], states: &[u8], batch: usize, keep: bool) -> Result<ForwardCache> {
+    if flat.len() != arch.param_count() {
+        bail!("params: got {} values, want {}", flat.len(), arch.param_count());
+    }
+    let offs = arch.offsets();
+    let [h0, w0, c0] = arch.frame;
+    if states.len() != batch * h0 * w0 * c0 {
+        bail!("states: got {} bytes, want {}", states.len(), batch * h0 * w0 * c0);
+    }
+    let x0: Vec<f32> = states.iter().map(|&v| v as f32 / 255.0).collect();
+    let kept_x0 = if keep { x0.clone() } else { Vec::new() };
+
+    let hw = arch.conv_out_hw();
+    let mut conv_out: Vec<Vec<f32>> = Vec::with_capacity(arch.convs.len());
+    let (mut h, mut w, mut c) = (h0, w0, c0);
+    let mut x = x0;
+    let mut tensor_idx = 0;
+    for (i, conv) in arch.convs.iter().enumerate() {
+        let (oh, ow) = hw[i];
+        let kdim = conv.kernel * conv.kernel * c;
+        let wmat = tensor(flat, &offs, tensor_idx); // [kdim, F]
+        let bias = tensor(flat, &offs, tensor_idx + 1);
+        tensor_idx += 2;
+        let mut y = vec![0.0f32; batch * oh * ow * conv.filters];
+        let mut patches = vec![0.0f32; oh * ow * kdim];
+        for bi in 0..batch {
+            im2col_sample(&x[bi * h * w * c..(bi + 1) * h * w * c], h, w, c, conv.kernel, conv.stride, &mut patches);
+            let yrows = &mut y[bi * oh * ow * conv.filters..(bi + 1) * oh * ow * conv.filters];
+            matmul_acc(&patches, wmat, yrows, oh * ow, kdim, conv.filters);
+        }
+        // Bias + ReLU in one pass.
+        for (j, v) in y.iter_mut().enumerate() {
+            let withb = *v + bias[j % conv.filters];
+            *v = if withb > 0.0 { withb } else { 0.0 };
+        }
+        x = y;
+        (h, w, c) = (oh, ow, conv.filters);
+        if keep {
+            conv_out.push(x.clone());
+        }
+    }
+
+    // Hidden layers (x is now [B, dim]).
+    let mut dim = h * w * c;
+    let mut fc_out: Vec<Vec<f32>> = Vec::with_capacity(arch.hidden.len());
+    for &width in arch.hidden.iter() {
+        let wmat = tensor(flat, &offs, tensor_idx);
+        let bias = tensor(flat, &offs, tensor_idx + 1);
+        tensor_idx += 2;
+        let mut y = vec![0.0f32; batch * width];
+        matmul_acc(&x, wmat, &mut y, batch, dim, width);
+        for (j, v) in y.iter_mut().enumerate() {
+            let withb = *v + bias[j % width];
+            *v = if withb > 0.0 { withb } else { 0.0 };
+        }
+        x = y;
+        dim = width;
+        if keep {
+            fc_out.push(x.clone());
+        }
+    }
+
+    // Output head (no activation).
+    let wmat = tensor(flat, &offs, tensor_idx);
+    let bias = tensor(flat, &offs, tensor_idx + 1);
+    let mut q = vec![0.0f32; batch * arch.actions];
+    matmul_acc(&x, wmat, &mut q, batch, dim, arch.actions);
+    for (j, v) in q.iter_mut().enumerate() {
+        *v += bias[j % arch.actions];
+    }
+
+    Ok(ForwardCache { x0: kept_x0, conv_out, fc_out, q })
+}
+
+/// Q-values only — the serial reference for the infer entry.
+pub fn reference_infer(arch: &NetArch, params: &[f32], states: &[u8], batch: usize) -> Result<Vec<f32>> {
+    Ok(forward(arch, params, states, batch, false)?.q)
+}
+
+/// TD loss + full parameter gradient — the serial reference for the train
+/// entry minus the optimizer. Returns (grad, loss).
+#[allow(clippy::too_many_arguments)]
+pub fn reference_td_grads(
+    arch: &NetArch,
+    theta: &[f32],
+    target_theta: &[f32],
+    states: &[u8],
+    actions: &[i32],
+    rewards: &[f32],
+    next_states: &[u8],
+    dones: &[f32],
+    gamma: f32,
+    double: bool,
+) -> Result<(Vec<f32>, f32)> {
+    let batch = actions.len();
+    let cache = forward(arch, theta, states, batch, true)?;
+    let qn_target = forward(arch, target_theta, next_states, batch, false)?.q;
+    let a = arch.actions;
+    let offs = arch.offsets();
+
+    // Bootstrap values (never differentiated — stop_gradient in the model).
+    let mut bootstrap = vec![0.0f32; batch];
+    if double {
+        let qn_online = forward(arch, theta, next_states, batch, false)?.q;
+        for b in 0..batch {
+            let row = &qn_online[b * a..(b + 1) * a];
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate().skip(1) {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            bootstrap[b] = qn_target[b * a + best];
+        }
+    } else {
+        for b in 0..batch {
+            bootstrap[b] = qn_target[b * a..(b + 1) * a].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        }
+    }
+
+    // Per-sample TD error -> loss and dL/dq.
+    let mut loss = 0.0f32;
+    let mut dq = vec![0.0f32; batch * a];
+    for b in 0..batch {
+        let act = actions[b];
+        if act < 0 || act as usize >= a {
+            bail!("train: action {act} out of range 0..{a}");
+        }
+        let q_sel = cache.q[b * a + act as usize];
+        let target = rewards[b] + gamma * (1.0 - dones[b]) * bootstrap[b];
+        let d = q_sel - target;
+        loss += huber(d);
+        dq[b * a + act as usize] = huber_grad(d) / batch as f32;
+    }
+    loss /= batch as f32;
+
+    // ---- backward ---------------------------------------------------------
+    let mut grad = vec![0.0f32; arch.param_count()];
+    let n_conv = arch.convs.len();
+    let n_fc = arch.hidden.len();
+    let hw = arch.conv_out_hw();
+    let (last_h, last_w) = hw.last().copied().unwrap_or((arch.frame[0], arch.frame[1]));
+    let last_c = arch.convs.last().map(|c| c.filters).unwrap_or(arch.frame[2]);
+    let flat_dim = last_h * last_w * last_c;
+
+    // Output head.
+    let head_in: &[f32] = if n_fc > 0 { &cache.fc_out[n_fc - 1] } else { &cache.conv_out[n_conv - 1] };
+    let head_dim = if n_fc > 0 { arch.hidden[n_fc - 1] } else { flat_dim };
+    let widx = 2 * n_conv + 2 * n_fc; // out_w tensor index
+    {
+        let (off_w, n_w) = offs[widx];
+        matmul_at_b_acc(head_in, &dq, &mut grad[off_w..off_w + n_w], batch, head_dim, a);
+        let (off_b, _) = offs[widx + 1];
+        for b in 0..batch {
+            for j in 0..a {
+                grad[off_b + j] += dq[b * a + j];
+            }
+        }
+    }
+    let out_w = tensor(theta, &offs, widx);
+    let mut dx = vec![0.0f32; batch * head_dim];
+    matmul_a_bt(&dq, out_w, &mut dx, batch, a, head_dim);
+
+    // Hidden layers, reversed.
+    for i in (0..n_fc).rev() {
+        let width = arch.hidden[i];
+        let post = &cache.fc_out[i];
+        // ReLU mask.
+        for (d, &v) in dx.iter_mut().zip(post.iter()) {
+            if v <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        let in_dim = if i > 0 { arch.hidden[i - 1] } else { flat_dim };
+        let xin: &[f32] = if i > 0 { &cache.fc_out[i - 1] } else { &cache.conv_out[n_conv - 1] };
+        let tidx = 2 * n_conv + 2 * i;
+        let (off_w, n_w) = offs[tidx];
+        matmul_at_b_acc(xin, &dx, &mut grad[off_w..off_w + n_w], batch, in_dim, width);
+        let (off_b, _) = offs[tidx + 1];
+        for b in 0..batch {
+            for j in 0..width {
+                grad[off_b + j] += dx[b * width + j];
+            }
+        }
+        let wmat = tensor(theta, &offs, tidx);
+        let mut dprev = vec![0.0f32; batch * in_dim];
+        matmul_a_bt(&dx, wmat, &mut dprev, batch, width, in_dim);
+        dx = dprev;
+    }
+
+    // Conv layers, reversed. dx currently holds d(conv_out[last]) [B,OH,OW,F].
+    for i in (0..n_conv).rev() {
+        let conv = arch.convs[i];
+        let (oh, ow) = hw[i];
+        let (in_h, in_w, in_c) = if i > 0 {
+            (hw[i - 1].0, hw[i - 1].1, arch.convs[i - 1].filters)
+        } else {
+            (arch.frame[0], arch.frame[1], arch.frame[2])
+        };
+        let kdim = conv.kernel * conv.kernel * in_c;
+        let f = conv.filters;
+        let post = &cache.conv_out[i];
+        for (d, &v) in dx.iter_mut().zip(post.iter()) {
+            if v <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        let tidx = 2 * i;
+        let (off_w, n_w) = offs[tidx];
+        let (off_b, _) = offs[tidx + 1];
+        let wmat = tensor(theta, &offs, tidx);
+        let xin_all: &[f32] = if i > 0 { &cache.conv_out[i - 1] } else { &cache.x0 };
+        let in_sz = in_h * in_w * in_c;
+        let need_dx = i > 0;
+        let mut dprev = if need_dx { vec![0.0f32; batch * in_sz] } else { Vec::new() };
+        let mut patches = vec![0.0f32; oh * ow * kdim];
+        let mut dpatches = vec![0.0f32; oh * ow * kdim];
+        for bi in 0..batch {
+            let dy = &dx[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+            // grad_b
+            for row in 0..oh * ow {
+                for j in 0..f {
+                    grad[off_b + j] += dy[row * f + j];
+                }
+            }
+            // grad_w via recomputed patches
+            im2col_sample(&xin_all[bi * in_sz..(bi + 1) * in_sz], in_h, in_w, in_c, conv.kernel, conv.stride, &mut patches);
+            matmul_at_b_acc(&patches, dy, &mut grad[off_w..off_w + n_w], oh * ow, kdim, f);
+            // d(input) for upstream layers
+            if need_dx {
+                matmul_a_bt(dy, wmat, &mut dpatches, oh * ow, f, kdim);
+                col2im_sample(&dpatches, in_h, in_w, in_c, conv.kernel, conv.stride, &mut dprev[bi * in_sz..(bi + 1) * in_sz]);
+            }
+        }
+        dx = dprev;
+    }
+
+    Ok((grad, loss))
+}
+
+/// Outputs of one reference train step.
+pub struct ReferenceTrainOut {
+    pub theta: Vec<f32>,
+    pub g: Vec<f32>,
+    pub s: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Full serial train step (TD gradients + centered RMSProp), matching the
+/// train entry's ABI semantics on host vectors.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_train_step(
+    arch: &NetArch,
+    theta: &[f32],
+    target_theta: &[f32],
+    g: &[f32],
+    s: &[f32],
+    batch: &TrainBatch,
+    gamma: f32,
+    double: bool,
+    lr: f32,
+) -> Result<ReferenceTrainOut> {
+    let (grad, loss) = reference_td_grads(
+        arch,
+        theta,
+        target_theta,
+        &batch.states,
+        &batch.actions,
+        &batch.rewards,
+        &batch.next_states,
+        &batch.dones,
+        gamma,
+        double,
+    )?;
+    let mut theta2 = theta.to_vec();
+    let mut g2 = g.to_vec();
+    let mut s2 = s.to_vec();
+    for i in 0..theta2.len() {
+        let gr = grad[i];
+        g2[i] = RMSPROP_ALPHA * g2[i] + (1.0 - RMSPROP_ALPHA) * gr;
+        s2[i] = RMSPROP_ALPHA * s2[i] + (1.0 - RMSPROP_ALPHA) * gr * gr;
+        theta2[i] -= lr * gr / (s2[i] - g2[i] * g2[i] + RMSPROP_EPS).sqrt();
+    }
+    Ok(ReferenceTrainOut { theta: theta2, g: g2, s: s2, loss })
+}

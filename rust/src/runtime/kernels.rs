@@ -1,0 +1,322 @@
+//! Dense kernels for the native engine.
+//!
+//! Two implementations of each matmul:
+//!
+//! * **naive** — the reference loops (unchanged from the original engine);
+//!   kept as the oracle the tiled versions are tested against and used by
+//!   the serial golden reference (`runtime/golden.rs`).
+//! * **tiled** — cache-blocked versions used on the hot path. Blocking
+//!   reorders only *which output element is worked on when*; every output
+//!   element's own accumulation sequence (ascending `k` for forward,
+//!   ascending row index for gradient reductions, one self-contained dot
+//!   for input gradients) is identical to the naive kernel, including the
+//!   `av == 0.0` sparsity skip. The tiled kernels are therefore
+//!   **bit-identical** to the naive ones — pinned elementwise in
+//!   `tests/parallel_learner.rs`.
+//!
+//! All kernels evaluate f32 in a fixed order, so results are
+//! bit-deterministic across runs and thread counts (rust/DESIGN.md §7).
+
+/// k-dimension block: `TILE_K` rows of `b` (forward) / of `out` (weight
+/// grads) stay cache-hot while the m dimension streams past them.
+const TILE_K: usize = 128;
+/// Output-column block for the dot-product kernel: `TILE_J` rows of the
+/// transposed operand stay hot across all m rows.
+const TILE_J: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Naive reference kernels
+// ---------------------------------------------------------------------------
+
+/// out[M,N] += a[M,K] @ b[K,N] (i-k-j loop order; `out` must be zeroed by
+/// the caller when accumulation is not wanted).
+pub fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // post-ReLU activations are sparse
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[K,N] += a[M,K]^T @ b[M,N] (weight gradients).
+pub fn matmul_at_b_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[M,N] = a[M,K] @ b[N,K]^T (input gradients; row-by-row dot products).
+pub fn matmul_a_bt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache-tiled kernels (bit-identical to the naive versions)
+// ---------------------------------------------------------------------------
+
+/// Tiled [`matmul_acc`]: blocks the k dimension so a `TILE_K × N` panel of
+/// `b` is reused across all M rows instead of streaming the whole of `b`
+/// once per row. Per output element the k order is unchanged (blocks ascend,
+/// k ascends within a block), so results match the naive kernel bit-for-bit.
+pub fn matmul_acc_tiled(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + TILE_K).min(k);
+        for i in 0..m {
+            let arow = &a[i * k + k0..i * k + k1];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kr, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[(k0 + kr) * n..(k0 + kr + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Tiled [`matmul_at_b_acc`]: blocks the k (output-row) dimension so a
+/// `TILE_K × N` panel of `out` stays hot while all M rows stream past it.
+/// Each output element still accumulates in ascending m with the same
+/// sparsity skip — bit-identical to the naive kernel.
+pub fn matmul_at_b_acc_tiled(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + TILE_K).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Tiled [`matmul_a_bt`]: blocks the output-column dimension so a
+/// `TILE_J × K` panel of `b` is reused across all M rows. Every dot product
+/// is self-contained, so results match the naive kernel bit-for-bit.
+pub fn matmul_a_bt_tiled(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + TILE_J).min(n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in j0..j1 {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow.iter()) {
+                    acc += av * bv;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        j0 = j1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// im2col / col2im (shared by the engine and the golden reference)
+// ---------------------------------------------------------------------------
+
+/// Extract one sample's im2col patch matrix `[OH*OW, k*k*C]`.
+/// Patch column layout is `(ky*k + kx)*C + c`, matching the `[k,k,C,F]`
+/// weight tensor reshaped to `[k*k*C, F]` (as in `model._im2col`).
+pub fn im2col_sample(
+    x: &[f32], // one sample, [H, W, C]
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    out: &mut [f32], // [OH*OW, kernel*kernel*c]
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kdim = kernel * kernel * c;
+    debug_assert_eq!(out.len(), oh * ow * kdim);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * kdim;
+            for ky in 0..kernel {
+                let src = ((oy * stride + ky) * w + ox * stride) * c;
+                let dst = row + ky * kernel * c;
+                // kx and c are contiguous in both source and destination.
+                out[dst..dst + kernel * c].copy_from_slice(&x[src..src + kernel * c]);
+            }
+        }
+    }
+}
+
+/// Scatter-add one sample's patch gradients back to the input image
+/// (transpose of [`im2col_sample`]).
+pub fn col2im_sample(
+    dpatches: &[f32], // [OH*OW, kernel*kernel*c]
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    dx: &mut [f32], // one sample, [H, W, C], caller-zeroed
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kdim = kernel * kernel * c;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * kdim;
+            for ky in 0..kernel {
+                let dst = ((oy * stride + ky) * w + ox * stride) * c;
+                let src = row + ky * kernel * c;
+                for i in 0..kernel * c {
+                    dx[dst + i] += dpatches[src + i];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                // Mix in exact zeros so the sparsity-skip paths are hit.
+                if rng.chance(0.25) {
+                    0.0
+                } else {
+                    rng.range_f32(-2.0, 2.0)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tiled_kernels_match_naive_bitwise() {
+        let mut rng = Rng::new(0xBEE5);
+        // Shapes straddling the tile sizes in every dimension.
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 7, 5),
+            (4, 128, 64),
+            (5, 129, 65),
+            (32, 300, 17),
+            (2, 513, 130),
+        ] {
+            let a = randvec(&mut rng, m * k);
+            let b_kn = randvec(&mut rng, k * n);
+            let b_mn = randvec(&mut rng, m * n);
+            let b_nk = randvec(&mut rng, n * k);
+            let seed_out = randvec(&mut rng, m * n); // accumulate onto noise
+
+            let mut naive = seed_out.clone();
+            let mut tiled = seed_out.clone();
+            matmul_acc(&a, &b_kn, &mut naive, m, k, n);
+            matmul_acc_tiled(&a, &b_kn, &mut tiled, m, k, n);
+            assert_eq!(bits(&naive), bits(&tiled), "matmul_acc {m}x{k}x{n}");
+
+            let seed_kn = randvec(&mut rng, k * n);
+            let mut naive = seed_kn.clone();
+            let mut tiled = seed_kn.clone();
+            matmul_at_b_acc(&a, &b_mn, &mut naive, m, k, n);
+            matmul_at_b_acc_tiled(&a, &b_mn, &mut tiled, m, k, n);
+            assert_eq!(bits(&naive), bits(&tiled), "matmul_at_b_acc {m}x{k}x{n}");
+
+            let mut naive = vec![0.0f32; m * n];
+            let mut tiled = vec![1.0f32; m * n]; // `=` kernel: prior junk ok
+            matmul_a_bt(&a, &b_nk, &mut naive, m, k, n);
+            matmul_a_bt_tiled(&a, &b_nk, &mut tiled, m, k, n);
+            assert_eq!(bits(&naive), bits(&tiled), "matmul_a_bt {m}x{k}x{n}");
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn matmul_acc_small_known_answer() {
+        // [1,2;3,4] @ [5,6;7,8] = [19,22;43,50]
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let mut out = [0.0f32; 4];
+        matmul_acc_tiled(&a, &b, &mut out, 2, 2, 2);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn im2col_col2im_roundtrip_shapes() {
+        // 4x4x1 image, k=2, s=2 -> 2x2 output, kdim 4.
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut patches = vec![0.0f32; 4 * 4];
+        im2col_sample(&x, 4, 4, 1, 2, 2, &mut patches);
+        // First patch = top-left 2x2 block.
+        assert_eq!(&patches[..4], &[0.0, 1.0, 4.0, 5.0]);
+        // Scatter ones back: non-overlapping stride => all-ones image.
+        let dp = vec![1.0f32; 16];
+        let mut dx = vec![0.0f32; 16];
+        col2im_sample(&dp, 4, 4, 1, 2, 2, &mut dx);
+        assert!(dx.iter().all(|&v| v == 1.0));
+    }
+}

@@ -15,8 +15,11 @@
 
 pub mod device;
 pub mod engine;
+pub mod golden;
+pub mod kernels;
 pub mod manifest;
 pub mod native;
+pub mod pool;
 pub mod qnet;
 pub mod tensor;
 #[cfg(feature = "xla")]
@@ -26,6 +29,7 @@ pub use device::{BusSnapshot, BusStats, Device};
 pub use engine::{EntryKind, ExecutionEngine};
 pub use manifest::{Dtype, Entry, InputSig, Manifest, NetSpec};
 pub use native::{NativeEngine, NetArch};
+pub use pool::ComputePool;
 pub use qnet::{Policy, QNet, TrainBatch};
 pub use tensor::{DataVec, DataView, HostTensor, TensorView};
 

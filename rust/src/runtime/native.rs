@@ -1,20 +1,34 @@
 //! Native execution engine: a pure-Rust reference implementation of the
-//! compiled entry points.
+//! compiled entry points, parallelized over the persistent [`ComputePool`].
 //!
 //! Mirrors `python/compile/model.py` operation-for-operation — im2col
 //! convolutions, ReLU MLP head, mean-Huber TD loss (standard and Double-DQN
 //! targets), hand-derived backprop, and the fused centered-RMSProp update
-//! from `python/compile/kernels/ref.py` (alpha=0.95, eps=0.01). All math is
-//! plain f32 in a fixed evaluation order, so results are bit-deterministic
-//! across runs and thread counts.
+//! from `python/compile/kernels/ref.py` (alpha=0.95, eps=0.01).
+//!
+//! **Parallel determinism** (rust/DESIGN.md §9): the train entry runs in
+//! two phases. Phase A shards the minibatch into contiguous sample ranges
+//! and computes, per shard, everything that is per-sample (forward caches,
+//! bootstrap targets, TD errors, backward deltas, im2col patches). Phase B
+//! partitions each parameter tensor's *output elements* across the pool;
+//! every element accumulates its cross-sample reduction in the fixed global
+//! sample order with the same sparsity skips as the serial kernels. Because
+//! each output element's f32 accumulation sequence never depends on the
+//! partitioning, gradients are **bit-identical for every `learner_threads`
+//! value** — and bit-identical to the serial golden reference
+//! (`runtime/golden.rs`), which preserves the original whole-batch math.
+//! The hot matmuls are cache-tiled (`runtime/kernels.rs`), also without
+//! changing any per-element accumulation order.
 //!
 //! This engine needs no artifacts: architecture comes from the manifest's
 //! config name (the same three variants `model.make_config` defines), and
 //! initial parameters use the same scheme (zero biases, uniform
 //! ±1/sqrt(fan_in) weights) driven by the in-tree deterministic RNG.
 //!
-//! Memory note: im2col patch matrices are materialized per *sample*, never
-//! per batch, so peak scratch is O(OH·OW·k²·C) regardless of batch size.
+//! Memory note: inference materializes im2col patches per *sample*
+//! (O(OH·OW·k²·C) scratch); the train entry additionally retains patches
+//! and deltas for the whole minibatch so Phase B can re-walk samples in
+//! global order (~20 MB for the `nature` net at batch 32).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -24,11 +38,13 @@ use anyhow::{anyhow, bail, Result};
 use crate::util::rng::Rng;
 
 use super::engine::{EntryKind, ExecutionEngine};
+use super::kernels::{col2im_sample, im2col_sample, matmul_a_bt_tiled, matmul_acc_tiled, matmul_at_b_acc_tiled};
 use super::manifest::NetSpec;
+use super::pool::{split_ranges, ComputePool};
 use super::tensor::{HostTensor, TensorView};
 
-const RMSPROP_ALPHA: f32 = 0.95;
-const RMSPROP_EPS: f32 = 0.01;
+pub(crate) const RMSPROP_ALPHA: f32 = 0.95;
+pub(crate) const RMSPROP_EPS: f32 = 0.01;
 
 /// One conv layer: `filters` output channels, `kernel`×`kernel` window,
 /// `stride` step, VALID padding (matches `model.ConvSpec`).
@@ -131,8 +147,9 @@ impl NetArch {
         self.param_spec().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
     }
 
-    /// Byte offsets of each tensor in the flat vector.
-    fn offsets(&self) -> Vec<(usize, usize)> {
+    /// Byte offsets of each tensor in the flat vector (shared with the
+    /// golden reference so the layout logic exists exactly once).
+    pub(crate) fn offsets(&self) -> Vec<(usize, usize)> {
         let mut out = Vec::new();
         let mut off = 0;
         for (_, shape) in self.param_spec() {
@@ -167,141 +184,22 @@ pub fn init_params(arch: &NetArch, seed: u64) -> Vec<f32> {
     flat
 }
 
-// ---------------------------------------------------------------------------
-// Dense kernels (fixed evaluation order => bit-deterministic)
-// ---------------------------------------------------------------------------
-
-/// out[M,N] += a[M,K] @ b[K,N] (i-k-j loop order; `out` must be zeroed by
-/// the caller when accumulation is not wanted).
-fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // post-ReLU activations are sparse
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
-        }
+pub(crate) fn huber(x: f32) -> f32 {
+    let ax = x.abs();
+    if ax <= 1.0 {
+        0.5 * x * x
+    } else {
+        ax - 0.5
     }
 }
 
-/// out[K,N] += a[M,K]^T @ b[M,N] (weight gradients).
-fn matmul_at_b_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// out[M,N] = a[M,K] @ b[N,K]^T (input gradients; row-by-row dot products).
-fn matmul_a_bt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (av, bv) in arow.iter().zip(brow.iter()) {
-                acc += av * bv;
-            }
-            out[i * n + j] = acc;
-        }
-    }
-}
-
-/// Extract one sample's im2col patch matrix `[OH*OW, k*k*C]`.
-/// Patch column layout is `(ky*k + kx)*C + c`, matching the `[k,k,C,F]`
-/// weight tensor reshaped to `[k*k*C, F]` (as in `model._im2col`).
-fn im2col_sample(
-    x: &[f32], // one sample, [H, W, C]
-    h: usize,
-    w: usize,
-    c: usize,
-    kernel: usize,
-    stride: usize,
-    out: &mut [f32], // [OH*OW, kernel*kernel*c]
-) {
-    let oh = (h - kernel) / stride + 1;
-    let ow = (w - kernel) / stride + 1;
-    let kdim = kernel * kernel * c;
-    debug_assert_eq!(out.len(), oh * ow * kdim);
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let row = (oy * ow + ox) * kdim;
-            for ky in 0..kernel {
-                let src = ((oy * stride + ky) * w + ox * stride) * c;
-                let dst = row + ky * kernel * c;
-                // kx and c are contiguous in both source and destination.
-                out[dst..dst + kernel * c].copy_from_slice(&x[src..src + kernel * c]);
-            }
-        }
-    }
-}
-
-/// Scatter-add one sample's patch gradients back to the input image
-/// (transpose of [`im2col_sample`]).
-fn col2im_sample(
-    dpatches: &[f32], // [OH*OW, kernel*kernel*c]
-    h: usize,
-    w: usize,
-    c: usize,
-    kernel: usize,
-    stride: usize,
-    dx: &mut [f32], // one sample, [H, W, C], caller-zeroed
-) {
-    let oh = (h - kernel) / stride + 1;
-    let ow = (w - kernel) / stride + 1;
-    let kdim = kernel * kernel * c;
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let row = (oy * ow + ox) * kdim;
-            for ky in 0..kernel {
-                let dst = ((oy * stride + ky) * w + ox * stride) * c;
-                let src = row + ky * kernel * c;
-                for i in 0..kernel * c {
-                    dx[dst + i] += dpatches[src + i];
-                }
-            }
-        }
-    }
+pub(crate) fn huber_grad(x: f32) -> f32 {
+    x.clamp(-1.0, 1.0)
 }
 
 // ---------------------------------------------------------------------------
-// Forward / backward
+// Forward (per shard)
 // ---------------------------------------------------------------------------
-
-/// Activations retained for the backward pass.
-struct ForwardCache {
-    /// Normalized input `[B, H, W, C]` (f32, /255).
-    x0: Vec<f32>,
-    /// Post-ReLU output of each conv layer, `[B, OH, OW, F]`.
-    conv_out: Vec<Vec<f32>>,
-    /// Post-ReLU output of each hidden layer, `[B, width]`.
-    fc_out: Vec<Vec<f32>>,
-    /// Q-values `[B, A]`.
-    q: Vec<f32>,
-}
 
 struct Params<'a> {
     flat: &'a [f32],
@@ -322,33 +220,67 @@ impl<'a> Params<'a> {
     }
 }
 
-/// Forward pass; `keep` controls whether activations are cached (training)
-/// or dropped as soon as possible (inference).
-fn forward(arch: &NetArch, p: &Params<'_>, states: &[u8], batch: usize, keep: bool) -> Result<ForwardCache> {
+/// Activations of one shard's forward pass (rows are the shard's samples).
+/// The normalized input itself is not retained: conv0's weight gradients
+/// read the retained im2col patches, which already hold the /255 values.
+struct Fwd {
+    /// Post-ReLU output of each conv layer, `[rows, OH, OW, F]`.
+    conv_out: Vec<Vec<f32>>,
+    /// im2col patches of each conv layer, `[rows, OH*OW, k*k*C]`; empty
+    /// unless retained for the gradient phase.
+    conv_patches: Vec<Vec<f32>>,
+    /// Post-ReLU output of each hidden layer, `[rows, width]`.
+    fc_out: Vec<Vec<f32>>,
+    /// Q-values `[rows, A]`.
+    q: Vec<f32>,
+}
+
+/// Forward over `rows` consecutive samples. `keep` retains activations for
+/// backprop; `keep_patches` additionally retains every conv layer's im2col
+/// patch matrices (Phase B re-walks them in global sample order).
+fn forward_shard(
+    arch: &NetArch,
+    p: &Params<'_>,
+    states: &[u8],
+    rows: usize,
+    keep: bool,
+    keep_patches: bool,
+) -> Result<Fwd> {
     let [h0, w0, c0] = arch.frame;
-    if states.len() != batch * h0 * w0 * c0 {
-        bail!("states: got {} bytes, want {}", states.len(), batch * h0 * w0 * c0);
+    if states.len() != rows * h0 * w0 * c0 {
+        bail!("states: got {} bytes, want {}", states.len(), rows * h0 * w0 * c0);
     }
     let x0: Vec<f32> = states.iter().map(|&v| v as f32 / 255.0).collect();
-    let kept_x0 = if keep { x0.clone() } else { Vec::new() };
 
     let hw = arch.conv_out_hw();
     let mut conv_out: Vec<Vec<f32>> = Vec::with_capacity(arch.convs.len());
+    let mut conv_patches: Vec<Vec<f32>> = Vec::with_capacity(arch.convs.len());
     let (mut h, mut w, mut c) = (h0, w0, c0);
     let mut x = x0;
     let mut tensor_idx = 0;
+    let mut scratch: Vec<f32> = Vec::new();
     for (i, conv) in arch.convs.iter().enumerate() {
         let (oh, ow) = hw[i];
         let kdim = conv.kernel * conv.kernel * c;
         let wmat = p.tensor(tensor_idx); // [kdim, F]
         let bias = p.tensor(tensor_idx + 1);
         tensor_idx += 2;
-        let mut y = vec![0.0f32; batch * oh * ow * conv.filters];
-        let mut patches = vec![0.0f32; oh * ow * kdim];
-        for bi in 0..batch {
-            im2col_sample(&x[bi * h * w * c..(bi + 1) * h * w * c], h, w, c, conv.kernel, conv.stride, &mut patches);
+        let mut y = vec![0.0f32; rows * oh * ow * conv.filters];
+        let psz = oh * ow * kdim;
+        let mut retained = if keep_patches { vec![0.0f32; rows * psz] } else { Vec::new() };
+        if !keep_patches {
+            scratch.clear();
+            scratch.resize(psz, 0.0);
+        }
+        for bi in 0..rows {
+            let patches: &mut [f32] = if keep_patches {
+                &mut retained[bi * psz..(bi + 1) * psz]
+            } else {
+                &mut scratch
+            };
+            im2col_sample(&x[bi * h * w * c..(bi + 1) * h * w * c], h, w, c, conv.kernel, conv.stride, patches);
             let yrows = &mut y[bi * oh * ow * conv.filters..(bi + 1) * oh * ow * conv.filters];
-            matmul_acc(&patches, wmat, yrows, oh * ow, kdim, conv.filters);
+            matmul_acc_tiled(patches, wmat, yrows, oh * ow, kdim, conv.filters);
         }
         // Bias + ReLU in one pass.
         for (j, v) in y.iter_mut().enumerate() {
@@ -360,17 +292,20 @@ fn forward(arch: &NetArch, p: &Params<'_>, states: &[u8], batch: usize, keep: bo
         if keep {
             conv_out.push(x.clone());
         }
+        if keep_patches {
+            conv_patches.push(retained);
+        }
     }
 
-    // Hidden layers (x is now [B, dim]).
+    // Hidden layers (x is now [rows, dim]).
     let mut dim = h * w * c;
     let mut fc_out: Vec<Vec<f32>> = Vec::with_capacity(arch.hidden.len());
     for &width in arch.hidden.iter() {
         let wmat = p.tensor(tensor_idx);
         let bias = p.tensor(tensor_idx + 1);
         tensor_idx += 2;
-        let mut y = vec![0.0f32; batch * width];
-        matmul_acc(&x, wmat, &mut y, batch, dim, width);
+        let mut y = vec![0.0f32; rows * width];
+        matmul_acc_tiled(&x, wmat, &mut y, rows, dim, width);
         for (j, v) in y.iter_mut().enumerate() {
             let withb = *v + bias[j % width];
             *v = if withb > 0.0 { withb } else { 0.0 };
@@ -385,40 +320,101 @@ fn forward(arch: &NetArch, p: &Params<'_>, states: &[u8], batch: usize, keep: bo
     // Output head (no activation).
     let wmat = p.tensor(tensor_idx);
     let bias = p.tensor(tensor_idx + 1);
-    let mut q = vec![0.0f32; batch * arch.actions];
-    matmul_acc(&x, wmat, &mut q, batch, dim, arch.actions);
+    let mut q = vec![0.0f32; rows * arch.actions];
+    matmul_acc_tiled(&x, wmat, &mut q, rows, dim, arch.actions);
     for (j, v) in q.iter_mut().enumerate() {
         *v += bias[j % arch.actions];
     }
 
-    Ok(ForwardCache { x0: kept_x0, conv_out, fc_out, q })
+    Ok(Fwd { conv_out, conv_patches, fc_out, q })
 }
 
-/// Q-values only (inference entry).
+/// Q-values only, computed serially (tests and small batches).
 pub fn infer(arch: &NetArch, params: &[f32], states: &[u8], batch: usize) -> Result<Vec<f32>> {
     let p = Params::new(arch, params)?;
-    Ok(forward(arch, &p, states, batch, false)?.q)
+    Ok(forward_shard(arch, &p, states, batch, false, false)?.q)
 }
 
-fn huber(x: f32) -> f32 {
-    let ax = x.abs();
-    if ax <= 1.0 {
-        0.5 * x * x
-    } else {
-        ax - 0.5
+/// Q-values with the batch sharded over the pool (bit-identical to
+/// [`infer`]: the forward pass is per-sample).
+pub fn infer_pooled(
+    arch: &NetArch,
+    params: &[f32],
+    states: &[u8],
+    batch: usize,
+    pool: &ComputePool,
+) -> Result<Vec<f32>> {
+    let p = Params::new(arch, params)?;
+    let frame = arch.frame_elems();
+    if states.len() != batch * frame {
+        bail!("states: got {} bytes, want {}", states.len(), batch * frame);
+    }
+    let ranges = split_ranges(batch, pool.threads());
+    if ranges.len() <= 1 {
+        return Ok(forward_shard(arch, &p, states, batch, false, false)?.q);
+    }
+    let a = arch.actions;
+    let mut q = vec![0.0f32; batch * a];
+    let mut errs: Vec<Option<String>> = Vec::with_capacity(ranges.len());
+    errs.resize(ranges.len(), None);
+
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut q_rest: &mut [f32] = &mut q;
+    for ((lo, hi), err) in ranges.iter().copied().zip(errs.iter_mut()) {
+        let (chunk, tail) = std::mem::take(&mut q_rest).split_at_mut((hi - lo) * a);
+        q_rest = tail;
+        let p = &p;
+        let rows_states = &states[lo * frame..hi * frame];
+        tasks.push(Box::new(move || {
+            match forward_shard(arch, p, rows_states, hi - lo, false, false) {
+                Ok(fwd) => chunk.copy_from_slice(&fwd.q),
+                Err(e) => *err = Some(e.to_string()),
+            }
+        }));
+    }
+    pool.scope(tasks);
+    if let Some(e) = errs.into_iter().flatten().next() {
+        bail!("{e}");
+    }
+    Ok(q)
+}
+
+// ---------------------------------------------------------------------------
+// Training: Phase A (per-sample work, sharded) + Phase B (per-parameter
+// reductions in global sample order, partitioned)
+// ---------------------------------------------------------------------------
+
+/// Everything Phase A produces for one contiguous sample range.
+#[derive(Default)]
+struct ShardSlot {
+    lo: usize,
+    hi: usize,
+    conv_out: Vec<Vec<f32>>,
+    conv_patches: Vec<Vec<f32>>,
+    fc_out: Vec<Vec<f32>>,
+    /// dL/dq rows, already scaled by 1/batch.
+    dq: Vec<f32>,
+    /// Per-sample Huber losses (summed in global order by the caller).
+    losses: Vec<f32>,
+    /// Masked (post-ReLU) deltas per hidden layer, `[rows, width]`.
+    dfc: Vec<Vec<f32>>,
+    /// Masked deltas per conv layer, `[rows, OH, OW, F]`.
+    dconv: Vec<Vec<f32>>,
+    err: Option<String>,
+}
+
+impl ShardSlot {
+    fn rows(&self) -> usize {
+        self.hi - self.lo
     }
 }
 
-fn huber_grad(x: f32) -> f32 {
-    x.clamp(-1.0, 1.0)
-}
-
-/// TD loss + full parameter gradient (the train entry minus the optimizer).
-/// Returns (grad, loss).
-fn td_grads(
+/// Phase A body for one shard: forward passes, TD errors, backward deltas.
+#[allow(clippy::too_many_arguments)]
+fn shard_phase_a(
     arch: &NetArch,
-    theta: &[f32],
-    target_theta: &[f32],
+    p: &Params<'_>,
+    pt: &Params<'_>,
     states: &[u8],
     actions: &[i32],
     rewards: &[f32],
@@ -426,82 +422,71 @@ fn td_grads(
     dones: &[f32],
     gamma: f32,
     double: bool,
-) -> Result<(Vec<f32>, f32)> {
-    let batch = actions.len();
-    let p = Params::new(arch, theta)?;
-    let pt = Params::new(arch, target_theta)?;
-    let cache = forward(arch, &p, states, batch, true)?;
-    let qn_target = forward(arch, &pt, next_states, batch, false)?.q;
+    batch_total: usize,
+    slot: &mut ShardSlot,
+) -> Result<()> {
+    let rows = slot.rows();
+    let (lo, hi) = (slot.lo, slot.hi);
+    let frame = arch.frame_elems();
     let a = arch.actions;
 
+    let fwd = forward_shard(arch, p, &states[lo * frame..hi * frame], rows, true, true)?;
+    let next_rows = &next_states[lo * frame..hi * frame];
+    let qn_target = forward_shard(arch, pt, next_rows, rows, false, false)?.q;
+
     // Bootstrap values (never differentiated — stop_gradient in the model).
-    let mut bootstrap = vec![0.0f32; batch];
+    let mut bootstrap = vec![0.0f32; rows];
     if double {
-        let qn_online = forward(arch, &p, next_states, batch, false)?.q;
-        for b in 0..batch {
-            let row = &qn_online[b * a..(b + 1) * a];
+        let qn_online = forward_shard(arch, p, next_rows, rows, false, false)?.q;
+        for r in 0..rows {
+            let row = &qn_online[r * a..(r + 1) * a];
             let mut best = 0;
             for (i, &v) in row.iter().enumerate().skip(1) {
                 if v > row[best] {
                     best = i;
                 }
             }
-            bootstrap[b] = qn_target[b * a + best];
+            bootstrap[r] = qn_target[r * a + best];
         }
     } else {
-        for b in 0..batch {
-            bootstrap[b] = qn_target[b * a..(b + 1) * a].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        for r in 0..rows {
+            bootstrap[r] = qn_target[r * a..(r + 1) * a].iter().copied().fold(f32::NEG_INFINITY, f32::max);
         }
     }
 
-    // Per-sample TD error -> loss and dL/dq.
-    let mut loss = 0.0f32;
-    let mut dq = vec![0.0f32; batch * a];
-    for b in 0..batch {
+    // Per-sample TD error -> per-sample loss and dL/dq.
+    let mut dq = vec![0.0f32; rows * a];
+    let mut losses = vec![0.0f32; rows];
+    for r in 0..rows {
+        let b = lo + r;
         let act = actions[b];
         if act < 0 || act as usize >= a {
             bail!("train: action {act} out of range 0..{a}");
         }
-        let q_sel = cache.q[b * a + act as usize];
-        let target = rewards[b] + gamma * (1.0 - dones[b]) * bootstrap[b];
+        let q_sel = fwd.q[r * a + act as usize];
+        let target = rewards[b] + gamma * (1.0 - dones[b]) * bootstrap[r];
         let d = q_sel - target;
-        loss += huber(d);
-        dq[b * a + act as usize] = huber_grad(d) / batch as f32;
+        losses[r] = huber(d);
+        dq[r * a + act as usize] = huber_grad(d) / batch_total as f32;
     }
-    loss /= batch as f32;
 
-    // ---- backward ---------------------------------------------------------
-    let mut grad = vec![0.0f32; arch.param_count()];
-    let offsets = arch.offsets();
+    // ---- backward deltas (per-sample; weight grads come in Phase B) ------
     let n_conv = arch.convs.len();
     let n_fc = arch.hidden.len();
     let hw = arch.conv_out_hw();
     let (last_h, last_w) = hw.last().copied().unwrap_or((arch.frame[0], arch.frame[1]));
     let last_c = arch.convs.last().map(|c| c.filters).unwrap_or(arch.frame[2]);
     let flat_dim = last_h * last_w * last_c;
-
-    // Output head.
-    let head_in: &[f32] = if n_fc > 0 { &cache.fc_out[n_fc - 1] } else { &cache.conv_out[n_conv - 1] };
     let head_dim = if n_fc > 0 { arch.hidden[n_fc - 1] } else { flat_dim };
-    let widx = 2 * n_conv + 2 * n_fc; // out_w tensor index
-    {
-        let (off_w, n_w) = offsets[widx];
-        matmul_at_b_acc(head_in, &dq, &mut grad[off_w..off_w + n_w], batch, head_dim, a);
-        let (off_b, _) = offsets[widx + 1];
-        for b in 0..batch {
-            for j in 0..a {
-                grad[off_b + j] += dq[b * a + j];
-            }
-        }
-    }
-    let out_w = p.tensor(widx);
-    let mut dx = vec![0.0f32; batch * head_dim];
-    matmul_a_bt(&dq, out_w, &mut dx, batch, a, head_dim);
 
-    // Hidden layers, reversed.
+    let out_w = p.tensor(2 * n_conv + 2 * n_fc);
+    let mut dx = vec![0.0f32; rows * head_dim];
+    matmul_a_bt_tiled(&dq, out_w, &mut dx, rows, a, head_dim);
+
+    let mut dfc: Vec<Vec<f32>> = vec![Vec::new(); n_fc];
     for i in (0..n_fc).rev() {
         let width = arch.hidden[i];
-        let post = &cache.fc_out[i];
+        let post = &fwd.fc_out[i];
         // ReLU mask.
         for (d, &v) in dx.iter_mut().zip(post.iter()) {
             if v <= 0.0 {
@@ -509,23 +494,14 @@ fn td_grads(
             }
         }
         let in_dim = if i > 0 { arch.hidden[i - 1] } else { flat_dim };
-        let xin: &[f32] = if i > 0 { &cache.fc_out[i - 1] } else { &cache.conv_out[n_conv - 1] };
-        let tidx = 2 * n_conv + 2 * i;
-        let (off_w, n_w) = offsets[tidx];
-        matmul_at_b_acc(xin, &dx, &mut grad[off_w..off_w + n_w], batch, in_dim, width);
-        let (off_b, _) = offsets[tidx + 1];
-        for b in 0..batch {
-            for j in 0..width {
-                grad[off_b + j] += dx[b * width + j];
-            }
-        }
-        let wmat = p.tensor(tidx);
-        let mut dprev = vec![0.0f32; batch * in_dim];
-        matmul_a_bt(&dx, wmat, &mut dprev, batch, width, in_dim);
-        dx = dprev;
+        let wmat = p.tensor(2 * n_conv + 2 * i);
+        let mut dprev = vec![0.0f32; rows * in_dim];
+        matmul_a_bt_tiled(&dx, wmat, &mut dprev, rows, width, in_dim);
+        dfc[i] = std::mem::replace(&mut dx, dprev);
     }
 
-    // Conv layers, reversed. dx currently holds d(conv_out[last]) [B,OH,OW,F].
+    // dx now holds d(conv_out[last]) as [rows, OH, OW, F].
+    let mut dconv: Vec<Vec<f32>> = vec![Vec::new(); n_conv];
     for i in (0..n_conv).rev() {
         let conv = arch.convs[i];
         let (oh, ow) = hw[i];
@@ -536,44 +512,286 @@ fn td_grads(
         };
         let kdim = conv.kernel * conv.kernel * in_c;
         let f = conv.filters;
-        let post = &cache.conv_out[i];
+        let post = &fwd.conv_out[i];
         for (d, &v) in dx.iter_mut().zip(post.iter()) {
             if v <= 0.0 {
                 *d = 0.0;
             }
         }
-        let tidx = 2 * i;
-        let (off_w, n_w) = offsets[tidx];
-        let (off_b, _) = offsets[tidx + 1];
-        let wmat = p.tensor(tidx);
-        let xin_all: &[f32] = if i > 0 { &cache.conv_out[i - 1] } else { &cache.x0 };
-        let in_sz = in_h * in_w * in_c;
         let need_dx = i > 0;
-        let mut dprev = if need_dx { vec![0.0f32; batch * in_sz] } else { Vec::new() };
-        let mut patches = vec![0.0f32; oh * ow * kdim];
-        let mut dpatches = vec![0.0f32; oh * ow * kdim];
-        for bi in 0..batch {
-            let dy = &dx[bi * oh * ow * f..(bi + 1) * oh * ow * f];
-            // grad_b
-            for row in 0..oh * ow {
-                for j in 0..f {
-                    grad[off_b + j] += dy[row * f + j];
-                }
-            }
-            // grad_w via recomputed patches
-            im2col_sample(&xin_all[bi * in_sz..(bi + 1) * in_sz], in_h, in_w, in_c, conv.kernel, conv.stride, &mut patches);
-            matmul_at_b_acc(&patches, dy, &mut grad[off_w..off_w + n_w], oh * ow, kdim, f);
-            // d(input) for upstream layers
-            if need_dx {
-                matmul_a_bt(dy, wmat, &mut dpatches, oh * ow, f, kdim);
+        let wmat = p.tensor(2 * i);
+        let in_sz = in_h * in_w * in_c;
+        let mut dprev = if need_dx { vec![0.0f32; rows * in_sz] } else { Vec::new() };
+        if need_dx {
+            let mut dpatches = vec![0.0f32; oh * ow * kdim];
+            for bi in 0..rows {
+                let dy = &dx[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+                matmul_a_bt_tiled(dy, wmat, &mut dpatches, oh * ow, f, kdim);
                 col2im_sample(&dpatches, in_h, in_w, in_c, conv.kernel, conv.stride, &mut dprev[bi * in_sz..(bi + 1) * in_sz]);
             }
         }
-        dx = dprev;
+        dconv[i] = std::mem::replace(&mut dx, dprev);
     }
+
+    slot.conv_out = fwd.conv_out;
+    slot.conv_patches = fwd.conv_patches;
+    slot.fc_out = fwd.fc_out;
+    slot.dq = dq;
+    slot.losses = losses;
+    slot.dfc = dfc;
+    slot.dconv = dconv;
+    Ok(())
+}
+
+/// TD loss + full parameter gradient (the train entry minus the optimizer),
+/// sharded over `pool`. Returns (grad, loss). Bit-identical to
+/// `golden::reference_td_grads` for every pool width — see the module docs
+/// for why the two-phase split preserves the serial accumulation order.
+#[allow(clippy::too_many_arguments)]
+pub fn td_grads(
+    arch: &NetArch,
+    theta: &[f32],
+    target_theta: &[f32],
+    states: &[u8],
+    actions: &[i32],
+    rewards: &[f32],
+    next_states: &[u8],
+    dones: &[f32],
+    gamma: f32,
+    double: bool,
+    pool: &ComputePool,
+) -> Result<(Vec<f32>, f32)> {
+    let batch = actions.len();
+    if batch == 0 {
+        bail!("train: empty minibatch");
+    }
+    let p = Params::new(arch, theta)?;
+    let pt = Params::new(arch, target_theta)?;
+
+    // ---- Phase A: per-sample work over contiguous shards -----------------
+    let mut slots: Vec<ShardSlot> = split_ranges(batch, pool.threads())
+        .into_iter()
+        .map(|(lo, hi)| ShardSlot { lo, hi, ..ShardSlot::default() })
+        .collect();
+    {
+        let p = &p;
+        let pt = &pt;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .iter_mut()
+            .map(|slot| {
+                Box::new(move || {
+                    if let Err(e) = shard_phase_a(
+                        arch, p, pt, states, actions, rewards, next_states, dones, gamma,
+                        double, batch, slot,
+                    ) {
+                        slot.err = Some(e.to_string());
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+    }
+    for slot in &slots {
+        if let Some(e) = &slot.err {
+            bail!("{e}");
+        }
+    }
+
+    // Mean loss, summed in global sample order (identical to the serial
+    // whole-batch accumulation: shards are contiguous and ascending).
+    let mut loss = 0.0f32;
+    for slot in &slots {
+        for &l in &slot.losses {
+            loss += l;
+        }
+    }
+    loss /= batch as f32;
+
+    // ---- Phase B: parameter reductions in global sample order ------------
+    // Each task owns a disjoint row range of one tensor and walks ALL
+    // samples in ascending order, so every grad element's accumulation
+    // sequence is exactly the serial kernel's regardless of partitioning.
+    let n_conv = arch.convs.len();
+    let n_fc = arch.hidden.len();
+    let hw = arch.conv_out_hw();
+    let (last_h, last_w) = hw.last().copied().unwrap_or((arch.frame[0], arch.frame[1]));
+    let last_c = arch.convs.last().map(|c| c.filters).unwrap_or(arch.frame[2]);
+    let flat_dim = last_h * last_w * last_c;
+    let head_dim = if n_fc > 0 { arch.hidden[n_fc - 1] } else { flat_dim };
+    let a = arch.actions;
+    let threads = pool.threads();
+
+    let mut grad = vec![0.0f32; arch.param_count()];
+    let mut tensor_slices: Vec<&mut [f32]> = Vec::new();
+    {
+        let mut rest: &mut [f32] = &mut grad;
+        for (_, shape) in arch.param_spec() {
+            let n: usize = shape.iter().product();
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(n);
+            tensor_slices.push(head);
+            rest = tail;
+        }
+    }
+
+    let slots_ref: &[ShardSlot] = &slots;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    let mut slice_iter = tensor_slices.into_iter();
+
+    // Conv layers: weight [kdim, F] chunked over kdim rows, bias [F] whole.
+    for i in 0..n_conv {
+        let conv = arch.convs[i];
+        let (oh, ow) = hw[i];
+        let f = conv.filters;
+        let in_c = if i > 0 { arch.convs[i - 1].filters } else { arch.frame[2] };
+        let kdim = conv.kernel * conv.kernel * in_c;
+        let wslice = slice_iter.next().unwrap();
+        let bslice = slice_iter.next().unwrap();
+
+        let chunk_rows = kdim.div_ceil(threads);
+        let mut k_lo = 0;
+        for chunk in wslice.chunks_mut(chunk_rows * f) {
+            let k_hi = k_lo + chunk.len() / f;
+            tasks.push(Box::new(move || {
+                for slot in slots_ref {
+                    let rows = slot.rows();
+                    let dcv = &slot.dconv[i];
+                    let pat = &slot.conv_patches[i];
+                    for bi in 0..rows {
+                        let dy = &dcv[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+                        let psamp = &pat[bi * oh * ow * kdim..(bi + 1) * oh * ow * kdim];
+                        for row in 0..oh * ow {
+                            let prow = &psamp[row * kdim..(row + 1) * kdim];
+                            let drow = &dy[row * f..(row + 1) * f];
+                            for kk in k_lo..k_hi {
+                                let av = prow[kk];
+                                if av == 0.0 {
+                                    continue;
+                                }
+                                let orow = &mut chunk[(kk - k_lo) * f..(kk - k_lo + 1) * f];
+                                for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                    *o += av * dv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }));
+            k_lo = k_hi;
+        }
+        tasks.push(Box::new(move || {
+            for slot in slots_ref {
+                let rows = slot.rows();
+                let dcv = &slot.dconv[i];
+                for bi in 0..rows {
+                    let dy = &dcv[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+                    for row in 0..oh * ow {
+                        for (o, &dv) in bslice.iter_mut().zip(dy[row * f..(row + 1) * f].iter()) {
+                            *o += dv;
+                        }
+                    }
+                }
+            }
+        }));
+    }
+
+    // Hidden layers: weight [in_dim, width] chunked over in_dim rows.
+    for i in 0..n_fc {
+        let width = arch.hidden[i];
+        let in_dim = if i > 0 { arch.hidden[i - 1] } else { flat_dim };
+        let wslice = slice_iter.next().unwrap();
+        let bslice = slice_iter.next().unwrap();
+
+        let chunk_rows = in_dim.div_ceil(threads);
+        let mut k_lo = 0;
+        for chunk in wslice.chunks_mut(chunk_rows * width) {
+            let k_hi = k_lo + chunk.len() / width;
+            tasks.push(Box::new(move || {
+                for slot in slots_ref {
+                    let rows = slot.rows();
+                    let xin: &[f32] =
+                        if i > 0 { &slot.fc_out[i - 1] } else { &slot.conv_out[n_conv - 1] };
+                    let dxl = &slot.dfc[i];
+                    for r in 0..rows {
+                        let xrow = &xin[r * in_dim..(r + 1) * in_dim];
+                        let drow = &dxl[r * width..(r + 1) * width];
+                        for kk in k_lo..k_hi {
+                            let av = xrow[kk];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            let orow = &mut chunk[(kk - k_lo) * width..(kk - k_lo + 1) * width];
+                            for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                *o += av * dv;
+                            }
+                        }
+                    }
+                }
+            }));
+            k_lo = k_hi;
+        }
+        tasks.push(Box::new(move || {
+            for slot in slots_ref {
+                let rows = slot.rows();
+                let dxl = &slot.dfc[i];
+                for r in 0..rows {
+                    for (o, &dv) in bslice.iter_mut().zip(dxl[r * width..(r + 1) * width].iter()) {
+                        *o += dv;
+                    }
+                }
+            }
+        }));
+    }
+
+    // Output head: weight [head_dim, A] chunked over head_dim rows.
+    {
+        let wslice = slice_iter.next().unwrap();
+        let bslice = slice_iter.next().unwrap();
+        let chunk_rows = head_dim.div_ceil(threads);
+        let mut k_lo = 0;
+        for chunk in wslice.chunks_mut(chunk_rows * a) {
+            let k_hi = k_lo + chunk.len() / a;
+            tasks.push(Box::new(move || {
+                for slot in slots_ref {
+                    let rows = slot.rows();
+                    let xin: &[f32] =
+                        if n_fc > 0 { &slot.fc_out[n_fc - 1] } else { &slot.conv_out[n_conv - 1] };
+                    for r in 0..rows {
+                        let xrow = &xin[r * head_dim..(r + 1) * head_dim];
+                        let drow = &slot.dq[r * a..(r + 1) * a];
+                        for kk in k_lo..k_hi {
+                            let av = xrow[kk];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            let orow = &mut chunk[(kk - k_lo) * a..(kk - k_lo + 1) * a];
+                            for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                *o += av * dv;
+                            }
+                        }
+                    }
+                }
+            }));
+            k_lo = k_hi;
+        }
+        tasks.push(Box::new(move || {
+            for slot in slots_ref {
+                let rows = slot.rows();
+                for r in 0..rows {
+                    for (o, &dv) in bslice.iter_mut().zip(slot.dq[r * a..(r + 1) * a].iter()) {
+                        *o += dv;
+                    }
+                }
+            }
+        }));
+    }
+    pool.scope(tasks);
 
     Ok((grad, loss))
 }
+
+// ---------------------------------------------------------------------------
+// Optimizer
+// ---------------------------------------------------------------------------
 
 /// Centered RMSProp (the L1 fused kernel's semantics, `rmsprop_ref`).
 fn rmsprop(theta: &mut [f32], grad: &[f32], g: &mut [f32], s: &mut [f32], lr: f32) {
@@ -583,6 +801,33 @@ fn rmsprop(theta: &mut [f32], grad: &[f32], g: &mut [f32], s: &mut [f32], lr: f3
         s[i] = RMSPROP_ALPHA * s[i] + (1.0 - RMSPROP_ALPHA) * gr * gr;
         theta[i] -= lr * gr / (s[i] - g[i] * g[i] + RMSPROP_EPS).sqrt();
     }
+}
+
+/// [`rmsprop`] with the (elementwise, hence trivially order-invariant)
+/// update partitioned over the pool.
+fn rmsprop_pooled(
+    pool: &ComputePool,
+    theta: &mut [f32],
+    grad: &[f32],
+    g: &mut [f32],
+    s: &mut [f32],
+    lr: f32,
+) {
+    if pool.threads() <= 1 {
+        return rmsprop(theta, grad, g, s, lr);
+    }
+    let ranges = split_ranges(theta.len(), pool.threads());
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let (mut t_rest, mut g_rest, mut s_rest): (&mut [f32], &mut [f32], &mut [f32]) = (theta, g, s);
+    for (lo, hi) in ranges {
+        let (tc, tt) = std::mem::take(&mut t_rest).split_at_mut(hi - lo);
+        let (gc, gt) = std::mem::take(&mut g_rest).split_at_mut(hi - lo);
+        let (sc, st) = std::mem::take(&mut s_rest).split_at_mut(hi - lo);
+        (t_rest, g_rest, s_rest) = (tt, gt, st);
+        let grc = &grad[lo..hi];
+        tasks.push(Box::new(move || rmsprop(tc, grc, gc, sc, lr)));
+    }
+    pool.scope(tasks);
 }
 
 // ---------------------------------------------------------------------------
@@ -596,15 +841,36 @@ struct LoadedEntry {
 }
 
 /// Pure-Rust [`ExecutionEngine`]; see module docs.
-#[derive(Default)]
 pub struct NativeEngine {
     entries: BTreeMap<String, LoadedEntry>,
     archs: BTreeMap<String, Arc<NetArch>>,
+    pool: ComputePool,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine::new()
+    }
 }
 
 impl NativeEngine {
+    /// Serial engine (1 compute lane) — byte-for-byte the original engine.
     pub fn new() -> NativeEngine {
-        NativeEngine::default()
+        NativeEngine::with_threads(1)
+    }
+
+    /// Engine backed by a persistent `learner_threads`-lane [`ComputePool`].
+    /// Outputs are bit-identical for every thread count.
+    pub fn with_threads(learner_threads: usize) -> NativeEngine {
+        NativeEngine {
+            entries: BTreeMap::new(),
+            archs: BTreeMap::new(),
+            pool: ComputePool::new(learner_threads),
+        }
+    }
+
+    pub fn learner_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     fn arch_for(&mut self, spec: &NetSpec) -> Result<Arc<NetArch>> {
@@ -652,7 +918,7 @@ impl ExecutionEngine for NativeEngine {
                 }
                 let params = args[0].as_f32("infer params")?;
                 let states = args[1].as_u8("infer states")?;
-                let q = infer(arch, params, states, batch)?;
+                let q = infer_pooled(arch, params, states, batch, &self.pool)?;
                 Ok(vec![HostTensor::f32(q, vec![batch, arch.actions])])
             }
             EntryKind::Train { batch, double } => {
@@ -677,12 +943,12 @@ impl ExecutionEngine for NativeEngine {
                 }
                 let (grad, loss) = td_grads(
                     arch, theta, target, states, actions, rewards, next_states, dones,
-                    entry.gamma, double,
+                    entry.gamma, double, &self.pool,
                 )?;
                 let mut theta2 = theta.to_vec();
                 let mut g2 = g.to_vec();
                 let mut s2 = s.to_vec();
-                rmsprop(&mut theta2, &grad, &mut g2, &mut s2, lr[0]);
+                rmsprop_pooled(&self.pool, &mut theta2, &grad, &mut g2, &mut s2, lr[0]);
                 let p = arch.param_count();
                 Ok(vec![
                     HostTensor::f32(theta2, vec![p]),
@@ -782,9 +1048,12 @@ mod tests {
         let target = init_params(&arch, 8);
         let batch = micro_batch(&arch, &mut rng);
         let (states, actions, rewards, next, dones) = batch.clone();
-        let (grad, loss) =
-            td_grads(&arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, false)
-                .unwrap();
+        let pool = ComputePool::new(1);
+        let (grad, loss) = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, false,
+            &pool,
+        )
+        .unwrap();
         assert!((micro_loss(&arch, &theta, &target, &batch, false) - loss).abs() < 1e-6);
 
         // Central differences on a spread of parameter indices.
@@ -813,9 +1082,12 @@ mod tests {
         let target = init_params(&arch, 10);
         let batch = micro_batch(&arch, &mut rng);
         let (states, actions, rewards, next, dones) = batch.clone();
-        let (grad, loss) =
-            td_grads(&arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, true)
-                .unwrap();
+        let pool = ComputePool::new(1);
+        let (grad, loss) = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, true,
+            &pool,
+        )
+        .unwrap();
         assert!((micro_loss(&arch, &theta, &target, &batch, true) - loss).abs() < 1e-6);
         let eps = 1e-3f32;
         for &i in &[1usize, 64, 66, 131, theta.len() - 2] {
@@ -830,6 +1102,47 @@ mod tests {
                 "param {i}: finite-diff {fd} vs analytic {}",
                 grad[i]
             );
+        }
+    }
+
+    #[test]
+    fn gradients_are_bit_identical_across_pool_widths() {
+        let arch = micro_arch();
+        let mut rng = Rng::new(44);
+        let theta = init_params(&arch, 11);
+        let target = init_params(&arch, 12);
+        let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
+        let baseline = {
+            let pool = ComputePool::new(1);
+            td_grads(&arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, false, &pool)
+                .unwrap()
+        };
+        for threads in [2usize, 3, 4] {
+            let pool = ComputePool::new(threads);
+            let (grad, loss) = td_grads(
+                &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, false,
+                &pool,
+            )
+            .unwrap();
+            assert_eq!(loss.to_bits(), baseline.1.to_bits(), "{threads} threads: loss drifted");
+            let a: Vec<u32> = baseline.0.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = grad.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "{threads} threads: grads not bit-identical");
+        }
+    }
+
+    #[test]
+    fn pooled_infer_matches_serial() {
+        let arch = micro_arch();
+        let theta = init_params(&arch, 5);
+        let mut rng = Rng::new(9);
+        let b = 7;
+        let states: Vec<u8> = (0..b * arch.frame_elems()).map(|_| rng.below(256) as u8).collect();
+        let serial = infer(&arch, &theta, &states, b).unwrap();
+        for threads in [2usize, 4] {
+            let pool = ComputePool::new(threads);
+            let pooled = infer_pooled(&arch, &theta, &states, b, &pool).unwrap();
+            assert_eq!(serial, pooled, "{threads} threads");
         }
     }
 
@@ -850,6 +1163,24 @@ mod tests {
     }
 
     #[test]
+    fn pooled_rmsprop_matches_serial() {
+        let mut rng = Rng::new(3);
+        let n = 1000;
+        let theta0: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let grad: Vec<f32> = (0..n).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let g0: Vec<f32> = (0..n).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+        let s0: Vec<f32> = (0..n).map(|_| rng.range_f32(0.0, 0.3)).collect();
+        let (mut t1, mut g1, mut s1) = (theta0.clone(), g0.clone(), s0.clone());
+        rmsprop(&mut t1, &grad, &mut g1, &mut s1, 0.01);
+        let pool = ComputePool::new(3);
+        let (mut t2, mut g2, mut s2) = (theta0, g0, s0);
+        rmsprop_pooled(&pool, &mut t2, &grad, &mut g2, &mut s2, 0.01);
+        assert_eq!(t1, t2);
+        assert_eq!(g1, g2);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
     fn init_is_deterministic_and_bounded() {
         let arch = NetArch::by_name("tiny", 6).unwrap();
         let a = init_params(&arch, 0);
@@ -861,20 +1192,5 @@ mod tests {
         assert!(a[..1024].iter().all(|v| v.abs() <= 1.0 / 16.0 + 1e-6));
         // conv0 bias is zero.
         assert!(a[1024..1028].iter().all(|&v| v == 0.0));
-    }
-
-    #[test]
-    fn im2col_col2im_roundtrip_shapes() {
-        // 4x4x1 image, k=2, s=2 -> 2x2 output, kdim 4.
-        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
-        let mut patches = vec![0.0f32; 4 * 4];
-        im2col_sample(&x, 4, 4, 1, 2, 2, &mut patches);
-        // First patch = top-left 2x2 block.
-        assert_eq!(&patches[..4], &[0.0, 1.0, 4.0, 5.0]);
-        // Scatter ones back: non-overlapping stride => all-ones image.
-        let dp = vec![1.0f32; 16];
-        let mut dx = vec![0.0f32; 16];
-        col2im_sample(&dp, 4, 4, 1, 2, 2, &mut dx);
-        assert!(dx.iter().all(|&v| v == 1.0));
     }
 }

@@ -1,0 +1,322 @@
+//! `ComputePool`: the persistent learner thread pool.
+//!
+//! The native engine shards its minibatch math over this pool
+//! (rust/DESIGN.md §9). Design constraints, in order:
+//!
+//! 1. **Determinism is owned by the caller, not the pool.** The pool makes
+//!    no ordering promises beyond "every task runs exactly once and
+//!    [`scope`] returns only after all of them finished". The engine only
+//!    submits task sets whose outputs are bitwise independent of execution
+//!    order (disjoint output slices, per-element reduction order fixed by
+//!    construction), so any interleaving produces identical bits.
+//! 2. **`threads = 1` is the serial engine.** No worker threads are
+//!    spawned; `scope` runs the tasks inline, in submission order, on the
+//!    caller — zero synchronization on the hot path.
+//! 3. **Persistent workers.** `threads - 1` workers are spawned once at
+//!    engine construction and live until drop; a training run issues
+//!    hundreds of thousands of scopes, so per-scope thread spawning would
+//!    dominate small-network train steps.
+//!
+//! Safety: tasks may borrow caller-stack data (`'t` lifetime). [`scope`]
+//! erases the lifetime to hand boxes to the persistent workers, which is
+//! sound because it blocks until the last task completed (a panicking task
+//! still counts down before the panic is rethrown on the caller).
+//!
+//! [`scope`]: ComputePool::scope
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Queue shared between the submitting thread and the workers.
+struct Queue {
+    tasks: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Queue {
+    /// Pop one task, blocking until one arrives or shutdown.
+    fn pop_blocking(&self) -> Option<Task> {
+        let mut q = self.tasks.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                return Some(t);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(10)).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Pop one task without blocking.
+    fn try_pop(&self) -> Option<Task> {
+        self.tasks.lock().unwrap().pop_front()
+    }
+}
+
+/// Completion tracker for one `scope` call.
+struct ScopeState {
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl ScopeState {
+    fn finish_one(&self) {
+        if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Persistent worker pool for the native engine's sharded learner.
+pub struct ComputePool {
+    threads: usize,
+    queue: Arc<Queue>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ComputePool {
+    /// A pool of `threads` compute lanes: the caller plus `threads - 1`
+    /// persistent workers. `threads = 1` (or 0) spawns nothing and runs
+    /// every scope inline.
+    pub fn new(threads: usize) -> ComputePool {
+        let threads = threads.max(1);
+        let queue = Arc::new(Queue {
+            tasks: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let queue = queue.clone();
+                std::thread::Builder::new()
+                    .name(format!("learner-{i}"))
+                    .spawn(move || {
+                        while let Some(task) = queue.pop_blocking() {
+                            task();
+                        }
+                    })
+                    .expect("spawning learner pool worker")
+            })
+            .collect();
+        ComputePool { threads, queue, workers }
+    }
+
+    /// Number of compute lanes (caller included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every task exactly once, concurrently on the pool, and return
+    /// once ALL have finished. The caller participates, so a 1-thread pool
+    /// degenerates to running the tasks inline in submission order.
+    ///
+    /// Panics in a task are re-raised here after the remaining tasks
+    /// completed (the scope never returns with borrows still live).
+    pub fn scope<'t>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 't>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if self.threads <= 1 || tasks.len() == 1 {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+
+        let state = Arc::new(ScopeState {
+            remaining: AtomicUsize::new(tasks.len()),
+            panicked: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = self.queue.tasks.lock().unwrap();
+            for task in tasks {
+                let st = state.clone();
+                let wrapped: Box<dyn FnOnce() + Send + 't> = Box::new(move || {
+                    if catch_unwind(AssertUnwindSafe(task)).is_err() {
+                        st.panicked.store(true, Ordering::SeqCst);
+                    }
+                    st.finish_one();
+                });
+                // SAFETY: only the lifetime is erased. Every wrapped task is
+                // either executed or drained below before `scope` returns
+                // (remaining reaches 0 first), so no borrow escapes 't.
+                let wrapped: Task = unsafe {
+                    Box::from_raw(Box::into_raw(wrapped) as *mut (dyn FnOnce() + Send + 'static))
+                };
+                q.push_back(wrapped);
+            }
+        }
+        self.queue.cv.notify_all();
+
+        // Work-steal on the caller until the scope completes.
+        loop {
+            if state.remaining.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            if let Some(task) = self.queue.try_pop() {
+                task();
+                continue;
+            }
+            let g = state.lock.lock().unwrap();
+            if state.remaining.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            let _ = state.cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+        }
+        if state.panicked.load(Ordering::SeqCst) {
+            panic!("a learner pool task panicked");
+        }
+    }
+
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        self.queue.shutdown.store(true, Ordering::SeqCst);
+        self.queue.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// `0..len` split into at most `parts` contiguous ascending ranges.
+pub fn split_ranges(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, len.max(1));
+    let base = len / parts;
+    let rem = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for i in 0..parts {
+        let hi = lo + base + usize::from(i < rem);
+        if hi > lo {
+            out.push((lo, hi));
+        }
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn single_thread_runs_inline_in_order() {
+        let pool = ComputePool::new(1);
+        let order = Mutex::new(Vec::new());
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|i| {
+                let order = &order;
+                Box::new(move || order.lock().unwrap().push(i)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multi_thread_runs_every_task_once() {
+        let pool = ComputePool::new(4);
+        for _ in 0..50 {
+            let hits = AtomicU64::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..32)
+                .map(|_| {
+                    let hits = &hits;
+                    Box::new(move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(tasks);
+            assert_eq!(hits.load(Ordering::SeqCst), 32);
+        }
+    }
+
+    #[test]
+    fn disjoint_mut_chunks_are_all_written() {
+        let pool = ComputePool::new(3);
+        let mut data = vec![0u64; 1024];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(100)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 1000 + j) as u64;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, ((i / 100) * 1000 + i % 100) as u64);
+        }
+    }
+
+    #[test]
+    fn scope_is_reusable_and_blocks_until_done() {
+        let pool = ComputePool::new(2);
+        for round in 0..20u64 {
+            let sum = AtomicU64::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..10)
+                .map(|i| {
+                    let sum = &sum;
+                    Box::new(move || {
+                        sum.fetch_add(round * 10 + i, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(tasks);
+            // Visible immediately after scope returns: the barrier held.
+            assert_eq!(sum.load(Ordering::SeqCst), round * 100 + 45);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_after_scope_drains() {
+        let pool = ComputePool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("boom");
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(tasks);
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // The pool must still be usable afterwards.
+        let ok = AtomicU64::new(0);
+        pool.scope(vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn split_ranges_partitions_exactly() {
+        assert_eq!(split_ranges(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(split_ranges(2, 4), vec![(0, 1), (1, 2)]);
+        assert_eq!(split_ranges(0, 4), Vec::<(usize, usize)>::new());
+        let r = split_ranges(32, 4);
+        assert_eq!(r, vec![(0, 8), (8, 16), (16, 24), (24, 32)]);
+    }
+}

@@ -138,6 +138,17 @@ mod tests {
     }
 
     #[test]
+    fn learner_knobs_parse_in_both_forms() {
+        // The parallel-learner knobs: --learner-threads N --prefetch-batches N.
+        let a = parse("train --learner-threads 4 --prefetch-batches 2");
+        assert_eq!(a.usize_or("learner-threads", 1).unwrap(), 4);
+        assert_eq!(a.usize_or("prefetch-batches", 1).unwrap(), 2);
+        let b = parse("train --learner-threads=8 --prefetch-batches=0");
+        assert_eq!(b.usize_or("learner-threads", 1).unwrap(), 8);
+        assert_eq!(b.usize_or("prefetch-batches", 1).unwrap(), 0);
+    }
+
+    #[test]
     fn equals_form() {
         let a = parse("bench --mode=both --threads=8");
         assert_eq!(a.str_opt("mode"), Some("both"));

@@ -1,0 +1,203 @@
+//! Parallel-learner acceptance tests (ISSUE 2).
+//!
+//! The tentpole claim is *bit-determinism under parallelism*:
+//!
+//! * gradients (and therefore parameters) are bit-identical for any
+//!   `learner_threads` value — the sharded Phase A / order-preserving
+//!   Phase B reduction never changes an element's f32 accumulation
+//!   sequence;
+//! * the replay prefetch pipeline changes *when* batches are assembled,
+//!   never *what* they contain — prefetch on/off yields the identical
+//!   training trajectory for a pinned seed;
+//! * the cache-tiled matmuls match the naive kernels elementwise.
+
+use std::sync::Arc;
+
+use tempo_dqn::config::{ExecMode, ExperimentConfig};
+use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::runtime::kernels::{
+    matmul_a_bt, matmul_a_bt_tiled, matmul_acc, matmul_acc_tiled, matmul_at_b_acc,
+    matmul_at_b_acc_tiled,
+};
+use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, QNet, TrainBatch};
+use tempo_dqn::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// (a) learner_threads ∈ {1, 2, 4} produce bit-identical parameters
+// ---------------------------------------------------------------------------
+
+fn train_batch_for(qnet: &QNet, seed: u64) -> TrainBatch {
+    let [h, w, c] = qnet.spec().frame;
+    let b = 32usize;
+    let mut rng = Rng::new(seed);
+    let frame = h * w * c;
+    TrainBatch {
+        states: (0..b * frame).map(|_| rng.below(256) as u8).collect(),
+        next_states: (0..b * frame).map(|_| rng.below(256) as u8).collect(),
+        actions: (0..b).map(|_| rng.below(qnet.spec().actions as u32) as i32).collect(),
+        rewards: (0..b).map(|_| rng.f32() - 0.5).collect(),
+        dones: (0..b).map(|i| if i % 5 == 0 { 1.0 } else { 0.0 }).collect(),
+    }
+}
+
+fn theta_after_steps(learner_threads: usize, double: bool) -> (Vec<u32>, Vec<u32>) {
+    let manifest = Manifest::load_or_builtin(&default_artifact_dir()).expect("manifest");
+    let device = Arc::new(Device::cpu_with_threads(learner_threads).expect("device"));
+    let qnet = QNet::load(device, &manifest, "tiny", double, 32).expect("qnet");
+    let mut losses = Vec::new();
+    for step in 0..4u64 {
+        let batch = train_batch_for(&qnet, 100 + step);
+        losses.push(qnet.train_step(&batch, 2.5e-4).expect("train").to_bits());
+        if step == 1 {
+            qnet.sync_target(); // exercise a target swap mid-sequence
+        }
+    }
+    let theta: Vec<u32> = qnet.theta_host().unwrap().iter().map(|v| v.to_bits()).collect();
+    (theta, losses)
+}
+
+#[test]
+fn learner_thread_counts_are_bit_identical() {
+    let (theta1, losses1) = theta_after_steps(1, false);
+    for threads in [2usize, 4] {
+        let (theta_n, losses_n) = theta_after_steps(threads, false);
+        assert_eq!(losses1, losses_n, "{threads} learner threads: loss sequence drifted");
+        assert_eq!(theta1, theta_n, "{threads} learner threads: theta not bit-identical");
+    }
+}
+
+#[test]
+fn learner_thread_counts_are_bit_identical_double_dqn() {
+    let (theta1, losses1) = theta_after_steps(1, true);
+    let (theta4, losses4) = theta_after_steps(4, true);
+    assert_eq!(losses1, losses4, "double-DQN loss sequence drifted");
+    assert_eq!(theta1, theta4, "double-DQN theta not bit-identical");
+}
+
+// ---------------------------------------------------------------------------
+// (b) prefetch on/off: identical end-to-end training trajectory
+// ---------------------------------------------------------------------------
+
+fn e2e_cfg(mode: ExecMode, learner_threads: usize, prefetch_batches: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+    cfg.mode = mode;
+    cfg.threads = 2;
+    cfg.envs_per_thread = 2;
+    cfg.learner_threads = learner_threads;
+    cfg.prefetch_batches = prefetch_batches;
+    cfg.total_steps = 192;
+    cfg.game = "seeker".into();
+    cfg.prepopulate = 300;
+    cfg.replay_capacity = 16_000;
+    cfg.target_update_period = 64;
+    cfg.train_period = 4;
+    cfg.seed = 33;
+    cfg
+}
+
+/// Returns (returns, loss values, trains, final theta bits). Loss *steps*
+/// are tagged by a racing counter in concurrent modes, so only the values
+/// (which are order-deterministic) are compared.
+fn run_trajectory(cfg: ExperimentConfig) -> (Vec<(u64, f64)>, Vec<u32>, u64, Vec<u32>) {
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).expect("coordinator");
+    let res = coord.run().expect("run");
+    let losses = res.losses.iter().map(|(_, l)| l.to_bits()).collect();
+    let theta = coord
+        .qnet()
+        .theta_host()
+        .expect("theta")
+        .iter()
+        .map(|v| v.to_bits())
+        .collect();
+    (res.returns, losses, res.trains, theta)
+}
+
+#[test]
+fn prefetch_on_off_trajectories_are_identical_in_both_mode() {
+    // The sync driver finishes every dispatched window, so trains and
+    // theta are fully deterministic — compare everything.
+    let off = run_trajectory(e2e_cfg(ExecMode::Both, 1, 0));
+    let on = run_trajectory(e2e_cfg(ExecMode::Both, 1, 2));
+    assert_eq!(off.0, on.0, "returns diverged with prefetch on");
+    assert_eq!(off.1, on.1, "loss values diverged with prefetch on");
+    assert_eq!(off.2, on.2, "train counts diverged with prefetch on");
+    assert_eq!(off.3, on.3, "final theta diverged with prefetch on");
+}
+
+#[test]
+fn parallel_learner_plus_prefetch_reproduces_serial_trajectory() {
+    // The PR's acceptance criterion end-to-end: learner_threads=4 with
+    // prefetch enabled is the SAME machine as the serial inline learner.
+    let serial = run_trajectory(e2e_cfg(ExecMode::Both, 1, 0));
+    let parallel = run_trajectory(e2e_cfg(ExecMode::Both, 4, 2));
+    assert_eq!(serial.0, parallel.0, "returns diverged");
+    assert_eq!(serial.1, parallel.1, "loss values diverged");
+    assert_eq!(serial.2, parallel.2, "train counts diverged");
+    assert_eq!(serial.3, parallel.3, "final theta diverged");
+}
+
+#[test]
+fn async_concurrent_mode_runs_with_parallel_learner_and_prefetch() {
+    // Async-mode step tickets race by design (rust/DESIGN.md §7.4), so
+    // trajectories are not run-to-run comparable even without the new
+    // machinery; assert the pipeline drives the async driver to completion
+    // with real training and target syncs.
+    let mut coord = Coordinator::new(e2e_cfg(ExecMode::Concurrent, 4, 2), &default_artifact_dir())
+        .expect("coordinator");
+    let res = coord.run().expect("run");
+    assert!(res.steps >= 192, "steps {}", res.steps);
+    assert!(res.trains >= 32, "trains {}", res.trains);
+    assert!(res.target_syncs >= 2, "syncs {}", res.target_syncs);
+}
+
+// ---------------------------------------------------------------------------
+// (c) tiled kernels == naive kernels, elementwise
+// ---------------------------------------------------------------------------
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if rng.chance(0.3) {
+                0.0 // exercise the sparsity-skip paths
+            } else {
+                rng.range_f32(-3.0, 3.0)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn tiled_matmuls_match_naive_on_random_shapes() {
+    let mut rng = Rng::new(0x7115D);
+    for case in 0..40 {
+        let m = 1 + rng.below_usize(48);
+        let k = 1 + rng.below_usize(400);
+        let n = 1 + rng.below_usize(150);
+        let a = randvec(&mut rng, m * k);
+        let b_kn = randvec(&mut rng, k * n);
+        let b_mn = randvec(&mut rng, m * n);
+        let b_nk = randvec(&mut rng, n * k);
+
+        let mut naive = randvec(&mut rng, m * n);
+        let mut tiled = naive.clone();
+        matmul_acc(&a, &b_kn, &mut naive, m, k, n);
+        matmul_acc_tiled(&a, &b_kn, &mut tiled, m, k, n);
+        assert_eq!(bits(&naive), bits(&tiled), "case {case}: matmul_acc {m}x{k}x{n}");
+
+        let mut naive = randvec(&mut rng, k * n);
+        let mut tiled = naive.clone();
+        matmul_at_b_acc(&a, &b_mn, &mut naive, m, k, n);
+        matmul_at_b_acc_tiled(&a, &b_mn, &mut tiled, m, k, n);
+        assert_eq!(bits(&naive), bits(&tiled), "case {case}: matmul_at_b_acc {m}x{k}x{n}");
+
+        let mut naive = vec![0.0f32; m * n];
+        let mut tiled = vec![f32::NAN; m * n]; // `=` kernel: junk must be overwritten
+        matmul_a_bt(&a, &b_nk, &mut naive, m, k, n);
+        matmul_a_bt_tiled(&a, &b_nk, &mut tiled, m, k, n);
+        assert_eq!(bits(&naive), bits(&tiled), "case {case}: matmul_a_bt {m}x{k}x{n}");
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}

@@ -236,6 +236,8 @@ fn random_model(rng: &mut Rng) -> CostModel {
         txn_ms: 0.05 + rng.f64() * 0.5,
         infer_per_sample_ms: 0.01 + rng.f64() * 0.2,
         train_ms: 0.2 + rng.f64() * 2.0,
+        train_parallel_frac: rng.f64(),
+        sample_ms: rng.f64() * 0.3,
         sync_ms: rng.f64(),
         cores: 1 + rng.below_usize(8),
         contention: rng.f64() * 0.5,
@@ -249,7 +251,14 @@ fn prop_hwsim_makespan_respects_lower_bound() {
         let mut rng = Rng::new(seed);
         let model = random_model(&mut rng);
         let threads = 1 + rng.below_usize(8);
-        let run = SimRun { steps: 2_000, c: 500, f: 4, threads };
+        let run = SimRun {
+            steps: 2_000,
+            c: 500,
+            f: 4,
+            threads,
+            learner_threads: 1 + rng.below_usize(4),
+            prefetch: rng.chance(0.5),
+        };
         for mode in ExecMode::ALL {
             let stats = simulate(model, run, mode);
             // Synchronized modes run whole W-rounds, possibly overshooting.
@@ -281,12 +290,13 @@ fn prop_hwsim_w1_standard_equals_closed_form() {
         let mut model = random_model(&mut rng);
         model.cores = 1;
         model.contention = 0.0;
-        let run = SimRun { steps: 1_000, c: 250, f: 4, threads: 1 };
+        let run = SimRun { steps: 1_000, c: 250, f: 4, threads: 1, ..SimRun::default() };
         let stats = simulate(model, run, ExecMode::Standard);
-        // W=1 standard is fully serial: steps*(infer+serial+env) + trains.
+        // W=1 standard is fully serial: steps*(infer+serial+env) + trains
+        // (each train pays txn + serial-learner compute + inline assembly).
         let expect = run.steps as f64
             * (model.infer_ms(1, 1) + model.serial_ms + model.env_step_ms)
-            + (run.steps / run.f) as f64 * model.train_total_ms(1);
+            + (run.steps / run.f) as f64 * (model.train_total_ms(1) + model.sample_ms);
         let rel = (stats.makespan_ms - expect).abs() / expect;
         assert!(rel < 1e-6, "seed {seed}: {} vs {}", stats.makespan_ms, expect);
     }
