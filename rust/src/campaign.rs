@@ -1,0 +1,382 @@
+//! Multi-game campaign runner (`run-suite` subcommand).
+//!
+//! A campaign is a TOML-declared list of (game, seed, config-override)
+//! experiment *legs* executed back-to-back — the Atari-style suite of
+//! Stooke & Abbeel's many-game evaluations, made operable: every leg
+//! checkpoints into its own directory (`<ckpt_dir>/<leg id>/`), so killing
+//! the process at any point loses at most one checkpoint period, and
+//! re-running the same campaign resumes every unfinished leg bit-exactly
+//! (rust/DESIGN.md §10) and skips completed ones.
+//!
+//! Two execution orders:
+//! * `sequential` — run each leg to completion before the next.
+//! * `round_robin` — advance each unfinished leg by `slice` steps per
+//!   turn, cycling until all are done. Legs are swapped through their
+//!   checkpoints, so only one machine is in memory at a time.
+//!
+//! File format (parsed by the in-tree TOML subset, `config/toml.rs`):
+//!
+//! ```toml
+//! [campaign]
+//! name = "atari-suite"
+//! ckpt_dir = "campaign-ckpts"
+//! order = "round_robin"        # or "sequential" (default)
+//! slice = 50_000               # steps per round-robin turn
+//! games = "pong,breakout"      # shorthand: one leg per game, or use [leg.*]
+//!
+//! # Base experiment config: same keys as a train --config file.
+//! preset = "paper"
+//! [run]
+//! mode = "both"
+//! threads = 4
+//!
+//! # Explicit legs override the base; executed in section-name order.
+//! [leg.00_pong]
+//! game = "pong"
+//! seed = 1
+//! steps = 200_000
+//! [leg.01_breakout]
+//! game = "breakout"
+//! seed = 2
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::latest_checkpoint;
+use crate::config::toml::TomlDoc;
+use crate::config::{ExecMode, ExperimentConfig};
+use crate::coordinator::Coordinator;
+use crate::util::json::{obj, Json};
+
+/// Leg execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Order {
+    Sequential,
+    RoundRobin,
+}
+
+impl Order {
+    pub fn parse(s: &str) -> Result<Order> {
+        Ok(match s {
+            "sequential" => Order::Sequential,
+            "round_robin" | "round-robin" => Order::RoundRobin,
+            other => bail!("unknown campaign order {other:?} (sequential|round_robin)"),
+        })
+    }
+}
+
+/// One experiment of the campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignLeg {
+    /// Stable id: the `[leg.<id>]` section name (or the game name for the
+    /// `games = "..."` shorthand). Doubles as the checkpoint subdirectory.
+    pub id: String,
+    pub cfg: ExperimentConfig,
+}
+
+/// A parsed campaign.
+pub struct Campaign {
+    pub name: String,
+    pub ckpt_root: PathBuf,
+    pub order: Order,
+    /// Steps each round-robin turn advances a leg by.
+    pub slice: u64,
+    pub legs: Vec<CampaignLeg>,
+}
+
+/// Completion report of one leg.
+#[derive(Clone, Debug)]
+pub struct LegReport {
+    pub id: String,
+    pub game: String,
+    pub steps: u64,
+    pub episodes: u64,
+    pub trains: u64,
+    pub recent_mean_return: f64,
+    pub state_digest: u64,
+}
+
+impl Campaign {
+    pub fn load(path: &Path) -> Result<Campaign> {
+        let doc = TomlDoc::load(path)?;
+        Self::from_toml(&doc)
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<Campaign> {
+        let base = ExperimentConfig::from_toml(doc)
+            .context("campaign base experiment config")?;
+        let name = doc.str_or("campaign.name", "campaign")?;
+        let ckpt_root = PathBuf::from(doc.str_or("campaign.ckpt_dir", "campaign-ckpts")?);
+        let order = Order::parse(&doc.str_or("campaign.order", "sequential")?)?;
+        let slice = doc.usize_or("campaign.slice", 50_000)? as u64;
+        if slice == 0 {
+            bail!("campaign.slice must be >= 1 step");
+        }
+
+        // Explicit [leg.<id>] sections, in section-name order (the TOML
+        // subset stores keys sorted, so ids like 00_pong order the suite).
+        let mut leg_ids: Vec<String> = Vec::new();
+        for key in doc.keys() {
+            let Some(rest) = key.strip_prefix("leg.") else { continue };
+            let Some((id, _)) = rest.split_once('.') else { continue };
+            // Keys are sorted, so a new id differs from the last one seen.
+            if leg_ids.last().map(|l| l.as_str()) != Some(id) {
+                leg_ids.push(id.to_string());
+            }
+        }
+
+        let mut legs = Vec::new();
+        if leg_ids.is_empty() {
+            // Shorthand: one leg per game, base config + per-game seed.
+            let games = doc.str_or("campaign.games", "")?;
+            if games.is_empty() {
+                bail!("campaign declares no [leg.*] sections and no campaign.games list");
+            }
+            for game in games.split(',').map(str::trim).filter(|g| !g.is_empty()) {
+                let mut cfg = base.clone();
+                cfg.game = game.to_string();
+                cfg.validate()?;
+                legs.push(CampaignLeg { id: game.to_string(), cfg });
+            }
+        } else {
+            for id in leg_ids {
+                let key = |field: &str| format!("leg.{id}.{field}");
+                let mut cfg = base.clone();
+                cfg.game = doc.str_or(&key("game"), &cfg.game)?;
+                cfg.seed = doc.usize_or(&key("seed"), cfg.seed as usize)? as u64;
+                cfg.net = doc.str_or(&key("net"), &cfg.net)?;
+                cfg.mode = ExecMode::parse(&doc.str_or(&key("mode"), cfg.mode.name())?)?;
+                cfg.threads = doc.usize_or(&key("threads"), cfg.threads)?;
+                cfg.envs_per_thread = doc.usize_or(&key("envs_per_thread"), cfg.envs_per_thread)?;
+                cfg.total_steps = doc.usize_or(&key("steps"), cfg.total_steps as usize)? as u64;
+                cfg.eval_seed = doc.usize_or(&key("eval_seed"), cfg.eval_seed as usize)? as u64;
+                cfg.validate().with_context(|| format!("leg {id:?}"))?;
+                legs.push(CampaignLeg { id, cfg });
+            }
+        }
+        if legs.is_empty() {
+            bail!("campaign has no legs");
+        }
+        Ok(Campaign { name, ckpt_root, order, slice, legs })
+    }
+
+    fn leg_dir(&self, leg: &CampaignLeg) -> PathBuf {
+        self.ckpt_root.join(&leg.id)
+    }
+
+    fn result_path(&self, leg: &CampaignLeg) -> PathBuf {
+        self.leg_dir(leg).join("result.json")
+    }
+
+    /// True when the leg has a published result (ran to completion in some
+    /// earlier invocation).
+    pub fn leg_done(&self, leg: &CampaignLeg) -> bool {
+        self.result_path(leg).exists()
+    }
+
+    /// Advance one leg by at most `limit` steps (None = to completion):
+    /// build a coordinator, resume its newest checkpoint if one exists,
+    /// run, and drop the machine (its state lives on in the checkpoint the
+    /// run wrote at its final quiesce point). Returns the report when the
+    /// leg reached its step budget.
+    fn advance_leg(
+        &self,
+        leg: &CampaignLeg,
+        artifact_dir: &Path,
+        limit: Option<u64>,
+        log: &mut impl FnMut(&str),
+    ) -> Result<Option<LegReport>> {
+        let dir = self.leg_dir(leg);
+        let mut cfg = leg.cfg.clone();
+        cfg.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+        let total = cfg.total_steps;
+        let mut coord = Coordinator::new(cfg, artifact_dir)?;
+        if let Some(ckpt) = latest_checkpoint(&dir)? {
+            let step = coord.resume_from(&ckpt)?;
+            log(&format!("[{}] resumed {} at step {step}", self.name, leg.id));
+        }
+        let res = coord.run_for(limit)?;
+        log(&format!(
+            "[{}] {} at {}/{total} steps ({:.0} steps/s this turn)",
+            self.name, leg.id, res.steps, res.steps_per_sec
+        ));
+        if res.steps < total {
+            return Ok(None);
+        }
+        let report = LegReport {
+            id: leg.id.clone(),
+            game: leg.cfg.game.clone(),
+            steps: res.steps,
+            episodes: res.episodes,
+            trains: res.trains,
+            recent_mean_return: res.recent_mean_return(100),
+            state_digest: coord.state_digest()?,
+        };
+        let json = obj(vec![
+            ("leg", Json::Str(report.id.clone())),
+            ("game", Json::Str(report.game.clone())),
+            ("steps", Json::Num(report.steps as f64)),
+            ("episodes", Json::Num(report.episodes as f64)),
+            ("trains", Json::Num(report.trains as f64)),
+            ("recent_mean_return", Json::Num(report.recent_mean_return)),
+            ("state_digest", Json::Str(format!("{:016x}", report.state_digest))),
+            (
+                "evals",
+                Json::Arr(
+                    res.evals
+                        .iter()
+                        .map(|e| {
+                            obj(vec![
+                                ("step", Json::Num(e.step as f64)),
+                                ("mean", Json::Num(e.mean_return)),
+                                ("std", Json::Num(e.std_return)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(self.result_path(leg), json.to_string())
+            .with_context(|| format!("writing {}", self.result_path(leg).display()))?;
+        Ok(Some(report))
+    }
+
+    /// Strict: a result.json that lost fields (partial write, hand edit)
+    /// must fail loudly, not report a phantom zero-step leg and mask the
+    /// loss — delete the file to make the campaign re-run the leg.
+    fn load_report(&self, leg: &CampaignLeg) -> Result<LegReport> {
+        let path = self.result_path(leg);
+        let text = std::fs::read_to_string(&path)?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let num = |field: &str| -> Result<f64> {
+            v.get(field)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("{}: missing or non-numeric {field:?}", path.display()))
+        };
+        let digest = v
+            .get("state_digest")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("{}: missing state_digest", path.display()))?;
+        Ok(LegReport {
+            id: leg.id.clone(),
+            game: leg.cfg.game.clone(),
+            steps: num("steps")? as u64,
+            episodes: num("episodes")? as u64,
+            trains: num("trains")? as u64,
+            recent_mean_return: num("recent_mean_return")?,
+            state_digest: u64::from_str_radix(digest, 16)
+                .map_err(|_| anyhow::anyhow!("{}: malformed state_digest {digest:?}", path.display()))?,
+        })
+    }
+
+    /// Execute the campaign (resuming any prior partial execution) and
+    /// return one report per leg, in declaration order.
+    pub fn run(&self, artifact_dir: &Path, mut log: impl FnMut(&str)) -> Result<Vec<LegReport>> {
+        let mut reports: Vec<Option<LegReport>> = self
+            .legs
+            .iter()
+            .map(|leg| {
+                if self.leg_done(leg) {
+                    log(&format!("[{}] {} already complete, skipping", self.name, leg.id));
+                    self.load_report(leg).map(Some)
+                } else {
+                    Ok(None)
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        match self.order {
+            Order::Sequential => {
+                for (leg, slot) in self.legs.iter().zip(reports.iter_mut()) {
+                    if slot.is_some() {
+                        continue;
+                    }
+                    *slot = self.advance_leg(leg, artifact_dir, None, &mut log)?;
+                    debug_assert!(slot.is_some(), "unlimited run must finish the leg");
+                }
+            }
+            Order::RoundRobin => {
+                while reports.iter().any(Option::is_none) {
+                    for (leg, slot) in self.legs.iter().zip(reports.iter_mut()) {
+                        if slot.is_some() {
+                            continue;
+                        }
+                        *slot = self.advance_leg(leg, artifact_dir, Some(self.slice), &mut log)?;
+                    }
+                }
+            }
+        }
+        Ok(reports.into_iter().map(|r| r.unwrap()).collect())
+    }
+}
+
+/// Plain-text summary table for the launcher.
+pub fn summary_table(reports: &[LegReport]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:<10} {:>12} {:>9} {:>9} {:>14}  {}\n",
+        "leg", "game", "steps", "episodes", "trains", "recent return", "state digest"
+    ));
+    for r in reports {
+        out.push_str(&format!(
+            "{:<16} {:<10} {:>12} {:>9} {:>9} {:>14.2}  {:016x}\n",
+            r.id, r.game, r.steps, r.episodes, r.trains, r.recent_mean_return, r.state_digest
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_explicit_legs_in_order() {
+        let doc = TomlDoc::parse(
+            "preset = \"smoke\"\n\
+             [campaign]\nname = \"t\"\nckpt_dir = \"/tmp/c\"\norder = \"round_robin\"\nslice = 64\n\
+             [leg.10_breakout]\ngame = \"breakout\"\nseed = 2\nsteps = 128\n\
+             [leg.05_pong]\ngame = \"pong\"\nseed = 1\nsteps = 64\n",
+        )
+        .unwrap();
+        let c = Campaign::from_toml(&doc).unwrap();
+        assert_eq!(c.order, Order::RoundRobin);
+        assert_eq!(c.slice, 64);
+        let ids: Vec<&str> = c.legs.iter().map(|l| l.id.as_str()).collect();
+        assert_eq!(ids, vec!["05_pong", "10_breakout"], "section-name order");
+        assert_eq!(c.legs[0].cfg.game, "pong");
+        assert_eq!(c.legs[0].cfg.seed, 1);
+        assert_eq!(c.legs[0].cfg.total_steps, 64);
+        assert_eq!(c.legs[1].cfg.game, "breakout");
+        assert_eq!(c.legs[1].cfg.total_steps, 128);
+    }
+
+    #[test]
+    fn games_shorthand_builds_one_leg_per_game() {
+        let doc = TomlDoc::parse(
+            "preset = \"smoke\"\n[campaign]\ngames = \"pong, seeker\"\n",
+        )
+        .unwrap();
+        let c = Campaign::from_toml(&doc).unwrap();
+        assert_eq!(c.legs.len(), 2);
+        assert_eq!(c.legs[0].id, "pong");
+        assert_eq!(c.legs[1].cfg.game, "seeker");
+        assert_eq!(c.order, Order::Sequential);
+    }
+
+    #[test]
+    fn rejects_empty_and_bad_campaigns() {
+        let doc = TomlDoc::parse("preset = \"smoke\"\n[campaign]\nname = \"x\"\n").unwrap();
+        assert!(Campaign::from_toml(&doc).is_err(), "no legs");
+        let doc =
+            TomlDoc::parse("preset = \"smoke\"\n[campaign]\ngames = \"pong\"\norder = \"bogus\"\n")
+                .unwrap();
+        assert!(Campaign::from_toml(&doc).is_err(), "bad order");
+        let doc =
+            TomlDoc::parse("preset = \"smoke\"\n[campaign]\ngames = \"pong\"\nslice = 0\n").unwrap();
+        assert!(Campaign::from_toml(&doc).is_err(), "zero slice");
+    }
+}

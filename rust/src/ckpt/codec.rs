@@ -1,0 +1,301 @@
+//! Binary codec for checkpoint sections.
+//!
+//! Little-endian, length-prefixed, append-only: every stateful layer
+//! serializes its fields in a fixed order through [`ByteWriter`] and reads
+//! them back through [`ByteReader`], which errors (instead of panicking or
+//! silently wrapping) on truncation. Floats are stored as raw IEEE-754 bits
+//! so a save/load round trip is exact to the bit — the foundation of the
+//! bit-exact-resume guarantee (rust/DESIGN.md §10).
+
+use anyhow::{bail, Result};
+
+/// Append-only buffer of little-endian fields.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn with_capacity(n: usize) -> ByteWriter {
+        ByteWriter { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// f32 as raw bits (exact round trip).
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// f64 as raw bits (exact round trip).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Length-prefixed byte slice.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Raw bytes, no length prefix (caller wrote its own framing).
+    pub fn put_raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice (raw bits).
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed bool slice (one byte each).
+    pub fn put_bool_slice(&mut self, v: &[bool]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend(v.iter().map(|&b| b as u8));
+    }
+
+    /// xoshiro256++ state (4 lanes).
+    pub fn put_rng(&mut self, s: [u64; 4]) {
+        for lane in s {
+            self.put_u64(lane);
+        }
+    }
+}
+
+/// Checked reader over a section's bytes. Every accessor errors on
+/// truncation with the byte position, so a cut-off checkpoint file fails
+/// loudly instead of corrupting state.
+pub struct ByteReader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(b: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { b, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    /// Error unless every byte was consumed (catches format drift).
+    pub fn finish(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            bail!(
+                "checkpoint section has {} trailing bytes (read {} of {})",
+                self.b.len() - self.pos,
+                self.pos,
+                self.b.len()
+            );
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // checked_add: a corrupt length prefix near usize::MAX must error
+        // like any other truncation, not wrap the bounds check and panic.
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.b.len()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "checkpoint section truncated: need {n} bytes at offset {}, only {} left",
+                self.pos,
+                self.b.len() - self.pos
+            )
+        })?;
+        let out = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => bail!("checkpoint section corrupt: bool byte {v} at offset {}", self.pos - 1),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("checkpoint value {v} overflows usize"))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length-prefixed byte slice (borrowed).
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.usize()?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<&'a str> {
+        std::str::from_utf8(self.bytes()?)
+            .map_err(|_| anyhow::anyhow!("checkpoint string is not UTF-8"))
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.usize()?;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("f32 slice overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    pub fn bool_vec(&mut self) -> Result<Vec<bool>> {
+        let n = self.usize()?;
+        self.take(n)?.iter().map(|&v| match v {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("checkpoint section corrupt: bool byte {other}"),
+        }).collect()
+    }
+
+    pub fn rng(&mut self) -> Result<[u64; 4]> {
+        Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+}
+
+/// FNV-1a 64-bit checksum — guards every checkpoint section against
+/// silent corruption (not cryptographic; a corrupt-detection hash).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_field_types() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_bool(true);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(-0.0);
+        w.put_f64(f64::from_bits(0x7FF8_0000_0000_1234)); // NaN payload survives
+        w.put_bytes(b"abc");
+        w.put_str("héllo");
+        w.put_f32_slice(&[1.5, -2.25, f32::INFINITY]);
+        w.put_bool_slice(&[true, false, true]);
+        w.put_rng([1, 2, 3, 4]);
+
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), 0x7FF8_0000_0000_1234);
+        assert_eq!(r.bytes().unwrap(), b"abc");
+        assert_eq!(r.str().unwrap(), "héllo");
+        let v = r.f32_vec().unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0], 1.5);
+        assert_eq!(v[2], f32::INFINITY);
+        assert_eq!(r.bool_vec().unwrap(), vec![true, false, true]);
+        assert_eq!(r.rng().unwrap(), [1, 2, 3, 4]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_errors_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.put_u64(42);
+        w.put_f32_slice(&[1.0, 2.0]);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            let ok = r.u64().and_then(|_| r.f32_vec());
+            assert!(ok.is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.put_u32(1);
+        w.put_u32(2);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        r.u32().unwrap();
+        assert!(r.finish().is_err());
+        r.u32().unwrap();
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_ne!(fnv1a(b"\x00"), fnv1a(b"\x00\x00"));
+    }
+}

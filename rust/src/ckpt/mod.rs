@@ -1,0 +1,459 @@
+//! Checkpoint/resume subsystem (rust/DESIGN.md §10).
+//!
+//! A checkpoint is a directory `step_<N>/` containing:
+//!
+//! * `manifest.json` — self-describing JSON (via `util/json.rs`): format
+//!   tag, format version, global step, a free-form `meta` object the
+//!   coordinator fills with its config fingerprint, and the section table
+//!   (name, per-layer version, offset, length, FNV-1a checksum).
+//! * `state.bin` — the concatenated binary sections.
+//!
+//! Every stateful layer implements [`Snapshot`]: it serializes its fields
+//! through the bit-exact [`codec`] and restores them in place. The
+//! coordinator composes the layers into one file at a *quiesce point* — a
+//! window boundary where no transaction is in flight — so killing the
+//! process and resuming lands on the same trajectory to the bit.
+//!
+//! Durability: the directory is assembled under a dot-prefixed temp name
+//! and atomically renamed into place, so a crash mid-write never leaves a
+//! checkpoint that parses. Loading verifies the format version, section
+//! lengths, and checksums before any layer state is touched; a truncated
+//! or mismatched checkpoint fails with a clear error instead of corrupting
+//! the machine.
+
+pub mod codec;
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+pub use codec::{fnv1a, ByteReader, ByteWriter};
+
+/// Container format version. Bump on any layout change; loaders reject
+/// versions they do not understand.
+pub const FORMAT_VERSION: u64 = 1;
+/// Format tag in the manifest (guards against pointing --resume at some
+/// unrelated JSON+binary pair).
+pub const FORMAT_TAG: &str = "tempo-dqn-checkpoint";
+
+const MANIFEST_FILE: &str = "manifest.json";
+const STATE_FILE: &str = "state.bin";
+
+/// One stateful layer's save/restore hooks.
+///
+/// `save` appends the layer's fields to the writer; `load` reads them back
+/// in the same order and applies them in place. Implementations version
+/// their own payload via [`Snapshot::version`] — the container checks it
+/// before calling `load`, so a layer never parses a payload written by a
+/// different layout of itself.
+pub trait Snapshot {
+    /// Stable section name (unique per checkpoint).
+    fn kind(&self) -> &'static str;
+
+    /// Layer payload version (bump when the field layout changes).
+    fn version(&self) -> u32 {
+        1
+    }
+
+    fn save(&self, w: &mut ByteWriter);
+
+    fn load(&mut self, r: &mut ByteReader<'_>) -> Result<()>;
+}
+
+/// Builder for one checkpoint directory.
+pub struct CheckpointWriter {
+    step: u64,
+    meta: Vec<(String, Json)>,
+    names: Vec<String>,
+    sections: BTreeMap<String, (u32, Vec<u8>)>,
+}
+
+impl CheckpointWriter {
+    pub fn new(step: u64) -> CheckpointWriter {
+        CheckpointWriter { step, meta: Vec::new(), names: Vec::new(), sections: BTreeMap::new() }
+    }
+
+    /// Attach a free-form manifest field (config fingerprint, timestamps…).
+    pub fn meta(&mut self, key: &str, value: Json) {
+        self.meta.push((key.to_string(), value));
+    }
+
+    /// Serialize one layer into its own section.
+    pub fn add(&mut self, snap: &dyn Snapshot) -> Result<()> {
+        let mut w = ByteWriter::new();
+        snap.save(&mut w);
+        self.add_raw(snap.kind(), snap.version(), w.into_bytes())
+    }
+
+    /// Add a pre-serialized section.
+    pub fn add_raw(&mut self, name: &str, version: u32, bytes: Vec<u8>) -> Result<()> {
+        if self.sections.contains_key(name) {
+            bail!("duplicate checkpoint section {name:?}");
+        }
+        self.names.push(name.to_string());
+        self.sections.insert(name.to_string(), (version, bytes));
+        Ok(())
+    }
+
+    /// Write the checkpoint as `<dir>/step_<N>` atomically: assemble under
+    /// a temp name, stream the sections to disk (no second in-memory copy
+    /// of the concatenated state — at 1M-frame replay scale that copy
+    /// would double a multi-GB footprint), fsync both files, rename into
+    /// place, and fsync the parent directory so the rename itself is
+    /// durable. Returns the final directory path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        use std::io::Write;
+
+        let final_dir = dir.join(format!("step_{:012}", self.step));
+        let tmp_dir = dir.join(format!(".tmp_step_{:012}", self.step));
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        // A leftover temp dir from a crashed writer is dead weight; replace.
+        if tmp_dir.exists() {
+            std::fs::remove_dir_all(&tmp_dir)?;
+        }
+        std::fs::create_dir(&tmp_dir)?;
+
+        // Stream sections in insertion order, building the table as we go.
+        let state_path = tmp_dir.join(STATE_FILE);
+        let mut state = std::fs::File::create(&state_path)
+            .with_context(|| format!("creating {}", state_path.display()))?;
+        let mut table = Vec::new();
+        let mut offset = 0usize;
+        for name in &self.names {
+            let (version, bytes) = &self.sections[name];
+            table.push(obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("version", Json::Num(*version as f64)),
+                ("offset", Json::Num(offset as f64)),
+                ("len", Json::Num(bytes.len() as f64)),
+                ("fnv1a", Json::Str(format!("{:016x}", fnv1a(bytes)))),
+            ]));
+            state.write_all(bytes)?;
+            offset += bytes.len();
+        }
+        state.sync_all()?;
+        drop(state);
+
+        let manifest = obj(vec![
+            ("format", Json::Str(FORMAT_TAG.to_string())),
+            ("version", Json::Num(FORMAT_VERSION as f64)),
+            ("step", Json::Num(self.step as f64)),
+            ("meta", Json::Obj(self.meta.iter().cloned().collect())),
+            ("sections", Json::Arr(table)),
+        ]);
+        let manifest_path = tmp_dir.join(MANIFEST_FILE);
+        let mut mf = std::fs::File::create(&manifest_path)?;
+        mf.write_all(manifest.to_string().as_bytes())?;
+        mf.sync_all()?;
+        drop(mf);
+
+        // Replace any previous checkpoint at the same step.
+        if final_dir.exists() {
+            std::fs::remove_dir_all(&final_dir)?;
+        }
+        std::fs::rename(&tmp_dir, &final_dir)
+            .with_context(|| format!("publishing checkpoint {}", final_dir.display()))?;
+        // Make the rename durable. Directory fsync is a Unix-ism; where the
+        // platform refuses, the file-level syncs above still hold.
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+        Ok(final_dir)
+    }
+}
+
+/// A validated, loaded checkpoint.
+pub struct CheckpointReader {
+    step: u64,
+    meta: Json,
+    data: Vec<u8>,
+    sections: BTreeMap<String, (u32, Range<usize>)>,
+    path: PathBuf,
+}
+
+impl CheckpointReader {
+    /// Open `<dir>` (a `step_<N>` directory): parse the manifest, check the
+    /// format tag/version, and verify every section's length and checksum
+    /// against `state.bin` before returning.
+    pub fn open(dir: &Path) -> Result<CheckpointReader> {
+        let manifest_path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading checkpoint manifest {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("checkpoint manifest {}: {e}", manifest_path.display()))?;
+
+        let format = manifest.get("format").and_then(Json::as_str).unwrap_or("");
+        if format != FORMAT_TAG {
+            bail!(
+                "{} is not a tempo-dqn checkpoint (format tag {format:?})",
+                dir.display()
+            );
+        }
+        let version = manifest
+            .at(&["version"])?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint manifest: bad version field"))? as u64;
+        if version != FORMAT_VERSION {
+            bail!(
+                "checkpoint {} has format version {version}, this build reads version {FORMAT_VERSION}; \
+                 re-create the checkpoint with a matching build",
+                dir.display()
+            );
+        }
+        let step = manifest
+            .at(&["step"])?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint manifest: bad step field"))? as u64;
+        let meta = manifest.get("meta").cloned().unwrap_or(Json::Obj(BTreeMap::new()));
+
+        let data = std::fs::read(dir.join(STATE_FILE))
+            .with_context(|| format!("reading checkpoint state {}", dir.join(STATE_FILE).display()))?;
+
+        let mut sections = BTreeMap::new();
+        for entry in manifest.at(&["sections"])?.as_arr().unwrap_or(&[]) {
+            let name = entry
+                .at(&["name"])?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint manifest: section without name"))?
+                .to_string();
+            let ver = entry.at(&["version"])?.as_usize().unwrap_or(0) as u32;
+            let off = entry.at(&["offset"])?.as_usize().unwrap_or(usize::MAX);
+            let len = entry.at(&["len"])?.as_usize().unwrap_or(usize::MAX);
+            let end = off.checked_add(len).filter(|&e| e <= data.len()).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint {}: section {name:?} [{off}..+{len}] exceeds state.bin ({} bytes) — truncated file?",
+                    dir.display(),
+                    data.len()
+                )
+            })?;
+            let want = entry.at(&["fnv1a"])?.as_str().unwrap_or("").to_string();
+            let got = format!("{:016x}", fnv1a(&data[off..end]));
+            if want != got {
+                bail!(
+                    "checkpoint {}: section {name:?} checksum mismatch (manifest {want}, data {got}) — corrupt file",
+                    dir.display()
+                );
+            }
+            sections.insert(name, (ver, off..end));
+        }
+        Ok(CheckpointReader { step, meta, data, sections, path: dir.to_path_buf() })
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn meta(&self) -> &Json {
+        &self.meta
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn has_section(&self, name: &str) -> bool {
+        self.sections.contains_key(name)
+    }
+
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+
+    /// Open a raw section for manual decoding (composite sections the
+    /// coordinator writes with `add_raw`). The caller drives the reader and
+    /// should call [`ByteReader::finish`] when done.
+    pub fn read_section(&self, name: &str, expect_version: u32) -> Result<ByteReader<'_>> {
+        let (ver, range) = self
+            .sections
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint {} has no section {name:?}", self.path.display()))?;
+        if *ver != expect_version {
+            bail!("checkpoint section {name:?} has version {ver}, this build reads version {expect_version}");
+        }
+        Ok(ByteReader::new(&self.data[range.clone()]))
+    }
+
+    /// Restore one layer from its section. Errors if the section is
+    /// missing, its per-layer version differs, or any byte is left over.
+    pub fn restore(&self, snap: &mut dyn Snapshot) -> Result<()> {
+        let name = snap.kind();
+        let (ver, range) = self
+            .sections
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint {} has no section {name:?}", self.path.display()))?;
+        if *ver != snap.version() {
+            bail!(
+                "checkpoint section {name:?} has version {ver}, this build reads version {}",
+                snap.version()
+            );
+        }
+        let mut r = ByteReader::new(&self.data[range.clone()]);
+        snap.load(&mut r).with_context(|| format!("restoring checkpoint section {name:?}"))?;
+        r.finish().with_context(|| format!("restoring checkpoint section {name:?}"))
+    }
+}
+
+/// Find the newest `step_<N>` checkpoint under `dir` (None when the
+/// directory is absent or holds no complete checkpoint).
+pub fn latest_checkpoint(dir: &Path) -> Result<Option<PathBuf>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(None),
+    };
+    let mut best: Option<(u64, PathBuf)> = None;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(step) = name.to_str().and_then(|n| n.strip_prefix("step_")) else {
+            continue;
+        };
+        let Ok(step) = step.parse::<u64>() else { continue };
+        // Only complete checkpoints count (the temp dir never matches the
+        // prefix, but a manually truncated dir might).
+        if !entry.path().join(MANIFEST_FILE).exists() {
+            continue;
+        }
+        if best.as_ref().map(|(s, _)| step > *s).unwrap_or(true) {
+            best = Some((step, entry.path()));
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Toy {
+        a: u64,
+        v: Vec<f32>,
+    }
+
+    impl Snapshot for Toy {
+        fn kind(&self) -> &'static str {
+            "toy"
+        }
+        fn save(&self, w: &mut ByteWriter) {
+            w.put_u64(self.a);
+            w.put_f32_slice(&self.v);
+        }
+        fn load(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+            self.a = r.u64()?;
+            self.v = r.f32_vec()?;
+            Ok(())
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tempo-ckpt-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let dir = tmpdir("roundtrip");
+        let toy = Toy { a: 99, v: vec![1.25, -3.5] };
+        let mut w = CheckpointWriter::new(4096);
+        w.meta("game", Json::Str("pong".into()));
+        w.add(&toy).unwrap();
+        let path = w.write(&dir).unwrap();
+        assert!(path.ends_with("step_000000004096"));
+
+        let r = CheckpointReader::open(&path).unwrap();
+        assert_eq!(r.step(), 4096);
+        assert_eq!(r.meta().get("game").unwrap().as_str(), Some("pong"));
+        let mut back = Toy { a: 0, v: vec![] };
+        r.restore(&mut back).unwrap();
+        assert_eq!(back.a, 99);
+        assert_eq!(back.v, vec![1.25, -3.5]);
+
+        assert_eq!(latest_checkpoint(&dir).unwrap(), Some(path));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_picks_highest_step() {
+        let dir = tmpdir("latest");
+        for step in [5u64, 100, 20] {
+            let mut w = CheckpointWriter::new(step);
+            w.add(&Toy { a: step, v: vec![] }).unwrap();
+            w.write(&dir).unwrap();
+        }
+        let latest = latest_checkpoint(&dir).unwrap().unwrap();
+        assert!(latest.ends_with("step_000000000100"));
+        assert_eq!(latest_checkpoint(Path::new("/no/such/dir")).unwrap(), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_checkpoints_fail_clearly() {
+        let dir = tmpdir("corrupt");
+        let mut w = CheckpointWriter::new(1);
+        w.add(&Toy { a: 7, v: vec![2.0; 8] }).unwrap();
+        let path = w.write(&dir).unwrap();
+
+        // Flip one byte of state.bin -> checksum mismatch.
+        let state = path.join("state.bin");
+        let mut bytes = std::fs::read(&state).unwrap();
+        bytes[3] ^= 0xFF;
+        std::fs::write(&state, &bytes).unwrap();
+        let err = CheckpointReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // Truncate state.bin -> out-of-range section.
+        std::fs::write(&state, &bytes[..4]).unwrap();
+        let err = CheckpointReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_and_format_mismatch_fail_clearly() {
+        let dir = tmpdir("version");
+        let mut w = CheckpointWriter::new(2);
+        w.add(&Toy { a: 1, v: vec![] }).unwrap();
+        let path = w.write(&dir).unwrap();
+
+        let manifest = path.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest).unwrap();
+        // Container version bump (keys are sorted, so the top-level version
+        // is the one that follows "step").
+        std::fs::write(&manifest, text.replace("\"step\":2,\"version\":1", "\"step\":2,\"version\":999"))
+            .unwrap();
+        let err = CheckpointReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("format version 999"), "{err}");
+
+        // Foreign format tag.
+        std::fs::write(&manifest, text.replace(FORMAT_TAG, "something-else")).unwrap();
+        let err = CheckpointReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("not a tempo-dqn checkpoint"), "{err}");
+
+        // Per-section version mismatch (the version that follows "offset").
+        std::fs::write(&manifest, text.replace("\"offset\":0,\"version\":1", "\"offset\":0,\"version\":9"))
+            .unwrap();
+        let r = CheckpointReader::open(&path).unwrap();
+        let err = r.restore(&mut Toy { a: 0, v: vec![] }).unwrap_err().to_string();
+        assert!(err.contains("version 9"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_section_and_duplicates_rejected() {
+        let dir = tmpdir("missing");
+        let mut w = CheckpointWriter::new(3);
+        w.add_raw("other", 1, vec![1, 2, 3]).unwrap();
+        assert!(w.add_raw("other", 1, vec![]).is_err(), "duplicate section");
+        let path = w.write(&dir).unwrap();
+        let r = CheckpointReader::open(&path).unwrap();
+        let err = r.restore(&mut Toy { a: 0, v: vec![] }).unwrap_err().to_string();
+        assert!(err.contains("no section \"toy\""), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -130,6 +130,17 @@ pub struct ExperimentConfig {
     pub eval_period: u64,
     pub eval_episodes: usize,
     pub eval_eps: f64,
+    /// Root seed of every evaluator (training-time evals, anchors, suite
+    /// scoring). Separate from `seed` so resumed runs and campaigns control
+    /// evaluation randomness independently of the training trajectory.
+    pub eval_seed: u64,
+
+    // Checkpointing (rust/DESIGN.md §10)
+    /// Checkpoint directory; None disables checkpointing.
+    pub ckpt_dir: Option<String>,
+    /// Steps between checkpoints (quantized up to the mode's next quiesce
+    /// point — a C-aligned window boundary in concurrent modes).
+    pub ckpt_period: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -157,6 +168,9 @@ impl Default for ExperimentConfig {
             eval_period: 250_000,
             eval_episodes: 30,
             eval_eps: 0.05,
+            eval_seed: 7,
+            ckpt_dir: None,
+            ckpt_period: 250_000,
         }
     }
 }
@@ -218,6 +232,11 @@ impl ExperimentConfig {
         c.eval_period = doc.usize_or("eval.period", c.eval_period as usize)? as u64;
         c.eval_episodes = doc.usize_or("eval.episodes", c.eval_episodes)?;
         c.eval_eps = doc.f64_or("eval.eps", c.eval_eps)?;
+        c.eval_seed = doc.usize_or("eval.seed", c.eval_seed as usize)? as u64;
+        if let Some(crate::config::toml::TomlValue::Str(dir)) = doc.get("ckpt.dir") {
+            c.ckpt_dir = Some(dir.clone());
+        }
+        c.ckpt_period = doc.usize_or("ckpt.period", c.ckpt_period as usize)? as u64;
         c.validate()?;
         Ok(c)
     }
@@ -248,6 +267,11 @@ impl ExperimentConfig {
         self.prepopulate = args.usize_or("prepopulate", self.prepopulate)?;
         self.lr = args.f64_or("lr", self.lr)?;
         self.eval_period = args.u64_or("eval-period", self.eval_period)?;
+        self.eval_seed = args.u64_or("eval-seed", self.eval_seed)?;
+        if let Some(dir) = args.str_opt("ckpt-dir") {
+            self.ckpt_dir = Some(dir.to_string());
+        }
+        self.ckpt_period = args.u64_or("ckpt-period", self.ckpt_period)?;
         self.validate()
     }
 
@@ -300,6 +324,12 @@ impl ExperimentConfig {
         }
         if self.minibatch == 0 {
             bail!("minibatch must be >= 1");
+        }
+        if self.ckpt_dir.is_some() && self.ckpt_period == 0 {
+            bail!("ckpt_period must be >= 1 step when checkpointing is enabled");
+        }
+        if self.eval_period == 0 {
+            bail!("eval_period must be >= 1 step (use a period >= total_steps to disable evals)");
         }
         Ok(())
     }
@@ -418,6 +448,37 @@ mod tests {
         c.apply_args(&args).unwrap();
         assert_eq!(c.learner_threads, 2);
         assert_eq!(c.prefetch_batches, 0);
+    }
+
+    #[test]
+    fn eval_seed_and_ckpt_knobs_plumb_through() {
+        let c = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(c.eval_seed, 7, "historical evaluator seed is the default");
+        assert_eq!(c.ckpt_dir, None, "checkpointing is opt-in");
+        assert_eq!(c.ckpt_period, 250_000);
+
+        let doc = TomlDoc::parse(
+            "preset = \"smoke\"\n[eval]\nseed = 123\n[ckpt]\ndir = \"ckpts\"\nperiod = 5_000\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.eval_seed, 123);
+        assert_eq!(c.ckpt_dir.as_deref(), Some("ckpts"));
+        assert_eq!(c.ckpt_period, 5_000);
+
+        let args = Args::parse(
+            ["--eval-seed", "9", "--ckpt-dir", "/tmp/x", "--ckpt-period", "100"].map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.eval_seed, 9);
+        assert_eq!(c.ckpt_dir.as_deref(), Some("/tmp/x"));
+        assert_eq!(c.ckpt_period, 100);
+
+        c.ckpt_period = 0;
+        assert!(c.validate().is_err(), "period 0 with a ckpt dir must be rejected");
+        c.ckpt_dir = None;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -20,78 +20,112 @@
 //! window completes all its steps before parking, and the window barrier
 //! waits for that block-rounded coverage before flushing staging — so the
 //! flush never races a sampler that is mid-block across the boundary.
+//!
+//! **Segments & quiesce points** (rust/DESIGN.md §10): one invocation runs
+//! from the machine's current step to `seg.until` and exits with every
+//! layer quiesced. In concurrent mode a sampler that claims a ticket at or
+//! past the bound *parks at the window gate instead of stopping the run*,
+//! so the main thread always waits out the trainer's full final-window
+//! quota before the last flush — the final `trains_done` is deterministic,
+//! which both the bit-exact-resume guarantee and the uninterrupted-vs-
+//! resumed comparison depend on. Sampler contexts live outside the driver
+//! (`ctxs`) and the trainer's draw-stream position is written back to
+//! `seg.draw_rng`, so the next segment (same process or a `--resume` of a
+//! checkpoint) continues the exact trajectory. Evaluation fires only at
+//! window barriers in concurrent mode, where the trainer is provably idle
+//! and theta is frozen.
 
 use std::sync::atomic::Ordering;
 
 use anyhow::{anyhow, Result};
 
 use crate::metrics::Phase;
-use crate::replay::{BatchSource, StagingSet, TrainerSource};
+use crate::replay::{BatchSource, IndexSampler, StagingSet, TrainerSource};
 use crate::runtime::{Policy, TrainBatch};
 
-use super::shared::{SamplerCtx, Shared, TrainInterlock, WindowCtrl, WindowGate};
+use super::shared::{SamplerCtx, SegmentState, Shared, TrainInterlock, WindowCtrl, WindowGate};
 
-/// Run the async driver. `concurrent` selects the variant.
-/// `on_progress` is invoked from the main thread with the completed-step
-/// count (eval hooks / logging).
+/// Run one async segment. `concurrent` selects the variant. `on_progress`
+/// is invoked from the main thread with the completed-step count — at
+/// window barriers only in concurrent mode (quiesced trainer), on a
+/// monitoring poll in standard mode.
 pub fn run_async(
     shared: &Shared<'_>,
     concurrent: bool,
+    ctxs: &mut [SamplerCtx],
+    seg: &mut SegmentState,
     mut on_progress: impl FnMut(u64) + Send,
 ) -> Result<()> {
     let w = shared.cfg.threads;
     let b = shared.cfg.envs_per_thread;
     let bs = b as u64;
     let total = shared.cfg.total_steps;
+    let until = seg.until.min(total);
     let c = shared.cfg.target_update_period;
     let bpw = shared.cfg.batches_per_window();
+    debug_assert_eq!(ctxs.len(), w, "one persistent SamplerCtx per thread");
 
     let interlock = TrainInterlock::new();
-    let gate = WindowGate::new(if concurrent { c.min(total) } else { u64::MAX });
+    let first_window_end = ((seg.windows_flushed + 1) * c).min(until);
+    let gate = WindowGate::new(if concurrent { first_window_end } else { u64::MAX });
     let staging = StagingSet::new(w * b);
     let winctrl = WindowCtrl::new();
 
     // Batch source for the training path: prefetch pipeline for the
     // windowed trainer (concurrent mode) when enabled, inline sampling
-    // otherwise (TrainerSource owns the eligibility rule).
-    let source = TrainerSource::new(
+    // otherwise (TrainerSource owns the eligibility rule). The draw stream
+    // resumes at the segment's saved position.
+    let source = TrainerSource::with_sampler(
         shared.replay,
-        shared.cfg.seed,
+        IndexSampler::from_rng_state(seg.draw_rng),
         shared.cfg.minibatch,
         shared.cfg.prefetch_batches,
         concurrent,
     );
 
-    std::thread::scope(|scope| -> Result<()> {
+    let result = std::thread::scope(|scope| -> Result<()> {
         // ---- prefetch worker (concurrent + prefetch only) ---------------
         if let Some(pipeline) = source.pipeline() {
             let shared = &shared;
             scope.spawn(move || pipeline.worker_loop(&|| shared.should_stop()));
         }
         // ---- sampler threads --------------------------------------------
-        for slot in 0..w {
+        for ctx in ctxs.iter_mut() {
             let shared = &shared;
             let gate = &gate;
             let interlock = &interlock;
             let staging = &staging;
             let source: &dyn BatchSource = &source;
             scope.spawn(move || {
-                let mut ctx = match SamplerCtx::new(shared.cfg, slot) {
-                    Ok(c) => c,
-                    Err(e) => return shared.fail(format!("sampler {slot}: {e}")),
-                };
+                let slot = ctx.slot;
                 let mut train_batch = TrainBatch::default();
                 loop {
                     if shared.should_stop() {
                         break;
                     }
                     let t = shared.claimed.fetch_add(bs, Ordering::SeqCst);
-                    if t >= total {
-                        shared.stop.store(true, Ordering::SeqCst);
+                    if t >= until {
+                        if concurrent {
+                            // Park instead of stopping the run: the main
+                            // thread must still wait out the trainer's full
+                            // final-window quota (deterministic quiesce).
+                            // The segment-ending flush sets `stop` and opens
+                            // the gate; the forfeited ticket is re-claimed
+                            // by the next segment.
+                            gate.wait_for_step(shared, t);
+                        } else {
+                            shared.stop.store(true, Ordering::SeqCst);
+                        }
                         break;
                     }
-                    // Clamp the final block to the step budget so completed
-                    // lands on exactly `total`, as the B=1 machine did.
+                    // Clamp only at the TRUE end of the run, never at a
+                    // mid-run segment bound: the uninterrupted run executes
+                    // every claimed block whole (windows are block-rounded),
+                    // so truncating at `until` would step a strict prefix of
+                    // the block's streams and break bit-exact resume when
+                    // C is not a multiple of B. Blocks whose base is past
+                    // `until` parked above; blocks that straddle it run to
+                    // completion exactly as the uninterrupted machine does.
                     let width = bs.min(total - t) as usize;
                     if concurrent {
                         gate.wait_for_step(shared, t);
@@ -138,9 +172,11 @@ pub fn run_async(
 
         // ---- main thread: window orchestration (Algorithm 1's role) -----
         if concurrent {
-            let mut window_end = c.min(total);
-            // Dispatch the first training window immediately (it trains on
-            // the prepopulated replay while samplers collect window 0).
+            let mut window_end = first_window_end;
+            // Dispatch the first training window of this segment immediately
+            // (a fresh run trains on the prepopulated replay while samplers
+            // collect window 0; a resumed run re-creates exactly the
+            // dispatch the uninterrupted run issued after its last flush).
             // The grant rides with every dispatch so the prefetch worker
             // may assemble exactly this window's batches and no more.
             winctrl.dispatch();
@@ -149,32 +185,32 @@ pub fn run_async(
                 // A window boundary that falls inside a B-step block is only
                 // safe to flush once that whole block has executed (its tail
                 // steps stage into THIS window); wait for coverage of the
-                // block-rounded window, clamped to the step budget.
+                // block-rounded window, clamped to the TRUE step budget (not
+                // the segment bound — see the width clamp above).
                 let window_target = (window_end.div_ceil(bs) * bs).min(total);
                 // Wait for samplers to finish the window AND the trainer to
-                // finish its batches.
+                // finish its batches. The trainer never sees `stop` early,
+                // so it always completes its dispatched quota — the final
+                // window included (deterministic quiesce state).
                 loop {
                     if shared.aborted() {
                         return Err(anyhow!("worker failed"));
                     }
-                    let samplers_done =
-                        shared.completed.load(Ordering::SeqCst) >= window_target;
-                    if samplers_done && winctrl.caught_up() {
+                    if shared.completed.load(Ordering::SeqCst) >= window_target
+                        && winctrl.caught_up()
+                    {
                         break;
                     }
-                    // Normal termination: a sampler claimed the final block
-                    // and set `stop`; the trainer exits without finishing
-                    // its (forfeited) final-window quota.
-                    if samplers_done && shared.should_stop() {
-                        break;
-                    }
-                    on_progress(shared.completed.load(Ordering::SeqCst));
                     std::thread::sleep(std::time::Duration::from_micros(200));
                 }
                 // Synchronization point: flush staging, update target net.
                 shared.sync_point(&staging);
+                seg.windows_flushed += 1;
+                // Quiesce point: trainer idle, theta frozen, staging empty —
+                // the only place evaluation (and checkpointing, one level
+                // up) may observe the machine.
                 on_progress(shared.completed.load(Ordering::SeqCst));
-                if window_end >= total {
+                if window_end >= until {
                     shared.stop.store(true, Ordering::SeqCst);
                     gate.advance(u64::MAX); // release parked samplers to exit
                     winctrl.notify_all();
@@ -183,7 +219,7 @@ pub fn run_async(
                 // Open the next window and dispatch its training batches
                 // (grant AFTER the sync_point flush above: prefetched draws
                 // must only ever see post-flush replay contents).
-                window_end = (window_end + c).min(total);
+                window_end = (window_end + c).min(until);
                 winctrl.dispatch();
                 source.grant(bpw);
                 gate.advance(window_end);
@@ -196,7 +232,7 @@ pub fn run_async(
                 }
                 let done = shared.completed.load(Ordering::SeqCst);
                 on_progress(done);
-                if done >= total {
+                if done >= until {
                     shared.stop.store(true, Ordering::SeqCst);
                     break;
                 }
@@ -204,7 +240,11 @@ pub fn run_async(
             }
         }
         Ok(())
-    })?;
+    });
+    // Write the draw stream back for the next segment / checkpoint (safe:
+    // all threads joined, the source is quiesced).
+    seg.draw_rng = source.sampler_state();
+    result?;
 
     if let Some(err) = shared.error.lock().unwrap().take() {
         return Err(anyhow!(err));

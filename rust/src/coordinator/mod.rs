@@ -10,26 +10,41 @@
 //! | concurrent    | on  (§3)            | off                    |
 //! | synchronized  | off                 | on  (§4)               |
 //! | both          | on                  | on  (Algorithm 1)      |
+//!
+//! Training runs as a sequence of **segments**: each driver invocation
+//! carries the machine from its current step to a quiesce bound and tears
+//! its threads down with every stateful layer quiesced (trainer quota
+//! consumed, staging flushed, no transaction in flight). Between segments
+//! the coordinator may atomically write a checkpoint (`--ckpt-dir` /
+//! `--ckpt-period`) and `resume_from` reconstructs the exact machine from
+//! one — kill the process at hour 8 of a 9-hour run and the resumed
+//! trajectory is bit-identical to the uninterrupted one
+//! (rust/DESIGN.md §10, pinned by tests/checkpoint_resume.rs).
 
 pub mod async_exec;
 pub mod shared;
 pub mod sync_exec;
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::agent::EpsGreedy;
+use crate::ckpt::{
+    latest_checkpoint, ByteWriter, CheckpointReader, CheckpointWriter, Snapshot,
+};
 use crate::config::{ExecMode, ExperimentConfig};
 use crate::env::{make_env, NET_FRAME};
 use crate::eval::{EvalPoint, Evaluator};
 use crate::metrics::{GanttTrace, PhaseTimers};
-use crate::replay::ReplayMemory;
-use crate::runtime::{BusSnapshot, Device, Manifest, QNet};
+use crate::replay::{IndexSampler, ReplayMemory};
+use crate::runtime::{BusSnapshot, Device, Manifest, QNet, QNetSnapshot};
+use crate::util::json::{obj, Json};
 
-pub use shared::{SamplerCtx, Shared, TrainInterlock, WindowCtrl, WindowGate};
+pub use shared::{ResumePoint, SamplerCtx, SegmentState, Shared, TrainInterlock, WindowCtrl, WindowGate};
 
 /// Result of one training run.
 #[derive(Debug, Default)]
@@ -50,13 +65,90 @@ pub struct TrainResult {
 }
 
 impl TrainResult {
-    /// Mean raw return over the last `n` episodes.
+    /// Mean raw return over the last `n` episodes. `n = 0` and an empty
+    /// history yield 0.0; `n` larger than the history averages everything.
     pub fn recent_mean_return(&self, n: usize) -> f64 {
-        let tail: Vec<f64> = self.returns.iter().rev().take(n).map(|(_, r)| *r).collect();
-        if tail.is_empty() {
+        let take = n.min(self.returns.len());
+        if take == 0 {
             return 0.0;
         }
-        tail.iter().sum::<f64>() / tail.len() as f64
+        let tail = &self.returns[self.returns.len() - take..];
+        tail.iter().map(|(_, r)| *r).sum::<f64>() / take as f64
+    }
+}
+
+/// The live training machine: every piece of state that survives across
+/// segments (and, through a checkpoint, across processes).
+struct Machine {
+    replay: RwLock<ReplayMemory>,
+    /// One persistent sampler context per thread (env streams + policy
+    /// RNGs); drivers borrow them for the duration of a segment.
+    ctxs: Vec<SamplerCtx>,
+    windows_flushed: u64,
+    draw_rng: [u64; 4],
+    completed: u64,
+    trains_done: u64,
+    episodes: u64,
+    losses: Vec<(u64, f32)>,
+    returns: Vec<(u64, f64)>,
+    evals: Vec<EvalPoint>,
+    next_eval: u64,
+    evaluator: Option<Evaluator>,
+}
+
+impl Machine {
+    /// The "progress" checkpoint section, written and read by exactly this
+    /// pair so the field lists cannot drift apart (`ByteReader::finish`
+    /// catches any residual mismatch at load time).
+    fn save_progress(&self, w: &mut ByteWriter) {
+        w.put_u64(self.completed);
+        w.put_u64(self.trains_done);
+        w.put_u64(self.episodes);
+        w.put_u64(self.windows_flushed);
+        w.put_rng(self.draw_rng);
+        w.put_u64(self.next_eval);
+        w.put_usize(self.losses.len());
+        for &(s, l) in &self.losses {
+            w.put_u64(s);
+            w.put_f32(l);
+        }
+        w.put_usize(self.returns.len());
+        for &(s, r) in &self.returns {
+            w.put_u64(s);
+            w.put_f64(r);
+        }
+        w.put_usize(self.evals.len());
+        for ev in &self.evals {
+            w.put_u64(ev.step);
+            w.put_f64(ev.mean_return);
+            w.put_f64(ev.std_return);
+            w.put_usize(ev.episodes);
+        }
+    }
+
+    fn load_progress(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> Result<()> {
+        self.completed = r.u64()?;
+        self.trains_done = r.u64()?;
+        self.episodes = r.u64()?;
+        self.windows_flushed = r.u64()?;
+        self.draw_rng = r.rng()?;
+        self.next_eval = r.u64()?;
+        let n = r.usize()?;
+        self.losses = (0..n).map(|_| Ok((r.u64()?, r.f32()?))).collect::<Result<_>>()?;
+        let n = r.usize()?;
+        self.returns = (0..n).map(|_| Ok((r.u64()?, r.f64()?))).collect::<Result<_>>()?;
+        let n = r.usize()?;
+        self.evals = (0..n)
+            .map(|_| {
+                Ok(EvalPoint {
+                    step: r.u64()?,
+                    mean_return: r.f64()?,
+                    std_return: r.f64()?,
+                    episodes: r.usize()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(())
     }
 }
 
@@ -68,6 +160,9 @@ pub struct Coordinator {
     timers: Arc<PhaseTimers>,
     gantt: Option<Arc<GanttTrace>>,
     run_eval: bool,
+    machine: Option<Machine>,
+    ckpt_dir: Option<PathBuf>,
+    ckpt_period: u64,
 }
 
 impl Coordinator {
@@ -116,6 +211,8 @@ impl Coordinator {
                 cfg.mode.name(), cfg.threads, cfg.envs_per_thread
             )
         })?;
+        let ckpt_dir = cfg.ckpt_dir.clone().map(PathBuf::from);
+        let ckpt_period = cfg.ckpt_period;
         Ok(Coordinator {
             cfg,
             qnet,
@@ -123,6 +220,9 @@ impl Coordinator {
             timers: Arc::new(PhaseTimers::new()),
             gantt: None,
             run_eval: true,
+            machine: None,
+            ckpt_dir,
+            ckpt_period,
         })
     }
 
@@ -133,6 +233,15 @@ impl Coordinator {
 
     pub fn without_eval(mut self) -> Self {
         self.run_eval = false;
+        self
+    }
+
+    /// Enable (or re-target) periodic checkpointing: one checkpoint every
+    /// `period` steps (quantized up to the mode's next quiesce point) plus
+    /// one at the end of every `run_for` call.
+    pub fn with_checkpointing(mut self, dir: impl Into<PathBuf>, period: u64) -> Self {
+        self.ckpt_dir = Some(dir.into());
+        self.ckpt_period = period.max(1);
         self
     }
 
@@ -150,6 +259,11 @@ impl Coordinator {
 
     pub fn config(&self) -> &ExperimentConfig {
         &self.cfg
+    }
+
+    /// Steps completed so far (0 before the first run / resume).
+    pub fn completed_steps(&self) -> u64 {
+        self.machine.as_ref().map(|m| m.completed).unwrap_or(0)
     }
 
     /// Prepopulate the replay memory with `cfg.prepopulate` random-policy
@@ -182,9 +296,10 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Run the experiment to completion and return the collected stats.
-    pub fn run(&mut self) -> Result<TrainResult> {
-        let cfg = self.cfg.clone();
+    /// Build a fresh machine (optionally skipping prepopulation when the
+    /// replay contents are about to be overwritten by a checkpoint).
+    fn build_machine(&self, prepopulate: bool) -> Result<Machine> {
+        let cfg = &self.cfg;
         let replay = RwLock::new(ReplayMemory::new(
             cfg.replay_capacity,
             cfg.streams(),
@@ -192,66 +307,429 @@ impl Coordinator {
             crate::env::STACK,
             cfg.seed,
         )?);
-        self.prepopulate(&replay)?;
-
-        let mut evaluator = if self.run_eval && cfg.eval_period < cfg.total_steps {
-            Some(Evaluator::new(&cfg.game, cfg.seed, cfg.eval_episodes, cfg.eval_eps)?)
+        if prepopulate {
+            self.prepopulate(&replay)?;
+        }
+        let ctxs = (0..cfg.threads)
+            .map(|slot| SamplerCtx::new(cfg, slot))
+            .collect::<Result<Vec<_>>>()?;
+        let evaluator = if self.run_eval && cfg.eval_period < cfg.total_steps {
+            Some(Evaluator::new(&cfg.game, cfg.eval_seed, cfg.eval_episodes, cfg.eval_eps)?)
         } else {
             None
         };
-        let mut evals: Vec<EvalPoint> = Vec::new();
-        let mut next_eval = cfg.eval_period;
+        Ok(Machine {
+            replay,
+            ctxs,
+            windows_flushed: 0,
+            draw_rng: IndexSampler::new(cfg.seed).rng_state(),
+            completed: 0,
+            trains_done: 0,
+            episodes: 0,
+            losses: Vec::new(),
+            returns: Vec::new(),
+            evals: Vec::new(),
+            next_eval: cfg.eval_period,
+            evaluator,
+        })
+    }
 
+    /// Smallest valid quiesce bound >= `step` for the configured mode:
+    /// window-aligned (multiple of C) when Concurrent Training is on,
+    /// B-block-aligned for the async standard driver; the synchronized
+    /// drivers quantize to whole W×B rounds on their own.
+    fn quantize_bound(&self, step: u64) -> u64 {
+        let cfg = &self.cfg;
+        let total = cfg.total_steps;
+        if step >= total {
+            return total;
+        }
+        let step = step.max(1);
+        let q = if cfg.mode.concurrent_training() {
+            step.div_ceil(cfg.target_update_period) * cfg.target_update_period
+        } else if cfg.mode.synchronized_execution() {
+            step
+        } else {
+            let b = cfg.envs_per_thread as u64;
+            step.div_ceil(b) * b
+        };
+        q.min(total)
+    }
+
+    /// Run the experiment to completion and return the collected stats.
+    pub fn run(&mut self) -> Result<TrainResult> {
+        self.run_for(None)
+    }
+
+    /// Run at most `limit` further steps (quantized up to the mode's next
+    /// quiesce point), or to `total_steps` when `None`. The machine
+    /// persists across calls, so a campaign can interleave legs; with
+    /// checkpointing enabled every segment boundary (period targets and
+    /// the final bound) writes a checkpoint.
+    pub fn run_for(&mut self, limit: Option<u64>) -> Result<TrainResult> {
+        if self.machine.is_none() {
+            self.machine = Some(self.build_machine(true)?);
+        }
+        if self.ckpt_dir.is_some() {
+            self.validate_ckpt_config()?;
+        }
         self.device.stats.reset();
         self.timers.reset();
-        let shared = Shared::new(
-            &cfg,
-            &self.qnet,
-            &replay,
-            &self.timers,
-            self.gantt.as_deref(),
-        );
+        let start_step = self.machine.as_ref().unwrap().completed;
+        let total = self.cfg.total_steps;
+        let end = match limit {
+            None => total,
+            Some(n) => self.quantize_bound(start_step.saturating_add(n)),
+        };
 
-        let qnet = &self.qnet;
         let t0 = Instant::now();
-        {
-            let on_progress = |completed: u64| {
-                if let Some(ev) = evaluator.as_mut() {
-                    if completed >= next_eval {
-                        if let Ok(point) = ev.run(qnet, completed) {
-                            evals.push(point);
-                        }
-                        next_eval += cfg.eval_period;
-                    }
-                }
-            };
-            match cfg.mode {
-                ExecMode::Standard => async_exec::run_async(&shared, false, on_progress)?,
-                ExecMode::Concurrent => async_exec::run_async(&shared, true, on_progress)?,
-                ExecMode::Synchronized => sync_exec::run_sync(&shared, false, on_progress)?,
-                ExecMode::Both => sync_exec::run_sync(&shared, true, on_progress)?,
+        while self.machine.as_ref().unwrap().completed < end {
+            let completed = self.machine.as_ref().unwrap().completed;
+            let mut until = end;
+            if self.ckpt_dir.is_some() {
+                until = until.min(self.quantize_bound(completed.saturating_add(self.ckpt_period)));
+            }
+            self.run_segment(until)?;
+            if self.ckpt_dir.is_some() {
+                self.save_checkpoint()?;
             }
         }
         let wall_s = t0.elapsed().as_secs_f64();
 
-        let steps = shared.completed.load(Ordering::SeqCst);
-        let mut losses = std::mem::take(&mut *shared.losses.lock().unwrap());
+        let m = self.machine.as_ref().unwrap();
+        let mut losses = m.losses.clone();
         losses.sort_unstable_by_key(|(s, _)| *s);
-        let mut returns = std::mem::take(&mut *shared.returns.lock().unwrap());
+        let mut returns = m.returns.clone();
         returns.sort_unstable_by_key(|(s, _)| *s);
-
         Ok(TrainResult {
-            steps,
-            episodes: shared.episodes.load(Ordering::SeqCst),
-            trains: shared.trains_done.load(Ordering::SeqCst),
+            steps: m.completed,
+            episodes: m.episodes,
+            trains: m.trains_done,
             target_syncs: self.qnet.target_syncs.load(Ordering::SeqCst),
             wall_s,
-            steps_per_sec: steps as f64 / wall_s.max(1e-9),
+            steps_per_sec: (m.completed - start_step) as f64 / wall_s.max(1e-9),
             losses,
             returns,
-            evals,
+            evals: m.evals.clone(),
             bus: self.device.stats.snapshot(),
             timers_report: self.timers.report(),
         })
+    }
+
+    /// One driver invocation from the machine's current step to `until`.
+    fn run_segment(&mut self, until: u64) -> Result<()> {
+        let cfg = self.cfg.clone();
+        let qnet = self.qnet.clone();
+        let timers = self.timers.clone();
+        let gantt = self.gantt.clone();
+        let m = self.machine.as_mut().unwrap();
+        let at = ResumePoint {
+            completed: m.completed,
+            trains_done: m.trains_done,
+            episodes: m.episodes,
+        };
+        let mut seg = SegmentState {
+            until,
+            windows_flushed: m.windows_flushed,
+            draw_rng: m.draw_rng,
+        };
+        let Machine { replay, ctxs, evaluator, evals, next_eval, .. } = m;
+        let shared = Shared::resumed(&cfg, &qnet, replay, &timers, gantt.as_deref(), at);
+        {
+            let eval_period = cfg.eval_period;
+            let qnet = &qnet;
+            let on_progress = |completed: u64| {
+                if let Some(ev) = evaluator.as_mut() {
+                    // Catch up on every period the segment crossed; in
+                    // windowed modes this only runs at quiesce points, so
+                    // theta is frozen and the recorded step deterministic.
+                    while completed >= *next_eval {
+                        if let Ok(point) = ev.run(qnet, completed) {
+                            evals.push(point);
+                        }
+                        *next_eval = next_eval.saturating_add(eval_period);
+                    }
+                }
+            };
+            match cfg.mode {
+                ExecMode::Standard => async_exec::run_async(&shared, false, ctxs, &mut seg, on_progress)?,
+                ExecMode::Concurrent => async_exec::run_async(&shared, true, ctxs, &mut seg, on_progress)?,
+                ExecMode::Synchronized => sync_exec::run_sync(&shared, false, ctxs, &mut seg, on_progress)?,
+                ExecMode::Both => sync_exec::run_sync(&shared, true, ctxs, &mut seg, on_progress)?,
+            }
+        }
+        let completed = shared.completed.load(Ordering::SeqCst);
+        let trains_done = shared.trains_done.load(Ordering::SeqCst);
+        let episodes = shared.episodes.load(Ordering::SeqCst);
+        let new_losses = std::mem::take(&mut *shared.losses.lock().unwrap());
+        let new_returns = std::mem::take(&mut *shared.returns.lock().unwrap());
+        drop(shared);
+        let m = self.machine.as_mut().unwrap();
+        m.windows_flushed = seg.windows_flushed;
+        m.draw_rng = seg.draw_rng;
+        m.completed = completed;
+        m.trains_done = trains_done;
+        m.episodes = episodes;
+        m.losses.extend(new_losses);
+        m.returns.extend(new_returns);
+        Ok(())
+    }
+
+    /// Checkpointing needs deterministic quiesce states; reject the one
+    /// degenerate geometry where the synchronized both-mode driver cannot
+    /// provide them (rounds that span more than one target window).
+    fn validate_ckpt_config(&self) -> Result<()> {
+        if self.ckpt_period == 0 {
+            bail!("ckpt_period must be >= 1 step");
+        }
+        if self.cfg.mode == ExecMode::Both
+            && (self.cfg.streams() as u64) > self.cfg.target_update_period
+        {
+            bail!(
+                "checkpointing in mode 'both' requires C >= W*B (a round must not span \
+                 multiple target windows); got C={} < W*B={}",
+                self.cfg.target_update_period,
+                self.cfg.streams()
+            );
+        }
+        Ok(())
+    }
+
+    // ---- checkpoint save/restore -----------------------------------------
+
+    /// Config fields a checkpoint must agree on to resume bit-exactly.
+    /// (learner_threads / prefetch_batches are excluded on purpose: both
+    /// are bit-exact knobs, rust/DESIGN.md §9. total_steps is excluded so
+    /// a resumed run may extend or shorten the budget.)
+    fn config_fingerprint(&self) -> Json {
+        let c = &self.cfg;
+        obj(vec![
+            ("game", Json::Str(c.game.clone())),
+            ("mode", Json::Str(c.mode.name().to_string())),
+            ("threads", Json::Num(c.threads as f64)),
+            ("envs_per_thread", Json::Num(c.envs_per_thread as f64)),
+            ("seed", Json::Str(format!("{:016x}", c.seed))),
+            ("net", Json::Str(c.net.clone())),
+            ("double", Json::Bool(c.double)),
+            ("minibatch", Json::Num(c.minibatch as f64)),
+            ("replay_capacity", Json::Num(c.replay_capacity as f64)),
+            ("target_update_period", Json::Num(c.target_update_period as f64)),
+            ("train_period", Json::Num(c.train_period as f64)),
+            ("gamma", Json::Str(format!("{:016x}", c.gamma.to_bits()))),
+            ("prepopulate", Json::Num(c.prepopulate as f64)),
+            ("lr", Json::Str(format!("{:016x}", c.lr.to_bits()))),
+            ("eps_start", Json::Str(format!("{:016x}", c.eps.start.to_bits()))),
+            ("eps_end", Json::Str(format!("{:016x}", c.eps.end.to_bits()))),
+            ("eps_decay_steps", Json::Num(c.eps.decay_steps as f64)),
+            ("eval_period", Json::Str(format!("{:016x}", c.eval_period))),
+            ("eval_episodes", Json::Num(c.eval_episodes as f64)),
+            ("eval_eps", Json::Str(format!("{:016x}", c.eval_eps.to_bits()))),
+            ("eval_seed", Json::Str(format!("{:016x}", c.eval_seed))),
+        ])
+    }
+
+    fn check_compat(&self, meta: &Json) -> Result<()> {
+        let want = self.config_fingerprint();
+        let saved = meta.get("config").ok_or_else(|| {
+            anyhow!("checkpoint manifest has no config fingerprint")
+        })?;
+        let (Json::Obj(want), Json::Obj(saved)) = (&want, saved) else {
+            bail!("checkpoint manifest: malformed config fingerprint");
+        };
+        let mut mismatches = Vec::new();
+        for (key, want_v) in want {
+            match saved.get(key) {
+                Some(saved_v) if saved_v == want_v => {}
+                Some(saved_v) => mismatches.push(format!(
+                    "{key}: checkpoint {}, this run {}",
+                    saved_v.to_string(),
+                    want_v.to_string()
+                )),
+                None => mismatches.push(format!("{key}: missing from checkpoint")),
+            }
+        }
+        if !mismatches.is_empty() {
+            bail!(
+                "checkpoint was written under a different configuration; refusing to resume \
+                 (bit-exact resume is impossible):\n  {}",
+                mismatches.join("\n  ")
+            );
+        }
+        Ok(())
+    }
+
+    /// Atomically write a checkpoint of the current quiesced machine into
+    /// the configured (or given) directory. Returns the checkpoint path.
+    pub fn save_checkpoint(&self) -> Result<PathBuf> {
+        let dir = self
+            .ckpt_dir
+            .clone()
+            .ok_or_else(|| anyhow!("no checkpoint directory configured (--ckpt-dir)"))?;
+        let m = self
+            .machine
+            .as_ref()
+            .ok_or_else(|| anyhow!("nothing to checkpoint: the machine has not run yet"))?;
+
+        let mut wtr = CheckpointWriter::new(m.completed);
+        wtr.meta("config", self.config_fingerprint());
+        wtr.meta("total_steps", Json::Num(self.cfg.total_steps as f64));
+        wtr.add(&QNetSnapshot(self.qnet.as_ref()))?;
+        wtr.add(&*m.replay.read().unwrap())?;
+
+        let mut w = ByteWriter::new();
+        w.put_usize(m.ctxs.len());
+        for ctx in &m.ctxs {
+            ctx.save_state(&mut w);
+        }
+        wtr.add_raw("samplers", 1, w.into_bytes())?;
+
+        let mut w = ByteWriter::new();
+        m.save_progress(&mut w);
+        wtr.add_raw("progress", 1, w.into_bytes())?;
+
+        if let Some(ev) = &m.evaluator {
+            wtr.add(ev)?;
+        }
+        wtr.write(&dir)
+    }
+
+    /// Reconstruct the machine from a checkpoint: `dir` may be a specific
+    /// `step_<N>` directory or a checkpoint root (the newest step is used).
+    /// Returns the resumed step. The configuration must match the one the
+    /// checkpoint was written under (see `config_fingerprint`).
+    pub fn resume_from(&mut self, dir: &Path) -> Result<u64> {
+        let path = if dir.join("manifest.json").exists() {
+            dir.to_path_buf()
+        } else {
+            latest_checkpoint(dir)?
+                .ok_or_else(|| anyhow!("no checkpoint found under {}", dir.display()))?
+        };
+        let rdr = CheckpointReader::open(&path)?;
+        self.check_compat(rdr.meta())?;
+
+        let mut m = self.build_machine(false)?;
+        rdr.restore(&mut QNetSnapshot(self.qnet.as_ref()))?;
+        rdr.restore(&mut *m.replay.write().unwrap())?;
+
+        let mut r = rdr.read_section("samplers", 1)?;
+        let n = r.usize()?;
+        if n != m.ctxs.len() {
+            bail!("checkpoint has {n} sampler contexts, this machine has {}", m.ctxs.len());
+        }
+        for ctx in &mut m.ctxs {
+            ctx.load_state(&mut r)?;
+        }
+        r.finish().context("restoring checkpoint section \"samplers\"")?;
+
+        let mut r = rdr.read_section("progress", 1)?;
+        m.load_progress(&mut r)?;
+        r.finish().context("restoring checkpoint section \"progress\"")?;
+
+        if let Some(ev) = m.evaluator.as_mut() {
+            if rdr.has_section("evaluator") {
+                rdr.restore(ev)?;
+            }
+            // else: the checkpointed run had no evaluator (its budget never
+            // crossed eval_period, or it ran without_eval), so no eval ever
+            // consumed evaluator state — the pristine evaluator built above
+            // is exactly what the uninterrupted longer run would carry here,
+            // and next_eval was restored from the progress section. This is
+            // what lets `--resume` extend a run's budget across the
+            // eval_period threshold.
+        }
+        if m.completed != rdr.step() {
+            bail!(
+                "checkpoint {}: manifest step {} disagrees with progress section step {}",
+                path.display(),
+                rdr.step(),
+                m.completed
+            );
+        }
+        self.machine = Some(m);
+        Ok(rdr.step())
+    }
+
+    /// FNV-1a digest over the core machine state (parameters, optimizer
+    /// accumulators, target net, replay contents, sampler contexts, RNG
+    /// positions, progress counters). Two machines on the same trajectory
+    /// digest identically — the resume-smoke comparison hash.
+    ///
+    /// Deliberately a curated subset, NOT `save_progress`: loss/return
+    /// samples carry step tags read from a racing counter in concurrent
+    /// modes, so hashing them would make the digest nondeterministic. Keep
+    /// this list in sync with the bit-exactness guarantee in
+    /// rust/DESIGN.md §10 when adding machine state.
+    pub fn state_digest(&self) -> Result<u64> {
+        let m = self
+            .machine
+            .as_ref()
+            .ok_or_else(|| anyhow!("no machine state yet (run or resume first)"))?;
+        let mut w = ByteWriter::new();
+        QNetSnapshot(self.qnet.as_ref()).save(&mut w);
+        m.replay.read().unwrap().save(&mut w);
+        for ctx in &m.ctxs {
+            ctx.save_state(&mut w);
+        }
+        w.put_rng(m.draw_rng);
+        w.put_u64(m.completed);
+        w.put_u64(m.trains_done);
+        w.put_u64(m.episodes);
+        w.put_u64(m.windows_flushed);
+        for ev in &m.evals {
+            w.put_u64(ev.step);
+            w.put_f64(ev.mean_return);
+            w.put_f64(ev.std_return);
+        }
+        Ok(crate::ckpt::fnv1a(&w.into_bytes()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recent_mean_return_edge_cases() {
+        let mut res = TrainResult::default();
+        // Empty history: always 0, for any n.
+        assert_eq!(res.recent_mean_return(0), 0.0);
+        assert_eq!(res.recent_mean_return(5), 0.0);
+
+        res.returns = vec![(10, 1.0), (20, 2.0), (30, 6.0)];
+        // n = 0 is defined as 0.0, not a division by zero.
+        assert_eq!(res.recent_mean_return(0), 0.0);
+        // Exact tail.
+        assert_eq!(res.recent_mean_return(1), 6.0);
+        assert_eq!(res.recent_mean_return(2), 4.0);
+        // n > history length averages the whole history, not n slots.
+        assert_eq!(res.recent_mean_return(3), 3.0);
+        assert_eq!(res.recent_mean_return(100), 3.0);
+        assert_eq!(res.recent_mean_return(usize::MAX), 3.0);
+    }
+
+    #[test]
+    fn quantize_bound_respects_mode_alignment() {
+        let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+        cfg.game = "seeker".into();
+        cfg.total_steps = 1_000;
+        cfg.target_update_period = 100;
+        cfg.envs_per_thread = 4;
+        let artifact = crate::runtime::default_artifact_dir();
+
+        cfg.mode = ExecMode::Both;
+        let c = Coordinator::new(cfg.clone(), &artifact).unwrap();
+        assert_eq!(c.quantize_bound(1), 100, "windowed modes align to C");
+        assert_eq!(c.quantize_bound(100), 100);
+        assert_eq!(c.quantize_bound(101), 200);
+        assert_eq!(c.quantize_bound(5_000), 1_000, "clamped to total");
+
+        cfg.mode = ExecMode::Standard;
+        let c = Coordinator::new(cfg.clone(), &artifact).unwrap();
+        assert_eq!(c.quantize_bound(1), 4, "async standard aligns to B");
+        assert_eq!(c.quantize_bound(9), 12);
+
+        cfg.mode = ExecMode::Synchronized;
+        let c = Coordinator::new(cfg, &artifact).unwrap();
+        assert_eq!(c.quantize_bound(9), 9, "sync rounds self-quantize");
     }
 }

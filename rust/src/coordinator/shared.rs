@@ -66,19 +66,34 @@ impl<'a> Shared<'a> {
         timers: &'a PhaseTimers,
         gantt: Option<&'a GanttTrace>,
     ) -> Self {
+        Self::resumed(cfg, qnet, replay, timers, gantt, ResumePoint::default())
+    }
+
+    /// [`Shared::new`] with the monotone progress counters pre-loaded from
+    /// a checkpoint (or a previous segment of the same run). `claimed`
+    /// restarts at `completed`: any tickets a prior segment claimed but
+    /// never executed were forfeited at its quiesce point.
+    pub fn resumed(
+        cfg: &'a ExperimentConfig,
+        qnet: &'a QNet,
+        replay: &'a RwLock<ReplayMemory>,
+        timers: &'a PhaseTimers,
+        gantt: Option<&'a GanttTrace>,
+        at: ResumePoint,
+    ) -> Self {
         Shared {
             cfg,
             qnet,
             replay,
             timers,
             gantt,
-            claimed: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
+            claimed: AtomicU64::new(at.completed),
+            completed: AtomicU64::new(at.completed),
             stop: AtomicBool::new(false),
-            trains_done: AtomicU64::new(0),
+            trains_done: AtomicU64::new(at.trains_done),
             losses: Mutex::new(Vec::new()),
             returns: Mutex::new(Vec::new()),
-            episodes: AtomicU64::new(0),
+            episodes: AtomicU64::new(at.episodes),
             error: Mutex::new(None),
         }
     }
@@ -162,6 +177,34 @@ impl<'a> Shared<'a> {
             self.qnet.sync_target();
         });
     }
+}
+
+/// Monotone progress counters carried across segments / checkpoints.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResumePoint {
+    pub completed: u64,
+    pub trains_done: u64,
+    pub episodes: u64,
+}
+
+/// Cross-segment driver state. A *segment* is one driver invocation that
+/// runs from the machine's current step to a quiesce bound and tears its
+/// threads down with every layer quiesced — the unit between checkpoints.
+///
+/// `until` must be a valid quiesce bound for the mode: `cfg.total_steps`,
+/// or (for a mid-run checkpoint) a C-aligned window boundary in concurrent
+/// modes / a B-aligned step in async-standard; the synchronized drivers
+/// additionally round to whole W×B rounds on their own.
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentState {
+    /// Step bound of this segment (see above).
+    pub until: u64,
+    /// Synchronization points performed so far (windowed modes): the next
+    /// window dispatched covers steps `windows_flushed*C .. +C`.
+    pub windows_flushed: u64,
+    /// Trainer draw-stream position ([`crate::replay::IndexSampler`]),
+    /// written back at segment exit.
+    pub draw_rng: [u64; 4],
 }
 
 /// Standard DQN's training/sampling interlock (Concurrent Training OFF).
@@ -378,6 +421,46 @@ impl SamplerCtx {
     /// Number of environment streams in this context (B).
     pub fn width(&self) -> usize {
         self.envs.len()
+    }
+
+    /// Checkpoint this context: its B environments, policy RNG streams,
+    /// and episode-start flags. Scratch buffers are rebuilt on use.
+    pub fn save_state(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.put_usize(self.slot);
+        w.put_usize(self.base_stream);
+        self.envs.save_state(w);
+        w.put_usize(self.policies.len());
+        for p in &self.policies {
+            w.put_rng(p.rng_state());
+        }
+        w.put_bool_slice(&self.pending_start);
+    }
+
+    /// Restore a context written by [`SamplerCtx::save_state`].
+    pub fn load_state(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> Result<()> {
+        let slot = r.usize()?;
+        let base = r.usize()?;
+        if slot != self.slot || base != self.base_stream {
+            anyhow::bail!(
+                "checkpoint sampler context (slot {slot}, base stream {base}) does not match \
+                 this machine (slot {}, base stream {}) — W×B layout changed?",
+                self.slot, self.base_stream
+            );
+        }
+        self.envs.load_state(r)?;
+        let n = r.usize()?;
+        if n != self.policies.len() {
+            anyhow::bail!("checkpoint has {n} policy streams, this context has {}", self.policies.len());
+        }
+        for p in &mut self.policies {
+            p.set_rng_state(r.rng()?);
+        }
+        let pending = r.bool_vec()?;
+        if pending.len() != self.pending_start.len() {
+            anyhow::bail!("checkpoint pending-start flags do not match B");
+        }
+        self.pending_start = pending;
+        Ok(())
     }
 
     /// Write all B stacked states into `states_buf` and return it — the

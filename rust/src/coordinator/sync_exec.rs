@@ -20,6 +20,16 @@
 //! quantization, amplified by B), preserving the one-transaction-per-round
 //! invariant; the async drivers clamp instead because their blocks are
 //! per-thread.
+//!
+//! **Segments & quiesce points** (rust/DESIGN.md §10): one invocation runs
+//! whole rounds until coverage of `seg.until` and exits quiesced — in both
+//! mode, always immediately after a window's flush with the trainer's full
+//! quota consumed, so the machine state at exit is exactly the state the
+//! uninterrupted run passes through at that boundary. Sampler contexts
+//! persist outside the driver and the draw stream is written back to
+//! `seg.draw_rng`. In both mode, evaluation fires only at window barriers
+//! (trainer idle, theta frozen); in synchronized mode every round end is
+//! already quiesced, so it fires per round as before.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex};
@@ -28,10 +38,10 @@ use anyhow::{anyhow, Result};
 
 use crate::env::STATE_BYTES;
 use crate::metrics::Phase;
-use crate::replay::{BatchSource, StagingSet, TrainerSource};
+use crate::replay::{BatchSource, IndexSampler, StagingSet, TrainerSource};
 use crate::runtime::{Policy, TrainBatch};
 
-use super::shared::{SamplerCtx, Shared, WindowCtrl};
+use super::shared::{SamplerCtx, SegmentState, Shared, WindowCtrl};
 
 /// Per-slot shared mailbox: the "shared memory arrays" of the paper,
 /// widened to B states / B Q-rows per sampler thread.
@@ -46,20 +56,23 @@ struct SlotIo {
     q: Vec<f32>,
 }
 
-/// Run the synchronized driver. `concurrent` selects Algorithm 1 vs
+/// Run one synchronized segment. `concurrent` selects Algorithm 1 vs
 /// synchronized-only.
 pub fn run_sync(
     shared: &Shared<'_>,
     concurrent: bool,
+    ctxs: &mut [SamplerCtx],
+    seg: &mut SegmentState,
     mut on_progress: impl FnMut(u64) + Send,
 ) -> Result<()> {
     let w = shared.cfg.threads;
     let b = shared.cfg.envs_per_thread;
-    let total = shared.cfg.total_steps;
+    let until = seg.until.min(shared.cfg.total_steps);
     let c = shared.cfg.target_update_period;
     let f = shared.cfg.train_period;
     let actions = shared.qnet.spec().actions;
     let round = (w * b) as u64;
+    debug_assert_eq!(ctxs.len(), w, "one persistent SamplerCtx per thread");
 
     let slots: Vec<Slot> = (0..w)
         .map(|_| Slot {
@@ -84,16 +97,17 @@ pub fn run_sync(
     // Batch source: prefetch pipeline for the windowed trainer (both-mode)
     // when enabled, inline sampling otherwise — including synchronized-only
     // inline training, which interleaves with replay writes every round
-    // (TrainerSource owns the eligibility rule).
-    let source = TrainerSource::new(
+    // (TrainerSource owns the eligibility rule). The draw stream resumes
+    // at the segment's saved position.
+    let source = TrainerSource::with_sampler(
         shared.replay,
-        shared.cfg.seed,
+        IndexSampler::from_rng_state(seg.draw_rng),
         shared.cfg.minibatch,
         shared.cfg.prefetch_batches,
         concurrent,
     );
 
-    std::thread::scope(|scope| -> Result<()> {
+    let result = std::thread::scope(|scope| -> Result<()> {
         // ---- prefetch worker (both-mode + prefetch only) -----------------
         if let Some(pipeline) = source.pipeline() {
             let shared = &shared;
@@ -101,7 +115,7 @@ pub fn run_sync(
         }
 
         // ---- sampler threads --------------------------------------------
-        for slot_id in 0..w {
+        for ctx in ctxs.iter_mut() {
             let shared = &shared;
             let slots = &slots;
             let staging = &staging;
@@ -109,21 +123,7 @@ pub fn run_sync(
             let round_done = &round_done;
             let round_base = &round_base;
             scope.spawn(move || {
-                let mut ctx = match SamplerCtx::new(shared.cfg, slot_id) {
-                    Ok(c) => c,
-                    Err(e) => {
-                        shared.fail(format!("sampler {slot_id}: {e}"));
-                        // Still participate in barriers so nobody deadlocks.
-                        round_done.wait(); // initial state-publish barrier
-                        loop {
-                            round_start.wait();
-                            if shared.should_stop() {
-                                return;
-                            }
-                            round_done.wait();
-                        }
-                    }
-                };
+                let slot_id = ctx.slot;
                 // Publish the initial states, then enter the round loop.
                 {
                     let mut io = slots[slot_id].io.lock().unwrap();
@@ -167,8 +167,8 @@ pub fn run_sync(
         // ---- main thread: Algorithm 1's dispatch loop --------------------
         let mut batch_states = vec![0u8; w * b * STATE_BYTES];
         let mut train_batch = TrainBatch::default();
-        let mut completed: u64 = 0;
-        let mut window_end = c.min(total);
+        let mut completed: u64 = shared.completed.load(Ordering::SeqCst);
+        let mut window_end = ((seg.windows_flushed + 1) * c).min(until);
         if concurrent {
             winctrl.dispatch();
             source.grant(bpw);
@@ -182,7 +182,7 @@ pub fn run_sync(
                     round_start.wait();
                     return Err(anyhow!("worker failed"));
                 }
-                if completed >= total {
+                if completed >= until {
                     shared.stop.store(true, Ordering::SeqCst);
                     round_start.wait(); // release samplers to observe stop
                     break;
@@ -219,12 +219,17 @@ pub fn run_sync(
                 completed += round;
 
                 if concurrent {
-                    // Window boundary: wait for the trainer, flush, sync.
+                    // Window boundary: wait for the trainer's full quota,
+                    // flush, sync. The quiesce state right after this flush
+                    // is what checkpoints capture and what evaluation may
+                    // observe (trainer idle, theta frozen).
                     if completed >= window_end {
                         winctrl.wait_caught_up(shared);
                         shared.sync_point(&staging);
-                        if window_end < total {
-                            window_end = (window_end + c).min(total);
+                        seg.windows_flushed += 1;
+                        on_progress(completed);
+                        if window_end < until {
+                            window_end = (window_end + c).min(until);
                             winctrl.dispatch();
                             // Grant after the flush: the prefetch worker's
                             // next draws see exactly post-flush replay.
@@ -244,8 +249,8 @@ pub fn run_sync(
                             }
                         }
                     }
+                    on_progress(completed);
                 }
-                on_progress(completed);
             }
             Ok(())
         })();
@@ -253,7 +258,11 @@ pub fn run_sync(
         shared.stop.store(true, Ordering::SeqCst);
         winctrl.notify_all();
         result
-    })?;
+    });
+    // Write the draw stream back for the next segment / checkpoint (safe:
+    // all threads joined, the source is quiesced).
+    seg.draw_rng = source.sampler_state();
+    result?;
 
     if let Some(err) = shared.error.lock().unwrap().take() {
         return Err(anyhow!(err));

@@ -211,6 +211,41 @@ impl Game for Breakout {
             0
         }
     }
+
+    fn save_state(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.put_rng(self.rng.state());
+        for row in &self.bricks {
+            w.put_bool_slice(row);
+        }
+        w.put_f64(self.ball_x);
+        w.put_f64(self.ball_y);
+        w.put_f64(self.vel_x);
+        w.put_f64(self.vel_y);
+        w.put_f64(self.paddle_x);
+        w.put_u32(self.lives);
+        w.put_bool(self.serving);
+        w.put_u32(self.walls_cleared);
+    }
+
+    fn load_state(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> anyhow::Result<()> {
+        self.rng = Rng::from_state(r.rng()?);
+        for row in &mut self.bricks {
+            let v = r.bool_vec()?;
+            if v.len() != COLS {
+                anyhow::bail!("breakout: brick row has {} cells, want {COLS}", v.len());
+            }
+            row.copy_from_slice(&v);
+        }
+        self.ball_x = r.f64()?;
+        self.ball_y = r.f64()?;
+        self.vel_x = r.f64()?;
+        self.vel_y = r.f64()?;
+        self.paddle_x = r.f64()?;
+        self.lives = r.u32()?;
+        self.serving = r.bool()?;
+        self.walls_cleared = r.u32()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

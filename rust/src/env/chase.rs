@@ -156,6 +156,28 @@ impl Game for Chase {
             1
         }
     }
+
+    fn save_state(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.put_rng(self.rng.state());
+        for v in [self.x, self.y, self.tx, self.ty, self.ex, self.ey] {
+            w.put_f64(v);
+        }
+        w.put_u32(self.lives);
+        w.put_u32(self.ticks);
+    }
+
+    fn load_state(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> anyhow::Result<()> {
+        self.rng = Rng::from_state(r.rng()?);
+        self.x = r.f64()?;
+        self.y = r.f64()?;
+        self.tx = r.f64()?;
+        self.ty = r.f64()?;
+        self.ex = r.f64()?;
+        self.ey = r.f64()?;
+        self.lives = r.u32()?;
+        self.ticks = r.u32()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

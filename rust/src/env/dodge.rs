@@ -153,6 +153,36 @@ impl Game for Dodge {
             0
         }
     }
+
+    fn save_state(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.put_rng(self.rng.state());
+        w.put_f64(self.x);
+        w.put_usize(self.obstacles.len());
+        for ob in &self.obstacles {
+            w.put_f64(ob.x);
+            w.put_f64(ob.y);
+            w.put_f64(ob.vy);
+            w.put_bool(ob.scored);
+        }
+        w.put_u32(self.lives);
+        w.put_u32(self.ticks);
+        w.put_u32(self.spawn_cooldown);
+    }
+
+    fn load_state(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> anyhow::Result<()> {
+        self.rng = Rng::from_state(r.rng()?);
+        self.x = r.f64()?;
+        let n = r.usize()?;
+        self.obstacles = (0..n)
+            .map(|_| {
+                Ok(Obstacle { x: r.f64()?, y: r.f64()?, vy: r.f64()?, scored: r.bool()? })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        self.lives = r.u32()?;
+        self.ticks = r.u32()?;
+        self.spawn_cooldown = r.u32()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -22,10 +22,22 @@ pub struct StepResult {
     pub done: bool,
 }
 
+use crate::ckpt::{ByteReader, ByteWriter};
+
 /// One synthetic Atari-like game.
 pub trait Game: Send {
     /// Stable identifier used by the registry and reports.
     fn name(&self) -> &'static str;
+
+    /// Serialize the full mid-episode simulator state (including the RNG
+    /// stream position) through the bit-exact checkpoint codec. Together
+    /// with [`Game::load_state`] this must satisfy: save → load → step*
+    /// produces exactly the frames/rewards the uninterrupted game would
+    /// (rust/DESIGN.md §10).
+    fn save_state(&self, w: &mut ByteWriter);
+
+    /// Restore a state written by [`Game::save_state`].
+    fn load_state(&mut self, r: &mut ByteReader<'_>) -> anyhow::Result<()>;
 
     /// Number of legal actions (<= 6; action 0 is always NOOP).
     fn num_actions(&self) -> usize;

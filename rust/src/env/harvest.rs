@@ -166,6 +166,39 @@ impl Game for Harvest {
             None => 1 + self.rng.below_usize(4), // wander to the next plot
         }
     }
+
+    fn save_state(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.put_rng(self.rng.state());
+        w.put_usize(self.col);
+        w.put_usize(self.row);
+        for row in &self.plots {
+            for plot in row {
+                match plot {
+                    Plot::Empty => w.put_u32(u32::MAX),
+                    Plot::Growing(t) => w.put_u32(*t),
+                    Plot::Ripe => w.put_u32(0),
+                }
+            }
+        }
+        w.put_u32(self.ticks);
+    }
+
+    fn load_state(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> anyhow::Result<()> {
+        self.rng = Rng::from_state(r.rng()?);
+        self.col = r.usize()?;
+        self.row = r.usize()?;
+        for row in &mut self.plots {
+            for plot in row {
+                *plot = match r.u32()? {
+                    u32::MAX => Plot::Empty,
+                    0 => Plot::Ripe,
+                    t => Plot::Growing(t),
+                };
+            }
+        }
+        self.ticks = r.u32()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

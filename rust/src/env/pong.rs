@@ -158,6 +158,33 @@ impl Game for Pong {
             0
         }
     }
+
+    fn save_state(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.put_rng(self.rng.state());
+        w.put_f64(self.ball_x);
+        w.put_f64(self.ball_y);
+        w.put_f64(self.vel_x);
+        w.put_f64(self.vel_y);
+        w.put_f64(self.agent_y);
+        w.put_f64(self.opp_y);
+        w.put_u32(self.agent_score);
+        w.put_u32(self.opp_score);
+        w.put_f64(self.opp_speed);
+    }
+
+    fn load_state(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> anyhow::Result<()> {
+        self.rng = Rng::from_state(r.rng()?);
+        self.ball_x = r.f64()?;
+        self.ball_y = r.f64()?;
+        self.vel_x = r.f64()?;
+        self.vel_y = r.f64()?;
+        self.agent_y = r.f64()?;
+        self.opp_y = r.f64()?;
+        self.agent_score = r.u32()?;
+        self.opp_score = r.u32()?;
+        self.opp_speed = r.f64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -117,6 +117,28 @@ impl Game for Seeker {
             1
         }
     }
+
+    fn save_state(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.put_rng(self.rng.state());
+        w.put_f64(self.x);
+        w.put_f64(self.y);
+        w.put_usize(self.pellets.len());
+        for &(px, py) in &self.pellets {
+            w.put_f64(px);
+            w.put_f64(py);
+        }
+        w.put_u32(self.ticks);
+    }
+
+    fn load_state(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> anyhow::Result<()> {
+        self.rng = Rng::from_state(r.rng()?);
+        self.x = r.f64()?;
+        self.y = r.f64()?;
+        let n = r.usize()?;
+        self.pellets = (0..n).map(|_| Ok((r.f64()?, r.f64()?))).collect::<anyhow::Result<_>>()?;
+        self.ticks = r.u32()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

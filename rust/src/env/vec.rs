@@ -91,6 +91,28 @@ impl VecEnv {
     pub fn latest_plane(&self, j: usize) -> &[u8] {
         self.envs[j].latest_plane()
     }
+
+    /// Checkpoint all B environments (in stream order).
+    pub fn save_state(&self, w: &mut crate::ckpt::ByteWriter) {
+        use crate::ckpt::Snapshot;
+        w.put_usize(self.envs.len());
+        for env in &self.envs {
+            env.save(w);
+        }
+    }
+
+    /// Restore all B environments from [`VecEnv::save_state`].
+    pub fn load_state(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> Result<()> {
+        use crate::ckpt::Snapshot;
+        let n = r.usize()?;
+        if n != self.envs.len() {
+            anyhow::bail!("checkpoint has {n} env streams, this context has {}", self.envs.len());
+        }
+        for env in &mut self.envs {
+            env.load(r)?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use crate::agent::EpsGreedy;
+use crate::ckpt::Snapshot;
 use crate::env::{make_env, AtariEnv, STATE_BYTES};
 use crate::runtime::{Policy, QNet};
 
@@ -94,6 +95,39 @@ impl Evaluator {
         let mean = returns.iter().sum::<f64>() / n;
         let var = returns.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n;
         Ok(EvalPoint { step: 0, mean_return: mean, std_return: var.sqrt(), episodes: returns.len() })
+    }
+}
+
+/// Checkpoint the evaluator: its environment and policy RNG stream, so
+/// resumed runs produce the exact evaluation points the uninterrupted run
+/// would (the eval env reseeds per episode from its own counter, and the
+/// policy RNG advances across evaluations).
+impl crate::ckpt::Snapshot for Evaluator {
+    fn kind(&self) -> &'static str {
+        "evaluator"
+    }
+
+    fn save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.put_f64(self.eps);
+        w.put_usize(self.episodes);
+        w.put_usize(self.max_steps_per_episode);
+        w.put_rng(self.policy.rng_state());
+        self.env.save(w);
+    }
+
+    fn load(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> Result<()> {
+        let eps = r.f64()?;
+        let episodes = r.usize()?;
+        if eps != self.eps || episodes != self.episodes {
+            anyhow::bail!(
+                "checkpoint evaluator ran eps={eps} episodes={episodes}, \
+                 this run configures eps={} episodes={}",
+                self.eps, self.episodes
+            );
+        }
+        self.max_steps_per_episode = r.usize()?;
+        self.policy.set_rng_state(r.rng()?);
+        self.env.load(r)
     }
 }
 

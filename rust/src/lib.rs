@@ -20,6 +20,8 @@
 
 pub mod agent;
 pub mod benchkit;
+pub mod campaign;
+pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod eval;

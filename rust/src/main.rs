@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train      run one training experiment (mode/threads/game/net via flags)
+//!   run-suite  execute a TOML-declared multi-game campaign with checkpoints
 //!   speedtest  regenerate Tables 1-3 (DES by default; --real for scaled live runs)
 //!   suite      regenerate the Table 4 analog over the synthetic game suite
 //!   anchors    measure the Random / Human-proxy score anchors per game
@@ -12,6 +13,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use tempo_dqn::campaign::{summary_table, Campaign};
 use tempo_dqn::config::{ExecMode, ExperimentConfig};
 use tempo_dqn::coordinator::Coordinator;
 use tempo_dqn::env::GAMES;
@@ -33,12 +35,17 @@ SUBCOMMANDS:
   train      --preset paper|speedtest|smoke --config FILE --mode MODE
              --threads N --envs-per-thread B --steps N --game NAME
              --net tiny|small|nature --seed N --double --lr X
-             --eval-period N --learner-threads N --prefetch-batches N
+             --eval-period N --eval-seed N --learner-threads N
+             --prefetch-batches N --ckpt-dir DIR --ckpt-period N
+             --resume DIR
+  run-suite  --campaign FILE (TOML campaign: legs, order, ckpt_dir; see
+             rust/src/campaign.rs for the format)
   speedtest  --threads 1,2,4,8 --steps N [--real] [--gantt] [--game NAME]
              [--envs-per-thread B] [--learner-threads N]
              [--prefetch-batches N]
   suite      --steps N --threads N [--games a,b,c] [--episodes N]
-  anchors    [--games a,b,c] [--episodes N]
+             [--eval-seed N]
+  anchors    [--games a,b,c] [--episodes N] [--eval-seed N]
   config     (same options as train; prints the resolved config)
 
 The coordinator runs W = --threads sampler threads with B =
@@ -48,6 +55,11 @@ The learner shards each minibatch over --learner-threads compute lanes and
 double-buffers replay batch assembly (--prefetch-batches, 0 = off); both
 knobs are bit-exact — any setting reproduces the serial trajectory
 (rust/DESIGN.md §9).
+
+Checkpointing (rust/DESIGN.md §10): --ckpt-dir enables periodic atomic
+checkpoints at quiesce points (every --ckpt-period steps, rounded up to a
+window boundary); --resume DIR reconstructs the exact machine from the
+newest checkpoint and continues the same trajectory to the bit.
 ";
 
 fn main() {
@@ -61,6 +73,7 @@ fn main() {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     let result = match sub.as_str() {
         "train" => cmd_train(&args),
+        "run-suite" => cmd_run_suite(&args),
         "speedtest" => cmd_speedtest(&args),
         "suite" => cmd_suite(&args),
         "anchors" => cmd_anchors(&args),
@@ -99,7 +112,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.total_steps,
         cfg.seed
     );
+    if let Some(dir) = &cfg.ckpt_dir {
+        println!("checkpointing: dir={dir} period={} steps", cfg.ckpt_period);
+    }
     let mut coord = Coordinator::new(cfg, &default_artifact_dir())?;
+    if let Some(dir) = args.str_opt("resume") {
+        let step = coord.resume_from(std::path::Path::new(dir))?;
+        println!("resumed from {dir} at step {step}");
+    }
     let res = coord.run()?;
     println!(
         "done: {} steps in {:.1}s ({:.1} steps/s), {} episodes, {} trains, {} target syncs",
@@ -121,7 +141,28 @@ fn cmd_train(args: &Args) -> Result<()> {
             ev.step, ev.mean_return, ev.std_return, ev.episodes
         );
     }
+    // Trajectory fingerprint over params/optimizer/replay/RNG streams —
+    // two runs on the same trajectory print the same digest (the CI
+    // resume-smoke compares an uninterrupted run against ckpt + resume).
+    println!("state digest: {:016x}", coord.state_digest()?);
     print!("{}", res.timers_report);
+    Ok(())
+}
+
+fn cmd_run_suite(args: &Args) -> Result<()> {
+    let Some(path) = args.str_opt("campaign") else {
+        anyhow::bail!("run-suite needs --campaign FILE (TOML; see rust/src/campaign.rs)");
+    };
+    let campaign = Campaign::load(std::path::Path::new(path))?;
+    println!(
+        "campaign {:?}: {} legs, order {:?}, checkpoints under {}",
+        campaign.name,
+        campaign.legs.len(),
+        campaign.order,
+        campaign.ckpt_root.display()
+    );
+    let reports = campaign.run(&default_artifact_dir(), |line| println!("{line}"))?;
+    print!("{}", summary_table(&reports));
     Ok(())
 }
 
@@ -216,9 +257,10 @@ fn cmd_anchors(args: &Args) -> Result<()> {
     };
     let episodes = args.usize_or("episodes", 10)?;
     let max_steps = args.usize_or("max-steps", 3_000)?;
+    let eval_seed = args.u64_or("eval-seed", ExperimentConfig::default().eval_seed)?;
     println!("{:<10} {:>12} {:>12}", "game", "random", "human-proxy");
     for game in &games {
-        let mut ev = Evaluator::new(game, 7, episodes, 0.05)?.with_max_steps(max_steps);
+        let mut ev = Evaluator::new(game, eval_seed, episodes, 0.05)?.with_max_steps(max_steps);
         let rand = ev.run_anchor(AnchorKind::Random)?;
         let expert = ev.run_anchor(AnchorKind::Expert)?;
         println!(
@@ -239,11 +281,12 @@ fn cmd_suite(args: &Args) -> Result<()> {
     let episodes = args.usize_or("episodes", 5)?;
     let max_steps = args.usize_or("max-steps", 2_000)?;
     let net = args.get_or("net", "tiny").to_string();
+    let eval_seed = args.u64_or("eval-seed", ExperimentConfig::default().eval_seed)?;
 
     let mut rows = Vec::new();
     for game in &games {
         println!("[suite] {game}: anchors...");
-        let mut ev = Evaluator::new(game, 7, episodes, 0.05)?.with_max_steps(max_steps);
+        let mut ev = Evaluator::new(game, eval_seed, episodes, 0.05)?.with_max_steps(max_steps);
         let random = ev.run_anchor(AnchorKind::Random)?;
         let human = ev.run_anchor(AnchorKind::Expert)?;
 
@@ -264,7 +307,10 @@ fn cmd_suite(args: &Args) -> Result<()> {
             };
             let mut coord = Coordinator::new(cfg, &default_artifact_dir())?.without_eval();
             coord.run()?;
-            let mut ev2 = Evaluator::new(game, 99, episodes, 0.05)?.with_max_steps(max_steps);
+            // Post-training scoring uses its own seed derived from the
+            // eval seed (+92 keeps the historical default of 99).
+            let mut ev2 = Evaluator::new(game, eval_seed.wrapping_add(92), episodes, 0.05)?
+                .with_max_steps(max_steps);
             Ok(ev2.run(coord.qnet(), steps)?.mean_return)
         };
         println!("[suite] {game}: training standard-DQN baseline...");

@@ -58,7 +58,21 @@ pub struct DirectSource<'a> {
 
 impl<'a> DirectSource<'a> {
     pub fn new(replay: &'a RwLock<ReplayMemory>, seed: u64, minibatch: usize) -> DirectSource<'a> {
-        DirectSource { replay, sampler: Mutex::new(IndexSampler::new(seed)), minibatch }
+        Self::with_sampler(replay, IndexSampler::new(seed), minibatch)
+    }
+
+    /// Resume the draw stream mid-run (checkpoint restore).
+    pub fn with_sampler(
+        replay: &'a RwLock<ReplayMemory>,
+        sampler: IndexSampler,
+        minibatch: usize,
+    ) -> DirectSource<'a> {
+        DirectSource { replay, sampler: Mutex::new(sampler), minibatch }
+    }
+
+    /// Draw-stream RNG position (checkpointing; call only when quiesced).
+    pub fn sampler_state(&self) -> [u64; 4] {
+        self.sampler.lock().unwrap().rng_state()
     }
 }
 
@@ -101,11 +115,21 @@ impl<'a> PrefetchPipeline<'a> {
         minibatch: usize,
         depth: usize,
     ) -> PrefetchPipeline<'a> {
+        Self::with_sampler(replay, IndexSampler::new(seed), minibatch, depth)
+    }
+
+    /// Resume the draw stream mid-run (checkpoint restore).
+    pub fn with_sampler(
+        replay: &'a RwLock<ReplayMemory>,
+        sampler: IndexSampler,
+        minibatch: usize,
+        depth: usize,
+    ) -> PrefetchPipeline<'a> {
         let depth = depth.max(1);
         PrefetchPipeline {
             replay,
             minibatch,
-            sampler: Mutex::new(IndexSampler::new(seed)),
+            sampler: Mutex::new(sampler),
             granted: AtomicU64::new(0),
             produced: AtomicU64::new(0),
             state: Mutex::new(Buffers {
@@ -120,6 +144,13 @@ impl<'a> PrefetchPipeline<'a> {
     /// Batches assembled so far (tests / diagnostics).
     pub fn produced(&self) -> u64 {
         self.produced.load(Ordering::SeqCst)
+    }
+
+    /// Draw-stream RNG position. Only meaningful when the pipeline is
+    /// quiesced (every granted batch consumed, worker parked) — i.e. at a
+    /// window barrier.
+    pub fn sampler_state(&self) -> [u64; 4] {
+        self.sampler.lock().unwrap().rng_state()
     }
 
     /// The worker body: assemble granted batches ahead of the trainer.
@@ -213,10 +244,24 @@ impl<'a> TrainerSource<'a> {
         prefetch_batches: usize,
         windowed: bool,
     ) -> TrainerSource<'a> {
+        Self::with_sampler(replay, IndexSampler::new(seed), minibatch, prefetch_batches, windowed)
+    }
+
+    /// [`TrainerSource::new`] with the draw stream resumed at a saved
+    /// position (checkpoint restore / segment continuation).
+    pub fn with_sampler(
+        replay: &'a RwLock<ReplayMemory>,
+        sampler: IndexSampler,
+        minibatch: usize,
+        prefetch_batches: usize,
+        windowed: bool,
+    ) -> TrainerSource<'a> {
         if windowed && prefetch_batches > 0 {
-            TrainerSource::Prefetch(PrefetchPipeline::new(replay, seed, minibatch, prefetch_batches))
+            TrainerSource::Prefetch(PrefetchPipeline::with_sampler(
+                replay, sampler, minibatch, prefetch_batches,
+            ))
         } else {
-            TrainerSource::Direct(DirectSource::new(replay, seed, minibatch))
+            TrainerSource::Direct(DirectSource::with_sampler(replay, sampler, minibatch))
         }
     }
 
@@ -225,6 +270,15 @@ impl<'a> TrainerSource<'a> {
         match self {
             TrainerSource::Prefetch(p) => Some(p),
             TrainerSource::Direct(_) => None,
+        }
+    }
+
+    /// Draw-stream RNG position (checkpointing; call only at a quiesce
+    /// point — see [`PrefetchPipeline::sampler_state`]).
+    pub fn sampler_state(&self) -> [u64; 4] {
+        match self {
+            TrainerSource::Direct(d) => d.sampler_state(),
+            TrainerSource::Prefetch(p) => p.sampler_state(),
         }
     }
 }

@@ -277,6 +277,93 @@ impl QNet {
         st.theta = values.to_vec();
         Ok(())
     }
+
+    /// Download the RMSProp accumulators (g, s) to host (checkpointing).
+    pub fn optimizer_host(&self) -> (Vec<f32>, Vec<f32>) {
+        let st = self.train.lock().unwrap();
+        (st.g.clone(), st.s.clone())
+    }
+
+    /// Overwrite the full learnable state in one shot (checkpoint restore).
+    /// All four buffers must have `param_count` elements.
+    pub fn import_state(
+        &self,
+        theta: Vec<f32>,
+        g: Vec<f32>,
+        s: Vec<f32>,
+        theta_minus: Vec<f32>,
+        train_steps: u64,
+        target_syncs: u64,
+    ) -> Result<()> {
+        let p = self.spec.param_count;
+        for (name, buf) in [("theta", &theta), ("g", &g), ("s", &s), ("theta_minus", &theta_minus)] {
+            if buf.len() != p {
+                bail!("import_state: {name} has {} values, want {p}", buf.len());
+            }
+        }
+        {
+            let mut st = self.train.lock().unwrap();
+            st.theta = theta;
+            st.g = g;
+            st.s = s;
+        }
+        *self.theta_minus.write().unwrap() = Arc::new(theta_minus);
+        self.train_steps.store(train_steps, Ordering::SeqCst);
+        self.target_syncs.store(target_syncs, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
+/// [`crate::ckpt::Snapshot`] adapter for [`QNet`]: the network lives behind
+/// an `Arc` in the coordinator, so the snapshot borrows it and uses the
+/// interior locks for both directions.
+pub struct QNetSnapshot<'a>(pub &'a QNet);
+
+impl crate::ckpt::Snapshot for QNetSnapshot<'_> {
+    fn kind(&self) -> &'static str {
+        "qnet"
+    }
+
+    fn save(&self, w: &mut crate::ckpt::ByteWriter) {
+        let q = self.0;
+        w.put_str(&q.spec.name);
+        w.put_usize(q.spec.param_count);
+        w.put_bool(q.train_key.contains("double"));
+        let st = q.train.lock().unwrap();
+        w.put_f32_slice(&st.theta);
+        w.put_f32_slice(&st.g);
+        w.put_f32_slice(&st.s);
+        drop(st);
+        w.put_f32_slice(&q.theta_minus.read().unwrap());
+        w.put_u64(q.train_steps.load(Ordering::SeqCst));
+        w.put_u64(q.target_syncs.load(Ordering::SeqCst));
+    }
+
+    fn load(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> Result<()> {
+        let q = self.0;
+        let name = r.str()?;
+        if name != q.spec.name {
+            bail!("checkpoint network is {name:?}, this run uses {:?}", q.spec.name);
+        }
+        let p = r.usize()?;
+        if p != q.spec.param_count {
+            bail!("checkpoint has {p} parameters, this network has {}", q.spec.param_count);
+        }
+        let double = r.bool()?;
+        if double != q.train_key.contains("double") {
+            bail!(
+                "checkpoint was trained with double-DQN = {double}, this run uses {}",
+                q.train_key.contains("double")
+            );
+        }
+        let theta = r.f32_vec()?;
+        let g = r.f32_vec()?;
+        let s = r.f32_vec()?;
+        let theta_minus = r.f32_vec()?;
+        let train_steps = r.u64()?;
+        let target_syncs = r.u64()?;
+        q.import_state(theta, g, s, theta_minus, train_steps, target_syncs)
+    }
 }
 
 fn qkey(config: &str, entry: &str) -> String {

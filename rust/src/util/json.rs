@@ -403,6 +403,95 @@ mod tests {
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
     }
 
+    /// Deep nesting round trip: the checkpoint manifest nests objects in
+    /// arrays in objects; write -> parse must be the identity at any depth.
+    #[test]
+    fn roundtrip_deeply_nested() {
+        let mut inner = Json::Obj(BTreeMap::new());
+        for depth in 0..24 {
+            let mut m = BTreeMap::new();
+            m.insert("d".to_string(), Json::Num(depth as f64));
+            m.insert("child".to_string(), inner);
+            m.insert(
+                "arr".to_string(),
+                Json::Arr(vec![Json::Null, Json::Bool(depth % 2 == 0), Json::Str(format!("level {depth}"))]),
+            );
+            inner = Json::Obj(m);
+        }
+        let text = inner.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), inner);
+        // And a second write is byte-stable (canonical key order).
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+
+    /// Escape round trip over every escape the writer emits plus \u forms
+    /// the parser must accept.
+    #[test]
+    fn roundtrip_escapes_exhaustive() {
+        let nasty = "quote:\" backslash:\\ newline:\n tab:\t cr:\r ctrl:\u{1} high:\u{7f} é漢🤖";
+        let v = Json::Obj(
+            [(nasty.to_string(), Json::Str(nasty.to_string()))].into_iter().collect(),
+        );
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "escaped keys and values survive");
+        // Parser-side \u escapes (the writer emits them only for control chars).
+        assert_eq!(Json::parse(r#""Aé""#).unwrap().as_str().unwrap(), "Aé");
+        assert_eq!(Json::parse(r#""\b\f\/""#).unwrap().as_str().unwrap(), "\u{8}\u{c}/");
+    }
+
+    /// Large integers: the checkpoint manifest stores step counters and
+    /// byte offsets; every integer up to 2^53 - 1 must round-trip exactly
+    /// (f64 holds them losslessly and the writer prints them as integers).
+    #[test]
+    fn roundtrip_large_integers() {
+        for n in [
+            0u64,
+            1,
+            4_294_967_296,            // 2^32
+            999_999_999_999_999,      // largest 15-digit int (< 1e15 writer cutoff)
+            9_007_199_254_740_991,    // 2^53 - 1, f64-exact
+        ] {
+            let v = Json::Num(n as f64);
+            let text = v.to_string();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.as_f64().unwrap() as u64, n, "{n} survived");
+            // Integers below the writer's 1e15 cutoff print without an
+            // exponent or fraction, so offsets stay grep-able.
+            if n < 1_000_000_000_000_000 {
+                assert_eq!(text, n.to_string());
+            }
+        }
+        // Negative and boundary floats still round trip as numbers.
+        for v in [-1.0f64, -2.5, 1e300, -1e-300, 0.1] {
+            let back = Json::parse(&Json::Num(v).to_string()).unwrap();
+            assert_eq!(back.as_f64().unwrap(), v);
+        }
+    }
+
+    /// Arrays of objects (the manifest's section table shape).
+    #[test]
+    fn roundtrip_section_table_shape() {
+        let table = Json::Arr(
+            (0..5)
+                .map(|i| {
+                    obj(vec![
+                        ("name", Json::Str(format!("section-{i}"))),
+                        ("offset", Json::Num((i * 1_000_003) as f64)),
+                        ("fnv1a", Json::Str(format!("{:016x}", 0xdead_beefu64 + i))),
+                    ])
+                })
+                .collect(),
+        );
+        let back = Json::parse(&table.to_string()).unwrap();
+        assert_eq!(back, table);
+        assert_eq!(back.as_arr().unwrap().len(), 5);
+        assert_eq!(
+            back.as_arr().unwrap()[3].at(&["offset"]).unwrap().as_usize().unwrap(),
+            3 * 1_000_003
+        );
+    }
+
     #[test]
     fn real_manifest_shape() {
         let src = r#"{"version":2,"configs":{"tiny":{"param_count":27082,

@@ -1,0 +1,400 @@
+//! Bit-exact checkpoint/resume acceptance tests (ISSUE 3 / DESIGN.md §10).
+//!
+//! The core claim: train 2N windows uninterrupted vs. train N → checkpoint
+//! → NEW coordinator (fresh machine, as a new process would build) →
+//! resume → train N, and the final machine state — parameters, RMSProp
+//! accumulators, target net, replay contents and push count, every RNG
+//! stream position, and the evaluation history — is bitwise identical.
+//! Verified through `Coordinator::state_digest()`, an FNV over exactly
+//! those bytes, for both driver families and learner_threads ∈ {1, 4}.
+
+use std::path::PathBuf;
+
+use tempo_dqn::config::{ExecMode, ExperimentConfig};
+use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::runtime::default_artifact_dir;
+
+fn base_cfg(mode: ExecMode, threads: usize, b: usize, learner_threads: usize, steps: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+    cfg.game = "seeker".into();
+    cfg.mode = mode;
+    cfg.threads = threads;
+    cfg.envs_per_thread = b;
+    cfg.learner_threads = learner_threads;
+    cfg.total_steps = steps;
+    cfg.prepopulate = 300;
+    cfg.replay_capacity = 8_000;
+    cfg.target_update_period = 64; // C: 4 windows at steps = 256
+    cfg.train_period = 4;
+    cfg.seed = 42;
+    cfg
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tempo-resume-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Uninterrupted run to `cfg.total_steps`; returns the machine digest.
+fn run_uninterrupted(cfg: &ExperimentConfig) -> u64 {
+    let mut coord = Coordinator::new(cfg.clone(), &default_artifact_dir()).unwrap();
+    coord.run().unwrap();
+    coord.state_digest().unwrap()
+}
+
+/// Interrupted run: train to `cut` with checkpointing (a shortened
+/// total_steps plays the role of the kill), then resume in a brand-new
+/// coordinator — a fresh machine exactly like a new process — extend the
+/// budget back to the full total, and run to completion.
+///
+/// NOTE: this kill-by-shortened-budget trick requires `cut` to be
+/// block-aligned (B divides it) — a run whose *total* lands mid-block
+/// clamps the final block, which a mid-run segment never does. The
+/// C-not-multiple-of-B case uses run_for segmentation instead (below).
+fn run_interrupted(cfg: &ExperimentConfig, cut: u64, tag: &str) -> u64 {
+    let dir = tmpdir(tag);
+    let mut half = cfg.clone();
+    half.total_steps = cut;
+    half.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    half.ckpt_period = cut; // one checkpoint, at the cut
+    let mut first = Coordinator::new(half.clone(), &default_artifact_dir()).unwrap();
+    first.run().unwrap();
+    drop(first); // the process "dies" here
+
+    let mut full = cfg.clone();
+    full.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    full.ckpt_period = cfg.total_steps; // no further mid-run checkpoints
+    let mut second = Coordinator::new(full, &default_artifact_dir()).unwrap();
+    let resumed_at = second.resume_from(&dir).unwrap();
+    assert_eq!(resumed_at, cut, "checkpoint must sit exactly at the cut");
+    second.run().unwrap();
+    let digest = second.state_digest().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    digest
+}
+
+fn assert_bit_exact(cfg: ExperimentConfig, cut: u64, tag: &str) {
+    let uninterrupted = run_uninterrupted(&cfg);
+    let resumed = run_interrupted(&cfg, cut, tag);
+    assert_eq!(
+        uninterrupted, resumed,
+        "{tag}: resumed trajectory diverged from the uninterrupted run"
+    );
+    // The digest itself must be reproducible (sanity: not hashing clocks).
+    assert_eq!(uninterrupted, run_uninterrupted(&cfg), "{tag}: baseline not reproducible");
+}
+
+// ---- the acceptance matrix: both driver families × learner widths --------
+
+#[test]
+fn both_mode_resume_is_bit_exact_serial_learner() {
+    // Synchronized driver, Algorithm 1, W×B = 4 streams, 2N = 4 windows.
+    assert_bit_exact(base_cfg(ExecMode::Both, 2, 2, 1, 256), 128, "both-lt1");
+}
+
+#[test]
+fn both_mode_resume_is_bit_exact_parallel_learner_with_prefetch() {
+    // learner_threads = 4 shards gradients; prefetch pipeline double-buffers
+    // batch assembly. Both are bit-exact knobs, so the digest must match the
+    // serial uninterrupted machine too — pin resumed == uninterrupted here.
+    let cfg = base_cfg(ExecMode::Both, 2, 2, 4, 256);
+    assert_eq!(cfg.prefetch_batches, 1, "prefetch on by default");
+    assert_bit_exact(cfg, 128, "both-lt4");
+}
+
+#[test]
+fn concurrent_async_resume_is_bit_exact_serial_learner() {
+    // Async driver needs W = 1 for a deterministic trajectory (ticket
+    // claiming is scheduling-dependent at W > 1); B = 2 exercises block
+    // quantization at the window barrier.
+    assert_bit_exact(base_cfg(ExecMode::Concurrent, 1, 2, 1, 256), 128, "conc-lt1");
+}
+
+#[test]
+fn concurrent_async_resume_is_bit_exact_parallel_learner() {
+    assert_bit_exact(base_cfg(ExecMode::Concurrent, 1, 2, 4, 256), 128, "conc-lt4");
+}
+
+#[test]
+fn concurrent_async_resume_is_bit_exact_when_c_not_multiple_of_b() {
+    // C = 64, B = 3: window boundaries are not block-aligned, so the
+    // checkpoint lands at the *block-rounded* window coverage (129, not
+    // 128) and the straddling block must have run WHOLE — truncating it at
+    // the segment bound would step a prefix of the env streams and diverge.
+    let cfg = base_cfg(ExecMode::Concurrent, 1, 3, 1, 192);
+    let uninterrupted = run_uninterrupted(&cfg);
+
+    let dir = tmpdir("conc-b3");
+    let mut with_ckpt = cfg.clone();
+    with_ckpt.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    with_ckpt.ckpt_period = 128;
+    let mut first = Coordinator::new(with_ckpt.clone(), &default_artifact_dir()).unwrap();
+    first.run_for(Some(128)).unwrap(); // quantizes to the 128 window...
+    assert_eq!(first.completed_steps(), 129, "...whose coverage block-rounds to 129");
+    drop(first); // the process "dies" here
+
+    let mut second = Coordinator::new(with_ckpt, &default_artifact_dir()).unwrap();
+    assert_eq!(second.resume_from(&dir).unwrap(), 129);
+    second.run().unwrap();
+    assert_eq!(
+        second.state_digest().unwrap(),
+        uninterrupted,
+        "C%B!=0: resumed trajectory diverged from the uninterrupted run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn standard_mode_resume_is_bit_exact() {
+    // Original DQN control flow, single thread (the deterministic config).
+    assert_bit_exact(base_cfg(ExecMode::Standard, 1, 1, 1, 128), 64, "std");
+}
+
+#[test]
+fn synchronized_mode_resume_is_bit_exact() {
+    // Sync driver without Concurrent Training: every round end is a quiesce
+    // point, so the cut need not be window-aligned — only round-aligned
+    // (W×B = 2 divides 60).
+    assert_bit_exact(base_cfg(ExecMode::Synchronized, 2, 1, 1, 128), 60, "sync-std");
+}
+
+#[test]
+fn eval_points_survive_resume_bitwise() {
+    let mut cfg = base_cfg(ExecMode::Both, 2, 1, 1, 256);
+    cfg.eval_period = 64; // one eval per window barrier
+    cfg.eval_episodes = 2;
+
+    let mut coord = Coordinator::new(cfg.clone(), &default_artifact_dir()).unwrap();
+    let res = coord.run().unwrap();
+    assert!(res.evals.len() >= 3, "expected evals at 64/128/192/256, got {}", res.evals.len());
+    let baseline = coord.state_digest().unwrap();
+    let baseline_evals: Vec<(u64, u64, u64)> = res
+        .evals
+        .iter()
+        .map(|e| (e.step, e.mean_return.to_bits(), e.std_return.to_bits()))
+        .collect();
+
+    let resumed = run_interrupted(&cfg, 128, "evals");
+    assert_eq!(baseline, resumed, "digest (which covers the eval history) must match");
+
+    // And explicitly: the eval points of a fresh uninterrupted run are
+    // bitwise stable (guards against nondeterministic eval scheduling).
+    let mut again = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    let res2 = again.run().unwrap();
+    let evals2: Vec<(u64, u64, u64)> = res2
+        .evals
+        .iter()
+        .map(|e| (e.step, e.mean_return.to_bits(), e.std_return.to_bits()))
+        .collect();
+    assert_eq!(baseline_evals, evals2);
+}
+
+#[test]
+fn periodic_checkpoints_accumulate_and_latest_wins() {
+    let dir = tmpdir("periodic");
+    let mut cfg = base_cfg(ExecMode::Both, 2, 1, 1, 256);
+    cfg.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.ckpt_period = 64;
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    coord.run().unwrap();
+    let steps: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.unwrap().file_name().into_string().ok())
+        .filter(|n| n.starts_with("step_"))
+        .collect();
+    assert!(steps.len() >= 4, "one checkpoint per 64-step window: {steps:?}");
+    let latest = tempo_dqn::ckpt::latest_checkpoint(&dir).unwrap().unwrap();
+    assert!(latest.ends_with("step_000000000256"), "{latest:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- failure modes: corrupt / truncated / mismatched checkpoints ---------
+
+fn write_one_checkpoint(tag: &str) -> (PathBuf, ExperimentConfig) {
+    let dir = tmpdir(tag);
+    let mut cfg = base_cfg(ExecMode::Both, 2, 1, 1, 64);
+    cfg.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.ckpt_period = 64;
+    let mut coord = Coordinator::new(cfg.clone(), &default_artifact_dir()).unwrap();
+    coord.run().unwrap();
+    (dir, cfg)
+}
+
+#[test]
+fn corrupt_checkpoint_fails_with_clear_error_not_corrupt_state() {
+    let (dir, cfg) = write_one_checkpoint("corrupt");
+    let ckpt = tempo_dqn::ckpt::latest_checkpoint(&dir).unwrap().unwrap();
+    let state = ckpt.join("state.bin");
+    let mut bytes = std::fs::read(&state).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&state, &bytes).unwrap();
+
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_checkpoint_fails_with_clear_error() {
+    let (dir, cfg) = write_one_checkpoint("truncated");
+    let ckpt = tempo_dqn::ckpt::latest_checkpoint(&dir).unwrap().unwrap();
+    let state = ckpt.join("state.bin");
+    let bytes = std::fs::read(&state).unwrap();
+    std::fs::write(&state, &bytes[..bytes.len() / 3]).unwrap();
+
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    let err = format!("{:#}", coord.resume_from(&dir).unwrap_err());
+    assert!(err.contains("truncated"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mismatched_config_refuses_to_resume() {
+    let (dir, cfg) = write_one_checkpoint("mismatch");
+    // A different training seed is a different trajectory — resuming would
+    // silently splice two runs together. It must be refused, with the
+    // offending field named.
+    let mut other = cfg.clone();
+    other.seed = 43;
+    let mut coord = Coordinator::new(other, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("different configuration"), "unexpected error: {err}");
+    assert!(err.contains("seed"), "must name the mismatched field: {err}");
+
+    // A different W×B layout likewise.
+    let mut other = cfg.clone();
+    other.envs_per_thread = 2;
+    let mut coord = Coordinator::new(other, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("envs_per_thread"), "unexpected error: {err}");
+
+    // Extending total_steps is explicitly allowed (that is how a resumed
+    // run continues past the original budget).
+    let mut extended = cfg.clone();
+    extended.total_steps = 128;
+    let mut coord = Coordinator::new(extended, &default_artifact_dir()).unwrap();
+    assert_eq!(coord.resume_from(&dir).unwrap(), 64);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_without_checkpoint_is_a_clear_error() {
+    let dir = tmpdir("empty");
+    let cfg = base_cfg(ExecMode::Both, 2, 1, 1, 64);
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("no checkpoint found"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- run_for segmentation (the campaign runner's slicing primitive) ------
+
+#[test]
+fn run_for_slices_match_one_shot_run() {
+    // Three run_for slices on one live machine == one run(): segmentation
+    // at quiesce points is trajectory-neutral even without checkpoints.
+    let cfg = base_cfg(ExecMode::Both, 2, 1, 1, 256);
+    let one_shot = run_uninterrupted(&cfg);
+
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    coord.run_for(Some(64)).unwrap();
+    assert_eq!(coord.completed_steps(), 64);
+    coord.run_for(Some(100)).unwrap(); // quantizes up to the 192 boundary
+    assert_eq!(coord.completed_steps(), 192, "bounds align to C");
+    coord.run_for(None).unwrap();
+    assert_eq!(coord.completed_steps(), 256);
+    assert_eq!(coord.state_digest().unwrap(), one_shot);
+}
+
+// ---- campaign runner ------------------------------------------------------
+
+#[test]
+fn round_robin_campaign_interleaves_resumes_and_skips_done_legs() {
+    use tempo_dqn::campaign::Campaign;
+    use tempo_dqn::config::toml::TomlDoc;
+
+    let root = tmpdir("campaign");
+    let toml = format!(
+        "preset = \"smoke\"\n\
+         [campaign]\nname = \"mini\"\nckpt_dir = \"{}\"\norder = \"round_robin\"\nslice = 64\n\
+         [run]\ngame = \"seeker\"\nmode = \"both\"\nthreads = 2\n\
+         [dqn]\ntotal_steps = 128\nprepopulate = 300\nreplay_capacity = 8000\n\
+         target_update_period = 64\ntrain_period = 4\n\
+         [leg.a_seeker]\nseed = 1\n\
+         [leg.b_pong]\ngame = \"pong\"\nseed = 2\n",
+        root.display()
+    );
+    let campaign = Campaign::from_toml(&TomlDoc::parse(&toml).unwrap()).unwrap();
+    assert_eq!(campaign.legs.len(), 2);
+
+    let mut log = Vec::new();
+    let reports = campaign.run(&default_artifact_dir(), |l| log.push(l.to_string())).unwrap();
+    assert_eq!(reports.len(), 2);
+    for (r, leg) in reports.iter().zip(["a_seeker", "b_pong"]) {
+        assert_eq!(r.id, leg);
+        assert_eq!(r.steps, 128, "leg {leg} ran to completion");
+    }
+    // Round-robin with slice 64 < total 128 means every leg was resumed
+    // from its own checkpoint at least once.
+    assert!(
+        log.iter().any(|l| l.contains("resumed a_seeker")),
+        "expected a mid-campaign resume, log: {log:?}"
+    );
+    assert!(root.join("a_seeker/result.json").exists());
+    assert!(root.join("b_pong/result.json").exists());
+
+    // A second invocation skips both legs and reproduces the reports.
+    let mut log2 = Vec::new();
+    let again = campaign.run(&default_artifact_dir(), |l| log2.push(l.to_string())).unwrap();
+    assert!(log2.iter().all(|l| l.contains("skipping")), "{log2:?}");
+    assert_eq!(again[0].state_digest, reports[0].state_digest);
+    assert_eq!(again[1].state_digest, reports[1].state_digest);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---- process boundary: the real binary, killed and resumed ---------------
+
+#[test]
+fn cli_resume_crosses_process_boundary_bit_exactly() {
+    let dir = tmpdir("cli");
+    let bin = env!("CARGO_BIN_EXE_tempo-dqn");
+    let common = [
+        "train", "--preset", "smoke", "--game", "seeker", "--threads", "2",
+        "--seed", "9", "--target-period", "64", "--prepopulate", "300",
+        "--replay-capacity", "8000", "--mode", "both",
+    ];
+    let digest_of = |extra: &[&str]| -> String {
+        let out = std::process::Command::new(bin)
+            .args(common)
+            .args(extra)
+            .output()
+            .expect("spawn tempo-dqn");
+        assert!(
+            out.status.success(),
+            "tempo-dqn failed: {}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+        stdout
+            .lines()
+            .find_map(|l| l.strip_prefix("state digest: ").map(str::to_string))
+            .unwrap_or_else(|| panic!("no state digest in output:\n{stdout}"))
+    };
+
+    let ckpt = dir.to_string_lossy().into_owned();
+    // Process 1: first half, checkpoint at its end.
+    digest_of(&["--steps", "128", "--ckpt-dir", &ckpt, "--ckpt-period", "128"]);
+    // Process 2: resume and finish.
+    let resumed = digest_of(&[
+        "--steps", "256", "--ckpt-dir", &ckpt, "--ckpt-period", "256", "--resume", &ckpt,
+    ]);
+    // Process 3: the uninterrupted reference.
+    let reference = digest_of(&["--steps", "256"]);
+    assert_eq!(resumed, reference, "cross-process resume diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
