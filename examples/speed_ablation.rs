@@ -67,6 +67,7 @@ fn measure_costs(net: &str) -> anyhow::Result<CostModel> {
         actions: (0..b as i32).map(|i| i % 3).collect(),
         rewards: vec![0.5; b],
         dones: vec![0.0; b],
+        ..TrainBatch::default()
     };
     qnet.train_step(&batch, 2.5e-4)?; // warm
     let t0 = Instant::now();

@@ -1,0 +1,127 @@
+//! Uniform-vs-prioritized replay sampling latency, swept over replay fill
+//! (ISSUE 5). Measures the two costs the hwsim cost model splits:
+//!
+//! * `sample` rows — one 32-minibatch draw + assembly per strategy
+//!   (uniform: O(B) RNG draws; proportional: O(B log N) tree descents +
+//!   IS-weight math). Feeds `CostModel::sample_ms`.
+//! * `update` rows — one batch of TD-priority updates through the
+//!   sum-tree (the barrier-side cost prefetch cannot hide). Feeds
+//!   `CostModel::tree_ms`.
+//!
+//! Small frames isolate index/tree cost from frame memcpy (the memcpy
+//! side is covered by `benches/replay.rs` at full frame size).
+//!
+//! Run: `cargo bench --bench replay_sample`
+//! CI smoke: `cargo bench --bench replay_sample -- --test`
+
+use tempo_dqn::benchkit::Bench;
+use tempo_dqn::config::ReplayStrategy;
+use tempo_dqn::replay::strategy::StrategyPlan;
+use tempo_dqn::replay::{build_strategy, ReplayMemory, SamplingStrategy};
+use tempo_dqn::runtime::TrainBatch;
+use tempo_dqn::util::rng::Rng;
+
+const FRAME: usize = 64; // tiny frames: measure the index, not memcpy
+const STACK: usize = 4;
+const MINIBATCH: usize = 32;
+
+fn plan(kind: ReplayStrategy) -> StrategyPlan {
+    StrategyPlan {
+        kind,
+        per_alpha: 0.6,
+        per_beta0: 0.4,
+        per_beta_anneal: 1_000_000,
+        n_step: 1,
+        gamma: 0.99,
+    }
+}
+
+fn filled(capacity: usize, prioritized: bool) -> ReplayMemory {
+    let mut replay = ReplayMemory::new(capacity, 8, FRAME, STACK, 1).unwrap();
+    if prioritized {
+        replay.enable_priorities();
+    }
+    let frame = vec![127u8; FRAME];
+    for i in 0..capacity as u64 {
+        replay.push((i % 8) as usize, &frame, 1, 0.5, i % 97 == 0, i % 97 == 1 || i < 8);
+    }
+    replay
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    if smoke {
+        std::env::set_var("TEMPO_BENCH_MS", "60");
+    }
+    let fills: &[usize] = if smoke { &[4_096] } else { &[4_096, 65_536, 524_288] };
+
+    let mut bench = Bench::new();
+    let mut rng = Rng::new(7);
+    for &fill in fills {
+        let mut batch = TrainBatch::default();
+
+        // Uniform: one fill_batch per train step (record/apply are no-ops,
+        // so this IS the full per-step replay cost).
+        let replay_u = filled(fill, false);
+        let mut uniform = build_strategy(&plan(ReplayStrategy::Uniform), Rng::new(9).state(), 0);
+        let u_ns = bench
+            .run(&format!("replay/uniform/sample_b{MINIBATCH}/fill_{fill}"), || {
+                uniform.fill_batch(&replay_u, MINIBATCH, &mut batch).unwrap();
+            })
+            .mean_ns;
+
+        // Proportional, full per-train-step cycle: tree-descent draws +
+        // IS weights + assembly, then the batch's priority updates.
+        // Synthetic TD errors are pre-generated OUTSIDE the timed loop —
+        // the real trainer gets them from the engine for free, so charging
+        // RNG + allocation here would inflate the tree_ms calibration.
+        let mut replay_p = filled(fill, true);
+        let mut per = build_strategy(&plan(ReplayStrategy::Proportional), Rng::new(9).state(), 0);
+        let td_pool: Vec<Vec<f32>> = (0..64)
+            .map(|_| (0..MINIBATCH).map(|_| rng.f32() * 4.0 - 2.0).collect())
+            .collect();
+        let mut tick = 0usize;
+        let p_cycle_ns = bench
+            .run(&format!("replay/proportional/sample_update_b{MINIBATCH}/fill_{fill}"), || {
+                per.fill_batch(&replay_p, MINIBATCH, &mut batch).unwrap();
+                per.record_td(&td_pool[tick % td_pool.len()]);
+                tick += 1;
+                per.apply_updates(&mut replay_p);
+            })
+            .mean_ns;
+
+        // Update half in isolation: 32 guarded sum-tree updates against
+        // live leaves (the window-barrier cost prefetch cannot hide).
+        let leaves: Vec<usize> = {
+            let pi = replay_p.priorities().unwrap();
+            (0..replay_p.capacity()).filter(|&l| pi.value(l) > 0.0).collect()
+        };
+        let priorities: Vec<f64> = (0..977).map(|_| (rng.f64() + 0.01) * 2.0).collect();
+        let mut cursor = 0usize;
+        let p_update_ns = bench
+            .run(&format!("replay/proportional/update_b{MINIBATCH}/fill_{fill}"), || {
+                let pi = replay_p.priorities_mut().unwrap();
+                for _ in 0..MINIBATCH {
+                    let leaf = leaves[cursor % leaves.len()];
+                    let gen = pi.gen(leaf);
+                    pi.update(leaf, gen, priorities[cursor % priorities.len()]);
+                    cursor += 1;
+                }
+            })
+            .mean_ns;
+
+        println!(
+            "fill {fill}: uniform {:.1} us | proportional sample+update {:.1} us ({:.2}x) \
+             -> tree_ms ~ {:.4} ms (update half), prioritized sample_ms ~ {:.4} ms",
+            u_ns / 1e3,
+            p_cycle_ns / 1e3,
+            p_cycle_ns / u_ns.max(1.0),
+            p_update_ns / 1e6,
+            (p_cycle_ns - p_update_ns).max(0.0) / 1e6,
+        );
+    }
+    println!(
+        "\ntree_ms = the update row (barrier-side, never hidden by prefetch); the rest of \
+         the proportional cycle is assembly cost -> CostModel::sample_ms (rust/DESIGN.md §11)"
+    );
+}

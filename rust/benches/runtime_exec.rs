@@ -36,6 +36,7 @@ fn main() {
             actions: (0..b as i32).map(|i| i % 3).collect(),
             rewards: vec![0.5; b],
             dones: vec![0.0; b],
+            ..TrainBatch::default()
         };
         bench.run(&format!("{net}/train_b32"), || qnet.train_step(&batch, 2.5e-4).unwrap());
         bench.run(&format!("{net}/sync_target"), || qnet.sync_target());

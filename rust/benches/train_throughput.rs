@@ -30,6 +30,7 @@ fn synthetic_batch(qnet: &QNet, seed: u64) -> TrainBatch {
         actions: (0..b).map(|_| rng.below(qnet.spec().actions as u32) as i32).collect(),
         rewards: (0..b).map(|_| rng.f32() - 0.5).collect(),
         dones: (0..b).map(|i| if i % 6 == 0 { 1.0 } else { 0.0 }).collect(),
+        ..TrainBatch::default()
     }
 }
 

@@ -5,5 +5,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{EpsSchedule, ExecMode, ExperimentConfig};
+pub use schema::{EpsSchedule, ExecMode, ExperimentConfig, ReplayStrategy};
 pub use toml::TomlDoc;

@@ -58,6 +58,35 @@ impl ExecMode {
     ];
 }
 
+/// Which replay sampling strategy feeds the trainer (rust/DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplayStrategy {
+    /// Uniform over all stored transitions — the paper's (and seed
+    /// machine's) sampler; with `n_step = 1` bit-identical to it.
+    Uniform,
+    /// Proportional prioritized experience replay (Schaul et al. 2015)
+    /// over a deterministic sum-tree, TD-error priorities updated at
+    /// window barriers, IS weights in the loss.
+    Proportional,
+}
+
+impl ReplayStrategy {
+    pub fn parse(s: &str) -> Result<ReplayStrategy> {
+        Ok(match s {
+            "uniform" => ReplayStrategy::Uniform,
+            "proportional" | "prioritized" | "per" => ReplayStrategy::Proportional,
+            other => bail!("unknown replay strategy {other:?} (uniform|proportional)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplayStrategy::Uniform => "uniform",
+            ReplayStrategy::Proportional => "proportional",
+        }
+    }
+}
+
 /// Linear epsilon-greedy schedule (Mnih et al. 2015: 1.0 -> 0.1 over 1M
 /// steps, then fixed).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -126,6 +155,21 @@ pub struct ExperimentConfig {
     pub lr: f64,
     pub eps: EpsSchedule,
 
+    // Replay sampling strategy (rust/DESIGN.md §11)
+    /// Trainer-side draw distribution. `uniform` + `n_step = 1` is the
+    /// seed machine bit-for-bit; `proportional` is deterministic PER.
+    pub replay_strategy: ReplayStrategy,
+    /// PER priority exponent α: p = (|δ| + ε)^α (0 = uniform mass).
+    pub per_alpha: f64,
+    /// PER initial importance-sampling exponent β₀.
+    pub per_beta0: f64,
+    /// Trainer minibatches over which β anneals linearly from β₀ to 1
+    /// (paper scale: total_steps / F = 12.5M updates).
+    pub per_beta_anneal: u64,
+    /// Multi-step return horizon n (1 = classic one-step targets,
+    /// reproducing the seed trajectory exactly under `uniform`).
+    pub n_step: usize,
+
     // Evaluation
     pub eval_period: u64,
     pub eval_episodes: usize,
@@ -165,6 +209,11 @@ impl Default for ExperimentConfig {
             prepopulate: 50_000,
             lr: 2.5e-4,
             eps: EpsSchedule { start: 1.0, end: 0.1, decay_steps: 1_000_000 },
+            replay_strategy: ReplayStrategy::Uniform,
+            per_alpha: 0.6,
+            per_beta0: 0.4,
+            per_beta_anneal: 12_500_000,
+            n_step: 1,
             eval_period: 250_000,
             eval_episodes: 30,
             eval_eps: 0.05,
@@ -229,6 +278,11 @@ impl ExperimentConfig {
             end: doc.f64_or("eps.end", c.eps.end)?,
             decay_steps: doc.usize_or("eps.decay_steps", c.eps.decay_steps as usize)? as u64,
         };
+        c.replay_strategy = ReplayStrategy::parse(&doc.str_or("replay.strategy", c.replay_strategy.name())?)?;
+        c.per_alpha = doc.f64_or("replay.per_alpha", c.per_alpha)?;
+        c.per_beta0 = doc.f64_or("replay.per_beta0", c.per_beta0)?;
+        c.per_beta_anneal = doc.usize_or("replay.per_beta_anneal", c.per_beta_anneal as usize)? as u64;
+        c.n_step = doc.usize_or("replay.n_step", c.n_step)?;
         c.eval_period = doc.usize_or("eval.period", c.eval_period as usize)? as u64;
         c.eval_episodes = doc.usize_or("eval.episodes", c.eval_episodes)?;
         c.eval_eps = doc.f64_or("eval.eps", c.eval_eps)?;
@@ -266,6 +320,13 @@ impl ExperimentConfig {
         self.train_period = args.u64_or("train-period", self.train_period)?;
         self.prepopulate = args.usize_or("prepopulate", self.prepopulate)?;
         self.lr = args.f64_or("lr", self.lr)?;
+        if let Some(v) = args.str_opt("replay-strategy") {
+            self.replay_strategy = ReplayStrategy::parse(v)?;
+        }
+        self.per_alpha = args.f64_or("per-alpha", self.per_alpha)?;
+        self.per_beta0 = args.f64_or("per-beta0", self.per_beta0)?;
+        self.per_beta_anneal = args.u64_or("per-beta-anneal", self.per_beta_anneal)?;
+        self.n_step = args.usize_or("n-step", self.n_step)?;
         self.eval_period = args.u64_or("eval-period", self.eval_period)?;
         self.eval_seed = args.u64_or("eval-seed", self.eval_seed)?;
         if let Some(dir) = args.str_opt("ckpt-dir") {
@@ -324,6 +385,22 @@ impl ExperimentConfig {
         }
         if self.minibatch == 0 {
             bail!("minibatch must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.per_alpha) {
+            bail!("per_alpha must be in [0,1] (0 = uniform mass, 1 = fully proportional)");
+        }
+        if !(self.per_beta0 > 0.0 && self.per_beta0 <= 1.0) {
+            bail!("per_beta0 must be in (0,1]");
+        }
+        if self.per_beta_anneal == 0 {
+            bail!("per_beta_anneal must be >= 1 trainer minibatch");
+        }
+        if self.n_step == 0 || self.n_step > 64 {
+            bail!(
+                "n_step = {} is out of range 1..=64 (64-step windows already exceed any \
+                 useful credit horizon at γ = {})",
+                self.n_step, self.gamma
+            );
         }
         if self.ckpt_dir.is_some() && self.ckpt_period == 0 {
             bail!("ckpt_period must be >= 1 step when checkpointing is enabled");
@@ -479,6 +556,58 @@ mod tests {
         assert!(c.validate().is_err(), "period 0 with a ckpt dir must be rejected");
         c.ckpt_dir = None;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn replay_strategy_knobs_default_parse_and_validate() {
+        let c = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(c.replay_strategy, ReplayStrategy::Uniform, "seed machine by default");
+        assert_eq!(c.n_step, 1, "one-step targets by default");
+        assert_eq!(c.per_alpha, 0.6);
+        assert_eq!(c.per_beta0, 0.4);
+        assert_eq!(c.per_beta_anneal, 12_500_000, "total_steps / F at paper scale");
+
+        let doc = TomlDoc::parse(
+            "preset = \"smoke\"\n[replay]\nstrategy = \"proportional\"\nper_alpha = 0.5\n\
+             per_beta0 = 0.3\nper_beta_anneal = 1000\nn_step = 3\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.replay_strategy, ReplayStrategy::Proportional);
+        assert_eq!(c.per_alpha, 0.5);
+        assert_eq!(c.per_beta0, 0.3);
+        assert_eq!(c.per_beta_anneal, 1000);
+        assert_eq!(c.n_step, 3);
+
+        let args = Args::parse(
+            ["--replay-strategy", "uniform", "--n-step", "5", "--per-alpha", "1.0"].map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.replay_strategy, ReplayStrategy::Uniform);
+        assert_eq!(c.n_step, 5);
+        assert_eq!(c.per_alpha, 1.0);
+
+        let mut bad = c.clone();
+        bad.per_alpha = 1.5;
+        assert!(bad.validate().is_err(), "alpha > 1 rejected");
+        bad = c.clone();
+        bad.per_beta0 = 0.0;
+        assert!(bad.validate().is_err(), "beta0 = 0 rejected");
+        bad = c.clone();
+        bad.per_beta_anneal = 0;
+        assert!(bad.validate().is_err(), "anneal 0 rejected");
+        bad = c.clone();
+        bad.n_step = 0;
+        assert!(bad.validate().is_err(), "n_step 0 rejected");
+        bad.n_step = 100_000;
+        assert!(bad.validate().is_err(), "absurd n_step rejected");
+
+        assert!(ReplayStrategy::parse("per").is_ok(), "alias accepted");
+        assert!(ReplayStrategy::parse("bogus").is_err());
+        for s in [ReplayStrategy::Uniform, ReplayStrategy::Proportional] {
+            assert_eq!(ReplayStrategy::parse(s.name()).unwrap(), s);
+        }
     }
 
     #[test]

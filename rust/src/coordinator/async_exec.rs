@@ -40,10 +40,12 @@ use std::sync::atomic::Ordering;
 use anyhow::{anyhow, Result};
 
 use crate::metrics::Phase;
-use crate::replay::{BatchSource, IndexSampler, StagingSet, TrainerSource};
+use crate::replay::{build_strategy, BatchSource, StagingSet, TrainerSource};
 use crate::runtime::{Policy, TrainBatch};
 
-use super::shared::{SamplerCtx, SegmentState, Shared, TrainInterlock, WindowCtrl, WindowGate};
+use super::shared::{
+    strategy_plan, SamplerCtx, SegmentState, Shared, TrainInterlock, WindowCtrl, WindowGate,
+};
 
 /// Run one async segment. `concurrent` selects the variant. `on_progress`
 /// is invoked from the main thread with the completed-step count — at
@@ -73,11 +75,16 @@ pub fn run_async(
 
     // Batch source for the training path: prefetch pipeline for the
     // windowed trainer (concurrent mode) when enabled, inline sampling
-    // otherwise (TrainerSource owns the eligibility rule). The draw stream
-    // resumes at the segment's saved position.
-    let source = TrainerSource::with_sampler(
+    // otherwise (TrainerSource owns the eligibility rule). The configured
+    // sampling strategy resumes at the segment's saved draw position and
+    // β-anneal clock.
+    let source = TrainerSource::with_strategy(
         shared.replay,
-        IndexSampler::from_rng_state(seg.draw_rng),
+        build_strategy(
+            &strategy_plan(shared.cfg, shared.qnet.spec().gamma),
+            seg.draw_rng,
+            shared.trains_done.load(Ordering::SeqCst),
+        ),
         shared.cfg.minibatch,
         shared.cfg.prefetch_batches,
         concurrent,
@@ -203,8 +210,12 @@ pub fn run_async(
                     }
                     std::thread::sleep(std::time::Duration::from_micros(200));
                 }
-                // Synchronization point: flush staging, update target net.
+                // Synchronization point: flush staging, update target net,
+                // then apply the window's queued TD-error priority updates
+                // (generation-guarded against slots the flush overwrote;
+                // rust/DESIGN.md §11) before the next window's grant.
                 shared.sync_point(&staging);
+                source.barrier_update();
                 seg.windows_flushed += 1;
                 // Quiesce point: trainer idle, theta frozen, staging empty —
                 // the only place evaluation (and checkpointing, one level

@@ -36,7 +36,7 @@ use crate::agent::EpsGreedy;
 use crate::ckpt::{
     latest_checkpoint, ByteWriter, CheckpointReader, CheckpointWriter, Snapshot,
 };
-use crate::config::{ExecMode, ExperimentConfig};
+use crate::config::{ExecMode, ExperimentConfig, ReplayStrategy};
 use crate::env::{make_env, NET_FRAME};
 use crate::eval::{EvalPoint, Evaluator};
 use crate::metrics::{GanttTrace, PhaseTimers};
@@ -44,7 +44,10 @@ use crate::replay::{IndexSampler, ReplayMemory};
 use crate::runtime::{BusSnapshot, Device, Manifest, QNet, QNetSnapshot};
 use crate::util::json::{obj, Json};
 
-pub use shared::{ResumePoint, SamplerCtx, SegmentState, Shared, TrainInterlock, WindowCtrl, WindowGate};
+pub use shared::{
+    strategy_plan, ResumePoint, SamplerCtx, SegmentState, Shared, TrainInterlock, WindowCtrl,
+    WindowGate,
+};
 
 /// Result of one training run.
 #[derive(Debug, Default)]
@@ -300,13 +303,20 @@ impl Coordinator {
     /// replay contents are about to be overwritten by a checkpoint).
     fn build_machine(&self, prepopulate: bool) -> Result<Machine> {
         let cfg = &self.cfg;
-        let replay = RwLock::new(ReplayMemory::new(
+        let mut memory = ReplayMemory::new(
             cfg.replay_capacity,
             cfg.streams(),
             NET_FRAME,
             crate::env::STACK,
             cfg.seed,
-        )?);
+        )?;
+        if cfg.replay_strategy == ReplayStrategy::Proportional {
+            // Before any push, so prepopulated transitions get their
+            // max-priority seeds through the same per-push path a live
+            // run uses.
+            memory.enable_priorities();
+        }
+        let replay = RwLock::new(memory);
         if prepopulate {
             self.prepopulate(&replay)?;
         }
@@ -525,6 +535,11 @@ impl Coordinator {
             ("eval_episodes", Json::Num(c.eval_episodes as f64)),
             ("eval_eps", Json::Str(format!("{:016x}", c.eval_eps.to_bits()))),
             ("eval_seed", Json::Str(format!("{:016x}", c.eval_seed))),
+            ("replay_strategy", Json::Str(c.replay_strategy.name().to_string())),
+            ("per_alpha", Json::Str(format!("{:016x}", c.per_alpha.to_bits()))),
+            ("per_beta0", Json::Str(format!("{:016x}", c.per_beta0.to_bits()))),
+            ("per_beta_anneal", Json::Num(c.per_beta_anneal as f64)),
+            ("n_step", Json::Num(c.n_step as f64)),
         ])
     }
 
@@ -536,6 +551,20 @@ impl Coordinator {
         let (Json::Obj(want), Json::Obj(saved)) = (&want, saved) else {
             bail!("checkpoint manifest: malformed config fingerprint");
         };
+        // Checkpoints written before the replay-strategy layer (§11) lack
+        // its fingerprint keys; they were produced by the uniform/n=1
+        // machine, so resuming them is bit-exact exactly when this run
+        // uses those defaults — accept that case instead of stranding
+        // every pre-upgrade checkpoint. (Encodings mirror
+        // `config_fingerprint`.)
+        let dflt = ExperimentConfig::default();
+        let legacy_defaults = [
+            ("replay_strategy", Json::Str(dflt.replay_strategy.name().to_string())),
+            ("per_alpha", Json::Str(format!("{:016x}", dflt.per_alpha.to_bits()))),
+            ("per_beta0", Json::Str(format!("{:016x}", dflt.per_beta0.to_bits()))),
+            ("per_beta_anneal", Json::Num(dflt.per_beta_anneal as f64)),
+            ("n_step", Json::Num(dflt.n_step as f64)),
+        ];
         let mut mismatches = Vec::new();
         for (key, want_v) in want {
             match saved.get(key) {
@@ -545,7 +574,13 @@ impl Coordinator {
                     saved_v.to_string(),
                     want_v.to_string()
                 )),
-                None => mismatches.push(format!("{key}: missing from checkpoint")),
+                None => {
+                    let legacy_ok =
+                        legacy_defaults.iter().any(|(k, d)| k == key && want_v == d);
+                    if !legacy_ok {
+                        mismatches.push(format!("{key}: missing from checkpoint"));
+                    }
+                }
             }
         }
         if !mismatches.is_empty() {
@@ -587,6 +622,22 @@ impl Coordinator {
         m.save_progress(&mut w);
         wtr.add_raw("progress", 1, w.into_bytes())?;
 
+        if self.cfg.replay_strategy == ReplayStrategy::Proportional {
+            // The sum-tree / β-anneal section (rust/DESIGN.md §11): the
+            // PER hyperparameters (redundant with the config fingerprint,
+            // cross-checked on restore) plus every stored transition's
+            // latent priority and generation in logical order. β itself
+            // needs no extra state — it is a pure function of the
+            // progress section's trains_done.
+            let mut w = ByteWriter::new();
+            w.put_f64(self.cfg.per_alpha);
+            w.put_f64(self.cfg.per_beta0);
+            w.put_u64(self.cfg.per_beta_anneal);
+            w.put_usize(self.cfg.n_step);
+            m.replay.read().unwrap().save_priorities(&mut w)?;
+            wtr.add_raw("priorities", 1, w.into_bytes())?;
+        }
+
         if let Some(ev) = &m.evaluator {
             wtr.add(ev)?;
         }
@@ -624,6 +675,25 @@ impl Coordinator {
         let mut r = rdr.read_section("progress", 1)?;
         m.load_progress(&mut r)?;
         r.finish().context("restoring checkpoint section \"progress\"")?;
+
+        if self.cfg.replay_strategy == ReplayStrategy::Proportional {
+            // Must run AFTER the replay contents restore: the priority
+            // overlay addresses the re-based ring's physical leaves.
+            let mut r = rdr.read_section("priorities", 1)?;
+            let (alpha, beta0, anneal, n_step) = (r.f64()?, r.f64()?, r.u64()?, r.usize()?);
+            if alpha.to_bits() != self.cfg.per_alpha.to_bits()
+                || beta0.to_bits() != self.cfg.per_beta0.to_bits()
+                || anneal != self.cfg.per_beta_anneal
+                || n_step != self.cfg.n_step
+            {
+                bail!(
+                    "checkpoint priorities section was written under different PER \
+                     hyperparameters (α {alpha}, β₀ {beta0}, anneal {anneal}, n {n_step})"
+                );
+            }
+            m.replay.write().unwrap().load_priorities(&mut r)?;
+            r.finish().context("restoring checkpoint section \"priorities\"")?;
+        }
 
         if let Some(ev) = m.evaluator.as_mut() {
             if rdr.has_section("evaluator") {
@@ -666,7 +736,15 @@ impl Coordinator {
             .ok_or_else(|| anyhow!("no machine state yet (run or resume first)"))?;
         let mut w = ByteWriter::new();
         QNetSnapshot(self.qnet.as_ref()).save(&mut w);
-        m.replay.read().unwrap().save(&mut w);
+        {
+            let replay = m.replay.read().unwrap();
+            replay.save(&mut w);
+            if self.cfg.replay_strategy == ReplayStrategy::Proportional {
+                // Priorities are trajectory state too: two proportional
+                // machines on the same trajectory carry identical trees.
+                replay.save_priorities(&mut w)?;
+            }
+        }
         for ctx in &m.ctxs {
             ctx.save_state(&mut w);
         }

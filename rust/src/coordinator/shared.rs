@@ -32,8 +32,28 @@ use crate::agent::{policy::select_rows, EpsGreedy};
 use crate::config::ExperimentConfig;
 use crate::env::{VecEnv, NET_FRAME, STATE_BYTES};
 use crate::metrics::{GanttTrace, Phase, PhaseTimers};
-use crate::replay::{BatchSource, ReplayMemory, StagingSet};
+use crate::replay::{BatchSource, ReplayMemory, StagingSet, StrategyPlan};
 use crate::runtime::{QNet, TrainBatch};
+
+/// The replay-strategy parameters of `cfg` as the replay layer's plain
+/// carrier (both drivers build their segment's strategy from this; the
+/// replay crate stays independent of the launcher config).
+///
+/// `spec_gamma` is the *network spec's* discount — the γ the engine's
+/// legacy 1-step entry bakes in — not `cfg.gamma`: n-step assembly and
+/// the per-sample bootstrap discounts must use the exact same scalar the
+/// engine would, or `n_step = 1` would stop reproducing the one-step
+/// targets whenever the config knob and the manifest disagree.
+pub fn strategy_plan(cfg: &ExperimentConfig, spec_gamma: f64) -> StrategyPlan {
+    StrategyPlan {
+        kind: cfg.replay_strategy,
+        per_alpha: cfg.per_alpha,
+        per_beta0: cfg.per_beta0,
+        per_beta_anneal: cfg.per_beta_anneal,
+        n_step: cfg.n_step,
+        gamma: spec_gamma,
+    }
+}
 
 /// Everything the worker threads share by reference (threads are scoped).
 /// Replay sits behind a `RwLock`: samplers and the staging flush take the
@@ -141,8 +161,10 @@ impl<'a> Shared<'a> {
     }
 
     /// Pull a minibatch from `source` and run one training step, recording
-    /// the loss. Returns `Ok(false)` when the source reports a clean stop
-    /// (run shutting down before another batch arrives).
+    /// the loss and handing the TD errors back to the sampling strategy
+    /// (priority updates; a no-op under uniform replay). Returns
+    /// `Ok(false)` when the source reports a clean stop (run shutting down
+    /// before another batch arrives).
     pub fn do_one_train(&self, source: &dyn BatchSource, batch: &mut TrainBatch) -> Result<bool> {
         let lane = self.trainer_lane();
         // With prefetch this span measures only the O(1) buffer swap (plus
@@ -152,15 +174,16 @@ impl<'a> Shared<'a> {
         if !got {
             return Ok(false);
         }
-        let loss = self
-            .span(lane, Phase::Train, || self.qnet.train_step(batch, self.cfg.lr as f32))?;
+        let outcome = self
+            .span(lane, Phase::Train, || self.qnet.train_step_td(batch, self.cfg.lr as f32))?;
+        source.record_td(&outcome.td_errors);
         let t = self.trains_done.fetch_add(1, Ordering::SeqCst);
         // Record a bounded loss curve (every 16th update after warm-up).
         if t % 16 == 0 {
             self.losses
                 .lock()
                 .unwrap()
-                .push((self.completed.load(Ordering::Relaxed), loss));
+                .push((self.completed.load(Ordering::Relaxed), outcome.loss));
         }
         Ok(true)
     }
@@ -202,8 +225,13 @@ pub struct SegmentState {
     /// Synchronization points performed so far (windowed modes): the next
     /// window dispatched covers steps `windows_flushed*C .. +C`.
     pub windows_flushed: u64,
-    /// Trainer draw-stream position ([`crate::replay::IndexSampler`]),
-    /// written back at segment exit.
+    /// Trainer draw-stream position (the sampling strategy's RNG — the
+    /// same "REPL" stream for uniform and proportional;
+    /// [`crate::replay::SamplingStrategy::rng_state`]), written back at
+    /// segment exit. All other strategy state lives in the replay memory's
+    /// priority index (persistent across segments) or is derived from
+    /// `trains_done` (β anneal), so this is the strategy's whole
+    /// per-segment carry.
     pub draw_rng: [u64; 4],
 }
 

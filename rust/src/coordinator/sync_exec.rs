@@ -38,10 +38,10 @@ use anyhow::{anyhow, Result};
 
 use crate::env::STATE_BYTES;
 use crate::metrics::Phase;
-use crate::replay::{BatchSource, IndexSampler, StagingSet, TrainerSource};
+use crate::replay::{build_strategy, BatchSource, StagingSet, TrainerSource};
 use crate::runtime::{Policy, TrainBatch};
 
-use super::shared::{SamplerCtx, SegmentState, Shared, WindowCtrl};
+use super::shared::{strategy_plan, SamplerCtx, SegmentState, Shared, WindowCtrl};
 
 /// Per-slot shared mailbox: the "shared memory arrays" of the paper,
 /// widened to B states / B Q-rows per sampler thread.
@@ -97,11 +97,16 @@ pub fn run_sync(
     // Batch source: prefetch pipeline for the windowed trainer (both-mode)
     // when enabled, inline sampling otherwise — including synchronized-only
     // inline training, which interleaves with replay writes every round
-    // (TrainerSource owns the eligibility rule). The draw stream resumes
-    // at the segment's saved position.
-    let source = TrainerSource::with_sampler(
+    // (TrainerSource owns the eligibility rule). The configured sampling
+    // strategy resumes at the segment's saved draw position and β-anneal
+    // clock.
+    let source = TrainerSource::with_strategy(
         shared.replay,
-        IndexSampler::from_rng_state(seg.draw_rng),
+        build_strategy(
+            &strategy_plan(shared.cfg, shared.qnet.spec().gamma),
+            seg.draw_rng,
+            shared.trains_done.load(Ordering::SeqCst),
+        ),
         shared.cfg.minibatch,
         shared.cfg.prefetch_batches,
         concurrent,
@@ -226,6 +231,10 @@ pub fn run_sync(
                     if completed >= window_end {
                         winctrl.wait_caught_up(shared);
                         shared.sync_point(&staging);
+                        // Apply the window's queued TD-error priority
+                        // updates (generation-guarded) after the flush,
+                        // before the next window's grant (§11).
+                        source.barrier_update();
                         seg.windows_flushed += 1;
                         on_progress(completed);
                         if window_end < until {

@@ -40,6 +40,15 @@ pub struct CostModel {
     /// on the trainer's critical path. The prefetch pipeline overlaps it
     /// with compute, removing it from the path entirely.
     pub sample_ms: f64,
+    /// Barrier-side sum-tree cost of prioritized replay per train step:
+    /// the O(B log N) TD-priority updates that run at the window barrier
+    /// and can never be hidden by prefetch. The *descent* half of
+    /// prioritized sampling rides in `sample_ms` (it is batch-assembly
+    /// work the prefetch worker overlaps exactly like uniform draws).
+    /// Zero for uniform replay; calibrate from the `update_b32` row of
+    /// `cargo bench --bench replay_sample` (and fold the cycle-minus-
+    /// update remainder into `sample_ms` for prioritized projections).
+    pub tree_ms: f64,
     /// Target sync + staging flush at a window barrier.
     pub sync_ms: f64,
     /// Physical CPU lanes usable by env simulation.
@@ -74,9 +83,13 @@ impl CostModel {
     }
 
     /// One trainer-visible train step: sharded compute, plus the batch
-    /// assembly cost unless the prefetch pipeline hides it.
-    pub fn train_step_ms(&self, learner_threads: usize, prefetch: bool) -> f64 {
-        self.train_ms_sharded(learner_threads) + if prefetch { 0.0 } else { self.sample_ms }
+    /// assembly cost unless the prefetch pipeline hides it, plus the
+    /// (never-hidden) barrier-side sum-tree update cost when replay is
+    /// prioritized.
+    pub fn train_step_ms(&self, learner_threads: usize, prefetch: bool, prioritized: bool) -> f64 {
+        self.train_ms_sharded(learner_threads)
+            + if prefetch { 0.0 } else { self.sample_ms }
+            + if prioritized { self.tree_ms } else { 0.0 }
     }
 
     pub fn txn_eff(&self, q: usize) -> f64 {
@@ -104,9 +117,11 @@ impl CostModel {
             // folded into the Table 1 calibration — so BOTH learner knobs
             // are structural no-ops on this model (tables stay pinned):
             // nothing of train_ms reshards across host lanes, and there is
-            // no separate assembly cost to overlap.
+            // no separate assembly cost to overlap. tree_ms likewise: the
+            // paper trains uniform replay, so Tables 1-3 stay pinned.
             train_parallel_frac: 0.0,
             sample_ms: 0.0,
+            tree_ms: 0.0,
             sync_ms: 2.0,
             cores: 6,
             contention: 0.25,
@@ -137,10 +152,12 @@ impl CostModel {
             // the native train step and shard cleanly, with the optimizer
             // tail + phase barriers as serial residue. Calibrate with
             // `cargo bench --bench train_throughput` and overwrite this
-            // field (and sample_ms, from its sample/assemble_b32 row)
-            // before trusting learner-thread projections in --real mode.
+            // field (and sample_ms, from its sample/assemble_b32 row;
+            // tree_ms from `cargo bench --bench replay_sample`) before
+            // trusting learner-thread projections in --real mode.
             train_parallel_frac: 0.9,
             sample_ms: 0.0,
+            tree_ms: 0.0,
             sync_ms: 2.0 * train_ms.max(1.0),
             cores,
             contention: 0.55,
@@ -209,12 +226,29 @@ mod tests {
     fn prefetch_removes_sample_cost_from_train_path() {
         let mut m = CostModel::gtx1080_i7();
         m.sample_ms = 0.3;
-        let inline = m.train_step_ms(1, false);
-        let overlapped = m.train_step_ms(1, true);
+        let inline = m.train_step_ms(1, false, false);
+        let overlapped = m.train_step_ms(1, true, false);
         assert!((inline - overlapped - 0.3).abs() < 1e-12);
         // Default calibration folds sampling into train_ms, so the paper
         // tables are insensitive to the prefetch knob.
         let paper = CostModel::gtx1080_i7();
-        assert_eq!(paper.train_step_ms(1, false), paper.train_step_ms(1, true));
+        assert_eq!(paper.train_step_ms(1, false, false), paper.train_step_ms(1, true, false));
+    }
+
+    #[test]
+    fn tree_cost_is_prioritized_only_and_prefetch_cannot_hide_it() {
+        let mut m = CostModel::gtx1080_i7();
+        m.sample_ms = 0.3;
+        m.tree_ms = 0.2;
+        // Uniform path is untouched by the tree knob.
+        assert_eq!(m.train_step_ms(1, false, false), m.train_ms + 0.3);
+        // Prioritized adds the tree cost on top of assembly...
+        assert!((m.train_step_ms(1, false, true) - (m.train_ms + 0.3 + 0.2)).abs() < 1e-12);
+        // ...and prefetch hides assembly but NOT the tree ops.
+        assert!((m.train_step_ms(1, true, true) - (m.train_ms + 0.2)).abs() < 1e-12);
+        // Paper calibration: prioritized is a structural no-op (tables
+        // stay pinned).
+        let paper = CostModel::gtx1080_i7();
+        assert_eq!(paper.train_step_ms(1, true, true), paper.train_step_ms(1, true, false));
     }
 }

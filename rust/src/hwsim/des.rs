@@ -145,6 +145,7 @@ mod tests {
             train_ms: 2.0,
             train_parallel_frac: 0.8,
             sample_ms: 0.0,
+            tree_ms: 0.0,
             sync_ms: 1.0,
             cores: 2,
             contention: 0.0,

@@ -30,11 +30,23 @@ pub struct SimRun {
     /// mirroring the real drivers, the standard/synchronized inline
     /// training paths always pay it.
     pub prefetch: bool,
+    /// Prioritized replay on: every train step pays the sum-tree cost
+    /// (`tree_ms`) — split out of `sample_ms` because prefetch cannot
+    /// hide it (priority updates run at the window barrier).
+    pub prioritized: bool,
 }
 
 impl Default for SimRun {
     fn default() -> Self {
-        SimRun { steps: 1_000_000, c: 10_000, f: 4, threads: 1, learner_threads: 1, prefetch: false }
+        SimRun {
+            steps: 1_000_000,
+            c: 10_000,
+            f: 4,
+            threads: 1,
+            learner_threads: 1,
+            prefetch: false,
+            prioritized: false,
+        }
     }
 }
 
@@ -60,8 +72,9 @@ fn sim_async(model: CostModel, run: SimRun, concurrent: bool) -> SimStats {
     let w = run.threads;
     let total = run.steps;
     let trainer_id = w; // entity id for the trainer
-    // Windowed trainer: sharded learner, prefetch hides assembly.
-    let train_cost = model.train_step_ms(run.learner_threads, run.prefetch);
+    // Windowed trainer: sharded learner, prefetch hides assembly (never
+    // the tree ops).
+    let train_cost = model.train_step_ms(run.learner_threads, run.prefetch, run.prioritized);
 
     // Ready-queue of entities: (ready_time, id). Samplers are 0..w.
     let mut ready: BinaryHeap<Reverse<(F, usize)>> = BinaryHeap::new();
@@ -179,7 +192,7 @@ fn sim_standard(model: CostModel, run: SimRun) -> SimStats {
     let mut now = 0.0f64;
     // Inline training: sharded learner, but assembly always on the path
     // (the real standard driver uses the direct source regardless).
-    let train_cost = model.train_step_ms(run.learner_threads, false);
+    let train_cost = model.train_step_ms(run.learner_threads, false, run.prioritized);
 
     while steps < total {
         // One cycle: F env steps — round-robin over min(W, F) threads,
@@ -210,7 +223,8 @@ fn sim_sync(model: CostModel, run: SimRun, concurrent: bool) -> SimStats {
     let total = run.steps;
     // Concurrent trainer may overlap assembly via prefetch; the inline
     // (synchronized-only) path always pays it, like the real driver.
-    let train_cost = model.train_step_ms(run.learner_threads, concurrent && run.prefetch);
+    let train_cost =
+        model.train_step_ms(run.learner_threads, concurrent && run.prefetch, run.prioritized);
 
     let mut steps: u64 = 0;
     let mut trains: u64 = 0;
@@ -371,6 +385,36 @@ mod tests {
         // Work accounting is unchanged — only the schedule compresses.
         assert_eq!(base.env_steps, piped.env_steps);
         assert_eq!(base.trains, piped.trains);
+    }
+
+    #[test]
+    fn prioritized_replay_adds_tree_cost_prefetch_cannot_hide() {
+        let mut model = CostModel::gtx1080_i7();
+        model.train_ms = 3.0;
+        model.sample_ms = 0.4;
+        model.tree_ms = 0.3;
+        let uniform = simulate(
+            model,
+            SimRun { prefetch: true, ..run(4) },
+            ExecMode::Both,
+        );
+        let prioritized = simulate(
+            model,
+            SimRun { prefetch: true, prioritized: true, ..run(4) },
+            ExecMode::Both,
+        );
+        assert!(
+            prioritized.makespan_ms > uniform.makespan_ms,
+            "tree ops must lengthen the schedule: {} vs {}",
+            prioritized.makespan_ms,
+            uniform.makespan_ms
+        );
+        assert_eq!(uniform.trains, prioritized.trains, "same work, different cost");
+        // The paper calibration (tree_ms = 0) keeps Tables 1-3 pinned.
+        let paper = CostModel::gtx1080_i7();
+        let a = simulate(paper, run(8), ExecMode::Both);
+        let b = simulate(paper, SimRun { prioritized: true, ..run(8) }, ExecMode::Both);
+        assert_eq!(a.makespan_ms, b.makespan_ms);
     }
 
     #[test]

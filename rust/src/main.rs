@@ -36,13 +36,14 @@ SUBCOMMANDS:
              --threads N --envs-per-thread B --steps N --game NAME
              --net tiny|small|nature --seed N --double --lr X
              --eval-period N --eval-seed N --learner-threads N
-             --prefetch-batches N --ckpt-dir DIR --ckpt-period N
-             --resume DIR
+             --prefetch-batches N --replay-strategy uniform|proportional
+             --per-alpha X --per-beta0 X --per-beta-anneal N --n-step N
+             --ckpt-dir DIR --ckpt-period N --resume DIR
   run-suite  --campaign FILE (TOML campaign: legs, order, ckpt_dir; see
              rust/src/campaign.rs for the format)
   speedtest  --threads 1,2,4,8 --steps N [--real] [--gantt] [--game NAME]
              [--envs-per-thread B] [--learner-threads N]
-             [--prefetch-batches N]
+             [--prefetch-batches N] [--replay-strategy S]
   suite      --steps N --threads N [--games a,b,c] [--episodes N]
              [--eval-seed N]
   anchors    [--games a,b,c] [--episodes N] [--eval-seed N]
@@ -55,6 +56,16 @@ The learner shards each minibatch over --learner-threads compute lanes and
 double-buffers replay batch assembly (--prefetch-batches, 0 = off); both
 knobs are bit-exact — any setting reproduces the serial trajectory
 (rust/DESIGN.md §9).
+
+Replay sampling is pluggable (rust/DESIGN.md §11): --replay-strategy
+uniform (default; with --n-step 1 bit-identical to the seed machine) or
+proportional (deterministic prioritized replay: sum-tree priorities from
+TD errors updated at window barriers, IS weights --per-alpha/--per-beta0
+with beta annealed over --per-beta-anneal minibatches). --n-step N builds
+N-step returns with episode-boundary-correct truncation under either
+strategy; proportional trajectories are bit-identical across
+learner-threads, prefetch settings, and checkpoint/resume
+(tests/strategy_equivalence.rs).
 
 Checkpointing (rust/DESIGN.md §10): --ckpt-dir enables periodic atomic
 checkpoints at quiesce points (every --ckpt-period steps, rounded up to a
@@ -173,6 +184,9 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
     let game = args.get_or("game", "pong").to_string();
     let learner_threads = args.usize_or("learner-threads", 1)?;
     let prefetch_batches = args.usize_or("prefetch-batches", 1)?;
+    let replay_strategy =
+        tempo_dqn::config::ReplayStrategy::parse(args.get_or("replay-strategy", "uniform"))?;
+    let prioritized = replay_strategy == tempo_dqn::config::ReplayStrategy::Proportional;
 
     // DES reproduction of the paper's grid (scaled to 50M steps like the
     // paper's x50 extrapolation of a 1M-step measurement).
@@ -187,6 +201,7 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
                 threads: w,
                 learner_threads,
                 prefetch: prefetch_batches > 0,
+                prioritized,
             };
             let stats = simulate(model, run, mode);
             let hours = stats.makespan_ms * (50_000_000.0 / run.steps as f64) / 3_600_000.0;
@@ -217,6 +232,7 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
                 cfg.envs_per_thread = envs_per_thread;
                 cfg.learner_threads = learner_threads;
                 cfg.prefetch_batches = prefetch_batches;
+                cfg.replay_strategy = replay_strategy;
                 cfg.total_steps = steps;
                 cfg.prepopulate = 1_000.min(steps as usize);
                 cfg.replay_capacity = 100_000;

@@ -17,11 +17,17 @@
 //! `&mut`) is split from frame assembly (read-only, `&self`) so a
 //! quota-gated worker can double-buffer minibatches ahead of the learner
 //! without changing the training trajectory by a single bit.
+//!
+//! `strategy` is the pluggable draw half (rust/DESIGN.md §11): uniform
+//! (the seed machine, bit-exact) or proportional prioritized replay over
+//! a deterministic sum-tree, with n-step return assembly in `ring`.
 
 pub mod prefetch;
 pub mod ring;
 pub mod staging;
+pub mod strategy;
 
 pub use prefetch::{BatchSource, DirectSource, PrefetchPipeline, TrainerSource};
 pub use ring::{IndexSampler, ReplayMemory, SampleIndex};
 pub use staging::{StagedTransition, StagingBuffer, StagingSet};
+pub use strategy::{build_strategy, PriorityIndex, SamplingStrategy, StrategyPlan, SumTree, Uniform};

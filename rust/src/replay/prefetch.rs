@@ -16,8 +16,9 @@
 //! the granted total. At a window barrier the trainer has consumed exactly
 //! the granted batches, the worker is provably idle, and the flush cannot
 //! race or reorder any draw. The draw sequence itself is a single
-//! [`IndexSampler`] advancing in consumption order, so prefetch on/off
-//! yields the identical trajectory (pinned in `tests/parallel_learner.rs`).
+//! [`SamplingStrategy`] advancing one RNG in consumption order, so
+//! prefetch on/off yields the identical trajectory (pinned in
+//! `tests/parallel_learner.rs` and `tests/strategy_equivalence.rs`).
 //!
 //! [`DirectSource`] is the `prefetch_batches = 0` path (and the path of
 //! the non-windowed modes, whose training interleaves with replay writes):
@@ -33,56 +34,92 @@ use anyhow::{bail, Result};
 
 use crate::runtime::TrainBatch;
 
-use super::ring::{IndexSampler, ReplayMemory};
+use super::ring::ReplayMemory;
+use super::strategy::{SamplingStrategy, Uniform};
 
 /// Where the trainer gets its minibatches.
 ///
 /// `next_batch` fills `out` and returns `Ok(true)`, or `Ok(false)` when the
 /// run is stopping and no further batch will arrive (a clean shutdown, not
 /// an error). `grant` raises the number of batches a pipelined source may
-/// assemble ahead; the direct source ignores it.
+/// assemble ahead; the direct source ignores it. `record_td` hands one
+/// trained batch's TD errors back to the sampling strategy (priority
+/// updates; a no-op for uniform), and `barrier_update` applies queued
+/// priority updates — windowed drivers call it at the window barrier,
+/// right after the staging flush and before the next grant
+/// (rust/DESIGN.md §11).
 pub trait BatchSource: Sync {
     fn next_batch(&self, out: &mut TrainBatch, should_stop: &dyn Fn() -> bool) -> Result<bool>;
 
     fn grant(&self, _n: u64) {}
+
+    fn record_td(&self, _td: &[f32]) {}
+
+    fn barrier_update(&self) {}
 }
 
-/// Inline sampling: draw under the sampler mutex, assemble under the replay
-/// read lock. Byte-for-byte the historical `ReplayMemory::sample` behavior
-/// (same RNG stream, same call sequence).
+/// Inline sampling: draw under the strategy mutex, assemble under the
+/// replay read lock. With the uniform strategy this is byte-for-byte the
+/// historical `ReplayMemory::sample` behavior (same RNG stream, same call
+/// sequence).
 pub struct DirectSource<'a> {
     replay: &'a RwLock<ReplayMemory>,
-    sampler: Mutex<IndexSampler>,
+    strategy: Mutex<Box<dyn SamplingStrategy>>,
     minibatch: usize,
+    /// Apply priority updates immediately after each `record_td` (the
+    /// non-windowed modes, whose sequential train/push interleaving makes
+    /// that order deterministic). Windowed runs leave them queued for
+    /// `barrier_update`, so prefetch on/off stays trajectory-identical.
+    immediate: bool,
 }
 
 impl<'a> DirectSource<'a> {
+    /// Uniform 1-step source (the historical constructor; benches/tests).
     pub fn new(replay: &'a RwLock<ReplayMemory>, seed: u64, minibatch: usize) -> DirectSource<'a> {
-        Self::with_sampler(replay, IndexSampler::new(seed), minibatch)
+        Self::with_strategy(replay, Box::new(Uniform::new(seed, 1, 1.0)), minibatch, true)
     }
 
-    /// Resume the draw stream mid-run (checkpoint restore).
-    pub fn with_sampler(
+    /// Resume the configured strategy mid-run (segment continuation).
+    pub fn with_strategy(
         replay: &'a RwLock<ReplayMemory>,
-        sampler: IndexSampler,
+        strategy: Box<dyn SamplingStrategy>,
         minibatch: usize,
+        immediate: bool,
     ) -> DirectSource<'a> {
-        DirectSource { replay, sampler: Mutex::new(sampler), minibatch }
+        DirectSource { replay, strategy: Mutex::new(strategy), minibatch, immediate }
     }
 
     /// Draw-stream RNG position (checkpointing; call only when quiesced).
     pub fn sampler_state(&self) -> [u64; 4] {
-        self.sampler.lock().unwrap().rng_state()
+        self.strategy.lock().unwrap().rng_state()
     }
 }
 
 impl BatchSource for DirectSource<'_> {
     fn next_batch(&self, out: &mut TrainBatch, _should_stop: &dyn Fn() -> bool) -> Result<bool> {
-        let mut sampler = self.sampler.lock().unwrap();
+        let mut strategy = self.strategy.lock().unwrap();
         let replay = self.replay.read().unwrap();
-        let picks = sampler.draw(&replay, self.minibatch)?;
-        replay.assemble(&picks, out);
+        strategy.fill_batch(&replay, self.minibatch, out)?;
         Ok(true)
+    }
+
+    fn record_td(&self, td: &[f32]) {
+        // Lock order everywhere: strategy, then replay — fill_batch takes
+        // the read half, updates the write half.
+        let mut strategy = self.strategy.lock().unwrap();
+        strategy.record_td(td);
+        if self.immediate && strategy.has_pending() {
+            let mut replay = self.replay.write().unwrap();
+            strategy.apply_updates(&mut replay);
+        }
+    }
+
+    fn barrier_update(&self) {
+        let mut strategy = self.strategy.lock().unwrap();
+        if strategy.has_pending() {
+            let mut replay = self.replay.write().unwrap();
+            strategy.apply_updates(&mut replay);
+        }
     }
 }
 
@@ -96,7 +133,7 @@ struct Buffers {
 pub struct PrefetchPipeline<'a> {
     replay: &'a RwLock<ReplayMemory>,
     minibatch: usize,
-    sampler: Mutex<IndexSampler>,
+    strategy: Mutex<Box<dyn SamplingStrategy>>,
     /// Total batches the coordinator has authorized (monotone).
     granted: AtomicU64,
     /// Batches fully assembled by the worker (monotone).
@@ -108,20 +145,21 @@ pub struct PrefetchPipeline<'a> {
 
 impl<'a> PrefetchPipeline<'a> {
     /// `depth` >= 1 batches may sit assembled-but-unconsumed (1 = classic
-    /// double buffering: one in flight, one being built).
+    /// double buffering: one in flight, one being built). Uniform 1-step
+    /// (the historical constructor; tests).
     pub fn new(
         replay: &'a RwLock<ReplayMemory>,
         seed: u64,
         minibatch: usize,
         depth: usize,
     ) -> PrefetchPipeline<'a> {
-        Self::with_sampler(replay, IndexSampler::new(seed), minibatch, depth)
+        Self::with_strategy(replay, Box::new(Uniform::new(seed, 1, 1.0)), minibatch, depth)
     }
 
-    /// Resume the draw stream mid-run (checkpoint restore).
-    pub fn with_sampler(
+    /// Resume the configured strategy mid-run (segment continuation).
+    pub fn with_strategy(
         replay: &'a RwLock<ReplayMemory>,
-        sampler: IndexSampler,
+        strategy: Box<dyn SamplingStrategy>,
         minibatch: usize,
         depth: usize,
     ) -> PrefetchPipeline<'a> {
@@ -129,7 +167,7 @@ impl<'a> PrefetchPipeline<'a> {
         PrefetchPipeline {
             replay,
             minibatch,
-            sampler: Mutex::new(sampler),
+            strategy: Mutex::new(strategy),
             granted: AtomicU64::new(0),
             produced: AtomicU64::new(0),
             state: Mutex::new(Buffers {
@@ -150,7 +188,7 @@ impl<'a> PrefetchPipeline<'a> {
     /// quiesced (every granted batch consumed, worker parked) — i.e. at a
     /// window barrier.
     pub fn sampler_state(&self) -> [u64; 4] {
-        self.sampler.lock().unwrap().rng_state()
+        self.strategy.lock().unwrap().rng_state()
     }
 
     /// The worker body: assemble granted batches ahead of the trainer.
@@ -171,9 +209,9 @@ impl<'a> PrefetchPipeline<'a> {
                 continue;
             };
             let result = {
-                let mut sampler = self.sampler.lock().unwrap();
+                let mut strategy = self.strategy.lock().unwrap();
                 let replay = self.replay.read().unwrap();
-                sampler.draw(&replay, self.minibatch).map(|picks| replay.assemble(&picks, &mut buf))
+                strategy.fill_batch(&replay, self.minibatch, &mut buf)
             };
             match result {
                 Ok(()) => {
@@ -223,12 +261,29 @@ impl BatchSource for PrefetchPipeline<'_> {
         self.granted.fetch_add(n, Ordering::SeqCst);
         self.cv.notify_all();
     }
+
+    fn record_td(&self, td: &[f32]) {
+        // Windowed by construction: queue only; `barrier_update` applies
+        // at the flush barrier, so the worker's look-ahead draws see the
+        // same frozen tree inline draws would have.
+        self.strategy.lock().unwrap().record_td(td);
+    }
+
+    fn barrier_update(&self) {
+        let mut strategy = self.strategy.lock().unwrap();
+        if strategy.has_pending() {
+            let mut replay = self.replay.write().unwrap();
+            strategy.apply_updates(&mut replay);
+        }
+    }
 }
 
 /// The coordinator-facing source selector, shared by both drivers so the
 /// prefetch-eligibility rule lives in exactly one place: the pipeline only
 /// applies to a *windowed* trainer (its grant protocol needs window
-/// barriers); inline training paths always sample directly.
+/// barriers); inline training paths always sample directly — and apply
+/// priority updates immediately, since their train/push interleaving is
+/// already sequential.
 pub enum TrainerSource<'a> {
     Direct(DirectSource<'a>),
     Prefetch(PrefetchPipeline<'a>),
@@ -236,32 +291,21 @@ pub enum TrainerSource<'a> {
 
 impl<'a> TrainerSource<'a> {
     /// `windowed`: the run has a window-dispatched trainer thread
-    /// (concurrent / both modes).
-    pub fn new(
+    /// (concurrent / both modes). The strategy arrives resumed at its
+    /// segment position (see `replay::strategy::build_strategy`).
+    pub fn with_strategy(
         replay: &'a RwLock<ReplayMemory>,
-        seed: u64,
-        minibatch: usize,
-        prefetch_batches: usize,
-        windowed: bool,
-    ) -> TrainerSource<'a> {
-        Self::with_sampler(replay, IndexSampler::new(seed), minibatch, prefetch_batches, windowed)
-    }
-
-    /// [`TrainerSource::new`] with the draw stream resumed at a saved
-    /// position (checkpoint restore / segment continuation).
-    pub fn with_sampler(
-        replay: &'a RwLock<ReplayMemory>,
-        sampler: IndexSampler,
+        strategy: Box<dyn SamplingStrategy>,
         minibatch: usize,
         prefetch_batches: usize,
         windowed: bool,
     ) -> TrainerSource<'a> {
         if windowed && prefetch_batches > 0 {
-            TrainerSource::Prefetch(PrefetchPipeline::with_sampler(
-                replay, sampler, minibatch, prefetch_batches,
+            TrainerSource::Prefetch(PrefetchPipeline::with_strategy(
+                replay, strategy, minibatch, prefetch_batches,
             ))
         } else {
-            TrainerSource::Direct(DirectSource::with_sampler(replay, sampler, minibatch))
+            TrainerSource::Direct(DirectSource::with_strategy(replay, strategy, minibatch, !windowed))
         }
     }
 
@@ -294,6 +338,20 @@ impl BatchSource for TrainerSource<'_> {
     fn grant(&self, n: u64) {
         if let TrainerSource::Prefetch(p) = self {
             p.grant(n);
+        }
+    }
+
+    fn record_td(&self, td: &[f32]) {
+        match self {
+            TrainerSource::Direct(d) => d.record_td(td),
+            TrainerSource::Prefetch(p) => p.record_td(td),
+        }
+    }
+
+    fn barrier_update(&self) {
+        match self {
+            TrainerSource::Direct(d) => d.barrier_update(),
+            TrainerSource::Prefetch(p) => p.barrier_update(),
         }
     }
 }

@@ -27,6 +27,8 @@ use anyhow::{bail, Result};
 use crate::runtime::TrainBatch;
 use crate::util::rng::Rng;
 
+use super::strategy::PriorityIndex;
+
 struct Stream {
     frames: Vec<u8>, // cap * frame_size
     actions: Vec<u8>,
@@ -138,6 +140,10 @@ pub struct ReplayMemory {
     stack: usize,
     sampler: IndexSampler,
     pushes: u64,
+    /// Per-transition priority state for the proportional sampling
+    /// strategy (None = uniform-only memory; no tree is allocated or
+    /// maintained). See `replay/strategy.rs` and rust/DESIGN.md §11.
+    priority: Option<PriorityIndex>,
 }
 
 impl ReplayMemory {
@@ -157,7 +163,77 @@ impl ReplayMemory {
             stack,
             sampler: IndexSampler::new(seed),
             pushes: 0,
+            priority: None,
         })
+    }
+
+    /// Frames per stream (all streams share one capacity).
+    fn per_cap(&self) -> usize {
+        self.streams[0].cap
+    }
+
+    /// Attach (or rebuild) the proportional strategy's priority index.
+    /// Existing contents are re-indexed with the running max priority —
+    /// exactly what per-push seeding would have assigned them, since no
+    /// TD update has touched them yet. Idempotent geometry-wise; call
+    /// before (or right after) filling the memory.
+    pub fn enable_priorities(&mut self) {
+        let mut pi = PriorityIndex::new(self.streams.len() * self.per_cap());
+        if let Some(old) = &self.priority {
+            pi.set_max_priority(old.max_priority());
+        }
+        self.priority = Some(pi);
+        self.reindex_priorities();
+    }
+
+    /// Recompute active flags / tree masses / latent seeds from the
+    /// current ring geometry (fresh enable and checkpoint restore — the
+    /// restored ring is re-based, so physical leaves move).
+    fn reindex_priorities(&mut self) {
+        let per = self.per_cap();
+        let stack = self.stack;
+        let pushes = self.pushes;
+        let Some(pi) = &mut self.priority else { return };
+        for (si, st) in self.streams.iter().enumerate() {
+            for l in 0..st.len {
+                let leaf = si * per + st.phys(l);
+                pi.insert(leaf, pushes);
+                if l + 1 >= stack && l + 1 < st.len {
+                    pi.activate(leaf);
+                }
+            }
+        }
+        debug_assert_eq!(
+            pi.active_count(),
+            self.streams.iter().map(|s| s.valid(stack)).sum::<usize>()
+        );
+    }
+
+    /// The proportional strategy's priority index, when enabled.
+    pub fn priorities(&self) -> Option<&PriorityIndex> {
+        self.priority.as_ref()
+    }
+
+    pub fn priorities_mut(&mut self) -> Option<&mut PriorityIndex> {
+        self.priority.as_mut()
+    }
+
+    /// Map a sum-tree leaf (`stream * per_cap + physical_slot`) back to a
+    /// logical [`SampleIndex`]. None when the leaf does not address a
+    /// currently sampleable transition.
+    pub fn leaf_to_index(&self, leaf: usize) -> Option<SampleIndex> {
+        let per = self.per_cap();
+        let stream = leaf / per;
+        let phys = leaf % per;
+        let st = self.streams.get(stream)?;
+        // Invert phys(l) = (next + cap - len + l) % cap.
+        let base = (st.next + st.cap - st.len) % st.cap;
+        let l = (phys + st.cap - base) % st.cap;
+        if l + 1 >= self.stack && l + 1 < st.len {
+            Some(SampleIndex { stream, slot: l })
+        } else {
+            None
+        }
     }
 
     pub fn n_streams(&self) -> usize {
@@ -184,6 +260,27 @@ impl ReplayMemory {
     /// Append one transition to `stream`.
     pub fn push(&mut self, stream: usize, frame: &[u8], action: u8, reward: f32, done: bool, start: bool) {
         debug_assert_eq!(frame.len(), self.frame_size);
+        // Priority maintenance plan (computed against the pre-push
+        // geometry; one slot gains sampleability per push, one loses it
+        // once the ring is full — mirroring `Stream::valid` exactly):
+        //  * full ring: the slot at logical `stack-1` drops below the
+        //    history threshold after the eviction shift;
+        //  * the previous newest slot gains its stored successor when the
+        //    post-push window reaches it.
+        let (deactivated, activated) = {
+            let st = &self.streams[stream];
+            let full = st.len == st.cap;
+            let deact = (self.priority.is_some() && full).then(|| st.phys(self.stack - 1));
+            let act = (self.priority.is_some() && st.len >= 1)
+                .then(|| {
+                    // Post-push logical index of the previous newest slot
+                    // is new_len - 2; it activates at stack - 1.
+                    let new_len = (st.len + 1).min(st.cap);
+                    (new_len >= self.stack + 1).then_some((st.next + st.cap - 1) % st.cap)
+                })
+                .flatten();
+            (deact, act)
+        };
         let st = &mut self.streams[stream];
         let i = st.next;
         st.frames[i * self.frame_size..(i + 1) * self.frame_size].copy_from_slice(frame);
@@ -194,6 +291,21 @@ impl ReplayMemory {
         st.next = (st.next + 1) % st.cap;
         st.len = (st.len + 1).min(st.cap);
         self.pushes += 1;
+        if let Some(pi) = &mut self.priority {
+            let base = stream * self.streams[stream].cap;
+            if let Some(p) = deactivated {
+                pi.deactivate(base + p);
+            }
+            pi.insert(base + i, self.pushes);
+            if let Some(p) = activated {
+                pi.activate(base + p);
+            }
+            debug_assert_eq!(
+                pi.active_count(),
+                self.streams.iter().map(|s| s.valid(self.stack)).sum::<usize>(),
+                "priority index drifted from the sampleable set"
+            );
+        }
     }
 
     /// Write the stacked state ending at logical slot `l` of `stream` into
@@ -244,6 +356,10 @@ impl ReplayMemory {
         batch.actions.resize(batch_size, 0);
         batch.rewards.resize(batch_size, 0.0);
         batch.dones.resize(batch_size, 0.0);
+        // Legacy 1-step path: the engine takes its historical 10-input
+        // entry, so neither per-sample array may be present.
+        batch.weights.clear();
+        batch.boot_gammas.clear();
 
         for (b, pick) in picks.iter().enumerate() {
             let (stream, l) = (pick.stream, pick.slot);
@@ -261,6 +377,95 @@ impl ReplayMemory {
                     .copy_from_slice(&batch.states[b * state_bytes..(b + 1) * state_bytes]);
             } else {
                 self.state_into(stream, l + 1, &mut batch.next_states[b * state_bytes..(b + 1) * state_bytes]);
+            }
+        }
+    }
+
+    /// [`ReplayMemory::assemble`] generalized to n-step returns
+    /// (rust/DESIGN.md §11): for a pick at logical slot `l`, accumulate
+    /// `R = Σ_{k<m} γᵏ·r_{l+k}` over `m = min(n, steps to the episode
+    /// boundary or the stored-frontier)` transitions, bootstrap from the
+    /// state ending at `l+m` scaled by `boot_gammas[b] = γᵐ`, and mask the
+    /// bootstrap with `dones[b] = 1` when a terminal fell inside the
+    /// window. `n = 1` reproduces [`ReplayMemory::assemble`]'s
+    /// rewards/dones/states bit-for-bit (plus `boot_gammas = γ`, which the
+    /// engine's per-sample-discount path multiplies in the same order the
+    /// legacy path multiplied the scalar γ). Draws are shared with the
+    /// 1-step path — only assembly widens — so the index distribution and
+    /// RNG stream are untouched by the horizon.
+    ///
+    /// Truncation rules, in order, at each extension step k > 0:
+    /// * a `start` flag at `l+k` (a new episode began) stops *before*
+    ///   including that transition;
+    /// * a transition without a stored successor (`l+k` is the stream's
+    ///   newest slot) is included only if it is terminal — otherwise the
+    ///   window ends at `m = k` and bootstraps from the frontier state;
+    /// * a terminal (`done`) transition is included and closes the window
+    ///   with the bootstrap masked.
+    pub fn assemble_nstep(&self, picks: &[SampleIndex], n: usize, gamma: f32, batch: &mut TrainBatch) {
+        let n = n.max(1);
+        let batch_size = picks.len();
+        let state_bytes = self.frame_size * self.stack;
+        batch.states.resize(batch_size * state_bytes, 0);
+        batch.next_states.resize(batch_size * state_bytes, 0);
+        batch.actions.resize(batch_size, 0);
+        batch.rewards.resize(batch_size, 0.0);
+        batch.dones.resize(batch_size, 0.0);
+        batch.boot_gammas.resize(batch_size, 0.0);
+
+        for (b, pick) in picks.iter().enumerate() {
+            let (stream, l) = (pick.stream, pick.slot);
+            let st = &self.streams[stream];
+            debug_assert!(l + 1 < st.len);
+            batch.actions[b] = st.actions[st.phys(l)] as i32;
+
+            let mut ret = 0.0f32;
+            let mut disc = 1.0f32;
+            let mut m = 0usize;
+            let mut done = false;
+            for k in 0..n {
+                let slot = l + k;
+                if k > 0 {
+                    if slot >= st.len {
+                        break;
+                    }
+                    let ph = st.phys(slot);
+                    if st.starts[ph] {
+                        break; // next episode began; never cross it
+                    }
+                    if !st.dones[ph] && slot + 1 >= st.len {
+                        break; // no stored successor to bootstrap past
+                    }
+                }
+                let ph = st.phys(slot);
+                if k == 0 {
+                    ret = st.rewards[ph];
+                } else {
+                    ret += disc * st.rewards[ph];
+                }
+                m = k + 1;
+                if st.dones[ph] {
+                    done = true;
+                    break;
+                }
+                disc *= gamma;
+            }
+            debug_assert!(m >= 1);
+            batch.rewards[b] = ret;
+            batch.dones[b] = if done { 1.0 } else { 0.0 };
+            let mut bg = gamma;
+            for _ in 1..m {
+                bg *= gamma;
+            }
+            batch.boot_gammas[b] = bg;
+            self.state_into(stream, l, &mut batch.states[b * state_bytes..(b + 1) * state_bytes]);
+            if done {
+                // Bootstrap is masked; reuse s (in-distribution), exactly
+                // like the 1-step path.
+                batch.next_states[b * state_bytes..(b + 1) * state_bytes]
+                    .copy_from_slice(&batch.states[b * state_bytes..(b + 1) * state_bytes]);
+            } else {
+                self.state_into(stream, l + m, &mut batch.next_states[b * state_bytes..(b + 1) * state_bytes]);
             }
         }
     }
@@ -321,6 +526,87 @@ impl ReplayMemory {
             w.put_bool_slice(&starts);
         }
         w.put_u64(self.pushes);
+    }
+
+    /// Serialize the priority index in *logical* order (per-slot latent
+    /// priority + generation, oldest to newest, plus the running max), so
+    /// restoring into a re-based ring lands on the right physical leaves.
+    /// Written as its own checkpoint section by the coordinator (only for
+    /// proportional runs — uniform checkpoints are unchanged).
+    pub fn save_priorities(&self, w: &mut crate::ckpt::ByteWriter) -> Result<()> {
+        let Some(pi) = &self.priority else {
+            bail!("replay has no priority index to checkpoint");
+        };
+        let per = self.per_cap();
+        w.put_f64(pi.max_priority());
+        w.put_usize(self.streams.len());
+        for (si, st) in self.streams.iter().enumerate() {
+            w.put_usize(st.len);
+            for l in 0..st.len {
+                let leaf = si * per + st.phys(l);
+                w.put_f64(pi.latent(leaf));
+                w.put_u64(pi.gen(leaf));
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore [`ReplayMemory::save_priorities`] bytes. Must run *after*
+    /// the ring contents are restored: `Snapshot::load` already rebuilt
+    /// the index's active flags against the re-based geometry (an index
+    /// enabled here from scratch gets the same rebuild), so this overlay
+    /// only has to land the latent priorities and generations on the
+    /// right physical leaves — no second full tree rebuild.
+    pub fn load_priorities(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> Result<()> {
+        if self.priority.is_none() {
+            self.enable_priorities();
+        }
+        let per = self.per_cap();
+        let max_priority = r.f64()?;
+        if !(max_priority.is_finite() && max_priority > 0.0) {
+            bail!("checkpoint priority index has corrupt max priority {max_priority}");
+        }
+        let n_streams = r.usize()?;
+        if n_streams != self.streams.len() {
+            bail!(
+                "checkpoint priority index covers {n_streams} streams, this run has {}",
+                self.streams.len()
+            );
+        }
+        // Collect first: the overlay below needs &mut self.priority while
+        // reading stream geometry.
+        let mut overlays = Vec::with_capacity(n_streams);
+        for st in &self.streams {
+            let len = r.usize()?;
+            if len != st.len {
+                bail!("checkpoint priority index has {len} slots for a stream holding {}", st.len);
+            }
+            let mut rows = Vec::with_capacity(len);
+            for _ in 0..len {
+                let latent = r.f64()?;
+                if !(latent.is_finite() && latent > 0.0) {
+                    bail!("checkpoint priority index has corrupt priority {latent}");
+                }
+                rows.push((latent, r.u64()?));
+            }
+            overlays.push(rows);
+        }
+        let leaves: Vec<(usize, f64, u64)> = overlays
+            .iter()
+            .enumerate()
+            .flat_map(|(si, rows)| {
+                let st = &self.streams[si];
+                rows.iter()
+                    .enumerate()
+                    .map(move |(l, &(latent, gen))| (si * per + st.phys(l), latent, gen))
+            })
+            .collect();
+        let pi = self.priority.as_mut().expect("enabled above");
+        pi.set_max_priority(max_priority);
+        for (leaf, latent, gen) in leaves {
+            pi.set_restored(leaf, latent, gen);
+        }
+        Ok(())
     }
 }
 
@@ -384,6 +670,13 @@ impl crate::ckpt::Snapshot for ReplayMemory {
         }
         self.pushes = r.u64()?;
         self.sampler = IndexSampler::from_rng_state(r.rng()?);
+        // A priority-indexed memory must re-derive its active set from the
+        // re-based geometry (a fresh index, so no stale leaves survive);
+        // latent priorities/generations are overlaid afterwards by
+        // `load_priorities` (proportional checkpoints).
+        if self.priority.is_some() {
+            self.enable_priorities();
+        }
         Ok(())
     }
 }
@@ -689,6 +982,184 @@ mod tests {
         let mut wrong = ReplayMemory::new(8 * 3, 3, FS, STACK, 7).unwrap();
         let mut r = ByteReader::new(&bytes);
         assert!(wrong.load(&mut r).is_err(), "stream-count mismatch must fail");
+    }
+
+    /// n = 1 through the n-step assembler reproduces `assemble` exactly
+    /// (same rewards/dones/states bitwise) plus `boot_gammas = γ`.
+    #[test]
+    fn nstep_one_matches_assemble_bitwise() {
+        let mut r = mk(256, 2);
+        for v in 0..50u8 {
+            r.push(0, &frame(v), v, v as f32 * 0.25 - 3.0, v % 9 == 8, v == 0 || v % 9 == 0);
+            r.push(1, &frame(100 + v), v, 0.5, v % 7 == 6, v == 0 || v % 7 == 0);
+        }
+        let mut sampler = IndexSampler::new(7);
+        let picks = sampler.draw(&r, 64).unwrap();
+        let mut one = TrainBatch::default();
+        r.assemble(&picks, &mut one);
+        let mut n1 = TrainBatch::default();
+        r.assemble_nstep(&picks, 1, 0.99, &mut n1);
+        assert_eq!(one.states, n1.states);
+        assert_eq!(one.next_states, n1.next_states);
+        assert_eq!(one.actions, n1.actions);
+        assert_eq!(
+            one.rewards.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            n1.rewards.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(one.dones, n1.dones);
+        assert!(one.boot_gammas.is_empty());
+        assert!(n1.boot_gammas.iter().all(|&g| g.to_bits() == 0.99f32.to_bits()));
+    }
+
+    /// Mid-episode n-step windows chain rewards with γ discounting and
+    /// bootstrap from the state n steps ahead.
+    #[test]
+    fn nstep_accumulates_discounted_rewards() {
+        let mut r = mk(64, 1);
+        // One long episode: frame v, reward v.
+        for v in 0..20u8 {
+            r.push(0, &frame(v), v, v as f32, false, v == 0);
+        }
+        let gamma = 0.5f32;
+        let pick = [SampleIndex { stream: 0, slot: 5 }];
+        let mut b = TrainBatch::default();
+        r.assemble_nstep(&pick, 3, gamma, &mut b);
+        // R = r5 + γ r6 + γ² r7 = 5 + 3 + 1.75.
+        assert_eq!(b.rewards[0], 5.0 + 0.5 * 6.0 + 0.25 * 7.0);
+        assert_eq!(b.dones[0], 0.0);
+        assert_eq!(b.boot_gammas[0], 0.125, "γ³ scales the bootstrap");
+        // Successor is the state ending at slot 8.
+        assert_eq!(b.next_states[3], 8, "newest channel of s' is frame 8");
+        assert_eq!(b.states[3], 5);
+    }
+
+    /// Episode terminal inside the window truncates the return, masks the
+    /// bootstrap, and never crosses into the next episode.
+    #[test]
+    fn nstep_truncates_at_episode_terminal() {
+        let mut r = mk(64, 1);
+        // Episode A: frames 0..=6, done at 6 (reward 10). Episode B after.
+        for v in 0..=6u8 {
+            r.push(0, &frame(v), v, if v == 6 { 10.0 } else { 1.0 }, v == 6, v == 0);
+        }
+        for v in 50..=58u8 {
+            r.push(0, &frame(v), v, 7.0, false, v == 50);
+        }
+        let gamma = 0.5f32;
+        // Window starting at 5: r5 + γ·r6(terminal), done, m = 2.
+        let mut b = TrainBatch::default();
+        r.assemble_nstep(&[SampleIndex { stream: 0, slot: 5 }], 4, gamma, &mut b);
+        assert_eq!(b.rewards[0], 1.0 + 0.5 * 10.0);
+        assert_eq!(b.dones[0], 1.0, "terminal inside the window masks the bootstrap");
+        assert_eq!(b.boot_gammas[0], 0.25, "γ² even though masked (well-formed)");
+        let sb = FS * STACK;
+        assert_eq!(&b.next_states[..sb], &b.states[..sb], "masked successor = s");
+        // Window starting at 4 with n far beyond the episode end: same
+        // truncation (n > episode remainder).
+        let mut b7 = TrainBatch::default();
+        r.assemble_nstep(&[SampleIndex { stream: 0, slot: 4 }], 32, gamma, &mut b7);
+        assert_eq!(b7.rewards[0], 1.0 + 0.5 * 1.0 + 0.25 * 10.0);
+        assert_eq!(b7.dones[0], 1.0);
+        // No frame of episode B leaks into either state.
+        for px in 0..sb {
+            assert!(b7.states[px] <= 6 && b7.next_states[px] <= 6);
+        }
+    }
+
+    /// The stored frontier (newest slot has no successor) truncates a
+    /// non-terminal window: bootstrap from the last reachable state.
+    #[test]
+    fn nstep_truncates_at_stored_frontier() {
+        let mut r = mk(64, 1);
+        for v in 0..8u8 {
+            r.push(0, &frame(v), v, 1.0, false, v == 0);
+        }
+        // Sampleable slots are [3, 6]; slot 6's transition is the last
+        // one with a stored successor (slot 7 has none).
+        let gamma = 0.5f32;
+        let mut b = TrainBatch::default();
+        r.assemble_nstep(&[SampleIndex { stream: 0, slot: 6 }], 5, gamma, &mut b);
+        // Only r6 fits (slot 7 has no successor and is not terminal).
+        assert_eq!(b.rewards[0], 1.0);
+        assert_eq!(b.dones[0], 0.0);
+        assert_eq!(b.boot_gammas[0], 0.5, "m = 1");
+        assert_eq!(b.next_states[3], 7);
+        // One step back: r6 then r7 is excluded the same way -> m = 2.
+        let mut b5 = TrainBatch::default();
+        r.assemble_nstep(&[SampleIndex { stream: 0, slot: 5 }], 5, gamma, &mut b5);
+        assert_eq!(b5.rewards[0], 1.0 + 0.5);
+        assert_eq!(b5.boot_gammas[0], 0.25, "m = 2");
+        assert_eq!(b5.next_states[3], 7);
+    }
+
+    /// n-step windows stay correct across the physical ring seam.
+    #[test]
+    fn nstep_handles_ring_wraparound() {
+        let mut r = mk(8, 1); // cap 8: plenty of wrapping
+        for v in 0..30u8 {
+            r.push(0, &frame(v), v, v as f32, false, v == 0);
+        }
+        // Stored frames are 22..=29; logical slot l holds frame 22+l.
+        let gamma = 0.5f32;
+        let mut b = TrainBatch::default();
+        r.assemble_nstep(&[SampleIndex { stream: 0, slot: 3 }], 3, gamma, &mut b);
+        let (r0, r1, r2) = (25.0f32, 26.0, 27.0);
+        assert_eq!(b.rewards[0], r0 + 0.5 * r1 + 0.25 * r2);
+        assert_eq!(b.states[3], 25);
+        assert_eq!(b.next_states[3], 28);
+        assert_eq!(b.boot_gammas[0], 0.125);
+    }
+
+    /// The priority index tracks the sampleable set exactly under pushes,
+    /// episode boundaries, and ring wraparound — and the snapshot round
+    /// trip (logical re-basing included) preserves it.
+    #[test]
+    fn priority_index_tracks_sampleable_set() {
+        use crate::ckpt::{ByteReader, ByteWriter};
+        let mut r = mk(8 * 2, 2);
+        r.enable_priorities();
+        for v in 0..40u8 {
+            r.push(0, &frame(v), v, 1.0, v % 5 == 4, v == 0 || v % 5 == 0);
+            assert_eq!(r.priorities().unwrap().active_count(), r.sampleable());
+            if v % 3 == 0 {
+                r.push(1, &frame(v), v, 0.0, false, v == 0);
+                assert_eq!(r.priorities().unwrap().active_count(), r.sampleable());
+            }
+        }
+        // Every active leaf maps back to a valid pick; inactive leaves
+        // return None.
+        let pi = r.priorities().unwrap();
+        let mut active_leaves = 0;
+        for leaf in 0..r.capacity() {
+            if pi.value(leaf) > 0.0 {
+                active_leaves += 1;
+                let idx = r.leaf_to_index(leaf).expect("active leaf must map to a pick");
+                assert!(idx.slot + 1 >= STACK && idx.slot + 1 < 8);
+            }
+        }
+        assert_eq!(active_leaves, r.sampleable());
+
+        // Priority snapshot round trip through a re-based restore.
+        let mut w = ByteWriter::new();
+        crate::ckpt::Snapshot::save(&r, &mut w);
+        let bytes = w.into_bytes();
+        let mut pw = ByteWriter::new();
+        r.save_priorities(&mut pw).unwrap();
+        let pbytes = pw.into_bytes();
+
+        let mut b = mk(8 * 2, 2);
+        b.enable_priorities();
+        let mut rd = ByteReader::new(&bytes);
+        crate::ckpt::Snapshot::load(&mut b, &mut rd).unwrap();
+        let mut prd = ByteReader::new(&pbytes);
+        b.load_priorities(&mut prd).unwrap();
+        prd.finish().unwrap();
+        assert_eq!(b.priorities().unwrap().active_count(), r.priorities().unwrap().active_count());
+        assert_eq!(b.priorities().unwrap().total(), r.priorities().unwrap().total());
+        // Logical leaves carry identical latent/gen state: re-serialize.
+        let mut pw2 = ByteWriter::new();
+        b.save_priorities(&mut pw2).unwrap();
+        assert_eq!(pbytes, pw2.into_bytes(), "priority snapshot not re-base invariant");
     }
 
     #[test]

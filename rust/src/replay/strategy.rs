@@ -1,0 +1,629 @@
+//! Pluggable replay sampling strategies (rust/DESIGN.md §11).
+//!
+//! The trainer's draw half is abstracted behind [`SamplingStrategy`]:
+//!
+//! * [`Uniform`] — wraps the historical [`IndexSampler`]: same "REPL" RNG
+//!   stream, same call sequence, so `replay_strategy = "uniform"` with
+//!   `n_step = 1` is **bit-identical to the pre-strategy machine**
+//!   (the draw/assemble pair is literally the old code path).
+//! * [`Proportional`] — prioritized experience replay (Schaul et al. 2015)
+//!   over a deterministic fixed-capacity [`SumTree`], with
+//!   importance-sampling weights applied in the native engine's loss and
+//!   β annealed on the trainer's minibatch counter.
+//!
+//! **Determinism** (the crate's core guarantee): draws advance one RNG on
+//! one mutex in consumption order, exactly like the uniform sampler, and
+//! TD-error priority updates are *deferred* in windowed modes — queued at
+//! train time and applied only at the window barrier, after the staging
+//! flush, right where the next window's grant is issued. Within a window
+//! the tree is therefore frozen: the prefetch worker drawing batch t+1
+//! early sees exactly the tree the inline sampler would have seen, and
+//! any `learner_threads` width produces bit-identical TD errors (§9), so
+//! prioritized trajectories are invariant across learner_threads ×
+//! prefetch × kill-and-resume (pinned by `tests/strategy_equivalence.rs`).
+//! Non-windowed modes (standard / synchronized-inline) interleave training
+//! with replay writes sequentially, so there updates apply immediately
+//! after each train step — the same machine order every run.
+//!
+//! Updates are guarded by per-slot *generations* (the replay push counter
+//! at write time): an update whose transition was overwritten by the
+//! barrier's staging flush is skipped deterministically instead of
+//! re-prioritizing an unrelated transition.
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ReplayStrategy;
+use crate::runtime::TrainBatch;
+use crate::util::rng::Rng;
+
+use super::ring::{IndexSampler, ReplayMemory};
+
+/// Additive constant before the α exponent: p = (|δ| + ε)^α. Keeps every
+/// priority strictly positive so no stored transition starves forever.
+pub const PER_EPS: f64 = 0.01;
+
+/// Everything a driver needs to build the configured strategy (a plain
+/// data carrier so the replay layer stays independent of the launcher
+/// config; see `coordinator::shared::strategy_plan`).
+#[derive(Clone, Copy, Debug)]
+pub struct StrategyPlan {
+    pub kind: ReplayStrategy,
+    /// Priority exponent α (0 = uniform, 1 = fully proportional).
+    pub per_alpha: f64,
+    /// Initial importance-sampling exponent β₀.
+    pub per_beta0: f64,
+    /// Trainer minibatches over which β anneals linearly from β₀ to 1.
+    pub per_beta_anneal: u64,
+    /// Multi-step return horizon (1 = classic one-step targets).
+    pub n_step: usize,
+    /// Discount γ (needed by n-step assembly and the IS-weighted target).
+    pub gamma: f64,
+}
+
+/// One queued priority update: the tree leaf, the generation guard, and
+/// the new (already α-exponentiated) priority.
+#[derive(Clone, Copy, Debug)]
+struct PendingUpdate {
+    leaf: usize,
+    gen: u64,
+    priority: f64,
+}
+
+/// The trainer-facing draw/update seam. One strategy instance exists per
+/// run segment, behind the batch source's mutex; its RNG position is the
+/// `SegmentState::draw_rng` carried across segments and checkpoints.
+pub trait SamplingStrategy: Send {
+    /// Draw-stream RNG position (segment/checkpoint persistence).
+    fn rng_state(&self) -> [u64; 4];
+
+    /// Draw `minibatch` transition indices and assemble them into `out`
+    /// (n-step aware; fills `weights` / `boot_gammas` when the strategy
+    /// or horizon needs them, leaves them empty on the legacy path).
+    /// Records pick provenance so a later [`SamplingStrategy::record_td`]
+    /// can be paired with this batch. Errors until replay holds enough
+    /// transitions.
+    fn fill_batch(
+        &mut self,
+        replay: &ReplayMemory,
+        minibatch: usize,
+        out: &mut TrainBatch,
+    ) -> Result<()>;
+
+    /// Pair one trained batch's TD errors (consumption order — batches are
+    /// trained in draw order) with the oldest outstanding draw and queue
+    /// the priority updates.
+    fn record_td(&mut self, td: &[f32]);
+
+    /// Apply every queued update to the replay's priority index. Windowed
+    /// drivers call this at the window barrier (after the staging flush);
+    /// non-windowed sources call it immediately after each `record_td`.
+    fn apply_updates(&mut self, replay: &mut ReplayMemory);
+
+    /// Any updates queued? (Lets callers skip taking the write lock.)
+    fn has_pending(&self) -> bool;
+}
+
+/// Build the configured strategy with its draw stream resumed at
+/// `rng_state` and its β anneal based at `trains_done` minibatches (both
+/// come from the machine's persistent segment state, so segmentation and
+/// checkpoint/resume are trajectory-neutral).
+pub fn build_strategy(
+    plan: &StrategyPlan,
+    rng_state: [u64; 4],
+    trains_done: u64,
+) -> Box<dyn SamplingStrategy> {
+    match plan.kind {
+        ReplayStrategy::Uniform => Box::new(Uniform::resumed(plan, rng_state)),
+        ReplayStrategy::Proportional => {
+            Box::new(Proportional::resumed(plan, rng_state, trains_done))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Uniform
+// ---------------------------------------------------------------------------
+
+/// The historical uniform sampler behind the strategy seam. With
+/// `n_step = 1` this is byte-for-byte the pre-strategy trainer path:
+/// identical RNG stream, identical draw sequence, identical assembly,
+/// `weights` / `boot_gammas` left empty so the engine takes the legacy
+/// 10-input entry.
+pub struct Uniform {
+    sampler: IndexSampler,
+    n_step: usize,
+    gamma: f32,
+}
+
+impl Uniform {
+    pub fn new(seed: u64, n_step: usize, gamma: f64) -> Uniform {
+        Uniform::from_sampler(IndexSampler::new(seed), n_step, gamma)
+    }
+
+    pub fn from_sampler(sampler: IndexSampler, n_step: usize, gamma: f64) -> Uniform {
+        Uniform { sampler, n_step: n_step.max(1), gamma: gamma as f32 }
+    }
+
+    fn resumed(plan: &StrategyPlan, rng_state: [u64; 4]) -> Uniform {
+        Uniform::from_sampler(IndexSampler::from_rng_state(rng_state), plan.n_step, plan.gamma)
+    }
+}
+
+impl SamplingStrategy for Uniform {
+    fn rng_state(&self) -> [u64; 4] {
+        self.sampler.rng_state()
+    }
+
+    fn fill_batch(
+        &mut self,
+        replay: &ReplayMemory,
+        minibatch: usize,
+        out: &mut TrainBatch,
+    ) -> Result<()> {
+        let picks = self.sampler.draw(replay, minibatch)?;
+        if self.n_step == 1 {
+            // The legacy path: no weights, no per-sample discounts, the
+            // engine's 10-input entry — bit-identical to the seed machine.
+            out.weights.clear();
+            out.boot_gammas.clear();
+            replay.assemble(&picks, out);
+        } else {
+            // Same draws (uniform n-step reuses the 1-step index
+            // distribution); assembly widens to the n-step window. The
+            // all-ones weights keep the engine's weighted path exact
+            // (x * 1.0 is the identity on every finite f32).
+            out.weights.clear();
+            out.weights.resize(minibatch, 1.0);
+            replay.assemble_nstep(&picks, self.n_step, self.gamma, out);
+        }
+        Ok(())
+    }
+
+    fn record_td(&mut self, _td: &[f32]) {}
+
+    fn apply_updates(&mut self, _replay: &mut ReplayMemory) {}
+
+    fn has_pending(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Proportional (prioritized experience replay)
+// ---------------------------------------------------------------------------
+
+/// Proportional PER: P(i) = pᵢ / Σp over the sum-tree's active leaves,
+/// IS weight wᵢ = (N·P(i))^(−β) normalized by the batch maximum,
+/// β = β₀ + (1−β₀)·min(1, trains / anneal).
+pub struct Proportional {
+    rng: Rng,
+    alpha: f64,
+    beta0: f64,
+    beta_anneal: u64,
+    n_step: usize,
+    gamma: f32,
+    /// Minibatches drawn so far over the whole run (β anneal clock;
+    /// resumes from the machine's `trains_done`, since every drawn batch
+    /// is trained exactly once in order).
+    draws: u64,
+    /// Pick provenance of drawn-but-not-yet-recorded batches (FIFO — the
+    /// prefetch worker may run several draws ahead of the trainer).
+    pending_picks: VecDeque<Vec<(usize, u64)>>,
+    /// Updates queued for the next barrier (windowed modes).
+    queued: Vec<PendingUpdate>,
+}
+
+impl Proportional {
+    fn resumed(plan: &StrategyPlan, rng_state: [u64; 4], trains_done: u64) -> Proportional {
+        Proportional {
+            rng: Rng::from_state(rng_state),
+            alpha: plan.per_alpha,
+            beta0: plan.per_beta0,
+            beta_anneal: plan.per_beta_anneal.max(1),
+            n_step: plan.n_step.max(1),
+            gamma: plan.gamma as f32,
+            draws: trains_done,
+            pending_picks: VecDeque::new(),
+            queued: Vec::new(),
+        }
+    }
+
+    /// Current IS exponent β for the `draws`-th minibatch.
+    fn beta(&self) -> f64 {
+        let frac = (self.draws as f64 / self.beta_anneal as f64).min(1.0);
+        self.beta0 + (1.0 - self.beta0) * frac
+    }
+}
+
+impl SamplingStrategy for Proportional {
+    fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    fn fill_batch(
+        &mut self,
+        replay: &ReplayMemory,
+        minibatch: usize,
+        out: &mut TrainBatch,
+    ) -> Result<()> {
+        let pi = replay.priorities().ok_or_else(|| {
+            anyhow!("proportional strategy needs a priority-indexed replay (enable_priorities)")
+        })?;
+        let n_avail = replay.sampleable();
+        let total = pi.total();
+        if n_avail == 0 || total <= 0.0 {
+            bail!("replay has no sampleable transitions yet (len {})", replay.len());
+        }
+        let beta = self.beta();
+        let mut picks = Vec::with_capacity(minibatch);
+        let mut provenance = Vec::with_capacity(minibatch);
+        let mut weights = Vec::with_capacity(minibatch);
+        let mut w_max = 0.0f64;
+        for _ in 0..minibatch {
+            let u = self.rng.f64() * total;
+            let leaf = pi.sample(u);
+            let idx = replay.leaf_to_index(leaf).ok_or_else(|| {
+                anyhow!("sum-tree sampled an inactive leaf {leaf} (index corrupt)")
+            })?;
+            picks.push(idx);
+            provenance.push((leaf, pi.gen(leaf)));
+            let p = pi.value(leaf) / total;
+            let w = (n_avail as f64 * p).powf(-beta);
+            w_max = w_max.max(w);
+            weights.push(w);
+        }
+        out.weights.clear();
+        out.weights.extend(weights.iter().map(|&w| (w / w_max) as f32));
+        replay.assemble_nstep(&picks, self.n_step, self.gamma, out);
+        self.pending_picks.push_back(provenance);
+        self.draws += 1;
+        Ok(())
+    }
+
+    fn record_td(&mut self, td: &[f32]) {
+        let Some(picks) = self.pending_picks.pop_front() else {
+            debug_assert!(false, "record_td without an outstanding draw");
+            return;
+        };
+        debug_assert_eq!(picks.len(), td.len(), "TD errors must match the drawn batch");
+        for ((leaf, gen), &d) in picks.into_iter().zip(td.iter()) {
+            let priority = (d.abs() as f64 + PER_EPS).powf(self.alpha);
+            self.queued.push(PendingUpdate { leaf, gen, priority });
+        }
+    }
+
+    fn apply_updates(&mut self, replay: &mut ReplayMemory) {
+        if self.queued.is_empty() {
+            return;
+        }
+        let pi = replay
+            .priorities_mut()
+            .expect("proportional strategy needs a priority-indexed replay");
+        for u in self.queued.drain(..) {
+            // Generation-guarded: a transition the staging flush already
+            // overwrote keeps the *new* occupant's max-priority seed.
+            pi.update(u.leaf, u.gen, u.priority);
+        }
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.queued.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sum-tree + priority index
+// ---------------------------------------------------------------------------
+
+/// Deterministic fixed-capacity sum-tree over f64 masses.
+///
+/// Implemented as a flat perfect binary tree (`tree[1]` = root,
+/// children of `i` at `2i`/`2i+1`, leaves in the last level). `set`
+/// recomputes every ancestor as the *fresh* sum of its two children, so
+/// each internal node is a pure function of the current leaf values —
+/// the tree's state (and therefore every sampled index) depends only on
+/// the leaf history, never on update interleaving.
+pub struct SumTree {
+    tree: Vec<f64>,
+    base: usize,
+    leaves: usize,
+}
+
+impl SumTree {
+    pub fn new(leaves: usize) -> SumTree {
+        let base = leaves.max(1).next_power_of_two();
+        SumTree { tree: vec![0.0; 2 * base], base, leaves }
+    }
+
+    pub fn len(&self) -> usize {
+        self.leaves
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leaves == 0
+    }
+
+    pub fn total(&self) -> f64 {
+        self.tree[1]
+    }
+
+    pub fn get(&self, leaf: usize) -> f64 {
+        debug_assert!(leaf < self.leaves);
+        self.tree[self.base + leaf]
+    }
+
+    pub fn set(&mut self, leaf: usize, mass: f64) {
+        debug_assert!(leaf < self.leaves);
+        debug_assert!(mass >= 0.0 && mass.is_finite());
+        let mut i = self.base + leaf;
+        self.tree[i] = mass;
+        while i > 1 {
+            i /= 2;
+            self.tree[i] = self.tree[2 * i] + self.tree[2 * i + 1];
+        }
+    }
+
+    /// Leaf index whose cumulative-mass interval contains `u`. Zero-mass
+    /// subtrees are never entered, so for `total() > 0` the returned leaf
+    /// always carries positive mass even when `u` rounds up to `total()`.
+    pub fn sample(&self, u: f64) -> usize {
+        let mut u = u.max(0.0);
+        let mut i = 1usize;
+        while i < self.base {
+            let left = self.tree[2 * i];
+            if u < left || self.tree[2 * i + 1] == 0.0 {
+                i = 2 * i;
+            } else {
+                u -= left;
+                i = 2 * i + 1;
+            }
+        }
+        (i - self.base).min(self.leaves.saturating_sub(1))
+    }
+
+    /// Structural invariant check (tests): every parent equals the exact
+    /// f64 sum of its children.
+    #[cfg(test)]
+    pub(crate) fn check_conservation(&self) -> bool {
+        (1..self.base).all(|i| self.tree[i] == self.tree[2 * i] + self.tree[2 * i + 1])
+    }
+}
+
+/// Per-transition priority state living inside [`ReplayMemory`], indexed
+/// by *physical* leaf (`stream * per_stream_cap + physical_slot`), which
+/// is stable until the slot is overwritten.
+///
+/// Each leaf carries a *latent* priority (the transition's stored
+/// priority), an *active* flag (is the transition currently sampleable —
+/// maintained by `ReplayMemory::push` as slots gain successors, fall
+/// below the history threshold, or are overwritten), and a *generation*
+/// (the replay push counter at write time, the update guard). The tree
+/// holds `latent` for active leaves and 0 otherwise.
+pub struct PriorityIndex {
+    tree: SumTree,
+    latent: Vec<f64>,
+    active: Vec<bool>,
+    gen: Vec<u64>,
+    active_count: usize,
+    max_priority: f64,
+}
+
+impl PriorityIndex {
+    pub fn new(leaves: usize) -> PriorityIndex {
+        PriorityIndex {
+            tree: SumTree::new(leaves),
+            latent: vec![0.0; leaves],
+            active: vec![false; leaves],
+            gen: vec![0; leaves],
+            active_count: 0,
+            max_priority: 1.0,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.tree.total()
+    }
+
+    /// Effective (sampling) mass of a leaf: latent if active, else 0.
+    pub fn value(&self, leaf: usize) -> f64 {
+        self.tree.get(leaf)
+    }
+
+    pub fn gen(&self, leaf: usize) -> u64 {
+        self.gen[leaf]
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active_count
+    }
+
+    pub fn max_priority(&self) -> f64 {
+        self.max_priority
+    }
+
+    pub fn sample(&self, u: f64) -> usize {
+        self.tree.sample(u)
+    }
+
+    /// A new transition was written at `leaf`: seed it at the running max
+    /// priority (every transition is drawn at least once before its first
+    /// TD error exists), mark it inactive (the newest slot has no stored
+    /// successor yet), and stamp its generation.
+    pub(crate) fn insert(&mut self, leaf: usize, gen: u64) {
+        self.latent[leaf] = self.max_priority;
+        self.gen[leaf] = gen;
+        if self.active[leaf] {
+            self.active[leaf] = false;
+            self.active_count -= 1;
+        }
+        if self.tree.get(leaf) != 0.0 {
+            self.tree.set(leaf, 0.0);
+        }
+    }
+
+    /// The transition at `leaf` became sampleable.
+    pub(crate) fn activate(&mut self, leaf: usize) {
+        if !self.active[leaf] {
+            self.active[leaf] = true;
+            self.active_count += 1;
+            self.tree.set(leaf, self.latent[leaf]);
+        }
+    }
+
+    /// The transition at `leaf` fell out of the sampleable window.
+    pub(crate) fn deactivate(&mut self, leaf: usize) {
+        if self.active[leaf] {
+            self.active[leaf] = false;
+            self.active_count -= 1;
+            self.tree.set(leaf, 0.0);
+        }
+    }
+
+    /// Generation-guarded priority update. Returns false (and does
+    /// nothing) when the slot was overwritten since the draw.
+    pub fn update(&mut self, leaf: usize, gen: u64, priority: f64) -> bool {
+        if self.gen[leaf] != gen {
+            return false;
+        }
+        debug_assert!(priority > 0.0 && priority.is_finite());
+        self.latent[leaf] = priority;
+        self.max_priority = self.max_priority.max(priority);
+        if self.active[leaf] {
+            self.tree.set(leaf, priority);
+        }
+        true
+    }
+
+    /// Raw per-leaf state (checkpointing; see
+    /// `ReplayMemory::save_priorities`).
+    pub(crate) fn latent(&self, leaf: usize) -> f64 {
+        self.latent[leaf]
+    }
+
+    pub(crate) fn set_restored(&mut self, leaf: usize, latent: f64, gen: u64) {
+        self.latent[leaf] = latent;
+        self.gen[leaf] = gen;
+        if self.active[leaf] {
+            self.tree.set(leaf, latent);
+        }
+    }
+
+    pub(crate) fn set_max_priority(&mut self, v: f64) {
+        self.max_priority = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sumtree_set_get_total() {
+        let mut t = SumTree::new(5);
+        assert_eq!(t.total(), 0.0);
+        t.set(0, 1.0);
+        t.set(3, 2.5);
+        t.set(4, 0.5);
+        assert_eq!(t.get(3), 2.5);
+        assert_eq!(t.total(), 4.0);
+        t.set(3, 0.0);
+        assert_eq!(t.total(), 1.5);
+        assert!(t.check_conservation());
+    }
+
+    #[test]
+    fn sumtree_sample_never_lands_on_zero_mass() {
+        let mut t = SumTree::new(8);
+        t.set(2, 1.0);
+        t.set(5, 3.0);
+        // Probe the whole mass range including the exact upper edge.
+        for k in 0..=100 {
+            let u = t.total() * k as f64 / 100.0;
+            let leaf = t.sample(u);
+            assert!(leaf == 2 || leaf == 5, "u {u} -> leaf {leaf}");
+            assert!(t.get(leaf) > 0.0);
+        }
+        assert_eq!(t.sample(0.0), 2);
+        assert_eq!(t.sample(0.999), 2);
+        assert_eq!(t.sample(1.0), 5);
+        assert_eq!(t.sample(4.0), 5, "u == total clamps into the last positive leaf");
+    }
+
+    #[test]
+    fn priority_index_insert_activate_update() {
+        let mut pi = PriorityIndex::new(4);
+        pi.insert(0, 1);
+        assert_eq!(pi.active_count(), 0);
+        assert_eq!(pi.total(), 0.0);
+        pi.activate(0);
+        assert_eq!(pi.active_count(), 1);
+        assert_eq!(pi.total(), 1.0, "fresh transitions carry max_priority");
+        assert!(pi.update(0, 1, 4.0));
+        assert_eq!(pi.total(), 4.0);
+        assert_eq!(pi.max_priority(), 4.0);
+        // Wrong generation: guarded out.
+        assert!(!pi.update(0, 9, 100.0));
+        assert_eq!(pi.total(), 4.0);
+        // Overwrite: new occupant seeds at the (raised) max priority.
+        pi.insert(0, 2);
+        assert_eq!(pi.total(), 0.0);
+        pi.activate(0);
+        assert_eq!(pi.total(), 4.0);
+        pi.deactivate(0);
+        assert_eq!(pi.total(), 0.0);
+        assert_eq!(pi.active_count(), 0);
+    }
+
+    #[test]
+    fn uniform_strategy_preserves_legacy_draw_sequence() {
+        let fill = |r: &mut ReplayMemory| {
+            for v in 0..40u8 {
+                r.push(0, &[v; 8], v, v as f32 * 0.25, v % 9 == 8, v == 0 || v % 9 == 0);
+            }
+        };
+        let mut legacy = ReplayMemory::new(64, 1, 8, 4, 11).unwrap();
+        let mut strat_mem = ReplayMemory::new(64, 1, 8, 4, 11).unwrap();
+        fill(&mut legacy);
+        fill(&mut strat_mem);
+        let mut strat = Uniform::new(11, 1, 0.99);
+        for _ in 0..5 {
+            let mut want = TrainBatch::default();
+            legacy.sample(16, &mut want).unwrap();
+            let mut got = TrainBatch::default();
+            strat.fill_batch(&strat_mem, 16, &mut got).unwrap();
+            assert_eq!(want.states, got.states);
+            assert_eq!(want.actions, got.actions);
+            assert_eq!(want.rewards, got.rewards);
+            assert_eq!(want.dones, got.dones);
+            assert!(got.weights.is_empty(), "legacy path must not emit weights");
+            assert!(got.boot_gammas.is_empty(), "legacy path must not emit discounts");
+        }
+    }
+
+    #[test]
+    fn proportional_beta_anneals_on_the_train_clock() {
+        let plan = StrategyPlan {
+            kind: ReplayStrategy::Proportional,
+            per_alpha: 0.6,
+            per_beta0: 0.4,
+            per_beta_anneal: 100,
+            n_step: 1,
+            gamma: 0.99,
+        };
+        let mut p = Proportional::resumed(&plan, Rng::new(1).state(), 0);
+        assert!((p.beta() - 0.4).abs() < 1e-12);
+        p.draws = 50;
+        assert!((p.beta() - 0.7).abs() < 1e-12);
+        p.draws = 100;
+        assert!((p.beta() - 1.0).abs() < 1e-12);
+        p.draws = 10_000;
+        assert!((p.beta() - 1.0).abs() < 1e-12, "β caps at 1");
+        // Resuming from a checkpointed train count lands on the exact β
+        // the uninterrupted machine would use for that minibatch.
+        p.draws = 50;
+        let r = Proportional::resumed(&plan, Rng::new(1).state(), 50);
+        assert_eq!(r.beta().to_bits(), p.beta().to_bits());
+    }
+}

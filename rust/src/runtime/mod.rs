@@ -30,7 +30,7 @@ pub use engine::{EntryKind, ExecutionEngine};
 pub use manifest::{Dtype, Entry, InputSig, Manifest, NetSpec};
 pub use native::{NativeEngine, NetArch};
 pub use pool::ComputePool;
-pub use qnet::{Policy, QNet, QNetSnapshot, TrainBatch};
+pub use qnet::{Policy, QNet, QNetSnapshot, TrainBatch, TrainOutcome};
 pub use tensor::{DataVec, DataView, HostTensor, TensorView};
 
 use std::path::PathBuf;

@@ -392,10 +392,15 @@ struct ShardSlot {
     conv_out: Vec<Vec<f32>>,
     conv_patches: Vec<Vec<f32>>,
     fc_out: Vec<Vec<f32>>,
-    /// dL/dq rows, already scaled by 1/batch.
+    /// dL/dq rows, already scaled by 1/batch (and the IS weight, when
+    /// weighted).
     dq: Vec<f32>,
-    /// Per-sample Huber losses (summed in global order by the caller).
+    /// Per-sample (weighted) Huber losses (summed in global order by the
+    /// caller).
     losses: Vec<f32>,
+    /// Raw per-sample TD errors `q(s,a) - target` (pre-weight; the
+    /// proportional replay strategy's priority signal).
+    td: Vec<f32>,
     /// Masked (post-ReLU) deltas per hidden layer, `[rows, width]`.
     dfc: Vec<Vec<f32>>,
     /// Masked deltas per conv layer, `[rows, OH, OW, F]`.
@@ -421,6 +426,8 @@ fn shard_phase_a(
     next_states: &[u8],
     dones: &[f32],
     gamma: f32,
+    weights: Option<&[f32]>,
+    boot_gammas: Option<&[f32]>,
     double: bool,
     batch_total: usize,
     slot: &mut ShardSlot,
@@ -454,9 +461,14 @@ fn shard_phase_a(
         }
     }
 
-    // Per-sample TD error -> per-sample loss and dL/dq.
+    // Per-sample TD error -> per-sample loss and dL/dq. The unweighted
+    // arm below is byte-for-byte the historical computation (the weighted
+    // arm multiplies the IS weight in, and substitutes the per-sample
+    // bootstrap discount γᵐ for the scalar γ — identical expression shape,
+    // so `boot_gammas = [γ; B]` reproduces the scalar path bitwise).
     let mut dq = vec![0.0f32; rows * a];
     let mut losses = vec![0.0f32; rows];
+    let mut td = vec![0.0f32; rows];
     for r in 0..rows {
         let b = lo + r;
         let act = actions[b];
@@ -464,10 +476,21 @@ fn shard_phase_a(
             bail!("train: action {act} out of range 0..{a}");
         }
         let q_sel = fwd.q[r * a + act as usize];
-        let target = rewards[b] + gamma * (1.0 - dones[b]) * bootstrap[r];
+        let bg = boot_gammas.map_or(gamma, |g| g[b]);
+        let target = rewards[b] + bg * (1.0 - dones[b]) * bootstrap[r];
         let d = q_sel - target;
-        losses[r] = huber(d);
-        dq[r * a + act as usize] = huber_grad(d) / batch_total as f32;
+        td[r] = d;
+        match weights {
+            None => {
+                losses[r] = huber(d);
+                dq[r * a + act as usize] = huber_grad(d) / batch_total as f32;
+            }
+            Some(ws) => {
+                let w = ws[b];
+                losses[r] = w * huber(d);
+                dq[r * a + act as usize] = w * huber_grad(d) / batch_total as f32;
+            }
+        }
     }
 
     // ---- backward deltas (per-sample; weight grads come in Phase B) ------
@@ -538,15 +561,20 @@ fn shard_phase_a(
     slot.fc_out = fwd.fc_out;
     slot.dq = dq;
     slot.losses = losses;
+    slot.td = td;
     slot.dfc = dfc;
     slot.dconv = dconv;
     Ok(())
 }
 
 /// TD loss + full parameter gradient (the train entry minus the optimizer),
-/// sharded over `pool`. Returns (grad, loss). Bit-identical to
+/// sharded over `pool`. Returns (grad, loss, per-sample TD errors). With
+/// `weights`/`boot_gammas` absent this is bit-identical to
 /// `golden::reference_td_grads` for every pool width — see the module docs
 /// for why the two-phase split preserves the serial accumulation order.
+/// `weights` scales each sample's loss/gradient (PER importance sampling);
+/// `boot_gammas` substitutes a per-sample bootstrap discount γᵐ for the
+/// entry's scalar γ (n-step returns, rust/DESIGN.md §11).
 #[allow(clippy::too_many_arguments)]
 pub fn td_grads(
     arch: &NetArch,
@@ -558,12 +586,24 @@ pub fn td_grads(
     next_states: &[u8],
     dones: &[f32],
     gamma: f32,
+    weights: Option<&[f32]>,
+    boot_gammas: Option<&[f32]>,
     double: bool,
     pool: &ComputePool,
-) -> Result<(Vec<f32>, f32)> {
+) -> Result<(Vec<f32>, f32, Vec<f32>)> {
     let batch = actions.len();
     if batch == 0 {
         bail!("train: empty minibatch");
+    }
+    if let Some(w) = weights {
+        if w.len() != batch {
+            bail!("train: {} weights for a {batch}-sample minibatch", w.len());
+        }
+    }
+    if let Some(g) = boot_gammas {
+        if g.len() != batch {
+            bail!("train: {} bootstrap discounts for a {batch}-sample minibatch", g.len());
+        }
     }
     let p = Params::new(arch, theta)?;
     let pt = Params::new(arch, target_theta)?;
@@ -582,7 +622,7 @@ pub fn td_grads(
                 Box::new(move || {
                     if let Err(e) = shard_phase_a(
                         arch, p, pt, states, actions, rewards, next_states, dones, gamma,
-                        double, batch, slot,
+                        weights, boot_gammas, double, batch, slot,
                     ) {
                         slot.err = Some(e.to_string());
                     }
@@ -606,6 +646,12 @@ pub fn td_grads(
         }
     }
     loss /= batch as f32;
+
+    // Per-sample TD errors, stitched back in global order.
+    let mut td_all = vec![0.0f32; batch];
+    for slot in &slots {
+        td_all[slot.lo..slot.hi].copy_from_slice(&slot.td);
+    }
 
     // ---- Phase B: parameter reductions in global sample order ------------
     // Each task owns a disjoint row range of one tensor and walks ALL
@@ -786,7 +832,7 @@ pub fn td_grads(
     }
     pool.scope(tasks);
 
-    Ok((grad, loss))
+    Ok((grad, loss, td_all))
 }
 
 // ---------------------------------------------------------------------------
@@ -922,8 +968,11 @@ impl ExecutionEngine for NativeEngine {
                 Ok(vec![HostTensor::f32(q, vec![batch, arch.actions])])
             }
             EntryKind::Train { batch, double } => {
-                if args.len() != 10 {
-                    bail!("train {key:?}: expected 10 inputs, got {}", args.len());
+                // 10 inputs = the historical ABI; 12 appends the extended
+                // per-sample arrays (IS weights, bootstrap discounts) used
+                // by the prioritized / n-step replay strategies.
+                if args.len() != 10 && args.len() != 12 {
+                    bail!("train {key:?}: expected 10 or 12 inputs, got {}", args.len());
                 }
                 let theta = args[0].as_f32("train theta")?;
                 let target = args[1].as_f32("train target")?;
@@ -935,15 +984,23 @@ impl ExecutionEngine for NativeEngine {
                 let next_states = args[7].as_u8("train next_states")?;
                 let dones = args[8].as_f32("train dones")?;
                 let lr = args[9].as_f32("train lr")?;
+                let (weights, boot_gammas) = if args.len() == 12 {
+                    (
+                        Some(args[10].as_f32("train weights")?),
+                        Some(args[11].as_f32("train boot_gammas")?),
+                    )
+                } else {
+                    (None, None)
+                };
                 if actions.len() != batch || rewards.len() != batch || dones.len() != batch {
                     bail!("train {key:?}: batch vectors must have length {batch}");
                 }
                 if lr.len() != 1 {
                     bail!("train {key:?}: lr must be a scalar");
                 }
-                let (grad, loss) = td_grads(
+                let (grad, loss, td) = td_grads(
                     arch, theta, target, states, actions, rewards, next_states, dones,
-                    entry.gamma, double, &self.pool,
+                    entry.gamma, weights, boot_gammas, double, &self.pool,
                 )?;
                 let mut theta2 = theta.to_vec();
                 let mut g2 = g.to_vec();
@@ -955,6 +1012,7 @@ impl ExecutionEngine for NativeEngine {
                     HostTensor::f32(g2, vec![p]),
                     HostTensor::f32(s2, vec![p]),
                     HostTensor::scalar_f32(loss),
+                    HostTensor::f32(td, vec![batch]),
                 ])
             }
         }
@@ -1049,12 +1107,16 @@ mod tests {
         let batch = micro_batch(&arch, &mut rng);
         let (states, actions, rewards, next, dones) = batch.clone();
         let pool = ComputePool::new(1);
-        let (grad, loss) = td_grads(
-            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, false,
-            &pool,
+        let (grad, loss, td) = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+            None, false, &pool,
         )
         .unwrap();
         assert!((micro_loss(&arch, &theta, &target, &batch, false) - loss).abs() < 1e-6);
+        // TD errors: |mean Huber(d)| must reproduce the loss.
+        assert_eq!(td.len(), actions.len());
+        let loss_from_td: f32 = td.iter().map(|&d| huber(d)).sum::<f32>() / td.len() as f32;
+        assert_eq!(loss_from_td.to_bits(), loss.to_bits(), "TD errors inconsistent with loss");
 
         // Central differences on a spread of parameter indices.
         let eps = 1e-3f32;
@@ -1083,9 +1145,9 @@ mod tests {
         let batch = micro_batch(&arch, &mut rng);
         let (states, actions, rewards, next, dones) = batch.clone();
         let pool = ComputePool::new(1);
-        let (grad, loss) = td_grads(
-            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, true,
-            &pool,
+        let (grad, loss, _td) = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+            None, true, &pool,
         )
         .unwrap();
         assert!((micro_loss(&arch, &theta, &target, &batch, true) - loss).abs() < 1e-6);
@@ -1114,20 +1176,118 @@ mod tests {
         let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
         let baseline = {
             let pool = ComputePool::new(1);
-            td_grads(&arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, false, &pool)
-                .unwrap()
+            td_grads(
+                &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+                None, false, &pool,
+            )
+            .unwrap()
         };
         for threads in [2usize, 3, 4] {
             let pool = ComputePool::new(threads);
-            let (grad, loss) = td_grads(
-                &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, false,
-                &pool,
+            let (grad, loss, td) = td_grads(
+                &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+                None, false, &pool,
             )
             .unwrap();
             assert_eq!(loss.to_bits(), baseline.1.to_bits(), "{threads} threads: loss drifted");
             let a: Vec<u32> = baseline.0.iter().map(|v| v.to_bits()).collect();
             let b: Vec<u32> = grad.iter().map(|v| v.to_bits()).collect();
             assert_eq!(a, b, "{threads} threads: grads not bit-identical");
+            let ta: Vec<u32> = baseline.2.iter().map(|v| v.to_bits()).collect();
+            let tb: Vec<u32> = td.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ta, tb, "{threads} threads: TD errors not bit-identical");
+        }
+    }
+
+    /// The extended 12-input path degenerates exactly: all-ones weights
+    /// plus a constant-γ discount vector reproduce the legacy 10-input
+    /// computation bit-for-bit (the uniform n-step / proportional-at-
+    /// uniform-priorities cases lean on this identity).
+    #[test]
+    fn unit_weights_and_scalar_gamma_vector_match_legacy_bitwise() {
+        let arch = micro_arch();
+        let mut rng = Rng::new(45);
+        let theta = init_params(&arch, 13);
+        let target = init_params(&arch, 14);
+        let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
+        let pool = ComputePool::new(2);
+        let legacy = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+            None, false, &pool,
+        )
+        .unwrap();
+        let ones = vec![1.0f32; actions.len()];
+        let gammas = vec![0.9f32; actions.len()];
+        let ext = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9,
+            Some(&ones), Some(&gammas), false, &pool,
+        )
+        .unwrap();
+        assert_eq!(legacy.1.to_bits(), ext.1.to_bits(), "loss drifted");
+        let a: Vec<u32> = legacy.0.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = ext.0.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "unit-weighted grads not bit-identical to legacy");
+    }
+
+    /// IS weights scale each sample's loss contribution; halving every
+    /// weight halves the loss, and a zero weight removes its sample's
+    /// gradient while the TD error stays reported.
+    #[test]
+    fn weights_scale_loss_and_gradient() {
+        let arch = micro_arch();
+        let mut rng = Rng::new(46);
+        let theta = init_params(&arch, 15);
+        let target = init_params(&arch, 16);
+        let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
+        let b = actions.len();
+        let pool = ComputePool::new(1);
+        let gammas = vec![0.9f32; b];
+        let ones = vec![1.0f32; b];
+        let halves = vec![0.5f32; b];
+        let full = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9,
+            Some(&ones), Some(&gammas), false, &pool,
+        )
+        .unwrap();
+        let half = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9,
+            Some(&halves), Some(&gammas), false, &pool,
+        )
+        .unwrap();
+        assert!((half.1 - 0.5 * full.1).abs() < 1e-7, "loss must scale with weights");
+        for (h, f) in half.0.iter().zip(full.0.iter()) {
+            assert!((h - 0.5 * f).abs() < 1e-6, "grad must scale with weights");
+        }
+        // TD errors are pre-weight.
+        assert_eq!(
+            full.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            half.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    /// Per-sample bootstrap discounts replace the scalar γ: γᵐ = 0 turns
+    /// a sample into a pure-reward target.
+    #[test]
+    fn boot_gammas_replace_scalar_gamma_per_sample() {
+        let arch = micro_arch();
+        let mut rng = Rng::new(47);
+        let theta = init_params(&arch, 17);
+        let target = init_params(&arch, 18);
+        let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
+        let b = actions.len();
+        let pool = ComputePool::new(1);
+        let ones = vec![1.0f32; b];
+        let zeros = vec![0.0f32; b];
+        let (_, _, td_zero) = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9,
+            Some(&ones), Some(&zeros), false, &pool,
+        )
+        .unwrap();
+        // With γᵐ = 0 the target is exactly the reward.
+        let q = infer(&arch, &theta, &states, b).unwrap();
+        for i in 0..b {
+            let want = q[i * arch.actions + actions[i] as usize] - rewards[i];
+            assert!((td_zero[i] - want).abs() < 1e-6, "sample {i}: {} vs {want}", td_zero[i]);
         }
     }
 

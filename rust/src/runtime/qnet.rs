@@ -30,6 +30,15 @@ struct TrainState {
 }
 
 /// One training minibatch in host memory (assembled by the replay sampler).
+///
+/// `weights` and `boot_gammas` are the extended per-sample inputs of the
+/// prioritized / n-step replay strategies (rust/DESIGN.md §11). Both empty
+/// (the uniform 1-step path) selects the engine's historical 10-input
+/// train entry — byte-for-byte the pre-strategy machine; both present
+/// selects the 12-input entry: the loss and gradient of sample `b` are
+/// scaled by `weights[b]`, and the bootstrap term uses the per-sample
+/// discount `boot_gammas[b]` (γᵐ for an m-step window) in place of the
+/// entry's scalar γ.
 #[derive(Clone, Debug, Default)]
 pub struct TrainBatch {
     pub states: Vec<u8>,
@@ -37,6 +46,20 @@ pub struct TrainBatch {
     pub rewards: Vec<f32>,
     pub next_states: Vec<u8>,
     pub dones: Vec<f32>,
+    /// Importance-sampling weight per sample (empty = unweighted).
+    pub weights: Vec<f32>,
+    /// Bootstrap discount γᵐ per sample (empty = the entry's scalar γ).
+    pub boot_gammas: Vec<f32>,
+}
+
+/// Result of one minibatch update.
+#[derive(Clone, Debug, Default)]
+pub struct TrainOutcome {
+    /// Mean (weighted) Huber TD loss.
+    pub loss: f32,
+    /// Raw per-sample TD errors `q(s,a) - target` (priority updates).
+    /// Empty when the engine does not report them.
+    pub td_errors: Vec<f32>,
 }
 
 /// Which parameter set drives action selection.
@@ -199,6 +222,12 @@ impl QNet {
 
     /// One gradient step on a minibatch. Returns the TD loss.
     pub fn train_step(&self, batch: &TrainBatch, lr: f32) -> Result<f32> {
+        Ok(self.train_step_td(batch, lr)?.loss)
+    }
+
+    /// [`QNet::train_step`] returning the per-sample TD errors alongside
+    /// the loss (the proportional replay strategy's priority signal).
+    pub fn train_step_td(&self, batch: &TrainBatch, lr: f32) -> Result<TrainOutcome> {
         let b = self.train_batch;
         if batch.actions.len() != b || batch.rewards.len() != b || batch.dones.len() != b {
             bail!("train batch vectors must have length {b}");
@@ -207,6 +236,15 @@ impl QNet {
         if batch.states.len() != b * h * w * c || batch.next_states.len() != b * h * w * c {
             bail!("train batch states must have {} bytes", b * h * w * c);
         }
+        let extended = !batch.weights.is_empty() || !batch.boot_gammas.is_empty();
+        if extended && (batch.weights.len() != b || batch.boot_gammas.len() != b) {
+            bail!(
+                "weighted/n-step train batch must carry {b} weights AND {b} bootstrap discounts \
+                 (got {} / {})",
+                batch.weights.len(),
+                batch.boot_gammas.len()
+            );
+        }
         let p = self.spec.param_count;
         let states_shape = [b, h, w, c];
         let lr_buf = [lr];
@@ -214,21 +252,23 @@ impl QNet {
         let key = qkey(&self.spec.name, &self.train_key);
 
         let mut st = self.train.lock().unwrap();
-        let outputs = self.device.execute(
-            &key,
-            &[
-                TensorView::f32(&st.theta, &[p]),
-                TensorView::f32(&tm, &[p]),
-                TensorView::f32(&st.g, &[p]),
-                TensorView::f32(&st.s, &[p]),
-                TensorView::u8(&batch.states, &states_shape),
-                TensorView::i32(&batch.actions, &[b]),
-                TensorView::f32(&batch.rewards, &[b]),
-                TensorView::u8(&batch.next_states, &states_shape),
-                TensorView::f32(&batch.dones, &[b]),
-                TensorView::scalar(&lr_buf),
-            ],
-        )?;
+        let mut args = vec![
+            TensorView::f32(&st.theta, &[p]),
+            TensorView::f32(&tm, &[p]),
+            TensorView::f32(&st.g, &[p]),
+            TensorView::f32(&st.s, &[p]),
+            TensorView::u8(&batch.states, &states_shape),
+            TensorView::i32(&batch.actions, &[b]),
+            TensorView::f32(&batch.rewards, &[b]),
+            TensorView::u8(&batch.next_states, &states_shape),
+            TensorView::f32(&batch.dones, &[b]),
+            TensorView::scalar(&lr_buf),
+        ];
+        if extended {
+            args.push(TensorView::f32(&batch.weights, &[b]));
+            args.push(TensorView::f32(&batch.boot_gammas, &[b]));
+        }
+        let outputs = self.device.execute(&key, &args)?;
         if outputs.len() < 4 {
             bail!("train step returned fewer than 4 outputs");
         }
@@ -237,6 +277,18 @@ impl QNet {
         let g = it.next().unwrap().into_f32("train g'")?;
         let s = it.next().unwrap().into_f32("train s'")?;
         let loss = it.next().unwrap().first_f32("train loss")?;
+        let td_errors = match it.next() {
+            Some(t) => t.into_f32("train td errors")?,
+            // The extended ABI includes the TD-error output by definition;
+            // an engine that compiled only the legacy 4-output entry (the
+            // XLA artifact path) must fail loudly here, not silently
+            // starve the priority updates.
+            None if extended => bail!(
+                "engine returned no TD-error output; the weighted/n-step train ABI \
+                 requires the native engine (rust/DESIGN.md §11)"
+            ),
+            None => Vec::new(),
+        };
         if theta.len() != p || g.len() != p || s.len() != p {
             bail!("train step returned wrong parameter sizes");
         }
@@ -245,7 +297,7 @@ impl QNet {
         st.s = s;
         drop(st);
         self.train_steps.fetch_add(1, Ordering::Relaxed);
-        Ok(loss)
+        Ok(TrainOutcome { loss, td_errors })
     }
 
     /// Target-network update: theta_minus <- theta.

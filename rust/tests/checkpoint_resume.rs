@@ -281,6 +281,148 @@ fn mismatched_config_refuses_to_resume() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ---- the proportional strategy's sum-tree/β-anneal section ---------------
+
+/// Write one checkpoint of a proportional (prioritized-replay) run; its
+/// "priorities" section carries the PER hyperparameters and the sum-tree
+/// state and sits last in state.bin (no evaluator at smoke scale), so
+/// truncation lands on it.
+fn write_proportional_checkpoint(tag: &str) -> (PathBuf, ExperimentConfig) {
+    let dir = tmpdir(tag);
+    let mut cfg = base_cfg(ExecMode::Both, 2, 1, 1, 64);
+    cfg.replay_strategy = tempo_dqn::config::ReplayStrategy::Proportional;
+    cfg.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.ckpt_period = 64;
+    let mut coord = Coordinator::new(cfg.clone(), &default_artifact_dir()).unwrap();
+    coord.run().unwrap();
+    (dir, cfg)
+}
+
+#[test]
+fn corrupt_priorities_section_fails_with_clear_error() {
+    let (dir, cfg) = write_proportional_checkpoint("per-corrupt");
+    let ckpt = tempo_dqn::ckpt::latest_checkpoint(&dir).unwrap().unwrap();
+    let state = ckpt.join("state.bin");
+    let mut bytes = std::fs::read(&state).unwrap();
+    // Flip a byte at the tail: the priorities section is the last one.
+    let last = bytes.len() - 3;
+    bytes[last] ^= 0xFF;
+    std::fs::write(&state, &bytes).unwrap();
+
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "unexpected error: {err}");
+    assert!(err.contains("priorities"), "must name the corrupt section: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_priorities_section_fails_with_clear_error() {
+    let (dir, cfg) = write_proportional_checkpoint("per-truncated");
+    let ckpt = tempo_dqn::ckpt::latest_checkpoint(&dir).unwrap().unwrap();
+    let state = ckpt.join("state.bin");
+    let bytes = std::fs::read(&state).unwrap();
+    // Cut a sliver off the end: only the tail section (the priorities
+    // payload, several KB) loses bytes, so the error must name it.
+    std::fs::write(&state, &bytes[..bytes.len() - 16]).unwrap();
+
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    let err = format!("{:#}", coord.resume_from(&dir).unwrap_err());
+    assert!(err.contains("truncated"), "unexpected error: {err}");
+    assert!(err.contains("priorities"), "must name the truncated section: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn priorities_section_version_bump_is_rejected() {
+    let (dir, cfg) = write_proportional_checkpoint("per-version");
+    let ckpt = tempo_dqn::ckpt::latest_checkpoint(&dir).unwrap().unwrap();
+    let manifest = ckpt.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest).unwrap();
+    // Bump the per-section version of exactly the priorities entry (keys
+    // are sorted, so "version" follows "offset" within the entry).
+    let at = text.find("\"name\":\"priorities\"").expect("priorities entry in manifest");
+    let ver = text[at..].find("\"version\":1").expect("version field") + at;
+    let mut patched = text.clone();
+    patched.replace_range(ver..ver + "\"version\":1".len(), "\"version\":9");
+    std::fs::write(&manifest, &patched).unwrap();
+
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(
+        err.contains("priorities") && err.contains("version 9"),
+        "unexpected error: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Checkpoints written before the replay-strategy layer lack its config
+/// fingerprint keys; a default (uniform, n=1) run must still resume them —
+/// they came off the identical machine — while a non-default strategy
+/// config must still be refused.
+#[test]
+fn pre_strategy_checkpoints_resume_under_default_replay_config() {
+    use tempo_dqn::util::json::Json;
+
+    let (dir, cfg) = write_one_checkpoint("legacy-fp");
+    let ckpt = tempo_dqn::ckpt::latest_checkpoint(&dir).unwrap().unwrap();
+    let manifest_path = ckpt.join("manifest.json");
+    // Strip the post-§11 keys from the stored fingerprint, exactly what a
+    // pre-upgrade checkpoint looks like.
+    let mut manifest = Json::parse(&std::fs::read_to_string(&manifest_path).unwrap()).unwrap();
+    {
+        let Json::Obj(root) = &mut manifest else { panic!("manifest not an object") };
+        let Some(Json::Obj(meta)) = root.get_mut("meta") else { panic!("no meta") };
+        let Some(Json::Obj(config)) = meta.get_mut("config") else { panic!("no config") };
+        for key in ["replay_strategy", "per_alpha", "per_beta0", "per_beta_anneal", "n_step"] {
+            assert!(config.remove(key).is_some(), "fingerprint key {key} not present");
+        }
+    }
+    std::fs::write(&manifest_path, manifest.to_string()).unwrap();
+
+    // Default replay config: resumes.
+    let mut coord = Coordinator::new(cfg.clone(), &default_artifact_dir()).unwrap();
+    assert_eq!(
+        coord.resume_from(&dir).unwrap(),
+        64,
+        "pre-strategy checkpoint must resume under the default uniform/n=1 config"
+    );
+
+    // Non-default strategy config: refused with the key named.
+    let mut other = cfg.clone();
+    other.n_step = 3;
+    let mut coord = Coordinator::new(other, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("n_step"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn uniform_checkpoint_has_no_priorities_section_and_proportional_requires_it() {
+    // A uniform checkpoint must not grow the new section (old layout,
+    // byte-compatible)...
+    let (dir, cfg) = write_one_checkpoint("no-per-section");
+    let ckpt = tempo_dqn::ckpt::latest_checkpoint(&dir).unwrap().unwrap();
+    let rdr = tempo_dqn::ckpt::CheckpointReader::open(&ckpt).unwrap();
+    assert!(!rdr.has_section("priorities"), "uniform run must not write priorities");
+    drop(rdr);
+    // ...and a proportional run refuses it (fingerprint mismatch names
+    // the strategy before any section is touched).
+    let mut per = cfg;
+    per.replay_strategy = tempo_dqn::config::ReplayStrategy::Proportional;
+    let mut coord = Coordinator::new(per, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("replay_strategy"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // A proportional checkpoint does carry it.
+    let (dir, _cfg) = write_proportional_checkpoint("with-per-section");
+    let ckpt = tempo_dqn::ckpt::latest_checkpoint(&dir).unwrap().unwrap();
+    let rdr = tempo_dqn::ckpt::CheckpointReader::open(&ckpt).unwrap();
+    assert!(rdr.has_section("priorities"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn resume_without_checkpoint_is_a_clear_error() {
     let dir = tmpdir("empty");

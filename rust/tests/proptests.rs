@@ -238,6 +238,7 @@ fn random_model(rng: &mut Rng) -> CostModel {
         train_ms: 0.2 + rng.f64() * 2.0,
         train_parallel_frac: rng.f64(),
         sample_ms: rng.f64() * 0.3,
+        tree_ms: rng.f64() * 0.2,
         sync_ms: rng.f64(),
         cores: 1 + rng.below_usize(8),
         contention: rng.f64() * 0.5,
@@ -258,6 +259,7 @@ fn prop_hwsim_makespan_respects_lower_bound() {
             threads,
             learner_threads: 1 + rng.below_usize(4),
             prefetch: rng.chance(0.5),
+            prioritized: rng.chance(0.5),
         };
         for mode in ExecMode::ALL {
             let stats = simulate(model, run, mode);

@@ -1,0 +1,385 @@
+//! Property tests for the prioritized-replay substrate (ISSUE 5):
+//! sum-tree invariants, priority-index/sampleable-set agreement, and the
+//! n-step assembly edge cases (rust/DESIGN.md §11).
+//!
+//! Like `tests/proptests.rs`, these use seeded randomized generation
+//! (proptest is unavailable offline). The base seed comes from
+//! `TEMPO_PROPTEST_SEED` (pinned in CI; defaults to a fixed constant) and
+//! every failure message carries the case seed for reproduction.
+
+use tempo_dqn::config::ReplayStrategy;
+use tempo_dqn::replay::strategy::StrategyPlan;
+use tempo_dqn::replay::{build_strategy, ReplayMemory, SampleIndex, SamplingStrategy, SumTree};
+use tempo_dqn::runtime::TrainBatch;
+use tempo_dqn::util::rng::Rng;
+
+const CASES: u64 = 40;
+
+/// Base seed: `TEMPO_PROPTEST_SEED` (CI pins it) or a fixed default.
+fn base_seed() -> u64 {
+    std::env::var("TEMPO_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x0C0F_FEE5)
+}
+
+// ---------------------------------------------------------------------------
+// Sum-tree properties
+// ---------------------------------------------------------------------------
+
+/// Total-mass conservation under arbitrary update sequences: every
+/// internal node equals the exact f64 sum of its children after any
+/// interleaving of sets, so the root is a pure function of the leaves.
+#[test]
+fn prop_sumtree_conserves_total_mass() {
+    for case in 0..CASES {
+        let seed = base_seed() ^ case;
+        let mut rng = Rng::new(seed);
+        let leaves = 1 + rng.below_usize(300);
+        let mut tree = SumTree::new(leaves);
+        let mut reference = vec![0.0f64; leaves];
+        for _ in 0..500 {
+            let leaf = rng.below_usize(leaves);
+            // Mix of zeroing (deactivation) and positive masses.
+            let mass = if rng.chance(0.25) { 0.0 } else { rng.f64() * 10.0 };
+            tree.set(leaf, mass);
+            reference[leaf] = mass;
+        }
+        // Parent-sum invariant holds exactly...
+        for leaf in 0..leaves {
+            assert_eq!(tree.get(leaf), reference[leaf], "seed {seed}: leaf {leaf} mass");
+        }
+        // ...so the root only differs from a linear sum by f64 reorder.
+        let linear: f64 = reference.iter().sum();
+        let rel = (tree.total() - linear).abs() / linear.max(1e-12);
+        assert!(rel < 1e-9, "seed {seed}: total {} vs linear {linear}", tree.total());
+    }
+}
+
+/// Every sampled leaf is in `[0, len)` and carries positive mass, for the
+/// whole mass range including the float edge at `u == total`.
+#[test]
+fn prop_sumtree_sampled_leaf_in_bounds_and_positive() {
+    for case in 0..CASES {
+        let seed = base_seed() ^ (0x5A17 + case);
+        let mut rng = Rng::new(seed);
+        let leaves = 2 + rng.below_usize(200);
+        let mut tree = SumTree::new(leaves);
+        // Sparse positive masses (plenty of zero leaves to avoid).
+        for _ in 0..leaves / 2 + 1 {
+            tree.set(rng.below_usize(leaves), rng.f64() * 5.0 + 1e-6);
+        }
+        let total = tree.total();
+        assert!(total > 0.0);
+        for k in 0..500 {
+            let u = match k {
+                0 => 0.0,
+                1 => total, // the rounding edge
+                _ => rng.f64() * total,
+            };
+            let leaf = tree.sample(u);
+            assert!(leaf < leaves, "seed {seed}: leaf {leaf} out of range {leaves}");
+            assert!(tree.get(leaf) > 0.0, "seed {seed}: sampled zero-mass leaf {leaf} at u {u}");
+        }
+    }
+}
+
+/// Empirical sampling frequencies track the priority masses under the
+/// fixed "REPL" RNG stream (the exact stream the proportional strategy
+/// draws from).
+#[test]
+fn sumtree_sampling_frequencies_track_priorities() {
+    let mut tree = SumTree::new(8);
+    // Masses 1, 2, 4, 8 on leaves 0, 2, 5, 7 -> P = 1/15, 2/15, 4/15, 8/15.
+    tree.set(0, 1.0);
+    tree.set(2, 2.0);
+    tree.set(5, 4.0);
+    tree.set(7, 8.0);
+    let mut rng = Rng::stream(base_seed(), 0x5245504c); // "REPL"
+    let draws = 60_000usize;
+    let mut counts = [0usize; 8];
+    for _ in 0..draws {
+        counts[tree.sample(rng.f64() * tree.total())] += 1;
+    }
+    assert_eq!(counts[1] + counts[3] + counts[4] + counts[6], 0, "zero-mass leaves drawn");
+    for (leaf, mass) in [(0usize, 1.0f64), (2, 2.0), (5, 4.0), (7, 8.0)] {
+        let expect = mass / 15.0;
+        let got = counts[leaf] as f64 / draws as f64;
+        assert!(
+            (got - expect).abs() < 0.02,
+            "leaf {leaf}: frequency {got:.4} vs P {expect:.4} ({counts:?})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Priority index vs the replay's sampleable set
+// ---------------------------------------------------------------------------
+
+/// Under arbitrary multi-stream push sequences (episode boundaries,
+/// wraparound), the priority index's active set always equals the uniform
+/// sampler's sampleable set, and every active leaf round-trips through
+/// `leaf_to_index`.
+#[test]
+fn prop_priority_active_set_matches_sampleable() {
+    const FS: usize = 8;
+    for case in 0..CASES {
+        let seed = base_seed() ^ (0xAC71 + case);
+        let mut rng = Rng::new(seed);
+        let streams = 1 + rng.below_usize(4);
+        let per = 8 + rng.below_usize(24);
+        let mut replay = ReplayMemory::new(per * streams, streams, FS, 4, seed).unwrap();
+        replay.enable_priorities();
+        let mut starts = vec![true; streams];
+        for _ in 0..3 * per * streams {
+            let s = rng.below_usize(streams);
+            let done = rng.chance(0.15);
+            let v = rng.below(256) as u8;
+            replay.push(s, &[v; FS], v, 0.0, done, starts[s]);
+            starts[s] = done;
+            let pi = replay.priorities().unwrap();
+            assert_eq!(
+                pi.active_count(),
+                replay.sampleable(),
+                "seed {seed}: active set drifted from sampleable set"
+            );
+        }
+        let pi = replay.priorities().unwrap();
+        let mut active = 0;
+        for leaf in 0..replay.capacity() {
+            if pi.value(leaf) > 0.0 {
+                active += 1;
+                assert!(replay.leaf_to_index(leaf).is_some(), "seed {seed}: unmappable active leaf");
+            } else {
+                assert!(replay.leaf_to_index(leaf).is_none(), "seed {seed}: mappable inactive leaf");
+            }
+        }
+        assert_eq!(active, replay.sampleable(), "seed {seed}");
+    }
+}
+
+/// Draws through the full proportional strategy respect the per-batch
+/// contract: weights in (0, 1] with at least one exactly 1.0, assembled
+/// batches carry boot_gammas, and with uniform (never-updated) priorities
+/// all weights collapse to exactly 1.
+#[test]
+fn proportional_fill_batch_contract() {
+    const FS: usize = 8;
+    let plan = StrategyPlan {
+        kind: ReplayStrategy::Proportional,
+        per_alpha: 0.6,
+        per_beta0: 0.4,
+        per_beta_anneal: 1_000,
+        n_step: 3,
+        gamma: 0.99,
+    };
+    let mut replay = ReplayMemory::new(256, 2, FS, 4, base_seed()).unwrap();
+    replay.enable_priorities();
+    for v in 0..60u8 {
+        replay.push(0, &[v; FS], v, 0.5, v % 11 == 10, v == 0 || v % 11 == 0);
+        replay.push(1, &[v; FS], v, 0.0, v % 13 == 12, v == 0 || v % 13 == 0);
+    }
+    let mut strat = build_strategy(&plan, Rng::new(base_seed()).state(), 0);
+    let mut batch = TrainBatch::default();
+    for _ in 0..10 {
+        strat.fill_batch(&replay, 16, &mut batch).unwrap();
+        assert_eq!(batch.weights.len(), 16);
+        assert_eq!(batch.boot_gammas.len(), 16);
+        for &w in &batch.weights {
+            // Never-updated priorities are all equal -> every weight is 1.
+            assert_eq!(w, 1.0, "uniform-priority draw must have unit weights");
+        }
+        let gamma = plan.gamma as f32;
+        for &g in &batch.boot_gammas {
+            assert!(g > 0.0 && g <= gamma, "boot gamma {g} out of (0, γ]");
+        }
+        // Pair the batch with synthetic TD errors and apply at a "barrier".
+        let td: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.1).collect();
+        strat.record_td(&td);
+        assert!(strat.has_pending());
+        strat.apply_updates(&mut replay);
+        assert!(!strat.has_pending());
+    }
+    // After unequal TD updates the priorities differ: the (0,1] bound and
+    // batch-max normalization must now hold on genuinely non-trivial
+    // weights, with at least one weight strictly inside the interval.
+    strat.fill_batch(&replay, 64, &mut batch).unwrap();
+    let mut saw_unit = false;
+    let mut saw_interior = false;
+    for &w in &batch.weights {
+        assert!(w > 0.0 && w <= 1.0, "IS weight {w} out of (0,1]");
+        saw_unit |= w == 1.0;
+        saw_interior |= w < 1.0;
+    }
+    assert!(saw_unit, "batch-max normalization must pin one weight at 1");
+    assert!(saw_interior, "updated priorities must produce non-trivial IS weights");
+}
+
+/// TD updates raise a transition's sampling frequency (the point of PER):
+/// after boosting one leaf's priority far above the rest, it dominates
+/// the drawn picks.
+#[test]
+fn updated_priorities_shift_the_draw_distribution() {
+    const FS: usize = 8;
+    let plan = StrategyPlan {
+        kind: ReplayStrategy::Proportional,
+        per_alpha: 1.0,
+        per_beta0: 0.4,
+        per_beta_anneal: 1_000,
+        n_step: 1,
+        gamma: 0.99,
+    };
+    let mut replay = ReplayMemory::new(64, 1, FS, 4, 1).unwrap();
+    replay.enable_priorities();
+    for v in 0..40u8 {
+        replay.push(0, &[v; FS], v, 0.0, false, v == 0);
+    }
+    let mut strat = build_strategy(&plan, Rng::new(9).state(), 0);
+    let mut batch = TrainBatch::default();
+    // Draw until slot 10 (action byte 10) appears, then hand back a TD
+    // vector that is huge exactly there and tiny elsewhere.
+    let mut boosted = false;
+    for _ in 0..20 {
+        strat.fill_batch(&replay, 32, &mut batch).unwrap();
+        let td: Vec<f32> =
+            batch.actions.iter().map(|&a| if a == 10 { 50.0 } else { 1e-3 }).collect();
+        boosted |= batch.actions.contains(&10);
+        strat.record_td(&td);
+        strat.apply_updates(&mut replay);
+        if boosted {
+            break;
+        }
+    }
+    assert!(boosted, "slot 10 never drawn in 640 uniform-priority draws");
+    // The boosted transition now carries ~50 of the total mass (every
+    // other priority is <= 1.0 across <= 36 sampleable slots), so the
+    // next batch must oversample it massively vs the uniform 1/36 ≈ 2.8%.
+    strat.fill_batch(&replay, 64, &mut batch).unwrap();
+    let hits = batch.actions.iter().filter(|&&a| a == 10).count();
+    assert!(hits > 64 / 5, "boosted transition not oversampled: {hits}/64");
+}
+
+// ---------------------------------------------------------------------------
+// n-step assembly properties (against a naive reference model)
+// ---------------------------------------------------------------------------
+
+/// Naive n-step reference: full transition list per stream, scan forward.
+struct NaiveStream {
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    starts: Vec<bool>,
+}
+
+impl NaiveStream {
+    /// (n-step return, done-within-window, m) starting at index i.
+    fn window(&self, i: usize, n: usize, gamma: f32) -> (f32, bool, usize) {
+        let mut ret = 0.0f32;
+        let mut disc = 1.0f32;
+        let mut m = 0usize;
+        for k in 0..n {
+            let j = i + k;
+            if k > 0 {
+                if j >= self.rewards.len() || self.starts[j] {
+                    break;
+                }
+                if !self.dones[j] && j + 1 >= self.rewards.len() {
+                    break;
+                }
+            }
+            if k == 0 {
+                ret = self.rewards[j];
+            } else {
+                ret += disc * self.rewards[j];
+            }
+            m = k + 1;
+            if self.dones[j] {
+                return (ret, true, m);
+            }
+            disc *= gamma;
+        }
+        (ret, false, m)
+    }
+}
+
+/// Randomized episodes: the assembled n-step batch agrees with the naive
+/// reference on return/done/γᵐ for every sampleable start index, for a
+/// spread of horizons (including n far beyond the episode length).
+#[test]
+fn prop_nstep_assembly_matches_naive_reference() {
+    const FS: usize = 8;
+    const STACK: usize = 4;
+    for case in 0..CASES {
+        let seed = base_seed() ^ (0x215E9 + case);
+        let mut rng = Rng::new(seed);
+        let cap = 32 + rng.below_usize(32);
+        let mut replay = ReplayMemory::new(cap, 1, FS, STACK, seed).unwrap();
+        let mut naive = NaiveStream { rewards: Vec::new(), dones: Vec::new(), starts: Vec::new() };
+        let mut start = true;
+        let pushes = cap / 2 + rng.below_usize(cap); // may or may not wrap
+        for i in 0..pushes {
+            let done = rng.chance(0.2);
+            let reward = (rng.f64() as f32 - 0.5) * 4.0;
+            replay.push(0, &[i as u8; FS], i as u8, reward, done, start);
+            naive.rewards.push(reward);
+            naive.dones.push(done);
+            naive.starts.push(start);
+            start = done;
+        }
+        // The naive model keeps every pushed transition; the ring only the
+        // last `len`. Align indices to the ring's oldest entry.
+        let len = replay.len();
+        let offset = pushes - len;
+        let gamma = 0.9f32;
+        for n in [1usize, 2, 3, 7, 64] {
+            let picks: Vec<SampleIndex> = (STACK - 1..len - 1)
+                .map(|slot| SampleIndex { stream: 0, slot })
+                .collect();
+            let mut batch = TrainBatch::default();
+            replay.assemble_nstep(&picks, n, gamma, &mut batch);
+            // The naive scan sees only what the ring retained: the last
+            // `len` transitions (everything older was overwritten).
+            let tail = NaiveStream {
+                rewards: naive.rewards[offset..].to_vec(),
+                dones: naive.dones[offset..].to_vec(),
+                starts: naive.starts[offset..].to_vec(),
+            };
+            for (b, pick) in picks.iter().enumerate() {
+                let (want_ret, want_done, want_m) = tail.window(pick.slot, n, gamma);
+                assert_eq!(
+                    batch.rewards[b].to_bits(),
+                    want_ret.to_bits(),
+                    "seed {seed} n {n} slot {}: return",
+                    pick.slot
+                );
+                assert_eq!(
+                    batch.dones[b] == 1.0,
+                    want_done,
+                    "seed {seed} n {n} slot {}: done flag",
+                    pick.slot
+                );
+                let mut bg = gamma;
+                for _ in 1..want_m {
+                    bg *= gamma;
+                }
+                assert_eq!(
+                    batch.boot_gammas[b].to_bits(),
+                    bg.to_bits(),
+                    "seed {seed} n {n} slot {}: boot gamma (m {want_m})",
+                    pick.slot
+                );
+                // Non-terminal windows bootstrap from the state ending at
+                // slot + m: its newest frame byte is the pushed id.
+                if !want_done {
+                    let sb = FS * STACK;
+                    let newest = batch.next_states[b * sb + (STACK - 1)];
+                    assert_eq!(
+                        newest as usize,
+                        offset + pick.slot + want_m,
+                        "seed {seed} n {n} slot {}: bootstrap state",
+                        pick.slot
+                    );
+                }
+            }
+        }
+    }
+}

@@ -145,6 +145,7 @@ fn golden_train_batch(qnet: &QNet) -> TrainBatch {
         actions: (0..b as i32).map(|i| i % actions as i32).collect(),
         rewards: (0..b as i64).map(|i| (i % 3 - 1) as f32).collect(),
         dones: (0..b).map(|i| if i % 7 == 0 { 1.0 } else { 0.0 }).collect(),
+        ..TrainBatch::default()
     }
 }
 
