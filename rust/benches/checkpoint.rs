@@ -95,4 +95,5 @@ fn main() {
     // Budget check hint: one training window at paper scale is C/F = 2500
     // minibatches; the checkpoint write must stay under that wall time.
     println!("\n(checkpoint writes happen inside the window barrier; keep them under one window)");
+    bench.emit_json("checkpoint").expect("bench json");
 }

@@ -5,11 +5,18 @@
 //! stream stepping and contiguous state assembly (the W×B axis).
 //!
 //! Run: `cargo bench --bench env_throughput`
+//! CI smoke: `cargo bench --bench env_throughput -- --test`
 
 use tempo_dqn::benchkit::Bench;
 use tempo_dqn::env::{make_env, VecEnv, GAMES, STATE_BYTES};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    if smoke {
+        std::env::set_var("TEMPO_BENCH_MS", "60");
+    }
+    let b_sweep: &[usize] = if smoke { &[1, 8] } else { &[1, 2, 4, 8, 16] };
+
     let mut bench = Bench::new();
     for game in GAMES {
         let mut env = make_env(game, 3).unwrap();
@@ -31,7 +38,7 @@ fn main() {
     // contiguous B-state inference input. Per-env-step cost should stay
     // flat while the per-transaction batch grows B-fold.
     println!();
-    for b in [1usize, 2, 4, 8, 16] {
+    for &b in b_sweep {
         let seeds: Vec<u64> = (0..b as u64).map(|j| 3 + j * 7919).collect();
         let mut vec_env = VecEnv::new("pong", &seeds).unwrap();
         let actions = vec_env.num_actions();
@@ -62,4 +69,5 @@ fn main() {
     }
 
     println!("\nper-step env cost feeds hwsim::CostModel::from_measured");
+    bench.emit_json("env_throughput").expect("bench json");
 }

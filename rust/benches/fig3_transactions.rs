@@ -4,23 +4,28 @@
 //! 1/W while async scales with W and contends.
 //!
 //! Run: `cargo bench --bench fig3_transactions`
+//! CI smoke: `cargo bench --bench fig3_transactions -- --test`
 
+use tempo_dqn::benchkit::Bench;
 use tempo_dqn::config::{ExecMode, ExperimentConfig};
 use tempo_dqn::coordinator::Coordinator;
 use tempo_dqn::runtime::default_artifact_dir;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
     let steps = std::env::var("TEMPO_BENCH_STEPS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(400u64);
+        .unwrap_or(if smoke { 160 } else { 400u64 });
+    let widths: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let mut bench = Bench::new();
     println!("Figure 3 reproduction: device transactions per agent step ({steps} steps, tiny net)");
     println!(
         "{:>14} {:>4} {:>8} {:>12} {:>12} {:>12} {:>12}",
         "mode", "W", "steps", "txns", "txns/step", "wait ms", "steps/s"
     );
     for mode in [ExecMode::Concurrent, ExecMode::Both] {
-        for w in [1usize, 2, 4, 8] {
+        for &w in widths {
             let mut cfg = ExperimentConfig::preset("smoke").unwrap();
             cfg.mode = mode;
             cfg.threads = w;
@@ -33,6 +38,9 @@ fn main() {
                 .unwrap()
                 .without_eval();
             let res = coord.run().unwrap();
+            // One "iteration" = one agent step of the whole run — the
+            // wall time is measured by the coordinator, not Bench::run.
+            bench.record(&format!("fig3/{}/w{w}/agent_step", mode.name()), res.steps, res.wall_s * 1e9);
             let infer_txns = res.bus.transactions.saturating_sub(res.trains);
             println!(
                 "{:>14} {:>4} {:>8} {:>12} {:>12.3} {:>12.1} {:>12.1}",
@@ -48,4 +56,5 @@ fn main() {
     }
     println!("\nasync (concurrent): ~1 infer transaction per step, independent of W");
     println!("sync (both):        ~1/W infer transactions per step — the Figure 3(b) effect");
+    bench.emit_json("fig3_transactions").expect("bench json");
 }

@@ -8,16 +8,19 @@
 //!   sum-tree (the barrier-side cost prefetch cannot hide). Feeds
 //!   `CostModel::tree_ms`.
 //!
-//! Small frames isolate index/tree cost from frame memcpy (the memcpy
-//! side is covered by `benches/replay.rs` at full frame size).
+//! Small frames isolate index/tree cost from frame memcpy; the memcpy
+//! half (full-frame push/sample/staging-flush, formerly
+//! `benches/replay.rs`) is measured at the end so one target covers the
+//! whole replay hot path.
 //!
 //! Run: `cargo bench --bench replay_sample`
 //! CI smoke: `cargo bench --bench replay_sample -- --test`
 
 use tempo_dqn::benchkit::Bench;
 use tempo_dqn::config::ReplayStrategy;
+use tempo_dqn::env::NET_FRAME;
 use tempo_dqn::replay::strategy::StrategyPlan;
-use tempo_dqn::replay::{build_strategy, ReplayMemory, SamplingStrategy};
+use tempo_dqn::replay::{build_strategy, ReplayMemory, SamplingStrategy, StagingBuffer};
 use tempo_dqn::runtime::TrainBatch;
 use tempo_dqn::util::rng::Rng;
 
@@ -124,4 +127,38 @@ fn main() {
         "\ntree_ms = the update row (barrier-side, never hidden by prefetch); the rest of \
          the proportional cycle is assembly cost -> CostModel::sample_ms (rust/DESIGN.md §11)"
     );
+
+    // -- full-frame memcpy half (formerly benches/replay.rs) --------------
+    // Push / 32-sample / staging-flush at real frame size, where frame
+    // copies dominate instead of index math.
+    let cap = if smoke { 65_536 } else { 1_000_000 };
+    let frame = vec![127u8; NET_FRAME];
+    let mut replay = ReplayMemory::new(cap, 8, NET_FRAME, 4, 1).unwrap();
+    let mut i = 0u64;
+    let push = bench
+        .run("replay/push_full_frame", || {
+            replay.push((i % 8) as usize, &frame, 1, 0.5, i % 97 == 0, i % 97 == 1);
+            i += 1;
+        })
+        .throughput_per_sec();
+    let mut batch = TrainBatch::default();
+    let sample = bench
+        .run("replay/sample_b32_full_frame", || {
+            replay.sample(32, &mut batch).unwrap();
+        })
+        .throughput_per_sec();
+    bench.run("staging/flush_2500", || {
+        let mut staging = StagingBuffer::new();
+        for k in 0..2_500u32 {
+            staging.push(&frame, 1, 0.0, k % 97 == 0, k % 97 == 1);
+        }
+        staging.flush_into(&mut replay, 0);
+    });
+    println!(
+        "\npush: {:.2} M transitions/s | sample: {:.0} minibatches/s (cap {cap})",
+        push / 1e6,
+        sample
+    );
+
+    bench.emit_json("replay").expect("bench json");
 }

@@ -4,6 +4,7 @@
 //! Synchronized Execution amortizes (paper §4).
 //!
 //! Run: `cargo bench --bench runtime_exec`
+//! CI smoke: `cargo bench --bench runtime_exec -- --test`
 
 use std::sync::Arc;
 
@@ -12,6 +13,12 @@ use tempo_dqn::env::{make_env, STATE_BYTES};
 use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, TrainBatch};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    if smoke {
+        std::env::set_var("TEMPO_BENCH_MS", "60");
+    }
+    let nets: &[&str] = if smoke { &["tiny"] } else { &["tiny", "small"] };
+
     let dir = default_artifact_dir();
     let manifest = Manifest::load_or_builtin(&dir).expect("manifest");
     let device = Arc::new(Device::cpu().unwrap());
@@ -21,7 +28,7 @@ fn main() {
     let mut state = vec![0u8; STATE_BYTES];
     env.write_state(&mut state);
 
-    for net in ["tiny", "small"] {
+    for &net in nets {
         let qnet = QNet::load(device.clone(), &manifest, net, false, 32).unwrap();
         for b in [1usize, 8, 32] {
             let states: Vec<u8> = state.iter().cycle().take(b * STATE_BYTES).copied().collect();
@@ -48,4 +55,5 @@ fn main() {
             8.0 * b1 / 1e6, b8 / 1e6, 8.0 * b1 / b8
         );
     }
+    bench.emit_json("runtime_exec").expect("bench json");
 }

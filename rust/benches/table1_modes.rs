@@ -2,6 +2,7 @@
 //! calibrated DES and times the simulator itself.
 //!
 //! Run: `cargo bench --bench table1_modes`
+//! CI smoke: `cargo bench --bench table1_modes -- --test`
 
 use tempo_dqn::benchkit::Bench;
 use tempo_dqn::config::ExecMode;
@@ -9,9 +10,13 @@ use tempo_dqn::hwsim::{simulate, CostModel, SimRun};
 use tempo_dqn::report::RuntimeGrid;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    if smoke {
+        std::env::set_var("TEMPO_BENCH_MS", "60");
+    }
     let model = CostModel::gtx1080_i7();
     let threads = [1usize, 2, 4, 8];
-    let steps = 200_000u64;
+    let steps = if smoke { 20_000u64 } else { 200_000u64 };
     let mut bench = Bench::new();
     let mut grid = RuntimeGrid::new(&threads);
 
@@ -33,4 +38,5 @@ fn main() {
     if let Some((base, best, speedup)) = grid.headline() {
         println!("headline: {base:.2} h -> {best:.2} h ({speedup:.2}x)  [paper: 25.08 -> 9.02, 2.78x]");
     }
+    bench.emit_json("table1_modes").expect("bench json");
 }

@@ -1,9 +1,11 @@
 //! Train-step throughput across learner-pool widths — the measured side of
 //! the parallel-learner tentpole (rust/DESIGN.md §9).
 //!
-//! Sweeps `learner_threads` over the native engine's sharded train step
-//! (identical bits at every width — pinned by tests; this bench measures
-//! the wall-clock side), and times minibatch assembly (`sample` +
+//! Sweeps `learner_threads` × `kernel_mode` over the native engine's
+//! sharded train step (deterministic: identical bits at every width —
+//! pinned by tests; fast: vectorized kernels under the bounded divergence
+//! contract, rust/DESIGN.md §12 — this bench measures the wall-clock
+//! side of both tiers), and times minibatch assembly (`sample` +
 //! `assemble`), i.e. the cost the prefetch pipeline removes from the
 //! trainer's critical path.
 //!
@@ -16,7 +18,7 @@ use std::sync::{Arc, RwLock};
 use tempo_dqn::benchkit::Bench;
 use tempo_dqn::env::NET_FRAME;
 use tempo_dqn::replay::{BatchSource, DirectSource, ReplayMemory};
-use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, QNet, TrainBatch};
+use tempo_dqn::runtime::{default_artifact_dir, Device, KernelMode, Manifest, QNet, TrainBatch};
 use tempo_dqn::util::rng::Rng;
 
 fn synthetic_batch(qnet: &QNet, seed: u64) -> TrainBatch {
@@ -47,21 +49,29 @@ fn main() {
     let mut bench = Bench::new();
 
     for net in nets {
-        let mut base_ns = 0.0f64;
-        for &threads in widths {
-            let device = Arc::new(Device::cpu_with_threads(threads).expect("device"));
-            let qnet = QNet::load(device, &manifest, net, false, 32).expect("qnet");
-            let batch = synthetic_batch(&qnet, 7);
-            let r = bench
-                .run(&format!("train/{net}/b32/learner_threads{threads}"), || {
-                    qnet.train_step(&batch, 2.5e-4).expect("train")
-                })
-                .clone();
-            if threads == 1 {
-                base_ns = r.mean_ns;
-            } else if base_ns > 0.0 {
-                println!("         -> {:.2}x vs 1 thread", base_ns / r.mean_ns);
+        for mode in KernelMode::ALL {
+            let mut base_ns = 0.0f64;
+            for &threads in widths {
+                let device = Arc::new(Device::cpu_with_opts(threads, mode).expect("device"));
+                let qnet = QNet::load(device, &manifest, net, false, 32).expect("qnet");
+                let batch = synthetic_batch(&qnet, 7);
+                let r = bench
+                    .run(
+                        &format!("train/{net}/b32/{}/learner_threads{threads}", mode.name()),
+                        || qnet.train_step(&batch, 2.5e-4).expect("train"),
+                    )
+                    .clone();
+                if threads == 1 {
+                    base_ns = r.mean_ns;
+                } else if base_ns > 0.0 {
+                    println!("         -> {:.2}x vs 1 thread", base_ns / r.mean_ns);
+                }
             }
+        }
+        let det1 = bench.get(&format!("train/{net}/b32/deterministic/learner_threads1"));
+        let fast1 = bench.get(&format!("train/{net}/b32/fast/learner_threads1"));
+        if let (Some(d), Some(f)) = (det1, fast1) {
+            println!("         => fast vs deterministic at 1 thread: {:.2}x", d.mean_ns / f.mean_ns);
         }
     }
 
@@ -82,4 +92,5 @@ fn main() {
     });
 
     println!("\ntrain rows feed CostModel::train_parallel_frac; the sample row feeds CostModel::sample_ms");
+    bench.emit_json("train_throughput").expect("bench json");
 }

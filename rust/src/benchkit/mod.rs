@@ -3,8 +3,28 @@
 //! Used by the `rust/benches/*.rs` targets (`cargo bench`). Provides
 //! warmup, adaptive iteration counts, and mean/σ/min reporting in a stable
 //! plain-text format so bench output can be diffed across runs.
+//!
+//! ## Machine-readable perf trajectory
+//!
+//! When `TEMPO_BENCH_JSON` names a file, [`Bench::emit_json`] merges every
+//! result into it as `{"format": 1, "suites": {<suite>: {<bench>: record}}}`
+//! — each bench binary is its own process, so the file is read-modify-write
+//! and a full bench sweep accumulates one `BENCH_<pr>.json` snapshot at the
+//! repo root. [`compare`] / [`compare_files`] diff two snapshots and flag
+//! any bench whose mean regressed beyond a noise fraction; the
+//! `bench-compare` subcommand and the CI bench-trajectory job drive it
+//! (rust/DESIGN.md §12, README "Perf trajectory").
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Env var naming the JSON snapshot file benches merge results into.
+pub const BENCH_JSON_ENV: &str = "TEMPO_BENCH_JSON";
 
 /// One measured result.
 #[derive(Clone, Debug)]
@@ -22,6 +42,17 @@ impl BenchResult {
             return 0.0;
         }
         1e9 / self.mean_ns
+    }
+
+    /// The structured record `emit_json` persists per bench.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("std_ns", Json::Num(self.std_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+            ("per_sec", Json::Num(self.throughput_per_sec())),
+        ])
     }
 }
 
@@ -113,6 +144,28 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Record an externally measured result (for benches that time a whole
+    /// run themselves instead of calling [`Bench::run`], e.g. the Figure 3
+    /// transaction sweep). `total_ns` covers all `iters` iterations.
+    pub fn record(&mut self, name: &str, iters: u64, total_ns: f64) -> &BenchResult {
+        let mean = total_ns / iters.max(1) as f64;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: iters.max(1),
+            mean_ns: mean,
+            std_ns: 0.0,
+            min_ns: mean,
+        };
+        println!(
+            "bench {:<44} {:>12}/iter (recorded, {} iters)",
+            res.name,
+            fmt_ns(res.mean_ns),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -121,6 +174,202 @@ impl Bench {
     pub fn get(&self, name: &str) -> Option<&BenchResult> {
         self.results.iter().rev().find(|r| r.name == name)
     }
+
+    /// Merge every result into the snapshot named by `TEMPO_BENCH_JSON`
+    /// under `suites.<suite>`. No-op (Ok) when the env var is unset, so
+    /// plain `cargo bench` runs stay file-free.
+    pub fn emit_json(&self, suite: &str) -> Result<()> {
+        match std::env::var(BENCH_JSON_ENV) {
+            Ok(path) if !path.is_empty() => self.emit_json_to(suite, Path::new(&path)),
+            _ => Ok(()),
+        }
+    }
+
+    /// Read-modify-write `path` (each bench binary is a separate process;
+    /// the sweep accumulates one file). Existing suites are preserved;
+    /// same-name benches within `suite` are overwritten.
+    pub fn emit_json_to(&self, suite: &str, path: &Path) -> Result<()> {
+        let mut root = match std::fs::read_to_string(path) {
+            Ok(text) => Json::parse(&text)
+                .map_err(|e| anyhow!("{}: not a bench snapshot: {e}", path.display()))?,
+            Err(_) => obj(vec![("format", Json::Num(1.0))]),
+        };
+        let Json::Obj(top) = &mut root else {
+            bail!("{}: bench snapshot root must be an object", path.display());
+        };
+        top.entry("format".to_string()).or_insert(Json::Num(1.0));
+        let suites = top
+            .entry("suites".to_string())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        let Json::Obj(suites) = suites else {
+            bail!("{}: \"suites\" must be an object", path.display());
+        };
+        let entry = suites
+            .entry(suite.to_string())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        let Json::Obj(entry) = entry else {
+            bail!("{}: suite {suite:?} must be an object", path.display());
+        };
+        for r in &self.results {
+            entry.insert(r.name.clone(), r.to_json());
+        }
+        let mut out = String::new();
+        pretty(&root, 0, &mut out);
+        out.push('\n');
+        std::fs::write(path, out)
+            .with_context(|| format!("writing bench snapshot {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Two-space-indented writer so `BENCH_<pr>.json` diffs line-by-line in
+/// review (the compact `Json::to_string` would put a whole snapshot on one
+/// line). Output reparses to the identical value.
+fn pretty(v: &Json, depth: usize, out: &mut String) {
+    match v {
+        Json::Obj(m) if !m.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&"  ".repeat(depth + 1));
+                out.push_str(&Json::Str(k.clone()).to_string());
+                out.push_str(": ");
+                pretty(x, depth + 1, out);
+            }
+            out.push('\n');
+            out.push_str(&"  ".repeat(depth));
+            out.push('}');
+        }
+        other => out.push_str(&other.to_string()),
+    }
+}
+
+/// One prev-vs-cur bench pairing from [`compare`].
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub suite: String,
+    pub name: String,
+    pub prev_mean_ns: f64,
+    pub cur_mean_ns: f64,
+    /// cur / prev — > 1 means slower.
+    pub ratio: f64,
+}
+
+/// Result of diffing two bench snapshots.
+#[derive(Debug)]
+pub struct CompareReport {
+    pub rows: Vec<Comparison>,
+    /// "suite/name" present only in the current snapshot.
+    pub added: Vec<String>,
+    /// "suite/name" present only in the previous snapshot.
+    pub removed: Vec<String>,
+    pub noise_frac: f64,
+}
+
+impl CompareReport {
+    /// Rows whose mean regressed beyond the noise fraction.
+    pub fn regressions(&self) -> Vec<&Comparison> {
+        self.rows.iter().filter(|c| c.ratio > 1.0 + self.noise_frac).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "bench-compare: {} paired benches, noise threshold ±{:.0}%\n",
+            self.rows.len(),
+            self.noise_frac * 100.0
+        );
+        for c in &self.rows {
+            let status = if c.ratio > 1.0 + self.noise_frac {
+                "REGRESSED"
+            } else if c.ratio < 1.0 - self.noise_frac {
+                "improved"
+            } else {
+                "ok"
+            };
+            s.push_str(&format!(
+                "  {status:<9} {:<52} {:>10} -> {:>10}  x{:.2}\n",
+                format!("{}/{}", c.suite, c.name),
+                fmt_ns(c.prev_mean_ns),
+                fmt_ns(c.cur_mean_ns),
+                c.ratio
+            ));
+        }
+        for name in &self.added {
+            s.push_str(&format!("  new       {name}\n"));
+        }
+        for name in &self.removed {
+            s.push_str(&format!("  dropped   {name}\n"));
+        }
+        s
+    }
+}
+
+fn snapshot_suites(root: &Json, which: &str) -> Result<BTreeMap<String, BTreeMap<String, f64>>> {
+    let suites = root
+        .get("suites")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("{which} snapshot has no \"suites\" object"))?;
+    let mut out = BTreeMap::new();
+    for (sname, benches) in suites {
+        let benches = benches
+            .as_obj()
+            .ok_or_else(|| anyhow!("{which} snapshot: suite {sname:?} is not an object"))?;
+        let mut means = BTreeMap::new();
+        for (bname, rec) in benches {
+            let mean = rec.get("mean_ns").and_then(Json::as_f64).ok_or_else(|| {
+                anyhow!("{which} snapshot: {sname}/{bname} lacks a numeric mean_ns")
+            })?;
+            means.insert(bname.clone(), mean);
+        }
+        out.insert(sname.clone(), means);
+    }
+    Ok(out)
+}
+
+/// Diff two parsed snapshots: pair benches present in both, list the rest.
+/// Fails (via [`CompareReport::regressions`] at the caller) only on paired
+/// regressions — added/removed benches are reported, not fatal, so the
+/// bench roster can evolve between PRs.
+pub fn compare(prev: &Json, cur: &Json, noise_frac: f64) -> Result<CompareReport> {
+    let prev = snapshot_suites(prev, "previous")?;
+    let cur = snapshot_suites(cur, "current")?;
+    let mut rows = Vec::new();
+    let mut added = Vec::new();
+    let mut removed = Vec::new();
+    for (sname, benches) in &cur {
+        for (bname, &cur_mean) in benches {
+            match prev.get(sname).and_then(|b| b.get(bname)) {
+                Some(&prev_mean) if prev_mean > 0.0 => rows.push(Comparison {
+                    suite: sname.clone(),
+                    name: bname.clone(),
+                    prev_mean_ns: prev_mean,
+                    cur_mean_ns: cur_mean,
+                    ratio: cur_mean / prev_mean,
+                }),
+                _ => added.push(format!("{sname}/{bname}")),
+            }
+        }
+    }
+    for (sname, benches) in &prev {
+        for bname in benches.keys() {
+            if cur.get(sname).map_or(true, |b| !b.contains_key(bname)) {
+                removed.push(format!("{sname}/{bname}"));
+            }
+        }
+    }
+    Ok(CompareReport { rows, added, removed, noise_frac })
+}
+
+/// [`compare`] over two snapshot files.
+pub fn compare_files(prev: &Path, cur: &Path, noise_frac: f64) -> Result<CompareReport> {
+    let read = |p: &Path| -> Result<Json> {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading bench snapshot {}", p.display()))?;
+        Json::parse(&text).map_err(|e| anyhow!("{}: {e}", p.display()))
+    };
+    compare(&read(prev)?, &read(cur)?, noise_frac)
 }
 
 #[cfg(test)]
@@ -144,5 +393,124 @@ mod tests {
         assert!(fmt_ns(1.2e4).contains("us"));
         assert!(fmt_ns(3.4e6).contains("ms"));
         assert!(fmt_ns(2.1e9).contains(" s"));
+    }
+
+    fn fake(name: &str, mean_ns: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 100,
+            mean_ns,
+            std_ns: mean_ns / 10.0,
+            min_ns: mean_ns * 0.9,
+        }
+    }
+
+    fn bench_with(results: Vec<BenchResult>) -> Bench {
+        let mut b = Bench::new();
+        b.results = results;
+        b
+    }
+
+    #[test]
+    fn record_reports_external_timings() {
+        let mut b = bench_with(vec![]);
+        let r = b.record("env/steps", 2_000, 4e9).clone();
+        assert_eq!(r.iters, 2_000);
+        assert_eq!(r.mean_ns, 2e6);
+        assert!((r.throughput_per_sec() - 500.0).abs() < 1e-9);
+        assert!(b.get("env/steps").is_some());
+    }
+
+    /// emit_json_to is read-modify-write: two "processes" (Bench values)
+    /// writing different suites accumulate into one snapshot, and
+    /// re-emitting a suite overwrites its benches in place.
+    #[test]
+    fn emit_json_merges_across_processes() {
+        let path = std::env::temp_dir().join(format!("tempo_bench_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        bench_with(vec![fake("a", 100.0), fake("b", 200.0)])
+            .emit_json_to("suite1", &path)
+            .unwrap();
+        bench_with(vec![fake("c", 300.0)]).emit_json_to("suite2", &path).unwrap();
+        bench_with(vec![fake("b", 250.0)]).emit_json_to("suite1", &path).unwrap();
+
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.at(&["format"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            root.at(&["suites", "suite1", "a", "mean_ns"]).unwrap().as_f64(),
+            Some(100.0)
+        );
+        assert_eq!(
+            root.at(&["suites", "suite1", "b", "mean_ns"]).unwrap().as_f64(),
+            Some(250.0),
+            "re-emit overwrites in place"
+        );
+        assert_eq!(
+            root.at(&["suites", "suite2", "c", "per_sec"]).unwrap().as_f64(),
+            Some(1e9 / 300.0)
+        );
+        // Pretty output reparses to the same value as compact output.
+        let mut p = String::new();
+        pretty(&root, 0, &mut p);
+        assert_eq!(Json::parse(&p).unwrap(), root);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn emit_json_is_noop_without_env() {
+        // The env var is unset (or set by CI to a real path) — exercise the
+        // explicit no-op branch with an empty override.
+        std::env::remove_var(BENCH_JSON_ENV);
+        bench_with(vec![fake("x", 1.0)]).emit_json("nowhere").unwrap();
+    }
+
+    #[test]
+    fn compare_flags_regressions_beyond_noise() {
+        let prev_b = bench_with(vec![fake("stable", 100.0), fake("regressed", 100.0), fake("gone", 5.0)]);
+        let cur_b = bench_with(vec![fake("stable", 110.0), fake("regressed", 200.0), fake("fresh", 7.0)]);
+        let to_json = |b: &Bench| {
+            let mut m = BTreeMap::new();
+            for r in b.results() {
+                m.insert(r.name.clone(), r.to_json());
+            }
+            obj(vec![
+                ("format", Json::Num(1.0)),
+                ("suites", obj(vec![("train", Json::Obj(m))])),
+            ])
+        };
+        let report = compare(&to_json(&prev_b), &to_json(&cur_b), 0.30).unwrap();
+        assert_eq!(report.rows.len(), 2);
+        let regs = report.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "regressed");
+        assert!((regs[0].ratio - 2.0).abs() < 1e-9);
+        assert_eq!(report.added, vec!["train/fresh".to_string()]);
+        assert_eq!(report.removed, vec!["train/gone".to_string()]);
+        let rendered = report.render();
+        assert!(rendered.contains("REGRESSED"), "{rendered}");
+        assert!(rendered.contains("train/stable"), "{rendered}");
+
+        // Within-noise drift passes clean.
+        assert!(compare(&to_json(&prev_b), &to_json(&prev_b), 0.30)
+            .unwrap()
+            .regressions()
+            .is_empty());
+    }
+
+    #[test]
+    fn compare_files_roundtrip() {
+        let dir = std::env::temp_dir();
+        let prev = dir.join(format!("tempo_bench_prev_{}.json", std::process::id()));
+        let cur = dir.join(format!("tempo_bench_cur_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&prev);
+        let _ = std::fs::remove_file(&cur);
+        bench_with(vec![fake("k", 100.0)]).emit_json_to("s", &prev).unwrap();
+        bench_with(vec![fake("k", 500.0)]).emit_json_to("s", &cur).unwrap();
+        let report = compare_files(&prev, &cur, 0.30).unwrap();
+        assert_eq!(report.regressions().len(), 1);
+        assert!(compare_files(&prev, Path::new("/nonexistent/b.json"), 0.3).is_err());
+        std::fs::remove_file(&prev).unwrap();
+        std::fs::remove_file(&cur).unwrap();
     }
 }

@@ -5,6 +5,7 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
+use crate::runtime::KernelMode;
 use crate::util::cli::Args;
 
 use super::toml::TomlDoc;
@@ -137,6 +138,12 @@ pub struct ExperimentConfig {
     /// the historical behavior); any value yields the identical training
     /// trajectory — the pipeline is quota-gated at window barriers.
     pub prefetch_batches: usize,
+    /// Kernel dispatch tier for the native engine (rust/DESIGN.md §12).
+    /// `deterministic` is the bit-pinned serial-order tiled path (default,
+    /// golden reference); `fast` enables the vectorized lane-reordered
+    /// kernels under a bounded divergence contract — still bit-identical
+    /// run-to-run and across `learner_threads`, but not vs `deterministic`.
+    pub kernel_mode: KernelMode,
 
     // Network / artifacts
     pub net: String,
@@ -198,6 +205,7 @@ impl Default for ExperimentConfig {
             envs_per_thread: 1,
             learner_threads: 1,
             prefetch_batches: 1,
+            kernel_mode: KernelMode::Deterministic,
             net: "small".into(),
             double: false,
             total_steps: 50_000_000,
@@ -262,6 +270,8 @@ impl ExperimentConfig {
         c.envs_per_thread = doc.usize_or("run.envs_per_thread", c.envs_per_thread)?;
         c.learner_threads = doc.usize_or("learner.threads", c.learner_threads)?;
         c.prefetch_batches = doc.usize_or("learner.prefetch_batches", c.prefetch_batches)?;
+        c.kernel_mode =
+            KernelMode::parse(&doc.str_or("learner.kernel_mode", c.kernel_mode.name())?)?;
         c.net = doc.str_or("net.config", &c.net)?;
         c.double = doc.bool_or("net.double", c.double)?;
         c.total_steps = doc.usize_or("dqn.total_steps", c.total_steps as usize)? as u64;
@@ -314,6 +324,9 @@ impl ExperimentConfig {
         self.envs_per_thread = args.usize_or("envs-per-thread", self.envs_per_thread)?;
         self.learner_threads = args.usize_or("learner-threads", self.learner_threads)?;
         self.prefetch_batches = args.usize_or("prefetch-batches", self.prefetch_batches)?;
+        if let Some(v) = args.str_opt("kernel-mode") {
+            self.kernel_mode = KernelMode::parse(v)?;
+        }
         self.total_steps = args.u64_or("steps", self.total_steps)?;
         self.replay_capacity = args.usize_or("replay-capacity", self.replay_capacity)?;
         self.target_update_period = args.u64_or("target-period", self.target_update_period)?;
@@ -607,6 +620,33 @@ mod tests {
         assert!(ReplayStrategy::parse("bogus").is_err());
         for s in [ReplayStrategy::Uniform, ReplayStrategy::Proportional] {
             assert_eq!(ReplayStrategy::parse(s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn kernel_mode_knob_default_parse_and_validate() {
+        let c = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(
+            c.kernel_mode,
+            KernelMode::Deterministic,
+            "bit-pinned tier is the default machine"
+        );
+
+        let doc = TomlDoc::parse("preset = \"smoke\"\n[learner]\nkernel_mode = \"fast\"\n").unwrap();
+        let mut c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.kernel_mode, KernelMode::Fast);
+
+        let args = Args::parse(["--kernel-mode", "deterministic"].map(String::from)).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.kernel_mode, KernelMode::Deterministic);
+        let args = Args::parse(["--kernel-mode", "simd"].map(String::from)).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.kernel_mode, KernelMode::Fast, "simd alias accepted");
+
+        let bad = Args::parse(["--kernel-mode", "bogus"].map(String::from)).unwrap();
+        assert!(c.apply_args(&bad).is_err());
+        for m in KernelMode::ALL {
+            assert_eq!(KernelMode::parse(m.name()).unwrap(), m);
         }
     }
 

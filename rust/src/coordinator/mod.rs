@@ -179,7 +179,7 @@ impl Coordinator {
         let manifest = Manifest::load_or_builtin(artifact_dir)?;
         // The engine's persistent compute pool is sized here; any width
         // yields bit-identical math (rust/DESIGN.md §9).
-        let device = Arc::new(Device::cpu_with_threads(cfg.learner_threads)?);
+        let device = Arc::new(Device::cpu_with_opts(cfg.learner_threads, cfg.kernel_mode)?);
         let qnet = Arc::new(
             QNet::load(device.clone(), &manifest, &cfg.net, cfg.double, cfg.minibatch)
                 .context("loading Q-network artifacts")?,
@@ -540,6 +540,7 @@ impl Coordinator {
             ("per_beta0", Json::Str(format!("{:016x}", c.per_beta0.to_bits()))),
             ("per_beta_anneal", Json::Num(c.per_beta_anneal as f64)),
             ("n_step", Json::Num(c.n_step as f64)),
+            ("kernel_mode", Json::Str(c.kernel_mode.name().to_string())),
         ])
     }
 
@@ -564,6 +565,10 @@ impl Coordinator {
             ("per_beta0", Json::Str(format!("{:016x}", dflt.per_beta0.to_bits()))),
             ("per_beta_anneal", Json::Num(dflt.per_beta_anneal as f64)),
             ("n_step", Json::Num(dflt.n_step as f64)),
+            // Pre-§12 checkpoints predate the kernel_mode knob; they were
+            // produced by the deterministic tier, so resuming is bit-exact
+            // exactly when this run is deterministic too.
+            ("kernel_mode", Json::Str(dflt.kernel_mode.name().to_string())),
         ];
         let mut mismatches = Vec::new();
         for (key, want_v) in want {

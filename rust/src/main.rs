@@ -7,6 +7,7 @@
 //!   suite      regenerate the Table 4 analog over the synthetic game suite
 //!   anchors    measure the Random / Human-proxy score anchors per game
 //!   config     print the resolved experiment configuration
+//!   bench-compare  diff two BENCH_<pr>.json perf snapshots, fail on regressions
 //!   help       this text
 
 use std::sync::Arc;
@@ -36,18 +37,22 @@ SUBCOMMANDS:
              --threads N --envs-per-thread B --steps N --game NAME
              --net tiny|small|nature --seed N --double --lr X
              --eval-period N --eval-seed N --learner-threads N
-             --prefetch-batches N --replay-strategy uniform|proportional
+             --prefetch-batches N --kernel-mode deterministic|fast
+             --replay-strategy uniform|proportional
              --per-alpha X --per-beta0 X --per-beta-anneal N --n-step N
              --ckpt-dir DIR --ckpt-period N --resume DIR
   run-suite  --campaign FILE (TOML campaign: legs, order, ckpt_dir; see
              rust/src/campaign.rs for the format)
   speedtest  --threads 1,2,4,8 --steps N [--real] [--gantt] [--game NAME]
              [--envs-per-thread B] [--learner-threads N]
-             [--prefetch-batches N] [--replay-strategy S]
+             [--prefetch-batches N] [--replay-strategy S] [--kernel-mode M]
   suite      --steps N --threads N [--games a,b,c] [--episodes N]
              [--eval-seed N]
   anchors    [--games a,b,c] [--episodes N] [--eval-seed N]
   config     (same options as train; prints the resolved config)
+  bench-compare  --prev FILE --cur FILE [--noise 0.30] (exit 1 if any bench
+             mean regressed beyond the noise fraction; see README
+             \"Perf trajectory\")
 
 The coordinator runs W = --threads sampler threads with B =
 --envs-per-thread environment streams each; synchronized modes batch all
@@ -66,6 +71,12 @@ N-step returns with episode-boundary-correct truncation under either
 strategy; proportional trajectories are bit-identical across
 learner-threads, prefetch settings, and checkpoint/resume
 (tests/strategy_equivalence.rs).
+
+--kernel-mode selects the native engine's kernel tier (rust/DESIGN.md
+§12): deterministic (default; bit-pinned serial-order tiled kernels, the
+golden reference) or fast (vectorized lane-reordered kernels under a
+bounded, property-tested divergence contract — still bit-identical
+run-to-run and across --learner-threads, but not vs deterministic).
 
 Checkpointing (rust/DESIGN.md §10): --ckpt-dir enables periodic atomic
 checkpoints at quiesce points (every --ckpt-period steps, rounded up to a
@@ -89,6 +100,7 @@ fn main() {
         "suite" => cmd_suite(&args),
         "anchors" => cmd_anchors(&args),
         "config" => cmd_config(&args),
+        "bench-compare" => cmd_bench_compare(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())
@@ -107,6 +119,30 @@ fn main() {
 fn cmd_config(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::resolve(args)?;
     println!("{cfg:#?}");
+    Ok(())
+}
+
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    let Some(prev) = args.str_opt("prev") else {
+        anyhow::bail!("bench-compare needs --prev FILE (the older BENCH_<pr>.json)");
+    };
+    let Some(cur) = args.str_opt("cur") else {
+        anyhow::bail!("bench-compare needs --cur FILE (the fresh BENCH_<pr>.json)");
+    };
+    let noise = args.f64_or("noise", 0.30)?;
+    let report = tempo_dqn::benchkit::compare_files(
+        std::path::Path::new(prev),
+        std::path::Path::new(cur),
+        noise,
+    )?;
+    print!("{}", report.render());
+    let n = report.regressions().len();
+    if n > 0 {
+        anyhow::bail!(
+            "bench-compare: {n} regression(s) beyond the {:.0}% noise threshold",
+            noise * 100.0
+        );
+    }
     Ok(())
 }
 
@@ -187,6 +223,8 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
     let replay_strategy =
         tempo_dqn::config::ReplayStrategy::parse(args.get_or("replay-strategy", "uniform"))?;
     let prioritized = replay_strategy == tempo_dqn::config::ReplayStrategy::Proportional;
+    let kernel_mode =
+        tempo_dqn::runtime::KernelMode::parse(args.get_or("kernel-mode", "deterministic"))?;
 
     // DES reproduction of the paper's grid (scaled to 50M steps like the
     // paper's x50 extrapolation of a 1M-step measurement).
@@ -232,6 +270,7 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
                 cfg.envs_per_thread = envs_per_thread;
                 cfg.learner_threads = learner_threads;
                 cfg.prefetch_batches = prefetch_batches;
+                cfg.kernel_mode = kernel_mode;
                 cfg.replay_strategy = replay_strategy;
                 cfg.total_steps = steps;
                 cfg.prepopulate = 1_000.min(steps as usize);

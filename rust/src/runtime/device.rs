@@ -25,6 +25,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::engine::ExecutionEngine;
+use super::kernels::KernelMode;
 use super::manifest::NetSpec;
 use super::native::NativeEngine;
 use super::tensor::{HostTensor, TensorView};
@@ -92,7 +93,16 @@ impl Device {
     /// persistent `learner_threads`-lane compute pool. Results are
     /// bit-identical for every thread count (rust/DESIGN.md §9).
     pub fn cpu_with_threads(learner_threads: usize) -> Result<Device> {
-        Ok(Self::with_engine(Box::new(NativeEngine::with_threads(learner_threads))))
+        Self::cpu_with_opts(learner_threads, KernelMode::Deterministic)
+    }
+
+    /// CPU device with an explicit kernel tier (the `kernel_mode` knob;
+    /// rust/DESIGN.md §12). `Deterministic` is bit-pinned; `Fast` trades
+    /// bit-identity vs that pin for vectorized kernels under a bounded,
+    /// property-tested divergence contract — while remaining bit-identical
+    /// run-to-run and across `learner_threads`.
+    pub fn cpu_with_opts(learner_threads: usize, kernel_mode: KernelMode) -> Result<Device> {
+        Ok(Self::with_engine(Box::new(NativeEngine::with_options(learner_threads, kernel_mode))))
     }
 
     /// The PJRT/XLA device executing AOT-compiled HLO artifacts.

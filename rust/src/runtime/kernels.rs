@@ -1,11 +1,12 @@
 //! Dense kernels for the native engine.
 //!
-//! Two implementations of each matmul:
+//! Three tiers of each matmul (rust/DESIGN.md §12):
 //!
 //! * **naive** — the reference loops (unchanged from the original engine);
 //!   kept as the oracle the tiled versions are tested against and used by
 //!   the serial golden reference (`runtime/golden.rs`).
-//! * **tiled** — cache-blocked versions used on the hot path. Blocking
+//! * **tiled** — cache-blocked versions used on the hot path when
+//!   [`KernelMode::Deterministic`] (the default) is selected. Blocking
 //!   reorders only *which output element is worked on when*; every output
 //!   element's own accumulation sequence (ascending `k` for forward,
 //!   ascending row index for gradient reductions, one self-contained dot
@@ -13,9 +14,24 @@
 //!   `av == 0.0` sparsity skip. The tiled kernels are therefore
 //!   **bit-identical** to the naive ones — pinned elementwise in
 //!   `tests/parallel_learner.rs`.
+//! * **fast** — explicitly lane-structured versions used when
+//!   [`KernelMode::Fast`] is selected. These *reassociate* each output
+//!   element's reduction into a fixed number of independent accumulator
+//!   lanes ([`FAST_LANES`]-wide split dots, [`FAST_RANK`]-wide fused
+//!   rank-updates) so the inner loops are straight-line independent FMAs
+//!   that LLVM auto-vectorizes on stable Rust (no `portable_simd`). The
+//!   result is *not* bit-identical to the deterministic tier; instead it
+//!   carries a **bounded-divergence contract** — property-tested against
+//!   the naive oracle on random shapes (`tests/kernel_modes.rs`) with a
+//!   first-order rounding bound `|fast − det| ≤ c·t·ε·Σ|termᵢ|` where `t`
+//!   is the reduction length. The lane order itself is fixed, so fast
+//!   kernels are still bit-deterministic run-to-run and across thread
+//!   counts; only the deterministic↔fast cross-mode identity is relaxed.
 //!
 //! All kernels evaluate f32 in a fixed order, so results are
 //! bit-deterministic across runs and thread counts (rust/DESIGN.md §7).
+
+use anyhow::{bail, Result};
 
 /// k-dimension block: `TILE_K` rows of `b` (forward) / of `out` (weight
 /// grads) stay cache-hot while the m dimension streams past them.
@@ -174,6 +190,250 @@ pub fn matmul_a_bt_tiled(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usi
 }
 
 // ---------------------------------------------------------------------------
+// Kernel mode selection
+// ---------------------------------------------------------------------------
+
+/// Which kernel tier the engine dispatches to (`kernel_mode` knob).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Serial-order tiled kernels — bit-identical to the naive oracle and
+    /// therefore to every golden / equivalence-matrix pin. The default.
+    #[default]
+    Deterministic,
+    /// Lane-reordered kernels — faster, bounded divergence from the
+    /// deterministic tier, still bit-deterministic run-to-run.
+    Fast,
+}
+
+impl KernelMode {
+    pub const ALL: [KernelMode; 2] = [KernelMode::Deterministic, KernelMode::Fast];
+
+    pub fn parse(s: &str) -> Result<KernelMode> {
+        match s {
+            "deterministic" | "det" => Ok(KernelMode::Deterministic),
+            "fast" | "simd" => Ok(KernelMode::Fast),
+            other => bail!("unknown kernel_mode '{other}' (expected deterministic|fast)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelMode::Deterministic => "deterministic",
+            KernelMode::Fast => "fast",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fast (lane-reordered) kernels
+// ---------------------------------------------------------------------------
+
+/// Independent accumulator lanes in the fast dot kernel. Eight f32 lanes is
+/// one AVX2 register; the tree reduction at the end is a fixed association,
+/// so the kernel stays run-to-run deterministic at any actual vector width
+/// the backend picks (lane-count invariance is what the divergence tests
+/// pin, not the emitted asm).
+pub const FAST_LANES: usize = 8;
+
+/// Fusion width of the fast rank-update kernels: four rank-1 updates are
+/// combined into one pass over the output row, giving the autovectorizer
+/// four independent FMAs per output element per loop iteration.
+pub const FAST_RANK: usize = 4;
+
+/// `out[j] += (c0·r0[j] + c1·r1[j]) + (c2·r2[j] + c3·r3[j])` — the fused
+/// rank-4 step shared by the fast accumulation kernels and the fast
+/// Phase-B gradient reduction in `runtime/native.rs`. The association is
+/// fixed, so the result depends only on the inputs, never on the caller's
+/// thread layout.
+#[inline]
+pub fn axpy4(out: &mut [f32], c: [f32; 4], r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32]) {
+    let n = out.len();
+    let (r0, r1, r2, r3) = (&r0[..n], &r1[..n], &r2[..n], &r3[..n]);
+    for j in 0..n {
+        out[j] += (c[0] * r0[j] + c[1] * r1[j]) + (c[2] * r2[j] + c[3] * r3[j]);
+    }
+}
+
+/// [`FAST_LANES`]-lane split dot product with a fixed tree reduction and a
+/// serial scalar tail. Divergence from the serial dot is bounded by the
+/// usual first-order reassociation error `O(k·ε·Σ|aᵢbᵢ|)`.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut lanes = [0.0f32; FAST_LANES];
+    let blocks = n / FAST_LANES;
+    for blk in 0..blocks {
+        let base = blk * FAST_LANES;
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += a[base + l] * b[base + l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for j in blocks * FAST_LANES..n {
+        tail += a[j] * b[j];
+    }
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+        + tail
+}
+
+/// Fast [`matmul_acc`]: k is consumed in [`FAST_RANK`]-wide blocks, each a
+/// single fused pass over the output row. A block is skipped only when all
+/// four coefficients are exactly zero (the post-ReLU sparsity skip,
+/// coarsened to block granularity); the scalar tail keeps the serial skip.
+pub fn matmul_acc_fast(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut kk = 0;
+        while kk + FAST_RANK <= k {
+            let c = [arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]];
+            if c != [0.0; FAST_RANK] {
+                axpy4(
+                    orow,
+                    c,
+                    &b[kk * n..],
+                    &b[(kk + 1) * n..],
+                    &b[(kk + 2) * n..],
+                    &b[(kk + 3) * n..],
+                );
+            }
+            kk += FAST_RANK;
+        }
+        for kr in kk..k {
+            let av = arow[kr];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kr * n..(kr + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Fast [`matmul_at_b_acc`]: samples (m) are consumed in [`FAST_RANK`]-wide
+/// groups, so each pass over the `[K,N]` output fuses four rank-1 gradient
+/// contributions instead of one.
+pub fn matmul_at_b_acc_fast(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    let mut i = 0;
+    while i + FAST_RANK <= m {
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        let b0 = &b[i * n..(i + 1) * n];
+        let b1 = &b[(i + 1) * n..(i + 2) * n];
+        let b2 = &b[(i + 2) * n..(i + 3) * n];
+        let b3 = &b[(i + 3) * n..(i + 4) * n];
+        for kk in 0..k {
+            let c = [a0[kk], a1[kk], a2[kk], a3[kk]];
+            if c != [0.0; FAST_RANK] {
+                axpy4(&mut out[kk * n..(kk + 1) * n], c, b0, b1, b2, b3);
+            }
+        }
+        i += FAST_RANK;
+    }
+    for ir in i..m {
+        let arow = &a[ir * k..(ir + 1) * k];
+        let brow = &b[ir * n..(ir + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Fast [`matmul_a_bt`]: same `TILE_J` output blocking as the tiled kernel
+/// (each dot is self-contained), but every dot runs through the
+/// [`dot8`] lane-split reduction.
+pub fn matmul_a_bt_fast(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + TILE_J).min(n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in j0..j1 {
+                out[i * n + j] = dot8(arow, &b[j * k..(j + 1) * k]);
+            }
+        }
+        j0 = j1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mode dispatch (the engine's single entry points)
+// ---------------------------------------------------------------------------
+
+/// [`matmul_acc`] dispatched by kernel tier.
+#[inline]
+pub fn matmul_acc_mode(
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match mode {
+        KernelMode::Deterministic => matmul_acc_tiled(a, b, out, m, k, n),
+        KernelMode::Fast => matmul_acc_fast(a, b, out, m, k, n),
+    }
+}
+
+/// [`matmul_at_b_acc`] dispatched by kernel tier.
+#[inline]
+pub fn matmul_at_b_acc_mode(
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match mode {
+        KernelMode::Deterministic => matmul_at_b_acc_tiled(a, b, out, m, k, n),
+        KernelMode::Fast => matmul_at_b_acc_fast(a, b, out, m, k, n),
+    }
+}
+
+/// [`matmul_a_bt`] dispatched by kernel tier.
+#[inline]
+pub fn matmul_a_bt_mode(
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match mode {
+        KernelMode::Deterministic => matmul_a_bt_tiled(a, b, out, m, k, n),
+        KernelMode::Fast => matmul_a_bt_fast(a, b, out, m, k, n),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // im2col / col2im (shared by the engine and the golden reference)
 // ---------------------------------------------------------------------------
 
@@ -303,6 +563,175 @@ mod tests {
         let mut out = [0.0f32; 4];
         matmul_acc_tiled(&a, &b, &mut out, 2, 2, 2);
         assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn kernel_mode_parse_and_name_roundtrip() {
+        for mode in KernelMode::ALL {
+            assert_eq!(KernelMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert_eq!(KernelMode::parse("det").unwrap(), KernelMode::Deterministic);
+        assert_eq!(KernelMode::parse("simd").unwrap(), KernelMode::Fast);
+        assert!(KernelMode::parse("turbo").is_err());
+        assert_eq!(KernelMode::default(), KernelMode::Deterministic);
+    }
+
+    /// First-order reassociation bound for a length-`t` f32 reduction whose
+    /// terms have absolute sum `s`: any two summation orders agree to within
+    /// `O(t·ε·s)`; the factor 4 gives slack for the product roundings.
+    fn reassoc_tol(t: usize, s: f32) -> f32 {
+        4.0 * (t as f32) * f32::EPSILON * s + f32::MIN_POSITIVE
+    }
+
+    #[test]
+    fn fast_kernels_match_naive_within_reassociation_bound() {
+        let mut rng = Rng::new(0xFA57);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 7, 5),
+            (4, 128, 64),
+            (5, 129, 65),
+            (32, 300, 17),
+            (2, 513, 130),
+        ] {
+            let a = randvec(&mut rng, m * k);
+            let b_kn = randvec(&mut rng, k * n);
+            let b_mn = randvec(&mut rng, m * n);
+            let b_nk = randvec(&mut rng, n * k);
+            let seed_mn = randvec(&mut rng, m * n);
+            let seed_kn = randvec(&mut rng, k * n);
+
+            let mut det = seed_mn.clone();
+            let mut fast = seed_mn.clone();
+            matmul_acc(&a, &b_kn, &mut det, m, k, n);
+            matmul_acc_fast(&a, &b_kn, &mut fast, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = seed_mn[i * n + j].abs();
+                    for kk in 0..k {
+                        s += (a[i * k + kk] * b_kn[kk * n + j]).abs();
+                    }
+                    let (d, f) = (det[i * n + j], fast[i * n + j]);
+                    assert!(
+                        (d - f).abs() <= reassoc_tol(k + 1, s),
+                        "matmul_acc {m}x{k}x{n} [{i},{j}]: det {d} fast {f}"
+                    );
+                }
+            }
+
+            let mut det = seed_kn.clone();
+            let mut fast = seed_kn.clone();
+            matmul_at_b_acc(&a, &b_mn, &mut det, m, k, n);
+            matmul_at_b_acc_fast(&a, &b_mn, &mut fast, m, k, n);
+            for kk in 0..k {
+                for j in 0..n {
+                    let mut s = seed_kn[kk * n + j].abs();
+                    for i in 0..m {
+                        s += (a[i * k + kk] * b_mn[i * n + j]).abs();
+                    }
+                    let (d, f) = (det[kk * n + j], fast[kk * n + j]);
+                    assert!(
+                        (d - f).abs() <= reassoc_tol(m + 1, s),
+                        "matmul_at_b_acc {m}x{k}x{n} [{kk},{j}]: det {d} fast {f}"
+                    );
+                }
+            }
+
+            let mut det = vec![0.0f32; m * n];
+            let mut fast = vec![f32::NAN; m * n]; // `=` kernel: junk overwritten
+            matmul_a_bt(&a, &b_nk, &mut det, m, k, n);
+            matmul_a_bt_fast(&a, &b_nk, &mut fast, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0f32;
+                    for kk in 0..k {
+                        s += (a[i * k + kk] * b_nk[j * k + kk]).abs();
+                    }
+                    let (d, f) = (det[i * n + j], fast[i * n + j]);
+                    assert!(
+                        (d - f).abs() <= reassoc_tol(k, s),
+                        "matmul_a_bt {m}x{k}x{n} [{i},{j}]: det {d} fast {f}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_kernels_are_bit_deterministic_run_to_run() {
+        let mut rng = Rng::new(0xD07);
+        let (m, k, n) = (7, 130, 33);
+        let a = randvec(&mut rng, m * k);
+        let b_kn = randvec(&mut rng, k * n);
+        let b_mn = randvec(&mut rng, m * n);
+        let b_nk = randvec(&mut rng, n * k);
+        let seed_mn = randvec(&mut rng, m * n);
+        let seed_kn = randvec(&mut rng, k * n);
+        for _ in 0..2 {
+            let mut x1 = seed_mn.clone();
+            let mut x2 = seed_mn.clone();
+            matmul_acc_fast(&a, &b_kn, &mut x1, m, k, n);
+            matmul_acc_fast(&a, &b_kn, &mut x2, m, k, n);
+            assert_eq!(bits(&x1), bits(&x2), "matmul_acc_fast repeat");
+
+            let mut y1 = seed_kn.clone();
+            let mut y2 = seed_kn.clone();
+            matmul_at_b_acc_fast(&a, &b_mn, &mut y1, m, k, n);
+            matmul_at_b_acc_fast(&a, &b_mn, &mut y2, m, k, n);
+            assert_eq!(bits(&y1), bits(&y2), "matmul_at_b_acc_fast repeat");
+
+            let mut z1 = vec![0.0f32; m * n];
+            let mut z2 = vec![0.0f32; m * n];
+            matmul_a_bt_fast(&a, &b_nk, &mut z1, m, k, n);
+            matmul_a_bt_fast(&a, &b_nk, &mut z2, m, k, n);
+            assert_eq!(bits(&z1), bits(&z2), "matmul_a_bt_fast repeat");
+        }
+    }
+
+    /// Generic L-lane split dot: the reference for lane-count invariance.
+    fn dot_lanes<const L: usize>(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut lanes = [0.0f32; L];
+        let blocks = n / L;
+        for blk in 0..blocks {
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                *lane += a[blk * L + l] * b[blk * L + l];
+            }
+        }
+        let mut tail = 0.0f32;
+        for j in blocks * L..n {
+            tail += a[j] * b[j];
+        }
+        // Adjacent-pairwise tree over the lane array (L a power of two) —
+        // for L = 8 this is exactly `dot8`'s fixed association.
+        let mut width = L;
+        while width > 1 {
+            width /= 2;
+            for l in 0..width {
+                lanes[l] = lanes[2 * l] + lanes[2 * l + 1];
+            }
+        }
+        lanes[0] + tail
+    }
+
+    #[test]
+    fn dot8_is_lane_count_invariant_within_bound() {
+        // The divergence contract may not depend on the physical vector
+        // width: 4-, 8- and 16-lane splits of the same dot all agree within
+        // the reassociation bound, and the 8-lane generic split reproduces
+        // `dot8` exactly (same association tree).
+        let mut rng = Rng::new(0x1A9E5);
+        for len in [1usize, 7, 8, 9, 63, 64, 65, 300, 1024] {
+            let a = randvec(&mut rng, len);
+            let b = randvec(&mut rng, len);
+            let s: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            let tol = reassoc_tol(len, s);
+            let d8 = dot8(&a, &b);
+            assert_eq!(d8.to_bits(), dot_lanes::<8>(&a, &b).to_bits(), "len {len}: dot8 tree");
+            for dl in [dot_lanes::<4>(&a, &b), dot_lanes::<16>(&a, &b)] {
+                assert!((d8 - dl).abs() <= tol, "len {len}: {d8} vs {dl} (tol {tol})");
+            }
+        }
     }
 
     #[test]

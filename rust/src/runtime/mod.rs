@@ -27,6 +27,7 @@ pub mod xla_engine;
 
 pub use device::{BusSnapshot, BusStats, Device};
 pub use engine::{EntryKind, ExecutionEngine};
+pub use kernels::KernelMode;
 pub use manifest::{Dtype, Entry, InputSig, Manifest, NetSpec};
 pub use native::{NativeEngine, NetArch};
 pub use pool::ComputePool;

@@ -20,6 +20,16 @@
 //! The hot matmuls are cache-tiled (`runtime/kernels.rs`), also without
 //! changing any per-element accumulation order.
 //!
+//! **Kernel modes** (rust/DESIGN.md §12): every dense kernel call goes
+//! through the `matmul_*_mode` dispatchers, selected by the engine's
+//! [`KernelMode`]. `Deterministic` (default) is the serial-order tiled
+//! path above — bit-pinned against the golden reference. `Fast` swaps in
+//! the lane-reordered kernels and, in Phase B, fuses cross-sample
+//! reductions four rows at a time; the grouping is always relative to
+//! *global* sample order (never shard boundaries), so fast mode is still
+//! bit-identical across `learner_threads` — it diverges (boundedly) only
+//! from the deterministic tier.
+//!
 //! This engine needs no artifacts: architecture comes from the manifest's
 //! config name (the same three variants `model.make_config` defines), and
 //! initial parameters use the same scheme (zero biases, uniform
@@ -28,7 +38,11 @@
 //! Memory note: inference materializes im2col patches per *sample*
 //! (O(OH·OW·k²·C) scratch); the train entry additionally retains patches
 //! and deltas for the whole minibatch so Phase B can re-walk samples in
-//! global order (~20 MB for the `nature` net at batch 32).
+//! global order (~20 MB for the `nature` net at batch 32). The engine
+//! recycles the two dominant per-step allocations — the retained im2col
+//! patch buffers and the gradient staging vector — through a persistent
+//! [`TrainScratch`] (buffer identity only; contents are fully rewritten
+//! each step, so reuse is bitwise invisible).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -38,7 +52,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::util::rng::Rng;
 
 use super::engine::{EntryKind, ExecutionEngine};
-use super::kernels::{col2im_sample, im2col_sample, matmul_a_bt_tiled, matmul_acc_tiled, matmul_at_b_acc_tiled};
+use super::kernels::{
+    axpy4, col2im_sample, im2col_sample, matmul_a_bt_mode, matmul_acc_mode, KernelMode, FAST_LANES,
+    FAST_RANK,
+};
 use super::manifest::NetSpec;
 use super::pool::{split_ranges, ComputePool};
 use super::tensor::{HostTensor, TensorView};
@@ -238,6 +255,10 @@ struct Fwd {
 /// Forward over `rows` consecutive samples. `keep` retains activations for
 /// backprop; `keep_patches` additionally retains every conv layer's im2col
 /// patch matrices (Phase B re-walks them in global sample order).
+/// `patch_recycle` donates previously retained patch buffers (indexed by
+/// conv layer) so steady-state training reuses their capacity; contents
+/// are fully rewritten, so recycling never changes a result bit.
+#[allow(clippy::too_many_arguments)]
 fn forward_shard(
     arch: &NetArch,
     p: &Params<'_>,
@@ -245,6 +266,8 @@ fn forward_shard(
     rows: usize,
     keep: bool,
     keep_patches: bool,
+    mode: KernelMode,
+    patch_recycle: &mut Vec<Vec<f32>>,
 ) -> Result<Fwd> {
     let [h0, w0, c0] = arch.frame;
     if states.len() != rows * h0 * w0 * c0 {
@@ -267,7 +290,18 @@ fn forward_shard(
         tensor_idx += 2;
         let mut y = vec![0.0f32; rows * oh * ow * conv.filters];
         let psz = oh * ow * kdim;
-        let mut retained = if keep_patches { vec![0.0f32; rows * psz] } else { Vec::new() };
+        let mut retained = if keep_patches {
+            let mut buf = if i < patch_recycle.len() {
+                std::mem::take(&mut patch_recycle[i])
+            } else {
+                Vec::new()
+            };
+            buf.clear();
+            buf.resize(rows * psz, 0.0);
+            buf
+        } else {
+            Vec::new()
+        };
         if !keep_patches {
             scratch.clear();
             scratch.resize(psz, 0.0);
@@ -280,7 +314,7 @@ fn forward_shard(
             };
             im2col_sample(&x[bi * h * w * c..(bi + 1) * h * w * c], h, w, c, conv.kernel, conv.stride, patches);
             let yrows = &mut y[bi * oh * ow * conv.filters..(bi + 1) * oh * ow * conv.filters];
-            matmul_acc_tiled(patches, wmat, yrows, oh * ow, kdim, conv.filters);
+            matmul_acc_mode(mode, patches, wmat, yrows, oh * ow, kdim, conv.filters);
         }
         // Bias + ReLU in one pass.
         for (j, v) in y.iter_mut().enumerate() {
@@ -305,7 +339,7 @@ fn forward_shard(
         let bias = p.tensor(tensor_idx + 1);
         tensor_idx += 2;
         let mut y = vec![0.0f32; rows * width];
-        matmul_acc_tiled(&x, wmat, &mut y, rows, dim, width);
+        matmul_acc_mode(mode, &x, wmat, &mut y, rows, dim, width);
         for (j, v) in y.iter_mut().enumerate() {
             let withb = *v + bias[j % width];
             *v = if withb > 0.0 { withb } else { 0.0 };
@@ -321,7 +355,7 @@ fn forward_shard(
     let wmat = p.tensor(tensor_idx);
     let bias = p.tensor(tensor_idx + 1);
     let mut q = vec![0.0f32; rows * arch.actions];
-    matmul_acc_tiled(&x, wmat, &mut q, rows, dim, arch.actions);
+    matmul_acc_mode(mode, &x, wmat, &mut q, rows, dim, arch.actions);
     for (j, v) in q.iter_mut().enumerate() {
         *v += bias[j % arch.actions];
     }
@@ -329,20 +363,22 @@ fn forward_shard(
     Ok(Fwd { conv_out, conv_patches, fc_out, q })
 }
 
-/// Q-values only, computed serially (tests and small batches).
+/// Q-values only, computed serially with the deterministic kernel tier
+/// (tests, the golden-style references, and small batches).
 pub fn infer(arch: &NetArch, params: &[f32], states: &[u8], batch: usize) -> Result<Vec<f32>> {
     let p = Params::new(arch, params)?;
-    Ok(forward_shard(arch, &p, states, batch, false, false)?.q)
+    Ok(forward_shard(arch, &p, states, batch, false, false, KernelMode::Deterministic, &mut Vec::new())?.q)
 }
 
-/// Q-values with the batch sharded over the pool (bit-identical to
-/// [`infer`]: the forward pass is per-sample).
+/// Q-values with the batch sharded over the pool (bit-identical across
+/// pool widths in either kernel mode: the forward pass is per-sample).
 pub fn infer_pooled(
     arch: &NetArch,
     params: &[f32],
     states: &[u8],
     batch: usize,
     pool: &ComputePool,
+    mode: KernelMode,
 ) -> Result<Vec<f32>> {
     let p = Params::new(arch, params)?;
     let frame = arch.frame_elems();
@@ -351,7 +387,7 @@ pub fn infer_pooled(
     }
     let ranges = split_ranges(batch, pool.threads());
     if ranges.len() <= 1 {
-        return Ok(forward_shard(arch, &p, states, batch, false, false)?.q);
+        return Ok(forward_shard(arch, &p, states, batch, false, false, mode, &mut Vec::new())?.q);
     }
     let a = arch.actions;
     let mut q = vec![0.0f32; batch * a];
@@ -366,7 +402,7 @@ pub fn infer_pooled(
         let p = &p;
         let rows_states = &states[lo * frame..hi * frame];
         tasks.push(Box::new(move || {
-            match forward_shard(arch, p, rows_states, hi - lo, false, false) {
+            match forward_shard(arch, p, rows_states, hi - lo, false, false, mode, &mut Vec::new()) {
                 Ok(fwd) => chunk.copy_from_slice(&fwd.q),
                 Err(e) => *err = Some(e.to_string()),
             }
@@ -430,6 +466,7 @@ fn shard_phase_a(
     boot_gammas: Option<&[f32]>,
     double: bool,
     batch_total: usize,
+    mode: KernelMode,
     slot: &mut ShardSlot,
 ) -> Result<()> {
     let rows = slot.rows();
@@ -437,14 +474,17 @@ fn shard_phase_a(
     let frame = arch.frame_elems();
     let a = arch.actions;
 
-    let fwd = forward_shard(arch, p, &states[lo * frame..hi * frame], rows, true, true)?;
+    // Donate last step's retained patch buffers back to the forward pass.
+    let mut patch_recycle = std::mem::take(&mut slot.conv_patches);
+    let fwd =
+        forward_shard(arch, p, &states[lo * frame..hi * frame], rows, true, true, mode, &mut patch_recycle)?;
     let next_rows = &next_states[lo * frame..hi * frame];
-    let qn_target = forward_shard(arch, pt, next_rows, rows, false, false)?.q;
+    let qn_target = forward_shard(arch, pt, next_rows, rows, false, false, mode, &mut Vec::new())?.q;
 
     // Bootstrap values (never differentiated — stop_gradient in the model).
     let mut bootstrap = vec![0.0f32; rows];
     if double {
-        let qn_online = forward_shard(arch, p, next_rows, rows, false, false)?.q;
+        let qn_online = forward_shard(arch, p, next_rows, rows, false, false, mode, &mut Vec::new())?.q;
         for r in 0..rows {
             let row = &qn_online[r * a..(r + 1) * a];
             let mut best = 0;
@@ -504,7 +544,7 @@ fn shard_phase_a(
 
     let out_w = p.tensor(2 * n_conv + 2 * n_fc);
     let mut dx = vec![0.0f32; rows * head_dim];
-    matmul_a_bt_tiled(&dq, out_w, &mut dx, rows, a, head_dim);
+    matmul_a_bt_mode(mode, &dq, out_w, &mut dx, rows, a, head_dim);
 
     let mut dfc: Vec<Vec<f32>> = vec![Vec::new(); n_fc];
     for i in (0..n_fc).rev() {
@@ -519,7 +559,7 @@ fn shard_phase_a(
         let in_dim = if i > 0 { arch.hidden[i - 1] } else { flat_dim };
         let wmat = p.tensor(2 * n_conv + 2 * i);
         let mut dprev = vec![0.0f32; rows * in_dim];
-        matmul_a_bt_tiled(&dx, wmat, &mut dprev, rows, width, in_dim);
+        matmul_a_bt_mode(mode, &dx, wmat, &mut dprev, rows, width, in_dim);
         dfc[i] = std::mem::replace(&mut dx, dprev);
     }
 
@@ -549,7 +589,7 @@ fn shard_phase_a(
             let mut dpatches = vec![0.0f32; oh * ow * kdim];
             for bi in 0..rows {
                 let dy = &dx[bi * oh * ow * f..(bi + 1) * oh * ow * f];
-                matmul_a_bt_tiled(dy, wmat, &mut dpatches, oh * ow, f, kdim);
+                matmul_a_bt_mode(mode, dy, wmat, &mut dpatches, oh * ow, f, kdim);
                 col2im_sample(&dpatches, in_h, in_w, in_c, conv.kernel, conv.stride, &mut dprev[bi * in_sz..(bi + 1) * in_sz]);
             }
         }
@@ -567,8 +607,70 @@ fn shard_phase_a(
     Ok(())
 }
 
+/// Fast Phase-B reduction for dense-layer weight gradients: `chunk` holds
+/// output rows `k_lo..k_hi` of a `[in_dim, width]` gradient; `xrows` and
+/// `drows` are per-sample activation/delta rows **in global sample order**
+/// (gathered across shard slots by the caller, so the [`FAST_RANK`]-wide
+/// grouping never depends on where shard boundaries fall).
+fn fast_weight_chunk(
+    chunk: &mut [f32],
+    width: usize,
+    k_lo: usize,
+    k_hi: usize,
+    xrows: &[&[f32]],
+    drows: &[&[f32]],
+) {
+    let b = xrows.len();
+    let mut s = 0;
+    while s + FAST_RANK <= b {
+        let (x0, x1, x2, x3) = (xrows[s], xrows[s + 1], xrows[s + 2], xrows[s + 3]);
+        let (d0, d1, d2, d3) = (drows[s], drows[s + 1], drows[s + 2], drows[s + 3]);
+        for kk in k_lo..k_hi {
+            let c = [x0[kk], x1[kk], x2[kk], x3[kk]];
+            if c != [0.0; FAST_RANK] {
+                axpy4(&mut chunk[(kk - k_lo) * width..(kk - k_lo + 1) * width], c, d0, d1, d2, d3);
+            }
+        }
+        s += FAST_RANK;
+    }
+    for r in s..b {
+        let (xrow, drow) = (xrows[r], drows[r]);
+        for kk in k_lo..k_hi {
+            let av = xrow[kk];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut chunk[(kk - k_lo) * width..(kk - k_lo + 1) * width];
+            for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                *o += av * dv;
+            }
+        }
+    }
+}
+
+/// Reusable cross-step buffers for [`td_grads_opts`]: the Phase A shard
+/// slots (whose retained im2col patch buffers are the engine's dominant
+/// per-step allocation) and the gradient staging vector. Contents are
+/// fully rewritten each step — only capacity is carried over — so a
+/// shared scratch is bitwise indistinguishable from a fresh one (pinned
+/// in this module's tests and by the golden pipeline test).
+#[derive(Default)]
+pub struct TrainScratch {
+    slots: Vec<ShardSlot>,
+    grad: Vec<f32>,
+}
+
+impl TrainScratch {
+    /// Hand a gradient vector's capacity back for the next step (the
+    /// engine calls this after the optimizer has consumed the gradient).
+    pub fn recycle_grad(&mut self, grad: Vec<f32>) {
+        self.grad = grad;
+    }
+}
+
 /// TD loss + full parameter gradient (the train entry minus the optimizer),
-/// sharded over `pool`. Returns (grad, loss, per-sample TD errors). With
+/// sharded over `pool`, with the deterministic kernel tier and one-shot
+/// scratch. Returns (grad, loss, per-sample TD errors). With
 /// `weights`/`boot_gammas` absent this is bit-identical to
 /// `golden::reference_td_grads` for every pool width — see the module docs
 /// for why the two-phase split preserves the serial accumulation order.
@@ -591,6 +693,35 @@ pub fn td_grads(
     double: bool,
     pool: &ComputePool,
 ) -> Result<(Vec<f32>, f32, Vec<f32>)> {
+    let mut scratch = TrainScratch::default();
+    td_grads_opts(
+        arch, theta, target_theta, states, actions, rewards, next_states, dones, gamma, weights,
+        boot_gammas, double, pool, KernelMode::Deterministic, &mut scratch,
+    )
+}
+
+/// [`td_grads`] with an explicit kernel mode and persistent scratch (the
+/// engine's entry point). In `Fast` mode the Phase B reductions group
+/// rows/samples in [`FAST_RANK`]-wide blocks of the *global* order, so
+/// results remain bit-identical across pool widths.
+#[allow(clippy::too_many_arguments)]
+pub fn td_grads_opts(
+    arch: &NetArch,
+    theta: &[f32],
+    target_theta: &[f32],
+    states: &[u8],
+    actions: &[i32],
+    rewards: &[f32],
+    next_states: &[u8],
+    dones: &[f32],
+    gamma: f32,
+    weights: Option<&[f32]>,
+    boot_gammas: Option<&[f32]>,
+    double: bool,
+    pool: &ComputePool,
+    mode: KernelMode,
+    scratch: &mut TrainScratch,
+) -> Result<(Vec<f32>, f32, Vec<f32>)> {
     let batch = actions.len();
     if batch == 0 {
         bail!("train: empty minibatch");
@@ -609,10 +740,16 @@ pub fn td_grads(
     let pt = Params::new(arch, target_theta)?;
 
     // ---- Phase A: per-sample work over contiguous shards -----------------
-    let mut slots: Vec<ShardSlot> = split_ranges(batch, pool.threads())
-        .into_iter()
-        .map(|(lo, hi)| ShardSlot { lo, hi, ..ShardSlot::default() })
-        .collect();
+    // Shard slots come from the scratch so their retained patch buffers
+    // (and any other capacity) survive across steps.
+    let ranges = split_ranges(batch, pool.threads());
+    scratch.slots.resize_with(ranges.len(), ShardSlot::default);
+    let slots: &mut [ShardSlot] = &mut scratch.slots;
+    for (slot, (lo, hi)) in slots.iter_mut().zip(ranges) {
+        slot.lo = lo;
+        slot.hi = hi;
+        slot.err = None;
+    }
     {
         let p = &p;
         let pt = &pt;
@@ -622,7 +759,7 @@ pub fn td_grads(
                 Box::new(move || {
                     if let Err(e) = shard_phase_a(
                         arch, p, pt, states, actions, rewards, next_states, dones, gamma,
-                        weights, boot_gammas, double, batch, slot,
+                        weights, boot_gammas, double, batch, mode, slot,
                     ) {
                         slot.err = Some(e.to_string());
                     }
@@ -631,7 +768,7 @@ pub fn td_grads(
             .collect();
         pool.scope(tasks);
     }
-    for slot in &slots {
+    for slot in slots.iter() {
         if let Some(e) = &slot.err {
             bail!("{e}");
         }
@@ -640,7 +777,7 @@ pub fn td_grads(
     // Mean loss, summed in global sample order (identical to the serial
     // whole-batch accumulation: shards are contiguous and ascending).
     let mut loss = 0.0f32;
-    for slot in &slots {
+    for slot in slots.iter() {
         for &l in &slot.losses {
             loss += l;
         }
@@ -649,7 +786,7 @@ pub fn td_grads(
 
     // Per-sample TD errors, stitched back in global order.
     let mut td_all = vec![0.0f32; batch];
-    for slot in &slots {
+    for slot in slots.iter() {
         td_all[slot.lo..slot.hi].copy_from_slice(&slot.td);
     }
 
@@ -667,7 +804,11 @@ pub fn td_grads(
     let a = arch.actions;
     let threads = pool.threads();
 
-    let mut grad = vec![0.0f32; arch.param_count()];
+    // Gradient staging reuses the scratch vector's capacity; clear+resize
+    // rewrites every element to 0.0, so history never leaks into a result.
+    let mut grad = std::mem::take(&mut scratch.grad);
+    grad.clear();
+    grad.resize(arch.param_count(), 0.0);
     let mut tensor_slices: Vec<&mut [f32]> = Vec::new();
     {
         let mut rest: &mut [f32] = &mut grad;
@@ -679,7 +820,7 @@ pub fn td_grads(
         }
     }
 
-    let slots_ref: &[ShardSlot] = &slots;
+    let slots_ref: &[ShardSlot] = slots;
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     let mut slice_iter = tensor_slices.into_iter();
 
@@ -705,17 +846,70 @@ pub fn td_grads(
                     for bi in 0..rows {
                         let dy = &dcv[bi * oh * ow * f..(bi + 1) * oh * ow * f];
                         let psamp = &pat[bi * oh * ow * kdim..(bi + 1) * oh * ow * kdim];
-                        for row in 0..oh * ow {
-                            let prow = &psamp[row * kdim..(row + 1) * kdim];
-                            let drow = &dy[row * f..(row + 1) * f];
-                            for kk in k_lo..k_hi {
-                                let av = prow[kk];
-                                if av == 0.0 {
-                                    continue;
+                        match mode {
+                            KernelMode::Deterministic => {
+                                for row in 0..oh * ow {
+                                    let prow = &psamp[row * kdim..(row + 1) * kdim];
+                                    let drow = &dy[row * f..(row + 1) * f];
+                                    for kk in k_lo..k_hi {
+                                        let av = prow[kk];
+                                        if av == 0.0 {
+                                            continue;
+                                        }
+                                        let orow =
+                                            &mut chunk[(kk - k_lo) * f..(kk - k_lo + 1) * f];
+                                        for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                            *o += av * dv;
+                                        }
+                                    }
                                 }
-                                let orow = &mut chunk[(kk - k_lo) * f..(kk - k_lo + 1) * f];
-                                for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
-                                    *o += av * dv;
+                            }
+                            KernelMode::Fast => {
+                                // Patch rows grouped within the sample —
+                                // independent of shard layout, so fast mode
+                                // stays width-invariant.
+                                let nrow = oh * ow;
+                                let mut row = 0;
+                                while row + FAST_RANK <= nrow {
+                                    let p0 = &psamp[row * kdim..(row + 1) * kdim];
+                                    let p1 = &psamp[(row + 1) * kdim..(row + 2) * kdim];
+                                    let p2 = &psamp[(row + 2) * kdim..(row + 3) * kdim];
+                                    let p3 = &psamp[(row + 3) * kdim..(row + 4) * kdim];
+                                    let d0 = &dy[row * f..(row + 1) * f];
+                                    let d1 = &dy[(row + 1) * f..(row + 2) * f];
+                                    let d2 = &dy[(row + 2) * f..(row + 3) * f];
+                                    let d3 = &dy[(row + 3) * f..(row + 4) * f];
+                                    for kk in k_lo..k_hi {
+                                        let c = [p0[kk], p1[kk], p2[kk], p3[kk]];
+                                        if c != [0.0; FAST_RANK] {
+                                            axpy4(
+                                                &mut chunk
+                                                    [(kk - k_lo) * f..(kk - k_lo + 1) * f],
+                                                c,
+                                                d0,
+                                                d1,
+                                                d2,
+                                                d3,
+                                            );
+                                        }
+                                    }
+                                    row += FAST_RANK;
+                                }
+                                while row < nrow {
+                                    let prow = &psamp[row * kdim..(row + 1) * kdim];
+                                    let drow = &dy[row * f..(row + 1) * f];
+                                    for kk in k_lo..k_hi {
+                                        let av = prow[kk];
+                                        if av == 0.0 {
+                                            continue;
+                                        }
+                                        let orow =
+                                            &mut chunk[(kk - k_lo) * f..(kk - k_lo + 1) * f];
+                                        for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                            *o += av * dv;
+                                        }
+                                    }
+                                    row += 1;
                                 }
                             }
                         }
@@ -751,26 +945,50 @@ pub fn td_grads(
         let mut k_lo = 0;
         for chunk in wslice.chunks_mut(chunk_rows * width) {
             let k_hi = k_lo + chunk.len() / width;
-            tasks.push(Box::new(move || {
-                for slot in slots_ref {
-                    let rows = slot.rows();
-                    let xin: &[f32] =
-                        if i > 0 { &slot.fc_out[i - 1] } else { &slot.conv_out[n_conv - 1] };
-                    let dxl = &slot.dfc[i];
-                    for r in 0..rows {
-                        let xrow = &xin[r * in_dim..(r + 1) * in_dim];
-                        let drow = &dxl[r * width..(r + 1) * width];
-                        for kk in k_lo..k_hi {
-                            let av = xrow[kk];
-                            if av == 0.0 {
-                                continue;
-                            }
-                            let orow = &mut chunk[(kk - k_lo) * width..(kk - k_lo + 1) * width];
-                            for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
-                                *o += av * dv;
+            tasks.push(Box::new(move || match mode {
+                KernelMode::Deterministic => {
+                    for slot in slots_ref {
+                        let rows = slot.rows();
+                        let xin: &[f32] =
+                            if i > 0 { &slot.fc_out[i - 1] } else { &slot.conv_out[n_conv - 1] };
+                        let dxl = &slot.dfc[i];
+                        for r in 0..rows {
+                            let xrow = &xin[r * in_dim..(r + 1) * in_dim];
+                            let drow = &dxl[r * width..(r + 1) * width];
+                            for kk in k_lo..k_hi {
+                                let av = xrow[kk];
+                                if av == 0.0 {
+                                    continue;
+                                }
+                                let orow =
+                                    &mut chunk[(kk - k_lo) * width..(kk - k_lo + 1) * width];
+                                for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                    *o += av * dv;
+                                }
                             }
                         }
                     }
+                }
+                KernelMode::Fast => {
+                    let xrows: Vec<&[f32]> = slots_ref
+                        .iter()
+                        .flat_map(|slot| {
+                            let xin: &[f32] = if i > 0 {
+                                &slot.fc_out[i - 1]
+                            } else {
+                                &slot.conv_out[n_conv - 1]
+                            };
+                            (0..slot.rows()).map(move |r| &xin[r * in_dim..(r + 1) * in_dim])
+                        })
+                        .collect();
+                    let drows: Vec<&[f32]> = slots_ref
+                        .iter()
+                        .flat_map(|slot| {
+                            let dxl: &[f32] = &slot.dfc[i];
+                            (0..slot.rows()).map(move |r| &dxl[r * width..(r + 1) * width])
+                        })
+                        .collect();
+                    fast_weight_chunk(chunk, width, k_lo, k_hi, &xrows, &drows);
                 }
             }));
             k_lo = k_hi;
@@ -796,25 +1014,50 @@ pub fn td_grads(
         let mut k_lo = 0;
         for chunk in wslice.chunks_mut(chunk_rows * a) {
             let k_hi = k_lo + chunk.len() / a;
-            tasks.push(Box::new(move || {
-                for slot in slots_ref {
-                    let rows = slot.rows();
-                    let xin: &[f32] =
-                        if n_fc > 0 { &slot.fc_out[n_fc - 1] } else { &slot.conv_out[n_conv - 1] };
-                    for r in 0..rows {
-                        let xrow = &xin[r * head_dim..(r + 1) * head_dim];
-                        let drow = &slot.dq[r * a..(r + 1) * a];
-                        for kk in k_lo..k_hi {
-                            let av = xrow[kk];
-                            if av == 0.0 {
-                                continue;
-                            }
-                            let orow = &mut chunk[(kk - k_lo) * a..(kk - k_lo + 1) * a];
-                            for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
-                                *o += av * dv;
+            tasks.push(Box::new(move || match mode {
+                KernelMode::Deterministic => {
+                    for slot in slots_ref {
+                        let rows = slot.rows();
+                        let xin: &[f32] = if n_fc > 0 {
+                            &slot.fc_out[n_fc - 1]
+                        } else {
+                            &slot.conv_out[n_conv - 1]
+                        };
+                        for r in 0..rows {
+                            let xrow = &xin[r * head_dim..(r + 1) * head_dim];
+                            let drow = &slot.dq[r * a..(r + 1) * a];
+                            for kk in k_lo..k_hi {
+                                let av = xrow[kk];
+                                if av == 0.0 {
+                                    continue;
+                                }
+                                let orow = &mut chunk[(kk - k_lo) * a..(kk - k_lo + 1) * a];
+                                for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                    *o += av * dv;
+                                }
                             }
                         }
                     }
+                }
+                KernelMode::Fast => {
+                    let xrows: Vec<&[f32]> = slots_ref
+                        .iter()
+                        .flat_map(|slot| {
+                            let xin: &[f32] = if n_fc > 0 {
+                                &slot.fc_out[n_fc - 1]
+                            } else {
+                                &slot.conv_out[n_conv - 1]
+                            };
+                            (0..slot.rows()).map(move |r| &xin[r * head_dim..(r + 1) * head_dim])
+                        })
+                        .collect();
+                    let drows: Vec<&[f32]> = slots_ref
+                        .iter()
+                        .flat_map(|slot| {
+                            (0..slot.rows()).map(move |r| &slot.dq[r * a..(r + 1) * a])
+                        })
+                        .collect();
+                    fast_weight_chunk(chunk, a, k_lo, k_hi, &xrows, &drows);
                 }
             }));
             k_lo = k_hi;
@@ -849,18 +1092,49 @@ fn rmsprop(theta: &mut [f32], grad: &[f32], g: &mut [f32], s: &mut [f32], lr: f3
     }
 }
 
+/// [`rmsprop`] with the body [`FAST_LANES`]-wide unrolled: the update is
+/// elementwise and every element evaluates the identical expression, so
+/// this is **bit-identical** to the serial loop (pinned in tests) — the
+/// unroll exists purely to hand the autovectorizer a branch-free block of
+/// independent lanes.
+fn rmsprop_fast(theta: &mut [f32], grad: &[f32], g: &mut [f32], s: &mut [f32], lr: f32) {
+    let n = theta.len();
+    let mut i = 0;
+    while i + FAST_LANES <= n {
+        for l in 0..FAST_LANES {
+            let j = i + l;
+            let gr = grad[j];
+            g[j] = RMSPROP_ALPHA * g[j] + (1.0 - RMSPROP_ALPHA) * gr;
+            s[j] = RMSPROP_ALPHA * s[j] + (1.0 - RMSPROP_ALPHA) * gr * gr;
+            theta[j] -= lr * gr / (s[j] - g[j] * g[j] + RMSPROP_EPS).sqrt();
+        }
+        i += FAST_LANES;
+    }
+    for j in i..n {
+        let gr = grad[j];
+        g[j] = RMSPROP_ALPHA * g[j] + (1.0 - RMSPROP_ALPHA) * gr;
+        s[j] = RMSPROP_ALPHA * s[j] + (1.0 - RMSPROP_ALPHA) * gr * gr;
+        theta[j] -= lr * gr / (s[j] - g[j] * g[j] + RMSPROP_EPS).sqrt();
+    }
+}
+
 /// [`rmsprop`] with the (elementwise, hence trivially order-invariant)
-/// update partitioned over the pool.
+/// update partitioned over the pool and dispatched by kernel tier.
 fn rmsprop_pooled(
     pool: &ComputePool,
+    mode: KernelMode,
     theta: &mut [f32],
     grad: &[f32],
     g: &mut [f32],
     s: &mut [f32],
     lr: f32,
 ) {
+    let step: fn(&mut [f32], &[f32], &mut [f32], &mut [f32], f32) = match mode {
+        KernelMode::Deterministic => rmsprop,
+        KernelMode::Fast => rmsprop_fast,
+    };
     if pool.threads() <= 1 {
-        return rmsprop(theta, grad, g, s, lr);
+        return step(theta, grad, g, s, lr);
     }
     let ranges = split_ranges(theta.len(), pool.threads());
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
@@ -871,7 +1145,7 @@ fn rmsprop_pooled(
         let (sc, st) = std::mem::take(&mut s_rest).split_at_mut(hi - lo);
         (t_rest, g_rest, s_rest) = (tt, gt, st);
         let grc = &grad[lo..hi];
-        tasks.push(Box::new(move || rmsprop(tc, grc, gc, sc, lr)));
+        tasks.push(Box::new(move || step(tc, grc, gc, sc, lr)));
     }
     pool.scope(tasks);
 }
@@ -891,6 +1165,8 @@ pub struct NativeEngine {
     entries: BTreeMap<String, LoadedEntry>,
     archs: BTreeMap<String, Arc<NetArch>>,
     pool: ComputePool,
+    mode: KernelMode,
+    scratch: TrainScratch,
 }
 
 impl Default for NativeEngine {
@@ -905,18 +1181,30 @@ impl NativeEngine {
         NativeEngine::with_threads(1)
     }
 
-    /// Engine backed by a persistent `learner_threads`-lane [`ComputePool`].
-    /// Outputs are bit-identical for every thread count.
+    /// Engine backed by a persistent `learner_threads`-lane [`ComputePool`]
+    /// with the deterministic kernel tier. Outputs are bit-identical for
+    /// every thread count.
     pub fn with_threads(learner_threads: usize) -> NativeEngine {
+        NativeEngine::with_options(learner_threads, KernelMode::Deterministic)
+    }
+
+    /// Engine with an explicit kernel tier (rust/DESIGN.md §12).
+    pub fn with_options(learner_threads: usize, mode: KernelMode) -> NativeEngine {
         NativeEngine {
             entries: BTreeMap::new(),
             archs: BTreeMap::new(),
             pool: ComputePool::new(learner_threads),
+            mode,
+            scratch: TrainScratch::default(),
         }
     }
 
     pub fn learner_threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.mode
     }
 
     fn arch_for(&mut self, spec: &NetSpec) -> Result<Arc<NetArch>> {
@@ -964,7 +1252,7 @@ impl ExecutionEngine for NativeEngine {
                 }
                 let params = args[0].as_f32("infer params")?;
                 let states = args[1].as_u8("infer states")?;
-                let q = infer_pooled(arch, params, states, batch, &self.pool)?;
+                let q = infer_pooled(arch, params, states, batch, &self.pool, self.mode)?;
                 Ok(vec![HostTensor::f32(q, vec![batch, arch.actions])])
             }
             EntryKind::Train { batch, double } => {
@@ -998,14 +1286,16 @@ impl ExecutionEngine for NativeEngine {
                 if lr.len() != 1 {
                     bail!("train {key:?}: lr must be a scalar");
                 }
-                let (grad, loss, td) = td_grads(
+                let (grad, loss, td) = td_grads_opts(
                     arch, theta, target, states, actions, rewards, next_states, dones,
-                    entry.gamma, weights, boot_gammas, double, &self.pool,
+                    entry.gamma, weights, boot_gammas, double, &self.pool, self.mode,
+                    &mut self.scratch,
                 )?;
                 let mut theta2 = theta.to_vec();
                 let mut g2 = g.to_vec();
                 let mut s2 = s.to_vec();
-                rmsprop_pooled(&self.pool, &mut theta2, &grad, &mut g2, &mut s2, lr[0]);
+                rmsprop_pooled(&self.pool, self.mode, &mut theta2, &grad, &mut g2, &mut s2, lr[0]);
+                self.scratch.recycle_grad(grad);
                 let p = arch.param_count();
                 Ok(vec![
                     HostTensor::f32(theta2, vec![p]),
@@ -1301,7 +1591,8 @@ mod tests {
         let serial = infer(&arch, &theta, &states, b).unwrap();
         for threads in [2usize, 4] {
             let pool = ComputePool::new(threads);
-            let pooled = infer_pooled(&arch, &theta, &states, b, &pool).unwrap();
+            let pooled =
+                infer_pooled(&arch, &theta, &states, b, &pool, KernelMode::Deterministic).unwrap();
             assert_eq!(serial, pooled, "{threads} threads");
         }
     }
@@ -1333,11 +1624,135 @@ mod tests {
         let (mut t1, mut g1, mut s1) = (theta0.clone(), g0.clone(), s0.clone());
         rmsprop(&mut t1, &grad, &mut g1, &mut s1, 0.01);
         let pool = ComputePool::new(3);
-        let (mut t2, mut g2, mut s2) = (theta0, g0, s0);
-        rmsprop_pooled(&pool, &mut t2, &grad, &mut g2, &mut s2, 0.01);
+        let (mut t2, mut g2, mut s2) = (theta0.clone(), g0.clone(), s0.clone());
+        rmsprop_pooled(&pool, KernelMode::Deterministic, &mut t2, &grad, &mut g2, &mut s2, 0.01);
         assert_eq!(t1, t2);
         assert_eq!(g1, g2);
         assert_eq!(s1, s2);
+        // The fast tier is elementwise-identical: bit-equal, pooled or not.
+        let (mut t3, mut g3, mut s3) = (theta0, g0, s0);
+        rmsprop_pooled(&pool, KernelMode::Fast, &mut t3, &grad, &mut g3, &mut s3, 0.01);
+        assert_eq!(t1, t3);
+        assert_eq!(g1, g3);
+        assert_eq!(s1, s3);
+    }
+
+    #[test]
+    fn rmsprop_fast_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(21);
+        for n in [1usize, 7, 8, 9, 64, 1000, 1003] {
+            let theta0: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let grad: Vec<f32> = (0..n).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            let g0: Vec<f32> = (0..n).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+            let s0: Vec<f32> = (0..n).map(|_| rng.range_f32(0.0, 0.3)).collect();
+            let (mut t1, mut g1, mut s1) = (theta0.clone(), g0.clone(), s0.clone());
+            rmsprop(&mut t1, &grad, &mut g1, &mut s1, 2.5e-4);
+            let (mut t2, mut g2, mut s2) = (theta0, g0, s0);
+            rmsprop_fast(&mut t2, &grad, &mut g2, &mut s2, 2.5e-4);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&t1), bits(&t2), "n={n}: theta");
+            assert_eq!(bits(&g1), bits(&g2), "n={n}: g");
+            assert_eq!(bits(&s1), bits(&s2), "n={n}: s");
+        }
+    }
+
+    #[test]
+    fn fast_mode_grads_are_bit_identical_across_pool_widths() {
+        // The tentpole's width-invariance claim extends to the fast tier:
+        // Phase B's rank-4 grouping follows global sample order, never
+        // shard boundaries, so any learner_threads value is the same
+        // machine.
+        let arch = micro_arch();
+        let mut rng = Rng::new(48);
+        let theta = init_params(&arch, 19);
+        let target = init_params(&arch, 20);
+        let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
+        let run = |threads: usize| {
+            let pool = ComputePool::new(threads);
+            let mut scratch = TrainScratch::default();
+            td_grads_opts(
+                &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+                None, false, &pool, KernelMode::Fast, &mut scratch,
+            )
+            .unwrap()
+        };
+        let baseline = run(1);
+        for threads in [2usize, 3, 4] {
+            let (grad, loss, td) = run(threads);
+            assert_eq!(loss.to_bits(), baseline.1.to_bits(), "{threads} threads: loss drifted");
+            let a: Vec<u32> = baseline.0.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = grad.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "{threads} threads: fast grads not bit-identical");
+            let ta: Vec<u32> = baseline.2.iter().map(|v| v.to_bits()).collect();
+            let tb: Vec<u32> = td.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ta, tb, "{threads} threads: fast TD errors not bit-identical");
+        }
+    }
+
+    #[test]
+    fn fast_mode_grads_stay_close_to_deterministic() {
+        let arch = micro_arch();
+        let mut rng = Rng::new(49);
+        let theta = init_params(&arch, 21);
+        let target = init_params(&arch, 22);
+        let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
+        let pool = ComputePool::new(2);
+        let det = td_grads(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+            None, false, &pool,
+        )
+        .unwrap();
+        let mut scratch = TrainScratch::default();
+        let fast = td_grads_opts(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+            None, false, &pool, KernelMode::Fast, &mut scratch,
+        )
+        .unwrap();
+        assert!((det.1 - fast.1).abs() <= 1e-5 * det.1.abs().max(1.0), "loss diverged");
+        let scale = det.0.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for (i, (d, f)) in det.0.iter().zip(fast.0.iter()).enumerate() {
+            assert!(
+                (d - f).abs() <= 1e-4 * scale + 1e-7,
+                "grad[{i}]: det {d} vs fast {f} (scale {scale})"
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bitwise_invisible() {
+        // Two consecutive steps through one persistent scratch must equal
+        // the fresh-scratch results bit-for-bit, in both kernel modes —
+        // the recycled patch/grad buffers carry capacity, never state.
+        let arch = micro_arch();
+        let mut rng = Rng::new(50);
+        let theta_a = init_params(&arch, 23);
+        let theta_b = init_params(&arch, 24);
+        let target = init_params(&arch, 25);
+        let batch_a = micro_batch(&arch, &mut rng);
+        let batch_b = micro_batch(&arch, &mut rng);
+        let pool = ComputePool::new(2);
+        for mode in KernelMode::ALL {
+            let mut shared = TrainScratch::default();
+            let run = |theta: &[f32],
+                           b: &(Vec<u8>, Vec<i32>, Vec<f32>, Vec<u8>, Vec<f32>),
+                           scratch: &mut TrainScratch| {
+                let (states, actions, rewards, next, dones) = b;
+                let (grad, loss, td) = td_grads_opts(
+                    &arch, theta, &target, states, actions, rewards, next, dones, 0.9, None,
+                    None, false, &pool, mode, scratch,
+                )
+                .unwrap();
+                let bits: Vec<u32> = grad.iter().map(|v| v.to_bits()).collect();
+                scratch.recycle_grad(grad); // engine-style buffer hand-back
+                (bits, loss.to_bits(), td.iter().map(|v| v.to_bits()).collect::<Vec<u32>>())
+            };
+            let first = run(&theta_a, &batch_a, &mut shared);
+            let second = run(&theta_b, &batch_b, &mut shared);
+            let fresh_first = run(&theta_a, &batch_a, &mut TrainScratch::default());
+            let fresh_second = run(&theta_b, &batch_b, &mut TrainScratch::default());
+            assert_eq!(first, fresh_first, "{mode:?}: first step drifted under reuse");
+            assert_eq!(second, fresh_second, "{mode:?}: second step drifted under reuse");
+        }
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! The `kernel_mode` knob's divergence contract (rust/DESIGN.md §12).
+//!
+//! `deterministic` stays bit-pinned by the golden/equivalence suites; this
+//! file pins the OTHER tier:
+//!
+//! * the fast kernels stay within a first-order reassociation bound of the
+//!   deterministic kernels on ≥ 200 random shapes (the tiled==naive
+//!   discipline from §8, relaxed from bitwise to bounded);
+//! * a fast-mode end-to-end smoke run completes, trains with finite
+//!   bounded losses, and is bit-identical run-to-run and across
+//!   `learner_threads` (lane reordering is fixed by the kernels, not by
+//!   thread count);
+//! * checkpoints record the kernel mode — resuming a deterministic
+//!   checkpoint under `fast` is refused (the trajectories diverge, so a
+//!   bit-exact resume is impossible).
+
+use std::path::PathBuf;
+
+use tempo_dqn::config::{ExecMode, ExperimentConfig};
+use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::runtime::default_artifact_dir;
+use tempo_dqn::runtime::kernels::{
+    matmul_a_bt_mode, matmul_acc_mode, matmul_at_b_acc_mode, KernelMode,
+};
+use tempo_dqn::util::rng::Rng;
+
+/// Base seed: `TEMPO_PROPTEST_SEED` (CI pins it) or a fixed default.
+fn base_seed() -> u64 {
+    std::env::var("TEMPO_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x0C0F_FEE5)
+}
+
+/// Random activations with exact zeros (the post-ReLU sparsity the
+/// kernels' skip paths key on).
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| if rng.chance(0.25) { 0.0 } else { rng.f32() * 2.0 - 1.0 })
+        .collect()
+}
+
+/// First-order reassociation bound for a length-`t` f32 reduction whose
+/// terms have absolute sum `s`. Any two summation orders agree to within
+/// O(t·ε·s); the factor 4 gives slack for the fused multiply ordering.
+fn reassoc_tol(t: usize, s: f32) -> f32 {
+    4.0 * t as f32 * f32::EPSILON * s + f32::MIN_POSITIVE
+}
+
+/// The acceptance property: on ≥ 200 random shapes, every element the
+/// fast kernels produce is within the reassociation bound of the
+/// deterministic (tiled) element. Shapes straddle the tile and lane
+/// boundaries (k spans TILE_K = 128, n spans TILE_J = 64, both spill past
+/// multiples of 8 and 4).
+#[test]
+fn prop_fast_kernels_bounded_divergence_on_200_shapes() {
+    const SHAPES: usize = 220;
+    for case in 0..SHAPES as u64 {
+        let mut rng = Rng::new(base_seed() ^ (0xFA57_0000 + case));
+        let m = 1 + rng.below_usize(16);
+        let k = 1 + rng.below_usize(260);
+        let n = 1 + rng.below_usize(96);
+        let a = randvec(&mut rng, m * k);
+        let b_kn = randvec(&mut rng, k * n);
+        let b_mn = randvec(&mut rng, m * n);
+        let b_nk = randvec(&mut rng, n * k);
+        let seed_mn = randvec(&mut rng, m * n);
+        let seed_kn = randvec(&mut rng, k * n);
+        let ctx = |op: &str| format!("case {case} {op} m={m} k={k} n={n}");
+
+        // out[m,n] (+)= a[m,k] @ b[k,n]
+        let mut det = seed_mn.clone();
+        let mut fast = seed_mn.clone();
+        matmul_acc_mode(KernelMode::Deterministic, &a, &b_kn, &mut det, m, k, n);
+        matmul_acc_mode(KernelMode::Fast, &a, &b_kn, &mut fast, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let s = seed_mn[i * n + j].abs()
+                    + (0..k).map(|kk| (a[i * k + kk] * b_kn[kk * n + j]).abs()).sum::<f32>();
+                let (d, f) = (det[i * n + j], fast[i * n + j]);
+                assert!((d - f).abs() <= reassoc_tol(k + 1, s), "{} acc [{i},{j}]: {d} vs {f}", ctx("acc"));
+            }
+        }
+
+        // out[k,n] (+)= aᵀ[k,m] @ b[m,n]
+        let mut det = seed_kn.clone();
+        let mut fast = seed_kn.clone();
+        matmul_at_b_acc_mode(KernelMode::Deterministic, &a, &b_mn, &mut det, m, k, n);
+        matmul_at_b_acc_mode(KernelMode::Fast, &a, &b_mn, &mut fast, m, k, n);
+        for kk in 0..k {
+            for j in 0..n {
+                let s = seed_kn[kk * n + j].abs()
+                    + (0..m).map(|i| (a[i * k + kk] * b_mn[i * n + j]).abs()).sum::<f32>();
+                let (d, f) = (det[kk * n + j], fast[kk * n + j]);
+                assert!((d - f).abs() <= reassoc_tol(m + 1, s), "{} [{kk},{j}]: {d} vs {f}", ctx("at_b"));
+            }
+        }
+
+        // out[m,n] = a[m,k] @ bᵀ[n,k] (overwrite)
+        let mut det = vec![0.0f32; m * n];
+        let mut fast = vec![0.0f32; m * n];
+        matmul_a_bt_mode(KernelMode::Deterministic, &a, &b_nk, &mut det, m, k, n);
+        matmul_a_bt_mode(KernelMode::Fast, &a, &b_nk, &mut fast, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let s = (0..k).map(|kk| (a[i * k + kk] * b_nk[j * k + kk]).abs()).sum::<f32>();
+                let (d, f) = (det[i * n + j], fast[i * n + j]);
+                assert!((d - f).abs() <= reassoc_tol(k, s), "{} [{i},{j}]: {d} vs {f}", ctx("a_bt"));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fast-mode end-to-end smoke trajectory
+// ---------------------------------------------------------------------------
+
+fn fast_cfg(learner_threads: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+    cfg.mode = ExecMode::Both;
+    cfg.threads = 2;
+    cfg.envs_per_thread = 2;
+    cfg.learner_threads = learner_threads;
+    cfg.prefetch_batches = 1;
+    cfg.kernel_mode = KernelMode::Fast;
+    cfg.total_steps = 192;
+    cfg.game = "seeker".into();
+    cfg.prepopulate = 300;
+    cfg.replay_capacity = 16_000;
+    cfg.target_update_period = 64;
+    cfg.train_period = 4;
+    cfg.seed = 33;
+    cfg
+}
+
+/// Returns (returns, loss values, trains, final theta bits). Loss values
+/// are order-deterministic in sync modes; steps are not compared.
+fn run_trajectory(cfg: ExperimentConfig) -> (Vec<(u64, f64)>, Vec<u32>, u64, Vec<u32>) {
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).expect("coordinator");
+    let res = coord.run().expect("run");
+    for (step, loss) in &res.losses {
+        assert!(loss.is_finite(), "non-finite loss {loss} at step {step}");
+        assert!(*loss < 1e3, "exploding loss {loss} at step {step}");
+    }
+    assert!(res.trains > 0, "smoke run never trained");
+    let losses = res.losses.iter().map(|(_, l)| l.to_bits()).collect();
+    let theta = coord
+        .qnet()
+        .theta_host()
+        .expect("theta")
+        .iter()
+        .map(|v| v.to_bits())
+        .collect();
+    (res.returns, losses, res.trains, theta)
+}
+
+#[test]
+fn fast_mode_smoke_is_run_to_run_deterministic() {
+    let first = run_trajectory(fast_cfg(1));
+    let second = run_trajectory(fast_cfg(1));
+    assert_eq!(first.0, second.0, "fast-mode returns not reproducible");
+    assert_eq!(first.1, second.1, "fast-mode loss values not reproducible");
+    assert_eq!(first.2, second.2, "fast-mode train counts not reproducible");
+    assert_eq!(first.3, second.3, "fast-mode final theta not reproducible");
+}
+
+#[test]
+fn fast_mode_smoke_is_invariant_across_learner_threads() {
+    // The fast tier reorders accumulation into lanes, but the lane grouping
+    // follows global sample order, never the shard layout — so like the
+    // deterministic tier it is bit-identical at every pool width.
+    let serial = run_trajectory(fast_cfg(1));
+    let pooled = run_trajectory(fast_cfg(3));
+    assert_eq!(serial.0, pooled.0, "returns diverged across pool widths");
+    assert_eq!(serial.1, pooled.1, "loss values diverged across pool widths");
+    assert_eq!(serial.2, pooled.2, "train counts diverged across pool widths");
+    assert_eq!(serial.3, pooled.3, "final theta diverged across pool widths");
+}
+
+#[test]
+fn fast_mode_diverges_from_deterministic_mode() {
+    // Sanity that the knob actually switches kernels: the two tiers must
+    // NOT be bit-identical end-to-end (if they were, the fast path would
+    // not be running).
+    let fast = run_trajectory(fast_cfg(1));
+    let mut det_cfg = fast_cfg(1);
+    det_cfg.kernel_mode = KernelMode::Deterministic;
+    let det = run_trajectory(det_cfg);
+    assert_ne!(fast.3, det.3, "fast and deterministic produced identical theta bits");
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint compatibility
+// ---------------------------------------------------------------------------
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tempo-kmode-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn resume_refuses_kernel_mode_mismatch() {
+    let dir = tmpdir("mismatch");
+    let mut cfg = fast_cfg(1);
+    cfg.kernel_mode = KernelMode::Deterministic;
+    cfg.total_steps = 64;
+    cfg.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.ckpt_period = 64;
+    let mut coord = Coordinator::new(cfg.clone(), &default_artifact_dir()).unwrap();
+    coord.run().unwrap();
+    drop(coord);
+
+    // Same config under `fast` must be refused...
+    let mut fast = cfg.clone();
+    fast.kernel_mode = KernelMode::Fast;
+    let mut coord = Coordinator::new(fast, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("kernel_mode"), "unexpected error: {err}");
+
+    // ...while the matching mode resumes fine.
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+    assert_eq!(coord.resume_from(&dir).unwrap(), 64);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -10,11 +10,20 @@ use tempo_dqn::config::ExecMode;
 use tempo_dqn::hwsim::{simulate, CostModel, SimRun};
 use tempo_dqn::metrics::{GanttTrace, Phase};
 use tempo_dqn::replay::ReplayMemory;
+use tempo_dqn::runtime::kernels::{col2im_sample, im2col_sample};
 use tempo_dqn::runtime::TrainBatch;
 use tempo_dqn::util::json::Json;
 use tempo_dqn::util::rng::Rng;
 
 const CASES: u64 = 60;
+
+/// Base seed: `TEMPO_PROPTEST_SEED` (CI pins it) or a fixed default.
+fn base_seed() -> u64 {
+    std::env::var("TEMPO_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x0C0F_FEE5)
+}
 
 // ---------------------------------------------------------------------------
 // Replay memory vs a naive flat-store reference model
@@ -133,6 +142,131 @@ fn prop_replay_ring_never_returns_overwritten_frames() {
             // The newest frame of any sampled state must be a live slot.
             let found = (oldest_live..n).any(|t| t % 251 == newest);
             assert!(found, "seed {seed}: stale frame {newest} sampled");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// im2col / col2im adjoint consistency (rust/DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Random VALID-padding conv geometry (im2col has no padding parameter —
+/// the nets only use VALID convolutions).
+fn conv_shape(rng: &mut Rng) -> (usize, usize, usize, usize, usize) {
+    let kernel = 1 + rng.below_usize(4);
+    let stride = 1 + rng.below_usize(3);
+    let h = kernel + rng.below_usize(8);
+    let w = kernel + rng.below_usize(8);
+    let c = 1 + rng.below_usize(4);
+    (h, w, c, kernel, stride)
+}
+
+/// col2im is the transpose of im2col: `⟨im2col(x), Y⟩ == ⟨x, col2im(Y)⟩`
+/// for every x, Y, and geometry. (The backward pass depends on exactly
+/// this; until now it was only exercised through finite differences.)
+#[test]
+fn prop_col2im_is_adjoint_of_im2col() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(base_seed() ^ (0xAD70 + case));
+        let (h, w, c, kernel, stride) = conv_shape(&mut rng);
+        let oh = (h - kernel) / stride + 1;
+        let ow = (w - kernel) / stride + 1;
+        let kdim = kernel * kernel * c;
+        let x: Vec<f32> = (0..h * w * c).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let y: Vec<f32> = (0..oh * ow * kdim).map(|_| rng.f32() * 2.0 - 1.0).collect();
+
+        let mut patches = vec![0.0f32; oh * ow * kdim];
+        im2col_sample(&x, h, w, c, kernel, stride, &mut patches);
+        let mut dx = vec![0.0f32; h * w * c];
+        col2im_sample(&y, h, w, c, kernel, stride, &mut dx);
+
+        // Both inner products sum the same set of x_i * y_j terms; compare
+        // in f64 with a tolerance for col2im's f32 scatter-add rounding.
+        let lhs: f64 = patches.iter().zip(&y).map(|(&p, &q)| p as f64 * q as f64).sum();
+        let rhs: f64 = x.iter().zip(&dx).map(|(&p, &q)| p as f64 * q as f64).sum();
+        let scale: f64 = patches
+            .iter()
+            .zip(&y)
+            .map(|(&p, &q)| (p as f64 * q as f64).abs())
+            .sum::<f64>()
+            .max(1e-12);
+        assert!(
+            (lhs - rhs).abs() / scale < 1e-5,
+            "case {case} (h={h} w={w} c={c} k={kernel} s={stride}): \
+             <im2col(x), y> = {lhs} vs <x, col2im(y)> = {rhs}"
+        );
+    }
+}
+
+/// col2im of all-ones patch gradients writes each pixel's patch-coverage
+/// count — checked against a naive window-membership count (exact in f32:
+/// small integer sums).
+#[test]
+fn prop_col2im_of_ones_counts_patch_coverage() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(base_seed() ^ (0xC072 + case));
+        let (h, w, c, kernel, stride) = conv_shape(&mut rng);
+        let oh = (h - kernel) / stride + 1;
+        let ow = (w - kernel) / stride + 1;
+        let ones = vec![1.0f32; oh * ow * kernel * kernel * c];
+        let mut dx = vec![0.0f32; h * w * c];
+        col2im_sample(&ones, h, w, c, kernel, stride, &mut dx);
+        for py in 0..h {
+            for px in 0..w {
+                let mut count = 0usize;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let (y0, x0) = (oy * stride, ox * stride);
+                        if py >= y0 && py < y0 + kernel && px >= x0 && px < x0 + kernel {
+                            count += 1;
+                        }
+                    }
+                }
+                for ch in 0..c {
+                    assert_eq!(
+                        dx[(py * w + px) * c + ch],
+                        count as f32,
+                        "case {case} (h={h} w={w} c={c} k={kernel} s={stride}) pixel ({py},{px},{ch})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// im2col gathers exactly the naive window elements — and fully overwrites
+/// its output (no stale data survives; the scratch-buffer recycling in
+/// `runtime/native.rs` relies on this).
+#[test]
+fn prop_im2col_matches_naive_gather() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(base_seed() ^ (0x17C0 + case));
+        let (h, w, c, kernel, stride) = conv_shape(&mut rng);
+        let oh = (h - kernel) / stride + 1;
+        let ow = (w - kernel) / stride + 1;
+        let kdim = kernel * kernel * c;
+        let x: Vec<f32> = (0..h * w * c).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        // NaN sentinel: any slot im2col fails to overwrite fails the test.
+        let mut patches = vec![f32::NAN; oh * ow * kdim];
+        im2col_sample(&x, h, w, c, kernel, stride, &mut patches);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..kernel {
+                    for kx in 0..kernel {
+                        for ch in 0..c {
+                            let got =
+                                patches[(oy * ow + ox) * kdim + (ky * kernel + kx) * c + ch];
+                            let want = x[((oy * stride + ky) * w + ox * stride + kx) * c + ch];
+                            assert_eq!(
+                                got.to_bits(),
+                                want.to_bits(),
+                                "case {case} (h={h} w={w} c={c} k={kernel} s={stride}) \
+                                 patch ({oy},{ox}) offset ({ky},{kx},{ch})"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 }
