@@ -1,7 +1,10 @@
 //! Device-runtime bench: inference at several batch sizes, the batch-32
-//! train step, and target sync — the accelerator side of the hardware
-//! model. The b1-vs-b8 gap measures the per-transaction overhead that
-//! Synchronized Execution amortizes (paper §4).
+//! train step, target sync, and the per-layer conv-kernel pairs
+//! (im2col+matmul vs the patch-free direct kernels, rust/DESIGN.md §13) —
+//! the accelerator side of the hardware model. The b1-vs-b8 gap measures
+//! the per-transaction overhead that Synchronized Execution amortizes
+//! (paper §4); the `conv*/..._im2col` vs `conv*/..._direct` gaps measure
+//! the patch-materialization traffic the direct kernels eliminate.
 //!
 //! Run: `cargo bench --bench runtime_exec`
 //! CI smoke: `cargo bench --bench runtime_exec -- --test`
@@ -10,7 +13,93 @@ use std::sync::Arc;
 
 use tempo_dqn::benchkit::Bench;
 use tempo_dqn::env::{make_env, STATE_BYTES};
-use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, TrainBatch};
+use tempo_dqn::runtime::kernels::{
+    col2im_sample, conv2d_forward, conv2d_input_grad, conv2d_weight_grad_chunk, im2col_sample,
+    matmul_a_bt_tiled, matmul_acc_tiled, matmul_at_b_acc_tiled,
+};
+use tempo_dqn::runtime::{
+    default_artifact_dir, Device, Manifest, NetArch, Policy, QNet, TrainBatch,
+};
+
+/// Deterministic activation-like data: ~25% exact zeros (the post-ReLU
+/// sparsity both kernel tiers skip), rest in (-2, 2).
+fn det_acts(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed | 1;
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            if s >> 62 == 0 {
+                0.0
+            } else {
+                ((s >> 40) as f32 / (1u64 << 24) as f32) * 4.0 - 2.0
+            }
+        })
+        .collect()
+}
+
+/// Per-conv-layer kernel pairs: the historical im2col pipeline vs the
+/// patch-free direct kernel, for forward, input-gradient, and
+/// weight-gradient. Deterministic tier only — that's the default path the
+/// BENCH trajectory tracks.
+fn bench_conv_layers(bench: &mut Bench, net: &str, arch: &NetArch) {
+    let hw = arch.conv_out_hw();
+    for (i, conv) in arch.convs.iter().enumerate() {
+        let (in_h, in_w, in_c) = if i == 0 {
+            (arch.frame[0], arch.frame[1], arch.frame[2])
+        } else {
+            (hw[i - 1].0, hw[i - 1].1, arch.convs[i - 1].filters)
+        };
+        let (oh, ow) = hw[i];
+        let (k, s, f) = (conv.kernel, conv.stride, conv.filters);
+        let (nrow, kdim) = (oh * ow, k * k * in_c);
+        let x = det_acts(in_h * in_w * in_c, 0x5EED ^ i as u64);
+        let wmat = det_acts(kdim * f, 0x3A1 ^ i as u64);
+        let dy = det_acts(nrow * f, 0x77F ^ i as u64);
+        let mut patches = vec![0.0f32; nrow * kdim];
+        let mut y = vec![0.0f32; nrow * f];
+        let mut dx = vec![0.0f32; in_h * in_w * in_c];
+        let mut dw = vec![0.0f32; kdim * f];
+
+        bench.run(&format!("{net}/conv{i}/fwd_im2col"), || {
+            im2col_sample(&x, in_h, in_w, in_c, k, s, &mut patches);
+            y.fill(0.0);
+            matmul_acc_tiled(&patches, &wmat, &mut y, nrow, kdim, f);
+            y[0]
+        });
+        bench.run(&format!("{net}/conv{i}/fwd_direct"), || {
+            y.fill(0.0);
+            conv2d_forward(&x, &wmat, &mut y, in_h, in_w, in_c, k, s, f);
+            y[0]
+        });
+
+        bench.run(&format!("{net}/conv{i}/dgrad_im2col"), || {
+            matmul_a_bt_tiled(&dy, &wmat, &mut patches, nrow, f, kdim);
+            dx.fill(0.0);
+            col2im_sample(&patches, in_h, in_w, in_c, k, s, &mut dx);
+            dx[0]
+        });
+        bench.run(&format!("{net}/conv{i}/dgrad_direct"), || {
+            dx.fill(0.0);
+            conv2d_input_grad(&dy, &wmat, &mut dx, in_h, in_w, in_c, k, s, f);
+            dx[0]
+        });
+
+        // Weight grad: the im2col arm charges the patch materialization it
+        // needs; in the engine those patches had to be retained per sample
+        // from the forward pass (the memory cost the direct kernel removes).
+        bench.run(&format!("{net}/conv{i}/wgrad_im2col"), || {
+            im2col_sample(&x, in_h, in_w, in_c, k, s, &mut patches);
+            dw.fill(0.0);
+            matmul_at_b_acc_tiled(&patches, &dy, &mut dw, nrow, kdim, f);
+            dw[0]
+        });
+        bench.run(&format!("{net}/conv{i}/wgrad_direct"), || {
+            dw.fill(0.0);
+            conv2d_weight_grad_chunk(&x, &dy, &mut dw, 0, kdim, in_h, in_w, in_c, k, s, f);
+            dw[0]
+        });
+    }
+}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
@@ -29,6 +118,8 @@ fn main() {
     env.write_state(&mut state);
 
     for &net in nets {
+        let arch = NetArch::from_spec(manifest.config(net).expect("spec")).expect("arch");
+        bench_conv_layers(&mut bench, net, &arch);
         let qnet = QNet::load(device.clone(), &manifest, net, false, 32).unwrap();
         for b in [1usize, 8, 32] {
             let states: Vec<u8> = state.iter().cycle().take(b * STATE_BYTES).copied().collect();

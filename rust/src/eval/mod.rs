@@ -25,6 +25,10 @@ pub struct Evaluator {
     eps: f64,
     episodes: usize,
     max_steps_per_episode: usize,
+    /// Persistent state buffer for [`Self::run`]'s per-step inference —
+    /// scratch only (rewritten every step, never snapshotted), so the
+    /// hot eval loop allocates nothing.
+    state_buf: Vec<u8>,
 }
 
 impl Evaluator {
@@ -37,6 +41,7 @@ impl Evaluator {
             eps,
             episodes,
             max_steps_per_episode: 27_000,
+            state_buf: vec![0u8; STATE_BYTES],
         })
     }
 
@@ -49,13 +54,13 @@ impl Evaluator {
     /// network) like DQN's periodic evaluations.
     pub fn run(&mut self, qnet: &QNet, step: u64) -> Result<EvalPoint> {
         let mut returns = Vec::with_capacity(self.episodes);
-        let mut state = vec![0u8; STATE_BYTES];
+        let state = &mut self.state_buf;
         for _ in 0..self.episodes {
             self.env.reset();
             let mut steps = 0;
             loop {
-                self.env.write_state(&mut state);
-                let q = qnet.infer(Policy::Theta, &state, 1)?;
+                self.env.write_state(state);
+                let q = qnet.infer(Policy::Theta, state, 1)?;
                 let a = self.policy.select(&q, self.eps);
                 let r = self.env.step(a.min(self.env.num_actions() - 1));
                 steps += 1;

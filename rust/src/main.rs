@@ -46,6 +46,9 @@ SUBCOMMANDS:
   speedtest  --threads 1,2,4,8 --steps N [--real] [--gantt] [--game NAME]
              [--envs-per-thread B] [--learner-threads N]
              [--prefetch-batches N] [--replay-strategy S] [--kernel-mode M]
+             [--breakdown] [--breakdown-steps N] [--net tiny|small|nature]
+             (--breakdown prints a per-phase train-step timing table:
+             conv forward / conv backward / dense / rmsprop / assembly)
   suite      --steps N --threads N [--games a,b,c] [--episodes N]
              [--eval-seed N]
   anchors    [--games a,b,c] [--episodes N] [--eval-seed N]
@@ -287,6 +290,56 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
             }
         }
         print!("{}", rgrid.table3());
+    }
+
+    if args.flag("breakdown") {
+        // Per-phase timing of the native train step (rust/DESIGN.md §13):
+        // drive the real train entry through QNet against a synthetic
+        // replay ring, with the engine's TrainTimers attached so the
+        // kernel-level split (conv fwd / conv bwd / dense / rmsprop) and
+        // the host-side batch assembly are visible without a profiler.
+        let net = args.get_or("net", "tiny").to_string();
+        let bd_steps = args.usize_or("breakdown-steps", 64)?;
+        let mode_name = args.get_or("kernel-mode", "deterministic").to_string();
+        println!(
+            "== train-step phase breakdown ({net}, {bd_steps} steps, \
+             kernel-mode {mode_name}, learner-threads {learner_threads}) =="
+        );
+        let timers = Arc::new(tempo_dqn::metrics::TrainTimers::new());
+        let mut engine = tempo_dqn::runtime::NativeEngine::with_options(learner_threads, kernel_mode);
+        engine.set_train_timers(timers.clone());
+        let device = Arc::new(tempo_dqn::runtime::Device::with_engine(Box::new(engine)));
+        let manifest = tempo_dqn::runtime::Manifest::load_or_builtin(&default_artifact_dir())?;
+        let qnet = tempo_dqn::runtime::QNet::load(device, &manifest, &net, false, 32)?;
+
+        // Deterministic pseudo-random replay contents (LCG high bytes) —
+        // phase shares depend only on geometry, not on pixel statistics.
+        let [h, w, stack] = qnet.spec().frame;
+        let actions = qnet.spec().actions;
+        let mut replay = tempo_dqn::replay::ReplayMemory::new(2_048, 1, h * w, stack, 7)?;
+        let mut frame = vec![0u8; h * w];
+        let mut rng: u64 = 0x9E37_79B9_7F4A_7C15;
+        for t in 0..1_100usize {
+            for px in frame.iter_mut() {
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                *px = (rng >> 56) as u8;
+            }
+            let done = t % 200 == 199;
+            replay.push(0, &frame, (t % actions) as u8, (t % 3) as f32, done, t == 0);
+        }
+
+        let mut batch = tempo_dqn::runtime::TrainBatch::default();
+        for _ in 0..bd_steps {
+            timers.time(tempo_dqn::metrics::TrainPhase::Assembly, || {
+                replay.sample(32, &mut batch)
+            })?;
+            qnet.train_step(&batch, 2.5e-4)?;
+        }
+        print!("{}", timers.report());
+        println!(
+            "(sharded phases accumulate per-worker CPU time; shares within \
+             the table stay comparable)"
+        );
     }
 
     if args.flag("gantt") {

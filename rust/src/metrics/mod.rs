@@ -5,4 +5,4 @@ pub mod gantt;
 pub mod timing;
 
 pub use gantt::{GanttTrace, Phase, Span};
-pub use timing::{PhaseTimers, Stopwatch};
+pub use timing::{PhaseTimers, Stopwatch, TrainPhase, TrainTimers};

@@ -73,6 +73,121 @@ impl PhaseTimers {
     }
 }
 
+/// Kernel-level phases of one native-engine train step — the
+/// `speedtest --breakdown` axis (rust/DESIGN.md §13). Distinct from the
+/// pipeline-level [`Phase`]: these subdivide what [`Phase::Train`] lumps
+/// together, so kernel wins (e.g. patch-free convolution) are visible
+/// without a profiler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainPhase {
+    /// Conv-stack forward passes (online, target, and double-DQN nets).
+    ConvForward,
+    /// Conv input-gradient + conv weight-gradient reductions.
+    ConvBackward,
+    /// Dense/head forward, backward, and weight-gradient reductions.
+    Dense,
+    /// Centered-RMSProp parameter update.
+    Rmsprop,
+    /// Replay minibatch assembly (recorded by the caller that samples).
+    Assembly,
+}
+
+impl TrainPhase {
+    pub const COUNT: usize = 5;
+    pub const ALL: [TrainPhase; TrainPhase::COUNT] = [
+        TrainPhase::ConvForward,
+        TrainPhase::ConvBackward,
+        TrainPhase::Dense,
+        TrainPhase::Rmsprop,
+        TrainPhase::Assembly,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrainPhase::ConvForward => "conv_forward",
+            TrainPhase::ConvBackward => "conv_backward",
+            TrainPhase::Dense => "dense",
+            TrainPhase::Rmsprop => "rmsprop",
+            TrainPhase::Assembly => "assembly",
+        }
+    }
+}
+
+/// [`PhaseTimers`] over the [`TrainPhase`] axis. Phases that run sharded
+/// over the compute pool accumulate every worker's duration, so totals
+/// are aggregate CPU time (they can exceed wall-clock at
+/// `learner_threads > 1`); shares within one report stay comparable.
+#[derive(Debug, Default)]
+pub struct TrainTimers {
+    ns: [AtomicU64; TrainPhase::COUNT],
+    calls: [AtomicU64; TrainPhase::COUNT],
+}
+
+impl TrainTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, phase: TrainPhase, ns: u64) {
+        self.ns[phase as usize].fetch_add(ns, Ordering::Relaxed);
+        self.calls[phase as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Time `f`, attributing its duration to `phase`.
+    pub fn time<T>(&self, phase: TrainPhase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(phase, t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    pub fn total_ns(&self, phase: TrainPhase) -> u64 {
+        self.ns[phase as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn calls(&self, phase: TrainPhase) -> u64 {
+        self.calls[phase as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self, phase: TrainPhase) -> f64 {
+        let calls = self.calls(phase);
+        if calls == 0 {
+            return 0.0;
+        }
+        self.total_ns(phase) as f64 / calls as f64 / 1_000.0
+    }
+
+    pub fn reset(&self) {
+        for i in 0..TrainPhase::COUNT {
+            self.ns[i].store(0, Ordering::Relaxed);
+            self.calls[i].store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// One line per active phase, with its share of the accumulated total.
+    pub fn report(&self) -> String {
+        let grand: u64 = TrainPhase::ALL.iter().map(|&p| self.total_ns(p)).sum();
+        let mut out = String::new();
+        for phase in TrainPhase::ALL {
+            let calls = self.calls(phase);
+            if calls == 0 {
+                continue;
+            }
+            let ns = self.total_ns(phase);
+            let share = if grand == 0 { 0.0 } else { 100.0 * ns as f64 / grand as f64 };
+            out.push_str(&format!(
+                "{:<14} calls {:>9}  total {:>9.3}s  mean {:>9.1}us  {:>5.1}%\n",
+                phase.name(),
+                calls,
+                ns as f64 / 1e9,
+                self.mean_us(phase),
+                share,
+            ));
+        }
+        out
+    }
+}
+
 /// Simple scoped stopwatch.
 pub struct Stopwatch(Instant);
 
@@ -124,5 +239,28 @@ mod tests {
         t.record(Phase::Train, 10);
         t.reset();
         assert_eq!(t.calls(Phase::Train), 0);
+    }
+
+    #[test]
+    fn train_timers_accumulate_and_report_shares() {
+        let t = TrainTimers::new();
+        t.record(TrainPhase::ConvForward, 3000);
+        t.record(TrainPhase::ConvForward, 1000);
+        t.record(TrainPhase::Rmsprop, 4000);
+        assert_eq!(t.total_ns(TrainPhase::ConvForward), 4000);
+        assert_eq!(t.calls(TrainPhase::ConvForward), 2);
+        assert!((t.mean_us(TrainPhase::ConvForward) - 2.0).abs() < 1e-9);
+        assert_eq!(t.calls(TrainPhase::Dense), 0);
+        let rep = t.report();
+        assert!(rep.contains("conv_forward"));
+        assert!(rep.contains("rmsprop"));
+        assert!(rep.contains("50.0%"));
+        assert!(!rep.contains("dense"));
+        let x = t.time(TrainPhase::Assembly, || 7);
+        assert_eq!(x, 7);
+        assert_eq!(t.calls(TrainPhase::Assembly), 1);
+        t.reset();
+        assert_eq!(t.calls(TrainPhase::ConvForward), 0);
+        assert_eq!(t.total_ns(TrainPhase::Rmsprop), 0);
     }
 }

@@ -471,15 +471,27 @@ impl ReplayMemory {
     }
 
     /// Reconstruct the state ending at the *most recent* slot of `stream`
-    /// (testing / debugging).
-    pub fn latest_state(&self, stream: usize) -> Option<Vec<u8>> {
+    /// into a caller-owned buffer of `frame_size * stack` bytes — the
+    /// allocation-free variant for callers polling a stream every round.
+    /// Returns `false` (leaving `out` untouched) when the stream is empty.
+    pub fn latest_state_into(&self, stream: usize, out: &mut [u8]) -> bool {
         let st = &self.streams[stream];
         if st.len < 1 {
-            return None;
+            return false;
         }
+        self.state_into(stream, st.len - 1, out);
+        true
+    }
+
+    /// Reconstruct the state ending at the *most recent* slot of `stream`
+    /// (testing / debugging; allocates — see [`Self::latest_state_into`]).
+    pub fn latest_state(&self, stream: usize) -> Option<Vec<u8>> {
         let mut out = vec![0u8; self.frame_size * self.stack];
-        self.state_into(stream, st.len - 1, &mut out);
-        Some(out)
+        if self.latest_state_into(stream, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
     }
 
     pub fn pushes(&self) -> u64 {
@@ -723,6 +735,24 @@ mod tests {
         }
         let s = r.latest_state(0).unwrap();
         assert_eq!([s[0], s[1], s[2], s[3]], [3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn latest_state_into_matches_allocating_variant() {
+        let mut r = mk(64, 2);
+        let mut buf = vec![0xAAu8; FS * STACK];
+        // Empty stream: refused, buffer untouched.
+        assert!(!r.latest_state_into(0, &mut buf));
+        assert!(buf.iter().all(|&b| b == 0xAA));
+        assert!(r.latest_state(0).is_none());
+        for (i, v) in [1u8, 2, 3, 4, 5].iter().enumerate() {
+            r.push(0, &frame(*v), 0, 0.0, false, i == 0);
+            r.push(1, &frame(*v + 100), 0, 0.0, false, i == 0);
+        }
+        for stream in 0..2 {
+            assert!(r.latest_state_into(stream, &mut buf));
+            assert_eq!(buf, r.latest_state(stream).unwrap(), "stream {stream}");
+        }
     }
 
     #[test]

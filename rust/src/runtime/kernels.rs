@@ -494,6 +494,430 @@ pub fn col2im_sample(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Patch-free (implicit-GEMM) convolution kernels (rust/DESIGN.md §13)
+// ---------------------------------------------------------------------------
+//
+// The kernels below walk the im2col patch geometry *in place* instead of
+// materializing the `[OH*OW, k*k*C]` patch matrix. The virtual patch
+// column index is `kk = (ky*k + kx)*C + c` — for a fixed `ky` the columns
+// `ky*k*C .. (ky+1)*k*C` are one contiguous run of the input image, which
+// is exactly the run `im2col_sample` copies. Each kernel reproduces the
+// per-output-element accumulation order of its im2col+matmul counterpart
+// *term for term* (including the `av == 0.0` sparsity skip and, for the
+// fast tier, the rank-4 / 8-lane groupings), so the deterministic tier is
+// **bitwise identical** to `im2col_sample` + the tiled matmuls, and the
+// fast tier is bitwise identical to `im2col_sample` + the fast matmuls —
+// only the patch buffer and its memory traffic disappear.
+//
+// Contract: `debug_assert!`s are hoisted to function entry; the inner
+// loops carry none (CI lints this — a failed shape check must fire before
+// the first multiply, and asserts inside the hot loops defeat the
+// autovectorizer).
+
+/// Patch-free conv forward for one sample: `y[OH*OW, F] += x ⊛ w`.
+/// `x` is `[H, W, C]`, `wmat` is the `[k,k,C,F]` weight tensor viewed as
+/// `[k*k*C, F]`, `y` is caller-zeroed (or carries an accumulation seed).
+/// Per output element this accumulates over ascending `kk` with the
+/// post-ReLU sparsity skip — bitwise identical to
+/// [`im2col_sample`] + [`matmul_acc_tiled`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward(
+    x: &[f32],
+    wmat: &[f32],
+    y: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    filters: usize,
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kc = kernel * c;
+    debug_assert_eq!(x.len(), h * w * c);
+    debug_assert_eq!(wmat.len(), kernel * kc * filters);
+    debug_assert_eq!(y.len(), oh * ow * filters);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            let orow = &mut y[row * filters..(row + 1) * filters];
+            for ky in 0..kernel {
+                let src = ((oy * stride + ky) * w + ox * stride) * c;
+                let seg = &x[src..src + kc];
+                let wbase = ky * kc;
+                for (t, &av) in seg.iter().enumerate() {
+                    if av == 0.0 {
+                        continue; // post-ReLU activations are sparse
+                    }
+                    let wrow = &wmat[(wbase + t) * filters..(wbase + t + 1) * filters];
+                    for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                        *o += av * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fast-tier [`conv2d_forward`]: consumes the virtual patch row in
+/// [`FAST_RANK`]-wide blocks (skipped only when all four coefficients are
+/// exactly zero) with a serial scalar tail — the same association as
+/// [`matmul_acc_fast`] over the materialized patches, so the two are
+/// bitwise identical.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward_fast(
+    x: &[f32],
+    wmat: &[f32],
+    y: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    filters: usize,
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kc = kernel * c;
+    let kdim = kernel * kc;
+    debug_assert_eq!(x.len(), h * w * c);
+    debug_assert_eq!(wmat.len(), kdim * filters);
+    debug_assert_eq!(y.len(), oh * ow * filters);
+    // Per-pixel base offsets of each kernel row's contiguous input run;
+    // the virtual patch value at column kk is x[srcs[kk / kc] + kk % kc].
+    let mut srcs = vec![0usize; kernel];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for (ky, s) in srcs.iter_mut().enumerate() {
+                *s = ((oy * stride + ky) * w + ox * stride) * c;
+            }
+            let row = oy * ow + ox;
+            let orow = &mut y[row * filters..(row + 1) * filters];
+            let pv = |kk: usize| x[srcs[kk / kc] + kk % kc];
+            let mut kk = 0;
+            while kk + FAST_RANK <= kdim {
+                let cf = [pv(kk), pv(kk + 1), pv(kk + 2), pv(kk + 3)];
+                if cf != [0.0; FAST_RANK] {
+                    axpy4(
+                        orow,
+                        cf,
+                        &wmat[kk * filters..],
+                        &wmat[(kk + 1) * filters..],
+                        &wmat[(kk + 2) * filters..],
+                        &wmat[(kk + 3) * filters..],
+                    );
+                }
+                kk += FAST_RANK;
+            }
+            for kr in kk..kdim {
+                let av = pv(kr);
+                if av == 0.0 {
+                    continue;
+                }
+                let wrow = &wmat[kr * filters..(kr + 1) * filters];
+                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                    *o += av * wv;
+                }
+            }
+        }
+    }
+}
+
+/// col2im-free conv input gradient for one sample:
+/// `dx[H, W, C] += dy ⊛ wᵀ`. `dy` is `[OH*OW, F]`, `dx` is caller-zeroed.
+/// Each scattered term is a self-contained serial dot over `f`, added in
+/// `(patch row, ky, t)` order — bitwise identical to
+/// [`matmul_a_bt_tiled`] + [`col2im_sample`] (the dots are value-equal
+/// and the scatter-add order is exactly col2im's).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_input_grad(
+    dy: &[f32],
+    wmat: &[f32],
+    dx: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    filters: usize,
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kc = kernel * c;
+    debug_assert_eq!(dy.len(), oh * ow * filters);
+    debug_assert_eq!(wmat.len(), kernel * kc * filters);
+    debug_assert_eq!(dx.len(), h * w * c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            let drow = &dy[row * filters..(row + 1) * filters];
+            for ky in 0..kernel {
+                let dst = ((oy * stride + ky) * w + ox * stride) * c;
+                let seg = &mut dx[dst..dst + kc];
+                let wbase = ky * kc;
+                for (t, d) in seg.iter_mut().enumerate() {
+                    let wrow = &wmat[(wbase + t) * filters..(wbase + t + 1) * filters];
+                    let mut acc = 0.0f32;
+                    for (dv, wv) in drow.iter().zip(wrow.iter()) {
+                        acc += dv * wv;
+                    }
+                    *d += acc;
+                }
+            }
+        }
+    }
+}
+
+/// Fast-tier [`conv2d_input_grad`]: every dot runs through the [`dot8`]
+/// lane-split reduction (the association [`matmul_a_bt_fast`] uses), the
+/// scatter-add order is unchanged — bitwise identical to
+/// [`matmul_a_bt_fast`] + [`col2im_sample`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_input_grad_fast(
+    dy: &[f32],
+    wmat: &[f32],
+    dx: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    filters: usize,
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kc = kernel * c;
+    debug_assert_eq!(dy.len(), oh * ow * filters);
+    debug_assert_eq!(wmat.len(), kernel * kc * filters);
+    debug_assert_eq!(dx.len(), h * w * c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            let drow = &dy[row * filters..(row + 1) * filters];
+            for ky in 0..kernel {
+                let dst = ((oy * stride + ky) * w + ox * stride) * c;
+                let seg = &mut dx[dst..dst + kc];
+                let wbase = ky * kc;
+                for (t, d) in seg.iter_mut().enumerate() {
+                    *d += dot8(drow, &wmat[(wbase + t) * filters..(wbase + t + 1) * filters]);
+                }
+            }
+        }
+    }
+}
+
+/// One sample's contribution to conv weight-gradient rows
+/// `[k_lo, k_hi)` of the `[k*k*C, F]` gradient (`chunk`), read directly
+/// from the input image `x` (`[H, W, C]`) instead of retained patches.
+/// Walks patch rows in ascending order and, within each row, ascending
+/// `kk` with the sparsity skip — bitwise identical to the retained-patch
+/// Phase B reduction (and, over the full `[0, k*k*C)` range, to
+/// [`matmul_at_b_acc_tiled`] on the materialized patch matrix).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_weight_grad_chunk(
+    x: &[f32],
+    dy: &[f32],
+    chunk: &mut [f32],
+    k_lo: usize,
+    k_hi: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    filters: usize,
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kc = kernel * c;
+    debug_assert!(k_lo <= k_hi && k_hi <= kernel * kc);
+    debug_assert_eq!(x.len(), h * w * c);
+    debug_assert_eq!(dy.len(), oh * ow * filters);
+    debug_assert_eq!(chunk.len(), (k_hi - k_lo) * filters);
+    let ky_lo = k_lo / kc;
+    let ky_hi = k_hi.div_ceil(kc);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            let drow = &dy[row * filters..(row + 1) * filters];
+            for ky in ky_lo..ky_hi {
+                let seg_lo = (ky * kc).max(k_lo);
+                let seg_hi = ((ky + 1) * kc).min(k_hi);
+                let src = ((oy * stride + ky) * w + ox * stride) * c + (seg_lo - ky * kc);
+                let seg = &x[src..src + (seg_hi - seg_lo)];
+                for (idx, &av) in seg.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let kk = seg_lo + idx;
+                    let orow = &mut chunk[(kk - k_lo) * filters..(kk - k_lo + 1) * filters];
+                    for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                        *o += av * dv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fast-tier [`conv2d_weight_grad_chunk`]: patch rows are consumed in
+/// [`FAST_RANK`]-wide groups *within the sample* (independent of any
+/// shard layout), each group a fused [`axpy4`] pass, with a serial tail —
+/// the same association as the retained-patch fast Phase B arm, so the
+/// two are bitwise identical.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_weight_grad_chunk_fast(
+    x: &[f32],
+    dy: &[f32],
+    chunk: &mut [f32],
+    k_lo: usize,
+    k_hi: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    filters: usize,
+) {
+    let oh = (h - kernel) / stride + 1;
+    let ow = (w - kernel) / stride + 1;
+    let kc = kernel * c;
+    debug_assert!(k_lo <= k_hi && k_hi <= kernel * kc);
+    debug_assert_eq!(x.len(), h * w * c);
+    debug_assert_eq!(dy.len(), oh * ow * filters);
+    debug_assert_eq!(chunk.len(), (k_hi - k_lo) * filters);
+    let ky_lo = k_lo / kc;
+    let ky_hi = k_hi.div_ceil(kc);
+    let nrow = oh * ow;
+    // Base offset of patch row `row`'s kernel-row `ky` run in `x`.
+    let base = |row: usize, ky: usize| {
+        let (oy, ox) = (row / ow, row % ow);
+        ((oy * stride + ky) * w + ox * stride) * c
+    };
+    let mut row = 0;
+    while row + FAST_RANK <= nrow {
+        let d0 = &dy[row * filters..(row + 1) * filters];
+        let d1 = &dy[(row + 1) * filters..(row + 2) * filters];
+        let d2 = &dy[(row + 2) * filters..(row + 3) * filters];
+        let d3 = &dy[(row + 3) * filters..(row + 4) * filters];
+        for ky in ky_lo..ky_hi {
+            let seg_lo = (ky * kc).max(k_lo);
+            let seg_hi = ((ky + 1) * kc).min(k_hi);
+            let off = seg_lo - ky * kc;
+            let (b0, b1) = (base(row, ky) + off, base(row + 1, ky) + off);
+            let (b2, b3) = (base(row + 2, ky) + off, base(row + 3, ky) + off);
+            for idx in 0..seg_hi - seg_lo {
+                let cf = [x[b0 + idx], x[b1 + idx], x[b2 + idx], x[b3 + idx]];
+                if cf != [0.0; FAST_RANK] {
+                    let kk = seg_lo + idx;
+                    axpy4(
+                        &mut chunk[(kk - k_lo) * filters..(kk - k_lo + 1) * filters],
+                        cf,
+                        d0,
+                        d1,
+                        d2,
+                        d3,
+                    );
+                }
+            }
+        }
+        row += FAST_RANK;
+    }
+    while row < nrow {
+        let drow = &dy[row * filters..(row + 1) * filters];
+        for ky in ky_lo..ky_hi {
+            let seg_lo = (ky * kc).max(k_lo);
+            let seg_hi = ((ky + 1) * kc).min(k_hi);
+            let src = base(row, ky) + (seg_lo - ky * kc);
+            let seg = &x[src..src + (seg_hi - seg_lo)];
+            for (idx, &av) in seg.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let kk = seg_lo + idx;
+                let orow = &mut chunk[(kk - k_lo) * filters..(kk - k_lo + 1) * filters];
+                for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                    *o += av * dv;
+                }
+            }
+        }
+        row += 1;
+    }
+}
+
+/// [`conv2d_forward`] dispatched by kernel tier.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn conv2d_forward_mode(
+    mode: KernelMode,
+    x: &[f32],
+    wmat: &[f32],
+    y: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    filters: usize,
+) {
+    match mode {
+        KernelMode::Deterministic => conv2d_forward(x, wmat, y, h, w, c, kernel, stride, filters),
+        KernelMode::Fast => conv2d_forward_fast(x, wmat, y, h, w, c, kernel, stride, filters),
+    }
+}
+
+/// [`conv2d_input_grad`] dispatched by kernel tier.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn conv2d_input_grad_mode(
+    mode: KernelMode,
+    dy: &[f32],
+    wmat: &[f32],
+    dx: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    filters: usize,
+) {
+    match mode {
+        KernelMode::Deterministic => {
+            conv2d_input_grad(dy, wmat, dx, h, w, c, kernel, stride, filters)
+        }
+        KernelMode::Fast => conv2d_input_grad_fast(dy, wmat, dx, h, w, c, kernel, stride, filters),
+    }
+}
+
+/// [`conv2d_weight_grad_chunk`] dispatched by kernel tier.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn conv2d_weight_grad_chunk_mode(
+    mode: KernelMode,
+    x: &[f32],
+    dy: &[f32],
+    chunk: &mut [f32],
+    k_lo: usize,
+    k_hi: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: usize,
+    stride: usize,
+    filters: usize,
+) {
+    match mode {
+        KernelMode::Deterministic => {
+            conv2d_weight_grad_chunk(x, dy, chunk, k_lo, k_hi, h, w, c, kernel, stride, filters)
+        }
+        KernelMode::Fast => {
+            conv2d_weight_grad_chunk_fast(x, dy, chunk, k_lo, k_hi, h, w, c, kernel, stride, filters)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -747,5 +1171,134 @@ mod tests {
         let mut dx = vec![0.0f32; 16];
         col2im_sample(&dp, 4, 4, 1, 2, 2, &mut dx);
         assert!(dx.iter().all(|&v| v == 1.0));
+    }
+
+    /// Geometries straddling the FAST_RANK / FAST_LANES boundaries in
+    /// patch-row count, kdim, and filter count (incl. a single-patch-row
+    /// case that exercises only the serial tails).
+    const CONV_GEOMS: [(usize, usize, usize, usize, usize, usize); 5] = [
+        // (h, w, c, kernel, stride, filters)
+        (8, 8, 1, 3, 1, 5),   // nrow 36, kdim 9 (rank tail), odd filters
+        (9, 7, 3, 2, 2, 8),   // uneven h/w, kdim 12, filters = FAST_LANES
+        (10, 10, 4, 4, 2, 17), // kdim 64, filters straddle two lanes
+        (6, 6, 2, 3, 3, 4),   // nrow 4 = one rank group exactly
+        (5, 5, 1, 5, 1, 9),   // single patch row: serial tails only
+    ];
+
+    #[test]
+    fn direct_conv_matches_im2col_pipeline_bitwise_det() {
+        let mut rng = Rng::new(0xC0DE);
+        for &(h, w, c, kernel, stride, filters) in &CONV_GEOMS {
+            let oh = (h - kernel) / stride + 1;
+            let ow = (w - kernel) / stride + 1;
+            let (nrow, kdim) = (oh * ow, kernel * kernel * c);
+            let x = randvec(&mut rng, h * w * c);
+            let wmat = randvec(&mut rng, kdim * filters);
+            let dy = randvec(&mut rng, nrow * filters);
+            let mut patches = vec![0.0f32; nrow * kdim];
+            im2col_sample(&x, h, w, c, kernel, stride, &mut patches);
+            let tag = format!("{h}x{w}x{c} k{kernel}s{stride}f{filters}");
+
+            // Forward: im2col + tiled matmul vs patch-free walk.
+            let mut y_ref = vec![0.0f32; nrow * filters];
+            matmul_acc_tiled(&patches, &wmat, &mut y_ref, nrow, kdim, filters);
+            let mut y = vec![0.0f32; nrow * filters];
+            conv2d_forward(&x, &wmat, &mut y, h, w, c, kernel, stride, filters);
+            assert_eq!(bits(&y_ref), bits(&y), "fwd {tag}");
+
+            // Input grad: tiled a@b^T + col2im vs col2im-free scatter.
+            let mut dpatches = vec![0.0f32; nrow * kdim];
+            matmul_a_bt_tiled(&dy, &wmat, &mut dpatches, nrow, filters, kdim);
+            let mut dx_ref = vec![0.0f32; h * w * c];
+            col2im_sample(&dpatches, h, w, c, kernel, stride, &mut dx_ref);
+            let mut dx = vec![0.0f32; h * w * c];
+            conv2d_input_grad(&dy, &wmat, &mut dx, h, w, c, kernel, stride, filters);
+            assert_eq!(bits(&dx_ref), bits(&dx), "igrad {tag}");
+
+            // Weight grad: tiled a^T@b on patches vs patch-free reduction,
+            // full range and re-assembled from uneven row chunks (the
+            // Phase B partition boundaries never hit kc multiples).
+            let mut dw_ref = vec![0.0f32; kdim * filters];
+            matmul_at_b_acc_tiled(&patches, &dy, &mut dw_ref, nrow, kdim, filters);
+            let mut dw = vec![0.0f32; kdim * filters];
+            conv2d_weight_grad_chunk(&x, &dy, &mut dw, 0, kdim, h, w, c, kernel, stride, filters);
+            assert_eq!(bits(&dw_ref), bits(&dw), "wgrad {tag}");
+            let splits = [0, kdim / 3, 2 * kdim / 3 + 1, kdim];
+            let mut dw_chunked = vec![0.0f32; kdim * filters];
+            for s in 0..3 {
+                let (lo, hi) = (splits[s], splits[s + 1]);
+                conv2d_weight_grad_chunk(
+                    &x,
+                    &dy,
+                    &mut dw_chunked[lo * filters..hi * filters],
+                    lo,
+                    hi,
+                    h,
+                    w,
+                    c,
+                    kernel,
+                    stride,
+                    filters,
+                );
+            }
+            assert_eq!(bits(&dw_ref), bits(&dw_chunked), "wgrad chunked {tag}");
+        }
+    }
+
+    #[test]
+    fn direct_conv_matches_im2col_pipeline_bitwise_fast() {
+        let mut rng = Rng::new(0xFA57C0DE);
+        for &(h, w, c, kernel, stride, filters) in &CONV_GEOMS {
+            let oh = (h - kernel) / stride + 1;
+            let ow = (w - kernel) / stride + 1;
+            let (nrow, kdim) = (oh * ow, kernel * kernel * c);
+            let x = randvec(&mut rng, h * w * c);
+            let wmat = randvec(&mut rng, kdim * filters);
+            let dy = randvec(&mut rng, nrow * filters);
+            let mut patches = vec![0.0f32; nrow * kdim];
+            im2col_sample(&x, h, w, c, kernel, stride, &mut patches);
+            let tag = format!("{h}x{w}x{c} k{kernel}s{stride}f{filters}");
+
+            let mut y_ref = vec![0.0f32; nrow * filters];
+            matmul_acc_fast(&patches, &wmat, &mut y_ref, nrow, kdim, filters);
+            let mut y = vec![0.0f32; nrow * filters];
+            conv2d_forward_fast(&x, &wmat, &mut y, h, w, c, kernel, stride, filters);
+            assert_eq!(bits(&y_ref), bits(&y), "fwd fast {tag}");
+
+            let mut dpatches = vec![0.0f32; nrow * kdim];
+            matmul_a_bt_fast(&dy, &wmat, &mut dpatches, nrow, filters, kdim);
+            let mut dx_ref = vec![0.0f32; h * w * c];
+            col2im_sample(&dpatches, h, w, c, kernel, stride, &mut dx_ref);
+            let mut dx = vec![0.0f32; h * w * c];
+            conv2d_input_grad_fast(&dy, &wmat, &mut dx, h, w, c, kernel, stride, filters);
+            assert_eq!(bits(&dx_ref), bits(&dx), "igrad fast {tag}");
+
+            let mut dw_ref = vec![0.0f32; kdim * filters];
+            matmul_at_b_acc_fast(&patches, &dy, &mut dw_ref, nrow, kdim, filters);
+            let mut dw = vec![0.0f32; kdim * filters];
+            conv2d_weight_grad_chunk_fast(
+                &x, &dy, &mut dw, 0, kdim, h, w, c, kernel, stride, filters,
+            );
+            assert_eq!(bits(&dw_ref), bits(&dw), "wgrad fast {tag}");
+            let splits = [0, kdim / 3, 2 * kdim / 3 + 1, kdim];
+            let mut dw_chunked = vec![0.0f32; kdim * filters];
+            for s in 0..3 {
+                let (lo, hi) = (splits[s], splits[s + 1]);
+                conv2d_weight_grad_chunk_fast(
+                    &x,
+                    &dy,
+                    &mut dw_chunked[lo * filters..hi * filters],
+                    lo,
+                    hi,
+                    h,
+                    w,
+                    c,
+                    kernel,
+                    stride,
+                    filters,
+                );
+            }
+            assert_eq!(bits(&dw_ref), bits(&dw_chunked), "wgrad fast chunked {tag}");
+        }
     }
 }

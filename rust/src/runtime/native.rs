@@ -1,24 +1,30 @@
 //! Native execution engine: a pure-Rust reference implementation of the
 //! compiled entry points, parallelized over the persistent [`ComputePool`].
 //!
-//! Mirrors `python/compile/model.py` operation-for-operation — im2col
+//! Mirrors `python/compile/model.py` operation-for-operation — VALID
 //! convolutions, ReLU MLP head, mean-Huber TD loss (standard and Double-DQN
 //! targets), hand-derived backprop, and the fused centered-RMSProp update
-//! from `python/compile/kernels/ref.py` (alpha=0.95, eps=0.01).
+//! from `python/compile/kernels/ref.py` (alpha=0.95, eps=0.01). The conv
+//! layers run **patch-free** (rust/DESIGN.md §13): the implicit-GEMM
+//! kernels in `runtime/kernels.rs` walk the im2col geometry in place, so
+//! no `[OH·OW, k²·C]` patch matrix is ever materialized — while preserving
+//! each output element's accumulation order, so results are bit-identical
+//! to the historical im2col+matmul pipeline (which `runtime/golden.rs`
+//! still implements as the independent oracle).
 //!
 //! **Parallel determinism** (rust/DESIGN.md §9): the train entry runs in
 //! two phases. Phase A shards the minibatch into contiguous sample ranges
 //! and computes, per shard, everything that is per-sample (forward caches,
-//! bootstrap targets, TD errors, backward deltas, im2col patches). Phase B
-//! partitions each parameter tensor's *output elements* across the pool;
-//! every element accumulates its cross-sample reduction in the fixed global
-//! sample order with the same sparsity skips as the serial kernels. Because
-//! each output element's f32 accumulation sequence never depends on the
-//! partitioning, gradients are **bit-identical for every `learner_threads`
-//! value** — and bit-identical to the serial golden reference
-//! (`runtime/golden.rs`), which preserves the original whole-batch math.
-//! The hot matmuls are cache-tiled (`runtime/kernels.rs`), also without
-//! changing any per-element accumulation order.
+//! bootstrap targets, TD errors, backward deltas). Phase B partitions each
+//! parameter tensor's *output elements* across the pool; every element
+//! accumulates its cross-sample reduction in the fixed global sample order
+//! with the same sparsity skips as the serial kernels. Because each output
+//! element's f32 accumulation sequence never depends on the partitioning,
+//! gradients are **bit-identical for every `learner_threads` value** — and
+//! bit-identical to the serial golden reference (`runtime/golden.rs`),
+//! which preserves the original whole-batch math. The hot matmuls are
+//! cache-tiled (`runtime/kernels.rs`), also without changing any
+//! per-element accumulation order.
 //!
 //! **Kernel modes** (rust/DESIGN.md §12): every dense kernel call goes
 //! through the `matmul_*_mode` dispatchers, selected by the engine's
@@ -35,26 +41,30 @@
 //! initial parameters use the same scheme (zero biases, uniform
 //! ±1/sqrt(fan_in) weights) driven by the in-tree deterministic RNG.
 //!
-//! Memory note: inference materializes im2col patches per *sample*
-//! (O(OH·OW·k²·C) scratch); the train entry additionally retains patches
-//! and deltas for the whole minibatch so Phase B can re-walk samples in
-//! global order (~20 MB for the `nature` net at batch 32). The engine
-//! recycles the two dominant per-step allocations — the retained im2col
-//! patch buffers and the gradient staging vector — through a persistent
-//! [`TrainScratch`] (buffer identity only; contents are fully rewritten
-//! each step, so reuse is bitwise invisible).
+//! Memory note: inference runs patch-free — per sample the conv stack
+//! touches only the `[H·W·C]` input and its activations, no im2col
+//! scratch. The train entry retains the normalized input (`x0`) and the
+//! per-layer activations/deltas so Phase B can re-walk samples in global
+//! order; for the `nature` net that is ~112 KB per sample where the
+//! retained patch matrices used to cost ~690 KB (a ~6× cut in the
+//! minibatch working set). The engine recycles the per-step allocations
+//! that remain — the retained `x0` buffers and the gradient staging
+//! vector — through a persistent [`TrainScratch`] (buffer identity only;
+//! contents are fully rewritten each step, so reuse is bitwise
+//! invisible).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::metrics::{TrainPhase, TrainTimers};
 use crate::util::rng::Rng;
 
 use super::engine::{EntryKind, ExecutionEngine};
 use super::kernels::{
-    axpy4, col2im_sample, im2col_sample, matmul_a_bt_mode, matmul_acc_mode, KernelMode, FAST_LANES,
-    FAST_RANK,
+    axpy4, conv2d_forward_mode, conv2d_input_grad_mode, conv2d_weight_grad_chunk_mode,
+    matmul_a_bt_mode, matmul_acc_mode, KernelMode, FAST_LANES, FAST_RANK,
 };
 use super::manifest::NetSpec;
 use super::pool::{split_ranges, ComputePool};
@@ -214,6 +224,16 @@ pub(crate) fn huber_grad(x: f32) -> f32 {
     x.clamp(-1.0, 1.0)
 }
 
+/// Run `f`, attributing its duration to `phase` when timers are attached
+/// (the `speedtest --breakdown` hook). Timing never touches the math.
+#[inline]
+fn timed<T>(timers: Option<&TrainTimers>, phase: TrainPhase, f: impl FnOnce() -> T) -> T {
+    match timers {
+        Some(t) => t.time(phase, f),
+        None => f(),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Forward (per shard)
 // ---------------------------------------------------------------------------
@@ -238,25 +258,25 @@ impl<'a> Params<'a> {
 }
 
 /// Activations of one shard's forward pass (rows are the shard's samples).
-/// The normalized input itself is not retained: conv0's weight gradients
-/// read the retained im2col patches, which already hold the /255 values.
 struct Fwd {
+    /// Normalized input `[rows, H, W, C]` (the /255 values); empty unless
+    /// retained for the gradient phase — Phase B's conv0 weight gradients
+    /// read the patch geometry directly out of it (no im2col buffer).
+    x0: Vec<f32>,
     /// Post-ReLU output of each conv layer, `[rows, OH, OW, F]`.
     conv_out: Vec<Vec<f32>>,
-    /// im2col patches of each conv layer, `[rows, OH*OW, k*k*C]`; empty
-    /// unless retained for the gradient phase.
-    conv_patches: Vec<Vec<f32>>,
     /// Post-ReLU output of each hidden layer, `[rows, width]`.
     fc_out: Vec<Vec<f32>>,
     /// Q-values `[rows, A]`.
     q: Vec<f32>,
 }
 
-/// Forward over `rows` consecutive samples. `keep` retains activations for
-/// backprop; `keep_patches` additionally retains every conv layer's im2col
-/// patch matrices (Phase B re-walks them in global sample order).
-/// `patch_recycle` donates previously retained patch buffers (indexed by
-/// conv layer) so steady-state training reuses their capacity; contents
+/// Forward over `rows` consecutive samples, patch-free: each conv layer
+/// runs the implicit-GEMM kernel per sample, so no im2col matrix is ever
+/// materialized (bit-identical to the historical im2col+matmul pipeline;
+/// rust/DESIGN.md §13). `keep` retains the normalized input and all
+/// activations for backprop. `x0_recycle` donates a previously retained
+/// input buffer so steady-state training reuses its capacity; contents
 /// are fully rewritten, so recycling never changes a result bit.
 #[allow(clippy::too_many_arguments)]
 fn forward_shard(
@@ -265,73 +285,67 @@ fn forward_shard(
     states: &[u8],
     rows: usize,
     keep: bool,
-    keep_patches: bool,
     mode: KernelMode,
-    patch_recycle: &mut Vec<Vec<f32>>,
+    x0_recycle: Vec<f32>,
+    timers: Option<&TrainTimers>,
 ) -> Result<Fwd> {
     let [h0, w0, c0] = arch.frame;
     if states.len() != rows * h0 * w0 * c0 {
         bail!("states: got {} bytes, want {}", states.len(), rows * h0 * w0 * c0);
     }
-    let x0: Vec<f32> = states.iter().map(|&v| v as f32 / 255.0).collect();
+    let mut x = x0_recycle;
+    x.clear();
+    x.extend(states.iter().map(|&v| v as f32 / 255.0));
 
     let hw = arch.conv_out_hw();
     let mut conv_out: Vec<Vec<f32>> = Vec::with_capacity(arch.convs.len());
-    let mut conv_patches: Vec<Vec<f32>> = Vec::with_capacity(arch.convs.len());
+    let mut x0_keep: Vec<f32> = Vec::new();
     let (mut h, mut w, mut c) = (h0, w0, c0);
-    let mut x = x0;
     let mut tensor_idx = 0;
-    let mut scratch: Vec<f32> = Vec::new();
+    let t_conv = timers.map(|_| std::time::Instant::now());
     for (i, conv) in arch.convs.iter().enumerate() {
         let (oh, ow) = hw[i];
-        let kdim = conv.kernel * conv.kernel * c;
-        let wmat = p.tensor(tensor_idx); // [kdim, F]
+        let wmat = p.tensor(tensor_idx); // [k*k*C, F]
         let bias = p.tensor(tensor_idx + 1);
         tensor_idx += 2;
-        let mut y = vec![0.0f32; rows * oh * ow * conv.filters];
-        let psz = oh * ow * kdim;
-        let mut retained = if keep_patches {
-            let mut buf = if i < patch_recycle.len() {
-                std::mem::take(&mut patch_recycle[i])
-            } else {
-                Vec::new()
-            };
-            buf.clear();
-            buf.resize(rows * psz, 0.0);
-            buf
-        } else {
-            Vec::new()
-        };
-        if !keep_patches {
-            scratch.clear();
-            scratch.resize(psz, 0.0);
-        }
+        let in_sz = h * w * c;
+        let out_sz = oh * ow * conv.filters;
+        let mut y = vec![0.0f32; rows * out_sz];
         for bi in 0..rows {
-            let patches: &mut [f32] = if keep_patches {
-                &mut retained[bi * psz..(bi + 1) * psz]
-            } else {
-                &mut scratch
-            };
-            im2col_sample(&x[bi * h * w * c..(bi + 1) * h * w * c], h, w, c, conv.kernel, conv.stride, patches);
-            let yrows = &mut y[bi * oh * ow * conv.filters..(bi + 1) * oh * ow * conv.filters];
-            matmul_acc_mode(mode, patches, wmat, yrows, oh * ow, kdim, conv.filters);
+            conv2d_forward_mode(
+                mode,
+                &x[bi * in_sz..(bi + 1) * in_sz],
+                wmat,
+                &mut y[bi * out_sz..(bi + 1) * out_sz],
+                h,
+                w,
+                c,
+                conv.kernel,
+                conv.stride,
+                conv.filters,
+            );
         }
         // Bias + ReLU in one pass.
         for (j, v) in y.iter_mut().enumerate() {
             let withb = *v + bias[j % conv.filters];
             *v = if withb > 0.0 { withb } else { 0.0 };
         }
-        x = y;
+        if i == 0 && keep {
+            x0_keep = std::mem::replace(&mut x, y);
+        } else {
+            x = y;
+        }
         (h, w, c) = (oh, ow, conv.filters);
         if keep {
             conv_out.push(x.clone());
         }
-        if keep_patches {
-            conv_patches.push(retained);
-        }
+    }
+    if let (Some(tm), Some(t0)) = (timers, t_conv) {
+        tm.record(TrainPhase::ConvForward, t0.elapsed().as_nanos() as u64);
     }
 
     // Hidden layers (x is now [rows, dim]).
+    let t_dense = timers.map(|_| std::time::Instant::now());
     let mut dim = h * w * c;
     let mut fc_out: Vec<Vec<f32>> = Vec::with_capacity(arch.hidden.len());
     for &width in arch.hidden.iter() {
@@ -359,15 +373,18 @@ fn forward_shard(
     for (j, v) in q.iter_mut().enumerate() {
         *v += bias[j % arch.actions];
     }
+    if let (Some(tm), Some(t0)) = (timers, t_dense) {
+        tm.record(TrainPhase::Dense, t0.elapsed().as_nanos() as u64);
+    }
 
-    Ok(Fwd { conv_out, conv_patches, fc_out, q })
+    Ok(Fwd { x0: x0_keep, conv_out, fc_out, q })
 }
 
 /// Q-values only, computed serially with the deterministic kernel tier
 /// (tests, the golden-style references, and small batches).
 pub fn infer(arch: &NetArch, params: &[f32], states: &[u8], batch: usize) -> Result<Vec<f32>> {
     let p = Params::new(arch, params)?;
-    Ok(forward_shard(arch, &p, states, batch, false, false, KernelMode::Deterministic, &mut Vec::new())?.q)
+    Ok(forward_shard(arch, &p, states, batch, false, KernelMode::Deterministic, Vec::new(), None)?.q)
 }
 
 /// Q-values with the batch sharded over the pool (bit-identical across
@@ -387,7 +404,7 @@ pub fn infer_pooled(
     }
     let ranges = split_ranges(batch, pool.threads());
     if ranges.len() <= 1 {
-        return Ok(forward_shard(arch, &p, states, batch, false, false, mode, &mut Vec::new())?.q);
+        return Ok(forward_shard(arch, &p, states, batch, false, mode, Vec::new(), None)?.q);
     }
     let a = arch.actions;
     let mut q = vec![0.0f32; batch * a];
@@ -402,7 +419,7 @@ pub fn infer_pooled(
         let p = &p;
         let rows_states = &states[lo * frame..hi * frame];
         tasks.push(Box::new(move || {
-            match forward_shard(arch, p, rows_states, hi - lo, false, false, mode, &mut Vec::new()) {
+            match forward_shard(arch, p, rows_states, hi - lo, false, mode, Vec::new(), None) {
                 Ok(fwd) => chunk.copy_from_slice(&fwd.q),
                 Err(e) => *err = Some(e.to_string()),
             }
@@ -425,8 +442,9 @@ pub fn infer_pooled(
 struct ShardSlot {
     lo: usize,
     hi: usize,
+    /// Normalized input `[rows, H, W, C]` (conv0's weight-gradient source).
+    x0: Vec<f32>,
     conv_out: Vec<Vec<f32>>,
-    conv_patches: Vec<Vec<f32>>,
     fc_out: Vec<Vec<f32>>,
     /// dL/dq rows, already scaled by 1/batch (and the IS weight, when
     /// weighted).
@@ -467,6 +485,7 @@ fn shard_phase_a(
     double: bool,
     batch_total: usize,
     mode: KernelMode,
+    timers: Option<&TrainTimers>,
     slot: &mut ShardSlot,
 ) -> Result<()> {
     let rows = slot.rows();
@@ -474,17 +493,17 @@ fn shard_phase_a(
     let frame = arch.frame_elems();
     let a = arch.actions;
 
-    // Donate last step's retained patch buffers back to the forward pass.
-    let mut patch_recycle = std::mem::take(&mut slot.conv_patches);
+    // Donate last step's retained input buffer back to the forward pass.
+    let x0_recycle = std::mem::take(&mut slot.x0);
     let fwd =
-        forward_shard(arch, p, &states[lo * frame..hi * frame], rows, true, true, mode, &mut patch_recycle)?;
+        forward_shard(arch, p, &states[lo * frame..hi * frame], rows, true, mode, x0_recycle, timers)?;
     let next_rows = &next_states[lo * frame..hi * frame];
-    let qn_target = forward_shard(arch, pt, next_rows, rows, false, false, mode, &mut Vec::new())?.q;
+    let qn_target = forward_shard(arch, pt, next_rows, rows, false, mode, Vec::new(), timers)?.q;
 
     // Bootstrap values (never differentiated — stop_gradient in the model).
     let mut bootstrap = vec![0.0f32; rows];
     if double {
-        let qn_online = forward_shard(arch, p, next_rows, rows, false, false, mode, &mut Vec::new())?.q;
+        let qn_online = forward_shard(arch, p, next_rows, rows, false, mode, Vec::new(), timers)?.q;
         for r in 0..rows {
             let row = &qn_online[r * a..(r + 1) * a];
             let mut best = 0;
@@ -542,6 +561,7 @@ fn shard_phase_a(
     let flat_dim = last_h * last_w * last_c;
     let head_dim = if n_fc > 0 { arch.hidden[n_fc - 1] } else { flat_dim };
 
+    let t_dense = timers.map(|_| std::time::Instant::now());
     let out_w = p.tensor(2 * n_conv + 2 * n_fc);
     let mut dx = vec![0.0f32; rows * head_dim];
     matmul_a_bt_mode(mode, &dq, out_w, &mut dx, rows, a, head_dim);
@@ -562,8 +582,15 @@ fn shard_phase_a(
         matmul_a_bt_mode(mode, &dx, wmat, &mut dprev, rows, width, in_dim);
         dfc[i] = std::mem::replace(&mut dx, dprev);
     }
+    if let (Some(tm), Some(t0)) = (timers, t_dense) {
+        tm.record(TrainPhase::Dense, t0.elapsed().as_nanos() as u64);
+    }
 
-    // dx now holds d(conv_out[last]) as [rows, OH, OW, F].
+    // dx now holds d(conv_out[last]) as [rows, OH, OW, F]. Input gradients
+    // run patch-free: no dpatches staging, no col2im scatter — the
+    // implicit-GEMM kernel adds the identical dot products in the
+    // identical scatter order (rust/DESIGN.md §13).
+    let t_conv = timers.map(|_| std::time::Instant::now());
     let mut dconv: Vec<Vec<f32>> = vec![Vec::new(); n_conv];
     for i in (0..n_conv).rev() {
         let conv = arch.convs[i];
@@ -573,7 +600,6 @@ fn shard_phase_a(
         } else {
             (arch.frame[0], arch.frame[1], arch.frame[2])
         };
-        let kdim = conv.kernel * conv.kernel * in_c;
         let f = conv.filters;
         let post = &fwd.conv_out[i];
         for (d, &v) in dx.iter_mut().zip(post.iter()) {
@@ -586,18 +612,30 @@ fn shard_phase_a(
         let in_sz = in_h * in_w * in_c;
         let mut dprev = if need_dx { vec![0.0f32; rows * in_sz] } else { Vec::new() };
         if need_dx {
-            let mut dpatches = vec![0.0f32; oh * ow * kdim];
             for bi in 0..rows {
                 let dy = &dx[bi * oh * ow * f..(bi + 1) * oh * ow * f];
-                matmul_a_bt_mode(mode, dy, wmat, &mut dpatches, oh * ow, f, kdim);
-                col2im_sample(&dpatches, in_h, in_w, in_c, conv.kernel, conv.stride, &mut dprev[bi * in_sz..(bi + 1) * in_sz]);
+                conv2d_input_grad_mode(
+                    mode,
+                    dy,
+                    wmat,
+                    &mut dprev[bi * in_sz..(bi + 1) * in_sz],
+                    in_h,
+                    in_w,
+                    in_c,
+                    conv.kernel,
+                    conv.stride,
+                    f,
+                );
             }
         }
         dconv[i] = std::mem::replace(&mut dx, dprev);
     }
+    if let (Some(tm), Some(t0)) = (timers, t_conv) {
+        tm.record(TrainPhase::ConvBackward, t0.elapsed().as_nanos() as u64);
+    }
 
+    slot.x0 = fwd.x0;
     slot.conv_out = fwd.conv_out;
-    slot.conv_patches = fwd.conv_patches;
     slot.fc_out = fwd.fc_out;
     slot.dq = dq;
     slot.losses = losses;
@@ -649,15 +687,17 @@ fn fast_weight_chunk(
 }
 
 /// Reusable cross-step buffers for [`td_grads_opts`]: the Phase A shard
-/// slots (whose retained im2col patch buffers are the engine's dominant
-/// per-step allocation) and the gradient staging vector. Contents are
-/// fully rewritten each step — only capacity is carried over — so a
-/// shared scratch is bitwise indistinguishable from a fresh one (pinned
-/// in this module's tests and by the golden pipeline test).
+/// slots (whose retained normalized-input buffers recycle across steps)
+/// and the gradient staging vector. Contents are fully rewritten each
+/// step — only capacity is carried over — so a shared scratch is bitwise
+/// indistinguishable from a fresh one (pinned in this module's tests and
+/// by the golden pipeline test). Optionally carries [`TrainTimers`] that
+/// the train path attributes its phases to (`speedtest --breakdown`).
 #[derive(Default)]
 pub struct TrainScratch {
     slots: Vec<ShardSlot>,
     grad: Vec<f32>,
+    timers: Option<Arc<TrainTimers>>,
 }
 
 impl TrainScratch {
@@ -665,6 +705,13 @@ impl TrainScratch {
     /// engine calls this after the optimizer has consumed the gradient).
     pub fn recycle_grad(&mut self, grad: Vec<f32>) {
         self.grad = grad;
+    }
+
+    /// Attach per-phase timers; every subsequent [`td_grads_opts`] call
+    /// through this scratch records into them. Sharded phases accumulate
+    /// per-worker durations (aggregate CPU time, not wall-clock).
+    pub fn set_timers(&mut self, timers: Arc<TrainTimers>) {
+        self.timers = Some(timers);
     }
 }
 
@@ -738,9 +785,11 @@ pub fn td_grads_opts(
     }
     let p = Params::new(arch, theta)?;
     let pt = Params::new(arch, target_theta)?;
+    let timers_arc = scratch.timers.clone();
+    let timers: Option<&TrainTimers> = timers_arc.as_deref();
 
     // ---- Phase A: per-sample work over contiguous shards -----------------
-    // Shard slots come from the scratch so their retained patch buffers
+    // Shard slots come from the scratch so their retained input buffers
     // (and any other capacity) survive across steps.
     let ranges = split_ranges(batch, pool.threads());
     scratch.slots.resize_with(ranges.len(), ShardSlot::default);
@@ -759,7 +808,7 @@ pub fn td_grads_opts(
                 Box::new(move || {
                     if let Err(e) = shard_phase_a(
                         arch, p, pt, states, actions, rewards, next_states, dones, gamma,
-                        weights, boot_gammas, double, batch, mode, slot,
+                        weights, boot_gammas, double, batch, mode, timers, slot,
                     ) {
                         slot.err = Some(e.to_string());
                     }
@@ -825,12 +874,24 @@ pub fn td_grads_opts(
     let mut slice_iter = tensor_slices.into_iter();
 
     // Conv layers: weight [kdim, F] chunked over kdim rows, bias [F] whole.
+    // Weight gradients read the patch geometry straight out of the layer's
+    // retained input (x0 for conv0, the previous conv's activations after
+    // that) — no retained patch matrices. The implicit-GEMM chunk kernels
+    // reproduce the retained-patch accumulation orders exactly, per tier:
+    // ascending kk with the sparsity skip (deterministic), patch rows
+    // grouped FAST_RANK-wide *within the sample* (fast — independent of
+    // shard layout, so fast mode stays width-invariant).
     for i in 0..n_conv {
         let conv = arch.convs[i];
         let (oh, ow) = hw[i];
         let f = conv.filters;
-        let in_c = if i > 0 { arch.convs[i - 1].filters } else { arch.frame[2] };
+        let (in_h, in_w, in_c) = if i > 0 {
+            (hw[i - 1].0, hw[i - 1].1, arch.convs[i - 1].filters)
+        } else {
+            (arch.frame[0], arch.frame[1], arch.frame[2])
+        };
         let kdim = conv.kernel * conv.kernel * in_c;
+        let in_sz = in_h * in_w * in_c;
         let wslice = slice_iter.next().unwrap();
         let bslice = slice_iter.next().unwrap();
 
@@ -839,98 +900,52 @@ pub fn td_grads_opts(
         for chunk in wslice.chunks_mut(chunk_rows * f) {
             let k_hi = k_lo + chunk.len() / f;
             tasks.push(Box::new(move || {
-                for slot in slots_ref {
-                    let rows = slot.rows();
-                    let dcv = &slot.dconv[i];
-                    let pat = &slot.conv_patches[i];
-                    for bi in 0..rows {
-                        let dy = &dcv[bi * oh * ow * f..(bi + 1) * oh * ow * f];
-                        let psamp = &pat[bi * oh * ow * kdim..(bi + 1) * oh * ow * kdim];
-                        match mode {
-                            KernelMode::Deterministic => {
-                                for row in 0..oh * ow {
-                                    let prow = &psamp[row * kdim..(row + 1) * kdim];
-                                    let drow = &dy[row * f..(row + 1) * f];
-                                    for kk in k_lo..k_hi {
-                                        let av = prow[kk];
-                                        if av == 0.0 {
-                                            continue;
-                                        }
-                                        let orow =
-                                            &mut chunk[(kk - k_lo) * f..(kk - k_lo + 1) * f];
-                                        for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
-                                            *o += av * dv;
-                                        }
-                                    }
-                                }
-                            }
-                            KernelMode::Fast => {
-                                // Patch rows grouped within the sample —
-                                // independent of shard layout, so fast mode
-                                // stays width-invariant.
-                                let nrow = oh * ow;
-                                let mut row = 0;
-                                while row + FAST_RANK <= nrow {
-                                    let p0 = &psamp[row * kdim..(row + 1) * kdim];
-                                    let p1 = &psamp[(row + 1) * kdim..(row + 2) * kdim];
-                                    let p2 = &psamp[(row + 2) * kdim..(row + 3) * kdim];
-                                    let p3 = &psamp[(row + 3) * kdim..(row + 4) * kdim];
-                                    let d0 = &dy[row * f..(row + 1) * f];
-                                    let d1 = &dy[(row + 1) * f..(row + 2) * f];
-                                    let d2 = &dy[(row + 2) * f..(row + 3) * f];
-                                    let d3 = &dy[(row + 3) * f..(row + 4) * f];
-                                    for kk in k_lo..k_hi {
-                                        let c = [p0[kk], p1[kk], p2[kk], p3[kk]];
-                                        if c != [0.0; FAST_RANK] {
-                                            axpy4(
-                                                &mut chunk
-                                                    [(kk - k_lo) * f..(kk - k_lo + 1) * f],
-                                                c,
-                                                d0,
-                                                d1,
-                                                d2,
-                                                d3,
-                                            );
-                                        }
-                                    }
-                                    row += FAST_RANK;
-                                }
-                                while row < nrow {
-                                    let prow = &psamp[row * kdim..(row + 1) * kdim];
-                                    let drow = &dy[row * f..(row + 1) * f];
-                                    for kk in k_lo..k_hi {
-                                        let av = prow[kk];
-                                        if av == 0.0 {
-                                            continue;
-                                        }
-                                        let orow =
-                                            &mut chunk[(kk - k_lo) * f..(kk - k_lo + 1) * f];
-                                        for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
-                                            *o += av * dv;
-                                        }
-                                    }
-                                    row += 1;
-                                }
-                            }
+                timed(timers, TrainPhase::ConvBackward, || {
+                    for slot in slots_ref {
+                        let rows = slot.rows();
+                        let dcv = &slot.dconv[i];
+                        let xin: &[f32] =
+                            if i > 0 { &slot.conv_out[i - 1] } else { &slot.x0 };
+                        for bi in 0..rows {
+                            let dy = &dcv[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+                            let xs = &xin[bi * in_sz..(bi + 1) * in_sz];
+                            conv2d_weight_grad_chunk_mode(
+                                mode,
+                                xs,
+                                dy,
+                                chunk,
+                                k_lo,
+                                k_hi,
+                                in_h,
+                                in_w,
+                                in_c,
+                                conv.kernel,
+                                conv.stride,
+                                f,
+                            );
                         }
                     }
-                }
+                })
             }));
             k_lo = k_hi;
         }
         tasks.push(Box::new(move || {
-            for slot in slots_ref {
-                let rows = slot.rows();
-                let dcv = &slot.dconv[i];
-                for bi in 0..rows {
-                    let dy = &dcv[bi * oh * ow * f..(bi + 1) * oh * ow * f];
-                    for row in 0..oh * ow {
-                        for (o, &dv) in bslice.iter_mut().zip(dy[row * f..(row + 1) * f].iter()) {
-                            *o += dv;
+            timed(timers, TrainPhase::ConvBackward, || {
+                for slot in slots_ref {
+                    let rows = slot.rows();
+                    let dcv = &slot.dconv[i];
+                    for bi in 0..rows {
+                        let dy = &dcv[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+                        for row in 0..oh * ow {
+                            for (o, &dv) in
+                                bslice.iter_mut().zip(dy[row * f..(row + 1) * f].iter())
+                            {
+                                *o += dv;
+                            }
                         }
                     }
                 }
-            }
+            })
         }));
     }
 
@@ -945,64 +960,73 @@ pub fn td_grads_opts(
         let mut k_lo = 0;
         for chunk in wslice.chunks_mut(chunk_rows * width) {
             let k_hi = k_lo + chunk.len() / width;
-            tasks.push(Box::new(move || match mode {
-                KernelMode::Deterministic => {
-                    for slot in slots_ref {
-                        let rows = slot.rows();
-                        let xin: &[f32] =
-                            if i > 0 { &slot.fc_out[i - 1] } else { &slot.conv_out[n_conv - 1] };
-                        let dxl = &slot.dfc[i];
-                        for r in 0..rows {
-                            let xrow = &xin[r * in_dim..(r + 1) * in_dim];
-                            let drow = &dxl[r * width..(r + 1) * width];
-                            for kk in k_lo..k_hi {
-                                let av = xrow[kk];
-                                if av == 0.0 {
-                                    continue;
-                                }
-                                let orow =
-                                    &mut chunk[(kk - k_lo) * width..(kk - k_lo + 1) * width];
-                                for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
-                                    *o += av * dv;
-                                }
-                            }
-                        }
-                    }
-                }
-                KernelMode::Fast => {
-                    let xrows: Vec<&[f32]> = slots_ref
-                        .iter()
-                        .flat_map(|slot| {
+            tasks.push(Box::new(move || {
+                timed(timers, TrainPhase::Dense, || match mode {
+                    KernelMode::Deterministic => {
+                        for slot in slots_ref {
+                            let rows = slot.rows();
                             let xin: &[f32] = if i > 0 {
                                 &slot.fc_out[i - 1]
                             } else {
                                 &slot.conv_out[n_conv - 1]
                             };
-                            (0..slot.rows()).map(move |r| &xin[r * in_dim..(r + 1) * in_dim])
-                        })
-                        .collect();
-                    let drows: Vec<&[f32]> = slots_ref
-                        .iter()
-                        .flat_map(|slot| {
-                            let dxl: &[f32] = &slot.dfc[i];
-                            (0..slot.rows()).map(move |r| &dxl[r * width..(r + 1) * width])
-                        })
-                        .collect();
-                    fast_weight_chunk(chunk, width, k_lo, k_hi, &xrows, &drows);
-                }
+                            let dxl = &slot.dfc[i];
+                            for r in 0..rows {
+                                let xrow = &xin[r * in_dim..(r + 1) * in_dim];
+                                let drow = &dxl[r * width..(r + 1) * width];
+                                for kk in k_lo..k_hi {
+                                    let av = xrow[kk];
+                                    if av == 0.0 {
+                                        continue;
+                                    }
+                                    let orow =
+                                        &mut chunk[(kk - k_lo) * width..(kk - k_lo + 1) * width];
+                                    for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                        *o += av * dv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    KernelMode::Fast => {
+                        let xrows: Vec<&[f32]> = slots_ref
+                            .iter()
+                            .flat_map(|slot| {
+                                let xin: &[f32] = if i > 0 {
+                                    &slot.fc_out[i - 1]
+                                } else {
+                                    &slot.conv_out[n_conv - 1]
+                                };
+                                (0..slot.rows()).map(move |r| &xin[r * in_dim..(r + 1) * in_dim])
+                            })
+                            .collect();
+                        let drows: Vec<&[f32]> = slots_ref
+                            .iter()
+                            .flat_map(|slot| {
+                                let dxl: &[f32] = &slot.dfc[i];
+                                (0..slot.rows()).map(move |r| &dxl[r * width..(r + 1) * width])
+                            })
+                            .collect();
+                        fast_weight_chunk(chunk, width, k_lo, k_hi, &xrows, &drows);
+                    }
+                })
             }));
             k_lo = k_hi;
         }
         tasks.push(Box::new(move || {
-            for slot in slots_ref {
-                let rows = slot.rows();
-                let dxl = &slot.dfc[i];
-                for r in 0..rows {
-                    for (o, &dv) in bslice.iter_mut().zip(dxl[r * width..(r + 1) * width].iter()) {
-                        *o += dv;
+            timed(timers, TrainPhase::Dense, || {
+                for slot in slots_ref {
+                    let rows = slot.rows();
+                    let dxl = &slot.dfc[i];
+                    for r in 0..rows {
+                        for (o, &dv) in
+                            bslice.iter_mut().zip(dxl[r * width..(r + 1) * width].iter())
+                        {
+                            *o += dv;
+                        }
                     }
                 }
-            }
+            })
         }));
     }
 
@@ -1014,63 +1038,68 @@ pub fn td_grads_opts(
         let mut k_lo = 0;
         for chunk in wslice.chunks_mut(chunk_rows * a) {
             let k_hi = k_lo + chunk.len() / a;
-            tasks.push(Box::new(move || match mode {
-                KernelMode::Deterministic => {
-                    for slot in slots_ref {
-                        let rows = slot.rows();
-                        let xin: &[f32] = if n_fc > 0 {
-                            &slot.fc_out[n_fc - 1]
-                        } else {
-                            &slot.conv_out[n_conv - 1]
-                        };
-                        for r in 0..rows {
-                            let xrow = &xin[r * head_dim..(r + 1) * head_dim];
-                            let drow = &slot.dq[r * a..(r + 1) * a];
-                            for kk in k_lo..k_hi {
-                                let av = xrow[kk];
-                                if av == 0.0 {
-                                    continue;
-                                }
-                                let orow = &mut chunk[(kk - k_lo) * a..(kk - k_lo + 1) * a];
-                                for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
-                                    *o += av * dv;
-                                }
-                            }
-                        }
-                    }
-                }
-                KernelMode::Fast => {
-                    let xrows: Vec<&[f32]> = slots_ref
-                        .iter()
-                        .flat_map(|slot| {
+            tasks.push(Box::new(move || {
+                timed(timers, TrainPhase::Dense, || match mode {
+                    KernelMode::Deterministic => {
+                        for slot in slots_ref {
+                            let rows = slot.rows();
                             let xin: &[f32] = if n_fc > 0 {
                                 &slot.fc_out[n_fc - 1]
                             } else {
                                 &slot.conv_out[n_conv - 1]
                             };
-                            (0..slot.rows()).map(move |r| &xin[r * head_dim..(r + 1) * head_dim])
-                        })
-                        .collect();
-                    let drows: Vec<&[f32]> = slots_ref
-                        .iter()
-                        .flat_map(|slot| {
-                            (0..slot.rows()).map(move |r| &slot.dq[r * a..(r + 1) * a])
-                        })
-                        .collect();
-                    fast_weight_chunk(chunk, a, k_lo, k_hi, &xrows, &drows);
-                }
+                            for r in 0..rows {
+                                let xrow = &xin[r * head_dim..(r + 1) * head_dim];
+                                let drow = &slot.dq[r * a..(r + 1) * a];
+                                for kk in k_lo..k_hi {
+                                    let av = xrow[kk];
+                                    if av == 0.0 {
+                                        continue;
+                                    }
+                                    let orow = &mut chunk[(kk - k_lo) * a..(kk - k_lo + 1) * a];
+                                    for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                        *o += av * dv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    KernelMode::Fast => {
+                        let xrows: Vec<&[f32]> = slots_ref
+                            .iter()
+                            .flat_map(|slot| {
+                                let xin: &[f32] = if n_fc > 0 {
+                                    &slot.fc_out[n_fc - 1]
+                                } else {
+                                    &slot.conv_out[n_conv - 1]
+                                };
+                                (0..slot.rows())
+                                    .map(move |r| &xin[r * head_dim..(r + 1) * head_dim])
+                            })
+                            .collect();
+                        let drows: Vec<&[f32]> = slots_ref
+                            .iter()
+                            .flat_map(|slot| {
+                                (0..slot.rows()).map(move |r| &slot.dq[r * a..(r + 1) * a])
+                            })
+                            .collect();
+                        fast_weight_chunk(chunk, a, k_lo, k_hi, &xrows, &drows);
+                    }
+                })
             }));
             k_lo = k_hi;
         }
         tasks.push(Box::new(move || {
-            for slot in slots_ref {
-                let rows = slot.rows();
-                for r in 0..rows {
-                    for (o, &dv) in bslice.iter_mut().zip(slot.dq[r * a..(r + 1) * a].iter()) {
-                        *o += dv;
+            timed(timers, TrainPhase::Dense, || {
+                for slot in slots_ref {
+                    let rows = slot.rows();
+                    for r in 0..rows {
+                        for (o, &dv) in bslice.iter_mut().zip(slot.dq[r * a..(r + 1) * a].iter()) {
+                            *o += dv;
+                        }
                     }
                 }
-            }
+            })
         }));
     }
     pool.scope(tasks);
@@ -1207,6 +1236,12 @@ impl NativeEngine {
         self.mode
     }
 
+    /// Attach per-phase train timers (the `speedtest --breakdown` hook).
+    /// Timing is observational only — it never changes a result bit.
+    pub fn set_train_timers(&mut self, timers: Arc<TrainTimers>) {
+        self.scratch.set_timers(timers);
+    }
+
     fn arch_for(&mut self, spec: &NetSpec) -> Result<Arc<NetArch>> {
         if let Some(a) = self.archs.get(&spec.name) {
             return Ok(a.clone());
@@ -1294,7 +1329,9 @@ impl ExecutionEngine for NativeEngine {
                 let mut theta2 = theta.to_vec();
                 let mut g2 = g.to_vec();
                 let mut s2 = s.to_vec();
-                rmsprop_pooled(&self.pool, self.mode, &mut theta2, &grad, &mut g2, &mut s2, lr[0]);
+                timed(self.scratch.timers.as_deref(), TrainPhase::Rmsprop, || {
+                    rmsprop_pooled(&self.pool, self.mode, &mut theta2, &grad, &mut g2, &mut s2, lr[0])
+                });
                 self.scratch.recycle_grad(grad);
                 let p = arch.param_count();
                 Ok(vec![

@@ -10,7 +10,12 @@ use tempo_dqn::config::ExecMode;
 use tempo_dqn::hwsim::{simulate, CostModel, SimRun};
 use tempo_dqn::metrics::{GanttTrace, Phase};
 use tempo_dqn::replay::ReplayMemory;
-use tempo_dqn::runtime::kernels::{col2im_sample, im2col_sample};
+use tempo_dqn::runtime::kernels::{
+    col2im_sample, conv2d_forward, conv2d_forward_fast, conv2d_input_grad,
+    conv2d_input_grad_fast, conv2d_weight_grad_chunk, conv2d_weight_grad_chunk_fast,
+    im2col_sample, matmul_a_bt_fast, matmul_a_bt_tiled, matmul_acc_fast, matmul_acc_tiled,
+    matmul_at_b_acc_fast, matmul_at_b_acc_tiled,
+};
 use tempo_dqn::runtime::TrainBatch;
 use tempo_dqn::util::json::Json;
 use tempo_dqn::util::rng::Rng;
@@ -266,6 +271,305 @@ fn prop_im2col_matches_naive_gather() {
                         }
                     }
                 }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Patch-free convolution vs the im2col pipeline (rust/DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// Wider geometry generator than [`conv_shape`]: filter counts straddle the
+/// 8-lane boundary and kdim straddles the rank-4 blocking, so both the
+/// vector bodies and the serial tails of the direct kernels are exercised.
+fn conv_shape_wide(rng: &mut Rng) -> (usize, usize, usize, usize, usize, usize) {
+    let kernel = 1 + rng.below_usize(5);
+    let stride = 1 + rng.below_usize(3);
+    let h = kernel + rng.below_usize(10);
+    let w = kernel + rng.below_usize(10);
+    let c = 1 + rng.below_usize(12);
+    let filters = 1 + rng.below_usize(70);
+    (h, w, c, kernel, stride, filters)
+}
+
+/// Activations with exact zeros mixed in (the post-ReLU sparsity skips in
+/// both tiers fire only on exact zeros).
+fn sparse_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| if rng.chance(0.25) { 0.0 } else { rng.f32() * 4.0 - 2.0 })
+        .collect()
+}
+
+fn assert_bits(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Deterministic tier: the patch-free kernels must be **bitwise identical**
+/// to im2col + the tiled matmuls for every op on random geometries — this
+/// is the contract that lets the engine drop the patch buffers without
+/// moving the default trajectory. Weight gradients are additionally
+/// re-assembled from a random row split (Phase B partitions never align
+/// with kernel-row boundaries).
+#[test]
+fn prop_direct_conv_det_bitwise_equals_im2col_pipeline() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(base_seed() ^ (0xD12EC7 + case));
+        let (h, w, c, kernel, stride, filters) = conv_shape_wide(&mut rng);
+        let oh = (h - kernel) / stride + 1;
+        let ow = (w - kernel) / stride + 1;
+        let (nrow, kdim) = (oh * ow, kernel * kernel * c);
+        let ctx = format!("case {case} (h={h} w={w} c={c} k={kernel} s={stride} f={filters})");
+        let x = sparse_vec(&mut rng, h * w * c);
+        let wmat = sparse_vec(&mut rng, kdim * filters);
+        let dy = sparse_vec(&mut rng, nrow * filters);
+        let mut patches = vec![0.0f32; nrow * kdim];
+        im2col_sample(&x, h, w, c, kernel, stride, &mut patches);
+
+        let mut y_ref = vec![0.0f32; nrow * filters];
+        matmul_acc_tiled(&patches, &wmat, &mut y_ref, nrow, kdim, filters);
+        let mut y = vec![0.0f32; nrow * filters];
+        conv2d_forward(&x, &wmat, &mut y, h, w, c, kernel, stride, filters);
+        assert_bits(&y_ref, &y, &format!("{ctx} fwd"));
+
+        let mut dpatches = vec![0.0f32; nrow * kdim];
+        matmul_a_bt_tiled(&dy, &wmat, &mut dpatches, nrow, filters, kdim);
+        let mut dx_ref = vec![0.0f32; h * w * c];
+        col2im_sample(&dpatches, h, w, c, kernel, stride, &mut dx_ref);
+        let mut dx = vec![0.0f32; h * w * c];
+        conv2d_input_grad(&dy, &wmat, &mut dx, h, w, c, kernel, stride, filters);
+        assert_bits(&dx_ref, &dx, &format!("{ctx} igrad"));
+
+        let mut dw_ref = vec![0.0f32; kdim * filters];
+        matmul_at_b_acc_tiled(&patches, &dy, &mut dw_ref, nrow, kdim, filters);
+        let split = rng.below_usize(kdim + 1);
+        let mut dw = vec![0.0f32; kdim * filters];
+        for (lo, hi) in [(0, split), (split, kdim)] {
+            conv2d_weight_grad_chunk(
+                &x,
+                &dy,
+                &mut dw[lo * filters..hi * filters],
+                lo,
+                hi,
+                h,
+                w,
+                c,
+                kernel,
+                stride,
+                filters,
+            );
+        }
+        assert_bits(&dw_ref, &dw, &format!("{ctx} wgrad split@{split}"));
+    }
+}
+
+/// Fast tier: the direct kernels must be bitwise identical to im2col + the
+/// fast (lane-reordered) matmuls — same rank-4 blocks, same dot8 trees,
+/// just no patch matrix.
+#[test]
+fn prop_direct_conv_fast_bitwise_equals_im2col_fast_pipeline() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(base_seed() ^ (0xFA57D1 + case));
+        let (h, w, c, kernel, stride, filters) = conv_shape_wide(&mut rng);
+        let oh = (h - kernel) / stride + 1;
+        let ow = (w - kernel) / stride + 1;
+        let (nrow, kdim) = (oh * ow, kernel * kernel * c);
+        let ctx = format!("case {case} (h={h} w={w} c={c} k={kernel} s={stride} f={filters})");
+        let x = sparse_vec(&mut rng, h * w * c);
+        let wmat = sparse_vec(&mut rng, kdim * filters);
+        let dy = sparse_vec(&mut rng, nrow * filters);
+        let mut patches = vec![0.0f32; nrow * kdim];
+        im2col_sample(&x, h, w, c, kernel, stride, &mut patches);
+
+        let mut y_ref = vec![0.0f32; nrow * filters];
+        matmul_acc_fast(&patches, &wmat, &mut y_ref, nrow, kdim, filters);
+        let mut y = vec![0.0f32; nrow * filters];
+        conv2d_forward_fast(&x, &wmat, &mut y, h, w, c, kernel, stride, filters);
+        assert_bits(&y_ref, &y, &format!("{ctx} fwd fast"));
+
+        let mut dpatches = vec![0.0f32; nrow * kdim];
+        matmul_a_bt_fast(&dy, &wmat, &mut dpatches, nrow, filters, kdim);
+        let mut dx_ref = vec![0.0f32; h * w * c];
+        col2im_sample(&dpatches, h, w, c, kernel, stride, &mut dx_ref);
+        let mut dx = vec![0.0f32; h * w * c];
+        conv2d_input_grad_fast(&dy, &wmat, &mut dx, h, w, c, kernel, stride, filters);
+        assert_bits(&dx_ref, &dx, &format!("{ctx} igrad fast"));
+
+        let mut dw_ref = vec![0.0f32; kdim * filters];
+        matmul_at_b_acc_fast(&patches, &dy, &mut dw_ref, nrow, kdim, filters);
+        let split = rng.below_usize(kdim + 1);
+        let mut dw = vec![0.0f32; kdim * filters];
+        for (lo, hi) in [(0, split), (split, kdim)] {
+            conv2d_weight_grad_chunk_fast(
+                &x,
+                &dy,
+                &mut dw[lo * filters..hi * filters],
+                lo,
+                hi,
+                h,
+                w,
+                c,
+                kernel,
+                stride,
+                filters,
+            );
+        }
+        assert_bits(&dw_ref, &dw, &format!("{ctx} wgrad fast split@{split}"));
+    }
+}
+
+/// First-order reassociation bound for a length-`t` f32 reduction with
+/// absolute term sum `s` (same constant as the matmul divergence tests).
+fn reassoc_tol(t: usize, s: f32) -> f32 {
+    4.0 * (t as f32) * f32::EPSILON * s + f32::MIN_POSITIVE
+}
+
+/// Fast vs deterministic direct kernels obey the §12 bounded-divergence
+/// contract per output element: `|fast − det| ≤ c·t·ε·Σ|termᵢ|` where `t`
+/// is the element's reduction length.
+#[test]
+fn prop_direct_conv_fast_vs_det_bounded_divergence() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(base_seed() ^ (0xB0D1_7E57 + case));
+        let (h, w, c, kernel, stride, filters) = conv_shape_wide(&mut rng);
+        let oh = (h - kernel) / stride + 1;
+        let ow = (w - kernel) / stride + 1;
+        let (nrow, kdim) = (oh * ow, kernel * kernel * c);
+        let ctx = format!("case {case} (h={h} w={w} c={c} k={kernel} s={stride} f={filters})");
+        let x = sparse_vec(&mut rng, h * w * c);
+        let wmat = sparse_vec(&mut rng, kdim * filters);
+        let dy = sparse_vec(&mut rng, nrow * filters);
+        let mut patches = vec![0.0f32; nrow * kdim];
+        im2col_sample(&x, h, w, c, kernel, stride, &mut patches);
+
+        // Forward: reduction length kdim per output element.
+        let mut y_det = vec![0.0f32; nrow * filters];
+        conv2d_forward(&x, &wmat, &mut y_det, h, w, c, kernel, stride, filters);
+        let mut y_fast = vec![0.0f32; nrow * filters];
+        conv2d_forward_fast(&x, &wmat, &mut y_fast, h, w, c, kernel, stride, filters);
+        for row in 0..nrow {
+            for f in 0..filters {
+                let mut s = 0.0f32;
+                for kk in 0..kdim {
+                    s += (patches[row * kdim + kk] * wmat[kk * filters + f]).abs();
+                }
+                let (d, g) = (y_det[row * filters + f], y_fast[row * filters + f]);
+                assert!(
+                    (d - g).abs() <= reassoc_tol(kdim, s),
+                    "{ctx} fwd [{row},{f}]: det {d} fast {g}"
+                );
+            }
+        }
+
+        // Input grad: each pixel sums `coverage × filters` terms.
+        let mut dx_det = vec![0.0f32; h * w * c];
+        conv2d_input_grad(&dy, &wmat, &mut dx_det, h, w, c, kernel, stride, filters);
+        let mut dx_fast = vec![0.0f32; h * w * c];
+        conv2d_input_grad_fast(&dy, &wmat, &mut dx_fast, h, w, c, kernel, stride, filters);
+        let mut abs_sum = vec![0.0f32; h * w * c];
+        let mut terms = vec![0usize; h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = oy * ow + ox;
+                for ky in 0..kernel {
+                    for i in 0..kernel * c {
+                        let dst = ((oy * stride + ky) * w + ox * stride) * c + i;
+                        let kk = ky * kernel * c + i;
+                        for f in 0..filters {
+                            abs_sum[dst] +=
+                                (dy[row * filters + f] * wmat[kk * filters + f]).abs();
+                        }
+                        terms[dst] += filters;
+                    }
+                }
+            }
+        }
+        for p in 0..h * w * c {
+            let (d, g) = (dx_det[p], dx_fast[p]);
+            assert!(
+                (d - g).abs() <= reassoc_tol(terms[p], abs_sum[p]),
+                "{ctx} igrad [{p}]: det {d} fast {g}"
+            );
+        }
+
+        // Weight grad: reduction length nrow per gradient element.
+        let mut dw_det = vec![0.0f32; kdim * filters];
+        conv2d_weight_grad_chunk(&x, &dy, &mut dw_det, 0, kdim, h, w, c, kernel, stride, filters);
+        let mut dw_fast = vec![0.0f32; kdim * filters];
+        conv2d_weight_grad_chunk_fast(
+            &x, &dy, &mut dw_fast, 0, kdim, h, w, c, kernel, stride, filters,
+        );
+        for kk in 0..kdim {
+            for f in 0..filters {
+                let mut s = 0.0f32;
+                for row in 0..nrow {
+                    s += (patches[row * kdim + kk] * dy[row * filters + f]).abs();
+                }
+                let (d, g) = (dw_det[kk * filters + f], dw_fast[kk * filters + f]);
+                assert!(
+                    (d - g).abs() <= reassoc_tol(nrow, s),
+                    "{ctx} wgrad [{kk},{f}]: det {d} fast {g}"
+                );
+            }
+        }
+    }
+}
+
+/// The three direct kernels form a consistent adjoint triple: with
+/// `y = x ⊛ W`, `dx = conv2d_input_grad(dy)` and `dW =
+/// conv2d_weight_grad(x, dy)`, exact arithmetic gives
+/// `⟨dy, y⟩ = ⟨x, dx⟩ = ⟨W, dW⟩`. Checked in f64 with an f32-rounding
+/// tolerance, for both tiers.
+#[test]
+fn prop_direct_conv_adjoint_identities() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(base_seed() ^ (0xAD01_17 + case));
+        let (h, w, c, kernel, stride, filters) = conv_shape_wide(&mut rng);
+        let oh = (h - kernel) / stride + 1;
+        let ow = (w - kernel) / stride + 1;
+        let (nrow, kdim) = (oh * ow, kernel * kernel * c);
+        let ctx = format!("case {case} (h={h} w={w} c={c} k={kernel} s={stride} f={filters})");
+        let x = sparse_vec(&mut rng, h * w * c);
+        let wmat = sparse_vec(&mut rng, kdim * filters);
+        let dy = sparse_vec(&mut rng, nrow * filters);
+
+        for fast in [false, true] {
+            let mut y = vec![0.0f32; nrow * filters];
+            let mut dx = vec![0.0f32; h * w * c];
+            let mut dw = vec![0.0f32; kdim * filters];
+            if fast {
+                conv2d_forward_fast(&x, &wmat, &mut y, h, w, c, kernel, stride, filters);
+                conv2d_input_grad_fast(&dy, &wmat, &mut dx, h, w, c, kernel, stride, filters);
+                conv2d_weight_grad_chunk_fast(
+                    &x, &dy, &mut dw, 0, kdim, h, w, c, kernel, stride, filters,
+                );
+            } else {
+                conv2d_forward(&x, &wmat, &mut y, h, w, c, kernel, stride, filters);
+                conv2d_input_grad(&dy, &wmat, &mut dx, h, w, c, kernel, stride, filters);
+                conv2d_weight_grad_chunk(
+                    &x, &dy, &mut dw, 0, kdim, h, w, c, kernel, stride, filters,
+                );
+            }
+            let dot = |a: &[f32], b: &[f32]| -> f64 {
+                a.iter().zip(b).map(|(&p, &q)| p as f64 * q as f64).sum()
+            };
+            let dyy = dot(&dy, &y);
+            let xdx = dot(&x, &dx);
+            let wdw = dot(&wmat, &dw);
+            let scale = dy
+                .iter()
+                .zip(&y)
+                .map(|(&p, &q)| (p as f64 * q as f64).abs())
+                .sum::<f64>()
+                .max(1e-9);
+            for (name, v) in [("⟨x,dx⟩", xdx), ("⟨W,dW⟩", wdw)] {
+                assert!(
+                    (dyy - v).abs() / scale < 1e-4,
+                    "{ctx} fast={fast}: ⟨dy,y⟩ = {dyy} vs {name} = {v}"
+                );
             }
         }
     }
