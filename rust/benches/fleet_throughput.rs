@@ -1,0 +1,148 @@
+//! Fleet wire-path throughput (rust/DESIGN.md §14).
+//!
+//! Three layers, innermost first:
+//!
+//! 1. `fleet/param_frame` — encode + frame + checksum + decode of one
+//!    parameter broadcast (the per-barrier learner→sampler cost, paid
+//!    once per connection per window).
+//! 2. `fleet/upload_roundtrip` — one C-step window upload over a loopback
+//!    TCP connection, acknowledged (the sampler→learner cost, the frame
+//!    bytes dominating).
+//! 3. `fleet/steps_1p` / `fleet/steps_2p` — end-to-end replicated fleet
+//!    runs (learner in-process, real spawned `fleet-sampler` worker
+//!    processes) in transitions/sec, the number `CostModel::net_ms`
+//!    should be calibrated against (`hwsim/cost.rs`).
+//!
+//! Run: `cargo bench --bench fleet_throughput`
+//! CI smoke: `cargo bench --bench fleet_throughput -- --test`
+
+use std::io::Cursor;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use tempo_dqn::benchkit::Bench;
+use tempo_dqn::config::{ExecMode, ExperimentConfig};
+use tempo_dqn::coordinator::{spawn_local_samplers, Coordinator, FleetOpts};
+use tempo_dqn::env::NET_FRAME;
+use tempo_dqn::net::{Endpoint, Msg, WindowUpload};
+use tempo_dqn::replay::StagedTransition;
+use tempo_dqn::runtime::default_artifact_dir;
+
+fn fleet_cfg(total: u64, samplers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+    cfg.game = "seeker".into();
+    cfg.mode = ExecMode::Concurrent;
+    cfg.threads = 2;
+    cfg.envs_per_thread = 2;
+    cfg.total_steps = total;
+    cfg.target_update_period = 64;
+    cfg.train_period = 4;
+    cfg.prepopulate = 300;
+    cfg.replay_capacity = 8_000;
+    cfg.fleet_samplers = samplers;
+    cfg
+}
+
+/// One full replicated fleet run; records transitions/sec under `name`.
+fn fleet_steps(bench: &mut Bench, name: &str, samplers: usize, total: u64) -> f64 {
+    let cfg = fleet_cfg(total, samplers);
+    let sock = std::env::temp_dir()
+        .join(format!("tempo-fleet-bench-{samplers}-{}.sock", std::process::id()));
+    let bind = format!("unix:{}", sock.display());
+    let bin = Path::new(env!("CARGO_BIN_EXE_tempo-dqn"));
+    let mut children = spawn_local_samplers(bin, &cfg, &bind, samplers).expect("spawn samplers");
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir()).expect("learner");
+    let t0 = Instant::now();
+    let res = coord.run_fleet(&FleetOpts { bind, samplers }, None).expect("fleet run");
+    let ns = t0.elapsed().as_nanos() as f64;
+    for child in &mut children {
+        child.wait().expect("sampler exit");
+    }
+    bench.record(name, res.steps, ns).throughput_per_sec()
+}
+
+fn synthetic_upload(steps: usize) -> WindowUpload {
+    let per_stream = steps / 4;
+    let streams = (0..4u64)
+        .map(|s| {
+            let items = (0..per_stream)
+                .map(|i| StagedTransition {
+                    frame: vec![(i % 251) as u8; NET_FRAME],
+                    action: (i % 4) as u8,
+                    reward: 0.25,
+                    done: i % 37 == 36,
+                    start: i % 37 == 0,
+                })
+                .collect();
+            (s, items)
+        })
+        .collect();
+    WindowUpload {
+        window: 3,
+        steps: steps as u64,
+        episodes: 2,
+        returns: vec![(100, 1.5), (160, 2.5)],
+        ctxs: vec![vec![7u8; 4 * NET_FRAME]; 1],
+        streams,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    if smoke {
+        std::env::set_var("TEMPO_BENCH_MS", "60");
+    }
+    let mut bench = Bench::new();
+
+    // 1. Parameter broadcast: frame + checksum + codec, round trip.
+    let theta: Vec<f32> = (0..64_000).map(|i| (i as f32).sin() * 1e-2).collect();
+    let r = bench.run("fleet/param_frame", || {
+        let mut buf = Vec::with_capacity(theta.len() * 4 + 64);
+        Msg::ParamBroadcast { tag: 7, theta_minus: theta.clone() }.send(&mut buf).unwrap();
+        match Msg::recv(&mut Cursor::new(&buf)).unwrap() {
+            Msg::ParamBroadcast { theta_minus, .. } => theta_minus.len(),
+            _ => unreachable!(),
+        }
+    });
+    println!(
+        "param broadcast (64k f32, encode+checksum+decode): {:9.1} us",
+        r.mean_ns / 1e3
+    );
+
+    // 2. One window upload (C = 64 steps of staged frames) over loopback
+    // TCP, acknowledged by the peer.
+    let listener = Endpoint::parse("tcp:127.0.0.1:0").unwrap().bind().unwrap();
+    let addr = listener.local_addr_string().unwrap();
+    let sink = std::thread::spawn(move || {
+        let mut conn = listener.accept().unwrap();
+        while let Ok(msg) = Msg::recv(&mut conn) {
+            if matches!(msg, Msg::Shutdown { .. }) {
+                break;
+            }
+            Msg::Heartbeat.send(&mut conn).unwrap();
+        }
+    });
+    let mut conn = Endpoint::parse(&addr).unwrap().connect(Duration::from_secs(5)).unwrap();
+    let r = bench.run("fleet/upload_roundtrip", || {
+        Msg::Upload(synthetic_upload(64)).send(&mut conn).unwrap();
+        matches!(Msg::recv(&mut conn).unwrap(), Msg::Heartbeat)
+    });
+    let frame_bytes = 64 * NET_FRAME;
+    println!(
+        "window upload (64 steps, ~{:.1} KB frames) loopback roundtrip: {:9.1} us  ({:.2} GB/s)",
+        frame_bytes as f64 / 1e3,
+        r.mean_ns / 1e3,
+        frame_bytes as f64 / r.mean_ns.max(1.0)
+    );
+    Msg::Shutdown { reason: "bench done".into() }.send(&mut conn).unwrap();
+    sink.join().unwrap();
+
+    // 3. End-to-end replicated fleet runs against real worker processes.
+    let total: u64 = if smoke { 384 } else { 3_840 };
+    let one = fleet_steps(&mut bench, "fleet/steps_1p", 1, total);
+    let two = fleet_steps(&mut bench, "fleet/steps_2p", 2, total);
+    println!("fleet end-to-end ({total} steps, replicated): 1 proc {one:8.0} steps/s");
+    println!("fleet end-to-end ({total} steps, replicated): 2 proc {two:8.0} steps/s");
+    println!("\n(calibrate hwsim CostModel.net_ms from the barrier-level costs above)");
+    bench.emit_json("fleet").expect("bench json");
+}

@@ -38,7 +38,19 @@
 //! [leg.01_breakout]
 //! game = "breakout"
 //! seed = 2
+//! fleet_samplers = 2           # run this leg's samplers as a local fleet
+//! fleet_lag = 0                # 0 = replicated (bit-identical digest)
 //! ```
+//!
+//! Legs with `fleet_samplers >= 1` (set per leg or via the base `[fleet]`
+//! section) execute through the distributed sampler fleet
+//! (rust/DESIGN.md §14): the runner spawns that many local
+//! `fleet-sampler` worker processes of this very binary (override with
+//! `campaign.sampler_bin`) against a private unix socket and hosts the
+//! learner in-process. Replicated legs (`fleet_lag = 0`) publish the same
+//! `state_digest` the single-process run would; round-robin slicing works
+//! unchanged — each turn detaches the fleet at a window barrier and the
+//! next turn re-handshakes from the checkpoint.
 
 use std::path::{Path, PathBuf};
 
@@ -47,7 +59,7 @@ use anyhow::{bail, Context, Result};
 use crate::ckpt::latest_checkpoint;
 use crate::config::toml::TomlDoc;
 use crate::config::{ExecMode, ExperimentConfig};
-use crate::coordinator::Coordinator;
+use crate::coordinator::{spawn_local_samplers, Coordinator, FleetOpts};
 use crate::util::json::{obj, Json};
 
 /// Leg execution order.
@@ -83,6 +95,9 @@ pub struct Campaign {
     pub order: Order,
     /// Steps each round-robin turn advances a leg by.
     pub slice: u64,
+    /// Binary to spawn for fleet legs' sampler workers (default: this
+    /// very executable via `std::env::current_exe`).
+    pub sampler_bin: Option<PathBuf>,
     pub legs: Vec<CampaignLeg>,
 }
 
@@ -114,6 +129,10 @@ impl Campaign {
         if slice == 0 {
             bail!("campaign.slice must be >= 1 step");
         }
+        let sampler_bin = {
+            let s = doc.str_or("campaign.sampler_bin", "")?;
+            (!s.is_empty()).then(|| PathBuf::from(s))
+        };
 
         // Explicit [leg.<id>] sections, in section-name order (the TOML
         // subset stores keys sorted, so ids like 00_pong order the suite).
@@ -152,6 +171,8 @@ impl Campaign {
                 cfg.envs_per_thread = doc.usize_or(&key("envs_per_thread"), cfg.envs_per_thread)?;
                 cfg.total_steps = doc.usize_or(&key("steps"), cfg.total_steps as usize)? as u64;
                 cfg.eval_seed = doc.usize_or(&key("eval_seed"), cfg.eval_seed as usize)? as u64;
+                cfg.fleet_samplers = doc.usize_or(&key("fleet_samplers"), cfg.fleet_samplers)?;
+                cfg.fleet_lag = doc.usize_or(&key("fleet_lag"), cfg.fleet_lag as usize)? as u64;
                 cfg.validate().with_context(|| format!("leg {id:?}"))?;
                 legs.push(CampaignLeg { id, cfg });
             }
@@ -159,7 +180,7 @@ impl Campaign {
         if legs.is_empty() {
             bail!("campaign has no legs");
         }
-        Ok(Campaign { name, ckpt_root, order, slice, legs })
+        Ok(Campaign { name, ckpt_root, order, slice, sampler_bin, legs })
     }
 
     fn leg_dir(&self, leg: &CampaignLeg) -> PathBuf {
@@ -192,12 +213,16 @@ impl Campaign {
         let mut cfg = leg.cfg.clone();
         cfg.ckpt_dir = Some(dir.to_string_lossy().into_owned());
         let total = cfg.total_steps;
+        let fleet_cfg = (cfg.fleet_samplers > 0).then(|| cfg.clone());
         let mut coord = Coordinator::new(cfg, artifact_dir)?;
         if let Some(ckpt) = latest_checkpoint(&dir)? {
             let step = coord.resume_from(&ckpt)?;
             log(&format!("[{}] resumed {} at step {step}", self.name, leg.id));
         }
-        let res = coord.run_for(limit)?;
+        let res = match &fleet_cfg {
+            None => coord.run_for(limit)?,
+            Some(fcfg) => self.advance_fleet_leg(leg, fcfg, &mut coord, limit, log)?,
+        };
         log(&format!(
             "[{}] {} at {}/{total} steps ({:.0} steps/s this turn)",
             self.name, leg.id, res.steps, res.steps_per_sec
@@ -242,6 +267,47 @@ impl Campaign {
         std::fs::write(self.result_path(leg), json.to_string())
             .with_context(|| format!("writing {}", self.result_path(leg).display()))?;
         Ok(Some(report))
+    }
+
+    /// Run one (slice of a) fleet leg: spawn the leg's local sampler
+    /// workers against a private unix socket, host the learner on the
+    /// already-resumed coordinator, then reap the workers — a clean run
+    /// (or slice) shuts them down over the wire; an error kills them.
+    fn advance_fleet_leg(
+        &self,
+        leg: &CampaignLeg,
+        fcfg: &ExperimentConfig,
+        coord: &mut Coordinator,
+        limit: Option<u64>,
+        log: &mut impl FnMut(&str),
+    ) -> Result<crate::coordinator::TrainResult> {
+        let samplers = fcfg.fleet_samplers;
+        let bind = format!(
+            "unix:{}",
+            std::env::temp_dir()
+                .join(format!("tempo-fleet-{}-{}.sock", std::process::id(), leg.id))
+                .display()
+        );
+        let bin = match &self.sampler_bin {
+            Some(path) => path.clone(),
+            None => std::env::current_exe()
+                .context("resolving this binary for fleet sampler spawns (campaign.sampler_bin overrides)")?,
+        };
+        log(&format!(
+            "[{}] {}: fleet of {samplers} sampler process(es), lag {}",
+            self.name, leg.id, fcfg.fleet_lag
+        ));
+        let mut children = spawn_local_samplers(&bin, fcfg, &bind, samplers)?;
+        let run = coord.run_fleet(&FleetOpts { bind, samplers }, limit);
+        if run.is_err() {
+            for child in &mut children {
+                let _ = child.kill();
+            }
+        }
+        for child in &mut children {
+            let _ = child.wait();
+        }
+        run
     }
 
     /// Strict: a result.json that lost fields (partial write, hand edit)
@@ -365,6 +431,24 @@ mod tests {
         assert_eq!(c.legs[0].id, "pong");
         assert_eq!(c.legs[1].cfg.game, "seeker");
         assert_eq!(c.order, Order::Sequential);
+    }
+
+    #[test]
+    fn fleet_keys_parse_per_leg_and_from_base() {
+        let doc = TomlDoc::parse(
+            "preset = \"smoke\"\n\
+             [fleet]\nsamplers = 2\n\
+             [campaign]\nname = \"f\"\nsampler_bin = \"/opt/bin/tempo-dqn\"\n\
+             [leg.a]\ngame = \"pong\"\n\
+             [leg.b]\ngame = \"seeker\"\nfleet_samplers = 3\nfleet_lag = 1\n",
+        )
+        .unwrap();
+        let c = Campaign::from_toml(&doc).unwrap();
+        assert_eq!(c.sampler_bin.as_deref(), Some(Path::new("/opt/bin/tempo-dqn")));
+        assert_eq!(c.legs[0].cfg.fleet_samplers, 2, "base [fleet] inherited");
+        assert_eq!(c.legs[0].cfg.fleet_lag, 0);
+        assert_eq!(c.legs[1].cfg.fleet_samplers, 3, "per-leg override");
+        assert_eq!(c.legs[1].cfg.fleet_lag, 1);
     }
 
     #[test]

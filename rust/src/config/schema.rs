@@ -192,6 +192,25 @@ pub struct ExperimentConfig {
     /// Steps between checkpoints (quantized up to the mode's next quiesce
     /// point — a C-aligned window boundary in concurrent modes).
     pub ckpt_period: u64,
+
+    // Distributed sampler fleet (rust/DESIGN.md §14)
+    /// Local sampler worker processes spawned by the `fleet` convenience
+    /// subcommand (0 = plain single-process execution). NOT part of the
+    /// resume fingerprint: a replicated fleet run IS the single-process
+    /// trajectory, so checkpoints cross the single↔fleet boundary freely.
+    pub fleet_samplers: usize,
+    /// Fleet parameter staleness, in target windows. 0 = **replicated**
+    /// mode: samplers act window j with exactly the theta_minus the
+    /// single-process machine would, and the digest is bit-identical to
+    /// it. K >= 1 = **relaxed** mode: samplers act window j with the
+    /// parameters broadcast K barriers earlier (deterministic bounded
+    /// staleness — reproducible, but a deliberately different
+    /// trajectory). Fingerprinted: it changes what is learned.
+    pub fleet_lag: u64,
+    /// Fleet socket read timeout / heartbeat window, milliseconds. A peer
+    /// silent for this long is reported as a heartbeat timeout. Not
+    /// fingerprinted (wall-clock only; cannot move the trajectory).
+    pub fleet_timeout_ms: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -228,6 +247,9 @@ impl Default for ExperimentConfig {
             eval_seed: 7,
             ckpt_dir: None,
             ckpt_period: 250_000,
+            fleet_samplers: 0,
+            fleet_lag: 0,
+            fleet_timeout_ms: 60_000,
         }
     }
 }
@@ -301,6 +323,9 @@ impl ExperimentConfig {
             c.ckpt_dir = Some(dir.clone());
         }
         c.ckpt_period = doc.usize_or("ckpt.period", c.ckpt_period as usize)? as u64;
+        c.fleet_samplers = doc.usize_or("fleet.samplers", c.fleet_samplers)?;
+        c.fleet_lag = doc.usize_or("fleet.lag", c.fleet_lag as usize)? as u64;
+        c.fleet_timeout_ms = doc.usize_or("fleet.timeout_ms", c.fleet_timeout_ms as usize)? as u64;
         c.validate()?;
         Ok(c)
     }
@@ -328,11 +353,18 @@ impl ExperimentConfig {
             self.kernel_mode = KernelMode::parse(v)?;
         }
         self.total_steps = args.u64_or("steps", self.total_steps)?;
+        self.minibatch = args.usize_or("minibatch", self.minibatch)?;
         self.replay_capacity = args.usize_or("replay-capacity", self.replay_capacity)?;
         self.target_update_period = args.u64_or("target-period", self.target_update_period)?;
         self.train_period = args.u64_or("train-period", self.train_period)?;
+        self.gamma = args.f64_or("gamma", self.gamma)?;
         self.prepopulate = args.usize_or("prepopulate", self.prepopulate)?;
         self.lr = args.f64_or("lr", self.lr)?;
+        self.eps = EpsSchedule {
+            start: args.f64_or("eps-start", self.eps.start)?,
+            end: args.f64_or("eps-end", self.eps.end)?,
+            decay_steps: args.u64_or("eps-decay-steps", self.eps.decay_steps)?,
+        };
         if let Some(v) = args.str_opt("replay-strategy") {
             self.replay_strategy = ReplayStrategy::parse(v)?;
         }
@@ -341,11 +373,16 @@ impl ExperimentConfig {
         self.per_beta_anneal = args.u64_or("per-beta-anneal", self.per_beta_anneal)?;
         self.n_step = args.usize_or("n-step", self.n_step)?;
         self.eval_period = args.u64_or("eval-period", self.eval_period)?;
+        self.eval_episodes = args.usize_or("eval-episodes", self.eval_episodes)?;
+        self.eval_eps = args.f64_or("eval-eps", self.eval_eps)?;
         self.eval_seed = args.u64_or("eval-seed", self.eval_seed)?;
         if let Some(dir) = args.str_opt("ckpt-dir") {
             self.ckpt_dir = Some(dir.to_string());
         }
         self.ckpt_period = args.u64_or("ckpt-period", self.ckpt_period)?;
+        self.fleet_samplers = args.usize_or("fleet-samplers", self.fleet_samplers)?;
+        self.fleet_lag = args.u64_or("fleet-lag", self.fleet_lag)?;
+        self.fleet_timeout_ms = args.u64_or("fleet-timeout-ms", self.fleet_timeout_ms)?;
         self.validate()
     }
 
@@ -421,6 +458,16 @@ impl ExperimentConfig {
         if self.eval_period == 0 {
             bail!("eval_period must be >= 1 step (use a period >= total_steps to disable evals)");
         }
+        if self.fleet_lag > 32 {
+            bail!(
+                "fleet_lag = {} is out of range 0..=32 (the learner retains one theta_minus \
+                 version per lagged window; staleness beyond 32 windows has no training value)",
+                self.fleet_lag
+            );
+        }
+        if self.fleet_timeout_ms == 0 {
+            bail!("fleet_timeout_ms must be >= 1 (it is the peer liveness window)");
+        }
         Ok(())
     }
 
@@ -434,6 +481,54 @@ impl ExperimentConfig {
     /// env seeds are all indexed by this global stream id.
     pub fn streams(&self) -> usize {
         self.threads * self.envs_per_thread
+    }
+
+    /// Serialize every behavior-relevant knob as CLI arguments that
+    /// [`apply_args`](Self::apply_args) parses back to this exact config —
+    /// how the `fleet` subcommand and campaign runner hand a config to a
+    /// spawned sampler process. `--key=value` form keeps the grammar
+    /// unambiguous; floats print via Rust's shortest round-trip `Display`.
+    /// Deliberately omitted: `ckpt_dir`/`ckpt_period` (samplers never
+    /// checkpoint) and `fleet_samplers` (topology, not trajectory). The
+    /// fingerprint handshake backstops any drift this list might develop.
+    pub fn to_cli_args(&self) -> Vec<String> {
+        let mut a: Vec<String> = Vec::new();
+        let mut kv = |k: &str, v: String| a.push(format!("--{k}={v}"));
+        kv("game", self.game.clone());
+        kv("mode", self.mode.name().to_string());
+        kv("net", self.net.clone());
+        kv("seed", self.seed.to_string());
+        kv("threads", self.threads.to_string());
+        kv("envs-per-thread", self.envs_per_thread.to_string());
+        kv("learner-threads", self.learner_threads.to_string());
+        kv("prefetch-batches", self.prefetch_batches.to_string());
+        kv("kernel-mode", self.kernel_mode.name().to_string());
+        kv("steps", self.total_steps.to_string());
+        kv("minibatch", self.minibatch.to_string());
+        kv("replay-capacity", self.replay_capacity.to_string());
+        kv("target-period", self.target_update_period.to_string());
+        kv("train-period", self.train_period.to_string());
+        kv("gamma", format!("{}", self.gamma));
+        kv("prepopulate", self.prepopulate.to_string());
+        kv("lr", format!("{}", self.lr));
+        kv("eps-start", format!("{}", self.eps.start));
+        kv("eps-end", format!("{}", self.eps.end));
+        kv("eps-decay-steps", self.eps.decay_steps.to_string());
+        kv("replay-strategy", self.replay_strategy.name().to_string());
+        kv("per-alpha", format!("{}", self.per_alpha));
+        kv("per-beta0", format!("{}", self.per_beta0));
+        kv("per-beta-anneal", self.per_beta_anneal.to_string());
+        kv("n-step", self.n_step.to_string());
+        kv("eval-period", self.eval_period.to_string());
+        kv("eval-episodes", self.eval_episodes.to_string());
+        kv("eval-eps", format!("{}", self.eval_eps));
+        kv("eval-seed", self.eval_seed.to_string());
+        kv("fleet-lag", self.fleet_lag.to_string());
+        kv("fleet-timeout-ms", self.fleet_timeout_ms.to_string());
+        if self.double {
+            a.push("--double".to_string());
+        }
+        a
     }
 }
 
@@ -656,5 +751,88 @@ mod tests {
             assert_eq!(ExecMode::parse(m.name()).unwrap(), m);
         }
         assert!(ExecMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn fleet_knobs_default_parse_and_validate() {
+        let c = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(c.fleet_samplers, 0, "single-process is the default machine");
+        assert_eq!(c.fleet_lag, 0, "replicated mode is the default");
+        assert_eq!(c.fleet_timeout_ms, 60_000);
+
+        let doc = TomlDoc::parse(
+            "preset = \"smoke\"\n[fleet]\nsamplers = 2\nlag = 1\ntimeout_ms = 5_000\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.fleet_samplers, 2);
+        assert_eq!(c.fleet_lag, 1);
+        assert_eq!(c.fleet_timeout_ms, 5_000);
+
+        let args = Args::parse(
+            ["--fleet-samplers", "3", "--fleet-lag", "0", "--fleet-timeout-ms", "100"]
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.fleet_samplers, 3);
+        assert_eq!(c.fleet_lag, 0);
+        assert_eq!(c.fleet_timeout_ms, 100);
+
+        let mut bad = c.clone();
+        bad.fleet_lag = 33;
+        assert!(bad.validate().is_err(), "absurd staleness rejected");
+        bad = c.clone();
+        bad.fleet_timeout_ms = 0;
+        assert!(bad.validate().is_err(), "zero liveness window rejected");
+    }
+
+    /// `to_cli_args` → `Args::parse` → `apply_args` over a fresh preset
+    /// must land on the exact config (Debug repr compares every field).
+    /// This is how `fleet` hands the learner's config to spawned sampler
+    /// processes, so drift here would surface as fingerprint refusals.
+    #[test]
+    fn to_cli_args_round_trips_the_config() {
+        let mut c = ExperimentConfig::preset("smoke").unwrap();
+        c.game = "seeker".into();
+        c.mode = ExecMode::Both;
+        c.double = true;
+        c.seed = 0xDEAD_BEEF;
+        c.threads = 3;
+        c.envs_per_thread = 2;
+        c.learner_threads = 4;
+        c.prefetch_batches = 2;
+        c.kernel_mode = KernelMode::Fast;
+        c.total_steps = 12_000;
+        c.minibatch = 16;
+        c.replay_capacity = 9_000;
+        c.target_update_period = 48;
+        c.train_period = 2;
+        c.gamma = 0.925;
+        c.prepopulate = 123;
+        c.lr = 2.5e-4;
+        c.eps = EpsSchedule { start: 0.9, end: 0.05, decay_steps: 10_000 };
+        c.replay_strategy = ReplayStrategy::Proportional;
+        c.per_alpha = 0.55;
+        c.per_beta0 = 0.45;
+        c.per_beta_anneal = 777;
+        c.n_step = 3;
+        c.eval_period = 1_000;
+        c.eval_episodes = 2;
+        c.eval_eps = 0.01;
+        c.eval_seed = 99;
+        c.fleet_lag = 2;
+        c.fleet_timeout_ms = 5_000;
+        c.validate().unwrap();
+
+        let args = Args::parse(c.to_cli_args()).unwrap();
+        let mut back = ExperimentConfig::preset("paper").unwrap();
+        back.apply_args(&args).unwrap();
+        // Deliberately not serialized: checkpoint placement and fleet
+        // topology (neither moves the trajectory).
+        back.ckpt_dir = c.ckpt_dir.clone();
+        back.ckpt_period = c.ckpt_period;
+        back.fleet_samplers = c.fleet_samplers;
+        assert_eq!(format!("{back:?}"), format!("{c:?}"), "to_cli_args round trip drifted");
     }
 }

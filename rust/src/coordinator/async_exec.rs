@@ -13,18 +13,26 @@
 //!   C-step window ([`WindowCtrl`]), transitions stage per-stream and flush
 //!   only at the window barrier, where theta_minus <- theta.
 //!
-//! Step tickets are claimed in blocks of B: a thread that claims base
-//! ticket t acts at steps t..t+B-1, clamped to the step budget (for B=1
-//! this degenerates to the original one-ticket-per-step loop). Windows
-//! therefore quantize to blocks: a block whose base step falls inside the
-//! window completes all its steps before parking, and the window barrier
-//! waits for that block-rounded coverage before flushing staging — so the
+//! Steps execute in blocks of B under a *static schedule*: block k
+//! (steps k·B .. k·B+B, clamped to the step budget) belongs to slot
+//! k mod W — an absolute assignment that is a pure function of the step
+//! index, not of thread timing. (Earlier revisions claimed blocks from a
+//! shared ticket counter, which made the stream↔step pairing
+//! scheduling-dependent at W > 1; the static schedule removes the
+//! counter, so the concurrent variant is now deterministic at any W, and
+//! a fleet sampler process can reproduce its slots' blocks remotely —
+//! rust/DESIGN.md §14.) At W=1 both schedules degenerate to the same
+//! one-thread block loop, so historical digests are unchanged. Windows
+//! quantize to blocks: a block whose base step falls inside the window
+//! completes all its steps before parking, and the window barrier waits
+//! for that block-rounded coverage before flushing staging — so the
 //! flush never races a sampler that is mid-block across the boundary.
 //!
 //! **Segments & quiesce points** (rust/DESIGN.md §10): one invocation runs
 //! from the machine's current step to `seg.until` and exits with every
-//! layer quiesced. In concurrent mode a sampler that claims a ticket at or
-//! past the bound *parks at the window gate instead of stopping the run*,
+//! layer quiesced. In concurrent mode a sampler whose next scheduled block
+//! starts at or past the bound *parks at the window gate instead of stopping
+//! the run*,
 //! so the main thread always waits out the trainer's full final-window
 //! quota before the last flush — the final `trains_done` is deterministic,
 //! which both the bit-exact-resume guarantee and the uninterrupted-vs-
@@ -68,6 +76,10 @@ pub fn run_async(
     debug_assert_eq!(ctxs.len(), w, "one persistent SamplerCtx per thread");
 
     let interlock = TrainInterlock::new();
+    // Segment start (absolute). Always block-aligned except at the true end
+    // of the run: fresh runs start at 0, and every quiesce bound is either
+    // block-rounded (concurrent window targets) or B-aligned (standard).
+    let start = shared.completed.load(Ordering::SeqCst);
     let first_window_end = ((seg.windows_flushed + 1) * c).min(until);
     let gate = WindowGate::new(if concurrent { first_window_end } else { u64::MAX });
     let staging = StagingSet::new(w * b);
@@ -106,28 +118,38 @@ pub fn run_async(
             scope.spawn(move || {
                 let slot = ctx.slot;
                 let mut train_batch = TrainBatch::default();
+                // First block index of this segment, then the first of those
+                // (or later) that the static schedule assigns to this slot.
+                let first_block = start / bs;
+                let mut block =
+                    first_block + (slot as u64 + w as u64 - first_block % w as u64) % w as u64;
                 loop {
                     if shared.should_stop() {
                         break;
                     }
-                    let t = shared.claimed.fetch_add(bs, Ordering::SeqCst);
+                    let t = block * bs;
+                    block += w as u64;
                     if t >= until {
                         if concurrent {
                             // Park instead of stopping the run: the main
                             // thread must still wait out the trainer's full
                             // final-window quota (deterministic quiesce).
                             // The segment-ending flush sets `stop` and opens
-                            // the gate; the forfeited ticket is re-claimed
-                            // by the next segment.
+                            // the gate. The next segment re-derives every
+                            // slot's schedule from `completed`, so nothing
+                            // is forfeited.
                             gate.wait_for_step(shared, t);
                         } else {
-                            shared.stop.store(true, Ordering::SeqCst);
+                            // Do NOT stop the run: other slots may still own
+                            // unexecuted blocks below the bound. The main
+                            // thread's monitor loop stops the run once
+                            // `completed` reaches it.
                         }
                         break;
                     }
                     // Clamp only at the TRUE end of the run, never at a
                     // mid-run segment bound: the uninterrupted run executes
-                    // every claimed block whole (windows are block-rounded),
+                    // every scheduled block whole (windows are block-rounded),
                     // so truncating at `until` would step a strict prefix of
                     // the block's streams and break bit-exact resume when
                     // C is not a multiple of B. Blocks whose base is past

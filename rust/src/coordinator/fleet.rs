@@ -1,0 +1,888 @@
+//! Distributed sampler fleet (rust/DESIGN.md §14).
+//!
+//! One **learner** process hosts the full training machine — replay,
+//! trainer, evaluator, checkpoints — and listens on a fleet endpoint.
+//! N **sampler** processes each own a contiguous chunk of the W sampler
+//! slots: they run the exact [`SamplerCtx`] streams the single-process
+//! async driver would run on threads, acting with theta_minus received
+//! over the wire and uploading each target window's product (staged
+//! transitions, episode returns, context snapshots) back to the learner
+//! at the window barrier.
+//!
+//! Determinism contract, two tiers:
+//!
+//! * **replicated** (`fleet_lag = 0`, the default): a sampler may not act
+//!   window j before receiving theta_minus version j — exactly the window
+//!   barrier the single-process machine enforces — so the fleet trajectory
+//!   is *bit-identical* to the single-process one (`state_digest`
+//!   equality, pinned in tests/fleet.rs), and checkpoints cross the
+//!   single↔fleet boundary freely.
+//! * **relaxed** (`fleet_lag = K >= 1`): window j acts with the version
+//!   broadcast K barriers earlier, so samplers run up to K windows ahead
+//!   of the learner instead of blocking on the freshest parameters. The
+//!   staleness is *deterministic* (a pure function of the window index,
+//!   not of thread or network timing), so relaxed runs are reproducible
+//!   and checkpoint-resumable — they are simply a different trajectory,
+//!   which the divergence test characterizes.
+//!
+//! Fleet execution requires mode `concurrent`: the standard mode
+//! interlocks every acting step with training (nothing to distribute),
+//! and the synchronized modes compute one batched W×B inference per round
+//! whose bitwise results cannot be partitioned across processes.
+//! Geometry must be window-exact (`C % (W*B) == 0`,
+//! `total_steps % C == 0`) so barriers, segment bounds, and the run end
+//! all land on block-aligned window edges.
+//!
+//! Liveness: both sides run socket read timeouts (`fleet_timeout_ms`) and
+//! send [`Msg::Heartbeat`] whenever they will be silent for a while (a
+//! sampler between acting blocks, the learner through a trainer barrier
+//! or a checkpoint write). A silent peer surfaces as the frame layer's
+//! named "heartbeat timeout" error. The learner's write half of every
+//! connection lives on a dedicated writer thread, so a parameter
+//! broadcast can never block the barrier loop against a sampler that is
+//! itself blocked mid-upload (write–write deadlock); flow control is the
+//! sampler's upload write, which the learner drains in connection order.
+
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::RwLock;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ckpt::{ByteReader, ByteWriter};
+use crate::config::{ExecMode, ExperimentConfig};
+use crate::env::{NET_FRAME, STACK};
+use crate::metrics::PhaseTimers;
+use crate::net::{Conn, Endpoint, Msg, WindowUpload};
+use crate::replay::{build_strategy, BatchSource, ReplayMemory, StagingSet, TrainerSource};
+use crate::runtime::{Device, Manifest, Policy, QNet};
+use crate::util::json::Json;
+
+use super::shared::{strategy_plan, ResumePoint, SamplerCtx, SegmentState, Shared, WindowCtrl};
+use super::{Coordinator, Machine, TrainResult};
+
+/// Learner-side launch parameters (the config holds everything else).
+#[derive(Clone, Debug)]
+pub struct FleetOpts {
+    /// Listen address: `tcp:HOST:PORT` or `unix:PATH`.
+    pub bind: String,
+    /// Sampler processes to accept before training starts.
+    pub samplers: usize,
+}
+
+/// The serialized trajectory fingerprint a sampler's `hello` carries.
+pub fn fingerprint_text(cfg: &ExperimentConfig) -> String {
+    super::config_fingerprint(cfg).to_string()
+}
+
+/// Mode/geometry prerequisites shared by learner and sampler; every
+/// refusal names the offending knob (rust/DESIGN.md §14).
+pub fn validate_fleet_geometry(cfg: &ExperimentConfig) -> Result<()> {
+    match cfg.mode {
+        ExecMode::Concurrent => {}
+        ExecMode::Standard => bail!(
+            "fleet execution requires Concurrent Training: mode \"standard\" interlocks \
+             every acting step with the freshly-trained theta, so sampling cannot run in \
+             another process (use --mode concurrent)"
+        ),
+        ExecMode::Synchronized | ExecMode::Both => bail!(
+            "fleet execution requires mode \"concurrent\": mode {:?} uses Synchronized \
+             Execution, whose single batched W×B inference per round cannot be partitioned \
+             across processes without changing its results",
+            cfg.mode.name()
+        ),
+    }
+    let wb = cfg.streams() as u64;
+    if cfg.target_update_period % wb != 0 {
+        bail!(
+            "fleet barriers must be block-exact: target_update_period (C={}) is not a \
+             multiple of W*B={} (threads {} x envs_per_thread {})",
+            cfg.target_update_period, wb, cfg.threads, cfg.envs_per_thread
+        );
+    }
+    if cfg.total_steps % cfg.target_update_period != 0 {
+        bail!(
+            "fleet runs must end on a window barrier: total_steps {} is not a multiple of \
+             target_update_period (C={})",
+            cfg.total_steps, cfg.target_update_period
+        );
+    }
+    Ok(())
+}
+
+/// Key-by-key fingerprint diff; empty means compatible. Mirrors the
+/// checkpoint `check_compat` error shape so a mismatched fleet launch
+/// reads exactly like a mismatched resume.
+fn diff_fingerprints(want: &Json, got: &Json) -> Vec<String> {
+    let (Json::Obj(want), Json::Obj(got)) = (want, got) else {
+        return vec!["malformed config fingerprint (not a JSON object)".to_string()];
+    };
+    let mut out = Vec::new();
+    for (key, want_v) in want {
+        match got.get(key) {
+            Some(got_v) if got_v == want_v => {}
+            Some(got_v) => out.push(format!(
+                "{key}: learner {}, sampler {}",
+                want_v.to_string(),
+                got_v.to_string()
+            )),
+            None => out.push(format!("{key}: missing from the sampler's fingerprint")),
+        }
+    }
+    for key in got.keys() {
+        if !want.contains_key(key) {
+            out.push(format!("{key}: sent by the sampler, unknown to this learner"));
+        }
+    }
+    out
+}
+
+/// One connected sampler, learner-side. Reads happen on the barrier loop;
+/// writes go through `tx` to the connection's writer thread.
+struct SamplerConn {
+    conn: Conn,
+    tx: mpsc::Sender<Msg>,
+    writer: Option<std::thread::JoinHandle<()>>,
+    first_slot: usize,
+    n_slots: usize,
+}
+
+impl SamplerConn {
+    fn who(&self) -> String {
+        format!("sampler(slots {}..{})", self.first_slot, self.first_slot + self.n_slots)
+    }
+
+    /// Queue a message for the writer thread (never blocks; a dead
+    /// connection surfaces as a named error at the next *read*).
+    fn queue(&self, msg: Msg) {
+        let _ = self.tx.send(msg);
+    }
+
+    /// Read the next non-heartbeat message.
+    fn recv(&mut self) -> Result<Msg> {
+        loop {
+            match Msg::recv(&mut self.conn)
+                .with_context(|| format!("receiving from {}", self.who()))?
+            {
+                Msg::Heartbeat => continue,
+                msg => return Ok(msg),
+            }
+        }
+    }
+}
+
+fn beat(conns: &[SamplerConn]) {
+    for sc in conns {
+        sc.queue(Msg::Heartbeat);
+    }
+}
+
+impl Coordinator {
+    /// Host the training machine for a sampler fleet: bind `opts.bind`,
+    /// accept and handshake `opts.samplers` connections, then run to the
+    /// step budget (or `limit` more steps, quantized to a window bound)
+    /// with every target window's transitions arriving over the wire.
+    /// Checkpoints, evaluation, and the returned [`TrainResult`] behave
+    /// exactly as in [`Coordinator::run_for`].
+    pub fn run_fleet(&mut self, opts: &FleetOpts, limit: Option<u64>) -> Result<TrainResult> {
+        validate_fleet_geometry(&self.cfg)?;
+        if opts.samplers == 0 {
+            bail!("fleet learner needs at least one sampler process (--fleet-samplers)");
+        }
+        if opts.samplers > self.cfg.threads {
+            bail!(
+                "fleet has more sampler processes ({}) than sampler slots (threads W={}); \
+                 each process needs at least one slot",
+                opts.samplers, self.cfg.threads
+            );
+        }
+        if self.machine.is_none() {
+            self.machine = Some(self.build_machine(true)?);
+        }
+        if self.ckpt_dir.is_some() {
+            self.validate_ckpt_config()?;
+        }
+
+        let listener = Endpoint::parse(&opts.bind)?.bind()?;
+        println!(
+            "fleet learner listening at {} for {} sampler(s)",
+            listener.local_addr_string()?,
+            opts.samplers
+        );
+        let timeout = Duration::from_millis(self.cfg.fleet_timeout_ms);
+        let want_fp = super::config_fingerprint(&self.cfg);
+
+        // Accept + handshake. Slots are dealt as contiguous chunks in
+        // connection order (the first W % N connections get one extra);
+        // which process owns which slot cannot move the trajectory —
+        // every upload is keyed by absolute slot and stream ids.
+        let mut conns: Vec<SamplerConn> = Vec::with_capacity(opts.samplers);
+        let base = self.cfg.threads / opts.samplers;
+        let extra = self.cfg.threads % opts.samplers;
+        let mut next_slot = 0usize;
+        for i in 0..opts.samplers {
+            let mut conn = listener.accept()?;
+            conn.set_read_timeout(Some(timeout))?;
+            let fingerprint = loop {
+                match Msg::recv(&mut conn).context("fleet handshake")? {
+                    Msg::Hello { fingerprint } => break fingerprint,
+                    Msg::Heartbeat => continue,
+                    other => bail!(
+                        "fleet handshake: expected hello, connection {i} sent {}",
+                        other.name()
+                    ),
+                }
+            };
+            let got_fp = Json::parse(&fingerprint).map_err(|e| {
+                anyhow!("fleet handshake: connection {i} sent an unparsable fingerprint: {e}")
+            })?;
+            let mismatches = diff_fingerprints(&want_fp, &got_fp);
+            if !mismatches.is_empty() {
+                let reason = format!(
+                    "sampler was launched under a different configuration; refusing \
+                     (the fleet trajectory would not be the configured one):\n  {}",
+                    mismatches.join("\n  ")
+                );
+                let _ = Msg::Shutdown { reason: reason.clone() }.send(&mut conn);
+                bail!("fleet handshake: {reason}");
+            }
+
+            let n_slots = base + usize::from(i < extra);
+            let m = self.machine.as_ref().unwrap();
+            let lag = self.cfg.fleet_lag;
+            let current_tag = m.windows_flushed;
+            // Every theta_minus version the sampler's first windows can
+            // legally act with: ring entries (older tags, relaxed mode
+            // only) plus the current version.
+            let mut params: Vec<(u64, Vec<f32>)> = m
+                .fleet_theta_ring
+                .iter()
+                .filter(|(tag, _)| *tag >= current_tag.saturating_sub(lag))
+                .cloned()
+                .collect();
+            params.push((current_tag, self.qnet.theta_minus_host()?));
+            let ctxs = (next_slot..next_slot + n_slots)
+                .map(|slot| {
+                    let mut w = ByteWriter::new();
+                    m.ctxs[slot].save_state(&mut w);
+                    w.into_bytes()
+                })
+                .collect();
+            Msg::HelloAck {
+                first_slot: next_slot as u64,
+                n_slots: n_slots as u64,
+                start: m.completed,
+                total: self.cfg.total_steps,
+                lag,
+                params,
+                ctxs,
+            }
+            .send(&mut conn)?;
+
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let wconn = conn.try_clone()?;
+            let writer = std::thread::spawn(move || {
+                let mut wconn = wconn;
+                while let Ok(msg) = rx.recv() {
+                    if msg.send(&mut wconn).is_err() {
+                        // Stop writing; the learner's read side reports
+                        // the connection failure by name.
+                        break;
+                    }
+                }
+            });
+            conns.push(SamplerConn { conn, tx, writer: Some(writer), first_slot: next_slot, n_slots });
+            next_slot += n_slots;
+        }
+        drop(listener); // stop accepting (and remove a unix socket file)
+
+        // ---- segment loop (mirrors run_for) ------------------------------
+        self.device.stats.reset();
+        self.timers.reset();
+        let start_step = self.machine.as_ref().unwrap().completed;
+        let total = self.cfg.total_steps;
+        let end = match limit {
+            None => total,
+            Some(n) => self.quantize_bound(start_step.saturating_add(n)),
+        };
+        let t0 = Instant::now();
+        let run_result = (|| -> Result<()> {
+            while self.machine.as_ref().unwrap().completed < end {
+                let completed = self.machine.as_ref().unwrap().completed;
+                let mut until = end;
+                if self.ckpt_dir.is_some() {
+                    until =
+                        until.min(self.quantize_bound(completed.saturating_add(self.ckpt_period)));
+                }
+                self.fleet_segment(until, &mut conns)?;
+                if self.ckpt_dir.is_some() {
+                    // Keep the fleet alive through the write: samplers may
+                    // already be acting the next window on the parameters
+                    // broadcast at the final barrier of this segment.
+                    beat(&conns);
+                    self.save_checkpoint()?;
+                    beat(&conns);
+                }
+            }
+            Ok(())
+        })();
+
+        let reason = match &run_result {
+            Ok(()) if end < total => "slice complete; learner detaching".to_string(),
+            Ok(()) => "run complete".to_string(),
+            Err(e) => format!("learner error: {e:#}"),
+        };
+        shutdown_conns(conns, &reason);
+        run_result?;
+
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = self.machine.as_ref().unwrap();
+        let mut losses = m.losses.clone();
+        losses.sort_unstable_by_key(|(s, _)| *s);
+        let mut returns = m.returns.clone();
+        returns.sort_unstable_by_key(|(s, _)| *s);
+        Ok(TrainResult {
+            steps: m.completed,
+            episodes: m.episodes,
+            trains: m.trains_done,
+            target_syncs: self.qnet.target_syncs.load(Ordering::SeqCst),
+            wall_s,
+            steps_per_sec: (m.completed - start_step) as f64 / wall_s.max(1e-9),
+            losses,
+            returns,
+            evals: m.evals.clone(),
+            bus: self.device.stats.snapshot(),
+            timers_report: self.timers.report(),
+        })
+    }
+
+    /// One fleet segment: the learner-side counterpart of the async
+    /// driver's concurrent main loop, with the sampler threads replaced by
+    /// window uploads read off the wire. Every barrier action (flush,
+    /// target sync, priority update, eval, broadcast) happens in the same
+    /// order the single-process machine performs it.
+    fn fleet_segment(&mut self, until: u64, conns: &mut [SamplerConn]) -> Result<()> {
+        let cfg = self.cfg.clone();
+        let qnet = self.qnet.clone();
+        let timers = self.timers.clone();
+        let gantt = self.gantt.clone();
+        let lag = cfg.fleet_lag;
+        let c = cfg.target_update_period;
+        let bpw = cfg.batches_per_window();
+        let total = cfg.total_steps;
+        let eval_period = cfg.eval_period;
+
+        let m = self.machine.as_mut().unwrap();
+        let at = ResumePoint {
+            completed: m.completed,
+            trains_done: m.trains_done,
+            episodes: m.episodes,
+        };
+        let mut seg = SegmentState {
+            until,
+            windows_flushed: m.windows_flushed,
+            draw_rng: m.draw_rng,
+        };
+        let Machine { replay, ctxs, evaluator, evals, next_eval, fleet_theta_ring, .. } = m;
+        let shared = Shared::resumed(&cfg, &qnet, replay, &timers, gantt.as_deref(), at);
+        let staging = StagingSet::new(cfg.streams());
+        let winctrl = WindowCtrl::new();
+        let source = TrainerSource::with_strategy(
+            replay,
+            build_strategy(
+                &strategy_plan(&cfg, qnet.spec().gamma),
+                seg.draw_rng,
+                shared.trains_done.load(Ordering::SeqCst),
+            ),
+            cfg.minibatch,
+            cfg.prefetch_batches,
+            true,
+        );
+
+        let result = std::thread::scope(|scope| -> Result<()> {
+            if let Some(pipeline) = source.pipeline() {
+                let shared = &shared;
+                scope.spawn(move || pipeline.worker_loop(&|| shared.should_stop()));
+            }
+            {
+                let shared = &shared;
+                let winctrl = &winctrl;
+                let source: &dyn BatchSource = &source;
+                scope.spawn(move || winctrl.trainer_loop(shared, source));
+            }
+
+            // Any error must release the trainer (it never sees `stop`
+            // early on the success path, exactly like the async driver).
+            let fail = |e: anyhow::Error| -> Result<()> {
+                shared.stop.store(true, Ordering::SeqCst);
+                winctrl.notify_all();
+                Err(e)
+            };
+
+            let mut window_end = ((seg.windows_flushed + 1) * c).min(until);
+            winctrl.dispatch();
+            source.grant(bpw);
+            loop {
+                let j = seg.windows_flushed; // absolute window being collected
+                let window_target = window_end.min(total);
+
+                // Collect one upload per sampler, buffering all of them
+                // before touching any machine state: a failure here leaves
+                // the machine exactly at the previous barrier.
+                let mut uploads: Vec<WindowUpload> = Vec::with_capacity(conns.len());
+                for sc in conns.iter_mut() {
+                    let up = match sc.recv() {
+                        Ok(Msg::Upload(up)) => up,
+                        Ok(Msg::Shutdown { reason }) => {
+                            return fail(anyhow!(
+                                "fleet {} shut down mid-run: {reason}",
+                                sc.who()
+                            ))
+                        }
+                        Ok(other) => {
+                            return fail(anyhow!(
+                                "fleet protocol error: expected the window-{j} upload from \
+                                 {}, got {}",
+                                sc.who(),
+                                other.name()
+                            ))
+                        }
+                        Err(e) => return fail(e),
+                    };
+                    if up.window != j {
+                        return fail(anyhow!(
+                            "fleet protocol error: {} uploaded window {}, learner is at \
+                             window {j}",
+                            sc.who(),
+                            up.window
+                        ));
+                    }
+                    uploads.push(up);
+                }
+
+                // Apply in connection order. Staged transitions land in the
+                // learner's staging set keyed by absolute stream id, so the
+                // one shared sync-point flush moves them into replay in
+                // stream order — upload arrival order is irrelevant.
+                for (sc, up) in conns.iter().zip(uploads) {
+                    if up.ctxs.len() != sc.n_slots {
+                        return fail(anyhow!(
+                            "fleet protocol error: {} uploaded {} context snapshots for \
+                             {} owned slots",
+                            sc.who(),
+                            up.ctxs.len(),
+                            sc.n_slots
+                        ));
+                    }
+                    shared.completed.fetch_add(up.steps, Ordering::SeqCst);
+                    shared.episodes.fetch_add(up.episodes, Ordering::SeqCst);
+                    shared.returns.lock().unwrap().extend(up.returns.iter().copied());
+                    for (i, blob) in up.ctxs.iter().enumerate() {
+                        let slot = sc.first_slot + i;
+                        let mut r = ByteReader::new(blob);
+                        ctxs[slot]
+                            .load_state(&mut r)
+                            .and_then(|_| r.finish())
+                            .with_context(|| {
+                                format!("applying the context snapshot of slot {slot} from {}", sc.who())
+                            })?;
+                    }
+                    for (stream, items) in up.streams {
+                        staging.extend(stream as usize, items);
+                    }
+                }
+                let done = shared.completed.load(Ordering::SeqCst);
+                if done != window_target {
+                    return fail(anyhow!(
+                        "fleet protocol error: samplers covered {done} of {window_target} \
+                         steps for window {j} (a slot uploaded too few or too many blocks)"
+                    ));
+                }
+
+                // Barrier: wait out the trainer's full window quota,
+                // heartbeating so samplers (already blocked awaiting the
+                // next broadcast) don't time out on a long barrier.
+                winctrl.wait_caught_up_while(&shared, || beat(conns));
+                if shared.aborted() {
+                    return fail(anyhow!("trainer failed"));
+                }
+
+                // The theta_minus now retiring acted window j under tag j;
+                // relaxed samplers may still need it for up to `lag` more
+                // windows.
+                let old_theta = if lag > 0 {
+                    match qnet.theta_minus_host() {
+                        Ok(theta) => Some(theta),
+                        Err(e) => return fail(e),
+                    }
+                } else {
+                    None
+                };
+                shared.sync_point(&staging);
+                source.barrier_update();
+                seg.windows_flushed += 1;
+                if let Some(ev) = evaluator.as_mut() {
+                    while done >= *next_eval {
+                        if let Ok(point) = ev.run(&qnet, done) {
+                            evals.push(point);
+                        }
+                        *next_eval = next_eval.saturating_add(eval_period);
+                    }
+                }
+                if let Some(theta) = old_theta {
+                    fleet_theta_ring.push((j, theta));
+                    let keep_from = (j + 1).saturating_sub(lag);
+                    fleet_theta_ring.retain(|(tag, _)| *tag >= keep_from);
+                }
+                // Broadcast the fresh version unconditionally — samplers
+                // keep acting across learner checkpoint pauses, and a
+                // sampler past the step budget just skips it while waiting
+                // for shutdown.
+                let theta = match qnet.theta_minus_host() {
+                    Ok(theta) => theta,
+                    Err(e) => return fail(e),
+                };
+                for sc in conns.iter() {
+                    sc.queue(Msg::ParamBroadcast { tag: j + 1, theta_minus: theta.clone() });
+                }
+
+                if window_end >= until {
+                    shared.stop.store(true, Ordering::SeqCst);
+                    winctrl.notify_all();
+                    break;
+                }
+                window_end = (window_end + c).min(until);
+                winctrl.dispatch();
+                source.grant(bpw);
+            }
+            Ok(())
+        });
+        seg.draw_rng = source.sampler_state();
+        let worker_error = shared.error.lock().unwrap().take();
+
+        let completed = shared.completed.load(Ordering::SeqCst);
+        let trains_done = shared.trains_done.load(Ordering::SeqCst);
+        let episodes = shared.episodes.load(Ordering::SeqCst);
+        let new_losses = std::mem::take(&mut *shared.losses.lock().unwrap());
+        let new_returns = std::mem::take(&mut *shared.returns.lock().unwrap());
+        drop(shared);
+        let m = self.machine.as_mut().unwrap();
+        m.windows_flushed = seg.windows_flushed;
+        m.draw_rng = seg.draw_rng;
+        m.completed = completed;
+        m.trains_done = trains_done;
+        m.episodes = episodes;
+        m.losses.extend(new_losses);
+        m.returns.extend(new_returns);
+        result?;
+        if let Some(err) = worker_error {
+            bail!(err);
+        }
+        Ok(())
+    }
+}
+
+/// Send every sampler a shutdown, then drain and discard whatever they
+/// were mid-writing (a relaxed sampler may be blocked in an upload write;
+/// consuming it unblocks the write so the sampler reaches the shutdown
+/// frame), until each connection closes cleanly or goes silent.
+fn shutdown_conns(conns: Vec<SamplerConn>, reason: &str) {
+    for sc in &conns {
+        sc.queue(Msg::Shutdown { reason: reason.to_string() });
+    }
+    for mut sc in conns {
+        let _ = sc.conn.set_read_timeout(Some(Duration::from_millis(2_000)));
+        while Msg::recv(&mut sc.conn).is_ok() {}
+        drop(sc.tx); // close the channel so the writer thread exits
+        if let Some(writer) = sc.writer.take() {
+            let _ = writer.join();
+        }
+    }
+}
+
+/// The sampler process body (`tempo-dqn fleet-sampler --connect ADDR`):
+/// connect, handshake, then act the assigned slots' blocks window by
+/// window under the wire-fed theta_minus until the learner shuts us down.
+pub fn run_fleet_sampler(
+    cfg: &ExperimentConfig,
+    connect: &str,
+    artifact_dir: &Path,
+) -> Result<()> {
+    validate_fleet_geometry(cfg)?;
+    let timeout = Duration::from_millis(cfg.fleet_timeout_ms);
+    let mut conn = Conn::connect(&Endpoint::parse(connect)?, timeout)?;
+    conn.set_read_timeout(Some(timeout))?;
+    Msg::Hello { fingerprint: fingerprint_text(cfg) }.send(&mut conn)?;
+    let (first_slot, n_slots, start, total, lag, init_params, ctx_blobs) = loop {
+        match Msg::recv(&mut conn).context("fleet handshake")? {
+            Msg::HelloAck { first_slot, n_slots, start, total, lag, params, ctxs } => {
+                break (first_slot as usize, n_slots as usize, start, total, lag, params, ctxs)
+            }
+            Msg::Heartbeat => continue,
+            Msg::Shutdown { reason } => {
+                bail!("fleet learner refused this sampler: {reason}")
+            }
+            other => bail!("fleet handshake: expected hello-ack, learner sent {}", other.name()),
+        }
+    };
+    if n_slots == 0 || first_slot + n_slots > cfg.threads {
+        bail!(
+            "fleet handshake: learner assigned slots {first_slot}..{} but this config has \
+             W={} sampler slots",
+            first_slot + n_slots,
+            cfg.threads
+        );
+    }
+    if ctx_blobs.len() != n_slots {
+        bail!(
+            "fleet handshake: learner sent {} context snapshots for {n_slots} assigned slots",
+            ctx_blobs.len()
+        );
+    }
+
+    // The acting stack: a single-lane device (samplers never train), the
+    // Q-net artifacts, and one SamplerCtx per assigned slot restored to
+    // the learner's snapshot. The replay memory is a minimum-size stub —
+    // acting never touches it (transitions stage for upload) — but the
+    // Shared scaffolding wants one.
+    let manifest = Manifest::load_or_builtin(artifact_dir)?;
+    let device = std::sync::Arc::new(Device::cpu_with_opts(1, cfg.kernel_mode)?);
+    let qnet = QNet::load(device, &manifest, &cfg.net, cfg.double, cfg.minibatch)
+        .context("loading Q-network artifacts")?;
+    let replay = RwLock::new(ReplayMemory::new(
+        cfg.streams() * (STACK + 2),
+        cfg.streams(),
+        NET_FRAME,
+        STACK,
+        cfg.seed,
+    )?);
+    let timers = PhaseTimers::new();
+    let shared = Shared::resumed(
+        cfg,
+        &qnet,
+        &replay,
+        &timers,
+        None,
+        ResumePoint { completed: start, trains_done: 0, episodes: 0 },
+    );
+    let staging = StagingSet::new(cfg.streams());
+    let mut ctxs = Vec::with_capacity(n_slots);
+    for (i, blob) in ctx_blobs.iter().enumerate() {
+        let slot = first_slot + i;
+        let mut ctx = SamplerCtx::new(cfg, slot)?;
+        let mut r = ByteReader::new(blob);
+        ctx.load_state(&mut r)
+            .and_then(|_| r.finish())
+            .with_context(|| format!("restoring the learner's snapshot of slot {slot}"))?;
+        ctxs.push(ctx);
+    }
+    let mut params: std::collections::BTreeMap<u64, Vec<f32>> = init_params.into_iter().collect();
+
+    let w = cfg.threads as u64;
+    let b = cfg.envs_per_thread;
+    let bs = b as u64;
+    let c = cfg.target_update_period;
+    let beat_every = timeout / 4;
+    let mut last_beat = Instant::now();
+    println!(
+        "fleet sampler: slots {first_slot}..{} of W={}, resuming at step {start}/{total}, lag {lag}",
+        first_slot + n_slots,
+        cfg.threads
+    );
+
+    let mut j = start / c; // `start` is window-aligned (fleet geometry)
+    loop {
+        let window_start = j * c;
+        if window_start >= total {
+            break;
+        }
+        let window_end = ((j + 1) * c).min(total);
+        // Acquire the theta_minus version window j acts with. Replicated
+        // mode (lag 0) blocks here for the freshest broadcast — this wait
+        // IS the window barrier; relaxed mode already holds the lagged
+        // version and runs ahead.
+        let needed = j.saturating_sub(lag);
+        while !params.contains_key(&needed) {
+            match Msg::recv(&mut conn)
+                .with_context(|| format!("awaiting theta_minus version {needed}"))?
+            {
+                Msg::ParamBroadcast { tag, theta_minus } => {
+                    params.insert(tag, theta_minus);
+                }
+                Msg::Heartbeat => continue,
+                Msg::Shutdown { reason } => {
+                    println!("fleet sampler: learner shutdown: {reason}");
+                    return Ok(());
+                }
+                other => bail!(
+                    "fleet protocol error: expected a param broadcast, learner sent {}",
+                    other.name()
+                ),
+            }
+        }
+        params.retain(|tag, _| *tag >= needed);
+        qnet.set_theta_minus(&params[&needed])?;
+
+        // Act every block of this window the static schedule assigns to
+        // our slots, in ascending block order (each slot's streams see
+        // their blocks in sequence, exactly as its thread would).
+        let steps0 = shared.completed.load(Ordering::SeqCst);
+        let episodes0 = shared.episodes.load(Ordering::SeqCst);
+        for block in (window_start / bs)..window_end.div_ceil(bs) {
+            let slot = (block % w) as usize;
+            if slot < first_slot || slot >= first_slot + n_slots {
+                continue;
+            }
+            let ctx = &mut ctxs[slot - first_slot];
+            let t = block * bs;
+            let width = (bs.min(total - t)) as usize;
+            ctx.refresh_states();
+            let q = qnet.infer(Policy::ThetaMinus, &ctx.states_buf, b)?;
+            ctx.act_block(&shared, t, &q, width, |stream, frame, a, r, done, start| {
+                staging.push(stream, frame, a, r, done, start);
+            });
+            if last_beat.elapsed() >= beat_every {
+                Msg::Heartbeat.send(&mut conn)?;
+                last_beat = Instant::now();
+            }
+        }
+
+        let steps = shared.completed.load(Ordering::SeqCst) - steps0;
+        let episodes = shared.episodes.load(Ordering::SeqCst) - episodes0;
+        let returns = std::mem::take(&mut *shared.returns.lock().unwrap());
+        let ctx_snaps = ctxs
+            .iter()
+            .map(|ctx| {
+                let mut w = ByteWriter::new();
+                ctx.save_state(&mut w);
+                w.into_bytes()
+            })
+            .collect();
+        let streams = staging
+            .drain_streams()
+            .into_iter()
+            .map(|(stream, items)| (stream as u64, items))
+            .collect();
+        Msg::Upload(WindowUpload {
+            window: j,
+            steps,
+            episodes,
+            returns,
+            ctxs: ctx_snaps,
+            streams,
+        })
+        .send(&mut conn)?;
+        last_beat = Instant::now();
+        j += 1;
+    }
+
+    // Past the step budget: wait for the learner's shutdown (at most the
+    // tail broadcasts and heartbeats precede it).
+    loop {
+        match Msg::recv(&mut conn).context("awaiting fleet shutdown")? {
+            Msg::Shutdown { reason } => {
+                println!("fleet sampler: learner shutdown: {reason}");
+                return Ok(());
+            }
+            _ => continue,
+        }
+    }
+}
+
+/// Spawn `n` local `fleet-sampler` worker processes of `bin` against
+/// `connect`, handing each the full config as CLI arguments (see
+/// [`ExperimentConfig::to_cli_args`]). The `fleet` convenience subcommand
+/// and the campaign runner both use this.
+pub fn spawn_local_samplers(
+    bin: &Path,
+    cfg: &ExperimentConfig,
+    connect: &str,
+    n: usize,
+) -> Result<Vec<std::process::Child>> {
+    let mut children = Vec::with_capacity(n);
+    for i in 0..n {
+        let child = std::process::Command::new(bin)
+            .arg("fleet-sampler")
+            .args(cfg.to_cli_args())
+            .arg(format!("--connect={connect}"))
+            .spawn()
+            .with_context(|| format!("spawning fleet sampler {i} ({})", bin.display()))?;
+        children.push(child);
+    }
+    Ok(children)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+        cfg.game = "seeker".into();
+        cfg.mode = ExecMode::Concurrent;
+        cfg.threads = 2;
+        cfg.envs_per_thread = 2;
+        cfg.total_steps = 400;
+        cfg.target_update_period = 100;
+        cfg
+    }
+
+    #[test]
+    fn geometry_validation_names_every_refusal() {
+        validate_fleet_geometry(&fleet_cfg()).unwrap();
+
+        let mut bad = fleet_cfg();
+        bad.mode = ExecMode::Standard;
+        let err = validate_fleet_geometry(&bad).unwrap_err().to_string();
+        assert!(err.contains("Concurrent Training"), "{err}");
+
+        bad = fleet_cfg();
+        bad.mode = ExecMode::Both;
+        let err = validate_fleet_geometry(&bad).unwrap_err().to_string();
+        assert!(err.contains("Synchronized Execution"), "{err}");
+
+        bad = fleet_cfg();
+        bad.target_update_period = 110; // not a multiple of W*B = 4
+        bad.train_period = 11;
+        let err = validate_fleet_geometry(&bad).unwrap_err().to_string();
+        assert!(err.contains("W*B"), "{err}");
+
+        bad = fleet_cfg();
+        bad.total_steps = 450; // not a multiple of C = 100
+        let err = validate_fleet_geometry(&bad).unwrap_err().to_string();
+        assert!(err.contains("window barrier"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_diff_names_keys_both_ways() {
+        let a = fleet_cfg();
+        let mut b = a.clone();
+        assert!(diff_fingerprints(
+            &crate::coordinator::config_fingerprint(&a),
+            &crate::coordinator::config_fingerprint(&b)
+        )
+        .is_empty());
+
+        b.seed = 999;
+        b.fleet_lag = 2;
+        let diffs = diff_fingerprints(
+            &crate::coordinator::config_fingerprint(&a),
+            &crate::coordinator::config_fingerprint(&b),
+        );
+        assert_eq!(diffs.len(), 2, "{diffs:?}");
+        assert!(diffs.iter().any(|d| d.starts_with("fleet_lag:")), "{diffs:?}");
+        assert!(diffs.iter().any(|d| d.starts_with("seed:")), "{diffs:?}");
+
+        // Topology and liveness knobs must NOT appear in the fingerprint.
+        let mut c = a.clone();
+        c.fleet_samplers = 4;
+        c.fleet_timeout_ms = 123;
+        assert!(diff_fingerprints(
+            &crate::coordinator::config_fingerprint(&a),
+            &crate::coordinator::config_fingerprint(&c)
+        )
+        .is_empty());
+    }
+}

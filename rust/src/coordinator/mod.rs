@@ -22,6 +22,7 @@
 //! (rust/DESIGN.md §10, pinned by tests/checkpoint_resume.rs).
 
 pub mod async_exec;
+pub mod fleet;
 pub mod shared;
 pub mod sync_exec;
 
@@ -44,6 +45,7 @@ use crate::replay::{IndexSampler, ReplayMemory};
 use crate::runtime::{BusSnapshot, Device, Manifest, QNet, QNetSnapshot};
 use crate::util::json::{obj, Json};
 
+pub use fleet::{run_fleet_sampler, spawn_local_samplers, validate_fleet_geometry, FleetOpts};
 pub use shared::{
     strategy_plan, ResumePoint, SamplerCtx, SegmentState, Shared, TrainInterlock, WindowCtrl,
     WindowGate,
@@ -97,6 +99,13 @@ struct Machine {
     evals: Vec<EvalPoint>,
     next_eval: u64,
     evaluator: Option<Evaluator>,
+    /// Relaxed-fleet theta_minus history: `(version tag, parameters)` for
+    /// every tag an acting window may still legally request under
+    /// `fleet_lag` staleness (rust/DESIGN.md §14). Empty whenever
+    /// `fleet_lag == 0` — replicated fleets and single-process runs carry
+    /// no ring, so their digests and checkpoints are byte-identical to
+    /// the pre-fleet machine.
+    fleet_theta_ring: Vec<(u64, Vec<f32>)>,
 }
 
 impl Machine {
@@ -341,6 +350,7 @@ impl Coordinator {
             evals: Vec::new(),
             next_eval: cfg.eval_period,
             evaluator,
+            fleet_theta_ring: Vec::new(),
         })
     }
 
@@ -512,36 +522,7 @@ impl Coordinator {
     /// are bit-exact knobs, rust/DESIGN.md §9. total_steps is excluded so
     /// a resumed run may extend or shorten the budget.)
     fn config_fingerprint(&self) -> Json {
-        let c = &self.cfg;
-        obj(vec![
-            ("game", Json::Str(c.game.clone())),
-            ("mode", Json::Str(c.mode.name().to_string())),
-            ("threads", Json::Num(c.threads as f64)),
-            ("envs_per_thread", Json::Num(c.envs_per_thread as f64)),
-            ("seed", Json::Str(format!("{:016x}", c.seed))),
-            ("net", Json::Str(c.net.clone())),
-            ("double", Json::Bool(c.double)),
-            ("minibatch", Json::Num(c.minibatch as f64)),
-            ("replay_capacity", Json::Num(c.replay_capacity as f64)),
-            ("target_update_period", Json::Num(c.target_update_period as f64)),
-            ("train_period", Json::Num(c.train_period as f64)),
-            ("gamma", Json::Str(format!("{:016x}", c.gamma.to_bits()))),
-            ("prepopulate", Json::Num(c.prepopulate as f64)),
-            ("lr", Json::Str(format!("{:016x}", c.lr.to_bits()))),
-            ("eps_start", Json::Str(format!("{:016x}", c.eps.start.to_bits()))),
-            ("eps_end", Json::Str(format!("{:016x}", c.eps.end.to_bits()))),
-            ("eps_decay_steps", Json::Num(c.eps.decay_steps as f64)),
-            ("eval_period", Json::Str(format!("{:016x}", c.eval_period))),
-            ("eval_episodes", Json::Num(c.eval_episodes as f64)),
-            ("eval_eps", Json::Str(format!("{:016x}", c.eval_eps.to_bits()))),
-            ("eval_seed", Json::Str(format!("{:016x}", c.eval_seed))),
-            ("replay_strategy", Json::Str(c.replay_strategy.name().to_string())),
-            ("per_alpha", Json::Str(format!("{:016x}", c.per_alpha.to_bits()))),
-            ("per_beta0", Json::Str(format!("{:016x}", c.per_beta0.to_bits()))),
-            ("per_beta_anneal", Json::Num(c.per_beta_anneal as f64)),
-            ("n_step", Json::Num(c.n_step as f64)),
-            ("kernel_mode", Json::Str(c.kernel_mode.name().to_string())),
-        ])
+        config_fingerprint(&self.cfg)
     }
 
     fn check_compat(&self, meta: &Json) -> Result<()> {
@@ -569,6 +550,9 @@ impl Coordinator {
             // produced by the deterministic tier, so resuming is bit-exact
             // exactly when this run is deterministic too.
             ("kernel_mode", Json::Str(dflt.kernel_mode.name().to_string())),
+            // Pre-§14 checkpoints predate the fleet layer; they carry no
+            // theta_minus ring, which is exactly a fleet_lag = 0 machine.
+            ("fleet_lag", Json::Num(dflt.fleet_lag as f64)),
         ];
         let mut mismatches = Vec::new();
         for (key, want_v) in want {
@@ -643,6 +627,22 @@ impl Coordinator {
             wtr.add_raw("priorities", 1, w.into_bytes())?;
         }
 
+        if self.cfg.fleet_lag > 0 {
+            // The relaxed-fleet theta_minus ring (rust/DESIGN.md §14): a
+            // resumed learner must re-offer every parameter version a
+            // sampler's first window may still act with. Conditional on the
+            // knob (like the "priorities" section), so lag-0 checkpoints
+            // stay byte-identical to pre-fleet ones.
+            let mut w = ByteWriter::new();
+            w.put_u64(self.cfg.fleet_lag);
+            w.put_usize(m.fleet_theta_ring.len());
+            for (tag, theta) in &m.fleet_theta_ring {
+                w.put_u64(*tag);
+                w.put_f32_slice(theta);
+            }
+            wtr.add_raw("fleet", 1, w.into_bytes())?;
+        }
+
         if let Some(ev) = &m.evaluator {
             wtr.add(ev)?;
         }
@@ -698,6 +698,25 @@ impl Coordinator {
             }
             m.replay.write().unwrap().load_priorities(&mut r)?;
             r.finish().context("restoring checkpoint section \"priorities\"")?;
+        }
+
+        if self.cfg.fleet_lag > 0 {
+            // Fingerprint equality above guarantees the checkpoint was
+            // written under the same fleet_lag, so the section is present
+            // exactly when the knob says it is.
+            let mut r = rdr.read_section("fleet", 1)?;
+            let lag = r.u64()?;
+            if lag != self.cfg.fleet_lag {
+                bail!(
+                    "checkpoint fleet section was written under fleet_lag {lag}, \
+                     this run uses {}",
+                    self.cfg.fleet_lag
+                );
+            }
+            let n = r.usize()?;
+            m.fleet_theta_ring =
+                (0..n).map(|_| Ok((r.u64()?, r.f32_vec()?))).collect::<Result<_>>()?;
+            r.finish().context("restoring checkpoint section \"fleet\"")?;
         }
 
         if let Some(ev) = m.evaluator.as_mut() {
@@ -763,8 +782,56 @@ impl Coordinator {
             w.put_f64(ev.mean_return);
             w.put_f64(ev.std_return);
         }
+        // Relaxed-fleet theta ring (empty — zero bytes — unless
+        // fleet_lag > 0, so every historical digest is unchanged).
+        for (tag, theta) in &m.fleet_theta_ring {
+            w.put_u64(*tag);
+            w.put_f32_slice(theta);
+        }
         Ok(crate::ckpt::fnv1a(&w.into_bytes()))
     }
+}
+
+/// The trajectory-identity fingerprint of a configuration: every field two
+/// machines must agree on to walk the same trajectory bit-for-bit. Used in
+/// two places with one key list so they cannot drift: checkpoint resume
+/// (`Coordinator::check_compat`) and the fleet handshake (a sampler's
+/// `hello` carries this object as text; the learner refuses mismatches
+/// field-by-field, by name — rust/DESIGN.md §14). `fleet_samplers` and
+/// `fleet_timeout_ms` are deliberately absent (topology and wall-clock
+/// knobs — a replicated fleet run IS the single-process trajectory);
+/// `fleet_lag` is present because staleness changes what is learned.
+pub(crate) fn config_fingerprint(c: &ExperimentConfig) -> Json {
+    obj(vec![
+        ("game", Json::Str(c.game.clone())),
+        ("mode", Json::Str(c.mode.name().to_string())),
+        ("threads", Json::Num(c.threads as f64)),
+        ("envs_per_thread", Json::Num(c.envs_per_thread as f64)),
+        ("seed", Json::Str(format!("{:016x}", c.seed))),
+        ("net", Json::Str(c.net.clone())),
+        ("double", Json::Bool(c.double)),
+        ("minibatch", Json::Num(c.minibatch as f64)),
+        ("replay_capacity", Json::Num(c.replay_capacity as f64)),
+        ("target_update_period", Json::Num(c.target_update_period as f64)),
+        ("train_period", Json::Num(c.train_period as f64)),
+        ("gamma", Json::Str(format!("{:016x}", c.gamma.to_bits()))),
+        ("prepopulate", Json::Num(c.prepopulate as f64)),
+        ("lr", Json::Str(format!("{:016x}", c.lr.to_bits()))),
+        ("eps_start", Json::Str(format!("{:016x}", c.eps.start.to_bits()))),
+        ("eps_end", Json::Str(format!("{:016x}", c.eps.end.to_bits()))),
+        ("eps_decay_steps", Json::Num(c.eps.decay_steps as f64)),
+        ("eval_period", Json::Str(format!("{:016x}", c.eval_period))),
+        ("eval_episodes", Json::Num(c.eval_episodes as f64)),
+        ("eval_eps", Json::Str(format!("{:016x}", c.eval_eps.to_bits()))),
+        ("eval_seed", Json::Str(format!("{:016x}", c.eval_seed))),
+        ("replay_strategy", Json::Str(c.replay_strategy.name().to_string())),
+        ("per_alpha", Json::Str(format!("{:016x}", c.per_alpha.to_bits()))),
+        ("per_beta0", Json::Str(format!("{:016x}", c.per_beta0.to_bits()))),
+        ("per_beta_anneal", Json::Num(c.per_beta_anneal as f64)),
+        ("n_step", Json::Num(c.n_step as f64)),
+        ("kernel_mode", Json::Str(c.kernel_mode.name().to_string())),
+        ("fleet_lag", Json::Num(c.fleet_lag as f64)),
+    ])
 }
 
 #[cfg(test)]

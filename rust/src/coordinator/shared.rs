@@ -64,9 +64,6 @@ pub struct Shared<'a> {
     pub replay: &'a RwLock<ReplayMemory>,
     pub timers: &'a PhaseTimers,
     pub gantt: Option<&'a GanttTrace>,
-    /// Steps claimed by samplers (monotone ticket counter; async drivers
-    /// claim B at a time).
-    pub claimed: AtomicU64,
     /// Steps fully executed.
     pub completed: AtomicU64,
     pub stop: AtomicBool,
@@ -90,9 +87,9 @@ impl<'a> Shared<'a> {
     }
 
     /// [`Shared::new`] with the monotone progress counters pre-loaded from
-    /// a checkpoint (or a previous segment of the same run). `claimed`
-    /// restarts at `completed`: any tickets a prior segment claimed but
-    /// never executed were forfeited at its quiesce point.
+    /// a checkpoint (or a previous segment of the same run). Each driver
+    /// derives its block schedule from `completed` (absolute steps), so no
+    /// other sampler position survives a segment boundary.
     pub fn resumed(
         cfg: &'a ExperimentConfig,
         qnet: &'a QNet,
@@ -107,7 +104,6 @@ impl<'a> Shared<'a> {
             replay,
             timers,
             gantt,
-            claimed: AtomicU64::new(at.completed),
             completed: AtomicU64::new(at.completed),
             stop: AtomicBool::new(false),
             trains_done: AtomicU64::new(at.trains_done),
@@ -358,11 +354,23 @@ impl WindowCtrl {
 
     /// Main-side: spin-wait until the trainer caught up (or the run stops).
     pub fn wait_caught_up(&self, shared: &Shared<'_>) {
+        self.wait_caught_up_while(shared, || {});
+    }
+
+    /// [`WindowCtrl::wait_caught_up`] with a periodic callback (~1 ms
+    /// cadence) while waiting — the fleet learner uses it to keep
+    /// heartbeats flowing to its samplers through a long trainer barrier.
+    pub fn wait_caught_up_while(&self, shared: &Shared<'_>, mut tick: impl FnMut()) {
+        let mut spins = 0u32;
         while !self.caught_up() {
             if shared.should_stop() {
                 break;
             }
             std::thread::sleep(std::time::Duration::from_micros(100));
+            spins += 1;
+            if spins % 10 == 0 {
+                tick();
+            }
         }
     }
 

@@ -51,6 +51,12 @@ pub struct CostModel {
     pub tree_ms: f64,
     /// Target sync + staging flush at a window barrier.
     pub sync_ms: f64,
+    /// Per-sampler-process fleet wire cost at a window barrier
+    /// (rust/DESIGN.md §14): draining one process's window upload plus its
+    /// share of the theta_minus broadcast. The barrier pays
+    /// `net_ms * fleet_procs`; zero whenever the run is single-process
+    /// (`SimRun::fleet_procs == 0`).
+    pub net_ms: f64,
     /// Physical CPU lanes usable by env simulation.
     pub cores: usize,
     /// Bus-contention coefficient: when q callers contend for the device,
@@ -123,6 +129,10 @@ impl CostModel {
             sample_ms: 0.0,
             tree_ms: 0.0,
             sync_ms: 2.0,
+            // The paper's testbed is one process on one box — no wire.
+            // Zero keeps Tables 1-3 pinned regardless of `fleet_procs`
+            // (structural no-op, like the learner knobs above).
+            net_ms: 0.0,
             cores: 6,
             contention: 0.25,
             batch_host_discount: 0.65,
@@ -159,6 +169,10 @@ impl CostModel {
             sample_ms: 0.0,
             tree_ms: 0.0,
             sync_ms: 2.0 * train_ms.max(1.0),
+            // Calibrate from `cargo bench --bench fleet_throughput`
+            // (param_broadcast + upload rows) before trusting fleet
+            // projections.
+            net_ms: 0.0,
             cores,
             contention: 0.55,
             batch_host_discount: 1.0,

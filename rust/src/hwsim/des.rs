@@ -147,6 +147,7 @@ mod tests {
             sample_ms: 0.0,
             tree_ms: 0.0,
             sync_ms: 1.0,
+            net_ms: 0.0,
             cores: 2,
             contention: 0.0,
             batch_host_discount: 1.0,

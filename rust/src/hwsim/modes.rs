@@ -34,6 +34,12 @@ pub struct SimRun {
     /// (`tree_ms`) — split out of `sample_ms` because prefetch cannot
     /// hide it (priority updates run at the window barrier).
     pub prioritized: bool,
+    /// Sampler fleet processes (rust/DESIGN.md §14): each window barrier
+    /// additionally pays `net_ms * fleet_procs` for the upload drain and
+    /// parameter broadcast. 0 = single-process (no wire). Fleet execution
+    /// is concurrent-mode-only, so the synchronized simulators ignore it —
+    /// exactly like the real coordinator, which refuses the combination.
+    pub fleet_procs: usize,
 }
 
 impl Default for SimRun {
@@ -46,6 +52,7 @@ impl Default for SimRun {
             learner_threads: 1,
             prefetch: false,
             prioritized: false,
+            fleet_procs: 0,
         }
     }
 }
@@ -75,6 +82,10 @@ fn sim_async(model: CostModel, run: SimRun, concurrent: bool) -> SimStats {
     // Windowed trainer: sharded learner, prefetch hides assembly (never
     // the tree ops).
     let train_cost = model.train_step_ms(run.learner_threads, run.prefetch, run.prioritized);
+    // Fleet wire cost rides on every window barrier: the learner drains
+    // one upload per sampler process and broadcasts theta_minus before
+    // the next window opens. Zero for single-process runs.
+    let net_cost = model.net_ms * run.fleet_procs as f64;
 
     // Ready-queue of entities: (ready_time, id). Samplers are 0..w.
     let mut ready: BinaryHeap<Reverse<(F, usize)>> = BinaryHeap::new();
@@ -108,7 +119,7 @@ fn sim_async(model: CostModel, run: SimRun, concurrent: bool) -> SimStats {
                 // The trainer may be the last entity to park: fire the
                 // window barrier here as well.
                 if parked.len() == w && steps < total {
-                    let barrier = m.sync(parked_time.max(m.gpu_free_at()));
+                    let barrier = m.sync(parked_time.max(m.gpu_free_at())) + net_cost;
                     for pid in parked.drain(..) {
                         ready.push(Reverse((F(barrier), pid)));
                     }
@@ -148,7 +159,7 @@ fn sim_async(model: CostModel, run: SimRun, concurrent: bool) -> SimStats {
             // Window completes when every sampler is parked and the
             // trainer has drained its quota.
             if parked.len() == w && trainer_parked {
-                let barrier = m.sync(parked_time.max(m.gpu_free_at()));
+                let barrier = m.sync(parked_time.max(m.gpu_free_at())) + net_cost;
                 for pid in parked.drain(..) {
                     ready.push(Reverse((F(barrier), pid)));
                 }
@@ -430,6 +441,54 @@ mod tests {
             ExecMode::Both,
         );
         assert_eq!(a.makespan_ms, b.makespan_ms);
+    }
+
+    #[test]
+    fn fleet_procs_are_neutral_on_the_paper_calibration() {
+        // gtx1080_i7 models the paper's one-process testbed (net_ms = 0),
+        // so the fleet knob is a structural no-op and the Table 1-3
+        // anchors stay pinned exactly.
+        let m = CostModel::gtx1080_i7();
+        for w in [1usize, 4, 8] {
+            let a = simulate(m, run(w), ExecMode::Concurrent);
+            let b = simulate(m, SimRun { fleet_procs: 4, ..run(w) }, ExecMode::Concurrent);
+            assert_eq!(a.makespan_ms, b.makespan_ms, "W={w}");
+            assert_eq!(a.env_steps, b.env_steps, "W={w}");
+            assert_eq!(a.trains, b.trains, "W={w}");
+        }
+        let std1 = hours(ExecMode::Standard, 1);
+        let conc1 = hours(ExecMode::Concurrent, 1);
+        let both8 = hours(ExecMode::Both, 8);
+        assert!((std1 - 25.08).abs() < 2.0, "Table 1 anchor moved: {std1:.2} h");
+        assert!((conc1 - 20.64).abs() < 2.5, "Table 2 anchor moved: {conc1:.2} h");
+        assert!(
+            (2.3..3.3).contains(&(std1 / both8)),
+            "Table 3 headline moved: {:.2}x",
+            std1 / both8
+        );
+    }
+
+    #[test]
+    fn fleet_wire_cost_lengthens_barriers_when_modeled() {
+        // A calibration with a real wire cost: every window barrier pays
+        // net_ms per sampler process, so makespan grows monotonically with
+        // the process count while the work accounting stays identical.
+        let mut m = CostModel::gtx1080_i7();
+        m.net_ms = 1.5;
+        let solo = simulate(m, run(4), ExecMode::Concurrent);
+        let two = simulate(m, SimRun { fleet_procs: 2, ..run(4) }, ExecMode::Concurrent);
+        let four = simulate(m, SimRun { fleet_procs: 4, ..run(4) }, ExecMode::Concurrent);
+        assert!(
+            solo.makespan_ms < two.makespan_ms && two.makespan_ms < four.makespan_ms,
+            "wire cost must lengthen the schedule: {} / {} / {}",
+            solo.makespan_ms,
+            two.makespan_ms,
+            four.makespan_ms
+        );
+        assert_eq!(solo.env_steps, four.env_steps);
+        assert_eq!(solo.trains, four.trains);
+        // 19 inter-window barriers x 1.5 ms x 4 procs bounds the damage.
+        assert!(four.makespan_ms - solo.makespan_ms <= 19.0 * 1.5 * 4.0 + 1e-6);
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub mod eval;
 pub mod hwsim;
 pub mod env;
 pub mod metrics;
+pub mod net;
 pub mod replay;
 pub mod report;
 pub mod runtime;

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   train      run one training experiment (mode/threads/game/net via flags)
+//!   fleet      spawn N local sampler processes + host the learner (one box)
+//!   fleet-learner  host the training machine for a sampler fleet (--bind)
+//!   fleet-sampler  run sampler slots against a remote learner (--connect)
 //!   run-suite  execute a TOML-declared multi-game campaign with checkpoints
 //!   speedtest  regenerate Tables 1-3 (DES by default; --real for scaled live runs)
 //!   suite      regenerate the Table 4 analog over the synthetic game suite
@@ -16,7 +19,7 @@ use anyhow::Result;
 
 use tempo_dqn::campaign::{summary_table, Campaign};
 use tempo_dqn::config::{ExecMode, ExperimentConfig};
-use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::coordinator::{run_fleet_sampler, spawn_local_samplers, Coordinator, FleetOpts};
 use tempo_dqn::env::GAMES;
 use tempo_dqn::eval::{AnchorKind, Evaluator};
 use tempo_dqn::hwsim::{simulate, CostModel, SimRun};
@@ -41,6 +44,16 @@ SUBCOMMANDS:
              --replay-strategy uniform|proportional
              --per-alpha X --per-beta0 X --per-beta-anneal N --n-step N
              --ckpt-dir DIR --ckpt-period N --resume DIR
+  fleet      (train options) --fleet-samplers N [--fleet-lag K]
+             [--fleet-timeout-ms MS] [--bind ADDR] [--resume DIR]
+             (spawns N local fleet-sampler processes against a private
+             unix socket, then hosts the learner; one-box convenience
+             wrapper over fleet-learner + fleet-sampler)
+  fleet-learner  (train options) --bind tcp:HOST:PORT|unix:PATH
+             --fleet-samplers N [--fleet-lag K] [--resume DIR]
+  fleet-sampler  (train options) --connect tcp:HOST:PORT|unix:PATH
+             (must be launched with the learner's exact experiment
+             configuration — the handshake refuses mismatches by name)
   run-suite  --campaign FILE (TOML campaign: legs, order, ckpt_dir; see
              rust/src/campaign.rs for the format)
   speedtest  --threads 1,2,4,8 --steps N [--real] [--gantt] [--game NAME]
@@ -85,6 +98,14 @@ Checkpointing (rust/DESIGN.md §10): --ckpt-dir enables periodic atomic
 checkpoints at quiesce points (every --ckpt-period steps, rounded up to a
 window boundary); --resume DIR reconstructs the exact machine from the
 newest checkpoint and continues the same trajectory to the bit.
+
+The fleet subcommands (rust/DESIGN.md §14) distribute the W sampler slots
+over --fleet-samplers processes speaking a checksummed wire protocol
+(mode concurrent only). --fleet-lag 0 (default) is the replicated tier:
+bit-identical state digest to the single-process run. --fleet-lag K >= 1
+is the relaxed tier: samplers act window j with the theta_minus broadcast
+K window barriers earlier — a deterministic, reproducible, but different
+trajectory.
 ";
 
 fn main() {
@@ -98,6 +119,9 @@ fn main() {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     let result = match sub.as_str() {
         "train" => cmd_train(&args),
+        "fleet" => cmd_fleet(&args),
+        "fleet-learner" => cmd_fleet_learner(&args),
+        "fleet-sampler" => cmd_fleet_sampler(&args),
         "run-suite" => cmd_run_suite(&args),
         "speedtest" => cmd_speedtest(&args),
         "suite" => cmd_suite(&args),
@@ -151,6 +175,13 @@ fn cmd_bench_compare(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::resolve(args)?;
+    if cfg.fleet_lag > 0 {
+        anyhow::bail!(
+            "--fleet-lag {} is a fleet-only knob: single-process training has no \
+             parameter transport to relax (use the fleet subcommands, or --fleet-lag 0)",
+            cfg.fleet_lag
+        );
+    }
     println!(
         "training: game={} net={} mode={} threads={} envs/thread={} ({} streams) steps={} seed={}",
         cfg.game,
@@ -199,6 +230,130 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The common tail of every learner-side run: result summary + the
+/// trajectory fingerprint (tests and the CI fleet smoke compare the
+/// digest line across fleet and single-process runs).
+fn report_learner_result(
+    coord: &Coordinator,
+    res: &tempo_dqn::coordinator::TrainResult,
+) -> Result<()> {
+    println!(
+        "done: {} steps in {:.1}s ({:.1} steps/s), {} episodes, {} trains, {} target syncs",
+        res.steps, res.wall_s, res.steps_per_sec, res.episodes, res.trains, res.target_syncs
+    );
+    for ev in &res.evals {
+        println!(
+            "eval @ {}: {:.1} ± {:.1} over {} episodes",
+            ev.step, ev.mean_return, ev.std_return, ev.episodes
+        );
+    }
+    println!("state digest: {:016x}", coord.state_digest()?);
+    Ok(())
+}
+
+fn cmd_fleet_learner(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::resolve(args)?;
+    let Some(bind) = args.str_opt("bind") else {
+        anyhow::bail!("fleet-learner needs --bind tcp:HOST:PORT or unix:PATH");
+    };
+    if cfg.fleet_samplers == 0 {
+        anyhow::bail!("fleet-learner needs --fleet-samplers N >= 1 (connections to accept)");
+    }
+    let opts = FleetOpts { bind: bind.to_string(), samplers: cfg.fleet_samplers };
+    println!(
+        "fleet learner: game={} mode={} W={} B={} steps={} seed={} samplers={} lag={}",
+        cfg.game,
+        cfg.mode.name(),
+        cfg.threads,
+        cfg.envs_per_thread,
+        cfg.total_steps,
+        cfg.seed,
+        opts.samplers,
+        cfg.fleet_lag
+    );
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir())?;
+    if let Some(dir) = args.str_opt("resume") {
+        let step = coord.resume_from(std::path::Path::new(dir))?;
+        println!("resumed from {dir} at step {step}");
+    }
+    let res = coord.run_fleet(&opts, None)?;
+    report_learner_result(&coord, &res)
+}
+
+fn cmd_fleet_sampler(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::resolve(args)?;
+    let Some(connect) = args.str_opt("connect") else {
+        anyhow::bail!("fleet-sampler needs --connect ADDR (the learner's --bind address)");
+    };
+    run_fleet_sampler(&cfg, connect, &default_artifact_dir())
+}
+
+/// One-box convenience: spawn `--fleet-samplers` local sampler worker
+/// processes of this very binary against a private endpoint, then host
+/// the learner. The workers retry-connect until the learner binds, so
+/// spawn order doesn't matter.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::resolve(args)?;
+    if cfg.fleet_samplers == 0 {
+        anyhow::bail!("fleet needs --fleet-samplers N >= 1 (local sampler processes to spawn)");
+    }
+    let samplers = cfg.fleet_samplers;
+    let bind = match args.str_opt("bind") {
+        Some(addr) => addr.to_string(),
+        None => default_fleet_bind()?,
+    };
+    println!(
+        "fleet: game={} mode={} W={} B={} steps={} seed={} samplers={} lag={} at {bind}",
+        cfg.game,
+        cfg.mode.name(),
+        cfg.threads,
+        cfg.envs_per_thread,
+        cfg.total_steps,
+        cfg.seed,
+        samplers,
+        cfg.fleet_lag
+    );
+    let bin = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("resolving our own binary for sampler spawns: {e}"))?;
+    let mut children = spawn_local_samplers(&bin, &cfg, &bind, samplers)?;
+    let mut coord = Coordinator::new(cfg, &default_artifact_dir())?;
+    let run = (|| -> Result<tempo_dqn::coordinator::TrainResult> {
+        if let Some(dir) = args.str_opt("resume") {
+            let step = coord.resume_from(std::path::Path::new(dir))?;
+            println!("resumed from {dir} at step {step}");
+        }
+        coord.run_fleet(&FleetOpts { bind: bind.clone(), samplers }, None)
+    })();
+    // Reap the workers: a clean run shut them down over the wire; on
+    // error they may be blocked (or still retrying the connect), so kill
+    // before waiting.
+    if run.is_err() {
+        for child in &mut children {
+            let _ = child.kill();
+        }
+    }
+    for child in &mut children {
+        let _ = child.wait();
+    }
+    report_learner_result(&coord, &run?)
+}
+
+/// A private per-process endpoint whose address is known before the
+/// learner binds it: a unix socket in a fresh temp directory (TCP
+/// loopback fallback where unix sockets don't exist).
+fn default_fleet_bind() -> Result<String> {
+    #[cfg(unix)]
+    {
+        let dir = std::env::temp_dir().join(format!("tempo-fleet-{}", std::process::id()));
+        std::fs::create_dir_all(&dir)?;
+        Ok(format!("unix:{}", dir.join("fleet.sock").display()))
+    }
+    #[cfg(not(unix))]
+    {
+        Ok(format!("tcp:127.0.0.1:{}", 40_000 + std::process::id() % 20_000))
+    }
+}
+
 fn cmd_run_suite(args: &Args) -> Result<()> {
     let Some(path) = args.str_opt("campaign") else {
         anyhow::bail!("run-suite needs --campaign FILE (TOML; see rust/src/campaign.rs)");
@@ -243,6 +398,7 @@ fn cmd_speedtest(args: &Args) -> Result<()> {
                 learner_threads,
                 prefetch: prefetch_batches > 0,
                 prioritized,
+                fleet_procs: 0,
             };
             let stats = simulate(model, run, mode);
             let hours = stats.makespan_ms * (50_000_000.0 / run.steps as f64) / 3_600_000.0;

@@ -1,0 +1,340 @@
+//! Fleet endpoints: `tcp:HOST:PORT` and `unix:PATH` behind one pair of
+//! enums. [`Listener`] is the learner's side, [`Conn`] is a connected
+//! byte stream (either side). `Conn` implements `Read + Write`, so the
+//! frame and message layers never know which transport they run on.
+//!
+//! Unix sockets are the default for same-machine fleets (`fleet
+//! --samplers N`): no port allocation, no firewall interaction, and the
+//! socket file lives in the run's artifact directory. TCP covers the
+//! multi-machine case; binding port 0 and reporting the actual address
+//! via [`Listener::local_addr_string`] lets tests and the local-fleet
+//! spawner avoid port races.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed fleet address. The scheme prefix is mandatory so a bare
+/// `host:port` typo cannot silently pick the wrong transport.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// `tcp:HOST:PORT` — e.g. `tcp:127.0.0.1:7400`, `tcp:0.0.0.0:0`.
+    Tcp(String),
+    /// `unix:PATH` — a filesystem socket path.
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    /// Parse `tcp:HOST:PORT` or `unix:PATH`; anything else is refused by
+    /// name with the accepted forms spelled out.
+    pub fn parse(addr: &str) -> Result<Endpoint> {
+        if let Some(rest) = addr.strip_prefix("tcp:") {
+            if !rest.contains(':') {
+                bail!("tcp endpoint \"{addr}\" is missing a port (expected tcp:HOST:PORT)");
+            }
+            Ok(Endpoint::Tcp(rest.to_string()))
+        } else if let Some(rest) = addr.strip_prefix("unix:") {
+            if rest.is_empty() {
+                bail!("unix endpoint \"{addr}\" is missing a path (expected unix:PATH)");
+            }
+            #[cfg(not(unix))]
+            bail!("unix endpoint \"{addr}\" is not supported on this platform; use tcp:HOST:PORT");
+            #[cfg(unix)]
+            Ok(Endpoint::Unix(PathBuf::from(rest)))
+        } else {
+            bail!(
+                "unrecognized fleet address \"{addr}\": expected tcp:HOST:PORT or unix:PATH"
+            );
+        }
+    }
+
+    /// Bind a listener at this endpoint (the learner side).
+    pub fn bind(&self) -> Result<Listener> {
+        match self {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr)
+                    .with_context(|| format!("binding fleet listener at tcp:{addr}"))?;
+                Ok(Listener::Tcp(l))
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                // A stale socket file from a crashed learner would make
+                // bind fail with AddrInUse; remove it first. A *live*
+                // learner is not protected against — the artifact dir is
+                // per-run, so two learners sharing one is already a
+                // configuration error.
+                if path.exists() {
+                    std::fs::remove_file(path).with_context(|| {
+                        format!("removing stale fleet socket {}", path.display())
+                    })?;
+                }
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding fleet listener at unix:{}", path.display()))?;
+                Ok(Listener::Unix(l, path.clone()))
+            }
+            #[cfg(not(unix))]
+            Endpoint::Unix(path) => {
+                bail!("unix endpoint {} is not supported on this platform", path.display())
+            }
+        }
+    }
+
+    /// Connect to this endpoint (the sampler side), retrying for up to
+    /// `timeout` so a sampler process spawned alongside the learner wins
+    /// the race against the listener coming up.
+    pub fn connect(&self, timeout: Duration) -> Result<Conn> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut backoff = Duration::from_millis(10);
+        loop {
+            let attempt = match self {
+                Endpoint::Tcp(addr) => TcpStream::connect(addr).map(Conn::Tcp).map_err(Into::into),
+                #[cfg(unix)]
+                Endpoint::Unix(path) => {
+                    UnixStream::connect(path).map(Conn::Unix).map_err(Into::into)
+                }
+                #[cfg(not(unix))]
+                Endpoint::Unix(path) => Err(anyhow::anyhow!(
+                    "unix endpoint {} is not supported on this platform",
+                    path.display()
+                )),
+            };
+            match attempt {
+                Ok(conn) => return Ok(conn),
+                Err(e) => {
+                    if std::time::Instant::now() + backoff >= deadline {
+                        return Err(e).with_context(|| {
+                            format!("connecting to fleet learner at {}", self.display())
+                        });
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(250));
+                }
+            }
+        }
+    }
+
+    /// The canonical string form (round-trips through [`Endpoint::parse`]).
+    pub fn display(&self) -> String {
+        match self {
+            Endpoint::Tcp(addr) => format!("tcp:{addr}"),
+            Endpoint::Unix(path) => format!("unix:{}", path.display()),
+        }
+    }
+}
+
+/// A bound fleet listener.
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Accept one sampler connection.
+    pub fn accept(&self) -> Result<Conn> {
+        match self {
+            Listener::Tcp(l) => {
+                let (stream, _) = l.accept().context("accepting fleet sampler connection")?;
+                stream.set_nodelay(true).ok();
+                Ok(Conn::Tcp(stream))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l, _) => {
+                let (stream, _) = l.accept().context("accepting fleet sampler connection")?;
+                Ok(Conn::Unix(stream))
+            }
+        }
+    }
+
+    /// The address samplers should connect to, in [`Endpoint::parse`]
+    /// form. For TCP this reports the *actual* bound address, so binding
+    /// port 0 yields a usable `tcp:IP:PORT`.
+    pub fn local_addr_string(&self) -> Result<String> {
+        match self {
+            Listener::Tcp(l) => {
+                let addr = l.local_addr().context("reading fleet listener address")?;
+                Ok(format!("tcp:{addr}"))
+            }
+            #[cfg(unix)]
+            Listener::Unix(_, path) => Ok(format!("unix:{}", path.display())),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, path) = self {
+            std::fs::remove_file(path).ok();
+        }
+    }
+}
+
+/// One connected fleet byte stream. The heartbeat clock is a plain
+/// socket read timeout ([`Conn::set_read_timeout`]); the frame layer
+/// translates `WouldBlock`/`TimedOut` into the named heartbeat error.
+pub enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    /// Connect with [`Endpoint::connect`]'s retry loop.
+    pub fn connect(endpoint: &Endpoint, timeout: Duration) -> Result<Conn> {
+        let conn = endpoint.connect(timeout)?;
+        if let Conn::Tcp(s) = &conn {
+            s.set_nodelay(true).ok();
+        }
+        Ok(conn)
+    }
+
+    /// Set the read timeout — how long a blocked read waits before the
+    /// frame layer reports a heartbeat timeout. `None` blocks forever.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(timeout).context("setting fleet read timeout"),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(timeout).context("setting fleet read timeout"),
+        }
+    }
+
+    /// A second handle onto the same socket (shared OS descriptor). The
+    /// learner gives each connection's *write* half to a dedicated writer
+    /// thread so parameter broadcasts and heartbeats can never block the
+    /// barrier loop against a sampler that is itself blocked mid-upload
+    /// (the classic write–write deadlock).
+    pub fn try_clone(&self) -> Result<Conn> {
+        match self {
+            Conn::Tcp(s) => {
+                Ok(Conn::Tcp(s.try_clone().context("cloning fleet connection handle")?))
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                Ok(Conn::Unix(s.try_clone().context("cloning fleet connection handle")?))
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::msg::Msg;
+
+    #[test]
+    fn parse_accepts_both_schemes_and_names_failures() {
+        assert_eq!(Endpoint::parse("tcp:127.0.0.1:7400").unwrap(), Endpoint::Tcp("127.0.0.1:7400".into()));
+        #[cfg(unix)]
+        assert_eq!(Endpoint::parse("unix:/tmp/fleet.sock").unwrap(), Endpoint::Unix(PathBuf::from("/tmp/fleet.sock")));
+        let err = Endpoint::parse("127.0.0.1:7400").unwrap_err().to_string();
+        assert!(err.contains("unrecognized fleet address"), "{err}");
+        let err = Endpoint::parse("tcp:localhost").unwrap_err().to_string();
+        assert!(err.contains("missing a port"), "{err}");
+        let err = Endpoint::parse("unix:").unwrap_err().to_string();
+        assert!(err.contains("missing a path"), "{err}");
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for addr in ["tcp:0.0.0.0:0", "unix:/tmp/x.sock"] {
+            #[cfg(not(unix))]
+            if addr.starts_with("unix:") {
+                continue;
+            }
+            assert_eq!(Endpoint::parse(addr).unwrap().display(), addr);
+        }
+    }
+
+    #[test]
+    fn tcp_loopback_carries_fleet_messages() {
+        let listener = Endpoint::parse("tcp:127.0.0.1:0").unwrap().bind().unwrap();
+        let addr = listener.local_addr_string().unwrap();
+        assert!(addr.starts_with("tcp:127.0.0.1:"), "{addr}");
+        let client = std::thread::spawn(move || {
+            let mut conn = Endpoint::parse(&addr)
+                .unwrap()
+                .connect(Duration::from_secs(5))
+                .unwrap();
+            Msg::Hello { fingerprint: "fp".into() }.send(&mut conn).unwrap();
+            match Msg::recv(&mut conn).unwrap() {
+                Msg::Shutdown { reason } => reason,
+                other => panic!("expected shutdown, got {other:?}"),
+            }
+        });
+        let mut server = listener.accept().unwrap();
+        match Msg::recv(&mut server).unwrap() {
+            Msg::Hello { fingerprint } => assert_eq!(fingerprint, "fp"),
+            other => panic!("expected hello, got {other:?}"),
+        }
+        Msg::Shutdown { reason: "done".into() }.send(&mut server).unwrap();
+        assert_eq!(client.join().unwrap(), "done");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_binds_over_stale_file_and_cleans_up() {
+        let dir = std::env::temp_dir().join(format!("tempo-fleet-ep-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.sock");
+        std::fs::write(&path, b"stale").unwrap(); // crashed-learner leftover
+        let ep = Endpoint::parse(&format!("unix:{}", path.display())).unwrap();
+        {
+            let listener = ep.bind().unwrap();
+            let path2 = path.clone();
+            let client = std::thread::spawn(move || {
+                let mut conn = Endpoint::Unix(path2).connect(Duration::from_secs(5)).unwrap();
+                Msg::Heartbeat.send(&mut conn).unwrap();
+            });
+            let mut server = listener.accept().unwrap();
+            assert!(matches!(Msg::recv(&mut server).unwrap(), Msg::Heartbeat));
+            client.join().unwrap();
+        }
+        assert!(!path.exists(), "listener drop must remove the socket file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_timeout_surfaces_as_heartbeat_error() {
+        let listener = Endpoint::parse("tcp:127.0.0.1:0").unwrap().bind().unwrap();
+        let addr = listener.local_addr_string().unwrap();
+        let mut conn = Endpoint::parse(&addr).unwrap().connect(Duration::from_secs(5)).unwrap();
+        let _held = listener.accept().unwrap(); // peer stays silent
+        conn.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let err = Msg::recv(&mut conn).unwrap_err().to_string();
+        assert!(err.contains("heartbeat timeout"), "unexpected error: {err}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Message framing: `magic | version | kind | length | checksum | payload`.
+//!
+//! An 18-byte little-endian header guards every payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"TDQW"  (catches a non-fleet peer immediately)
+//! 4       1     protocol version (bumped on any incompatible change)
+//! 5       1     message kind (so corruption errors can name the message)
+//! 6       4     payload length (u32; capped, overflow-safe)
+//! 10      8     FNV-1a of the payload (crate::ckpt::fnv1a — the same
+//!               checksum that guards checkpoint sections)
+//! 18      ...   payload
+//! ```
+//!
+//! Failure taxonomy (each is a distinct, greppable, named error — the wire
+//! analogue of the checkpoint corruption matrix in
+//! tests/checkpoint_resume.rs):
+//!
+//! * a peer speaking something else entirely → "not a tempo-dqn fleet frame"
+//! * a protocol version bump → "wire protocol version" (refused at the
+//!   first frame, i.e. at the handshake)
+//! * a corrupt length prefix → "frame length ... exceeds" (checked before
+//!   any allocation; a near-`u32::MAX` length cannot wrap or OOM)
+//! * a flipped payload byte → "checksum mismatch in <message> frame"
+//! * a cut connection mid-frame → "truncated"
+//! * a cleanly closed connection → "connection closed"
+//! * no bytes within the socket read-timeout → "heartbeat timeout"
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::fnv1a;
+
+use super::msg::kind_name;
+
+/// Frame magic: present on every frame so a mis-connected peer (an HTTP
+/// client, a different tool) is rejected by name, not by a parse error.
+pub const MAGIC: [u8; 4] = *b"TDQW";
+
+/// Wire protocol version. Bump on any incompatible frame or message
+/// change; peers refuse mismatches at the handshake (the first frame).
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Hard cap on a single payload (64 MiB). A window upload is bounded by
+/// C steps × frame bytes per sampler — far below this; anything larger is
+/// a corrupt length prefix, not a real message.
+pub const MAX_FRAME: usize = 64 << 20;
+
+const HEADER_LEN: usize = 18;
+
+/// Write one frame. The payload is already codec-encoded bytes (see
+/// [`super::msg::Msg::encode`]).
+pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!(
+            "refusing to send a {} frame of {} bytes (cap {})",
+            kind_name(kind),
+            payload.len(),
+            MAX_FRAME
+        );
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC);
+    header[4] = PROTOCOL_VERSION;
+    header[5] = kind;
+    header[6..10].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[10..18].copy_from_slice(&fnv1a(payload).to_le_bytes());
+    w.write_all(&header)
+        .and_then(|_| w.write_all(payload))
+        .and_then(|_| w.flush())
+        .with_context(|| format!("sending {} frame", kind_name(kind)))?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes. `what` names the expectation for the
+/// error; `at_boundary` marks a read that may legitimately see a clean
+/// close (between frames) as opposed to a mid-frame truncation.
+fn read_exact_named(r: &mut impl Read, buf: &mut [u8], what: &str, at_boundary: bool) -> Result<()> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) if got == 0 && at_boundary => bail!("connection closed by peer"),
+            Ok(0) => bail!(
+                "truncated {what}: connection closed after {got} of {} bytes",
+                buf.len()
+            ),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                bail!("heartbeat timeout: no bytes of {what} within the read-timeout window")
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading {what}")),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame, returning `(kind, payload)` after every header check
+/// and the payload checksum have passed.
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_named(r, &mut header, "frame header", true)?;
+    if header[0..4] != MAGIC {
+        bail!(
+            "not a tempo-dqn fleet frame (magic {:02x?}, expected {:02x?})",
+            &header[0..4],
+            MAGIC
+        );
+    }
+    let version = header[4];
+    if version != PROTOCOL_VERSION {
+        bail!(
+            "peer speaks wire protocol version {version}, this binary speaks \
+             {PROTOCOL_VERSION}; refusing (rebuild both ends from the same revision)"
+        );
+    }
+    let kind = header[5];
+    // The length is checked against the cap BEFORE any allocation, so a
+    // corrupt prefix near u32::MAX errors here instead of attempting a
+    // 4 GiB allocation (the wire analogue of ByteReader's checked take).
+    let len = u32::from_le_bytes(header[6..10].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        bail!(
+            "frame length {len} exceeds the {MAX_FRAME}-byte cap in a {} frame \
+             (corrupt length prefix?)",
+            kind_name(kind)
+        );
+    }
+    let want_sum = u64::from_le_bytes(header[10..18].try_into().unwrap());
+    let mut payload = vec![0u8; len];
+    read_exact_named(r, &mut payload, &format!("{} frame payload", kind_name(kind)), false)?;
+    let got_sum = fnv1a(&payload);
+    if got_sum != want_sum {
+        bail!(
+            "checksum mismatch in {} frame: payload hashes to {got_sum:016x}, \
+             header says {want_sum:016x} (corrupt or tampered wire data)",
+            kind_name(kind)
+        );
+    }
+    Ok((kind, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn framed(kind: u8, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, kind, payload).unwrap();
+        out
+    }
+
+    #[test]
+    fn round_trip() {
+        let bytes = framed(5, b"hello fleet");
+        let (kind, payload) = read_frame(&mut Cursor::new(&bytes)).unwrap();
+        assert_eq!(kind, 5);
+        assert_eq!(payload, b"hello fleet");
+    }
+
+    #[test]
+    fn empty_payload_round_trips() {
+        let bytes = framed(5, b"");
+        let (kind, payload) = read_frame(&mut Cursor::new(&bytes)).unwrap();
+        assert_eq!(kind, 5);
+        assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_a_named_checksum_error() {
+        let mut bytes = framed(4, b"window data");
+        let last = bytes.len() - 2;
+        bytes[last] ^= 0xFF;
+        let err = read_frame(&mut Cursor::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "unexpected error: {err}");
+        assert!(err.contains("window-upload"), "must name the message: {err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_a_named_truncation_error() {
+        let bytes = framed(3, &[7u8; 64]);
+        for cut in [bytes.len() - 1, bytes.len() - 30, HEADER_LEN + 1] {
+            let err = read_frame(&mut Cursor::new(&bytes[..cut])).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "cut at {cut}: unexpected error: {err}");
+            assert!(err.contains("param-broadcast"), "must name the message: {err}");
+        }
+        // A header cut is still a truncation, just of the header itself.
+        let err = read_frame(&mut Cursor::new(&bytes[..7])).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn clean_close_between_frames_is_not_truncation() {
+        let err = read_frame(&mut Cursor::new(&[])).unwrap_err().to_string();
+        assert!(err.contains("connection closed"), "unexpected error: {err}");
+        assert!(!err.contains("truncated"), "a clean close is not corruption: {err}");
+    }
+
+    #[test]
+    fn version_bump_is_refused_by_name() {
+        let mut bytes = framed(1, b"fingerprint");
+        bytes[4] = PROTOCOL_VERSION + 1;
+        let err = read_frame(&mut Cursor::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("wire protocol version"), "unexpected error: {err}");
+        assert!(err.contains(&format!("{}", PROTOCOL_VERSION + 1)), "{err}");
+    }
+
+    #[test]
+    fn foreign_magic_is_rejected() {
+        let mut bytes = framed(1, b"x");
+        bytes[0..4].copy_from_slice(b"HTTP");
+        let err = read_frame(&mut Cursor::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("not a tempo-dqn fleet frame"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn corrupt_length_prefix_errors_before_allocating() {
+        let mut bytes = framed(2, b"ack");
+        bytes[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "unexpected error: {err}");
+        assert!(err.contains("hello-ack"), "must name the message: {err}");
+    }
+}

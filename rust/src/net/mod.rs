@@ -1,0 +1,28 @@
+//! Wire layer for the distributed sampler fleet (rust/DESIGN.md §14).
+//!
+//! Three small pieces, each reusing an existing guarantee instead of
+//! inventing a new one:
+//!
+//! * [`frame`] — length-prefixed, FNV-checksummed, versioned message
+//!   frames. The payload bytes are produced by the same bit-exact
+//!   [`crate::ckpt::ByteWriter`]/[`crate::ckpt::ByteReader`] codec the
+//!   checkpoint container uses, so a float crossing the wire round-trips
+//!   to the bit — the transport half of the replicated-mode guarantee.
+//! * [`msg`] — the typed message catalog (handshake, parameter
+//!   broadcast, window upload, heartbeat, shutdown). Every decode error
+//!   names the message it was parsing, mirroring the checkpoint
+//!   section-naming convention.
+//! * [`endpoint`] — `tcp:HOST:PORT` / `unix:PATH` listeners and
+//!   connections behind one `Read + Write` enum, with read timeouts (the
+//!   fleet's heartbeat clock).
+//!
+//! The protocol built on top (who sends what when) lives in
+//! `coordinator::fleet`; this module knows only bytes and messages.
+
+pub mod endpoint;
+pub mod frame;
+pub mod msg;
+
+pub use endpoint::{Conn, Endpoint, Listener};
+pub use frame::{read_frame, write_frame, MAX_FRAME, PROTOCOL_VERSION};
+pub use msg::{Msg, WindowUpload};

@@ -1,0 +1,380 @@
+//! The fleet message catalog (rust/DESIGN.md §14).
+//!
+//! Every payload is encoded with the checkpoint codec
+//! ([`crate::ckpt::ByteWriter`]/[`ByteReader`]): floats travel as raw
+//! IEEE-754 bits, so the parameters a sampler acts with are bit-identical
+//! to the learner's — the transport half of replicated-mode determinism.
+//! Decoders call `ByteReader::finish()`, so a payload with trailing bytes
+//! (format drift between peers that somehow share a protocol version)
+//! fails loudly with the message named.
+//!
+//! | kind | message          | direction         | when                      |
+//! |------|------------------|-------------------|---------------------------|
+//! | 1    | hello            | sampler → learner | connect                   |
+//! | 2    | hello-ack        | learner → sampler | after fingerprint check   |
+//! | 3    | param-broadcast  | learner → sampler | after every window barrier|
+//! | 4    | window-upload    | sampler → learner | after acting each window  |
+//! | 5    | heartbeat        | both              | while the other side waits|
+//! | 6    | shutdown         | learner → sampler | end of run / slice        |
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::{ByteReader, ByteWriter};
+use crate::replay::StagedTransition;
+
+use super::frame::{read_frame, write_frame};
+
+pub const KIND_HELLO: u8 = 1;
+pub const KIND_HELLO_ACK: u8 = 2;
+pub const KIND_PARAM_BROADCAST: u8 = 3;
+pub const KIND_WINDOW_UPLOAD: u8 = 4;
+pub const KIND_HEARTBEAT: u8 = 5;
+pub const KIND_SHUTDOWN: u8 = 6;
+
+/// Human name of a message kind, used by every named wire error.
+pub fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        KIND_HELLO => "hello",
+        KIND_HELLO_ACK => "hello-ack",
+        KIND_PARAM_BROADCAST => "param-broadcast",
+        KIND_WINDOW_UPLOAD => "window-upload",
+        KIND_HEARTBEAT => "heartbeat",
+        KIND_SHUTDOWN => "shutdown",
+        _ => "unknown",
+    }
+}
+
+/// One sampler's complete product for one target window: everything the
+/// learner needs to make its shadow of the sampler bit-exact at the
+/// barrier. `streams` lists `(global stream id, transitions)` in stream
+/// order; `ctxs` carries one [`SamplerCtx::save_state`] blob per owned
+/// slot (the same encoding the checkpoint "samplers" section uses).
+#[derive(Clone, Debug, Default)]
+pub struct WindowUpload {
+    /// Absolute target-window index this upload covers.
+    pub window: u64,
+    /// Environment steps taken (the sampler's `completed` delta).
+    pub steps: u64,
+    /// Episodes finished (the sampler's `episodes` delta).
+    pub episodes: u64,
+    /// `(step, raw episode return)` samples finished this window.
+    pub returns: Vec<(u64, f64)>,
+    /// One sampler-context snapshot per owned slot, in slot order.
+    pub ctxs: Vec<Vec<u8>>,
+    /// Staged transitions per global stream id, in stream order.
+    pub streams: Vec<(u64, Vec<StagedTransition>)>,
+}
+
+/// A typed fleet message. See the module table for the protocol roles.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Sampler's opening claim: the JSON config fingerprint of the run it
+    /// was launched for (`Coordinator::config_fingerprint` text). The
+    /// learner refuses mismatches field-by-field, by name, exactly like a
+    /// checkpoint resumed under the wrong configuration.
+    Hello { fingerprint: String },
+    /// Learner's reply: the sampler owns slots
+    /// `first_slot .. first_slot + n_slots`, resumes acting at absolute
+    /// step `start` out of `total` (relaxed samplers run ahead of the
+    /// learner, so they must stop at the step budget themselves), lags
+    /// parameters by `lag` windows, and receives its slots' context
+    /// snapshots plus every theta_minus version its first window can
+    /// legally act with (`(version tag, parameters)`).
+    HelloAck {
+        first_slot: u64,
+        n_slots: u64,
+        start: u64,
+        total: u64,
+        lag: u64,
+        params: Vec<(u64, Vec<f32>)>,
+        ctxs: Vec<Vec<u8>>,
+    },
+    /// theta_minus version `tag` (fresh after the barrier of window
+    /// `tag - 1`), broadcast to every sampler.
+    ParamBroadcast { tag: u64, theta_minus: Vec<f32> },
+    Upload(WindowUpload),
+    /// Liveness only; either side skips these wherever a real message is
+    /// awaited.
+    Heartbeat,
+    /// Learner is done with this sampler (run complete or slice bound
+    /// reached); the sampler exits cleanly.
+    Shutdown { reason: String },
+}
+
+impl Msg {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => KIND_HELLO,
+            Msg::HelloAck { .. } => KIND_HELLO_ACK,
+            Msg::ParamBroadcast { .. } => KIND_PARAM_BROADCAST,
+            Msg::Upload(_) => KIND_WINDOW_UPLOAD,
+            Msg::Heartbeat => KIND_HEARTBEAT,
+            Msg::Shutdown { .. } => KIND_SHUTDOWN,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        kind_name(self.kind())
+    }
+
+    /// Encode the payload (framing is [`super::frame`]'s job).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Msg::Hello { fingerprint } => w.put_str(fingerprint),
+            Msg::HelloAck { first_slot, n_slots, start, total, lag, params, ctxs } => {
+                w.put_u64(*first_slot);
+                w.put_u64(*n_slots);
+                w.put_u64(*start);
+                w.put_u64(*total);
+                w.put_u64(*lag);
+                w.put_usize(params.len());
+                for (tag, theta) in params {
+                    w.put_u64(*tag);
+                    w.put_f32_slice(theta);
+                }
+                w.put_usize(ctxs.len());
+                for ctx in ctxs {
+                    w.put_bytes(ctx);
+                }
+            }
+            Msg::ParamBroadcast { tag, theta_minus } => {
+                w.put_u64(*tag);
+                w.put_f32_slice(theta_minus);
+            }
+            Msg::Upload(u) => {
+                w.put_u64(u.window);
+                w.put_u64(u.steps);
+                w.put_u64(u.episodes);
+                w.put_usize(u.returns.len());
+                for &(step, ret) in &u.returns {
+                    w.put_u64(step);
+                    w.put_f64(ret);
+                }
+                w.put_usize(u.ctxs.len());
+                for ctx in &u.ctxs {
+                    w.put_bytes(ctx);
+                }
+                w.put_usize(u.streams.len());
+                for (stream, items) in &u.streams {
+                    w.put_u64(*stream);
+                    w.put_usize(items.len());
+                    for t in items {
+                        w.put_bytes(&t.frame);
+                        w.put_u8(t.action);
+                        w.put_f32(t.reward);
+                        w.put_bool(t.done);
+                        w.put_bool(t.start);
+                    }
+                }
+            }
+            Msg::Heartbeat => {}
+            Msg::Shutdown { reason } => w.put_str(reason),
+        }
+        w.into_bytes()
+    }
+
+    /// Decode a payload of the given kind. Every byte must be consumed
+    /// (`finish`), so format drift fails with the message named.
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<Msg> {
+        let mut r = ByteReader::new(payload);
+        let msg = Self::decode_body(kind, &mut r)
+            .and_then(|m| r.finish().map(|_| m))
+            .with_context(|| format!("decoding {} message", kind_name(kind)))?;
+        Ok(msg)
+    }
+
+    fn decode_body(kind: u8, r: &mut ByteReader<'_>) -> Result<Msg> {
+        Ok(match kind {
+            KIND_HELLO => Msg::Hello { fingerprint: r.str()?.to_string() },
+            KIND_HELLO_ACK => {
+                let first_slot = r.u64()?;
+                let n_slots = r.u64()?;
+                let start = r.u64()?;
+                let total = r.u64()?;
+                let lag = r.u64()?;
+                let n = r.usize()?;
+                let mut params = Vec::with_capacity(n);
+                for _ in 0..n {
+                    params.push((r.u64()?, r.f32_vec()?));
+                }
+                let n = r.usize()?;
+                let mut ctxs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ctxs.push(r.bytes()?.to_vec());
+                }
+                Msg::HelloAck { first_slot, n_slots, start, total, lag, params, ctxs }
+            }
+            KIND_PARAM_BROADCAST => {
+                Msg::ParamBroadcast { tag: r.u64()?, theta_minus: r.f32_vec()? }
+            }
+            KIND_WINDOW_UPLOAD => {
+                let window = r.u64()?;
+                let steps = r.u64()?;
+                let episodes = r.u64()?;
+                let n = r.usize()?;
+                let mut returns = Vec::with_capacity(n);
+                for _ in 0..n {
+                    returns.push((r.u64()?, r.f64()?));
+                }
+                let n = r.usize()?;
+                let mut ctxs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ctxs.push(r.bytes()?.to_vec());
+                }
+                let n = r.usize()?;
+                let mut streams = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let stream = r.u64()?;
+                    let m = r.usize()?;
+                    let mut items = Vec::with_capacity(m);
+                    for _ in 0..m {
+                        items.push(StagedTransition {
+                            frame: r.bytes()?.to_vec(),
+                            action: r.u8()?,
+                            reward: r.f32()?,
+                            done: r.bool()?,
+                            start: r.bool()?,
+                        });
+                    }
+                    streams.push((stream, items));
+                }
+                Msg::Upload(WindowUpload { window, steps, episodes, returns, ctxs, streams })
+            }
+            KIND_HEARTBEAT => Msg::Heartbeat,
+            KIND_SHUTDOWN => Msg::Shutdown { reason: r.str()?.to_string() },
+            other => bail!("unknown fleet message kind {other}"),
+        })
+    }
+
+    /// Frame and send this message.
+    pub fn send(&self, w: &mut impl std::io::Write) -> Result<()> {
+        write_frame(w, self.kind(), &self.encode())
+    }
+
+    /// Receive and decode the next message (heartbeats included; callers
+    /// that await a specific message skip them — see `coordinator::fleet`).
+    pub fn recv(r: &mut impl std::io::Read) -> Result<Msg> {
+        let (kind, payload) = read_frame(r)?;
+        Msg::decode(kind, &payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn round_trip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        msg.send(&mut buf).unwrap();
+        Msg::recv(&mut Cursor::new(&buf)).unwrap()
+    }
+
+    #[test]
+    fn hello_and_shutdown_round_trip() {
+        match round_trip(&Msg::Hello { fingerprint: "{\"seed\":\"2a\"}".into() }) {
+            Msg::Hello { fingerprint } => assert_eq!(fingerprint, "{\"seed\":\"2a\"}"),
+            other => panic!("decoded {other:?}"),
+        }
+        match round_trip(&Msg::Shutdown { reason: "complete".into() }) {
+            Msg::Shutdown { reason } => assert_eq!(reason, "complete"),
+            other => panic!("decoded {other:?}"),
+        }
+        assert!(matches!(round_trip(&Msg::Heartbeat), Msg::Heartbeat));
+    }
+
+    #[test]
+    fn param_broadcast_is_bit_exact() {
+        // Raw-bits transport: NaN payloads, -0.0, and denormals all survive.
+        let theta = vec![f32::from_bits(0x7FC0_1234), -0.0, 1.5e-42, 3.25];
+        let msg = Msg::ParamBroadcast { tag: 7, theta_minus: theta.clone() };
+        match round_trip(&msg) {
+            Msg::ParamBroadcast { tag, theta_minus } => {
+                assert_eq!(tag, 7);
+                let got: Vec<u32> = theta_minus.iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u32> = theta.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn window_upload_round_trips_transitions() {
+        let upload = WindowUpload {
+            window: 3,
+            steps: 64,
+            episodes: 2,
+            returns: vec![(130, 4.5), (190, -1.0)],
+            ctxs: vec![vec![1, 2, 3], vec![]],
+            streams: vec![
+                (
+                    2,
+                    vec![StagedTransition {
+                        frame: vec![9u8; 16],
+                        action: 3,
+                        reward: -0.5,
+                        done: true,
+                        start: false,
+                    }],
+                ),
+                (3, vec![]),
+            ],
+        };
+        match round_trip(&Msg::Upload(upload)) {
+            Msg::Upload(u) => {
+                assert_eq!(u.window, 3);
+                assert_eq!(u.steps, 64);
+                assert_eq!(u.episodes, 2);
+                assert_eq!(u.returns, vec![(130, 4.5), (190, -1.0)]);
+                assert_eq!(u.ctxs, vec![vec![1, 2, 3], vec![]]);
+                assert_eq!(u.streams.len(), 2);
+                assert_eq!(u.streams[0].0, 2);
+                let t = &u.streams[0].1[0];
+                assert_eq!(t.frame, vec![9u8; 16]);
+                assert_eq!(t.action, 3);
+                assert_eq!(t.reward, -0.5);
+                assert!(t.done && !t.start);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_ack_round_trips_params_and_ctxs() {
+        let msg = Msg::HelloAck {
+            first_slot: 1,
+            n_slots: 2,
+            start: 128,
+            total: 512,
+            lag: 1,
+            params: vec![(1, vec![0.5, -0.25]), (2, vec![1.0, 2.0])],
+            ctxs: vec![vec![0xAB; 8], vec![0xCD; 4]],
+        };
+        match round_trip(&msg) {
+            Msg::HelloAck { first_slot, n_slots, start, total, lag, params, ctxs } => {
+                assert_eq!((first_slot, n_slots, start, total, lag), (1, 2, 128, 512, 1));
+                assert_eq!(params[1].0, 2);
+                assert_eq!(params[1].1, vec![1.0, 2.0]);
+                assert_eq!(ctxs[0].len(), 8);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_fail_with_message_named() {
+        let mut payload = Msg::Heartbeat.encode();
+        payload.push(0); // drifted peer appended a field we don't know
+        let err = format!("{:#}", Msg::decode(KIND_HEARTBEAT, &payload).unwrap_err());
+        assert!(err.contains("heartbeat"), "unexpected error: {err}");
+        assert!(err.contains("trailing"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let err = Msg::decode(99, &[]).unwrap_err().to_string();
+        assert!(err.contains("unknown fleet message kind 99"), "{err}");
+    }
+}

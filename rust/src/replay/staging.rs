@@ -101,6 +101,30 @@ impl StagingSet {
     pub fn pending(&self) -> usize {
         self.bufs.iter().map(|b| b.lock().unwrap().len()).sum()
     }
+
+    /// Take every buffered transition out, keyed by stream id in stream
+    /// order, skipping empty streams — the fleet sampler's window upload.
+    /// `staged_total` keeps counting: the transitions were staged here,
+    /// they just flush into replay on the learner instead.
+    pub fn drain_streams(&self) -> Vec<(usize, Vec<StagedTransition>)> {
+        let mut out = Vec::new();
+        for (stream, buf) in self.bufs.iter().enumerate() {
+            let mut buf = buf.lock().unwrap();
+            if !buf.items.is_empty() {
+                out.push((stream, std::mem::take(&mut buf.items)));
+            }
+        }
+        out
+    }
+
+    /// Push a drained batch back in (the learner's ingest side: uploads
+    /// land here so the one shared sync-point flush path moves them into
+    /// replay in stream order).
+    pub fn extend(&self, stream: usize, items: Vec<StagedTransition>) {
+        let mut buf = self.bufs[stream].lock().unwrap();
+        buf.staged_total += items.len() as u64;
+        buf.items.extend(items);
+    }
 }
 
 #[cfg(test)]

@@ -330,6 +330,21 @@ impl QNet {
         Ok(())
     }
 
+    /// Overwrite theta_minus (fleet parameter broadcasts: a sampler process
+    /// installs the learner's acting parameters verbatim — no counter is
+    /// touched, so target-sync accounting stays learner-side only).
+    pub fn set_theta_minus(&self, values: &[f32]) -> Result<()> {
+        if values.len() != self.spec.param_count {
+            bail!(
+                "set_theta_minus: expected {} values, got {}",
+                self.spec.param_count,
+                values.len()
+            );
+        }
+        *self.theta_minus.write().unwrap() = Arc::new(values.to_vec());
+        Ok(())
+    }
+
     /// Download the RMSProp accumulators (g, s) to host (checkpointing).
     pub fn optimizer_host(&self) -> (Vec<f32>, Vec<f32>) {
         let st = self.train.lock().unwrap();

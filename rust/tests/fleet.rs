@@ -1,0 +1,356 @@
+//! End-to-end tests for the distributed sampler fleet (ISSUE 8,
+//! rust/DESIGN.md §14), pinning the two-tier determinism contract through
+//! real processes and real sockets:
+//!
+//! * **replicated** (`fleet_lag = 0`): a fleet run — learner in-process,
+//!   sampler workers as spawned `fleet-sampler` processes of the actual
+//!   binary — lands on the *same* `state_digest` as the single-process
+//!   machine, and its checkpoints cross the single↔fleet boundary in both
+//!   directions, including kill-and-resume mid-run.
+//! * **relaxed** (`fleet_lag = 1`): reproducible run-to-run (staleness is
+//!   a pure function of the window index), but a measurably *different*
+//!   trajectory — shown at the loss level, not just the digest (the
+//!   digest already covers the retained theta ring).
+//!
+//! The failure half of §14 is pinned the way tests/checkpoint_resume.rs
+//! pins checkpoint corruption: every refusal and every wire fault must
+//! surface as a named error (mismatched config knob, protocol version,
+//! checksum, disconnect, heartbeat silence).
+//!
+//! Unix-only: the integration fleet runs over unix sockets (the frame and
+//! endpoint layers carry their own platform-neutral unit tests).
+#![cfg(unix)]
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use tempo_dqn::config::{ExecMode, ExperimentConfig, ReplayStrategy};
+use tempo_dqn::coordinator::fleet::fingerprint_text;
+use tempo_dqn::coordinator::{spawn_local_samplers, Coordinator, FleetOpts, TrainResult};
+use tempo_dqn::net::{Endpoint, Msg};
+use tempo_dqn::runtime::default_artifact_dir;
+
+const BIN: &str = env!("CARGO_BIN_EXE_tempo-dqn");
+
+/// Fleet-shaped smoke config: W = 2 sampler slots x B = 2 streams,
+/// three windows of C = 64 (64 % 4 == 0 and 192 % 64 == 0, the
+/// window-exact geometry fleet execution requires).
+fn cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+    cfg.game = "seeker".into();
+    cfg.mode = ExecMode::Concurrent;
+    cfg.threads = 2;
+    cfg.envs_per_thread = 2;
+    cfg.total_steps = 192;
+    cfg.target_update_period = 64;
+    cfg.train_period = 4;
+    cfg.prepopulate = 300;
+    cfg.replay_capacity = 8_000;
+    cfg.seed = 77;
+    cfg.fleet_samplers = 2;
+    cfg.fleet_timeout_ms = 30_000;
+    cfg
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tempo-fleet-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn sock_addr(tag: &str) -> String {
+    let p = std::env::temp_dir().join(format!("tempo-fleet-{tag}-{}.sock", std::process::id()));
+    format!("unix:{}", p.display())
+}
+
+/// The single-process reference trajectory for `cfg`.
+fn single_run(cfg: &ExperimentConfig) -> (u64, TrainResult) {
+    let mut solo = cfg.clone();
+    solo.fleet_samplers = 0;
+    let mut coord = Coordinator::new(solo, &default_artifact_dir()).unwrap();
+    let res = coord.run().unwrap();
+    (coord.state_digest().unwrap(), res)
+}
+
+/// Host a fleet learner in-process with `cfg.fleet_samplers` worker
+/// processes of the real binary (spawned first; they retry-connect until
+/// the learner binds). Returns the final digest and the run result.
+fn fleet_run(cfg: &ExperimentConfig, tag: &str, resume: Option<&Path>) -> (u64, TrainResult) {
+    let bind = sock_addr(tag);
+    let mut children = spawn_local_samplers(Path::new(BIN), cfg, &bind, cfg.fleet_samplers)
+        .expect("spawning sampler worker processes");
+    let mut coord = Coordinator::new(cfg.clone(), &default_artifact_dir()).unwrap();
+    if let Some(dir) = resume {
+        coord.resume_from(dir).unwrap();
+    }
+    let run = coord.run_fleet(&FleetOpts { bind, samplers: cfg.fleet_samplers }, None);
+    if run.is_err() {
+        for child in &mut children {
+            let _ = child.kill();
+        }
+    }
+    for (i, child) in children.iter_mut().enumerate() {
+        let status = child.wait().expect("waiting on a sampler process");
+        if run.is_ok() {
+            assert!(status.success(), "{tag}: sampler {i} exited with {status}");
+        }
+    }
+    let res = run.unwrap_or_else(|e| panic!("{tag}: fleet learner failed: {e:#}"));
+    (coord.state_digest().unwrap(), res)
+}
+
+// ---------------------------------------------------------------------------
+// Replicated tier: the fleet IS the single-process trajectory
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replicated_fleet_is_bit_identical_to_single_process() {
+    let base = cfg();
+    let (reference, solo_res) = single_run(&base);
+    assert_eq!(reference, single_run(&base).0, "single-process baseline not reproducible");
+
+    let (two, res) = fleet_run(&base, "repl2", None);
+    assert_eq!(two, reference, "2-process fleet diverged from the single-process digest");
+    // The reported trajectory must match too, not just the machine bytes.
+    assert_eq!(res.steps, 192);
+    assert_eq!(res.trains, solo_res.trains);
+    assert_eq!(res.target_syncs, solo_res.target_syncs);
+    assert_eq!(res.losses, solo_res.losses, "fleet loss curve differs");
+    assert_eq!(res.returns, solo_res.returns, "fleet episode returns differ");
+
+    // One worker owning BOTH slots is the same trajectory again.
+    let mut one_proc = base.clone();
+    one_proc.fleet_samplers = 1;
+    let (one, _) = fleet_run(&one_proc, "repl1", None);
+    assert_eq!(one, reference, "1-process fleet (all slots on one worker) diverged");
+}
+
+#[test]
+fn replicated_fleet_matches_single_process_under_prioritized_replay() {
+    let mut c = cfg();
+    c.replay_strategy = ReplayStrategy::Proportional;
+    c.per_beta_anneal = 48;
+    let (reference, _) = single_run(&c);
+    let (fleet, _) = fleet_run(&c, "per", None);
+    assert_eq!(
+        fleet, reference,
+        "prioritized fleet diverged (barrier-side priority updates must see the same draws)"
+    );
+}
+
+/// Checkpoints cross the single↔fleet boundary freely, in both
+/// directions, through a mid-run kill.
+#[test]
+fn fleet_checkpoints_cross_the_process_boundary_bit_exactly() {
+    let base = cfg();
+    let (reference, _) = single_run(&base);
+
+    // Phase 1: a fleet run "dies" at step 64 with a checkpoint on disk.
+    let dir = tmpdir("kr");
+    let mut half = base.clone();
+    half.total_steps = 64;
+    half.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    half.ckpt_period = 64;
+    fleet_run(&half, "kr-half", None);
+
+    // Phase 2a: a fresh fleet learner (new samplers too) resumes it.
+    let (fleet_resumed, _) = fleet_run(&base, "kr-rest", Some(&dir));
+    assert_eq!(fleet_resumed, reference, "fleet -> fleet kill-and-resume diverged");
+
+    // Phase 2b: the same fleet checkpoint resumes single-process.
+    let mut solo = base.clone();
+    solo.fleet_samplers = 0;
+    let mut coord = Coordinator::new(solo, &default_artifact_dir()).unwrap();
+    assert_eq!(coord.resume_from(&dir).unwrap(), 64, "checkpoint not at the cut");
+    coord.run().unwrap();
+    assert_eq!(
+        coord.state_digest().unwrap(),
+        reference,
+        "fleet checkpoint resumed single-process diverged"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Phase 2c: and a single-process checkpoint resumes as a fleet.
+    let sdir = tmpdir("kr-solo");
+    let mut shalf = base.clone();
+    shalf.fleet_samplers = 0;
+    shalf.total_steps = 64;
+    shalf.ckpt_dir = Some(sdir.to_string_lossy().into_owned());
+    shalf.ckpt_period = 64;
+    Coordinator::new(shalf, &default_artifact_dir()).unwrap().run().unwrap();
+    let (cross, _) = fleet_run(&base, "kr-solo-rest", Some(&sdir));
+    assert_eq!(cross, reference, "single-process checkpoint resumed as a fleet diverged");
+    let _ = std::fs::remove_dir_all(&sdir);
+}
+
+// ---------------------------------------------------------------------------
+// Relaxed tier: deterministic staleness, different trajectory
+// ---------------------------------------------------------------------------
+
+#[test]
+fn relaxed_lag_is_reproducible_and_measurably_diverges() {
+    let mut lagged = cfg();
+    lagged.fleet_lag = 1;
+    let (a, res_a) = fleet_run(&lagged, "lag-a", None);
+    let (b, res_b) = fleet_run(&lagged, "lag-b", None);
+    assert_eq!(a, b, "relaxed (lag=1) fleet not reproducible run-to-run");
+    assert_eq!(res_a.losses, res_b.losses, "relaxed loss curve not reproducible");
+    assert_eq!(res_a.returns, res_b.returns, "relaxed returns not reproducible");
+
+    // Divergence from the replicated trajectory must show up in the
+    // trained losses, not merely in the digest (the digest alone would be
+    // a vacuous check: it covers the retained theta ring, which is
+    // non-empty exactly when lag > 0).
+    let (reference, solo_res) = single_run(&cfg());
+    assert_ne!(a, reference, "lag=1 digest did not diverge");
+    assert_ne!(
+        res_a.losses, solo_res.losses,
+        "staleness must move the trained trajectory itself, not just the theta ring bytes"
+    );
+    // Same step budget and train schedule either way.
+    assert_eq!(res_a.steps, solo_res.steps);
+    assert_eq!(res_a.trains, solo_res.trains);
+}
+
+// ---------------------------------------------------------------------------
+// Failure semantics: every refusal and wire fault is a named error
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mismatched_sampler_config_is_refused_at_the_handshake_by_name() {
+    let mut learner_cfg = cfg();
+    learner_cfg.fleet_samplers = 1;
+    let mut sampler_cfg = learner_cfg.clone();
+    sampler_cfg.seed = 78; // one trajectory knob off
+
+    let bind = sock_addr("mismatch");
+    let mut children =
+        spawn_local_samplers(Path::new(BIN), &sampler_cfg, &bind, 1).unwrap();
+    let mut coord = Coordinator::new(learner_cfg, &default_artifact_dir()).unwrap();
+    let err = coord
+        .run_fleet(&FleetOpts { bind, samplers: 1 }, None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("seed"), "refusal must name the mismatched knob: {err}");
+    assert!(err.contains("refusing"), "{err}");
+    let status = children[0].wait().unwrap();
+    assert!(!status.success(), "a refused sampler must exit nonzero");
+}
+
+#[test]
+fn fleet_launch_refusals_name_the_offending_knob() {
+    let base = cfg();
+    let never = "unix:/tmp/tempo-fleet-never-bound.sock".to_string();
+    let mut coord = Coordinator::new(base.clone(), &default_artifact_dir()).unwrap();
+    let err = coord
+        .run_fleet(&FleetOpts { bind: never.clone(), samplers: 0 }, None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("at least one sampler"), "{err}");
+    let err = coord
+        .run_fleet(&FleetOpts { bind: never.clone(), samplers: 3 }, None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("more sampler processes"), "{err}");
+
+    let mut sync = base;
+    sync.mode = ExecMode::Synchronized;
+    let mut coord = Coordinator::new(sync, &default_artifact_dir()).unwrap();
+    let err = coord
+        .run_fleet(&FleetOpts { bind: never, samplers: 2 }, None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("concurrent"), "{err}");
+}
+
+/// Host a real learner expecting one sampler; return its error chain.
+fn learner_expecting_failure(cfg: ExperimentConfig, bind: String) -> std::thread::JoinHandle<String> {
+    std::thread::spawn(move || {
+        let mut coord = Coordinator::new(cfg, &default_artifact_dir()).unwrap();
+        let err = coord
+            .run_fleet(&FleetOpts { bind, samplers: 1 }, None)
+            .expect_err("the learner must fail against a faulty peer");
+        format!("{err:#}")
+    })
+}
+
+/// The wire corruption matrix, end-to-end against a live learner: each
+/// fault class surfaces as its named error (mirroring the frame-level
+/// matrix in src/net/frame.rs and the checkpoint matrix in
+/// tests/checkpoint_resume.rs).
+#[test]
+fn wire_faults_surface_as_named_learner_errors() {
+    let mut base = cfg();
+    base.fleet_samplers = 1;
+
+    // (a) protocol version bump -> refused at the handshake, by version.
+    {
+        let bind = sock_addr("ver");
+        let learner = learner_expecting_failure(base.clone(), bind.clone());
+        let mut conn =
+            Endpoint::parse(&bind).unwrap().connect(Duration::from_secs(10)).unwrap();
+        let mut bytes = Vec::new();
+        Msg::Hello { fingerprint: fingerprint_text(&base) }.send(&mut bytes).unwrap();
+        bytes[4] += 1; // the version byte (frame header offset 4)
+        conn.write_all(&bytes).unwrap();
+        conn.flush().unwrap();
+        let err = learner.join().unwrap();
+        assert!(err.contains("wire protocol version"), "{err}");
+    }
+
+    // (b) a flipped payload byte -> checksum mismatch, naming the message.
+    {
+        let bind = sock_addr("flip");
+        let learner = learner_expecting_failure(base.clone(), bind.clone());
+        let mut conn =
+            Endpoint::parse(&bind).unwrap().connect(Duration::from_secs(10)).unwrap();
+        let mut bytes = Vec::new();
+        Msg::Hello { fingerprint: fingerprint_text(&base) }.send(&mut bytes).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        conn.write_all(&bytes).unwrap();
+        conn.flush().unwrap();
+        let err = learner.join().unwrap();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("hello"), "must name the corrupted message: {err}");
+    }
+
+    // (c) a sampler that handshakes, then crashes before its first upload
+    // -> a disconnect error naming the sampler's slot range.
+    {
+        let bind = sock_addr("crash");
+        let learner = learner_expecting_failure(base.clone(), bind.clone());
+        let mut conn =
+            Endpoint::parse(&bind).unwrap().connect(Duration::from_secs(10)).unwrap();
+        Msg::Hello { fingerprint: fingerprint_text(&base) }.send(&mut conn).unwrap();
+        match Msg::recv(&mut conn).unwrap() {
+            Msg::HelloAck { .. } => {}
+            other => panic!("expected hello-ack, got {}", other.name()),
+        }
+        drop(conn); // the "crash"
+        let err = learner.join().unwrap();
+        assert!(err.contains("sampler(slots 0..2)"), "must name the peer: {err}");
+        assert!(err.contains("connection closed"), "{err}");
+    }
+
+    // (d) a sampler that goes silent -> the heartbeat timeout, named.
+    {
+        let mut quick = base.clone();
+        quick.fleet_timeout_ms = 400;
+        let bind = sock_addr("silent");
+        let learner = learner_expecting_failure(quick.clone(), bind.clone());
+        let mut conn =
+            Endpoint::parse(&bind).unwrap().connect(Duration::from_secs(10)).unwrap();
+        Msg::Hello { fingerprint: fingerprint_text(&quick) }.send(&mut conn).unwrap();
+        match Msg::recv(&mut conn).unwrap() {
+            Msg::HelloAck { .. } => {}
+            other => panic!("expected hello-ack, got {}", other.name()),
+        }
+        // Stay connected but say nothing; the learner's read timeout fires.
+        let err = learner.join().unwrap();
+        assert!(err.contains("heartbeat timeout"), "{err}");
+        drop(conn);
+    }
+}

@@ -678,6 +678,7 @@ fn random_model(rng: &mut Rng) -> CostModel {
         sample_ms: rng.f64() * 0.3,
         tree_ms: rng.f64() * 0.2,
         sync_ms: rng.f64(),
+        net_ms: rng.f64() * 0.5,
         cores: 1 + rng.below_usize(8),
         contention: rng.f64() * 0.5,
         batch_host_discount: 0.5 + rng.f64() * 0.5,
@@ -698,6 +699,7 @@ fn prop_hwsim_makespan_respects_lower_bound() {
             learner_threads: 1 + rng.below_usize(4),
             prefetch: rng.chance(0.5),
             prioritized: rng.chance(0.5),
+            fleet_procs: rng.below_usize(4),
         };
         for mode in ExecMode::ALL {
             let stats = simulate(model, run, mode);

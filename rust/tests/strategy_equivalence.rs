@@ -20,8 +20,10 @@
 //!    barriers (windowed modes) or in the sequential train order
 //!    (inline modes).
 //!
-//! Async drivers need W = 1 for cross-run determinism (ticket claiming is
-//! scheduling-dependent at W > 1, as in the seed machine); the
+//! Async drivers run W = 1 here, matching the seed machine's historical
+//! layout (standard-async is still scheduling-dependent at W > 1 — theta
+//! freshness races the interlock — while concurrent-async is deterministic
+//! at any W since the static block schedule; see tests/fleet.rs); the
 //! synchronized drivers run W = 2.
 
 use std::path::PathBuf;
@@ -38,7 +40,7 @@ fn cfg(
     prefetch_batches: usize,
 ) -> ExperimentConfig {
     let (threads, b) = match mode {
-        // Deterministic async configs are single-sampler (§7.4).
+        // Single-sampler async configs (standard needs W = 1; §7.4).
         ExecMode::Standard | ExecMode::Concurrent => (1, 2),
         ExecMode::Synchronized | ExecMode::Both => (2, 2),
     };
