@@ -1,0 +1,115 @@
+//! Serving-path QPS and latency (rust/DESIGN.md §15).
+//!
+//! Three layers, innermost first:
+//!
+//! 1. `serve/direct_infer_1` — one single-sample `QNet::infer`, the floor
+//!    every served row pays regardless of transport.
+//! 2. `serve/act_roundtrip_1` — one 1-state act over a loopback socket
+//!    through the micro-batching collector (daemon in-process): the
+//!    protocol + batching overhead on top of (1).
+//! 3. `serve/act_roundtrip_b8` — one 8-state act, the batched-QPS shape:
+//!    per-state cost should drop well below (2)'s as the engine
+//!    transaction amortizes.
+//!
+//! Run: `cargo bench --bench serve_qps`
+//! CI smoke: `cargo bench --bench serve_qps -- --test`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tempo_dqn::benchkit::Bench;
+use tempo_dqn::ckpt::CheckpointWriter;
+use tempo_dqn::env::STATE_BYTES;
+use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, QNetSnapshot};
+use tempo_dqn::serve::{ServeClient, ServeOpts, Server};
+
+fn states(n: usize, salt: u64) -> Vec<u8> {
+    let mut rng: u64 = 0x9E37_79B9_7F4A_7C15 ^ salt;
+    let mut out = vec![0u8; n * STATE_BYTES];
+    for px in out.iter_mut() {
+        rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *px = (rng >> 56) as u8;
+    }
+    out
+}
+
+fn bind_addr() -> String {
+    if cfg!(unix) {
+        let dir = std::env::temp_dir().join(format!("tempo-serve-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("bench tmp dir");
+        format!("unix:{}", dir.join("serve.sock").display())
+    } else {
+        "tcp:127.0.0.1:0".to_string()
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    if smoke {
+        std::env::set_var("TEMPO_BENCH_MS", "60");
+    }
+    let mut bench = Bench::new();
+
+    // A servable checkpoint, no training needed.
+    let device = Arc::new(Device::cpu().expect("device"));
+    let manifest = Manifest::load_or_builtin(&default_artifact_dir()).expect("manifest");
+    let qnet = QNet::load(device, &manifest, "tiny", false, 32).expect("qnet");
+    let ckpt_dir =
+        std::env::temp_dir().join(format!("tempo-serve-bench-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    std::fs::create_dir_all(&ckpt_dir).expect("ckpt dir");
+    let mut w = CheckpointWriter::new(1);
+    w.add(&QNetSnapshot(&qnet)).expect("snapshot");
+    w.write(&ckpt_dir).expect("checkpoint");
+
+    // 1. The floor: direct single-sample inference, no transport.
+    let s1 = states(1, 11);
+    let r = bench.run("serve/direct_infer_1", || {
+        qnet.infer(Policy::Theta, &s1, 1).unwrap().len()
+    });
+    println!("direct single-sample infer: {:9.1} us", r.mean_ns / 1e3);
+
+    // In-process daemon on a loopback socket. Flush 0: a lone blocking
+    // client gains nothing from waiting for co-riders, and the deadline
+    // would otherwise dominate every round trip.
+    let opts = ServeOpts {
+        max_batch: 32,
+        flush: Duration::ZERO,
+        poll: Duration::from_millis(500),
+    };
+    let handle =
+        Server::start(&ckpt_dir, &default_artifact_dir(), &bind_addr(), opts).expect("daemon");
+    let mut client = ServeClient::connect(handle.addr(), Duration::from_secs(30)).expect("client");
+
+    // 2. Protocol + collector overhead at width 1.
+    let r = bench.run("serve/act_roundtrip_1", || client.act(&s1, 1).unwrap().step);
+    println!(
+        "served act (1 state) loopback roundtrip: {:9.1} us ({:8.0} QPS)",
+        r.mean_ns / 1e3,
+        r.throughput_per_sec()
+    );
+
+    // 3. Batched shape: 8 states per request.
+    let s8 = states(8, 22);
+    let r = bench.run("serve/act_roundtrip_b8", || client.act(&s8, 8).unwrap().step);
+    println!(
+        "served act (8 states) loopback roundtrip: {:9.1} us ({:8.0} states/s)",
+        r.mean_ns / 1e3,
+        r.throughput_per_sec() * 8.0
+    );
+
+    let stats = handle.stats();
+    println!(
+        "daemon stats: requests={} states={} flush-widths={:?} lat p50={}us p99={}us",
+        stats.requests,
+        stats.states,
+        stats.batch_hist,
+        stats.lat_us[0],
+        stats.lat_us[2]
+    );
+    drop(client);
+    handle.stop().expect("daemon stop");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+    bench.emit_json("serve").expect("bench json");
+}

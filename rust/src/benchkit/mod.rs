@@ -14,6 +14,13 @@
 //! any bench whose mean regressed beyond a noise fraction; the
 //! `bench-compare` subcommand and the CI bench-trajectory job drive it
 //! (rust/DESIGN.md §12, README "Perf trajectory").
+//!
+//! A snapshot row with `iters == 0` is a **placeholder**: an estimate
+//! admitted into the trajectory without a measurement (a real
+//! [`Bench::run`]/[`Bench::record`] always yields `iters >= 1`). Compare
+//! still pairs such rows, but flags them informationally in
+//! [`CompareReport::render`] so a carried estimate can't silently pass as
+//! a measurement.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -255,6 +262,9 @@ pub struct Comparison {
     pub cur_mean_ns: f64,
     /// cur / prev — > 1 means slower.
     pub ratio: f64,
+    /// Either snapshot marks this row `iters == 0`: a carried estimate,
+    /// not a measurement. Compared like any row, flagged in render.
+    pub placeholder: bool,
 }
 
 /// Result of diffing two bench snapshots.
@@ -274,6 +284,12 @@ impl CompareReport {
         self.rows.iter().filter(|c| c.ratio > 1.0 + self.noise_frac).collect()
     }
 
+    /// Rows where either snapshot carries a placeholder (`iters == 0`).
+    /// Informational: these never fail a compare by themselves.
+    pub fn placeholders(&self) -> Vec<&Comparison> {
+        self.rows.iter().filter(|c| c.placeholder).collect()
+    }
+
     pub fn render(&self) -> String {
         let mut s = format!(
             "bench-compare: {} paired benches, noise threshold ±{:.0}%\n",
@@ -289,11 +305,19 @@ impl CompareReport {
                 "ok"
             };
             s.push_str(&format!(
-                "  {status:<9} {:<52} {:>10} -> {:>10}  x{:.2}\n",
+                "  {status:<9} {:<52} {:>10} -> {:>10}  x{:.2}{}\n",
                 format!("{}/{}", c.suite, c.name),
                 fmt_ns(c.prev_mean_ns),
                 fmt_ns(c.cur_mean_ns),
-                c.ratio
+                c.ratio,
+                if c.placeholder { "  [placeholder]" } else { "" }
+            ));
+        }
+        let ph = self.placeholders().len();
+        if ph > 0 {
+            s.push_str(&format!(
+                "  note: {ph} placeholder row(s) (iters == 0) — admitted estimates, \
+                 not measurements; re-run the bench on real hardware to retire them\n"
             ));
         }
         for name in &self.added {
@@ -306,7 +330,12 @@ impl CompareReport {
     }
 }
 
-fn snapshot_suites(root: &Json, which: &str) -> Result<BTreeMap<String, BTreeMap<String, f64>>> {
+/// Per-bench (mean_ns, placeholder?) — a row is a placeholder when its
+/// `iters` field is 0; snapshots predating the field count as measured.
+fn snapshot_suites(
+    root: &Json,
+    which: &str,
+) -> Result<BTreeMap<String, BTreeMap<String, (f64, bool)>>> {
     let suites = root
         .get("suites")
         .and_then(Json::as_obj)
@@ -321,7 +350,8 @@ fn snapshot_suites(root: &Json, which: &str) -> Result<BTreeMap<String, BTreeMap
             let mean = rec.get("mean_ns").and_then(Json::as_f64).ok_or_else(|| {
                 anyhow!("{which} snapshot: {sname}/{bname} lacks a numeric mean_ns")
             })?;
-            means.insert(bname.clone(), mean);
+            let placeholder = rec.get("iters").and_then(Json::as_f64) == Some(0.0);
+            means.insert(bname.clone(), (mean, placeholder));
         }
         out.insert(sname.clone(), means);
     }
@@ -339,14 +369,15 @@ pub fn compare(prev: &Json, cur: &Json, noise_frac: f64) -> Result<CompareReport
     let mut added = Vec::new();
     let mut removed = Vec::new();
     for (sname, benches) in &cur {
-        for (bname, &cur_mean) in benches {
+        for (bname, &(cur_mean, cur_ph)) in benches {
             match prev.get(sname).and_then(|b| b.get(bname)) {
-                Some(&prev_mean) if prev_mean > 0.0 => rows.push(Comparison {
+                Some(&(prev_mean, prev_ph)) if prev_mean > 0.0 => rows.push(Comparison {
                     suite: sname.clone(),
                     name: bname.clone(),
                     prev_mean_ns: prev_mean,
                     cur_mean_ns: cur_mean,
                     ratio: cur_mean / prev_mean,
+                    placeholder: prev_ph || cur_ph,
                 }),
                 _ => added.push(format!("{sname}/{bname}")),
             }
@@ -496,6 +527,54 @@ mod tests {
             .unwrap()
             .regressions()
             .is_empty());
+    }
+
+    /// A row with `iters == 0` (an admitted placeholder, e.g. the fleet
+    /// estimates in BENCH_8/BENCH_9) is paired and rendered with an
+    /// informational flag, but never fails the compare by itself — and a
+    /// record lacking the iters field entirely counts as measured.
+    #[test]
+    fn compare_flags_placeholder_rows_informationally() {
+        let mut ph = fake("fleet_row", 1_000.0);
+        ph.iters = 0;
+        let prev_b = bench_with(vec![fake("real", 100.0), ph.clone()]);
+        let cur_b = bench_with(vec![fake("real", 100.0), ph]);
+        let to_json = |b: &Bench| {
+            let mut m = BTreeMap::new();
+            for r in b.results() {
+                m.insert(r.name.clone(), r.to_json());
+            }
+            obj(vec![
+                ("format", Json::Num(1.0)),
+                ("suites", obj(vec![("fleet", Json::Obj(m))])),
+            ])
+        };
+        let report = compare(&to_json(&prev_b), &to_json(&cur_b), 0.30).unwrap();
+        assert_eq!(report.rows.len(), 2);
+        let phs = report.placeholders();
+        assert_eq!(phs.len(), 1);
+        assert_eq!(phs[0].name, "fleet_row");
+        assert!(report.regressions().is_empty(), "placeholders are informational");
+        let rendered = report.render();
+        assert_eq!(rendered.matches("[placeholder]").count(), 1, "{rendered}");
+        assert!(rendered.contains("1 placeholder row(s)"), "{rendered}");
+
+        // Pre-field snapshots: strip iters, nothing is a placeholder.
+        let mut legacy = to_json(&prev_b);
+        if let Json::Obj(top) = &mut legacy {
+            if let Some(Json::Obj(suites)) = top.get_mut("suites") {
+                if let Some(Json::Obj(benches)) = suites.get_mut("fleet") {
+                    for rec in benches.values_mut() {
+                        if let Json::Obj(fields) = rec {
+                            fields.remove("iters");
+                        }
+                    }
+                }
+            }
+        }
+        let report = compare(&legacy, &legacy, 0.30).unwrap();
+        assert!(report.placeholders().is_empty());
+        assert!(!report.render().contains("placeholder"));
     }
 
     #[test]

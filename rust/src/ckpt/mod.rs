@@ -325,6 +325,18 @@ pub fn latest_checkpoint(dir: &Path) -> Result<Option<PathBuf>> {
     Ok(best.map(|(_, p)| p))
 }
 
+/// Open the newest complete checkpoint under `dir`, fully verified (format
+/// tag, version, and every section checksum — [`CheckpointReader::open`]'s
+/// contract). `Ok(None)` when the directory is absent or holds none. This is
+/// the serving daemon's swap guard: a torn or corrupt checkpoint surfaces
+/// here as an error *before* any state moves.
+pub fn open_latest(dir: &Path) -> Result<Option<CheckpointReader>> {
+    match latest_checkpoint(dir)? {
+        Some(path) => CheckpointReader::open(&path).map(Some),
+        None => Ok(None),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,6 +401,11 @@ mod tests {
         let latest = latest_checkpoint(&dir).unwrap().unwrap();
         assert!(latest.ends_with("step_000000000100"));
         assert_eq!(latest_checkpoint(Path::new("/no/such/dir")).unwrap(), None);
+
+        // open_latest: same pick, fully verified; None off the end.
+        let r = open_latest(&dir).unwrap().unwrap();
+        assert_eq!(r.step(), 100);
+        assert!(open_latest(Path::new("/no/such/dir")).unwrap().is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -211,6 +211,18 @@ pub struct ExperimentConfig {
     /// silent for this long is reported as a heartbeat timeout. Not
     /// fingerprinted (wall-clock only; cannot move the trajectory).
     pub fleet_timeout_ms: u64,
+
+    // Policy-serving daemon (rust/DESIGN.md §15). Deployment knobs, not
+    // training knobs: none is fingerprinted or serialized by to_cli_args.
+    /// Max states the serve collector coalesces into one device
+    /// transaction (the daemon's W×B analog).
+    pub serve_max_batch: usize,
+    /// Collector flush deadline, microseconds: how long the first request
+    /// of a batch may wait for co-riders before the batch is dispatched.
+    /// 0 = dispatch immediately (no coalescing beyond what is queued).
+    pub serve_flush_us: u64,
+    /// Checkpoint-watcher poll interval, milliseconds.
+    pub serve_poll_ms: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -250,6 +262,9 @@ impl Default for ExperimentConfig {
             fleet_samplers: 0,
             fleet_lag: 0,
             fleet_timeout_ms: 60_000,
+            serve_max_batch: 32,
+            serve_flush_us: 500,
+            serve_poll_ms: 200,
         }
     }
 }
@@ -326,6 +341,9 @@ impl ExperimentConfig {
         c.fleet_samplers = doc.usize_or("fleet.samplers", c.fleet_samplers)?;
         c.fleet_lag = doc.usize_or("fleet.lag", c.fleet_lag as usize)? as u64;
         c.fleet_timeout_ms = doc.usize_or("fleet.timeout_ms", c.fleet_timeout_ms as usize)? as u64;
+        c.serve_max_batch = doc.usize_or("serve.max_batch", c.serve_max_batch)?;
+        c.serve_flush_us = doc.usize_or("serve.flush_us", c.serve_flush_us as usize)? as u64;
+        c.serve_poll_ms = doc.usize_or("serve.poll_ms", c.serve_poll_ms as usize)? as u64;
         c.validate()?;
         Ok(c)
     }
@@ -383,6 +401,9 @@ impl ExperimentConfig {
         self.fleet_samplers = args.usize_or("fleet-samplers", self.fleet_samplers)?;
         self.fleet_lag = args.u64_or("fleet-lag", self.fleet_lag)?;
         self.fleet_timeout_ms = args.u64_or("fleet-timeout-ms", self.fleet_timeout_ms)?;
+        self.serve_max_batch = args.usize_or("serve-max-batch", self.serve_max_batch)?;
+        self.serve_flush_us = args.u64_or("serve-flush-us", self.serve_flush_us)?;
+        self.serve_poll_ms = args.u64_or("serve-poll-ms", self.serve_poll_ms)?;
         self.validate()
     }
 
@@ -468,6 +489,16 @@ impl ExperimentConfig {
         if self.fleet_timeout_ms == 0 {
             bail!("fleet_timeout_ms must be >= 1 (it is the peer liveness window)");
         }
+        if self.serve_max_batch == 0 || self.serve_max_batch > 4_096 {
+            bail!(
+                "serve_max_batch = {} is out of range 1..=4096 (one device transaction's \
+                 worth of states; the engine pads to the next loaded infer entry)",
+                self.serve_max_batch
+            );
+        }
+        if self.serve_poll_ms == 0 {
+            bail!("serve_poll_ms must be >= 1 (it is the checkpoint-watcher poll interval)");
+        }
         Ok(())
     }
 
@@ -489,8 +520,10 @@ impl ExperimentConfig {
     /// spawned sampler process. `--key=value` form keeps the grammar
     /// unambiguous; floats print via Rust's shortest round-trip `Display`.
     /// Deliberately omitted: `ckpt_dir`/`ckpt_period` (samplers never
-    /// checkpoint) and `fleet_samplers` (topology, not trajectory). The
-    /// fingerprint handshake backstops any drift this list might develop.
+    /// checkpoint), `fleet_samplers` (topology, not trajectory), and the
+    /// `serve_*` knobs (deployment-side; a serving daemon has no training
+    /// trajectory at all). The fingerprint handshake backstops any drift
+    /// this list might develop.
     pub fn to_cli_args(&self) -> Vec<String> {
         let mut a: Vec<String> = Vec::new();
         let mut kv = |k: &str, v: String| a.push(format!("--{k}={v}"));
@@ -785,6 +818,42 @@ mod tests {
         bad = c.clone();
         bad.fleet_timeout_ms = 0;
         assert!(bad.validate().is_err(), "zero liveness window rejected");
+    }
+
+    #[test]
+    fn serve_knobs_default_parse_and_validate() {
+        let c = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(c.serve_max_batch, 32, "one train-minibatch worth of states");
+        assert_eq!(c.serve_flush_us, 500);
+        assert_eq!(c.serve_poll_ms, 200);
+
+        let doc = TomlDoc::parse(
+            "preset = \"smoke\"\n[serve]\nmax_batch = 64\nflush_us = 1_000\npoll_ms = 50\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.serve_max_batch, 64);
+        assert_eq!(c.serve_flush_us, 1_000);
+        assert_eq!(c.serve_poll_ms, 50);
+
+        let args = Args::parse(
+            ["--serve-max-batch", "8", "--serve-flush-us", "0", "--serve-poll-ms", "25"]
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.serve_max_batch, 8);
+        assert_eq!(c.serve_flush_us, 0, "flush 0 (dispatch immediately) is valid");
+        assert_eq!(c.serve_poll_ms, 25);
+
+        let mut bad = c.clone();
+        bad.serve_max_batch = 0;
+        assert!(bad.validate().is_err(), "zero batch rejected");
+        bad.serve_max_batch = 1_000_000;
+        assert!(bad.validate().is_err(), "absurd batch rejected");
+        bad = c.clone();
+        bad.serve_poll_ms = 0;
+        assert!(bad.validate().is_err(), "zero poll interval rejected");
     }
 
     /// `to_cli_args` → `Args::parse` → `apply_args` over a fresh preset

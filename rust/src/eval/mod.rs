@@ -62,7 +62,18 @@ impl Evaluator {
                 self.env.write_state(state);
                 let q = qnet.infer(Policy::Theta, state, 1)?;
                 let a = self.policy.select(&q, self.eps);
-                let r = self.env.step(a.min(self.env.num_actions() - 1));
+                let actions = self.env.num_actions();
+                // The policy is constructed with the env's action count, so
+                // an out-of-range action is a wiring bug (wrong net config,
+                // mismatched policy), not something to clamp away silently.
+                debug_assert!(a < actions, "policy selected action {a}, env has {actions}");
+                if a >= actions {
+                    anyhow::bail!(
+                        "evaluation policy selected action {a} but the environment \
+                         has only {actions} actions (policy/action-space mismatch)"
+                    );
+                }
+                let r = self.env.step(a);
                 steps += 1;
                 if r.done || steps >= self.max_steps_per_episode {
                     returns.push(self.env.episode_raw_return());
@@ -130,7 +141,14 @@ impl crate::ckpt::Snapshot for Evaluator {
                 self.eps, self.episodes
             );
         }
-        self.max_steps_per_episode = r.usize()?;
+        let max_steps = r.usize()?;
+        if max_steps != self.max_steps_per_episode {
+            anyhow::bail!(
+                "checkpoint evaluator ran max_steps_per_episode={max_steps}, \
+                 this run configures max_steps_per_episode={}",
+                self.max_steps_per_episode
+            );
+        }
         self.policy.set_rng_state(r.rng()?);
         self.env.load(r)
     }
@@ -162,6 +180,59 @@ mod tests {
         let n = normalized_score(18.9, -20.7, 9.3);
         assert!((n - 132.0).abs() < 0.5, "{n}");
         assert_eq!(normalized_score(5.0, 5.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_action_is_refused_not_clamped() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let device = std::sync::Arc::new(crate::runtime::Device::cpu().unwrap());
+        let manifest =
+            crate::runtime::Manifest::load_or_builtin(&crate::runtime::default_artifact_dir())
+                .unwrap();
+        let qnet = QNet::load(device, &manifest, "tiny", false, 32).unwrap();
+        let mut ev = Evaluator::new("seeker", 3, 2, 0.05).unwrap().with_max_steps(200);
+        // Recreate the mismatch the old clamp masked: a policy sized to the
+        // net's 6-entry Q-rows acting in seeker's 5-action env. Pure-random
+        // selection makes the out-of-range draw land within a few steps.
+        ev.policy = EpsGreedy::new(3, 0xEEE, qnet.spec().actions);
+        ev.eps = 1.0;
+        assert!(qnet.spec().actions > ev.env.num_actions());
+        match catch_unwind(AssertUnwindSafe(|| ev.run(&qnet, 0))) {
+            // Debug builds (cargo test keeps debug assertions): the
+            // assertion fires before the named error path.
+            Err(_) => {}
+            Ok(outcome) => {
+                let err = format!(
+                    "{:#}",
+                    outcome.expect_err("out-of-range action must be refused, not clamped")
+                );
+                assert!(err.contains("policy/action-space mismatch"), "{err}");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_refuses_max_steps_mismatch_by_name() {
+        let ev = Evaluator::new("seeker", 3, 2, 0.05).unwrap().with_max_steps(400);
+        let mut w = crate::ckpt::ByteWriter::new();
+        ev.save(&mut w);
+        let bytes = w.into_bytes();
+
+        // Matching configuration restores cleanly.
+        let mut same = Evaluator::new("seeker", 9, 2, 0.05).unwrap().with_max_steps(400);
+        let mut r = crate::ckpt::ByteReader::new(&bytes);
+        same.load(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(same.max_steps_per_episode, 400);
+
+        // A different cap is refused with the field named — the checkpoint
+        // must not silently override `with_max_steps`.
+        let mut other = Evaluator::new("seeker", 9, 2, 0.05).unwrap().with_max_steps(300);
+        let mut r = crate::ckpt::ByteReader::new(&bytes);
+        let err = other.load(&mut r).unwrap_err().to_string();
+        assert!(err.contains("max_steps_per_episode=400"), "{err}");
+        assert!(err.contains("max_steps_per_episode=300"), "{err}");
+        assert_eq!(other.max_steps_per_episode, 300);
     }
 
     #[test]

@@ -32,4 +32,5 @@ pub mod net;
 pub mod replay;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -9,6 +9,8 @@
 //!   speedtest  regenerate Tables 1-3 (DES by default; --real for scaled live runs)
 //!   suite      regenerate the Table 4 analog over the synthetic game suite
 //!   anchors    measure the Random / Human-proxy score anchors per game
+//!   serve      policy-serving daemon: newest checkpoint -> batched inference
+//!   serve-probe    scripted client for a running serve daemon (CI smoke)
 //!   config     print the resolved experiment configuration
 //!   bench-compare  diff two BENCH_<pr>.json perf snapshots, fail on regressions
 //!   help       this text
@@ -26,6 +28,7 @@ use tempo_dqn::hwsim::{simulate, CostModel, SimRun};
 use tempo_dqn::metrics::GanttTrace;
 use tempo_dqn::report::{table4, GameRow, RuntimeGrid};
 use tempo_dqn::runtime::default_artifact_dir;
+use tempo_dqn::serve::{ServeClient, ServeOpts, Server};
 use tempo_dqn::util::cli::Args;
 
 const HELP: &str = "\
@@ -65,6 +68,19 @@ SUBCOMMANDS:
   suite      --steps N --threads N [--games a,b,c] [--episodes N]
              [--eval-seed N]
   anchors    [--games a,b,c] [--episodes N] [--eval-seed N]
+  serve      --ckpt-dir DIR [--bind tcp:HOST:PORT|unix:PATH]
+             [--serve-max-batch N] [--serve-flush-us US] [--serve-poll-ms MS]
+             (daemon: restores the newest step_<N>/ checkpoint's theta,
+             answers act/stats requests over the fleet wire protocol,
+             hot-swaps when a newer checkpoint lands; runs until a client
+             sends shutdown)
+  serve-probe    --connect ADDR [--requests N] [--states-per-request N]
+             [--seed N] [--ckpt-dir DIR] [--await-step N] [--timeout-ms MS]
+             [--shutdown]
+             (scripted client: sends deterministic pseudo-random states;
+             with --ckpt-dir, checks the daemon's Q-rows bitwise against a
+             local restore of the same checkpoint; --await-step polls
+             stats until the daemon has hot-swapped that far)
   config     (same options as train; prints the resolved config)
   bench-compare  --prev FILE --cur FILE [--noise 0.30] (exit 1 if any bench
              mean regressed beyond the noise fraction; see README
@@ -106,6 +122,14 @@ bit-identical state digest to the single-process run. --fleet-lag K >= 1
 is the relaxed tier: samplers act window j with the theta_minus broadcast
 K window barriers earlier — a deterministic, reproducible, but different
 trajectory.
+
+serve (rust/DESIGN.md §15) turns a checkpoint directory into an inference
+daemon: concurrent act requests micro-batch into single device
+transactions (at most --serve-max-batch states, flushed --serve-flush-us
+after the first rider), and a watcher hot-swaps theta when a newer valid
+checkpoint lands — corrupt checkpoints are skipped with a named warning.
+Batched rows are bit-identical to single-sample QNet::infer under the
+same theta.
 ";
 
 fn main() {
@@ -126,6 +150,8 @@ fn main() {
         "speedtest" => cmd_speedtest(&args),
         "suite" => cmd_suite(&args),
         "anchors" => cmd_anchors(&args),
+        "serve" => cmd_serve(&args),
+        "serve-probe" => cmd_serve_probe(&args),
         "config" => cmd_config(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "help" | "--help" | "-h" => {
@@ -352,6 +378,164 @@ fn default_fleet_bind() -> Result<String> {
     {
         Ok(format!("tcp:127.0.0.1:{}", 40_000 + std::process::id() % 20_000))
     }
+}
+
+/// A private per-process endpoint for a serve daemon started without
+/// --bind (mainly tests and one-box smoke runs; real deployments pass an
+/// explicit address).
+fn default_serve_bind() -> Result<String> {
+    #[cfg(unix)]
+    {
+        let dir = std::env::temp_dir().join(format!("tempo-serve-{}", std::process::id()));
+        std::fs::create_dir_all(&dir)?;
+        Ok(format!("unix:{}", dir.join("serve.sock").display()))
+    }
+    #[cfg(not(unix))]
+    {
+        Ok(format!("tcp:127.0.0.1:{}", 41_000 + std::process::id() % 20_000))
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::resolve(args)?;
+    let Some(dir) = cfg.ckpt_dir.clone() else {
+        anyhow::bail!("serve needs --ckpt-dir DIR (the checkpoint directory to serve from)");
+    };
+    let bind = match args.str_opt("bind") {
+        Some(addr) => addr.to_string(),
+        None => default_serve_bind()?,
+    };
+    let opts = ServeOpts::from_config(&cfg);
+    let handle = Server::start(
+        std::path::Path::new(&dir),
+        &default_artifact_dir(),
+        &bind,
+        opts,
+    )?;
+    println!(
+        "serving {dir} at {} (step {}, max-batch {}, flush {}us, poll {}ms)",
+        handle.addr(),
+        handle.stats().step,
+        cfg.serve_max_batch,
+        cfg.serve_flush_us,
+        cfg.serve_poll_ms
+    );
+    handle.wait()?;
+    println!("serve: stopped");
+    Ok(())
+}
+
+fn cmd_serve_probe(args: &Args) -> Result<()> {
+    use tempo_dqn::env::STATE_BYTES;
+    use tempo_dqn::runtime::Policy;
+
+    let Some(connect) = args.str_opt("connect") else {
+        anyhow::bail!("serve-probe needs --connect ADDR (the daemon's --bind address)");
+    };
+    let requests = args.usize_or("requests", 16)?;
+    let per = args.usize_or("states-per-request", 2)?;
+    let timeout = std::time::Duration::from_millis(args.u64_or("timeout-ms", 10_000)?);
+    let await_step = args.u64_or("await-step", 0)?;
+    let mut client = ServeClient::connect(connect, timeout)?;
+
+    // Optional bitwise reference: restore the same checkpoint this process
+    // and compare the daemon's Q-rows against direct single-sample infer.
+    let local = match args.str_opt("ckpt-dir") {
+        Some(dir) => {
+            let dir = std::path::Path::new(dir);
+            let reader = tempo_dqn::ckpt::open_latest(dir)?.ok_or_else(|| {
+                anyhow::anyhow!("serve-probe --ckpt-dir: no checkpoint under {}", dir.display())
+            })?;
+            let mut r = reader.read_section("qnet", 1)?;
+            let t = tempo_dqn::runtime::QNetTheta::decode(&mut r)?;
+            let manifest = tempo_dqn::runtime::Manifest::load_or_builtin(&default_artifact_dir())?;
+            let device = Arc::new(tempo_dqn::runtime::Device::cpu()?);
+            let qnet = tempo_dqn::runtime::QNet::load(device, &manifest, &t.name, t.double, 32)?;
+            qnet.set_theta(&t.theta)?;
+            Some((reader.step(), qnet))
+        }
+        None => None,
+    };
+
+    let mut rng: u64 = 0x9E37_79B9_7F4A_7C15 ^ args.u64_or("seed", 1)?;
+    let mut compared = 0usize;
+    let mut mismatches = 0usize;
+    for _ in 0..requests {
+        let mut states = vec![0u8; per * STATE_BYTES];
+        for px in states.iter_mut() {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *px = (rng >> 56) as u8;
+        }
+        let reply = client.act(&states, per)?;
+        if let Some((step, qnet)) = &local {
+            // Only rows served under the locally loaded step are
+            // comparable; a mid-probe hot-swap makes later replies newer.
+            if reply.step == *step {
+                let actions = qnet.spec().actions;
+                for j in 0..per {
+                    let row =
+                        qnet.infer(Policy::Theta, &states[j * STATE_BYTES..(j + 1) * STATE_BYTES], 1)?;
+                    let want: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+                    let got: Vec<u32> = reply.q[j * actions..(j + 1) * actions]
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                    let act_ok = reply.actions[j] as usize == tempo_dqn::agent::argmax(&row);
+                    if got == want && act_ok {
+                        compared += 1;
+                    } else {
+                        mismatches += 1;
+                    }
+                }
+            }
+        }
+    }
+    if local.is_some() {
+        println!("serve-probe: {compared} rows bit-exact, {mismatches} mismatches");
+        if mismatches > 0 {
+            anyhow::bail!("serve-probe: {mismatches} row(s) diverged from direct QNet::infer");
+        }
+        if compared == 0 {
+            anyhow::bail!(
+                "serve-probe: no rows compared — the daemon already serves a newer \
+                 step than the local checkpoint restore"
+            );
+        }
+    }
+
+    if await_step > 0 {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let s = client.stats()?;
+            if s.step >= await_step {
+                println!(
+                    "serve-probe: daemon reached step {} after {} swap(s)",
+                    s.step, s.swaps
+                );
+                break;
+            }
+            if std::time::Instant::now() >= deadline {
+                anyhow::bail!(
+                    "serve-probe: daemon never reached step {await_step} (still at {})",
+                    s.step
+                );
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+    }
+
+    let s = client.stats()?;
+    println!(
+        "serve-probe: daemon stats: requests={} states={} step={} swaps={} skips={} \
+         lat p50={}us p90={}us p99={}us max={}us",
+        s.requests, s.states, s.step, s.swaps, s.swap_skips,
+        s.lat_us[0], s.lat_us[1], s.lat_us[2], s.lat_us[3]
+    );
+    if args.flag("shutdown") {
+        client.shutdown("serve-probe --shutdown")?;
+        println!("serve-probe: shutdown sent");
+    }
+    Ok(())
 }
 
 fn cmd_run_suite(args: &Args) -> Result<()> {

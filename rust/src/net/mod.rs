@@ -16,8 +16,10 @@
 //!   connections behind one `Read + Write` enum, with read timeouts (the
 //!   fleet's heartbeat clock).
 //!
-//! The protocol built on top (who sends what when) lives in
-//! `coordinator::fleet`; this module knows only bytes and messages.
+//! The protocols built on top (who sends what when) live in
+//! `coordinator::fleet` (sampler fleet) and [`crate::serve`] (policy
+//! serving daemon — kinds 7–10); this module knows only bytes and
+//! messages.
 
 pub mod endpoint;
 pub mod frame;
@@ -25,4 +27,4 @@ pub mod msg;
 
 pub use endpoint::{Conn, Endpoint, Listener};
 pub use frame::{read_frame, write_frame, MAX_FRAME, PROTOCOL_VERSION};
-pub use msg::{Msg, WindowUpload};
+pub use msg::{Msg, ServeStats, WindowUpload};

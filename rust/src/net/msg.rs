@@ -16,6 +16,15 @@
 //! | 4    | window-upload    | sampler → learner | after acting each window  |
 //! | 5    | heartbeat        | both              | while the other side waits|
 //! | 6    | shutdown         | learner → sampler | end of run / slice        |
+//! | 7    | act              | client → daemon   | serve inference request   |
+//! | 8    | act-result       | daemon → client   | reply to `act`            |
+//! | 9    | stats            | client → daemon   | serve stats request       |
+//! | 10   | stats-result     | daemon → client   | reply to `stats`          |
+//!
+//! Kinds 7–10 are the policy-serving daemon's catalog (rust/DESIGN.md §15):
+//! same frame layer, same codec, same `PROTOCOL_VERSION` — a fleet peer and
+//! a serve client speak the identical transport and differ only in which
+//! kinds they exchange.
 
 use anyhow::{bail, Context, Result};
 
@@ -30,6 +39,10 @@ pub const KIND_PARAM_BROADCAST: u8 = 3;
 pub const KIND_WINDOW_UPLOAD: u8 = 4;
 pub const KIND_HEARTBEAT: u8 = 5;
 pub const KIND_SHUTDOWN: u8 = 6;
+pub const KIND_ACT: u8 = 7;
+pub const KIND_ACT_RESULT: u8 = 8;
+pub const KIND_STATS: u8 = 9;
+pub const KIND_STATS_RESULT: u8 = 10;
 
 /// Human name of a message kind, used by every named wire error.
 pub fn kind_name(kind: u8) -> &'static str {
@@ -40,6 +53,10 @@ pub fn kind_name(kind: u8) -> &'static str {
         KIND_WINDOW_UPLOAD => "window-upload",
         KIND_HEARTBEAT => "heartbeat",
         KIND_SHUTDOWN => "shutdown",
+        KIND_ACT => "act",
+        KIND_ACT_RESULT => "act-result",
+        KIND_STATS => "stats",
+        KIND_STATS_RESULT => "stats-result",
         _ => "unknown",
     }
 }
@@ -63,6 +80,29 @@ pub struct WindowUpload {
     pub ctxs: Vec<Vec<u8>>,
     /// Staged transitions per global stream id, in stream order.
     pub streams: Vec<(u64, Vec<StagedTransition>)>,
+}
+
+/// The serving daemon's answer to a `stats` request: enough to watch a
+/// deployment without scraping logs — liveness, which checkpoint is live,
+/// how the collector is batching, and where the latency mass sits.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub uptime_ms: u64,
+    /// Training step of the currently loaded checkpoint.
+    pub step: u64,
+    /// Successful hot-swaps since startup.
+    pub swaps: u64,
+    /// Checkpoints the watcher refused (torn / corrupt / wrong network).
+    pub swap_skips: u64,
+    /// Act requests answered.
+    pub requests: u64,
+    /// States inferred (>= requests: one request may carry several states).
+    pub states: u64,
+    /// `(batch width, flush count)` pairs, ascending by width — the
+    /// collector's coalescing histogram.
+    pub batch_hist: Vec<(u64, u64)>,
+    /// Request latency percentiles in microseconds: p50, p90, p99, max.
+    pub lat_us: [u64; 4],
 }
 
 /// A typed fleet message. See the module table for the protocol roles.
@@ -99,6 +139,19 @@ pub enum Msg {
     /// Learner is done with this sampler (run complete or slice bound
     /// reached); the sampler exits cleanly.
     Shutdown { reason: String },
+    /// Serve request: `n` stacked frames (`n * STATE_BYTES` bytes,
+    /// row-major). `id` is an opaque client token echoed in the reply so a
+    /// pipelining client can correlate responses.
+    Act { id: u64, n: u64, states: Vec<u8> },
+    /// Reply to [`Msg::Act`]: greedy action per state plus the full Q-row
+    /// (`n * actions` f32s, raw IEEE-754 bits — bit-identical to a local
+    /// `QNet::infer` under the same theta). `step` names the checkpoint the
+    /// answer was computed under, so clients observe hot-swaps.
+    ActResult { id: u64, step: u64, actions: Vec<u8>, q: Vec<f32> },
+    /// Serve stats request (empty payload).
+    Stats,
+    /// Reply to [`Msg::Stats`].
+    StatsResult(ServeStats),
 }
 
 impl Msg {
@@ -110,6 +163,10 @@ impl Msg {
             Msg::Upload(_) => KIND_WINDOW_UPLOAD,
             Msg::Heartbeat => KIND_HEARTBEAT,
             Msg::Shutdown { .. } => KIND_SHUTDOWN,
+            Msg::Act { .. } => KIND_ACT,
+            Msg::ActResult { .. } => KIND_ACT_RESULT,
+            Msg::Stats => KIND_STATS,
+            Msg::StatsResult(_) => KIND_STATS_RESULT,
         }
     }
 
@@ -170,6 +227,34 @@ impl Msg {
             }
             Msg::Heartbeat => {}
             Msg::Shutdown { reason } => w.put_str(reason),
+            Msg::Act { id, n, states } => {
+                w.put_u64(*id);
+                w.put_u64(*n);
+                w.put_bytes(states);
+            }
+            Msg::ActResult { id, step, actions, q } => {
+                w.put_u64(*id);
+                w.put_u64(*step);
+                w.put_bytes(actions);
+                w.put_f32_slice(q);
+            }
+            Msg::Stats => {}
+            Msg::StatsResult(s) => {
+                w.put_u64(s.uptime_ms);
+                w.put_u64(s.step);
+                w.put_u64(s.swaps);
+                w.put_u64(s.swap_skips);
+                w.put_u64(s.requests);
+                w.put_u64(s.states);
+                w.put_usize(s.batch_hist.len());
+                for &(width, count) in &s.batch_hist {
+                    w.put_u64(width);
+                    w.put_u64(count);
+                }
+                for v in s.lat_us {
+                    w.put_u64(v);
+                }
+            }
         }
         w.into_bytes()
     }
@@ -243,6 +328,45 @@ impl Msg {
             }
             KIND_HEARTBEAT => Msg::Heartbeat,
             KIND_SHUTDOWN => Msg::Shutdown { reason: r.str()?.to_string() },
+            KIND_ACT => Msg::Act {
+                id: r.u64()?,
+                n: r.u64()?,
+                states: r.bytes()?.to_vec(),
+            },
+            KIND_ACT_RESULT => Msg::ActResult {
+                id: r.u64()?,
+                step: r.u64()?,
+                actions: r.bytes()?.to_vec(),
+                q: r.f32_vec()?,
+            },
+            KIND_STATS => Msg::Stats,
+            KIND_STATS_RESULT => {
+                let uptime_ms = r.u64()?;
+                let step = r.u64()?;
+                let swaps = r.u64()?;
+                let swap_skips = r.u64()?;
+                let requests = r.u64()?;
+                let states = r.u64()?;
+                let n = r.usize()?;
+                let mut batch_hist = Vec::with_capacity(n);
+                for _ in 0..n {
+                    batch_hist.push((r.u64()?, r.u64()?));
+                }
+                let mut lat_us = [0u64; 4];
+                for v in &mut lat_us {
+                    *v = r.u64()?;
+                }
+                Msg::StatsResult(ServeStats {
+                    uptime_ms,
+                    step,
+                    swaps,
+                    swap_skips,
+                    requests,
+                    states,
+                    batch_hist,
+                    lat_us,
+                })
+            }
             other => bail!("unknown fleet message kind {other}"),
         })
     }
@@ -361,6 +485,60 @@ mod tests {
             }
             other => panic!("decoded {other:?}"),
         }
+    }
+
+    #[test]
+    fn act_and_result_round_trip_bit_exact() {
+        match round_trip(&Msg::Act { id: 42, n: 2, states: vec![7u8; 32] }) {
+            Msg::Act { id, n, states } => {
+                assert_eq!((id, n), (42, 2));
+                assert_eq!(states, vec![7u8; 32]);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        // Q-rows travel as raw bits like param broadcasts: NaN, -0.0 and
+        // denormals must survive so daemon replies stay bit-comparable to
+        // a local infer.
+        let q = vec![f32::from_bits(0x7FC0_0042), -0.0, 1.5e-42, -2.25];
+        let msg = Msg::ActResult { id: 9, step: 1280, actions: vec![3, 0], q: q.clone() };
+        match round_trip(&msg) {
+            Msg::ActResult { id, step, actions, q: got } => {
+                assert_eq!((id, step), (9, 1280));
+                assert_eq!(actions, vec![3, 0]);
+                let got: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u32> = q.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_round_trips() {
+        assert!(matches!(round_trip(&Msg::Stats), Msg::Stats));
+        let stats = ServeStats {
+            uptime_ms: 12_500,
+            step: 256,
+            swaps: 2,
+            swap_skips: 1,
+            requests: 900,
+            states: 1_024,
+            batch_hist: vec![(1, 700), (4, 40), (32, 5)],
+            lat_us: [90, 240, 900, 4_000],
+        };
+        match round_trip(&Msg::StatsResult(stats.clone())) {
+            Msg::StatsResult(got) => assert_eq!(got, stats),
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_kinds_fail_trailing_bytes_with_name() {
+        let mut payload = Msg::Act { id: 1, n: 1, states: vec![0u8; 4] }.encode();
+        payload.push(0xFF);
+        let err = format!("{:#}", Msg::decode(KIND_ACT, &payload).unwrap_err());
+        assert!(err.contains("act"), "unexpected error: {err}");
+        assert!(err.contains("trailing"), "unexpected error: {err}");
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub use kernels::KernelMode;
 pub use manifest::{Dtype, Entry, InputSig, Manifest, NetSpec};
 pub use native::{NativeEngine, NetArch};
 pub use pool::ComputePool;
-pub use qnet::{Policy, QNet, QNetSnapshot, TrainBatch, TrainOutcome};
+pub use qnet::{Policy, QNet, QNetSnapshot, QNetTheta, TrainBatch, TrainOutcome};
 pub use tensor::{DataVec, DataView, HostTensor, TensorView};
 
 use std::path::PathBuf;

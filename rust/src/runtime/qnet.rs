@@ -433,6 +433,69 @@ impl crate::ckpt::Snapshot for QNetSnapshot<'_> {
     }
 }
 
+/// The theta-only prefix of a checkpoint's `"qnet"` section: what a serving
+/// process needs — the online parameters plus enough identity to refuse the
+/// wrong network — without materializing the optimizer accumulators or the
+/// target copy (3/4 of the section at nature scale).
+///
+/// Decodes exactly the prefix [`QNetSnapshot::save`] writes (name,
+/// param_count, double flag, theta) and then *stops*: callers must NOT
+/// `finish()` the reader, because g/s/theta_minus/counters legitimately
+/// remain unread.
+pub struct QNetTheta {
+    pub name: String,
+    pub param_count: usize,
+    pub double: bool,
+    pub theta: Vec<f32>,
+}
+
+impl QNetTheta {
+    pub fn decode(r: &mut crate::ckpt::ByteReader<'_>) -> Result<QNetTheta> {
+        let name = r.str()?.to_string();
+        let param_count = r.usize()?;
+        let double = r.bool()?;
+        let theta = r.f32_vec()?;
+        if theta.len() != param_count {
+            bail!(
+                "qnet section declares {param_count} parameters but theta carries {}",
+                theta.len()
+            );
+        }
+        Ok(QNetTheta { name, param_count, double, theta })
+    }
+}
+
 fn qkey(config: &str, entry: &str) -> String {
     format!("{config}/{entry}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::{ByteReader, ByteWriter, Snapshot};
+    use crate::runtime::{default_artifact_dir, Manifest};
+
+    #[test]
+    fn theta_prefix_decodes_from_full_snapshot() {
+        let device = Arc::new(Device::cpu().unwrap());
+        let manifest = Manifest::load_or_builtin(&default_artifact_dir()).unwrap();
+        let qnet = QNet::load(device, &manifest, "tiny", false, 32).unwrap();
+
+        let mut w = ByteWriter::new();
+        QNetSnapshot(&qnet).save(&mut w);
+        let bytes = w.into_bytes();
+
+        let mut r = ByteReader::new(&bytes);
+        let t = QNetTheta::decode(&mut r).unwrap();
+        assert_eq!(t.name, qnet.spec().name);
+        assert_eq!(t.param_count, qnet.spec().param_count);
+        assert!(!t.double);
+        // Bit-exact against the live parameters; the unread suffix
+        // (g/s/theta_minus/counters) is the point of the prefix decoder,
+        // so finish() must fail here.
+        let want: Vec<u32> = qnet.theta_host().unwrap().iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = t.theta.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+        assert!(r.finish().is_err(), "snapshot suffix should remain unread");
+    }
 }

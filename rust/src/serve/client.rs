@@ -1,0 +1,82 @@
+//! Thin blocking client for the serving daemon.
+//!
+//! One request in flight per connection; request ids correlate replies so
+//! a desynchronized stream is caught by name rather than silently
+//! mispaired. Used by `tempo-dqn serve-probe`, the e2e tests, and the
+//! `serve_qps` bench.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::net::{Conn, Endpoint, Msg, ServeStats};
+
+/// One answered `act` request.
+#[derive(Clone, Debug)]
+pub struct ActReply {
+    /// Checkpoint step whose theta produced the rows.
+    pub step: u64,
+    /// Greedy action per submitted state.
+    pub actions: Vec<u8>,
+    /// Q-rows, `n * actions` values, in submission order.
+    pub q: Vec<f32>,
+}
+
+pub struct ServeClient {
+    conn: Conn,
+    next_id: u64,
+}
+
+impl ServeClient {
+    /// Connect to a daemon at `addr` (`unix:PATH` / `tcp:HOST:PORT`).
+    /// `timeout` bounds both the connect retries and every reply wait, so
+    /// it must exceed the daemon's flush deadline.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<ServeClient> {
+        let ep = Endpoint::parse(addr)?;
+        let conn = Conn::connect(&ep, timeout)?;
+        conn.set_read_timeout(Some(timeout))?;
+        Ok(ServeClient { conn, next_id: 1 })
+    }
+
+    /// Submit `n` stacked frames and block for the batched answer.
+    pub fn act(&mut self, states: &[u8], n: usize) -> Result<ActReply> {
+        let id = self.next_id;
+        self.next_id += 1;
+        Msg::Act { id, n: n as u64, states: states.to_vec() }.send(&mut self.conn)?;
+        loop {
+            match Msg::recv(&mut self.conn)? {
+                Msg::ActResult { id: rid, step, actions, q } => {
+                    if rid != id {
+                        bail!("serve reply correlates to request {rid}, expected {id}");
+                    }
+                    if actions.len() != n {
+                        bail!("serve reply carries {} actions for {n} states", actions.len());
+                    }
+                    return Ok(ActReply { step, actions, q });
+                }
+                Msg::Heartbeat => continue,
+                Msg::Shutdown { reason } => bail!("serve daemon closed the connection: {reason}"),
+                other => bail!("serve: expected act-result, daemon sent {}", other.name()),
+            }
+        }
+    }
+
+    /// Fetch the daemon's observability counters.
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        Msg::Stats.send(&mut self.conn)?;
+        loop {
+            match Msg::recv(&mut self.conn)? {
+                Msg::StatsResult(stats) => return Ok(stats),
+                Msg::Heartbeat => continue,
+                Msg::Shutdown { reason } => bail!("serve daemon closed the connection: {reason}"),
+                other => bail!("serve: expected stats-result, daemon sent {}", other.name()),
+            }
+        }
+    }
+
+    /// Ask the daemon to stop (whole-daemon shutdown, not just this
+    /// connection) and consume this client.
+    pub fn shutdown(mut self, reason: &str) -> Result<()> {
+        Msg::Shutdown { reason: reason.to_string() }.send(&mut self.conn)
+    }
+}

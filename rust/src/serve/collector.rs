@@ -1,0 +1,270 @@
+//! Micro-batching collector: coalesces concurrent `act` requests into
+//! single engine transactions.
+//!
+//! Connection handlers enqueue [`Pending`] entries; one worker thread
+//! drains the queue into a batch bounded two ways — at most `max_batch`
+//! states, and at most `flush` of waiting counted from the *first* queued
+//! request (so a lone request under light load pays one flush deadline,
+//! never more). The whole batch runs as one `QNet::infer` under the swap
+//! lock; rows are then split back per request.
+//!
+//! Per-sample forwards make this free of accuracy trade-offs: a row in a
+//! 32-wide batch is bit-identical to the same state inferred alone
+//! (`runtime/native.rs` documents the invariance; `tests/serve.rs` pins
+//! it end-to-end).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::agent::argmax;
+use crate::runtime::Policy;
+
+use super::ServeShared;
+
+/// One batched-inference answer, pre-split for a single request.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    /// Checkpoint step whose theta produced these rows.
+    pub step: u64,
+    /// Greedy action per state (argmax of the matching Q-row).
+    pub actions: Vec<u8>,
+    /// Q-rows, `n * actions` values, request order.
+    pub q: Vec<f32>,
+}
+
+struct Pending {
+    states: Vec<u8>,
+    n: usize,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<Reply>>,
+}
+
+/// Latency ring capacity: enough for percentile stability, bounded so a
+/// long-lived daemon never grows.
+const LAT_RING: usize = 4096;
+
+/// Observability counters owned by the collector, snapshotted by `stats`.
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub states: AtomicU64,
+    /// batch width -> number of flushes at that width.
+    hist: Mutex<BTreeMap<u64, u64>>,
+    /// Ring of recent per-request latencies (enqueue -> reply), in µs.
+    lats: Mutex<LatRing>,
+}
+
+struct LatRing {
+    buf: Vec<u64>,
+    next: usize,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            states: AtomicU64::new(0),
+            hist: Mutex::new(BTreeMap::new()),
+            lats: Mutex::new(LatRing { buf: Vec::new(), next: 0 }),
+        }
+    }
+
+    fn record_flush(&self, width: u64) {
+        *self.hist.lock().unwrap().entry(width).or_insert(0) += 1;
+    }
+
+    fn record_request(&self, n: u64, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.states.fetch_add(n, Ordering::Relaxed);
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        let mut ring = self.lats.lock().unwrap();
+        if ring.buf.len() < LAT_RING {
+            ring.buf.push(us);
+        } else {
+            let slot = ring.next;
+            ring.buf[slot] = us;
+        }
+        ring.next = (ring.next + 1) % LAT_RING;
+    }
+
+    /// (batch histogram ascending by width, [p50, p90, p99, max] µs).
+    pub fn snapshot(&self) -> (Vec<(u64, u64)>, [u64; 4]) {
+        let hist = self
+            .hist
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&w, &c)| (w, c))
+            .collect();
+        let mut lats = self.lats.lock().unwrap().buf.clone();
+        let lat_us = if lats.is_empty() {
+            [0; 4]
+        } else {
+            lats.sort_unstable();
+            let pick = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
+            [pick(0.50), pick(0.90), pick(0.99), *lats.last().unwrap()]
+        };
+        (hist, lat_us)
+    }
+}
+
+struct Inner {
+    shared: Arc<ServeShared>,
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    max_batch: usize,
+    flush: Duration,
+}
+
+/// Cloneable handle to the batching queue; one worker thread serves all
+/// clones.
+#[derive(Clone)]
+pub struct Collector {
+    inner: Arc<Inner>,
+}
+
+impl Collector {
+    pub fn spawn(
+        shared: Arc<ServeShared>,
+        max_batch: usize,
+        flush: Duration,
+    ) -> (Collector, JoinHandle<()>) {
+        let inner = Arc::new(Inner {
+            shared,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            max_batch: max_batch.max(1),
+            flush,
+        });
+        let worker = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("serve-collect".into())
+                .spawn(move || worker_loop(&inner))
+                .expect("spawn serve-collect thread")
+        };
+        (Collector { inner }, worker)
+    }
+
+    /// Enqueue `n` states for the next batch; the receiver yields exactly
+    /// one `Reply` (or the named error that refused the whole batch).
+    pub fn submit(&self, states: Vec<u8>, n: usize) -> mpsc::Receiver<Result<Reply>> {
+        let (tx, rx) = mpsc::channel();
+        if self.inner.stop.load(Ordering::SeqCst) {
+            let _ = tx.send(Err(anyhow!("serve collector is stopped")));
+            return rx;
+        }
+        let pending = Pending { states, n, enqueued: Instant::now(), reply: tx };
+        self.inner.queue.lock().unwrap().push_back(pending);
+        self.inner.cv.notify_one();
+        rx
+    }
+
+    /// Stop the worker after it drains everything already queued.
+    pub fn stop(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let mut q = inner.queue.lock().unwrap();
+        // Sleep until work arrives. Stop only returns once the queue is
+        // empty: in-flight requests always complete.
+        while q.is_empty() {
+            if inner.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let (guard, _) = inner
+                .cv
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            q = guard;
+        }
+
+        // Batch window: wait for co-riders until the first request's flush
+        // deadline or the state budget fills, whichever comes first.
+        let deadline = q.front().unwrap().enqueued + inner.flush;
+        loop {
+            let total: usize = q.iter().map(|p| p.n).sum();
+            if total >= inner.max_batch || inner.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = inner.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+
+        // Drain whole requests up to max_batch; a single oversize request
+        // still goes through alone (QNet::infer pads past loaded batch
+        // sizes in chunks, so correctness is unaffected).
+        let mut batch: Vec<Pending> = Vec::new();
+        let mut total = 0usize;
+        while let Some(p) = q.front() {
+            if !batch.is_empty() && total + p.n > inner.max_batch {
+                break;
+            }
+            total += p.n;
+            batch.push(q.pop_front().unwrap());
+        }
+        drop(q);
+        flush_batch(inner, batch, total);
+    }
+}
+
+fn flush_batch(inner: &Inner, batch: Vec<Pending>, total: usize) {
+    let shared = &inner.shared;
+    let mut states = Vec::with_capacity(batch.iter().map(|p| p.states.len()).sum());
+    for p in &batch {
+        states.extend_from_slice(&p.states);
+    }
+
+    // Atomic (theta, step) pair: the step we report is the checkpoint the
+    // forward pass actually ran under (see ServeShared::swap_lock).
+    let outcome = {
+        let _pair = shared.swap_lock.lock().unwrap();
+        let step = shared.step.load(Ordering::SeqCst);
+        shared
+            .qnet
+            .infer(Policy::Theta, &states, total)
+            .map(|q| (step, q))
+    };
+
+    match outcome {
+        Ok((step, q)) => {
+            let actions_per = shared.qnet.spec().actions;
+            let done = Instant::now();
+            let mut row = 0usize;
+            for p in batch {
+                let rows = q[row * actions_per..(row + p.n) * actions_per].to_vec();
+                row += p.n;
+                let acts: Vec<u8> = rows
+                    .chunks(actions_per)
+                    .map(|r| argmax(r) as u8)
+                    .collect();
+                shared
+                    .metrics
+                    .record_request(p.n as u64, done.duration_since(p.enqueued));
+                let _ = p.reply.send(Ok(Reply { step, actions: acts, q: rows }));
+            }
+            shared.metrics.record_flush(total as u64);
+        }
+        Err(e) => {
+            // anyhow::Error is not Clone; every rider gets the same text.
+            let msg = format!("batched inference failed: {e:#}");
+            for p in batch {
+                let _ = p.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,365 @@
+//! Policy-serving daemon (rust/DESIGN.md §15).
+//!
+//! `tempo-dqn serve` turns a checkpoint directory into an inference
+//! service: it restores the newest `step_<N>/` checkpoint's theta (nothing
+//! else — no replay, no optimizer state), listens on the fleet wire
+//! protocol, and answers `act` requests with greedy actions plus the raw
+//! Q-rows. Three moving parts:
+//!
+//! * [`collector`] — the micro-batching heart. Concurrent client requests
+//!   coalesce into single engine transactions (the same W×B batched shape
+//!   the training coordinator uses), bounded by `max_batch` states and a
+//!   flush deadline counted from the first queued request.
+//! * [`swap`] — a background watcher that polls the checkpoint directory
+//!   and hot-swaps theta when a newer checkpoint lands. Verification is
+//!   checksums-first: a torn or corrupt checkpoint is skipped with a named
+//!   warning and the daemon keeps serving the old parameters.
+//! * the server loop here — one handler thread per connection, all feeding
+//!   the shared collector.
+//!
+//! Determinism contract: *which* requests share a batch is wall-clock
+//! (deliberately not deterministic); the *rows* are — the native engine's
+//! forward pass is per-sample, so a batched reply is bit-identical to a
+//! single-sample `QNet::infer` under the same theta. The swap lock makes
+//! (theta, step) one atomic pair: every reply's Q-row was computed under
+//! exactly the checkpoint step it reports.
+
+pub mod client;
+pub mod collector;
+pub mod swap;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::net::{Conn, Endpoint, Listener, Msg, ServeStats};
+use crate::runtime::{Device, Manifest, QNet, QNetTheta};
+
+pub use client::{ActReply, ServeClient};
+pub use collector::Collector;
+
+/// Serving knobs (`[serve]` in config TOML, `--serve-*` on the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Max states coalesced into one device transaction.
+    pub max_batch: usize,
+    /// How long the first request of a batch waits for co-riders.
+    pub flush: Duration,
+    /// Checkpoint-watcher poll interval.
+    pub poll: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            max_batch: 32,
+            flush: Duration::from_micros(500),
+            poll: Duration::from_millis(200),
+        }
+    }
+}
+
+impl ServeOpts {
+    pub fn from_config(cfg: &ExperimentConfig) -> ServeOpts {
+        ServeOpts {
+            max_batch: cfg.serve_max_batch,
+            flush: Duration::from_micros(cfg.serve_flush_us),
+            poll: Duration::from_millis(cfg.serve_poll_ms),
+        }
+    }
+}
+
+/// State shared by the collector, the swapper, and every connection
+/// handler.
+pub struct ServeShared {
+    pub(crate) qnet: QNet,
+    /// Guards the (theta, step) pair: the swapper holds it across
+    /// `set_theta` + step store, the collector across step load + infer —
+    /// so a reply can never pair one checkpoint's parameters with
+    /// another's step.
+    pub(crate) swap_lock: Mutex<()>,
+    pub(crate) step: AtomicU64,
+    pub(crate) swaps: AtomicU64,
+    pub(crate) swap_skips: AtomicU64,
+    pub(crate) metrics: collector::Metrics,
+    started: Instant,
+}
+
+impl ServeShared {
+    /// Snapshot the daemon's observability counters.
+    pub fn stats(&self) -> ServeStats {
+        let (batch_hist, lat_us) = self.metrics.snapshot();
+        ServeStats {
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+            step: self.step.load(Ordering::SeqCst),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            swap_skips: self.swap_skips.load(Ordering::Relaxed),
+            requests: self.metrics.requests.load(Ordering::Relaxed),
+            states: self.metrics.states.load(Ordering::Relaxed),
+            batch_hist,
+            lat_us,
+        }
+    }
+}
+
+/// Daemon-wide stop signal. `trigger` also pokes the listener with a
+/// throwaway connection so a blocked `accept` observes the flag.
+struct StopToken {
+    flag: AtomicBool,
+    addr: String,
+}
+
+impl StopToken {
+    fn is_set(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    fn trigger(&self) {
+        if self.flag.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Ok(ep) = Endpoint::parse(&self.addr) {
+            let _ = Conn::connect(&ep, Duration::from_millis(250));
+        }
+    }
+}
+
+/// The serving daemon. [`Server::start`] restores the newest checkpoint,
+/// binds the endpoint, and spawns the collector, the swap watcher, and the
+/// accept loop; the returned handle owns their lifetimes.
+pub struct Server;
+
+impl Server {
+    pub fn start(
+        ckpt_dir: &Path,
+        artifact_dir: &Path,
+        bind: &str,
+        opts: ServeOpts,
+    ) -> Result<ServerHandle> {
+        // Checksums-first restore of the serving parameters: open_latest
+        // verifies the whole checkpoint before a byte of state moves.
+        let reader = crate::ckpt::open_latest(ckpt_dir)
+            .with_context(|| format!("scanning checkpoint dir {}", ckpt_dir.display()))?
+            .ok_or_else(|| {
+                anyhow!(
+                    "no checkpoint under {} — train with --ckpt-dir first",
+                    ckpt_dir.display()
+                )
+            })?;
+        let mut r = reader.read_section("qnet", 1)?;
+        let t = QNetTheta::decode(&mut r)
+            .with_context(|| format!("reading qnet section of {}", reader.path().display()))?;
+
+        // The checkpoint names its own network config; the daemon needs no
+        // --net flag. Single compute lane: serving is latency-bound, not
+        // minibatch-bound.
+        let manifest = Manifest::load_or_builtin(artifact_dir)?;
+        let device = Arc::new(Device::cpu()?);
+        let qnet = QNet::load(device, &manifest, &t.name, t.double, 32)
+            .with_context(|| format!("loading network {:?} for serving", t.name))?;
+        qnet.set_theta(&t.theta)?;
+
+        let shared = Arc::new(ServeShared {
+            qnet,
+            swap_lock: Mutex::new(()),
+            step: AtomicU64::new(reader.step()),
+            swaps: AtomicU64::new(0),
+            swap_skips: AtomicU64::new(0),
+            metrics: collector::Metrics::new(),
+            started: Instant::now(),
+        });
+
+        let listener = Endpoint::parse(bind)?.bind()?;
+        let addr = listener.local_addr_string()?;
+        let stop = Arc::new(StopToken { flag: AtomicBool::new(false), addr: addr.clone() });
+
+        let (collector, worker) = Collector::spawn(shared.clone(), opts.max_batch, opts.flush);
+        let watcher = swap::spawn_watcher(
+            shared.clone(),
+            ckpt_dir.to_path_buf(),
+            opts.poll,
+            stop.clone(),
+        );
+        let accept = {
+            let shared = shared.clone();
+            let collector = collector.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(listener, shared, collector, stop))
+                .expect("spawn serve-accept thread")
+        };
+
+        Ok(ServerHandle {
+            shared,
+            stop,
+            addr,
+            collector,
+            threads: vec![accept, watcher, worker],
+        })
+    }
+}
+
+pub struct ServerHandle {
+    shared: Arc<ServeShared>,
+    stop: Arc<StopToken>,
+    addr: String,
+    collector: Collector,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address in `Endpoint::parse` form (`unix:…` / `tcp:…`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Local (in-process) stats snapshot — same payload a `stats` request
+    /// returns over the wire.
+    pub fn stats(&self) -> ServeStats {
+        self.shared.stats()
+    }
+
+    /// Stop the daemon: unblock the accept loop, flush in-flight requests,
+    /// and join every owned thread.
+    pub fn stop(self) -> Result<()> {
+        self.stop.trigger();
+        self.join()
+    }
+
+    /// Block until a client sends `shutdown` (the CLI daemon's main loop).
+    pub fn wait(self) -> Result<()> {
+        self.join()
+    }
+
+    fn join(mut self) -> Result<()> {
+        // Accept loop first (it exits once the stop token is triggered —
+        // by `stop()` above or by a client's shutdown message), then the
+        // collector drains what is queued, then the watcher notices.
+        let accept = self.threads.remove(0);
+        accept
+            .join()
+            .map_err(|_| anyhow!("serve accept loop panicked"))?;
+        self.stop.trigger();
+        self.collector.stop();
+        for t in self.threads {
+            t.join().map_err(|_| anyhow!("serve worker thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+fn accept_loop(
+    listener: Listener,
+    shared: Arc<ServeShared>,
+    collector: Collector,
+    stop: Arc<StopToken>,
+) {
+    loop {
+        match listener.accept() {
+            Ok(conn) => {
+                if stop.is_set() {
+                    return;
+                }
+                let shared = shared.clone();
+                let collector = collector.clone();
+                let stop = stop.clone();
+                // Handlers are detached: each lives exactly as long as its
+                // connection and owns nothing the daemon must reclaim.
+                let _ = std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || handle_conn(conn, shared, collector, stop));
+            }
+            Err(e) => {
+                if stop.is_set() {
+                    return;
+                }
+                eprintln!("serve: accept failed: {e:#}");
+            }
+        }
+    }
+}
+
+/// One connection's message loop. A wire fault (corrupt frame, bad
+/// checksum, disconnect) drops *this* connection only — the daemon and
+/// every other client keep running.
+fn handle_conn(
+    mut conn: Conn,
+    shared: Arc<ServeShared>,
+    collector: Collector,
+    stop: Arc<StopToken>,
+) {
+    loop {
+        let msg = match Msg::recv(&mut conn) {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        match msg {
+            Msg::Act { id, n, states } => match act(&shared, &collector, n as usize, states) {
+                Ok(reply) => {
+                    let out = Msg::ActResult {
+                        id,
+                        step: reply.step,
+                        actions: reply.actions,
+                        q: reply.q,
+                    };
+                    if out.send(&mut conn).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    // The protocol has no error kind; a refused request is
+                    // answered with a reasoned shutdown of this connection.
+                    let _ = Msg::Shutdown { reason: format!("act refused: {e:#}") }.send(&mut conn);
+                    return;
+                }
+            },
+            Msg::Stats => {
+                if Msg::StatsResult(shared.stats()).send(&mut conn).is_err() {
+                    return;
+                }
+            }
+            Msg::Heartbeat => {}
+            Msg::Shutdown { reason } => {
+                // Client-initiated daemon stop (ops / tests / CI smoke).
+                println!("serve: shutdown requested: {reason}");
+                stop.trigger();
+                return;
+            }
+            other => {
+                let _ = Msg::Shutdown {
+                    reason: format!("unexpected {} message on a serve connection", other.name()),
+                }
+                .send(&mut conn);
+                return;
+            }
+        }
+    }
+}
+
+fn act(
+    shared: &ServeShared,
+    collector: &Collector,
+    n: usize,
+    states: Vec<u8>,
+) -> Result<collector::Reply> {
+    let [h, w, c] = shared.qnet.spec().frame;
+    let frame = h * w * c;
+    if n == 0 {
+        anyhow::bail!("act request carries zero states");
+    }
+    if states.len() != n * frame {
+        anyhow::bail!(
+            "act request carries {} bytes for {n} states; this network takes {frame} bytes each",
+            states.len()
+        );
+    }
+    let rx = collector.submit(states, n);
+    rx.recv()
+        .map_err(|_| anyhow!("serve collector stopped before replying"))?
+}

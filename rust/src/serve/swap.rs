@@ -1,0 +1,120 @@
+//! Checkpoint watcher: polls the serving directory and hot-swaps theta.
+//!
+//! Safety order is verify-then-swap: `CheckpointReader::open` checks the
+//! format tag, version, and every section checksum *before* any daemon
+//! state moves, so a torn or corrupt checkpoint surfaces as a named
+//! warning (and a `swap_skips` tick) while the old parameters keep
+//! serving. A failed path is warned about once and then left alone until
+//! a newer checkpoint supersedes it — no log spam at poll frequency.
+//!
+//! Swaps only move forward: a checkpoint whose step is <= the loaded step
+//! is stale and ignored.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::ckpt::CheckpointReader;
+use crate::runtime::QNetTheta;
+
+use super::{ServeShared, StopToken};
+
+pub(crate) fn spawn_watcher(
+    shared: Arc<ServeShared>,
+    dir: PathBuf,
+    poll: Duration,
+    stop: Arc<StopToken>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("serve-swap".into())
+        .spawn(move || {
+            let mut failed: Option<PathBuf> = None;
+            while !stop.is_set() {
+                poll_once(&shared, &dir, &mut failed);
+                // Sleep in slices so stop stays responsive under long
+                // poll intervals.
+                let mut slept = Duration::ZERO;
+                while slept < poll && !stop.is_set() {
+                    let slice = (poll - slept).min(Duration::from_millis(20));
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+            }
+        })
+        .expect("spawn serve-swap thread")
+}
+
+fn poll_once(shared: &ServeShared, dir: &Path, failed: &mut Option<PathBuf>) {
+    let path = match crate::ckpt::latest_checkpoint(dir) {
+        Ok(Some(p)) => p,
+        Ok(None) => return,
+        Err(e) => {
+            eprintln!("serve: checkpoint scan of {} failed: {e:#}", dir.display());
+            return;
+        }
+    };
+    if failed.as_deref() == Some(path.as_path()) {
+        // Already warned about this exact checkpoint; wait it out.
+        return;
+    }
+    match try_swap(shared, &path) {
+        Ok(Swapped::Fresh(step)) => {
+            *failed = None;
+            println!("serve: hot-swapped to step {step} ({})", path.display());
+        }
+        Ok(Swapped::Stale) => {}
+        Err(e) => {
+            shared.swap_skips.fetch_add(1, Ordering::Relaxed);
+            *failed = Some(path.clone());
+            eprintln!(
+                "serve: skipping checkpoint {} — still serving step {}: {e:#}",
+                path.display(),
+                shared.step.load(Ordering::SeqCst)
+            );
+        }
+    }
+}
+
+enum Swapped {
+    Fresh(u64),
+    Stale,
+}
+
+/// Verify `path` in full, then (if it is newer) install its theta and step
+/// as one atomic pair under the swap lock.
+fn try_swap(shared: &ServeShared, path: &Path) -> Result<Swapped> {
+    let reader = CheckpointReader::open(path)?;
+    if reader.step() <= shared.step.load(Ordering::SeqCst) {
+        return Ok(Swapped::Stale);
+    }
+    let mut r = reader.read_section("qnet", 1)?;
+    let t = QNetTheta::decode(&mut r)?;
+    let spec = shared.qnet.spec();
+    if t.name != spec.name {
+        bail!(
+            "checkpoint holds network {:?}, this daemon serves {:?}",
+            t.name,
+            spec.name
+        );
+    }
+    if t.param_count != spec.param_count {
+        bail!(
+            "checkpoint carries {} parameters, network {:?} takes {}",
+            t.param_count,
+            spec.name,
+            spec.param_count
+        );
+    }
+
+    {
+        let _pair = shared.swap_lock.lock().unwrap();
+        shared.qnet.set_theta(&t.theta)?;
+        shared.step.store(reader.step(), Ordering::SeqCst);
+    }
+    shared.swaps.fetch_add(1, Ordering::Relaxed);
+    Ok(Swapped::Fresh(reader.step()))
+}

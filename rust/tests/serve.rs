@@ -1,0 +1,348 @@
+//! End-to-end tests for the policy-serving daemon (ISSUE 9,
+//! rust/DESIGN.md §15), over real unix sockets with handcrafted
+//! checkpoints (no training needed — `CheckpointWriter` + `QNetSnapshot`
+//! build a servable `step_<N>/` directly):
+//!
+//! * the acceptance bar: N concurrent clients' batched replies are
+//!   **bitwise identical** to direct single-sample `QNet::infer` under the
+//!   same theta, actions matching `argmax` of the rows;
+//! * hot-swap under load: every reply's Q-row matches the checkpoint step
+//!   it reports — the swap lock never lets a reply pair one checkpoint's
+//!   theta with another's step, and no in-flight request is dropped;
+//! * a corrupt newer checkpoint is skipped with a `swap_skips` tick while
+//!   the old theta keeps serving, and a later valid checkpoint recovers;
+//! * a client sending garbage bytes loses its connection, not the daemon.
+#![cfg(unix)]
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tempo_dqn::agent::argmax;
+use tempo_dqn::ckpt::CheckpointWriter;
+use tempo_dqn::env::STATE_BYTES;
+use tempo_dqn::net::{Conn, Endpoint};
+use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, QNetSnapshot};
+use tempo_dqn::serve::{ServeClient, ServeOpts, Server};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tempo-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn sock_addr(tag: &str) -> String {
+    let p = std::env::temp_dir().join(format!("tempo-serve-{tag}-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    format!("unix:{}", p.display())
+}
+
+/// A tiny-net QNet with deterministic parameters. `scale`/`shift` derive
+/// distinct thetas from the builtin init so different checkpoints are
+/// distinguishable to the bit.
+fn make_qnet(scale: f32, shift: f32) -> QNet {
+    let device = Arc::new(Device::cpu().unwrap());
+    let manifest = Manifest::load_or_builtin(&default_artifact_dir()).unwrap();
+    let qnet = QNet::load(device, &manifest, "tiny", false, 32).unwrap();
+    if scale != 1.0 || shift != 0.0 {
+        let theta: Vec<f32> =
+            qnet.theta_host().unwrap().iter().map(|v| v * scale + shift).collect();
+        qnet.set_theta(&theta).unwrap();
+    }
+    qnet
+}
+
+fn write_ckpt(dir: &Path, step: u64, qnet: &QNet) -> PathBuf {
+    let mut w = CheckpointWriter::new(step);
+    w.add(&QNetSnapshot(qnet)).unwrap();
+    w.write(dir).unwrap()
+}
+
+/// Deterministic pseudo-random stacked frames (LCG high bytes).
+fn states(n: usize, salt: u64) -> Vec<u8> {
+    let mut rng: u64 = 0x9E37_79B9_7F4A_7C15 ^ salt.wrapping_mul(0x2545_F491_4F6C_DD1D);
+    let mut out = vec![0u8; n * STATE_BYTES];
+    for px in out.iter_mut() {
+        rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *px = (rng >> 56) as u8;
+    }
+    out
+}
+
+fn assert_rows_match(qnet: &QNet, s: &[u8], n: usize, q: &[f32], actions: &[u8], ctx: &str) {
+    let per = qnet.spec().actions;
+    assert_eq!(q.len(), n * per, "{ctx}: row count");
+    assert_eq!(actions.len(), n, "{ctx}: action count");
+    for j in 0..n {
+        let want = qnet
+            .infer(Policy::Theta, &s[j * STATE_BYTES..(j + 1) * STATE_BYTES], 1)
+            .unwrap();
+        let got = &q[j * per..(j + 1) * per];
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits, "{ctx}: row {j} not bit-identical");
+        assert_eq!(actions[j] as usize, argmax(&want), "{ctx}: action {j}");
+    }
+}
+
+fn poll_until(handle: &tempo_dqn::serve::ServerHandle, what: &str, f: impl Fn(&tempo_dqn::net::ServeStats) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        if f(&handle.stats()) {
+            return;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn concurrent_clients_get_rows_bitwise_equal_to_direct_infer() {
+    let dir = tmpdir("e2e");
+    let qnet = make_qnet(1.0, 0.0);
+    write_ckpt(&dir, 100, &qnet);
+
+    let opts = ServeOpts {
+        max_batch: 16,
+        flush: Duration::from_millis(2),
+        poll: Duration::from_millis(500),
+    };
+    let handle = Server::start(&dir, &default_artifact_dir(), &sock_addr("e2e"), opts).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut clients = Vec::new();
+    for c in 0..4u64 {
+        let addr = addr.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut client = ServeClient::connect(&addr, Duration::from_secs(20)).unwrap();
+            let mut out = Vec::new();
+            for i in 0..8u64 {
+                // Mixed request widths exercise the row-splitting paths.
+                let n = 1 + (i as usize % 3);
+                let s = states(n, c * 1_000 + i);
+                let reply = client.act(&s, n).unwrap();
+                assert_eq!(reply.step, 100);
+                out.push((s, n, reply));
+            }
+            out
+        }));
+    }
+    for t in clients {
+        for (s, n, reply) in t.join().unwrap() {
+            assert_rows_match(&qnet, &s, n, &reply.q, &reply.actions, "e2e");
+        }
+    }
+
+    let stats = handle.stats();
+    assert_eq!(stats.step, 100);
+    assert_eq!(stats.requests, 4 * 8);
+    assert_eq!(stats.states, 4 * (1 + 2 + 3 + 1 + 2 + 3 + 1 + 2));
+    assert_eq!(stats.swaps, 0);
+    let flushes: u64 = stats.batch_hist.iter().map(|&(_, c)| c).sum();
+    assert!(flushes >= 1, "batch histogram recorded no flushes");
+    let hist_states: u64 = stats.batch_hist.iter().map(|&(w, c)| w * c).sum();
+    assert_eq!(hist_states, stats.states, "histogram accounts for every state");
+    assert!(stats.lat_us[3] >= stats.lat_us[0], "max latency below p50");
+
+    handle.stop().unwrap();
+}
+
+#[test]
+fn stats_over_the_wire_match_local_snapshot_shape() {
+    let dir = tmpdir("stats");
+    let qnet = make_qnet(1.0, 0.0);
+    write_ckpt(&dir, 7, &qnet);
+    let handle = Server::start(
+        &dir,
+        &default_artifact_dir(),
+        &sock_addr("stats"),
+        ServeOpts::default(),
+    )
+    .unwrap();
+
+    let mut client = ServeClient::connect(handle.addr(), Duration::from_secs(20)).unwrap();
+    let s = states(1, 9);
+    client.act(&s, 1).unwrap();
+    let wire = client.stats().unwrap();
+    assert_eq!(wire.step, 7);
+    assert_eq!(wire.requests, 1);
+    assert_eq!(wire.states, 1);
+    assert_eq!(wire.batch_hist, vec![(1, 1)]);
+    assert!(wire.lat_us[0] > 0, "p50 latency recorded");
+
+    // Shutdown over the wire stops the whole daemon (the CLI's exit path).
+    client.shutdown("test done").unwrap();
+    handle.wait().unwrap();
+}
+
+#[test]
+fn hot_swap_under_load_keeps_theta_and_step_paired() {
+    let dir = tmpdir("swap");
+    let qnet_a = make_qnet(1.0, 0.0);
+    let qnet_b = make_qnet(0.5, 0.01);
+    write_ckpt(&dir, 100, &qnet_a);
+
+    let opts = ServeOpts {
+        max_batch: 8,
+        flush: Duration::from_micros(200),
+        poll: Duration::from_millis(20),
+    };
+    let handle = Server::start(&dir, &default_artifact_dir(), &sock_addr("swap"), opts).unwrap();
+    let addr = handle.addr().to_string();
+
+    // Load thread: hammer the daemon across the swap; verify afterwards.
+    let stop = Arc::new(AtomicBool::new(false));
+    let loader = {
+        let addr = addr.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut client = ServeClient::connect(&addr, Duration::from_secs(20)).unwrap();
+            let mut replies = Vec::new();
+            let mut i = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let s = states(1, 50_000 + i);
+                let reply = client.act(&s, 1).unwrap();
+                replies.push((s, reply));
+                i += 1;
+            }
+            replies
+        })
+    };
+
+    // Let some requests land under step 100, then publish step 200.
+    std::thread::sleep(Duration::from_millis(50));
+    write_ckpt(&dir, 200, &qnet_b);
+    poll_until(&handle, "hot-swap to step 200", |s| s.step == 200);
+    // A few more requests under the new theta before stopping the load.
+    std::thread::sleep(Duration::from_millis(50));
+    stop.store(true, Ordering::Relaxed);
+    let replies = loader.join().unwrap();
+
+    assert!(!replies.is_empty());
+    let mut seen_old = false;
+    let mut seen_new = false;
+    for (s, reply) in &replies {
+        // The pairing invariant: whatever step a reply reports, its row
+        // matches that checkpoint's theta exactly.
+        let reference = match reply.step {
+            100 => {
+                seen_old = true;
+                &qnet_a
+            }
+            200 => {
+                seen_new = true;
+                &qnet_b
+            }
+            other => panic!("reply reports unknown step {other}"),
+        };
+        assert_rows_match(reference, s, 1, &reply.q, &reply.actions, "swap");
+    }
+    assert!(seen_old, "no replies served under the original checkpoint");
+
+    let stats = handle.stats();
+    assert_eq!(stats.swaps, 1);
+    assert_eq!(stats.swap_skips, 0);
+
+    // Post-swap requests must serve the new theta.
+    let mut client = ServeClient::connect(&addr, Duration::from_secs(20)).unwrap();
+    let s = states(2, 777);
+    let reply = client.act(&s, 2).unwrap();
+    assert_eq!(reply.step, 200);
+    assert!(seen_new || reply.step == 200);
+    assert_rows_match(&qnet_b, &s, 2, &reply.q, &reply.actions, "post-swap");
+
+    handle.stop().unwrap();
+}
+
+#[test]
+fn corrupt_checkpoint_is_skipped_then_a_valid_one_recovers() {
+    let dir = tmpdir("corrupt");
+    let side = tmpdir("corrupt-side");
+    let qnet_a = make_qnet(1.0, 0.0);
+    let qnet_b = make_qnet(2.0, -0.02);
+    write_ckpt(&dir, 100, &qnet_a);
+
+    let opts = ServeOpts {
+        max_batch: 8,
+        flush: Duration::from_micros(200),
+        poll: Duration::from_millis(20),
+    };
+    let handle =
+        Server::start(&dir, &default_artifact_dir(), &sock_addr("corrupt"), opts).unwrap();
+
+    // Build step 300 in a side directory, corrupt its section payload,
+    // then move it into the watched dir — the watcher must never observe
+    // the pre-corruption bytes.
+    let staged = write_ckpt(&side, 300, &qnet_b);
+    let state_bin = staged.join("state.bin");
+    let mut bytes = std::fs::read(&state_bin).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&state_bin, &bytes).unwrap();
+    std::fs::rename(&staged, dir.join(staged.file_name().unwrap())).unwrap();
+
+    poll_until(&handle, "corrupt checkpoint skip", |s| s.swap_skips >= 1);
+    let stats = handle.stats();
+    assert_eq!(stats.step, 100, "daemon must keep serving the old step");
+    assert_eq!(stats.swaps, 0);
+
+    // Old theta still serves correctly.
+    let mut client = ServeClient::connect(handle.addr(), Duration::from_secs(20)).unwrap();
+    let s = states(1, 42);
+    let reply = client.act(&s, 1).unwrap();
+    assert_eq!(reply.step, 100);
+    assert_rows_match(&qnet_a, &s, 1, &reply.q, &reply.actions, "after-skip");
+
+    // A valid, newer checkpoint supersedes the corrupt one.
+    write_ckpt(&dir, 400, &qnet_b);
+    poll_until(&handle, "recovery swap to step 400", |s| s.step == 400);
+    let reply = client.act(&s, 1).unwrap();
+    assert_eq!(reply.step, 400);
+    assert_rows_match(&qnet_b, &s, 1, &reply.q, &reply.actions, "recovered");
+
+    let stats = handle.stats();
+    assert!(stats.swap_skips >= 1);
+    assert_eq!(stats.swaps, 1);
+
+    handle.stop().unwrap();
+}
+
+#[test]
+fn garbage_bytes_drop_that_connection_but_daemon_survives() {
+    let dir = tmpdir("garbage");
+    let qnet = make_qnet(1.0, 0.0);
+    write_ckpt(&dir, 5, &qnet);
+    let handle = Server::start(
+        &dir,
+        &default_artifact_dir(),
+        &sock_addr("garbage"),
+        ServeOpts::default(),
+    )
+    .unwrap();
+
+    // Not a frame at all: wrong magic, then noise.
+    let ep = Endpoint::parse(handle.addr()).unwrap();
+    let mut raw = Conn::connect(&ep, Duration::from_secs(5)).unwrap();
+    raw.write_all(b"XXXXgarbage-not-a-frame-at-all").unwrap();
+    raw.flush().unwrap();
+
+    // The daemon drops that connection and keeps serving everyone else.
+    let mut client = ServeClient::connect(handle.addr(), Duration::from_secs(20)).unwrap();
+    let s = states(1, 11);
+    let reply = client.act(&s, 1).unwrap();
+    assert_eq!(reply.step, 5);
+    assert_rows_match(&qnet, &s, 1, &reply.q, &reply.actions, "post-garbage");
+
+    // A malformed act (wrong byte count for n) is refused by name and only
+    // costs the offending client its connection.
+    let mut bad = ServeClient::connect(handle.addr(), Duration::from_secs(20)).unwrap();
+    let err = bad.act(&states(1, 12), 2).unwrap_err().to_string();
+    assert!(err.contains("act refused"), "unexpected error: {err}");
+    let reply = client.act(&s, 1).unwrap();
+    assert_eq!(reply.step, 5);
+
+    handle.stop().unwrap();
+}
