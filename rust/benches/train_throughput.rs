@@ -18,7 +18,9 @@ use std::sync::{Arc, RwLock};
 use tempo_dqn::benchkit::Bench;
 use tempo_dqn::env::NET_FRAME;
 use tempo_dqn::replay::{BatchSource, DirectSource, ReplayMemory};
-use tempo_dqn::runtime::{default_artifact_dir, Device, KernelMode, Manifest, QNet, TrainBatch};
+use tempo_dqn::runtime::{
+    default_artifact_dir, Device, Head, KernelMode, Manifest, QNet, TrainBatch,
+};
 use tempo_dqn::util::rng::Rng;
 
 fn synthetic_batch(qnet: &QNet, seed: u64) -> TrainBatch {
@@ -72,6 +74,35 @@ fn main() {
         let fast1 = bench.get(&format!("train/{net}/b32/fast/learner_threads1"));
         if let (Some(d), Some(f)) = (det1, fast1) {
             println!("         => fast vs deterministic at 1 thread: {:.2}x", d.mean_ns / f.mean_ns);
+        }
+    }
+
+    // Head-variant cost: C51 vs the dqn baseline at matched width. The
+    // distributional tail multiplies the output layer by `atoms` and adds
+    // the per-action softmax + target projection, so this pair is the
+    // measured price of `net.head = c51` (rust/DESIGN.md §16). Heads are
+    // native-engine only, so the pair runs on the synthetic manifest.
+    let builtin = Manifest::builtin();
+    for mode in KernelMode::ALL {
+        let mut pair = [0.0f64; 2];
+        for (i, head) in [Head::Dqn, Head::C51 { atoms: 51, v_min: -10.0, v_max: 10.0 }]
+            .into_iter()
+            .enumerate()
+        {
+            let device = Arc::new(Device::cpu_with_opts(1, mode).expect("device"));
+            let qnet =
+                QNet::load_with_head(device, &builtin, "tiny", false, 32, head).expect("qnet");
+            let batch = synthetic_batch(&qnet, 7);
+            let r = bench
+                .run(
+                    &format!("train/tiny/b32/{}/head_{}", mode.name(), head.kind_name()),
+                    || qnet.train_step(&batch, 2.5e-4).expect("train"),
+                )
+                .clone();
+            pair[i] = r.mean_ns;
+        }
+        if pair[0] > 0.0 {
+            println!("         => c51 vs dqn ({}): {:.2}x", mode.name(), pair[1] / pair[0]);
         }
     }
 

@@ -5,5 +5,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{EpsSchedule, ExecMode, ExperimentConfig, ReplayStrategy};
+pub use schema::{EpsSchedule, ExecMode, ExperimentConfig, HeadKind, ReplayStrategy};
 pub use toml::TomlDoc;

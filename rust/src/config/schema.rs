@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::KernelMode;
+use crate::runtime::{Head, KernelMode};
 use crate::util::cli::Args;
 
 use super::toml::TomlDoc;
@@ -88,6 +88,38 @@ impl ReplayStrategy {
     }
 }
 
+/// Q-head variant on the shared conv trunk (rust/DESIGN.md §16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadKind {
+    /// Single dense tail emitting Q(s,a) — the seed machine.
+    Dqn,
+    /// Dueling streams (Wang et al. 2016): Q = V + A − mean(A).
+    Dueling,
+    /// Distributional C51 (Bellemare et al. 2017): per-action atom
+    /// distributions over a fixed support, cross-entropy training,
+    /// expected-value Q for acting.
+    C51,
+}
+
+impl HeadKind {
+    pub fn parse(s: &str) -> Result<HeadKind> {
+        Ok(match s {
+            "dqn" => HeadKind::Dqn,
+            "dueling" => HeadKind::Dueling,
+            "c51" | "distributional" => HeadKind::C51,
+            other => bail!("unknown head {other:?} (dqn|dueling|c51)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HeadKind::Dqn => "dqn",
+            HeadKind::Dueling => "dueling",
+            HeadKind::C51 => "c51",
+        }
+    }
+}
+
 /// Linear epsilon-greedy schedule (Mnih et al. 2015: 1.0 -> 0.1 over 1M
 /// steps, then fixed).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -148,6 +180,14 @@ pub struct ExperimentConfig {
     // Network / artifacts
     pub net: String,
     pub double: bool,
+    /// Q-head variant (`dqn` keeps the seed machine bit-for-bit).
+    pub head: HeadKind,
+    /// C51 only: atoms per action distribution.
+    pub atoms: usize,
+    /// C51 only: support lower bound.
+    pub v_min: f64,
+    /// C51 only: support upper bound.
+    pub v_max: f64,
 
     // DQN hyperparameters (paper Table 5 defaults)
     pub total_steps: u64,
@@ -239,6 +279,10 @@ impl Default for ExperimentConfig {
             kernel_mode: KernelMode::Deterministic,
             net: "small".into(),
             double: false,
+            head: HeadKind::Dqn,
+            atoms: 51,
+            v_min: -10.0,
+            v_max: 10.0,
             total_steps: 50_000_000,
             minibatch: 32,
             replay_capacity: 1_000_000,
@@ -311,6 +355,10 @@ impl ExperimentConfig {
             KernelMode::parse(&doc.str_or("learner.kernel_mode", c.kernel_mode.name())?)?;
         c.net = doc.str_or("net.config", &c.net)?;
         c.double = doc.bool_or("net.double", c.double)?;
+        c.head = HeadKind::parse(&doc.str_or("net.head", c.head.name())?)?;
+        c.atoms = doc.usize_or("net.atoms", c.atoms)?;
+        c.v_min = doc.f64_or("net.v_min", c.v_min)?;
+        c.v_max = doc.f64_or("net.v_max", c.v_max)?;
         c.total_steps = doc.usize_or("dqn.total_steps", c.total_steps as usize)? as u64;
         c.minibatch = doc.usize_or("dqn.minibatch", c.minibatch)?;
         c.replay_capacity = doc.usize_or("dqn.replay_capacity", c.replay_capacity)?;
@@ -362,6 +410,12 @@ impl ExperimentConfig {
         if args.flag("double") {
             self.double = true;
         }
+        if let Some(v) = args.str_opt("head") {
+            self.head = HeadKind::parse(v)?;
+        }
+        self.atoms = args.usize_or("atoms", self.atoms)?;
+        self.v_min = args.f64_or("v-min", self.v_min)?;
+        self.v_max = args.f64_or("v-max", self.v_max)?;
         self.seed = args.u64_or("seed", self.seed)?;
         self.threads = args.usize_or("threads", self.threads)?;
         self.envs_per_thread = args.usize_or("envs-per-thread", self.envs_per_thread)?;
@@ -457,6 +511,16 @@ impl ExperimentConfig {
         if self.minibatch == 0 {
             bail!("minibatch must be >= 1");
         }
+        if !(2..=255).contains(&self.atoms) {
+            bail!(
+                "atoms = {} is out of range 2..=255 (the C51 support needs at least two \
+                 atoms; beyond 255 the distributional tail dominates the network)",
+                self.atoms
+            );
+        }
+        if self.v_min >= self.v_max {
+            bail!("v_min ({}) must be < v_max ({})", self.v_min, self.v_max);
+        }
         if !(0.0..=1.0).contains(&self.per_alpha) {
             bail!("per_alpha must be in [0,1] (0 = uniform mass, 1 = fully proportional)");
         }
@@ -502,6 +566,20 @@ impl ExperimentConfig {
         Ok(())
     }
 
+    /// The runtime head this config selects (atoms/v_min/v_max only reach
+    /// the engine for C51 — they are inert knobs under dqn/dueling).
+    pub fn head_spec(&self) -> Head {
+        match self.head {
+            HeadKind::Dqn => Head::Dqn,
+            HeadKind::Dueling => Head::Dueling,
+            HeadKind::C51 => Head::C51 {
+                atoms: self.atoms,
+                v_min: self.v_min as f32,
+                v_max: self.v_max as f32,
+            },
+        }
+    }
+
     /// Minibatches trained per target window (C / F).
     pub fn batches_per_window(&self) -> u64 {
         self.target_update_period / self.train_period
@@ -530,6 +608,10 @@ impl ExperimentConfig {
         kv("game", self.game.clone());
         kv("mode", self.mode.name().to_string());
         kv("net", self.net.clone());
+        kv("head", self.head.name().to_string());
+        kv("atoms", self.atoms.to_string());
+        kv("v-min", format!("{}", self.v_min));
+        kv("v-max", format!("{}", self.v_max));
         kv("seed", self.seed.to_string());
         kv("threads", self.threads.to_string());
         kv("envs-per-thread", self.envs_per_thread.to_string());
@@ -775,6 +857,49 @@ mod tests {
         assert!(c.apply_args(&bad).is_err());
         for m in KernelMode::ALL {
             assert_eq!(KernelMode::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn head_knobs_default_parse_and_validate() {
+        let c = ExperimentConfig::preset("paper").unwrap();
+        assert_eq!(c.head, HeadKind::Dqn, "seed machine's head by default");
+        assert_eq!(c.atoms, 51);
+        assert_eq!(c.v_min, -10.0);
+        assert_eq!(c.v_max, 10.0);
+        assert_eq!(c.head_spec(), Head::Dqn);
+
+        let doc = TomlDoc::parse(
+            "preset = \"smoke\"\n[net]\nhead = \"c51\"\natoms = 21\nv_min = -5.0\nv_max = 5.0\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.head, HeadKind::C51);
+        assert_eq!(c.head_spec(), Head::C51 { atoms: 21, v_min: -5.0, v_max: 5.0 });
+
+        let args = Args::parse(
+            ["--head=dueling", "--atoms=11", "--v-min=-3.5", "--v-max=3.5"].map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.head, HeadKind::Dueling);
+        assert_eq!(c.head_spec(), Head::Dueling, "atoms/v_min/v_max inert under dueling");
+        assert_eq!(c.atoms, 11);
+
+        let mut bad = c.clone();
+        bad.atoms = 1;
+        assert!(bad.validate().is_err(), "one-atom support rejected");
+        bad.atoms = 1000;
+        assert!(bad.validate().is_err(), "absurd atom count rejected");
+        bad = c.clone();
+        bad.v_min = 2.0;
+        bad.v_max = 2.0;
+        assert!(bad.validate().is_err(), "empty support rejected");
+
+        assert!(HeadKind::parse("distributional").is_ok(), "alias accepted");
+        assert!(HeadKind::parse("bogus").is_err());
+        for h in [HeadKind::Dqn, HeadKind::Dueling, HeadKind::C51] {
+            assert_eq!(HeadKind::parse(h.name()).unwrap(), h);
         }
     }
 

@@ -649,8 +649,9 @@ pub fn run_fleet_sampler(
     // Shared scaffolding wants one.
     let manifest = Manifest::load_or_builtin(artifact_dir)?;
     let device = std::sync::Arc::new(Device::cpu_with_opts(1, cfg.kernel_mode)?);
-    let qnet = QNet::load(device, &manifest, &cfg.net, cfg.double, cfg.minibatch)
-        .context("loading Q-network artifacts")?;
+    let qnet =
+        QNet::load_with_head(device, &manifest, &cfg.net, cfg.double, cfg.minibatch, cfg.head_spec())
+            .context("loading Q-network artifacts")?;
     let replay = RwLock::new(ReplayMemory::new(
         cfg.streams() * (STACK + 2),
         cfg.streams(),
@@ -884,5 +885,18 @@ mod tests {
             &crate::coordinator::config_fingerprint(&c)
         )
         .is_empty());
+
+        // The head variant and the C51 support ARE trajectory identity: a
+        // learner must refuse a head-mismatched sampler by name.
+        let mut d = a.clone();
+        d.head = crate::config::HeadKind::C51;
+        d.atoms = 21;
+        let diffs = diff_fingerprints(
+            &crate::coordinator::config_fingerprint(&a),
+            &crate::coordinator::config_fingerprint(&d),
+        );
+        assert_eq!(diffs.len(), 2, "{diffs:?}");
+        assert!(diffs.iter().any(|x| x.starts_with("head:")), "{diffs:?}");
+        assert!(diffs.iter().any(|x| x.starts_with("atoms:")), "{diffs:?}");
     }
 }

@@ -190,8 +190,15 @@ impl Coordinator {
         // yields bit-identical math (rust/DESIGN.md §9).
         let device = Arc::new(Device::cpu_with_opts(cfg.learner_threads, cfg.kernel_mode)?);
         let qnet = Arc::new(
-            QNet::load(device.clone(), &manifest, &cfg.net, cfg.double, cfg.minibatch)
-                .context("loading Q-network artifacts")?,
+            QNet::load_with_head(
+                device.clone(),
+                &manifest,
+                &cfg.net,
+                cfg.double,
+                cfg.minibatch,
+                cfg.head_spec(),
+            )
+            .context("loading Q-network artifacts")?,
         );
         Self::with_qnet(cfg, device, qnet)
     }
@@ -553,6 +560,14 @@ impl Coordinator {
             // Pre-§14 checkpoints predate the fleet layer; they carry no
             // theta_minus ring, which is exactly a fleet_lag = 0 machine.
             ("fleet_lag", Json::Num(dflt.fleet_lag as f64)),
+            // Pre-§16 checkpoints predate the head knob; they were all
+            // produced by the dqn tail, so resuming is bit-exact exactly
+            // when this run uses the default head (and the C51 support
+            // knobs at their inert defaults).
+            ("head", Json::Str(dflt.head.name().to_string())),
+            ("atoms", Json::Num(dflt.atoms as f64)),
+            ("v_min", Json::Str(format!("{:016x}", dflt.v_min.to_bits()))),
+            ("v_max", Json::Str(format!("{:016x}", dflt.v_max.to_bits()))),
         ];
         let mut mismatches = Vec::new();
         for (key, want_v) in want {
@@ -810,6 +825,10 @@ pub(crate) fn config_fingerprint(c: &ExperimentConfig) -> Json {
         ("seed", Json::Str(format!("{:016x}", c.seed))),
         ("net", Json::Str(c.net.clone())),
         ("double", Json::Bool(c.double)),
+        ("head", Json::Str(c.head.name().to_string())),
+        ("atoms", Json::Num(c.atoms as f64)),
+        ("v_min", Json::Str(format!("{:016x}", c.v_min.to_bits()))),
+        ("v_max", Json::Str(format!("{:016x}", c.v_max.to_bits()))),
         ("minibatch", Json::Num(c.minibatch as f64)),
         ("replay_capacity", Json::Num(c.replay_capacity as f64)),
         ("target_update_period", Json::Num(c.target_update_period as f64)),

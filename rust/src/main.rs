@@ -42,6 +42,7 @@ SUBCOMMANDS:
   train      --preset paper|speedtest|smoke --config FILE --mode MODE
              --threads N --envs-per-thread B --steps N --game NAME
              --net tiny|small|nature --seed N --double --lr X
+             --head dqn|dueling|c51 --atoms N --v-min X --v-max X
              --eval-period N --eval-seed N --learner-threads N
              --prefetch-batches N --kernel-mode deterministic|fast
              --replay-strategy uniform|proportional
@@ -450,7 +451,11 @@ fn cmd_serve_probe(args: &Args) -> Result<()> {
             let t = tempo_dqn::runtime::QNetTheta::decode(&mut r)?;
             let manifest = tempo_dqn::runtime::Manifest::load_or_builtin(&default_artifact_dir())?;
             let device = Arc::new(tempo_dqn::runtime::Device::cpu()?);
-            let qnet = tempo_dqn::runtime::QNet::load(device, &manifest, &t.name, t.double, 32)?;
+            // The checkpoint name carries the head tag; split it so the
+            // probe's reference QNet runs the same head as the daemon.
+            let (base, head) = tempo_dqn::runtime::Head::split(&t.name)?;
+            let qnet =
+                tempo_dqn::runtime::QNet::load_with_head(device, &manifest, &base, t.double, 32, head)?;
             qnet.set_theta(&t.theta)?;
             Some((reader.step(), qnet))
         }

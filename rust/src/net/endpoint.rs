@@ -106,12 +106,19 @@ impl Endpoint {
             match attempt {
                 Ok(conn) => return Ok(conn),
                 Err(e) => {
-                    if std::time::Instant::now() + backoff >= deadline {
+                    // Spend the whole budget: clamp the final sleep to
+                    // whatever remains so the last attempt lands *at* the
+                    // deadline. (Giving up whenever `now + backoff` crossed
+                    // the deadline surrendered up to one full backoff —
+                    // 250ms — of the caller's timeout, losing races against
+                    // a listener that came up late but in budget.)
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
                         return Err(e).with_context(|| {
                             format!("connecting to fleet learner at {}", self.display())
                         });
                     }
-                    std::thread::sleep(backoff);
+                    std::thread::sleep(backoff.min(deadline - now));
                     backoff = (backoff * 2).min(Duration::from_millis(250));
                 }
             }
@@ -325,6 +332,46 @@ mod tests {
         }
         assert!(!path.exists(), "listener drop must remove the socket file");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Pre-fix, `connect` gave up as soon as `now + backoff` crossed the
+    /// deadline, surrendering up to one full backoff (250ms) of the
+    /// caller's budget. With the 10ms-doubling schedule the attempts land
+    /// at ~0/10/30/70/150/310ms; a listener that binds at ~350ms into a
+    /// 550ms budget therefore sat squarely in the old dead zone (give-up
+    /// at ~310ms). The clamped final sleep must land one more attempt at
+    /// the deadline and reach it.
+    #[cfg(unix)]
+    #[test]
+    fn connect_spends_its_full_budget_on_a_late_listener() {
+        let dir = std::env::temp_dir().join(format!("tempo-fleet-late-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("late.sock");
+        let ep = Endpoint::parse(&format!("unix:{}", path.display())).unwrap();
+        let ep2 = ep.clone();
+        let server = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(350));
+            let listener = ep2.bind().unwrap();
+            let mut conn = listener.accept().unwrap();
+            assert!(matches!(Msg::recv(&mut conn).unwrap(), Msg::Heartbeat));
+        });
+        let mut conn = ep
+            .connect(Duration::from_millis(550))
+            .expect("late-but-in-budget listener must be reached");
+        Msg::Heartbeat.send(&mut conn).unwrap();
+        server.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn connect_still_fails_cleanly_when_nothing_listens() {
+        // Unroutable port on loopback: refused fast, retried until the
+        // deadline, then surfaced with the endpoint named.
+        let ep = Endpoint::parse("tcp:127.0.0.1:1").unwrap();
+        let t0 = std::time::Instant::now();
+        let err = ep.connect(Duration::from_millis(80)).unwrap_err().to_string();
+        assert!(err.contains("connecting to fleet learner"), "{err}");
+        assert!(t0.elapsed() >= Duration::from_millis(80), "must exhaust the budget");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The pluggable execution-engine boundary.
+//! The pluggable execution-engine boundary (the engine ABI).
 //!
 //! The paper's hardware model needs *a* coprocessor that batches neural-net
 //! work behind a serialized transaction bus; it does not care what executes
@@ -12,39 +12,335 @@
 //!
 //! An entry point is named by the artifact convention the Python AOT
 //! pipeline established: `infer_b{B}`, `train_b{B}`, `train_double_b{B}`.
-//! [`EntryKind`] parses that convention so native engines can dispatch on
-//! meaning while file-based engines just load the artifact.
+//! What used to be a name-parsed enum plus positional 10/12-input tensor
+//! lists is now a **named entry schema**: [`EntrySchema::derive`] expands
+//! an entry name against a [`NetSpec`] into named, typed, shaped input and
+//! output fields, and engines validate every transaction against it — a
+//! mis-shaped or missing argument is refused by *entry and field name*,
+//! not by position. The schema grows with the network head
+//! ([`Head`]): head variants change the parameter-vector length (and the
+//! meaning of the train math) without touching the field list, which is
+//! exactly what lets the fleet and serving layers reuse one ABI for
+//! `dqn`, `dueling`, and `c51` checkpoints.
 //!
 //! [`Device`]: super::device::Device
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::manifest::NetSpec;
-use super::tensor::{HostTensor, TensorView};
+use super::manifest::{Dtype, Entry, NetSpec};
+use super::tensor::{DataView, HostTensor, TensorView};
 
-/// Parsed meaning of an entry-point name.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EntryKind {
-    /// `infer_b{batch}`: (params, states) -> (q,)
-    Infer { batch: usize },
-    /// `train_b{batch}` / `train_double_b{batch}`:
-    /// (params, target, g, s, states, actions, rewards, next_states, dones,
-    ///  lr) -> (params', g', s', loss)
-    Train { batch: usize, double: bool },
+/// Q-network head variant. Selects how the dense tail after the conv trunk
+/// maps features to Q-values (rust/DESIGN.md §16):
+///
+/// * `Dqn` — the historical single stream: hidden MLP then a `[dim, A]`
+///   output layer. The default; its code path, parameter layout, and
+///   checkpoint identity are untouched by the other variants.
+/// * `Dueling` — separate value and advantage streams with mean-subtracted
+///   aggregation `Q(s,a) = V(s) + A(s,a) − mean_a' A(s,a')`.
+/// * `C51` — distributional: the output layer emits `A × atoms` logits;
+///   per-action softmax over a fixed support `[v_min, v_max]`, trained by
+///   projecting the Bellman-shifted target distribution onto the support
+///   (cross-entropy loss). `infer` returns expected-value Q-rows, so
+///   argmax/serving/eval consume the same `[B, A]` tensor as every other
+///   head.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Head {
+    Dqn,
+    Dueling,
+    C51 { atoms: usize, v_min: f32, v_max: f32 },
 }
 
-impl EntryKind {
-    pub fn parse(name: &str) -> Result<EntryKind> {
-        if let Some(b) = name.strip_prefix("infer_b") {
-            return Ok(EntryKind::Infer { batch: parse_batch(name, b)? });
+impl Head {
+    /// The knob name of the variant (`net.head` in configs).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Head::Dqn => "dqn",
+            Head::Dueling => "dueling",
+            Head::C51 { .. } => "c51",
         }
-        if let Some(b) = name.strip_prefix("train_double_b") {
-            return Ok(EntryKind::Train { batch: parse_batch(name, b)?, double: true });
+    }
+
+    /// Canonical tag including the C51 support parameters. f32 `Display`
+    /// round-trips exactly, so the tag is a faithful identity.
+    pub fn tag(&self) -> String {
+        match self {
+            Head::Dqn => "dqn".to_string(),
+            Head::Dueling => "dueling".to_string(),
+            Head::C51 { atoms, v_min, v_max } => format!("c51[{atoms},{v_min},{v_max}]"),
         }
-        if let Some(b) = name.strip_prefix("train_b") {
-            return Ok(EntryKind::Train { batch: parse_batch(name, b)?, double: false });
+    }
+
+    /// Network identity carried in checkpoints and engine keys: the bare
+    /// config name for `dqn` (so every pre-head checkpoint byte and engine
+    /// key is unchanged), `base+tag` otherwise.
+    pub fn qualify(&self, base: &str) -> String {
+        match self {
+            Head::Dqn => base.to_string(),
+            _ => format!("{base}+{}", self.tag()),
         }
-        bail!("unrecognized entry point {name:?} (expected infer_b*/train_b*/train_double_b*)");
+    }
+
+    /// Parse a qualified network name back into `(base_config, head)`.
+    /// Names without a `+` suffix are dqn — exactly the historical names.
+    pub fn split(name: &str) -> Result<(String, Head)> {
+        let Some((base, tag)) = name.split_once('+') else {
+            return Ok((name.to_string(), Head::Dqn));
+        };
+        if base.is_empty() {
+            bail!("network name {name:?} has an empty base config");
+        }
+        let head = if tag == "dueling" {
+            Head::Dueling
+        } else if let Some(inner) = tag.strip_prefix("c51[").and_then(|t| t.strip_suffix(']')) {
+            let parts: Vec<&str> = inner.split(',').collect();
+            if parts.len() != 3 {
+                bail!("network name {name:?}: c51 tag needs [atoms,v_min,v_max]");
+            }
+            let atoms: usize = parts[0]
+                .parse()
+                .map_err(|_| anyhow!("network name {name:?}: bad atom count {:?}", parts[0]))?;
+            let v_min: f32 = parts[1]
+                .parse()
+                .map_err(|_| anyhow!("network name {name:?}: bad v_min {:?}", parts[1]))?;
+            let v_max: f32 = parts[2]
+                .parse()
+                .map_err(|_| anyhow!("network name {name:?}: bad v_max {:?}", parts[2]))?;
+            Head::C51 { atoms, v_min, v_max }
+        } else {
+            bail!("network name {name:?} carries unknown head tag {tag:?}");
+        };
+        Ok((base.to_string(), head))
+    }
+}
+
+/// What an entry point does (parsed from its conventional name).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryOp {
+    Infer,
+    Train { double: bool },
+}
+
+/// One named, typed, shaped field of an entry's ABI.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EntryField {
+    pub name: &'static str,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl EntryField {
+    fn new(name: &'static str, dtype: Dtype, shape: Vec<usize>) -> EntryField {
+        EntryField { name, dtype, shape }
+    }
+
+    fn describe(&self) -> String {
+        format!("{}{:?}", dtype_name(self.dtype), self.shape)
+    }
+}
+
+fn dtype_name(d: Dtype) -> &'static str {
+    match d {
+        Dtype::F32 => "f32",
+        Dtype::U8 => "u8",
+        Dtype::I32 => "i32",
+    }
+}
+
+fn view_dtype(v: &TensorView<'_>) -> Dtype {
+    match v.data {
+        DataView::F32(_) => Dtype::F32,
+        DataView::U8(_) => Dtype::U8,
+        DataView::I32(_) => Dtype::I32,
+    }
+}
+
+/// The named schema of one entry point, derived from the entry name and the
+/// (head-adjusted) [`NetSpec`]. This is the growable replacement for the
+/// positional tensor-list convention: engines validate transactions against
+/// it, and every refusal names the entry and the offending field.
+#[derive(Clone, Debug)]
+pub struct EntrySchema {
+    /// Entry name (`infer_b{B}` / `train_b{B}` / `train_double_b{B}`).
+    pub entry: String,
+    pub op: EntryOp,
+    pub batch: usize,
+    /// Head the schema was derived for (the spec's head).
+    pub head: Head,
+    /// Required inputs, in transaction order.
+    pub inputs: Vec<EntryField>,
+    /// Optional trailing inputs (the extended per-sample train arrays:
+    /// IS weights + bootstrap discounts). All-or-none: a transaction
+    /// carries either none of them or every one.
+    pub optional_inputs: Vec<EntryField>,
+    /// Outputs, in transaction order.
+    pub outputs: Vec<EntryField>,
+}
+
+impl EntrySchema {
+    /// Expand `entry_name` against `spec` into its named schema.
+    pub fn derive(spec: &NetSpec, entry_name: &str) -> Result<EntrySchema> {
+        let [h, w, c] = spec.frame;
+        let p = spec.param_count;
+        let a = spec.actions;
+        if let Some(digits) = entry_name.strip_prefix("infer_b") {
+            let batch = parse_batch(entry_name, digits)?;
+            return Ok(EntrySchema {
+                entry: entry_name.to_string(),
+                op: EntryOp::Infer,
+                batch,
+                head: spec.head,
+                inputs: vec![
+                    EntryField::new("params", Dtype::F32, vec![p]),
+                    EntryField::new("states", Dtype::U8, vec![batch, h, w, c]),
+                ],
+                optional_inputs: Vec::new(),
+                outputs: vec![EntryField::new("q", Dtype::F32, vec![batch, a])],
+            });
+        }
+        let (digits, double) = if let Some(d) = entry_name.strip_prefix("train_double_b") {
+            (d, true)
+        } else if let Some(d) = entry_name.strip_prefix("train_b") {
+            (d, false)
+        } else {
+            bail!(
+                "unrecognized entry point {entry_name:?} \
+                 (expected infer_b*/train_b*/train_double_b*)"
+            );
+        };
+        let batch = parse_batch(entry_name, digits)?;
+        Ok(EntrySchema {
+            entry: entry_name.to_string(),
+            op: EntryOp::Train { double },
+            batch,
+            head: spec.head,
+            inputs: vec![
+                EntryField::new("params", Dtype::F32, vec![p]),
+                EntryField::new("target_params", Dtype::F32, vec![p]),
+                EntryField::new("g", Dtype::F32, vec![p]),
+                EntryField::new("s", Dtype::F32, vec![p]),
+                EntryField::new("states", Dtype::U8, vec![batch, h, w, c]),
+                EntryField::new("actions", Dtype::I32, vec![batch]),
+                EntryField::new("rewards", Dtype::F32, vec![batch]),
+                EntryField::new("next_states", Dtype::U8, vec![batch, h, w, c]),
+                EntryField::new("dones", Dtype::F32, vec![batch]),
+                EntryField::new("lr", Dtype::F32, vec![]),
+            ],
+            optional_inputs: vec![
+                EntryField::new("weights", Dtype::F32, vec![batch]),
+                EntryField::new("boot_gammas", Dtype::F32, vec![batch]),
+            ],
+            outputs: vec![
+                EntryField::new("params_out", Dtype::F32, vec![p]),
+                EntryField::new("g_out", Dtype::F32, vec![p]),
+                EntryField::new("s_out", Dtype::F32, vec![p]),
+                EntryField::new("loss", Dtype::F32, vec![]),
+                EntryField::new("td_errors", Dtype::F32, vec![batch]),
+            ],
+        })
+    }
+
+    /// Validate one transaction's arguments. Refusals name the entry and
+    /// the field: missing inputs, extra inputs, dtype and shape mismatches
+    /// all say *which* field is wrong.
+    pub fn validate_args(&self, args: &[TensorView<'_>]) -> Result<()> {
+        let req = self.inputs.len();
+        let all = req + self.optional_inputs.len();
+        if args.len() < req {
+            bail!(
+                "entry {:?}: missing input {:?} (got {} of {} required inputs)",
+                self.entry,
+                self.inputs[args.len()].name,
+                args.len(),
+                req
+            );
+        }
+        if args.len() > req && args.len() < all {
+            bail!(
+                "entry {:?}: missing input {:?} (the optional inputs {:?} are all-or-none)",
+                self.entry,
+                self.optional_inputs[args.len() - req].name,
+                self.optional_inputs.iter().map(|f| f.name).collect::<Vec<_>>()
+            );
+        }
+        if args.len() > all {
+            bail!(
+                "entry {:?}: {} inputs exceed the schema's {} ({} required + {} optional)",
+                self.entry,
+                args.len(),
+                all,
+                req,
+                self.optional_inputs.len()
+            );
+        }
+        let fields = self.inputs.iter().chain(self.optional_inputs.iter());
+        for (arg, field) in args.iter().zip(fields) {
+            let got = view_dtype(arg);
+            if got != field.dtype {
+                bail!(
+                    "entry {:?}: input {:?} must be {}, got {}[{:?}]",
+                    self.entry,
+                    field.name,
+                    field.describe(),
+                    dtype_name(got),
+                    arg.shape
+                );
+            }
+            if arg.shape != field.shape {
+                bail!(
+                    "entry {:?}: input {:?} must have shape {:?}, got {:?}",
+                    self.entry,
+                    field.name,
+                    field.shape,
+                    arg.shape
+                );
+            }
+            let want: usize = field.shape.iter().product();
+            if arg.elements() != want {
+                bail!(
+                    "entry {:?}: input {:?} carries {} elements for shape {:?}",
+                    self.entry,
+                    field.name,
+                    arg.elements(),
+                    field.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether a transaction with `n` arguments uses the extended form
+    /// (all optional inputs present). Call after [`Self::validate_args`].
+    pub fn is_extended(&self, n: usize) -> bool {
+        !self.optional_inputs.is_empty() && n == self.inputs.len() + self.optional_inputs.len()
+    }
+
+    /// Cross-check a manifest-declared entry against this schema (the
+    /// load-time half of the ABI: artifact manifests declare the required
+    /// inputs only). Mismatches name entry and field.
+    pub fn validate_manifest_entry(&self, entry: &Entry) -> Result<()> {
+        if entry.inputs.len() != self.inputs.len() {
+            bail!(
+                "entry {:?}: manifest declares {} inputs, schema has {} required ({:?})",
+                self.entry,
+                entry.inputs.len(),
+                self.inputs.len(),
+                self.inputs.iter().map(|f| f.name).collect::<Vec<_>>()
+            );
+        }
+        for (sig, field) in entry.inputs.iter().zip(self.inputs.iter()) {
+            if sig.dtype != field.dtype || sig.shape != field.shape {
+                bail!(
+                    "entry {:?}: manifest input {:?} is {}{:?}, schema requires {}",
+                    self.entry,
+                    field.name,
+                    dtype_name(sig.dtype),
+                    sig.shape,
+                    field.describe()
+                );
+            }
+        }
+        Ok(())
     }
 }
 
@@ -70,26 +366,139 @@ pub trait ExecutionEngine: Send {
 
     fn is_loaded(&self, key: &str) -> bool;
 
-    /// Execute one transaction. Input/output ABI is fixed per [`EntryKind`].
+    /// Execute one transaction. Arguments are validated against the
+    /// entry's [`EntrySchema`].
     fn execute(&mut self, key: &str, args: &[TensorView<'_>]) -> Result<Vec<HostTensor>>;
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::Manifest;
 
     #[test]
-    fn parses_entry_names() {
-        assert_eq!(EntryKind::parse("infer_b8").unwrap(), EntryKind::Infer { batch: 8 });
-        assert_eq!(
-            EntryKind::parse("train_b32").unwrap(),
-            EntryKind::Train { batch: 32, double: false }
-        );
-        assert_eq!(
-            EntryKind::parse("train_double_b32").unwrap(),
-            EntryKind::Train { batch: 32, double: true }
-        );
-        assert!(EntryKind::parse("warmup_b2").is_err());
-        assert!(EntryKind::parse("infer_bx").is_err());
+    fn derives_entry_schemas_from_names() {
+        let m = Manifest::builtin();
+        let spec = m.config("tiny").unwrap();
+        let infer = EntrySchema::derive(spec, "infer_b8").unwrap();
+        assert_eq!(infer.op, EntryOp::Infer);
+        assert_eq!(infer.batch, 8);
+        assert_eq!(infer.inputs.len(), 2);
+        assert_eq!(infer.inputs[0].name, "params");
+        assert_eq!(infer.inputs[0].shape, vec![spec.param_count]);
+        assert_eq!(infer.inputs[1].shape, vec![8, 84, 84, 4]);
+        assert_eq!(infer.outputs[0].shape, vec![8, spec.actions]);
+
+        let train = EntrySchema::derive(spec, "train_b32").unwrap();
+        assert_eq!(train.op, EntryOp::Train { double: false });
+        assert_eq!(train.inputs.len(), 10);
+        assert_eq!(train.optional_inputs.len(), 2);
+        assert_eq!(train.optional_inputs[0].name, "weights");
+        let dbl = EntrySchema::derive(spec, "train_double_b32").unwrap();
+        assert_eq!(dbl.op, EntryOp::Train { double: true });
+
+        assert!(EntrySchema::derive(spec, "warmup_b2").is_err());
+        assert!(EntrySchema::derive(spec, "infer_bx").is_err());
+    }
+
+    #[test]
+    fn schema_refusals_name_entry_and_field() {
+        let m = Manifest::builtin();
+        let spec = m.config("tiny").unwrap();
+        let schema = EntrySchema::derive(spec, "infer_b2").unwrap();
+        let params = vec![0.0f32; spec.param_count];
+        let states = vec![0u8; 2 * spec.frame_elems()];
+
+        // Missing input: named.
+        let err = schema
+            .validate_args(&[TensorView::f32(&params, &[spec.param_count])])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("infer_b2") && err.contains("states"), "{err}");
+
+        // Wrong dtype: named.
+        let bad = vec![0.0f32; 2 * spec.frame_elems()];
+        let err = schema
+            .validate_args(&[
+                TensorView::f32(&params, &[spec.param_count]),
+                TensorView::f32(&bad, &[2, 84, 84, 4]),
+            ])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("states") && err.contains("u8"), "{err}");
+
+        // Wrong shape: named.
+        let err = schema
+            .validate_args(&[
+                TensorView::f32(&params, &[spec.param_count]),
+                TensorView::u8(&states, &[1, 84, 84, 4]),
+            ])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("states") && err.contains("shape"), "{err}");
+
+        // Correct call passes.
+        schema
+            .validate_args(&[
+                TensorView::f32(&params, &[spec.param_count]),
+                TensorView::u8(&states, &[2, 84, 84, 4]),
+            ])
+            .unwrap();
+    }
+
+    #[test]
+    fn train_schema_optional_inputs_are_all_or_none() {
+        let m = Manifest::builtin();
+        let spec = m.config("tiny").unwrap();
+        let schema = EntrySchema::derive(spec, "train_b32").unwrap();
+        assert!(!schema.is_extended(10));
+        assert!(schema.is_extended(12));
+        // 11 args = weights without boot_gammas: refused by name.
+        let p = vec![0.0f32; spec.param_count];
+        let st = vec![0u8; 32 * spec.frame_elems()];
+        let acts = vec![0i32; 32];
+        let v32 = vec![0.0f32; 32];
+        let lr = [1e-4f32];
+        let mut args = vec![
+            TensorView::f32(&p, &[spec.param_count]),
+            TensorView::f32(&p, &[spec.param_count]),
+            TensorView::f32(&p, &[spec.param_count]),
+            TensorView::f32(&p, &[spec.param_count]),
+            TensorView::u8(&st, &[32, 84, 84, 4]),
+            TensorView::i32(&acts, &[32]),
+            TensorView::f32(&v32, &[32]),
+            TensorView::u8(&st, &[32, 84, 84, 4]),
+            TensorView::f32(&v32, &[32]),
+            TensorView::scalar(&lr),
+        ];
+        schema.validate_args(&args).unwrap();
+        args.push(TensorView::f32(&v32, &[32]));
+        let err = schema.validate_args(&args).unwrap_err().to_string();
+        assert!(err.contains("boot_gammas"), "{err}");
+        args.push(TensorView::f32(&v32, &[32]));
+        schema.validate_args(&args).unwrap();
+        args.push(TensorView::f32(&v32, &[32]));
+        assert!(schema.validate_args(&args).is_err());
+    }
+
+    #[test]
+    fn head_names_qualify_and_split_round_trip() {
+        let heads = [
+            Head::Dqn,
+            Head::Dueling,
+            Head::C51 { atoms: 51, v_min: -10.0, v_max: 10.0 },
+            Head::C51 { atoms: 21, v_min: -5.5, v_max: 7.25 },
+        ];
+        for head in heads {
+            let name = head.qualify("tiny");
+            let (base, parsed) = Head::split(&name).unwrap();
+            assert_eq!(base, "tiny");
+            assert_eq!(parsed, head, "{name}");
+        }
+        // dqn names are the bare config name — pre-head identity.
+        assert_eq!(Head::Dqn.qualify("nature"), "nature");
+        assert_eq!(Head::split("nature").unwrap(), ("nature".to_string(), Head::Dqn));
+        assert!(Head::split("tiny+mystery").is_err());
+        assert!(Head::split("tiny+c51[a,b,c]").is_err());
     }
 }

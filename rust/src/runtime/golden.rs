@@ -19,6 +19,7 @@
 
 use anyhow::{bail, Result};
 
+use super::engine::Head;
 use super::kernels::{col2im_sample, im2col_sample, matmul_a_bt, matmul_acc, matmul_at_b_acc};
 use super::native::{huber, huber_grad, NetArch, RMSPROP_ALPHA, RMSPROP_EPS};
 use super::qnet::TrainBatch;
@@ -279,6 +280,237 @@ pub fn reference_td_grads(
     }
 
     Ok((grad, loss))
+}
+
+// ---- Head-variant references (rust/DESIGN.md §16) -------------------------
+//
+// Written independently of `runtime/heads.rs` (whole-batch, naive im2col
+// kernels, its own projection code) so the two implementations can check
+// each other: `heads` pins its forward bitwise against these and its
+// analytic gradients against finite differences of `reference_loss_head`.
+
+/// Conv trunk only: flattened features `[B, trunk_dim]`, naive kernels.
+fn conv_trunk(arch: &NetArch, flat: &[f32], states: &[u8], batch: usize) -> Result<Vec<f32>> {
+    if flat.len() != arch.param_count() {
+        bail!("params: got {} values, want {}", flat.len(), arch.param_count());
+    }
+    let offs = arch.offsets();
+    let [h0, w0, c0] = arch.frame;
+    if states.len() != batch * h0 * w0 * c0 {
+        bail!("states: got {} bytes, want {}", states.len(), batch * h0 * w0 * c0);
+    }
+    let mut x: Vec<f32> = states.iter().map(|&v| v as f32 / 255.0).collect();
+    let hw = arch.conv_out_hw();
+    let (mut h, mut w, mut c) = (h0, w0, c0);
+    for (i, conv) in arch.convs.iter().enumerate() {
+        let (oh, ow) = hw[i];
+        let kdim = conv.kernel * conv.kernel * c;
+        let wmat = tensor(flat, &offs, 2 * i);
+        let bias = tensor(flat, &offs, 2 * i + 1);
+        let mut y = vec![0.0f32; batch * oh * ow * conv.filters];
+        let mut patches = vec![0.0f32; oh * ow * kdim];
+        for bi in 0..batch {
+            im2col_sample(&x[bi * h * w * c..(bi + 1) * h * w * c], h, w, c, conv.kernel, conv.stride, &mut patches);
+            let yrows = &mut y[bi * oh * ow * conv.filters..(bi + 1) * oh * ow * conv.filters];
+            matmul_acc(&patches, wmat, yrows, oh * ow, kdim, conv.filters);
+        }
+        for (j, v) in y.iter_mut().enumerate() {
+            let withb = *v + bias[j % conv.filters];
+            *v = if withb > 0.0 { withb } else { 0.0 };
+        }
+        x = y;
+        (h, w, c) = (oh, ow, conv.filters);
+    }
+    Ok(x)
+}
+
+/// One dense layer, whole batch: `y = x @ w + b`, optional ReLU.
+fn dense_naive(x: &[f32], wmat: &[f32], bias: &[f32], batch: usize, in_dim: usize, out_dim: usize, relu: bool) -> Vec<f32> {
+    let mut y = vec![0.0f32; batch * out_dim];
+    matmul_acc(x, wmat, &mut y, batch, in_dim, out_dim);
+    for (j, v) in y.iter_mut().enumerate() {
+        let withb = *v + bias[j % out_dim];
+        *v = if relu && withb <= 0.0 { 0.0 } else { withb };
+    }
+    y
+}
+
+/// C51 forward: (expected-value Q `[B, A]`, probabilities `[B, A*atoms]`).
+fn c51_forward(arch: &NetArch, flat: &[f32], states: &[u8], batch: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    let Head::C51 { atoms, v_min, v_max } = arch.head else {
+        bail!("c51_forward on a {:?} head", arch.head);
+    };
+    let offs = arch.offsets();
+    let mut x = conv_trunk(arch, flat, states, batch)?;
+    let mut dim = x.len() / batch;
+    let mut tidx = 2 * arch.convs.len();
+    for &width in arch.hidden.iter() {
+        x = dense_naive(&x, tensor(flat, &offs, tidx), tensor(flat, &offs, tidx + 1), batch, dim, width, true);
+        dim = width;
+        tidx += 2;
+    }
+    let a = arch.actions;
+    let logits = dense_naive(&x, tensor(flat, &offs, tidx), tensor(flat, &offs, tidx + 1), batch, dim, a * atoms, false);
+    let dz = (v_max - v_min) / (atoms as f32 - 1.0);
+    let mut q = vec![0.0f32; batch * a];
+    let mut probs = vec![0.0f32; batch * a * atoms];
+    for ra in 0..batch * a {
+        let lrow = &logits[ra * atoms..(ra + 1) * atoms];
+        let prow = &mut probs[ra * atoms..(ra + 1) * atoms];
+        let mut m = f32::NEG_INFINITY;
+        for &v in lrow {
+            if v > m {
+                m = v;
+            }
+        }
+        let mut sum = 0.0f32;
+        for (pv, &v) in prow.iter_mut().zip(lrow.iter()) {
+            *pv = (v - m).exp();
+            sum += *pv;
+        }
+        let mut ev = 0.0f32;
+        for (i, pv) in prow.iter_mut().enumerate() {
+            *pv /= sum;
+            ev += *pv * (v_min + dz * i as f32);
+        }
+        q[ra] = ev;
+    }
+    Ok((q, probs))
+}
+
+/// Serial whole-batch Q-values for any head — the infer oracle the head
+/// subsystem pins against bitwise.
+pub fn reference_infer_head(arch: &NetArch, params: &[f32], states: &[u8], batch: usize) -> Result<Vec<f32>> {
+    match arch.head {
+        Head::Dqn => reference_infer(arch, params, states, batch),
+        Head::Dueling => {
+            let offs = arch.offsets();
+            let mut val = conv_trunk(arch, params, states, batch)?;
+            let mut adv = val.clone();
+            let mut dim = val.len() / batch;
+            let mut tidx = 2 * arch.convs.len();
+            for &width in arch.hidden.iter() {
+                val = dense_naive(&val, tensor(params, &offs, tidx), tensor(params, &offs, tidx + 1), batch, dim, width, true);
+                adv = dense_naive(&adv, tensor(params, &offs, tidx + 2), tensor(params, &offs, tidx + 3), batch, dim, width, true);
+                dim = width;
+                tidx += 4;
+            }
+            let a = arch.actions;
+            let v = dense_naive(&val, tensor(params, &offs, tidx), tensor(params, &offs, tidx + 1), batch, dim, 1, false);
+            let ad = dense_naive(&adv, tensor(params, &offs, tidx + 2), tensor(params, &offs, tidx + 3), batch, dim, a, false);
+            let mut q = vec![0.0f32; batch * a];
+            for b in 0..batch {
+                let arow = &ad[b * a..(b + 1) * a];
+                let mut mean = 0.0f32;
+                for &av in arow {
+                    mean += av;
+                }
+                mean /= a as f32;
+                for (k, &av) in arow.iter().enumerate() {
+                    q[b * a + k] = v[b] + av - mean;
+                }
+            }
+            Ok(q)
+        }
+        Head::C51 { .. } => Ok(c51_forward(arch, params, states, batch)?.0),
+    }
+}
+
+/// Mean training loss for any head (Huber TD for dqn/dueling, projected
+/// cross-entropy for C51) — the finite-difference baseline for the head
+/// subsystem's analytic gradients. Unweighted, scalar `gamma`.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_loss_head(
+    arch: &NetArch,
+    theta: &[f32],
+    target_theta: &[f32],
+    states: &[u8],
+    actions: &[i32],
+    rewards: &[f32],
+    next_states: &[u8],
+    dones: &[f32],
+    gamma: f32,
+    double: bool,
+) -> Result<f32> {
+    let batch = actions.len();
+    let a = arch.actions;
+    let argmax = |qs: &[f32], b: usize| -> usize {
+        let row = &qs[b * a..(b + 1) * a];
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate().skip(1) {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best
+    };
+    match arch.head {
+        Head::Dqn | Head::Dueling => {
+            let q = reference_infer_head(arch, theta, states, batch)?;
+            let qn_target = reference_infer_head(arch, target_theta, next_states, batch)?;
+            let qn_online = if double {
+                Some(reference_infer_head(arch, theta, next_states, batch)?)
+            } else {
+                None
+            };
+            let mut loss = 0.0f32;
+            for b in 0..batch {
+                let act = actions[b];
+                if act < 0 || act as usize >= a {
+                    bail!("train: action {act} out of range 0..{a}");
+                }
+                let bootstrap = match &qn_online {
+                    Some(on) => qn_target[b * a + argmax(on, b)],
+                    None => qn_target[b * a..(b + 1) * a].iter().copied().fold(f32::NEG_INFINITY, f32::max),
+                };
+                let target = rewards[b] + gamma * (1.0 - dones[b]) * bootstrap;
+                loss += huber(q[b * a + act as usize] - target);
+            }
+            Ok(loss / batch as f32)
+        }
+        Head::C51 { atoms, v_min, v_max } => {
+            let (_, probs) = c51_forward(arch, theta, states, batch)?;
+            let (qn_target, probs_target) = c51_forward(arch, target_theta, next_states, batch)?;
+            let qn_online = if double {
+                Some(c51_forward(arch, theta, next_states, batch)?.0)
+            } else {
+                None
+            };
+            let dz = (v_max - v_min) / (atoms as f32 - 1.0);
+            let mut loss = 0.0f32;
+            for b in 0..batch {
+                let act = actions[b];
+                if act < 0 || act as usize >= a {
+                    bail!("train: action {act} out of range 0..{a}");
+                }
+                let astar = match &qn_online {
+                    Some(on) => argmax(on, b),
+                    None => argmax(&qn_target, b),
+                };
+                let pt = &probs_target[(b * a + astar) * atoms..(b * a + astar + 1) * atoms];
+                let scale = gamma * (1.0 - dones[b]);
+                // Independent projection (not heads::project_distribution).
+                let mut m = vec![0.0f32; atoms];
+                for (j, &pj) in pt.iter().enumerate() {
+                    let tz = (rewards[b] + scale * (v_min + dz * j as f32)).clamp(v_min, v_max);
+                    let pos = ((tz - v_min) / dz).clamp(0.0, (atoms - 1) as f32);
+                    let l = pos.floor() as usize;
+                    let u = pos.ceil() as usize;
+                    if l == u {
+                        m[l] += pj;
+                    } else {
+                        m[l] += pj * (u as f32 - pos);
+                        m[u] += pj * (pos - l as f32);
+                    }
+                }
+                let p_sel = &probs[(b * a + act as usize) * atoms..(b * a + act as usize + 1) * atoms];
+                for (mi, &pv) in m.iter().zip(p_sel.iter()) {
+                    loss -= mi * pv.max(1e-12).ln();
+                }
+            }
+            Ok(loss / batch as f32)
+        }
+    }
 }
 
 /// Outputs of one reference train step.

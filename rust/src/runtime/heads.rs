@@ -1,0 +1,1211 @@
+//! Head-variant execution: dueling and distributional (C51) dense tails on
+//! the shared conv trunk (rust/DESIGN.md §16).
+//!
+//! The dqn head keeps its dedicated code path in `runtime/native.rs`
+//! untouched (bit-identity by code-path identity). This module executes
+//! every *other* head through a **dense plan**: an ordered list of dense
+//! layers, each naming its weight tensor, dimensions, activation, and
+//! input (the conv-trunk features or an earlier plan layer). Dueling is a
+//! plan with two parallel streams; C51 is the dqn plan with an `A × atoms`
+//! output layer plus softmax/expectation post-processing.
+//!
+//! **Determinism contract** — identical to the dqn path's (DESIGN.md §9):
+//! Phase A shards the minibatch into contiguous sample ranges and computes
+//! everything per-sample (forward caches, targets, deltas); Phase B
+//! partitions each parameter tensor's rows and walks ALL samples in
+//! ascending global order with the same sparsity skips as the serial
+//! kernels (`Deterministic`) or the [`FAST_RANK`]-wide global-order
+//! grouping (`Fast`). Every head reduction with more than one contributor
+//! (the dueling mean-subtraction, the trunk delta fed by both streams, the
+//! C51 softmax/expectation/projection folds) runs in one fixed serial
+//! order, so results are bit-identical for every `learner_threads` /
+//! `prefetch` setting and across kill-and-resume — pinned by
+//! `tests/head_equivalence.rs`.
+//!
+//! [`FAST_RANK`]: super::kernels::FAST_RANK
+
+use anyhow::{bail, Result};
+
+use super::engine::Head;
+use super::kernels::{
+    conv2d_forward_mode, conv2d_input_grad_mode, conv2d_weight_grad_chunk_mode, matmul_a_bt_mode,
+    matmul_acc_mode, KernelMode,
+};
+use super::native::{fast_weight_chunk, huber, huber_grad, NetArch};
+use super::pool::{split_ranges, ComputePool};
+
+/// Where a dense layer reads its input.
+#[derive(Clone, Copy, Debug)]
+enum LayerIn {
+    /// The flattened conv-trunk features.
+    Trunk,
+    /// The post-activation output of an earlier plan layer.
+    Layer(usize),
+}
+
+/// One dense layer of a head's tail. `w` is the param tensor index of the
+/// `[in_dim, out_dim]` weight; the bias is always tensor `w + 1`.
+#[derive(Clone, Copy, Debug)]
+struct DenseLayer {
+    w: usize,
+    in_dim: usize,
+    out_dim: usize,
+    relu: bool,
+    input: LayerIn,
+}
+
+/// The dense tail of `arch` as an ordered plan. Plan order equals the
+/// param-tensor order after the conv tensors, and every layer's input
+/// appears earlier in the plan (so a single reverse walk backpropagates).
+fn dense_plan(arch: &NetArch) -> Vec<DenseLayer> {
+    let base = 2 * arch.convs.len();
+    let trunk = arch.trunk_dim();
+    let n_fc = arch.hidden.len();
+    let mut plan = Vec::new();
+    match arch.head {
+        Head::Dqn | Head::C51 { .. } => {
+            let out_dim = match arch.head {
+                Head::C51 { atoms, .. } => arch.actions * atoms,
+                _ => arch.actions,
+            };
+            let mut dim = trunk;
+            for (i, &width) in arch.hidden.iter().enumerate() {
+                plan.push(DenseLayer {
+                    w: base + 2 * i,
+                    in_dim: dim,
+                    out_dim: width,
+                    relu: true,
+                    input: if i == 0 { LayerIn::Trunk } else { LayerIn::Layer(i - 1) },
+                });
+                dim = width;
+            }
+            plan.push(DenseLayer {
+                w: base + 2 * n_fc,
+                in_dim: dim,
+                out_dim,
+                relu: false,
+                input: if n_fc == 0 { LayerIn::Trunk } else { LayerIn::Layer(n_fc - 1) },
+            });
+        }
+        Head::Dueling => {
+            // Parallel value/advantage streams, interleaved per level to
+            // match `NetArch::param_spec` (val{i}, adv{i}, ..., val_out,
+            // adv_out).
+            let mut dim = trunk;
+            for (i, &width) in arch.hidden.iter().enumerate() {
+                let (iv, ia) = if i == 0 {
+                    (LayerIn::Trunk, LayerIn::Trunk)
+                } else {
+                    (LayerIn::Layer(2 * (i - 1)), LayerIn::Layer(2 * (i - 1) + 1))
+                };
+                plan.push(DenseLayer { w: base + 4 * i, in_dim: dim, out_dim: width, relu: true, input: iv });
+                plan.push(DenseLayer { w: base + 4 * i + 2, in_dim: dim, out_dim: width, relu: true, input: ia });
+                dim = width;
+            }
+            let (iv, ia) = if n_fc == 0 {
+                (LayerIn::Trunk, LayerIn::Trunk)
+            } else {
+                (LayerIn::Layer(2 * (n_fc - 1)), LayerIn::Layer(2 * (n_fc - 1) + 1))
+            };
+            plan.push(DenseLayer { w: base + 4 * n_fc, in_dim: dim, out_dim: 1, relu: false, input: iv });
+            plan.push(DenseLayer {
+                w: base + 4 * n_fc + 2,
+                in_dim: dim,
+                out_dim: arch.actions,
+                relu: false,
+                input: ia,
+            });
+        }
+    }
+    plan
+}
+
+/// Flat parameter accessor (the head twin of `native::Params`).
+struct P<'a> {
+    flat: &'a [f32],
+    off: Vec<(usize, usize)>,
+}
+
+impl<'a> P<'a> {
+    fn new(arch: &NetArch, flat: &'a [f32]) -> Result<P<'a>> {
+        if flat.len() != arch.param_count() {
+            bail!("params: got {} values, want {}", flat.len(), arch.param_count());
+        }
+        Ok(P { flat, off: arch.offsets() })
+    }
+
+    fn t(&self, idx: usize) -> &'a [f32] {
+        let (o, n) = self.off[idx];
+        &self.flat[o..o + n]
+    }
+}
+
+/// Conv-trunk activations for one shard.
+struct TrunkFwd {
+    /// Normalized input `[rows, H, W, C]` (kept only when `keep`).
+    x0: Vec<f32>,
+    /// Post-ReLU output of each conv layer (kept only when `keep`).
+    conv_out: Vec<Vec<f32>>,
+    /// Flattened trunk features `[rows, trunk_dim]`.
+    feats: Vec<f32>,
+}
+
+/// Conv trunk forward, patch-free per sample — byte-for-byte the conv loop
+/// of `native::forward_shard`, factored so head tails can share it.
+fn trunk_forward(
+    arch: &NetArch,
+    p: &P<'_>,
+    states: &[u8],
+    rows: usize,
+    keep: bool,
+    mode: KernelMode,
+) -> Result<TrunkFwd> {
+    let [h0, w0, c0] = arch.frame;
+    if states.len() != rows * h0 * w0 * c0 {
+        bail!("states: got {} bytes, want {}", states.len(), rows * h0 * w0 * c0);
+    }
+    let mut x: Vec<f32> = states.iter().map(|&v| v as f32 / 255.0).collect();
+    let hw = arch.conv_out_hw();
+    let mut conv_out: Vec<Vec<f32>> = Vec::with_capacity(arch.convs.len());
+    let mut x0_keep: Vec<f32> = Vec::new();
+    if arch.convs.is_empty() && keep {
+        x0_keep = x.clone();
+    }
+    let (mut h, mut w, mut c) = (h0, w0, c0);
+    for (i, conv) in arch.convs.iter().enumerate() {
+        let (oh, ow) = hw[i];
+        let wmat = p.t(2 * i);
+        let bias = p.t(2 * i + 1);
+        let in_sz = h * w * c;
+        let out_sz = oh * ow * conv.filters;
+        let mut y = vec![0.0f32; rows * out_sz];
+        for bi in 0..rows {
+            conv2d_forward_mode(
+                mode,
+                &x[bi * in_sz..(bi + 1) * in_sz],
+                wmat,
+                &mut y[bi * out_sz..(bi + 1) * out_sz],
+                h,
+                w,
+                c,
+                conv.kernel,
+                conv.stride,
+                conv.filters,
+            );
+        }
+        for (j, v) in y.iter_mut().enumerate() {
+            let withb = *v + bias[j % conv.filters];
+            *v = if withb > 0.0 { withb } else { 0.0 };
+        }
+        if i == 0 && keep {
+            x0_keep = std::mem::replace(&mut x, y);
+        } else {
+            x = y;
+        }
+        (h, w, c) = (oh, ow, conv.filters);
+        if keep {
+            conv_out.push(x.clone());
+        }
+    }
+    Ok(TrunkFwd { x0: x0_keep, conv_out, feats: x })
+}
+
+/// One shard's forward state for a head tail.
+struct HeadFwd {
+    x0: Vec<f32>,
+    conv_out: Vec<Vec<f32>>,
+    /// Post-activation output of each plan layer (cleared unless `keep`).
+    acts: Vec<Vec<f32>>,
+    /// Head Q-values `[rows, A]` (expected values for C51).
+    q: Vec<f32>,
+    /// C51 only: per-(sample, action) softmax probabilities
+    /// `[rows, A * atoms]`; empty for other heads.
+    probs: Vec<f32>,
+}
+
+/// Forward over `rows` consecutive samples through the dense plan plus the
+/// head's aggregation. Per-sample throughout (every cross-term folds in a
+/// fixed serial order), so sharding never changes a bit.
+fn forward_head(
+    arch: &NetArch,
+    p: &P<'_>,
+    plan: &[DenseLayer],
+    states: &[u8],
+    rows: usize,
+    keep: bool,
+    mode: KernelMode,
+) -> Result<HeadFwd> {
+    let trunk = trunk_forward(arch, p, states, rows, keep, mode)?;
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(plan.len());
+    for layer in plan {
+        let xin: &[f32] = match layer.input {
+            LayerIn::Trunk => &trunk.feats,
+            LayerIn::Layer(j) => &acts[j],
+        };
+        let wmat = p.t(layer.w);
+        let bias = p.t(layer.w + 1);
+        let mut y = vec![0.0f32; rows * layer.out_dim];
+        matmul_acc_mode(mode, xin, wmat, &mut y, rows, layer.in_dim, layer.out_dim);
+        if layer.relu {
+            for (j, v) in y.iter_mut().enumerate() {
+                let withb = *v + bias[j % layer.out_dim];
+                *v = if withb > 0.0 { withb } else { 0.0 };
+            }
+        } else {
+            for (j, v) in y.iter_mut().enumerate() {
+                *v += bias[j % layer.out_dim];
+            }
+        }
+        acts.push(y);
+    }
+
+    let a = arch.actions;
+    let mut q = vec![0.0f32; rows * a];
+    let mut probs = Vec::new();
+    match arch.head {
+        Head::Dqn => q.copy_from_slice(acts.last().expect("plan is never empty")),
+        Head::Dueling => {
+            // Q(s,a) = V(s) + A(s,a) − mean_a' A(s,a'); the mean folds in
+            // ascending action order.
+            let val = &acts[acts.len() - 2]; // [rows, 1]
+            let adv = &acts[acts.len() - 1]; // [rows, A]
+            for r in 0..rows {
+                let arow = &adv[r * a..(r + 1) * a];
+                let mut mean = 0.0f32;
+                for &v in arow {
+                    mean += v;
+                }
+                mean /= a as f32;
+                let v = val[r];
+                for (k, &av) in arow.iter().enumerate() {
+                    q[r * a + k] = v + av - mean;
+                }
+            }
+        }
+        Head::C51 { atoms, v_min, v_max } => {
+            // Per-(sample, action) softmax over the fixed support, then the
+            // expected value — every fold in ascending atom order
+            // (max-subtracted for stability).
+            let logits = acts.last().expect("plan is never empty");
+            probs = vec![0.0f32; rows * a * atoms];
+            let dz = (v_max - v_min) / (atoms as f32 - 1.0);
+            for r in 0..rows {
+                for k in 0..a {
+                    let lrow = &logits[(r * a + k) * atoms..(r * a + k + 1) * atoms];
+                    let prow = &mut probs[(r * a + k) * atoms..(r * a + k + 1) * atoms];
+                    let mut m = f32::NEG_INFINITY;
+                    for &v in lrow {
+                        if v > m {
+                            m = v;
+                        }
+                    }
+                    let mut sum = 0.0f32;
+                    for (pv, &v) in prow.iter_mut().zip(lrow.iter()) {
+                        *pv = (v - m).exp();
+                        sum += *pv;
+                    }
+                    let mut ev = 0.0f32;
+                    for (i, pv) in prow.iter_mut().enumerate() {
+                        *pv /= sum;
+                        ev += *pv * (v_min + dz * i as f32);
+                    }
+                    q[r * a + k] = ev;
+                }
+            }
+        }
+    }
+    if !keep {
+        acts.clear();
+    }
+    Ok(HeadFwd { x0: trunk.x0, conv_out: trunk.conv_out, acts, q, probs })
+}
+
+/// Head Q-values, serial, deterministic tier (tests and references).
+pub fn infer_head(arch: &NetArch, params: &[f32], states: &[u8], batch: usize) -> Result<Vec<f32>> {
+    let p = P::new(arch, params)?;
+    let plan = dense_plan(arch);
+    Ok(forward_head(arch, &p, &plan, states, batch, false, KernelMode::Deterministic)?.q)
+}
+
+/// Head Q-values sharded over the pool — bit-identical across pool widths
+/// in either kernel mode (the forward pass is per-sample).
+pub fn infer_pooled_head(
+    arch: &NetArch,
+    params: &[f32],
+    states: &[u8],
+    batch: usize,
+    pool: &ComputePool,
+    mode: KernelMode,
+) -> Result<Vec<f32>> {
+    let p = P::new(arch, params)?;
+    let plan = dense_plan(arch);
+    let frame = arch.frame_elems();
+    if states.len() != batch * frame {
+        bail!("states: got {} bytes, want {}", states.len(), batch * frame);
+    }
+    let ranges = split_ranges(batch, pool.threads());
+    if ranges.len() <= 1 {
+        return Ok(forward_head(arch, &p, &plan, states, batch, false, mode)?.q);
+    }
+    let a = arch.actions;
+    let mut q = vec![0.0f32; batch * a];
+    let mut errs: Vec<Option<String>> = Vec::new();
+    errs.resize(ranges.len(), None);
+
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut q_rest: &mut [f32] = &mut q;
+    for ((lo, hi), err) in ranges.iter().copied().zip(errs.iter_mut()) {
+        let (chunk, tail) = std::mem::take(&mut q_rest).split_at_mut((hi - lo) * a);
+        q_rest = tail;
+        let p = &p;
+        let plan = &plan[..];
+        let rows_states = &states[lo * frame..hi * frame];
+        tasks.push(Box::new(move || {
+            match forward_head(arch, p, plan, rows_states, hi - lo, false, mode) {
+                Ok(fwd) => chunk.copy_from_slice(&fwd.q),
+                Err(e) => *err = Some(e.to_string()),
+            }
+        }));
+    }
+    pool.scope(tasks);
+    if let Some(e) = errs.into_iter().flatten().next() {
+        bail!("{e}");
+    }
+    Ok(q)
+}
+
+/// Project the Bellman-shifted support `reward + scale · z_j` of a target
+/// distribution `p_target` onto the fixed support, accumulating into `m`
+/// (which the caller zeroes). Ascending atom order; `scale` is
+/// `γ_bootstrap · (1 − done)`, so terminal samples collapse the whole mass
+/// onto `clamp(reward)`.
+pub(crate) fn project_distribution(
+    p_target: &[f32],
+    reward: f32,
+    scale: f32,
+    atoms: usize,
+    v_min: f32,
+    v_max: f32,
+    m: &mut [f32],
+) {
+    let dz = (v_max - v_min) / (atoms as f32 - 1.0);
+    for (j, &pj) in p_target.iter().enumerate() {
+        let tz = (reward + scale * (v_min + dz * j as f32)).clamp(v_min, v_max);
+        let pos = ((tz - v_min) / dz).clamp(0.0, (atoms - 1) as f32);
+        let l = pos.floor() as usize;
+        let u = pos.ceil() as usize;
+        if l == u {
+            m[l] += pj;
+        } else {
+            m[l] += pj * (u as f32 - pos);
+            m[u] += pj * (pos - l as f32);
+        }
+    }
+}
+
+/// Everything Phase A produces for one contiguous sample range.
+#[derive(Default)]
+struct HeadSlot {
+    lo: usize,
+    hi: usize,
+    x0: Vec<f32>,
+    conv_out: Vec<Vec<f32>>,
+    /// Post-activation output per plan layer.
+    acts: Vec<Vec<f32>>,
+    /// Masked (post-ReLU) delta per plan layer, already scaled by the IS
+    /// weight and 1/batch.
+    deltas: Vec<Vec<f32>>,
+    /// Masked deltas per conv layer.
+    dconv: Vec<Vec<f32>>,
+    /// Per-sample (weighted) losses.
+    losses: Vec<f32>,
+    /// Per-sample priority signal (pre-weight): the raw TD error for
+    /// dueling, the projected cross-entropy for C51.
+    td: Vec<f32>,
+    err: Option<String>,
+}
+
+impl HeadSlot {
+    fn rows(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+/// Phase A body for one shard: forwards, targets, head deltas, and the
+/// reverse plan/conv backward.
+#[allow(clippy::too_many_arguments)]
+fn shard_phase_a_head(
+    arch: &NetArch,
+    p: &P<'_>,
+    pt: &P<'_>,
+    plan: &[DenseLayer],
+    states: &[u8],
+    actions: &[i32],
+    rewards: &[f32],
+    next_states: &[u8],
+    dones: &[f32],
+    gamma: f32,
+    weights: Option<&[f32]>,
+    boot_gammas: Option<&[f32]>,
+    double: bool,
+    batch_total: usize,
+    mode: KernelMode,
+    slot: &mut HeadSlot,
+) -> Result<()> {
+    let rows = slot.rows();
+    let (lo, hi) = (slot.lo, slot.hi);
+    let frame = arch.frame_elems();
+    let a = arch.actions;
+
+    let fwd = forward_head(arch, p, plan, &states[lo * frame..hi * frame], rows, true, mode)?;
+    let next_rows = &next_states[lo * frame..hi * frame];
+    let tgt = forward_head(arch, pt, plan, next_rows, rows, false, mode)?;
+    let online_next = if double {
+        Some(forward_head(arch, p, plan, next_rows, rows, false, mode)?)
+    } else {
+        None
+    };
+    // Bootstrap action selection: Double-DQN selects by the online net's
+    // next-state Q-row, standard by the target net's — first index wins
+    // ties (strictly-greater scan), matching the dqn path.
+    let argmax_row = |qs: &[f32], r: usize| -> usize {
+        let row = &qs[r * a..(r + 1) * a];
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate().skip(1) {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best
+    };
+
+    let n_dense = plan.len();
+    let mut deltas: Vec<Vec<f32>> =
+        plan.iter().map(|l| vec![0.0f32; rows * l.out_dim]).collect();
+    let mut losses = vec![0.0f32; rows];
+    let mut td = vec![0.0f32; rows];
+
+    match arch.head {
+        Head::Dqn | Head::Dueling => {
+            // Scalar TD on the head's Q-values (mean Huber), exactly the
+            // dqn expression shape; dueling then splits dL/dq into the
+            // value/advantage stream deltas.
+            let mut dq = vec![0.0f32; rows * a];
+            for r in 0..rows {
+                let b = lo + r;
+                let act = actions[b];
+                if act < 0 || act as usize >= a {
+                    bail!("train: action {act} out of range 0..{a}");
+                }
+                let bootstrap = match &online_next {
+                    Some(on) => tgt.q[r * a + argmax_row(&on.q, r)],
+                    None => tgt.q[r * a..(r + 1) * a]
+                        .iter()
+                        .copied()
+                        .fold(f32::NEG_INFINITY, f32::max),
+                };
+                let bg = boot_gammas.map_or(gamma, |g| g[b]);
+                let target = rewards[b] + bg * (1.0 - dones[b]) * bootstrap;
+                let d = fwd.q[r * a + act as usize] - target;
+                td[r] = d;
+                let w = weights.map_or(1.0, |ws| ws[b]);
+                losses[r] = w * huber(d);
+                dq[r * a + act as usize] = w * huber_grad(d) / batch_total as f32;
+            }
+            match arch.head {
+                Head::Dueling => {
+                    // dV[r] = Σ_k dq[r,k]; dA[r,k] = dq[r,k] − dV[r]/A.
+                    // (Only the selected action's dq is nonzero, but the
+                    // general expression keeps the math auditable.)
+                    for r in 0..rows {
+                        let row = &dq[r * a..(r + 1) * a];
+                        let mut s = 0.0f32;
+                        for &v in row {
+                            s += v;
+                        }
+                        deltas[n_dense - 2][r] = s;
+                        for (k, &v) in row.iter().enumerate() {
+                            deltas[n_dense - 1][r * a + k] = v - s / a as f32;
+                        }
+                    }
+                }
+                _ => deltas[n_dense - 1] = dq,
+            }
+        }
+        Head::C51 { atoms, v_min, v_max } => {
+            let dl = &mut deltas[n_dense - 1]; // [rows, A*atoms] logit deltas
+            let mut m = vec![0.0f32; atoms];
+            for r in 0..rows {
+                let b = lo + r;
+                let act = actions[b];
+                if act < 0 || act as usize >= a {
+                    bail!("train: action {act} out of range 0..{a}");
+                }
+                let astar = match &online_next {
+                    Some(on) => argmax_row(&on.q, r),
+                    None => argmax_row(&tgt.q, r),
+                };
+                let pt_row = &tgt.probs[(r * a + astar) * atoms..(r * a + astar + 1) * atoms];
+                let bg = boot_gammas.map_or(gamma, |g| g[b]);
+                let scale = bg * (1.0 - dones[b]);
+                m.iter_mut().for_each(|v| *v = 0.0);
+                project_distribution(pt_row, rewards[b], scale, atoms, v_min, v_max, &mut m);
+                // Cross-entropy against the projected target; the gradient
+                // w.r.t. the selected action's logits is (p − m)·w/B.
+                let p_sel = &fwd.probs[(r * a + act as usize) * atoms
+                    ..(r * a + act as usize + 1) * atoms];
+                let mut ce = 0.0f32;
+                for (mi, &pv) in m.iter().zip(p_sel.iter()) {
+                    ce -= mi * pv.max(1e-12).ln();
+                }
+                td[r] = ce;
+                let w = weights.map_or(1.0, |ws| ws[b]);
+                losses[r] = w * ce;
+                let drow = &mut dl[(r * a + act as usize) * atoms
+                    ..(r * a + act as usize + 1) * atoms];
+                for ((dv, &pv), &mi) in drow.iter_mut().zip(p_sel.iter()).zip(m.iter()) {
+                    *dv = w * (pv - mi) / batch_total as f32;
+                }
+            }
+        }
+    }
+
+    // Reverse plan walk: mask each layer's delta by its own post-activation
+    // (ReLU layers), then propagate to its input. A layer's input always
+    // precedes it in the plan, so each delta is complete before it is
+    // consumed. The trunk delta accumulates its (possibly two) stream
+    // contributions in fixed reverse-plan order.
+    let trunk_dim = arch.trunk_dim();
+    let mut dtrunk = vec![0.0f32; rows * trunk_dim];
+    for li in (0..n_dense).rev() {
+        let layer = plan[li];
+        let (before, rest) = deltas.split_at_mut(li);
+        let d = &mut rest[0];
+        if layer.relu {
+            for (dv, &v) in d.iter_mut().zip(fwd.acts[li].iter()) {
+                if v <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+        }
+        let wmat = p.t(layer.w);
+        let mut dprev = vec![0.0f32; rows * layer.in_dim];
+        matmul_a_bt_mode(mode, d, wmat, &mut dprev, rows, layer.out_dim, layer.in_dim);
+        match layer.input {
+            LayerIn::Trunk => {
+                for (o, v) in dtrunk.iter_mut().zip(dprev) {
+                    *o += v;
+                }
+            }
+            LayerIn::Layer(j) => {
+                for (o, v) in before[j].iter_mut().zip(dprev) {
+                    *o += v;
+                }
+            }
+        }
+    }
+
+    // Conv backward — byte-for-byte the dqn path's loop.
+    let n_conv = arch.convs.len();
+    let hw = arch.conv_out_hw();
+    let mut dx = dtrunk;
+    let mut dconv: Vec<Vec<f32>> = vec![Vec::new(); n_conv];
+    for i in (0..n_conv).rev() {
+        let conv = arch.convs[i];
+        let (oh, ow) = hw[i];
+        let (in_h, in_w, in_c) = if i > 0 {
+            (hw[i - 1].0, hw[i - 1].1, arch.convs[i - 1].filters)
+        } else {
+            (arch.frame[0], arch.frame[1], arch.frame[2])
+        };
+        let f = conv.filters;
+        for (dv, &v) in dx.iter_mut().zip(fwd.conv_out[i].iter()) {
+            if v <= 0.0 {
+                *dv = 0.0;
+            }
+        }
+        let need_dx = i > 0;
+        let wmat = p.t(2 * i);
+        let in_sz = in_h * in_w * in_c;
+        let mut dprev = if need_dx { vec![0.0f32; rows * in_sz] } else { Vec::new() };
+        if need_dx {
+            for bi in 0..rows {
+                let dy = &dx[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+                conv2d_input_grad_mode(
+                    mode,
+                    dy,
+                    wmat,
+                    &mut dprev[bi * in_sz..(bi + 1) * in_sz],
+                    in_h,
+                    in_w,
+                    in_c,
+                    conv.kernel,
+                    conv.stride,
+                    f,
+                );
+            }
+        }
+        dconv[i] = std::mem::replace(&mut dx, dprev);
+    }
+
+    slot.x0 = fwd.x0;
+    slot.conv_out = fwd.conv_out;
+    slot.acts = fwd.acts;
+    slot.deltas = deltas;
+    slot.dconv = dconv;
+    slot.losses = losses;
+    slot.td = td;
+    Ok(())
+}
+
+/// TD/CE loss + full parameter gradient for a head variant (the train
+/// entry minus the optimizer), two-phase like `native::td_grads_opts`.
+/// Returns (grad, loss, per-sample priority signal). Bit-identical for
+/// every pool width in both kernel tiers (see module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn td_grads_head(
+    arch: &NetArch,
+    theta: &[f32],
+    target_theta: &[f32],
+    states: &[u8],
+    actions: &[i32],
+    rewards: &[f32],
+    next_states: &[u8],
+    dones: &[f32],
+    gamma: f32,
+    weights: Option<&[f32]>,
+    boot_gammas: Option<&[f32]>,
+    double: bool,
+    pool: &ComputePool,
+    mode: KernelMode,
+) -> Result<(Vec<f32>, f32, Vec<f32>)> {
+    let batch = actions.len();
+    if batch == 0 {
+        bail!("train: empty minibatch");
+    }
+    if let Some(w) = weights {
+        if w.len() != batch {
+            bail!("train: {} weights for a {batch}-sample minibatch", w.len());
+        }
+    }
+    if let Some(g) = boot_gammas {
+        if g.len() != batch {
+            bail!("train: {} bootstrap discounts for a {batch}-sample minibatch", g.len());
+        }
+    }
+    let p = P::new(arch, theta)?;
+    let pt = P::new(arch, target_theta)?;
+    let plan = dense_plan(arch);
+
+    // ---- Phase A: per-sample work over contiguous shards -----------------
+    let ranges = split_ranges(batch, pool.threads());
+    let mut slots: Vec<HeadSlot> = ranges
+        .iter()
+        .map(|&(lo, hi)| HeadSlot { lo, hi, ..HeadSlot::default() })
+        .collect();
+    {
+        let p = &p;
+        let pt = &pt;
+        let plan = &plan[..];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .iter_mut()
+            .map(|slot| {
+                Box::new(move || {
+                    if let Err(e) = shard_phase_a_head(
+                        arch, p, pt, plan, states, actions, rewards, next_states, dones,
+                        gamma, weights, boot_gammas, double, batch, mode, slot,
+                    ) {
+                        slot.err = Some(e.to_string());
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+    }
+    for slot in slots.iter() {
+        if let Some(e) = &slot.err {
+            bail!("{e}");
+        }
+    }
+
+    // Mean loss and priority signal, in global sample order.
+    let mut loss = 0.0f32;
+    for slot in slots.iter() {
+        for &l in &slot.losses {
+            loss += l;
+        }
+    }
+    loss /= batch as f32;
+    let mut td_all = vec![0.0f32; batch];
+    for slot in slots.iter() {
+        td_all[slot.lo..slot.hi].copy_from_slice(&slot.td);
+    }
+
+    // ---- Phase B: parameter reductions in global sample order ------------
+    let n_conv = arch.convs.len();
+    let hw = arch.conv_out_hw();
+    let threads = pool.threads();
+    let mut grad = vec![0.0f32; arch.param_count()];
+    let mut tensor_slices: Vec<&mut [f32]> = Vec::new();
+    {
+        let mut rest: &mut [f32] = &mut grad;
+        for (_, shape) in arch.param_spec() {
+            let n: usize = shape.iter().product();
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(n);
+            tensor_slices.push(head);
+            rest = tail;
+        }
+    }
+
+    let slots_ref: &[HeadSlot] = &slots;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    let mut slice_iter = tensor_slices.into_iter();
+
+    // Conv tensors — the dqn path's chunking verbatim.
+    for i in 0..n_conv {
+        let conv = arch.convs[i];
+        let (oh, ow) = hw[i];
+        let f = conv.filters;
+        let (in_h, in_w, in_c) = if i > 0 {
+            (hw[i - 1].0, hw[i - 1].1, arch.convs[i - 1].filters)
+        } else {
+            (arch.frame[0], arch.frame[1], arch.frame[2])
+        };
+        let kdim = conv.kernel * conv.kernel * in_c;
+        let in_sz = in_h * in_w * in_c;
+        let wslice = slice_iter.next().unwrap();
+        let bslice = slice_iter.next().unwrap();
+
+        let chunk_rows = kdim.div_ceil(threads);
+        let mut k_lo = 0;
+        for chunk in wslice.chunks_mut(chunk_rows * f) {
+            let k_hi = k_lo + chunk.len() / f;
+            tasks.push(Box::new(move || {
+                for slot in slots_ref {
+                    let rows = slot.rows();
+                    let dcv = &slot.dconv[i];
+                    let xin: &[f32] = if i > 0 { &slot.conv_out[i - 1] } else { &slot.x0 };
+                    for bi in 0..rows {
+                        let dy = &dcv[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+                        let xs = &xin[bi * in_sz..(bi + 1) * in_sz];
+                        conv2d_weight_grad_chunk_mode(
+                            mode,
+                            xs,
+                            dy,
+                            chunk,
+                            k_lo,
+                            k_hi,
+                            in_h,
+                            in_w,
+                            in_c,
+                            conv.kernel,
+                            conv.stride,
+                            f,
+                        );
+                    }
+                }
+            }));
+            k_lo = k_hi;
+        }
+        tasks.push(Box::new(move || {
+            for slot in slots_ref {
+                let rows = slot.rows();
+                let dcv = &slot.dconv[i];
+                for bi in 0..rows {
+                    let dy = &dcv[bi * oh * ow * f..(bi + 1) * oh * ow * f];
+                    for row in 0..oh * ow {
+                        for (o, &dv) in bslice.iter_mut().zip(dy[row * f..(row + 1) * f].iter()) {
+                            *o += dv;
+                        }
+                    }
+                }
+            }
+        }));
+    }
+
+    // Dense plan tensors: one uniform loop — weight rows chunked over
+    // in_dim, every chunk walking all samples in ascending global order
+    // (ascending-kk + sparsity skip in the deterministic tier, FAST_RANK
+    // global-order grouping in fast).
+    for (li, &layer) in plan.iter().enumerate() {
+        let width = layer.out_dim;
+        let in_dim = layer.in_dim;
+        let wslice = slice_iter.next().unwrap();
+        let bslice = slice_iter.next().unwrap();
+        let slot_input = move |slot: &'_ HeadSlot| -> &'_ [f32] {
+            match layer.input {
+                LayerIn::Trunk => {
+                    if n_conv > 0 {
+                        &slot.conv_out[n_conv - 1]
+                    } else {
+                        &slot.x0
+                    }
+                }
+                LayerIn::Layer(j) => &slot.acts[j],
+            }
+        };
+
+        let chunk_rows = in_dim.div_ceil(threads);
+        let mut k_lo = 0;
+        for chunk in wslice.chunks_mut(chunk_rows * width) {
+            let k_hi = k_lo + chunk.len() / width;
+            tasks.push(Box::new(move || match mode {
+                KernelMode::Deterministic => {
+                    for slot in slots_ref {
+                        let rows = slot.rows();
+                        let xin = slot_input(slot);
+                        let dxl = &slot.deltas[li];
+                        for r in 0..rows {
+                            let xrow = &xin[r * in_dim..(r + 1) * in_dim];
+                            let drow = &dxl[r * width..(r + 1) * width];
+                            for kk in k_lo..k_hi {
+                                let av = xrow[kk];
+                                if av == 0.0 {
+                                    continue;
+                                }
+                                let orow = &mut chunk[(kk - k_lo) * width..(kk - k_lo + 1) * width];
+                                for (o, &dv) in orow.iter_mut().zip(drow.iter()) {
+                                    *o += av * dv;
+                                }
+                            }
+                        }
+                    }
+                }
+                KernelMode::Fast => {
+                    let xrows: Vec<&[f32]> = slots_ref
+                        .iter()
+                        .flat_map(|slot| {
+                            let xin = slot_input(slot);
+                            (0..slot.rows()).map(move |r| &xin[r * in_dim..(r + 1) * in_dim])
+                        })
+                        .collect();
+                    let drows: Vec<&[f32]> = slots_ref
+                        .iter()
+                        .flat_map(|slot| {
+                            let dxl: &[f32] = &slot.deltas[li];
+                            (0..slot.rows()).map(move |r| &dxl[r * width..(r + 1) * width])
+                        })
+                        .collect();
+                    fast_weight_chunk(chunk, width, k_lo, k_hi, &xrows, &drows);
+                }
+            }));
+            k_lo = k_hi;
+        }
+        tasks.push(Box::new(move || {
+            for slot in slots_ref {
+                let rows = slot.rows();
+                let dxl = &slot.deltas[li];
+                for r in 0..rows {
+                    for (o, &dv) in bslice.iter_mut().zip(dxl[r * width..(r + 1) * width].iter()) {
+                        *o += dv;
+                    }
+                }
+            }
+        }));
+    }
+    pool.scope(tasks);
+
+    Ok((grad, loss, td_all))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::golden;
+    use crate::runtime::native::{init_params, ConvSpec};
+    use crate::util::rng::Rng;
+
+    fn micro(head: Head) -> NetArch {
+        NetArch {
+            name: "micro".into(),
+            frame: [8, 8, 2],
+            convs: vec![ConvSpec { filters: 2, kernel: 4, stride: 4 }],
+            hidden: vec![8],
+            actions: 3,
+            head,
+        }
+    }
+
+    fn c51_head() -> Head {
+        Head::C51 { atoms: 5, v_min: -2.0, v_max: 2.0 }
+    }
+
+    fn micro_batch(
+        arch: &NetArch,
+        rng: &mut Rng,
+    ) -> (Vec<u8>, Vec<i32>, Vec<f32>, Vec<u8>, Vec<f32>) {
+        let b = 4;
+        let fe = arch.frame_elems();
+        let states: Vec<u8> = (0..b * fe).map(|_| rng.below(256) as u8).collect();
+        let next: Vec<u8> = (0..b * fe).map(|_| rng.below(256) as u8).collect();
+        let actions: Vec<i32> = (0..b).map(|_| rng.below(arch.actions as u32) as i32).collect();
+        let rewards: Vec<f32> = (0..b).map(|_| rng.f32() - 0.5).collect();
+        let dones: Vec<f32> = (0..b).map(|i| if i == 1 { 1.0 } else { 0.0 }).collect();
+        (states, actions, rewards, next, dones)
+    }
+
+    #[test]
+    fn head_param_specs_are_consistent() {
+        for head in [Head::Dueling, c51_head()] {
+            let arch = micro(head);
+            let total: usize =
+                arch.param_spec().iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+            assert_eq!(total, arch.param_count());
+            let plan = dense_plan(&arch);
+            // Plan tensors tile the param spec after the convs, in order.
+            let mut expect = 2 * arch.convs.len();
+            for l in &plan {
+                assert_eq!(l.w, expect, "plan order must match param order");
+                expect += 2;
+            }
+            assert_eq!(expect, arch.param_spec().len());
+        }
+    }
+
+    #[test]
+    fn dueling_q_aggregates_value_and_advantage() {
+        let arch = micro(Head::Dueling);
+        let theta = init_params(&arch, 3);
+        let mut rng = Rng::new(5);
+        let states: Vec<u8> = (0..2 * arch.frame_elems()).map(|_| rng.below(256) as u8).collect();
+        let q = infer_head(&arch, &theta, &states, 2).unwrap();
+        assert_eq!(q.len(), 2 * arch.actions);
+        // Mean-subtracted aggregation ⇒ mean_a Q(s,a) == V(s); verify the
+        // identity Σ_a (Q − mean Q) reproduces the advantage residuals.
+        for r in 0..2 {
+            let row = &q[r * arch.actions..(r + 1) * arch.actions];
+            let mean: f32 = row.iter().sum::<f32>() / arch.actions as f32;
+            let resid: f32 = row.iter().map(|v| v - mean).sum();
+            assert!(resid.abs() < 1e-4, "row {r}: residual {resid}");
+        }
+    }
+
+    #[test]
+    fn c51_probabilities_normalize_and_bound_q() {
+        let arch = micro(c51_head());
+        let theta = init_params(&arch, 4);
+        let mut rng = Rng::new(6);
+        let states: Vec<u8> = (0..3 * arch.frame_elems()).map(|_| rng.below(256) as u8).collect();
+        let p = P::new(&arch, &theta).unwrap();
+        let plan = dense_plan(&arch);
+        let fwd =
+            forward_head(&arch, &p, &plan, &states, 3, false, KernelMode::Deterministic).unwrap();
+        let Head::C51 { atoms, v_min, v_max } = arch.head else { unreachable!() };
+        for ra in 0..3 * arch.actions {
+            let sum: f32 = fwd.probs[ra * atoms..(ra + 1) * atoms].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {ra}: probs sum {sum}");
+        }
+        for &qv in &fwd.q {
+            assert!(qv >= v_min && qv <= v_max, "expected value {qv} outside support");
+        }
+    }
+
+    #[test]
+    fn projection_matches_hand_computed_case() {
+        // atoms=3 support {-1, 0, 1}, dz=1. Target dist (0.5, 0.25, 0.25),
+        // reward 0.2, scale 0.5: Tz = {-0.3, 0.2, 0.7}.
+        let mut m = vec![0.0f32; 3];
+        project_distribution(&[0.5, 0.25, 0.25], 0.2, 0.5, 3, -1.0, 1.0, &mut m);
+        // -0.3 → 0.3/0.7 split between atoms 0,1 of mass .5;
+        //  0.2 → 0.8/0.2 split between atoms 1,2 of mass .25;
+        //  0.7 → 0.3/0.7 split between atoms 1,2 of mass .25.
+        let expect = [
+            0.5 * 0.3,
+            0.5 * 0.7 + 0.25 * 0.8 + 0.25 * 0.3,
+            0.25 * 0.2 + 0.25 * 0.7,
+        ];
+        for (got, want) in m.iter().zip(expect.iter()) {
+            assert!((got - want).abs() < 1e-6, "{m:?} vs {expect:?}");
+        }
+        assert!((m.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+
+        // Terminal sample (scale 0): whole mass lands on clamp(reward).
+        let mut m = vec![0.0f32; 3];
+        project_distribution(&[0.2, 0.3, 0.5], 5.0, 0.0, 3, -1.0, 1.0, &mut m);
+        assert_eq!(m, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn head_infer_is_pool_and_chunk_invariant() {
+        for head in [Head::Dueling, c51_head()] {
+            let arch = micro(head);
+            let theta = init_params(&arch, 9);
+            let mut rng = Rng::new(31);
+            let batch = 7;
+            let states: Vec<u8> =
+                (0..batch * arch.frame_elems()).map(|_| rng.below(256) as u8).collect();
+            let serial = infer_head(&arch, &theta, &states, batch).unwrap();
+            for mode in [KernelMode::Deterministic, KernelMode::Fast] {
+                let base = infer_pooled_head(&arch, &theta, &states, batch, &ComputePool::new(1), mode)
+                    .unwrap();
+                for threads in [2usize, 3, 4] {
+                    let pool = ComputePool::new(threads);
+                    let q = infer_pooled_head(&arch, &theta, &states, batch, &pool, mode).unwrap();
+                    assert_eq!(
+                        base.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        q.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{head:?} {mode:?} threads {threads}"
+                    );
+                }
+                if mode == KernelMode::Deterministic {
+                    assert_eq!(
+                        serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        base.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{head:?} pooled-vs-serial"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn head_infer_matches_golden_reference() {
+        for head in [Head::Dueling, c51_head()] {
+            let arch = micro(head);
+            let theta = init_params(&arch, 13);
+            let mut rng = Rng::new(37);
+            let batch = 5;
+            let states: Vec<u8> =
+                (0..batch * arch.frame_elems()).map(|_| rng.below(256) as u8).collect();
+            let ours = infer_head(&arch, &theta, &states, batch).unwrap();
+            let golden = golden::reference_infer_head(&arch, &theta, &states, batch).unwrap();
+            assert_eq!(
+                ours.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                golden.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{head:?}"
+            );
+        }
+    }
+
+    fn fd_check(head: Head, double: bool, seed: u64, probe: &[usize]) {
+        let arch = micro(head);
+        let mut rng = Rng::new(seed);
+        let theta = init_params(&arch, seed.wrapping_add(1));
+        let target = init_params(&arch, seed.wrapping_add(2));
+        let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
+        let pool = ComputePool::new(1);
+        let (grad, loss, td) = td_grads_head(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+            None, double, &pool, KernelMode::Deterministic,
+        )
+        .unwrap();
+        assert_eq!(td.len(), actions.len());
+        // Loss agrees with the independent golden implementation.
+        let ref_loss = golden::reference_loss_head(
+            &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, double,
+        )
+        .unwrap();
+        assert!(
+            (loss - ref_loss).abs() < 1e-6,
+            "{head:?} double={double}: loss {loss} vs golden {ref_loss}"
+        );
+
+        let eps = 1e-3f32;
+        for &i in probe {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let lp = golden::reference_loss_head(
+                &arch, &tp, &target, &states, &actions, &rewards, &next, &dones, 0.9, double,
+            )
+            .unwrap();
+            tp[i] = theta[i] - eps;
+            let lm = golden::reference_loss_head(
+                &arch, &tp, &target, &states, &actions, &rewards, &next, &dones, 0.9, double,
+            )
+            .unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[i]).abs() < 2e-3,
+                "{head:?} double={double} param {i}: finite-diff {fd} vs analytic {}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn dueling_gradients_match_finite_differences() {
+        let arch = micro(Head::Dueling);
+        let n = arch.param_count();
+        // Probe conv w/b, both streams' hidden layers, and both out layers.
+        fd_check(Head::Dueling, false, 51, &[0, 30, 64, 65, 70, 140, 210, n - 28, n - 5, n - 1]);
+        fd_check(Head::Dueling, true, 52, &[1, 66, 139, 211, n - 27, n - 2]);
+    }
+
+    #[test]
+    fn c51_gradients_match_finite_differences() {
+        let arch = micro(c51_head());
+        let n = arch.param_count();
+        fd_check(c51_head(), false, 53, &[0, 30, 64, 65, 70, 130, n - 136, n - 16, n - 1]);
+        fd_check(c51_head(), true, 54, &[1, 66, 131, n - 100, n - 2]);
+    }
+
+    #[test]
+    fn head_gradients_are_bit_identical_across_pool_widths() {
+        for head in [Head::Dueling, c51_head()] {
+            let arch = micro(head);
+            let mut rng = Rng::new(61);
+            let theta = init_params(&arch, 62);
+            let target = init_params(&arch, 63);
+            let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
+            let weights: Vec<f32> = (0..actions.len()).map(|i| 0.5 + 0.25 * i as f32).collect();
+            let boots: Vec<f32> = (0..actions.len()).map(|i| 0.9f32.powi(1 + (i % 3) as i32)).collect();
+            for mode in [KernelMode::Deterministic, KernelMode::Fast] {
+                let baseline = td_grads_head(
+                    &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9,
+                    Some(&weights), Some(&boots), true, &ComputePool::new(1), mode,
+                )
+                .unwrap();
+                for threads in [2usize, 3, 4] {
+                    let pool = ComputePool::new(threads);
+                    let got = td_grads_head(
+                        &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9,
+                        Some(&weights), Some(&boots), true, &pool, mode,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        baseline.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        got.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{head:?} {mode:?} threads {threads}: grads diverged"
+                    );
+                    assert_eq!(baseline.1.to_bits(), got.1.to_bits());
+                    assert_eq!(
+                        baseline.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        got.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unit_weights_and_scalar_gammas_are_degenerate() {
+        // weights = 1 and boot_gammas = γ multiply/substitute identically,
+        // so the extended call must be bitwise equal to the basic one.
+        for head in [Head::Dueling, c51_head()] {
+            let arch = micro(head);
+            let mut rng = Rng::new(71);
+            let theta = init_params(&arch, 72);
+            let target = init_params(&arch, 73);
+            let (states, actions, rewards, next, dones) = micro_batch(&arch, &mut rng);
+            let ones = vec![1.0f32; actions.len()];
+            let gammas = vec![0.9f32; actions.len()];
+            let pool = ComputePool::new(2);
+            let base = td_grads_head(
+                &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9, None,
+                None, false, &pool, KernelMode::Deterministic,
+            )
+            .unwrap();
+            let ext = td_grads_head(
+                &arch, &theta, &target, &states, &actions, &rewards, &next, &dones, 0.9,
+                Some(&ones), Some(&gammas), false, &pool, KernelMode::Deterministic,
+            )
+            .unwrap();
+            assert_eq!(
+                base.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ext.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{head:?}"
+            );
+            assert_eq!(base.1.to_bits(), ext.1.to_bits());
+        }
+    }
+}

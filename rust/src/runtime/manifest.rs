@@ -16,6 +16,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::engine::Head;
 use crate::util::json::Json;
 
 /// Element type of one executable input (mirrors the numpy dtype strings).
@@ -85,11 +86,22 @@ pub struct NetSpec {
     pub init_params_file: PathBuf,
     pub param_spec: Vec<ParamTensor>,
     pub entries: BTreeMap<String, Entry>,
+    /// Q-head variant this spec's parameter layout was built for. Artifact
+    /// manifests always describe `dqn`; head variants are derived views
+    /// ([`Manifest::config_with_head`]).
+    pub head: Head,
 }
 
 impl NetSpec {
     pub fn frame_elems(&self) -> usize {
         self.frame.iter().product()
+    }
+
+    /// Head-qualified network identity used for engine keys and checkpoint
+    /// snapshots: the bare config name for `dqn` (byte-identical to the
+    /// pre-head convention), `name+head` otherwise.
+    pub fn runtime_name(&self) -> String {
+        self.head.qualify(&self.name)
     }
 
     /// Infer batch sizes available in the artifacts, ascending.
@@ -216,6 +228,7 @@ impl Manifest {
                         .map(|(n, s)| ParamTensor { name: n, shape: s })
                         .collect(),
                     entries,
+                    head: Head::Dqn,
                 },
             );
         }
@@ -262,6 +275,49 @@ impl Manifest {
             anyhow!("no config {name:?} in manifest; available: {:?}",
                     self.configs.keys().collect::<Vec<_>>())
         })
+    }
+
+    /// A head-adjusted view of config `name`. `dqn` is the stored spec
+    /// verbatim (identical struct, identical code path downstream). Other
+    /// heads change the dense tail and therefore the flat parameter count:
+    /// the derived spec rewrites `param_count`, `param_spec`, and every
+    /// parameter-vector entry input to the new length. Only the synthetic
+    /// manifest can do this — AOT artifact directories bake the dqn layout
+    /// into their HLO, so a non-dqn head is refused by name rather than
+    /// silently mis-executed.
+    pub fn config_with_head(&self, name: &str, head: Head) -> Result<NetSpec> {
+        let base = self.config(name)?;
+        if matches!(head, Head::Dqn) {
+            return Ok(base.clone());
+        }
+        if !self.synthetic {
+            bail!(
+                "artifact manifest {} only lowers the dqn head; config {name:?} cannot serve \
+                 head {:?} (use the native engine without an artifact dir)",
+                self.dir.display(),
+                head.tag()
+            );
+        }
+        let mut arch = crate::runtime::native::NetArch::from_spec(base)?;
+        arch.head = head;
+        let tensors = arch.param_spec();
+        let p: usize = tensors.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let base_p = base.param_count;
+        let mut spec = base.clone();
+        spec.head = head;
+        spec.param_count = p;
+        spec.param_spec = tensors
+            .into_iter()
+            .map(|(n, s)| ParamTensor { name: n, shape: s })
+            .collect();
+        for entry in spec.entries.values_mut() {
+            for sig in entry.inputs.iter_mut() {
+                if sig.dtype == Dtype::F32 && sig.shape == [base_p] {
+                    sig.shape = vec![p];
+                }
+            }
+        }
+        Ok(spec)
     }
 
     /// Read the deterministic init-parameter blob for a config.
@@ -329,6 +385,7 @@ fn parse_netspec(dir: &Path, name: &str, c: &Json) -> Result<NetSpec> {
         init_params_file: PathBuf::from(init),
         param_spec: param_tensors,
         entries,
+        head: Head::Dqn,
     })
 }
 
@@ -430,6 +487,44 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), b"{ not json").unwrap();
         assert!(Manifest::load_or_builtin(&dir).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_with_head_rewrites_param_layout() {
+        let m = Manifest::builtin();
+        let base = m.config("tiny").unwrap().clone();
+        // dqn view is the stored spec verbatim.
+        let dqn = m.config_with_head("tiny", Head::Dqn).unwrap();
+        assert_eq!(dqn.param_count, base.param_count);
+        assert_eq!(dqn.runtime_name(), "tiny");
+
+        let duel = m.config_with_head("tiny", Head::Dueling).unwrap();
+        assert_eq!(duel.runtime_name(), "tiny+dueling");
+        assert_ne!(duel.param_count, base.param_count);
+        let total: usize =
+            duel.param_spec.iter().map(|t| t.shape.iter().product::<usize>()).sum();
+        assert_eq!(total, duel.param_count);
+        // Every parameter-vector input follows the new length; frames don't.
+        let train = duel.entry("train_b32").unwrap();
+        for sig in &train.inputs[..4] {
+            assert_eq!(sig.shape, vec![duel.param_count]);
+        }
+        assert_eq!(train.inputs[4].shape, vec![32, 84, 84, 4]);
+        // Head-adjusted init params synthesize at the new length.
+        let init = m.init_params(&duel).unwrap();
+        assert_eq!(init.len(), duel.param_count);
+
+        let c51 = m
+            .config_with_head("tiny", Head::C51 { atoms: 51, v_min: -10.0, v_max: 10.0 })
+            .unwrap();
+        assert_eq!(c51.runtime_name(), "tiny+c51[51,-10,10]");
+        let total: usize = c51.param_spec.iter().map(|t| t.shape.iter().product::<usize>()).sum();
+        assert_eq!(total, c51.param_count);
+
+        // Artifact (non-synthetic) manifests refuse head variants by name.
+        let real = Manifest::from_json(Path::new("/a"), &sample_json()).unwrap();
+        let err = real.config_with_head("tiny", Head::Dueling).unwrap_err().to_string();
+        assert!(err.contains("dueling"), "{err}");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 pub mod device;
 pub mod engine;
 pub mod golden;
+pub mod heads;
 pub mod kernels;
 pub mod manifest;
 pub mod native;
@@ -26,7 +27,7 @@ pub mod tensor;
 pub mod xla_engine;
 
 pub use device::{BusSnapshot, BusStats, Device};
-pub use engine::{EntryKind, ExecutionEngine};
+pub use engine::{EntryField, EntryOp, EntrySchema, ExecutionEngine, Head};
 pub use kernels::KernelMode;
 pub use manifest::{Dtype, Entry, InputSig, Manifest, NetSpec};
 pub use native::{NativeEngine, NetArch};

@@ -61,7 +61,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::metrics::{TrainPhase, TrainTimers};
 use crate::util::rng::Rng;
 
-use super::engine::{EntryKind, ExecutionEngine};
+use super::engine::{EntryOp, EntrySchema, ExecutionEngine, Head};
+use super::heads;
 use super::kernels::{
     axpy4, conv2d_forward_mode, conv2d_input_grad_mode, conv2d_weight_grad_chunk_mode,
     matmul_a_bt_mode, matmul_acc_mode, KernelMode, FAST_LANES, FAST_RANK,
@@ -82,14 +83,16 @@ pub struct ConvSpec {
     pub stride: usize,
 }
 
-/// Architecture of one Q-network variant (matches `model.NetConfig`).
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// Architecture of one Q-network variant (matches `model.NetConfig`, plus
+/// the head variant selecting the dense tail; rust/DESIGN.md §16).
+#[derive(Clone, Debug, PartialEq)]
 pub struct NetArch {
     pub name: String,
     pub frame: [usize; 3], // (H, W, stacked channels)
     pub convs: Vec<ConvSpec>,
     pub hidden: Vec<usize>,
     pub actions: usize,
+    pub head: Head,
 }
 
 impl NetArch {
@@ -114,12 +117,22 @@ impl NetArch {
             "tiny" => (vec![ConvSpec { filters: 4, kernel: 8, stride: 8 }], vec![64]),
             other => bail!("native engine knows no architecture named {other:?}"),
         };
-        Ok(NetArch { name: name.to_string(), frame: [84, 84, 4], convs, hidden, actions })
+        Ok(NetArch {
+            name: name.to_string(),
+            frame: [84, 84, 4],
+            convs,
+            hidden,
+            actions,
+            head: Head::Dqn,
+        })
     }
 
-    /// Resolve and cross-check the architecture for a manifest config.
+    /// Resolve and cross-check the architecture for a manifest config
+    /// (including its head — head variants change the dense tail and the
+    /// flat parameter count, so the cross-check runs head-aware).
     pub fn from_spec(spec: &NetSpec) -> Result<NetArch> {
-        let arch = Self::by_name(&spec.name, spec.actions)?;
+        let mut arch = Self::by_name(&spec.name, spec.actions)?;
+        arch.head = spec.head;
         if arch.frame != spec.frame {
             bail!(
                 "config {:?}: manifest frame {:?} != architecture frame {:?}",
@@ -148,8 +161,16 @@ impl NetArch {
             .collect()
     }
 
-    /// Ordered (name, shape) list defining the flat parameter layout
-    /// (identical to `model.param_spec`).
+    /// Flattened conv-trunk output dimension (input to the dense tail).
+    pub(crate) fn trunk_dim(&self) -> usize {
+        let c_out = self.convs.last().map(|c| c.filters).unwrap_or(self.frame[2]);
+        let (h, w) = self.conv_out_hw().last().copied().unwrap_or((self.frame[0], self.frame[1]));
+        h * w * c_out
+    }
+
+    /// Ordered (name, shape) list defining the flat parameter layout. The
+    /// `dqn` arm is identical to `model.param_spec`; head variants append
+    /// their own dense tails after the shared conv trunk (DESIGN.md §16).
     pub fn param_spec(&self) -> Vec<(String, Vec<usize>)> {
         let mut spec = Vec::new();
         let mut c_in = self.frame[2];
@@ -158,15 +179,42 @@ impl NetArch {
             spec.push((format!("conv{i}_b"), vec![conv.filters]));
             c_in = conv.filters;
         }
-        let (h, w) = self.conv_out_hw().last().copied().unwrap_or((self.frame[0], self.frame[1]));
-        let mut dim = h * w * c_in;
-        for (i, &width) in self.hidden.iter().enumerate() {
-            spec.push((format!("fc{i}_w"), vec![dim, width]));
-            spec.push((format!("fc{i}_b"), vec![width]));
-            dim = width;
+        let mut dim = self.trunk_dim();
+        match self.head {
+            Head::Dqn => {
+                for (i, &width) in self.hidden.iter().enumerate() {
+                    spec.push((format!("fc{i}_w"), vec![dim, width]));
+                    spec.push((format!("fc{i}_b"), vec![width]));
+                    dim = width;
+                }
+                spec.push(("out_w".to_string(), vec![dim, self.actions]));
+                spec.push(("out_b".to_string(), vec![self.actions]));
+            }
+            Head::Dueling => {
+                // Two parallel streams off the trunk, same widths as the
+                // dqn hidden stack, interleaved val/adv per layer.
+                for (i, &width) in self.hidden.iter().enumerate() {
+                    spec.push((format!("val{i}_w"), vec![dim, width]));
+                    spec.push((format!("val{i}_b"), vec![width]));
+                    spec.push((format!("adv{i}_w"), vec![dim, width]));
+                    spec.push((format!("adv{i}_b"), vec![width]));
+                    dim = width;
+                }
+                spec.push(("val_out_w".to_string(), vec![dim, 1]));
+                spec.push(("val_out_b".to_string(), vec![1]));
+                spec.push(("adv_out_w".to_string(), vec![dim, self.actions]));
+                spec.push(("adv_out_b".to_string(), vec![self.actions]));
+            }
+            Head::C51 { atoms, .. } => {
+                for (i, &width) in self.hidden.iter().enumerate() {
+                    spec.push((format!("fc{i}_w"), vec![dim, width]));
+                    spec.push((format!("fc{i}_b"), vec![width]));
+                    dim = width;
+                }
+                spec.push(("out_w".to_string(), vec![dim, self.actions * atoms]));
+                spec.push(("out_b".to_string(), vec![self.actions * atoms]));
+            }
         }
-        spec.push(("out_w".to_string(), vec![dim, self.actions]));
-        spec.push(("out_b".to_string(), vec![self.actions]));
         spec
     }
 
@@ -650,7 +698,7 @@ fn shard_phase_a(
 /// `drows` are per-sample activation/delta rows **in global sample order**
 /// (gathered across shard slots by the caller, so the [`FAST_RANK`]-wide
 /// grouping never depends on where shard boundaries fall).
-fn fast_weight_chunk(
+pub(crate) fn fast_weight_chunk(
     chunk: &mut [f32],
     width: usize,
     k_lo: usize,
@@ -1185,7 +1233,7 @@ fn rmsprop_pooled(
 
 struct LoadedEntry {
     arch: Arc<NetArch>,
-    kind: EntryKind,
+    schema: EntrySchema,
     gamma: f32,
 }
 
@@ -1243,11 +1291,14 @@ impl NativeEngine {
     }
 
     fn arch_for(&mut self, spec: &NetSpec) -> Result<Arc<NetArch>> {
-        if let Some(a) = self.archs.get(&spec.name) {
+        // Keyed by the head-qualified runtime name: two heads of the same
+        // base config are distinct architectures and must not collide.
+        let key = spec.runtime_name();
+        if let Some(a) = self.archs.get(&key) {
             return Ok(a.clone());
         }
         let arch = Arc::new(NetArch::from_spec(spec)?);
-        self.archs.insert(spec.name.clone(), arch.clone());
+        self.archs.insert(key, arch.clone());
         Ok(arch)
     }
 }
@@ -1261,11 +1312,11 @@ impl ExecutionEngine for NativeEngine {
         if self.entries.contains_key(key) {
             return Ok(());
         }
-        let kind = EntryKind::parse(entry_name)?;
+        let schema = EntrySchema::derive(spec, entry_name)?;
         let arch = self.arch_for(spec)?;
         self.entries.insert(
             key.to_string(),
-            LoadedEntry { arch, kind, gamma: spec.gamma as f32 },
+            LoadedEntry { arch, schema, gamma: spec.gamma as f32 },
         );
         Ok(())
     }
@@ -1280,23 +1331,22 @@ impl ExecutionEngine for NativeEngine {
             .get(key)
             .ok_or_else(|| anyhow!("entry {key:?} not loaded"))?;
         let arch = &entry.arch;
-        match entry.kind {
-            EntryKind::Infer { batch } => {
-                if args.len() != 2 {
-                    bail!("infer {key:?}: expected 2 inputs, got {}", args.len());
-                }
+        // Every transaction is validated against the entry's named schema
+        // before any math runs: a bad call is refused by entry and field
+        // name, identically across engines.
+        entry.schema.validate_args(args)?;
+        let batch = entry.schema.batch;
+        match entry.schema.op {
+            EntryOp::Infer => {
                 let params = args[0].as_f32("infer params")?;
                 let states = args[1].as_u8("infer states")?;
-                let q = infer_pooled(arch, params, states, batch, &self.pool, self.mode)?;
+                let q = match arch.head {
+                    Head::Dqn => infer_pooled(arch, params, states, batch, &self.pool, self.mode)?,
+                    _ => heads::infer_pooled_head(arch, params, states, batch, &self.pool, self.mode)?,
+                };
                 Ok(vec![HostTensor::f32(q, vec![batch, arch.actions])])
             }
-            EntryKind::Train { batch, double } => {
-                // 10 inputs = the historical ABI; 12 appends the extended
-                // per-sample arrays (IS weights, bootstrap discounts) used
-                // by the prioritized / n-step replay strategies.
-                if args.len() != 10 && args.len() != 12 {
-                    bail!("train {key:?}: expected 10 or 12 inputs, got {}", args.len());
-                }
+            EntryOp::Train { double } => {
                 let theta = args[0].as_f32("train theta")?;
                 let target = args[1].as_f32("train target")?;
                 let g = args[2].as_f32("train g")?;
@@ -1321,11 +1371,17 @@ impl ExecutionEngine for NativeEngine {
                 if lr.len() != 1 {
                     bail!("train {key:?}: lr must be a scalar");
                 }
-                let (grad, loss, td) = td_grads_opts(
-                    arch, theta, target, states, actions, rewards, next_states, dones,
-                    entry.gamma, weights, boot_gammas, double, &self.pool, self.mode,
-                    &mut self.scratch,
-                )?;
+                let (grad, loss, td) = match arch.head {
+                    Head::Dqn => td_grads_opts(
+                        arch, theta, target, states, actions, rewards, next_states, dones,
+                        entry.gamma, weights, boot_gammas, double, &self.pool, self.mode,
+                        &mut self.scratch,
+                    )?,
+                    _ => heads::td_grads_head(
+                        arch, theta, target, states, actions, rewards, next_states, dones,
+                        entry.gamma, weights, boot_gammas, double, &self.pool, self.mode,
+                    )?,
+                };
                 let mut theta2 = theta.to_vec();
                 let mut g2 = g.to_vec();
                 let mut s2 = s.to_vec();
@@ -1377,6 +1433,7 @@ mod tests {
             convs: vec![ConvSpec { filters: 2, kernel: 4, stride: 4 }],
             hidden: vec![8],
             actions: 3,
+            head: Head::Dqn,
         }
     }
 

@@ -20,7 +20,8 @@ use std::sync::{Arc, Mutex, RwLock};
 use anyhow::{anyhow, bail, Result};
 
 use super::device::Device;
-use super::manifest::{Dtype, Manifest, NetSpec};
+use super::engine::{EntrySchema, Head};
+use super::manifest::{Manifest, NetSpec};
 use super::tensor::TensorView;
 
 struct TrainState {
@@ -84,10 +85,8 @@ pub struct QNet {
 }
 
 impl QNet {
-    /// Load a network config from the manifest: registers every infer entry
-    /// plus the chosen train entry with the device's engine, and initializes
-    /// parameters from the manifest's deterministic blob (or the in-process
-    /// equivalent when no artifacts exist).
+    /// Load a network config from the manifest with the default dqn head
+    /// (see [`QNet::load_with_head`]).
     pub fn load(
         device: Arc<Device>,
         manifest: &Manifest,
@@ -95,35 +94,50 @@ impl QNet {
         double: bool,
         train_batch: usize,
     ) -> Result<QNet> {
-        let spec = manifest.config(config)?.clone();
+        Self::load_with_head(device, manifest, config, double, train_batch, Head::Dqn)
+    }
+
+    /// Load a network config from the manifest under a head variant:
+    /// registers every infer entry plus the chosen train entry with the
+    /// device's engine, and initializes parameters from the manifest's
+    /// deterministic blob (or the in-process equivalent when no artifacts
+    /// exist). All engine keys and checkpoint identity use the
+    /// head-qualified [`NetSpec::runtime_name`], so two heads over the same
+    /// base config never alias.
+    pub fn load_with_head(
+        device: Arc<Device>,
+        manifest: &Manifest,
+        config: &str,
+        double: bool,
+        train_batch: usize,
+        head: Head,
+    ) -> Result<QNet> {
+        let spec = manifest.config_with_head(config, head)?;
         let train_key = if double {
             format!("train_double_b{train_batch}")
         } else {
             format!("train_b{train_batch}")
         };
 
-        // Validate ABI shapes before loading anything.
-        let train_entry = spec.entry(&train_key)?;
-        if train_entry.inputs.len() != 10 {
-            bail!("train entry {train_key} must have 10 inputs (see manifest train_abi)");
-        }
-        for idx in 0..4 {
-            if train_entry.inputs[idx].shape != [spec.param_count]
-                || train_entry.inputs[idx].dtype != Dtype::F32
-            {
-                bail!("train entry input {idx} must be f32[{}]", spec.param_count);
-            }
-        }
-
+        // Validate the ABI before loading anything: every entry this QNet
+        // will drive must exist in the manifest and agree field-for-field
+        // with the named schema the engines enforce (rust/DESIGN.md §16).
         let infer_batches = spec.infer_batches();
         if infer_batches.is_empty() {
             bail!("config {config:?} has no infer entries");
         }
         for &b in &infer_batches {
             let key = format!("infer_b{b}");
-            device.load_entry(&qkey(&spec.name, &key), &spec, &key)?;
+            EntrySchema::derive(&spec, &key)?.validate_manifest_entry(spec.entry(&key)?)?;
         }
-        device.load_entry(&qkey(&spec.name, &train_key), &spec, &train_key)?;
+        EntrySchema::derive(&spec, &train_key)?.validate_manifest_entry(spec.entry(&train_key)?)?;
+
+        let rt = spec.runtime_name();
+        for &b in &infer_batches {
+            let key = format!("infer_b{b}");
+            device.load_entry(&qkey(&rt, &key), &spec, &key)?;
+        }
+        device.load_entry(&qkey(&rt, &train_key), &spec, &train_key)?;
 
         let theta = manifest.init_params(&spec)?;
         let p = spec.param_count;
@@ -168,13 +182,49 @@ impl QNet {
     ///
     /// If `n` matches no loaded batch size exactly, the input is zero-padded
     /// up to the next one and the padding rows are dropped from the output.
-    /// Returns a row-major `[n, actions]` vector.
+    /// If `n` exceeds the largest loaded entry, the request is chunked at
+    /// that size across several engine transactions — all under ONE
+    /// parameter snapshot taken up front, so concurrent training never
+    /// splits a request across weight versions, and the concatenated rows
+    /// are bitwise identical to any other chunking of the same states (the
+    /// forward pass is per-sample). Returns a row-major `[n, actions]`
+    /// vector.
     pub fn infer(&self, policy: Policy, states: &[u8], n: usize) -> Result<Vec<f32>> {
-        let [h, w, c] = self.spec.frame;
-        let frame = h * w * c;
+        let frame = self.spec.frame.iter().product::<usize>();
         if states.len() != n * frame {
             bail!("infer: got {} bytes for {} states of {} bytes", states.len(), n, frame);
         }
+        let params: Arc<Vec<f32>> = match policy {
+            // Snapshot the Arc so the read lock is not held during the
+            // device call — samplers never block the trainer here, and
+            // the parameter buffer itself is never copied.
+            Policy::ThetaMinus => self.theta_minus.read().unwrap().clone(),
+            // Standard DQN path: clone theta out of the train lock so
+            // training and sampling contend only briefly.
+            Policy::Theta => {
+                let st = self.train.lock().unwrap();
+                Arc::new(st.theta.clone())
+            }
+        };
+        let largest = *self.infer_batches.iter().max().expect("load() requires infer entries");
+        if n <= largest {
+            return self.infer_rows(&params, states, n);
+        }
+        let mut q = Vec::with_capacity(n * self.spec.actions);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + largest).min(n);
+            q.extend(self.infer_rows(&params, &states[lo * frame..hi * frame], hi - lo)?);
+            lo = hi;
+        }
+        Ok(q)
+    }
+
+    /// One engine transaction scoring `n <= largest_batch` rows under the
+    /// given parameter snapshot (padding to the next loaded entry).
+    fn infer_rows(&self, params: &[f32], states: &[u8], n: usize) -> Result<Vec<f32>> {
+        let [h, w, c] = self.spec.frame;
+        let frame = h * w * c;
         let batch = self.infer_batch_for(n)?;
         let mut padded;
         let data: &[u8] = if batch == n {
@@ -185,32 +235,11 @@ impl QNet {
             &padded
         };
         let shape = [batch, h, w, c];
-        let key = qkey(&self.spec.name, &format!("infer_b{batch}"));
-
-        let outputs = match policy {
-            Policy::ThetaMinus => {
-                // Snapshot the Arc so the read lock is not held during the
-                // device call — samplers never block the trainer here, and
-                // the parameter buffer itself is never copied.
-                let snap = self.theta_minus.read().unwrap().clone();
-                self.device.execute(
-                    &key,
-                    &[TensorView::f32(&snap, &[self.spec.param_count]), TensorView::u8(data, &shape)],
-                )?
-            }
-            Policy::Theta => {
-                // Standard DQN path: clone theta out of the train lock so
-                // training and sampling contend only briefly.
-                let theta = {
-                    let st = self.train.lock().unwrap();
-                    st.theta.clone()
-                };
-                self.device.execute(
-                    &key,
-                    &[TensorView::f32(&theta, &[self.spec.param_count]), TensorView::u8(data, &shape)],
-                )?
-            }
-        };
+        let key = qkey(&self.spec.runtime_name(), &format!("infer_b{batch}"));
+        let outputs = self.device.execute(
+            &key,
+            &[TensorView::f32(params, &[self.spec.param_count]), TensorView::u8(data, &shape)],
+        )?;
         let mut q = outputs
             .into_iter()
             .next()
@@ -249,7 +278,7 @@ impl QNet {
         let states_shape = [b, h, w, c];
         let lr_buf = [lr];
         let tm = self.theta_minus.read().unwrap().clone();
-        let key = qkey(&self.spec.name, &self.train_key);
+        let key = qkey(&self.spec.runtime_name(), &self.train_key);
 
         let mut st = self.train.lock().unwrap();
         let mut args = vec![
@@ -393,7 +422,10 @@ impl crate::ckpt::Snapshot for QNetSnapshot<'_> {
 
     fn save(&self, w: &mut crate::ckpt::ByteWriter) {
         let q = self.0;
-        w.put_str(&q.spec.name);
+        // The head-qualified name (e.g. "tiny+dueling"): a dqn checkpoint
+        // stays byte-identical to the pre-head format, while head variants
+        // are refused by name everywhere a checkpoint is offered.
+        w.put_str(&q.spec.runtime_name());
         w.put_usize(q.spec.param_count);
         w.put_bool(q.train_key.contains("double"));
         let st = q.train.lock().unwrap();
@@ -409,8 +441,9 @@ impl crate::ckpt::Snapshot for QNetSnapshot<'_> {
     fn load(&mut self, r: &mut crate::ckpt::ByteReader<'_>) -> Result<()> {
         let q = self.0;
         let name = r.str()?;
-        if name != q.spec.name {
-            bail!("checkpoint network is {name:?}, this run uses {:?}", q.spec.name);
+        let want = q.spec.runtime_name();
+        if name != want {
+            bail!("checkpoint network is {name:?} (config+head), this run uses {want:?}");
         }
         let p = r.usize()?;
         if p != q.spec.param_count {
@@ -497,5 +530,30 @@ mod tests {
         let got: Vec<u32> = t.theta.iter().map(|v| v.to_bits()).collect();
         assert_eq!(got, want);
         assert!(r.finish().is_err(), "snapshot suffix should remain unread");
+    }
+
+    #[test]
+    fn oversize_infer_chunks_bitwise_identically() {
+        let device = Arc::new(Device::cpu().unwrap());
+        let manifest = Manifest::load_or_builtin(&default_artifact_dir()).unwrap();
+        let qnet = QNet::load(device, &manifest, "tiny", false, 32).unwrap();
+        let frame: usize = qnet.spec().frame.iter().product();
+        let largest = *qnet.spec().infer_batches().iter().max().unwrap();
+        let n = largest + 4; // spans two engine transactions
+        let states: Vec<u8> = (0..n * frame).map(|i| (i * 31 % 251) as u8).collect();
+
+        let big = qnet.infer(Policy::ThetaMinus, &states, n).unwrap();
+        assert_eq!(big.len(), n * qnet.spec().actions);
+        // Every row must be bitwise identical to scoring that state alone —
+        // chunk boundaries (row `largest`) included.
+        let a = qnet.spec().actions;
+        for r in [0usize, 1, largest - 1, largest, n - 1] {
+            let one = qnet.infer(Policy::ThetaMinus, &states[r * frame..(r + 1) * frame], 1).unwrap();
+            assert_eq!(
+                big[r * a..(r + 1) * a].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                one.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "row {r} diverged from single-sample infer"
+            );
+        }
     }
 }

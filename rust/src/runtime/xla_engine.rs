@@ -22,13 +22,17 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::engine::ExecutionEngine;
+use super::engine::{EntrySchema, ExecutionEngine, Head};
 use super::manifest::NetSpec;
 use super::tensor::{DataView, HostTensor, TensorView};
 
 pub struct XlaEngine {
     client: xla::PjRtClient,
     executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Named ABI schema per loaded entry — validated on every execute so
+    /// mis-shaped calls are refused by entry and field name instead of
+    /// surfacing as PJRT shape errors (rust/DESIGN.md §16).
+    schemas: BTreeMap<String, EntrySchema>,
     platform: String,
 }
 
@@ -38,7 +42,7 @@ impl XlaEngine {
     pub fn new() -> Result<XlaEngine> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
         let platform = client.platform_name();
-        Ok(XlaEngine { client, executables: BTreeMap::new(), platform })
+        Ok(XlaEngine { client, executables: BTreeMap::new(), schemas: BTreeMap::new(), platform })
     }
 
     fn to_literal(view: &TensorView<'_>) -> Result<xla::Literal> {
@@ -74,6 +78,16 @@ impl ExecutionEngine for XlaEngine {
         if self.executables.contains_key(key) {
             return Ok(());
         }
+        // The AOT artifacts lower only the dqn dense tail; refuse head
+        // variants up front rather than executing the wrong graph.
+        if !matches!(spec.head, Head::Dqn) {
+            bail!(
+                "XLA engine artifacts implement only the dqn head; entry {entry_name:?} of \
+                 {:?} requires the native engine",
+                spec.runtime_name()
+            );
+        }
+        let schema = EntrySchema::derive(spec, entry_name)?;
         let path = &spec.entry(entry_name)?.file;
         let path_str = path
             .to_str()
@@ -87,6 +101,7 @@ impl ExecutionEngine for XlaEngine {
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
         self.executables.insert(key.to_string(), exe);
+        self.schemas.insert(key.to_string(), schema);
         Ok(())
     }
 
@@ -99,6 +114,9 @@ impl ExecutionEngine for XlaEngine {
             .executables
             .get(key)
             .ok_or_else(|| anyhow!("executable {key:?} not loaded"))?;
+        if let Some(schema) = self.schemas.get(key) {
+            schema.validate_args(args)?;
+        }
         // Upload inputs as Rust-owned device buffers and use `execute_b`.
         // NOTE: the crate's `execute(&[Literal])` path leaks every input
         // device buffer (its C++ shim `release()`s the uploads and never

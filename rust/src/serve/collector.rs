@@ -177,16 +177,15 @@ fn worker_loop(inner: &Inner) {
     loop {
         let mut q = inner.queue.lock().unwrap();
         // Sleep until work arrives. Stop only returns once the queue is
-        // empty: in-flight requests always complete.
+        // empty: in-flight requests always complete. The idle wait is
+        // untimed — `submit` and `stop` both notify the condvar, so there
+        // is nothing to poll for and shutdown latency is one wakeup, not a
+        // timeout tick.
         while q.is_empty() {
             if inner.stop.load(Ordering::SeqCst) {
                 return;
             }
-            let (guard, _) = inner
-                .cv
-                .wait_timeout(q, Duration::from_millis(50))
-                .unwrap();
-            q = guard;
+            q = inner.cv.wait(q).unwrap();
         }
 
         // Batch window: wait for co-riders until the first request's flush

@@ -38,7 +38,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::net::{Conn, Endpoint, Listener, Msg, ServeStats};
-use crate::runtime::{Device, Manifest, QNet, QNetTheta};
+use crate::runtime::{Device, Head, Manifest, QNet, QNetTheta};
 
 pub use client::{ActReply, ServeClient};
 pub use collector::Collector;
@@ -155,12 +155,16 @@ impl Server {
         let t = QNetTheta::decode(&mut r)
             .with_context(|| format!("reading qnet section of {}", reader.path().display()))?;
 
-        // The checkpoint names its own network config; the daemon needs no
-        // --net flag. Single compute lane: serving is latency-bound, not
+        // The checkpoint names its own network config *and* head (the
+        // `{config}+{head}` tag `QNetSnapshot` writes); the daemon needs no
+        // --net flag and refuses a head it was not built for by name.
+        // Single compute lane: serving is latency-bound, not
         // minibatch-bound.
         let manifest = Manifest::load_or_builtin(artifact_dir)?;
         let device = Arc::new(Device::cpu()?);
-        let qnet = QNet::load(device, &manifest, &t.name, t.double, 32)
+        let (base, head) = Head::split(&t.name)
+            .with_context(|| format!("parsing checkpoint network name {:?}", t.name))?;
+        let qnet = QNet::load_with_head(device, &manifest, &base, t.double, 32, head)
             .with_context(|| format!("loading network {:?} for serving", t.name))?;
         qnet.set_theta(&t.theta)?;
 

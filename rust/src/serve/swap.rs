@@ -4,8 +4,11 @@
 //! format tag, version, and every section checksum *before* any daemon
 //! state moves, so a torn or corrupt checkpoint surfaces as a named
 //! warning (and a `swap_skips` tick) while the old parameters keep
-//! serving. A failed path is warned about once and then left alone until
-//! a newer checkpoint supersedes it — no log spam at poll frequency.
+//! serving. A failed checkpoint is warned about once and then left alone
+//! — no log spam at poll frequency — but the guard keys on the directory's
+//! *content stamp* (newest mtime + total size), not the path alone, so a
+//! checkpoint repaired in place is re-probed on the next poll even when no
+//! newer step ever lands.
 //!
 //! Swaps only move forward: a checkpoint whose step is <= the loaded step
 //! is stale and ignored.
@@ -14,7 +17,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, SystemTime};
 
 use anyhow::{bail, Result};
 
@@ -32,7 +35,7 @@ pub(crate) fn spawn_watcher(
     std::thread::Builder::new()
         .name("serve-swap".into())
         .spawn(move || {
-            let mut failed: Option<PathBuf> = None;
+            let mut failed: Option<FailedProbe> = None;
             while !stop.is_set() {
                 poll_once(&shared, &dir, &mut failed);
                 // Sleep in slices so stop stays responsive under long
@@ -48,7 +51,36 @@ pub(crate) fn spawn_watcher(
         .expect("spawn serve-swap thread")
 }
 
-fn poll_once(shared: &ServeShared, dir: &Path, failed: &mut Option<PathBuf>) {
+/// Warn-once record for a checkpoint that failed to verify. The stamp is
+/// the directory's content fingerprint at probe time; a later poll with a
+/// different stamp means the files changed underneath the same path
+/// (repair-in-place, finished rewrite), so the checkpoint is probed again.
+struct FailedProbe {
+    path: PathBuf,
+    stamp: Option<(SystemTime, u64)>,
+}
+
+/// Content stamp of a checkpoint directory: (newest mtime, total byte
+/// size) across its immediate entries. Cheap enough for poll frequency,
+/// and any repair — even one that keeps every file the same length —
+/// advances an mtime. `None` (scan race, permission blip) is treated as
+/// "unknown", which never matches and therefore re-probes.
+fn dir_stamp(path: &Path) -> Option<(SystemTime, u64)> {
+    let mut newest = SystemTime::UNIX_EPOCH;
+    let mut total: u64 = 0;
+    for entry in std::fs::read_dir(path).ok()? {
+        let meta = entry.ok()?.metadata().ok()?;
+        if let Ok(m) = meta.modified() {
+            if m > newest {
+                newest = m;
+            }
+        }
+        total = total.wrapping_add(meta.len());
+    }
+    Some((newest, total))
+}
+
+fn poll_once(shared: &ServeShared, dir: &Path, failed: &mut Option<FailedProbe>) {
     let path = match crate::ckpt::latest_checkpoint(dir) {
         Ok(Some(p)) => p,
         Ok(None) => return,
@@ -57,10 +89,20 @@ fn poll_once(shared: &ServeShared, dir: &Path, failed: &mut Option<PathBuf>) {
             return;
         }
     };
-    if failed.as_deref() == Some(path.as_path()) {
-        // Already warned about this exact checkpoint; wait it out.
-        return;
+    if let Some(f) = failed {
+        // Already warned about this checkpoint — but only wait it out
+        // while its bytes are unchanged. A differing (or unknown) stamp
+        // means someone rewrote the files in place; probe again.
+        let unchanged =
+            f.path == path && f.stamp.is_some() && f.stamp == dir_stamp(&path);
+        if unchanged {
+            return;
+        }
     }
+    // Stamp BEFORE probing: a repair racing the probe itself then shows
+    // up as a changed stamp on the next poll instead of being captured
+    // post-write and mistaken for "unchanged".
+    let stamp = dir_stamp(&path);
     match try_swap(shared, &path) {
         Ok(Swapped::Fresh(step)) => {
             *failed = None;
@@ -69,7 +111,7 @@ fn poll_once(shared: &ServeShared, dir: &Path, failed: &mut Option<PathBuf>) {
         Ok(Swapped::Stale) => {}
         Err(e) => {
             shared.swap_skips.fetch_add(1, Ordering::Relaxed);
-            *failed = Some(path.clone());
+            *failed = Some(FailedProbe { path: path.clone(), stamp });
             eprintln!(
                 "serve: skipping checkpoint {} — still serving step {}: {e:#}",
                 path.display(),
@@ -94,18 +136,19 @@ fn try_swap(shared: &ServeShared, path: &Path) -> Result<Swapped> {
     let mut r = reader.read_section("qnet", 1)?;
     let t = QNetTheta::decode(&mut r)?;
     let spec = shared.qnet.spec();
-    if t.name != spec.name {
+    let want = spec.runtime_name();
+    if t.name != want {
         bail!(
-            "checkpoint holds network {:?}, this daemon serves {:?}",
+            "checkpoint holds network {:?} (config+head), this daemon serves {:?}",
             t.name,
-            spec.name
+            want
         );
     }
     if t.param_count != spec.param_count {
         bail!(
             "checkpoint carries {} parameters, network {:?} takes {}",
             t.param_count,
-            spec.name,
+            want,
             spec.param_count
         );
     }

@@ -1,0 +1,197 @@
+//! Engine-ABI conformance suite (rust/DESIGN.md §16).
+//!
+//! The engine boundary is a *named* schema, not a positional tensor list;
+//! this suite pins the contract for every head variant:
+//!
+//! * every head × every builtin entry derives a named schema whose fields
+//!   cross-check the (head-adjusted) manifest declaration;
+//! * mis-shaped, missing, and extra transaction inputs are refused at the
+//!   engine with the entry AND field named — including a parameter vector
+//!   of the *wrong head's* length;
+//! * checkpoint identity is head-qualified (`{config}+{head}`): a
+//!   checkpoint written under one head is refused by name when offered to
+//!   a run using another, in both directions.
+//!
+//! (The serving daemon's head-mismatch refusal rides in `tests/serve.rs`;
+//! the fleet handshake's rides in `coordinator/fleet.rs` unit tests — both
+//! flow through the same head-qualified identity pinned here.)
+
+use std::sync::Arc;
+
+use tempo_dqn::ckpt::{ByteReader, ByteWriter, Snapshot};
+use tempo_dqn::runtime::{
+    Device, EntryOp, EntrySchema, Head, Manifest, QNet, QNetSnapshot, TensorView,
+};
+
+fn heads() -> [Head; 3] {
+    [
+        Head::Dqn,
+        Head::Dueling,
+        Head::C51 { atoms: 51, v_min: -10.0, v_max: 10.0 },
+    ]
+}
+
+#[test]
+fn every_head_derives_named_schemas_for_every_builtin_entry() {
+    let m = Manifest::builtin();
+    for name in ["tiny", "small", "nature"] {
+        let base_p = m.config(name).unwrap().param_count;
+        for head in heads() {
+            let spec = m.config_with_head(name, head).unwrap();
+            assert!(!spec.entries.is_empty());
+            if !matches!(head, Head::Dqn) {
+                assert_ne!(
+                    spec.param_count, base_p,
+                    "{name}/{}: head must change the flat parameter count",
+                    head.tag()
+                );
+            }
+            for (entry_name, entry) in &spec.entries {
+                let schema = EntrySchema::derive(&spec, entry_name)
+                    .unwrap_or_else(|e| panic!("{name}/{entry_name} under {head:?}: {e:#}"));
+                // Load-time half of the ABI: the manifest's declared inputs
+                // match the schema field for field.
+                schema.validate_manifest_entry(entry).unwrap();
+                assert_eq!(schema.head, spec.head);
+                assert_eq!(schema.inputs[0].name, "params");
+                assert_eq!(schema.inputs[0].shape, vec![spec.param_count]);
+                match schema.op {
+                    EntryOp::Infer => {
+                        assert_eq!(schema.inputs.len(), 2);
+                        assert!(schema.optional_inputs.is_empty());
+                        assert_eq!(schema.outputs[0].name, "q");
+                        // Every head — C51 included — emits [B, A] Q-rows.
+                        assert_eq!(schema.outputs[0].shape, vec![schema.batch, spec.actions]);
+                    }
+                    EntryOp::Train { .. } => {
+                        assert_eq!(schema.inputs.len(), 10);
+                        assert_eq!(schema.optional_inputs.len(), 2);
+                        assert_eq!(schema.outputs.len(), 5);
+                        assert_eq!(schema.outputs[3].name, "loss");
+                        assert_eq!(schema.outputs[4].shape, vec![schema.batch]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_refuses_misshaped_transactions_by_entry_and_field_for_every_head() {
+    let m = Manifest::builtin();
+    for head in heads() {
+        let spec = m.config_with_head("tiny", head).unwrap();
+        let device = Device::cpu().unwrap();
+        let key = format!("{}/infer_b2", spec.runtime_name());
+        device.load_entry(&key, &spec, "infer_b2").unwrap();
+        let [h, w, c] = spec.frame;
+        let p = vec![0.0f32; spec.param_count];
+        let st = vec![0u8; 2 * h * w * c];
+
+        // Missing input: refused naming the entry and the absent field.
+        let err = device
+            .execute(&key, &[TensorView::f32(&p, &[spec.param_count])])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("infer_b2") && err.contains("states"), "{head:?}: {err}");
+
+        // A parameter vector of the wrong length — e.g. another head's
+        // layout — is refused by field name, not executed against garbage.
+        let wrong = vec![0.0f32; spec.param_count + 1];
+        let err = device
+            .execute(
+                &key,
+                &[
+                    TensorView::f32(&wrong, &[spec.param_count + 1]),
+                    TensorView::u8(&st, &[2, h, w, c]),
+                ],
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("params") && err.contains("shape"), "{head:?}: {err}");
+
+        // Wrong dtype: states as f32 instead of u8.
+        let stf = vec![0.0f32; 2 * h * w * c];
+        let err = device
+            .execute(
+                &key,
+                &[
+                    TensorView::f32(&p, &[spec.param_count]),
+                    TensorView::f32(&stf, &[2, h, w, c]),
+                ],
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("states") && err.contains("u8"), "{head:?}: {err}");
+
+        // Extra trailing input on an entry with no optional fields.
+        let err = device
+            .execute(
+                &key,
+                &[
+                    TensorView::f32(&p, &[spec.param_count]),
+                    TensorView::u8(&st, &[2, h, w, c]),
+                    TensorView::u8(&st, &[2, h, w, c]),
+                ],
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("infer_b2"), "{head:?}: {err}");
+
+        // The well-formed transaction executes and yields [2, A] Q-rows.
+        let out = device
+            .execute(
+                &key,
+                &[
+                    TensorView::f32(&p, &[spec.param_count]),
+                    TensorView::u8(&st, &[2, h, w, c]),
+                ],
+            )
+            .unwrap();
+        let q = out.into_iter().next().unwrap().into_f32("q").unwrap();
+        assert_eq!(q.len(), 2 * spec.actions, "{head:?}");
+        assert!(q.iter().all(|v| v.is_finite()), "{head:?}");
+    }
+}
+
+#[test]
+fn checkpoints_are_refused_across_heads_by_name() {
+    let m = Manifest::builtin();
+    let all = [
+        Head::Dqn,
+        Head::Dueling,
+        Head::C51 { atoms: 51, v_min: -10.0, v_max: 10.0 },
+        // Different support parameters are a different network identity.
+        Head::C51 { atoms: 21, v_min: -5.0, v_max: 5.0 },
+    ];
+    let nets: Vec<QNet> = all
+        .iter()
+        .map(|&head| {
+            let device = Arc::new(Device::cpu().unwrap());
+            QNet::load_with_head(device, &m, "tiny", false, 32, head).unwrap()
+        })
+        .collect();
+    for (i, from) in nets.iter().enumerate() {
+        let mut w = ByteWriter::new();
+        QNetSnapshot(from).save(&mut w);
+        let bytes = w.into_bytes();
+        for (j, to) in nets.iter().enumerate() {
+            let mut r = ByteReader::new(&bytes);
+            let mut snap = QNetSnapshot(to);
+            if i == j {
+                snap.load(&mut r).unwrap_or_else(|e| {
+                    panic!("{}: same-head restore must succeed: {e:#}", all[i].tag())
+                });
+            } else {
+                let err = snap.load(&mut r).unwrap_err().to_string();
+                let (fname, tname) = (from.spec().runtime_name(), to.spec().runtime_name());
+                assert!(
+                    err.contains(&fname) && err.contains(&tname),
+                    "{} -> {}: refusal must name both identities: {err}",
+                    fname,
+                    tname
+                );
+            }
+        }
+    }
+}

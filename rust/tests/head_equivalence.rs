@@ -1,0 +1,208 @@
+//! Cross-mode determinism matrix for the dueling and C51 heads
+//! (rust/DESIGN.md §16).
+//!
+//! Three claims, pinned end-to-end through `Coordinator::state_digest`:
+//!
+//! 1. **dqn is untouched.** The default head routes through literally the
+//!    pre-head code path (`tests/strategy_equivalence.rs` and
+//!    `tests/runtime_golden.rs` pin its digests); here we only assert the
+//!    new heads actually *change* the trajectory — they are not aliases.
+//!
+//! 2. **The new heads inherit the determinism contract.** For each head,
+//!    the digest is bit-identical across learner_threads {1,4} ×
+//!    prefetch {0,2} × all four exec modes, and across kill-and-resume
+//!    mid-run — the same matrix every other trajectory-affecting feature
+//!    must pass. This works because the head forward/backward passes fold
+//!    in fixed ascending order at any pool width (runtime/heads.rs).
+//!
+//! 3. **Identity is head-qualified.** A checkpoint trained under one head
+//!    (or one C51 support) refuses to resume under another, naming the
+//!    knob — the config fingerprint carries head/atoms/v_min/v_max.
+//!
+//! C51 runs `atoms = 11` here: same code path as the paper's 51, a third
+//! of the tail FLOPs, and it pins that non-default supports thread through
+//! config → engine → checkpoint.
+
+use std::path::PathBuf;
+
+use tempo_dqn::config::{ExecMode, ExperimentConfig, HeadKind};
+use tempo_dqn::coordinator::Coordinator;
+use tempo_dqn::runtime::default_artifact_dir;
+
+fn cfg(
+    head: HeadKind,
+    mode: ExecMode,
+    learner_threads: usize,
+    prefetch_batches: usize,
+) -> ExperimentConfig {
+    let (threads, b) = match mode {
+        ExecMode::Standard | ExecMode::Concurrent => (1, 2),
+        ExecMode::Synchronized | ExecMode::Both => (2, 2),
+    };
+    let mut cfg = ExperimentConfig::preset("smoke").unwrap();
+    cfg.game = "seeker".into();
+    cfg.mode = mode;
+    cfg.threads = threads;
+    cfg.envs_per_thread = b;
+    cfg.learner_threads = learner_threads;
+    cfg.prefetch_batches = prefetch_batches;
+    cfg.head = head;
+    if head == HeadKind::C51 {
+        cfg.atoms = 11;
+        cfg.v_min = -2.0;
+        cfg.v_max = 2.0;
+    }
+    cfg.total_steps = 192;
+    cfg.prepopulate = 300;
+    cfg.replay_capacity = 8_000;
+    cfg.target_update_period = 64;
+    cfg.train_period = 4;
+    cfg.seed = 77;
+    cfg
+}
+
+fn digest(cfg: &ExperimentConfig) -> u64 {
+    let mut coord = Coordinator::new(cfg.clone(), &default_artifact_dir()).unwrap();
+    coord.run().unwrap();
+    coord.state_digest().unwrap()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tempo-head-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Kill-and-resume: run to `cut` with a checkpoint, rebuild a fresh
+/// coordinator, resume, finish; digest must match the uninterrupted run.
+fn digest_resumed(cfg: &ExperimentConfig, cut: u64, tag: &str) -> u64 {
+    let dir = tmpdir(tag);
+    let mut half = cfg.clone();
+    half.total_steps = cut;
+    half.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    half.ckpt_period = cut;
+    let mut first = Coordinator::new(half, &default_artifact_dir()).unwrap();
+    first.run().unwrap();
+    drop(first);
+
+    let mut full = cfg.clone();
+    full.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    full.ckpt_period = cfg.total_steps;
+    let mut second = Coordinator::new(full, &default_artifact_dir()).unwrap();
+    assert_eq!(second.resume_from(&dir).unwrap(), cut, "{tag}: checkpoint not at the cut");
+    second.run().unwrap();
+    let d = second.state_digest().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    d
+}
+
+/// learner_threads {1,4} × prefetch {0,2}, per exec mode, one head.
+fn assert_matrix_invariant(head: HeadKind) {
+    for mode in ExecMode::ALL {
+        let reference = digest(&cfg(head, mode, 1, 0));
+        for (lt, pf) in [(1usize, 2usize), (4, 0), (4, 2)] {
+            assert_eq!(
+                reference,
+                digest(&cfg(head, mode, lt, pf)),
+                "{}/{}: learner_threads={lt} prefetch={pf} moved the trajectory",
+                head.name(),
+                mode.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn dueling_digest_invariant_across_learner_threads_and_prefetch() {
+    assert_matrix_invariant(HeadKind::Dueling);
+}
+
+#[test]
+fn c51_digest_invariant_across_learner_threads_and_prefetch() {
+    assert_matrix_invariant(HeadKind::C51);
+}
+
+#[test]
+fn dueling_kill_and_resume_is_bit_exact_per_mode() {
+    for mode in ExecMode::ALL {
+        let base = cfg(HeadKind::Dueling, mode, 1, 0);
+        let cut = match mode {
+            ExecMode::Standard => 64,
+            _ => 128,
+        };
+        assert_eq!(
+            digest(&base),
+            digest_resumed(&base, cut, &format!("duel-{}", mode.name())),
+            "dueling/{}: resumed trajectory diverged",
+            mode.name()
+        );
+    }
+}
+
+#[test]
+fn c51_kill_and_resume_is_bit_exact_per_mode() {
+    for mode in ExecMode::ALL {
+        let base = cfg(HeadKind::C51, mode, 1, 0);
+        let cut = match mode {
+            ExecMode::Standard => 64,
+            _ => 128,
+        };
+        assert_eq!(
+            digest(&base),
+            digest_resumed(&base, cut, &format!("c51-{}", mode.name())),
+            "c51/{}: resumed trajectory diverged",
+            mode.name()
+        );
+    }
+}
+
+/// The heads are real alternatives: each produces a distinct trajectory
+/// from dqn and from each other, and the C51 support parameters matter.
+#[test]
+fn heads_produce_distinct_trajectories() {
+    let dqn = digest(&cfg(HeadKind::Dqn, ExecMode::Both, 1, 0));
+    let duel = digest(&cfg(HeadKind::Dueling, ExecMode::Both, 1, 0));
+    let c51 = digest(&cfg(HeadKind::C51, ExecMode::Both, 1, 0));
+    assert_ne!(dqn, duel, "dueling trajectory identical to dqn");
+    assert_ne!(dqn, c51, "c51 trajectory identical to dqn");
+    assert_ne!(duel, c51, "c51 trajectory identical to dueling");
+
+    let mut wide = cfg(HeadKind::C51, ExecMode::Both, 1, 0);
+    wide.v_min = -4.0;
+    wide.v_max = 4.0;
+    assert_ne!(c51, digest(&wide), "the C51 support has no effect on the trajectory");
+}
+
+/// Resume refuses a checkpoint trained under a different head (or a
+/// different C51 support), naming the knob.
+#[test]
+fn head_mismatched_checkpoints_refuse_resume_by_name() {
+    let dir = tmpdir("mismatch");
+    let mut base = cfg(HeadKind::C51, ExecMode::Both, 1, 0);
+    base.total_steps = 64;
+    base.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+    base.ckpt_period = 64;
+    let mut coord = Coordinator::new(base.clone(), &default_artifact_dir()).unwrap();
+    coord.run().unwrap();
+    drop(coord);
+
+    let mut other = base.clone();
+    other.head = HeadKind::Dueling;
+    let mut coord = Coordinator::new(other, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("head"), "must name the head knob: {err}");
+
+    let mut other = base.clone();
+    other.atoms = 21;
+    let mut coord = Coordinator::new(other, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("atoms"), "must name the atoms knob: {err}");
+
+    let mut other = base.clone();
+    other.v_max = 3.0;
+    let mut coord = Coordinator::new(other, &default_artifact_dir()).unwrap();
+    let err = coord.resume_from(&dir).unwrap_err().to_string();
+    assert!(err.contains("v_max"), "must name the support knob: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -24,7 +24,7 @@ use tempo_dqn::agent::argmax;
 use tempo_dqn::ckpt::CheckpointWriter;
 use tempo_dqn::env::STATE_BYTES;
 use tempo_dqn::net::{Conn, Endpoint};
-use tempo_dqn::runtime::{default_artifact_dir, Device, Manifest, Policy, QNet, QNetSnapshot};
+use tempo_dqn::runtime::{default_artifact_dir, Device, Head, Manifest, Policy, QNet, QNetSnapshot};
 use tempo_dqn::serve::{ServeClient, ServeOpts, Server};
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -44,9 +44,14 @@ fn sock_addr(tag: &str) -> String {
 /// distinct thetas from the builtin init so different checkpoints are
 /// distinguishable to the bit.
 fn make_qnet(scale: f32, shift: f32) -> QNet {
+    make_qnet_head(Head::Dqn, scale, shift)
+}
+
+/// Same, for an explicit head — `+dueling` / `+c51[...]` checkpoints.
+fn make_qnet_head(head: Head, scale: f32, shift: f32) -> QNet {
     let device = Arc::new(Device::cpu().unwrap());
     let manifest = Manifest::load_or_builtin(&default_artifact_dir()).unwrap();
-    let qnet = QNet::load(device, &manifest, "tiny", false, 32).unwrap();
+    let qnet = QNet::load_with_head(device, &manifest, "tiny", false, 32, head).unwrap();
     if scale != 1.0 || shift != 0.0 {
         let theta: Vec<f32> =
             qnet.theta_host().unwrap().iter().map(|v| v * scale + shift).collect();
@@ -306,6 +311,154 @@ fn corrupt_checkpoint_is_skipped_then_a_valid_one_recovers() {
     let stats = handle.stats();
     assert!(stats.swap_skips >= 1);
     assert_eq!(stats.swaps, 1);
+
+    handle.stop().unwrap();
+}
+
+/// One request wider than the largest loaded engine batch (256 for the
+/// builtin manifest): `QNet::infer` must chunk it across multiple engine
+/// transactions, and every row of the daemon's reply must still be
+/// bitwise-identical to single-sample inference. Pre-PR this request
+/// died inside the collector with a "no infer batch >= 260" error.
+#[test]
+fn oversize_request_is_chunked_and_stays_bitwise_exact() {
+    let dir = tmpdir("oversize");
+    let qnet = make_qnet(1.0, 0.0);
+    write_ckpt(&dir, 31, &qnet);
+
+    let opts = ServeOpts {
+        max_batch: 16, // far below the request width: the request rides alone
+        flush: Duration::from_micros(200),
+        poll: Duration::from_millis(500),
+    };
+    let handle =
+        Server::start(&dir, &default_artifact_dir(), &sock_addr("oversize"), opts).unwrap();
+
+    let n = 260; // > 256, the largest builtin infer entry
+    let s = states(n, 606);
+    let mut client = ServeClient::connect(handle.addr(), Duration::from_secs(20)).unwrap();
+    let reply = client.act(&s, n).unwrap();
+    assert_eq!(reply.step, 31);
+
+    // Bitwise against one direct oversize infer (the same chunked path)…
+    let direct = qnet.infer(Policy::Theta, &s, n).unwrap();
+    let got: Vec<u32> = reply.q.iter().map(|v| v.to_bits()).collect();
+    let want: Vec<u32> = direct.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got, want, "daemon rows diverge from direct chunked infer");
+    // …and per-row against single-sample inference (the ground truth).
+    assert_rows_match(&qnet, &s, n, &reply.q, &reply.actions, "oversize");
+
+    handle.stop().unwrap();
+}
+
+/// The collector's idle wait is untimed and relies on `stop()` notifying
+/// the condvar. If that contract ever breaks, an idle daemon's stop()
+/// hangs on the collector join forever — so a bounded stop IS the test.
+#[test]
+fn idle_daemon_stops_promptly() {
+    let dir = tmpdir("idle-stop");
+    let qnet = make_qnet(1.0, 0.0);
+    write_ckpt(&dir, 1, &qnet);
+    let handle = Server::start(
+        &dir,
+        &default_artifact_dir(),
+        &sock_addr("idle-stop"),
+        ServeOpts::default(),
+    )
+    .unwrap();
+    // No requests queued: the collector is parked in its idle wait.
+    let t0 = Instant::now();
+    handle.stop().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "idle shutdown took {:?} — collector stop notification lost?",
+        t0.elapsed()
+    );
+}
+
+/// A corrupt checkpoint that is repaired *in place* — same `step_<N>`
+/// directory, no newer step ever arriving — must be probed again and
+/// swapped in. Pre-PR the warn-once guard keyed on the path alone, so
+/// the repaired checkpoint was ignored forever.
+#[test]
+fn repaired_in_place_checkpoint_is_reprobed_and_swapped() {
+    let dir = tmpdir("repair");
+    let side = tmpdir("repair-side");
+    let qnet_a = make_qnet(1.0, 0.0);
+    let qnet_b = make_qnet(1.5, 0.005);
+    write_ckpt(&dir, 100, &qnet_a);
+
+    let opts = ServeOpts {
+        max_batch: 8,
+        flush: Duration::from_micros(200),
+        poll: Duration::from_millis(20),
+    };
+    let handle =
+        Server::start(&dir, &default_artifact_dir(), &sock_addr("repair"), opts).unwrap();
+
+    // Stage step 300, corrupt its payload, move it in.
+    let staged = write_ckpt(&side, 300, &qnet_b);
+    let state_bin = staged.join("state.bin");
+    let good_bytes = std::fs::read(&state_bin).unwrap();
+    let mut bad_bytes = good_bytes.clone();
+    let mid = bad_bytes.len() / 2;
+    bad_bytes[mid] ^= 0x40;
+    std::fs::write(&state_bin, &bad_bytes).unwrap();
+    let landed = dir.join(staged.file_name().unwrap());
+    std::fs::rename(&staged, &landed).unwrap();
+
+    poll_until(&handle, "corrupt checkpoint skip", |s| s.swap_skips >= 1);
+    assert_eq!(handle.stats().step, 100);
+
+    // Repair in place: restore the original bytes under the same path.
+    // Write-then-rename so the watcher can never observe a torn repair.
+    let tmp = landed.join("state.bin.tmp");
+    std::fs::write(&tmp, &good_bytes).unwrap();
+    std::fs::rename(&tmp, landed.join("state.bin")).unwrap();
+    poll_until(&handle, "re-probe of repaired checkpoint", |s| s.step == 300);
+
+    let mut client = ServeClient::connect(handle.addr(), Duration::from_secs(20)).unwrap();
+    let s = states(1, 303);
+    let reply = client.act(&s, 1).unwrap();
+    assert_eq!(reply.step, 300);
+    assert_rows_match(&qnet_b, &s, 1, &reply.q, &reply.actions, "repaired");
+
+    handle.stop().unwrap();
+}
+
+/// The daemon serves whatever head its checkpoint names (`+dueling` here),
+/// and refuses a later checkpoint whose head does not match its own —
+/// by name, with a `swap_skips` tick, while the old theta keeps serving.
+#[test]
+fn daemon_serves_non_dqn_heads_and_refuses_head_mismatched_swaps() {
+    let dir = tmpdir("heads");
+    let duel = make_qnet_head(Head::Dueling, 1.0, 0.0);
+    write_ckpt(&dir, 100, &duel);
+
+    let opts = ServeOpts {
+        max_batch: 8,
+        flush: Duration::from_micros(200),
+        poll: Duration::from_millis(20),
+    };
+    let handle =
+        Server::start(&dir, &default_artifact_dir(), &sock_addr("heads"), opts).unwrap();
+
+    let mut client = ServeClient::connect(handle.addr(), Duration::from_secs(20)).unwrap();
+    let s = states(3, 77);
+    let reply = client.act(&s, 3).unwrap();
+    assert_eq!(reply.step, 100);
+    assert_rows_match(&duel, &s, 3, &reply.q, &reply.actions, "dueling-serve");
+
+    // A newer dqn-head checkpoint is a different network: skip by name.
+    let dqn = make_qnet(1.0, 0.0);
+    write_ckpt(&dir, 200, &dqn);
+    poll_until(&handle, "head-mismatch skip", |s| s.swap_skips >= 1);
+    let stats = handle.stats();
+    assert_eq!(stats.step, 100, "head-mismatched checkpoint must not swap in");
+    assert_eq!(stats.swaps, 0);
+    let reply = client.act(&s, 3).unwrap();
+    assert_eq!(reply.step, 100);
+    assert_rows_match(&duel, &s, 3, &reply.q, &reply.actions, "post-mismatch");
 
     handle.stop().unwrap();
 }
